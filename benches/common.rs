@@ -1,0 +1,99 @@
+//! Shared bench scaffolding: parallel sweeps + paper-style table printing.
+//!
+//! Every bench binary regenerates one table/figure of the paper: it builds
+//! the experiment specs, runs them (sweep points are independent, so they
+//! fan out over threads), and prints the same rows/series the paper
+//! reports. `ARCUS_BENCH_FAST=1` shortens the virtual duration for smoke
+//! runs (CI); absolute numbers shift slightly but the shapes hold.
+
+#![allow(dead_code)]
+
+use arcus::system::{run, ExperimentSpec, SystemReport};
+use arcus::util::units::{Time, MILLIS};
+
+/// Measured virtual duration for sweeps.
+pub fn bench_duration() -> Time {
+    if fast_mode() {
+        4 * MILLIS
+    } else {
+        20 * MILLIS
+    }
+}
+
+pub fn warmup() -> Time {
+    if fast_mode() {
+        MILLIS
+    } else {
+        2 * MILLIS
+    }
+}
+
+pub fn fast_mode() -> bool {
+    std::env::var("ARCUS_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Run a set of independent experiment specs across threads.
+pub fn parallel_sweep(specs: Vec<ExperimentSpec>) -> Vec<SystemReport> {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(specs.len().max(1));
+    let specs = std::sync::Arc::new(std::sync::Mutex::new(
+        specs.into_iter().enumerate().collect::<Vec<_>>(),
+    ));
+    let results = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+    let handles: Vec<_> = (0..threads)
+        .map(|_| {
+            let specs = specs.clone();
+            let results = results.clone();
+            std::thread::spawn(move || loop {
+                let job = specs.lock().unwrap().pop();
+                match job {
+                    Some((idx, spec)) => {
+                        let report = run(&spec);
+                        results.lock().unwrap().push((idx, report));
+                    }
+                    None => return,
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("sweep worker");
+    }
+    let mut out = std::sync::Arc::try_unwrap(results)
+        .ok()
+        .expect("all workers joined")
+        .into_inner()
+        .unwrap();
+    out.sort_by_key(|(i, _)| *i);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Section header in the output.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print a row of f64 cells after a label.
+pub fn row(label: &str, cells: &[f64], fmt_width: usize, precision: usize) {
+    print!("{label:<28}");
+    for c in cells {
+        print!(" {c:>fmt_width$.precision$}");
+    }
+    println!();
+}
+
+/// Print a header row.
+pub fn header(label: &str, cells: &[String], width: usize) {
+    print!("{label:<28}");
+    for c in cells {
+        print!(" {c:>width$}");
+    }
+    println!();
+}
+
+/// Percent formatting helper.
+pub fn pct(x: f64) -> f64 {
+    x * 100.0
+}

@@ -1,0 +1,118 @@
+//! Fig 6 + Table 3 + §5.2 tail latency — SLO guarantee on storage.
+//!
+//! Two users send 4 KB random reads to the SSD; SLO_user1 = 300 K IOPS,
+//! SLO_user2 = 200 K IOPS under 99th% guarantee; throughput sampled every
+//! 500 requests. The paper's results to reproduce:
+//!   - Fig 6: Arcus's per-window throughput CDF is a step at the SLO;
+//!     Host_TS_reflex / Host_TS_firecracker smear (CPU interference makes
+//!     software token buckets imprecise).
+//!   - Table 3: quantile deviation from the SLO — Arcus within ±1%,
+//!     ReFlex −11.7%…+8.7%, Firecracker −6.7%…+24.3%.
+//!   - §5.2: Arcus cuts 95/99/99.9th latency by 18.75/31.09/45.82% vs
+//!     ReFlex.
+
+#[path = "common.rs"]
+mod common;
+
+use arcus::flow::FlowKind;
+use arcus::system::{ExperimentSpec, Mode, SystemReport};
+use arcus::util::units::MICROS;
+use arcus::workload::{fio_read_flow, FioJob};
+use arcus::storage::SsdConfig;
+use common::*;
+
+fn spec(mode: Mode) -> ExperimentSpec {
+    // Open-loop users demanding slightly above their paid rate (Poisson):
+    // the shaper is the active bottleneck, so shaping precision — not the
+    // SSD — decides each window. A small driver queue (typical NVMe QD)
+    // bounds the queueing so latency reflects the shaping path.
+    let jobs = [
+        FioJob { vm: 0, bs: 4096, offered_iops: 345_000.0, slo_iops: 300_000.0 },
+        FioJob { vm: 1, bs: 4096, offered_iops: 230_000.0, slo_iops: 200_000.0 },
+    ];
+    let flows = vec![fio_read_flow(0, jobs[0]), fio_read_flow(1, jobs[1])];
+    debug_assert!(flows.iter().all(|f| f.kind == FlowKind::StorageRead));
+    let mut spec = ExperimentSpec::new(mode, vec![], flows)
+        .with_duration(2 * bench_duration())
+        .with_warmup(warmup())
+        // Two enterprise SSDs carry the 500K IOPS aggregate the way the
+        // paper's array does.
+        .with_raid(2, SsdConfig::samsung_983dct());
+    spec.queue_cap = 48;
+    spec
+}
+
+fn cdf_points(r: &SystemReport, flow: usize) -> Vec<(f64, f64)> {
+    let mut v = r.per_flow[flow].sampler.raw.clone();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len().max(1) as f64;
+    v.iter().enumerate().map(|(i, &x)| (x, (i + 1) as f64 / n)).collect()
+}
+
+fn main() {
+    let modes = [Mode::Arcus, Mode::HostTsReflex, Mode::HostTsFirecracker];
+    let reports = parallel_sweep(modes.iter().map(|&m| spec(m)).collect());
+
+    banner("Fig 6: per-window throughput CDF (KIOPS at CDF 10/25/50/75/90/99%)");
+    for (flow, slo) in [(0usize, 300.0), (1usize, 200.0)] {
+        println!("\nuser{} (SLO {slo:.0}K IOPS):", flow + 1);
+        println!("{:<22} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}", "system", "10%", "25%", "50%", "75%", "90%", "99%");
+        for (m, r) in modes.iter().zip(reports.iter()) {
+            let cdf = cdf_points(r, flow);
+            let q = |p: f64| -> f64 {
+                if cdf.is_empty() {
+                    return 0.0;
+                }
+                let idx = ((p * (cdf.len() - 1) as f64).round() as usize).min(cdf.len() - 1);
+                cdf[idx].0 / 1e3
+            };
+            println!(
+                "{:<22} {:>8.1} {:>8.1} {:>8.1} {:>8.1} {:>8.1} {:>8.1}",
+                m.name(),
+                q(0.10),
+                q(0.25),
+                q(0.50),
+                q(0.75),
+                q(0.90),
+                q(0.99)
+            );
+        }
+    }
+
+    banner("Table 3: user1 window-throughput deviation from the 300K IOPS target");
+    println!("{:<22} {:>8} {:>8} {:>8} {:>8} {:>8}", "system", "25th%", "50th%", "75th%", "99th%", "CV%");
+    for (m, r) in modes.iter().zip(reports.iter()) {
+        let s = &r.per_flow[0].sampler;
+        println!(
+            "{:<22} {:>+7.1}% {:>+7.1}% {:>+7.1}% {:>+7.1}% {:>8.2}",
+            m.name(),
+            pct(s.quantile_deviation(0.25, 300_000.0)),
+            pct(s.quantile_deviation(0.50, 300_000.0)),
+            pct(s.quantile_deviation(0.75, 300_000.0)),
+            pct(s.quantile_deviation(0.99, 300_000.0)),
+            pct(s.cv()),
+        );
+    }
+
+    banner("§5.2 tail latency (user1, µs)");
+    println!("{:<22} {:>8} {:>8} {:>8} {:>8}", "system", "mean", "95th%", "99th%", "99.9th%");
+    for (m, r) in modes.iter().zip(reports.iter()) {
+        let f = &r.per_flow[0];
+        println!(
+            "{:<22} {:>8.1} {:>8.1} {:>8.1} {:>8.1}",
+            m.name(),
+            f.lat_mean / MICROS as f64,
+            f.lat_p95 as f64 / MICROS as f64,
+            f.lat_p99 as f64 / MICROS as f64,
+            f.lat_p999 as f64 / MICROS as f64,
+        );
+    }
+    let arcus = &reports[0].per_flow[0];
+    let reflex = &reports[1].per_flow[0];
+    println!(
+        "\nArcus vs ReFlex tail reduction: p95 {:.1}%  p99 {:.1}%  p99.9 {:.1}%   (paper: 18.75 / 31.09 / 45.82%)",
+        (1.0 - arcus.lat_p95 as f64 / reflex.lat_p95.max(1) as f64) * 100.0,
+        (1.0 - arcus.lat_p99 as f64 / reflex.lat_p99.max(1) as f64) * 100.0,
+        (1.0 - arcus.lat_p999 as f64 / reflex.lat_p999.max(1) as f64) * 100.0,
+    );
+}

@@ -1,0 +1,143 @@
+//! Fig 7 — contention studies with combined factors.
+//!
+//! (a) Accelerator heterogeneity: throughput-vs-size curves for the three
+//!     representative shapes (logarithmic/saturating, exponential, ad-hoc).
+//! (b) Scalability: overall throughput from 1 to 16 flows — near-full with
+//!     low per-flow overhead.
+//! (c) Combined-factor characterization: VM1 with 16 1 KB flows (NIC RX)
+//!     vs VM2 with 4 4 KB flows — the control plane classifies whether the
+//!     combination can sustain a 50/50 split (SLO-Friendly) or not.
+
+#[path = "common.rs"]
+mod common;
+
+use arcus::accel::AccelModel;
+use arcus::coordinator::ProfileTable;
+use arcus::flow::{FlowSpec, Path, Slo, TrafficPattern};
+use arcus::pcie::fabric::FabricConfig;
+use arcus::system::{ExperimentSpec, Mode};
+use arcus::util::units::{Rate, KB};
+use common::*;
+
+fn main() {
+    banner("Fig 7(a): accelerator heterogeneity — effective throughput vs message size (Gbps)");
+    let sizes = [64u64, 256, 1024, 4096, 16384, 65536, 262144, 524288];
+    println!(
+        "{:<14} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "accelerator", "64B", "256B", "1KB", "4KB", "16KB", "64KB", "256KB", "512KB"
+    );
+    for m in [
+        AccelModel::ipsec_32g(),     // saturating (logarithmic-ish)
+        AccelModel::sha3_512(),      // exponential
+        AccelModel::compress(),      // uniquely ad-hoc (block-boundary dip)
+        AccelModel::decompress(),
+        AccelModel::checksum(),
+    ] {
+        print!("{:<14}", m.name);
+        for &s in &sizes {
+            print!(" {:>8.2}", m.effective_rate(s).as_gbps());
+        }
+        println!();
+    }
+
+    banner("Fig 7(b): scalability — overall throughput, 1 → 16 equal flows (Arcus)");
+    let counts = [1usize, 2, 4, 8, 16];
+    let specs: Vec<ExperimentSpec> = counts
+        .iter()
+        .map(|&n| {
+            let line = Rate::gbps(32.0);
+            // n equal flows splitting a 30 Gbps aggregate SLO.
+            let flows: Vec<FlowSpec> = (0..n)
+                .map(|i| {
+                    FlowSpec::new(
+                        i,
+                        i,
+                        Path::FunctionCall,
+                        TrafficPattern::fixed(4 * KB, 0.95 / n as f64, line),
+                        Slo::gbps(28.0 / n as f64),
+                        0,
+                    )
+                })
+                .collect();
+            ExperimentSpec::new(Mode::Arcus, vec![AccelModel::ipsec_32g()], flows)
+                .with_duration(bench_duration())
+                .with_warmup(warmup())
+        })
+        .collect();
+    let reports = parallel_sweep(specs);
+    header("flows", &counts.iter().map(|c| c.to_string()).collect::<Vec<_>>(), 8);
+    row(
+        "overall Gbps",
+        &reports.iter().map(|r| r.total_goodput().as_gbps()).collect::<Vec<_>>(),
+        8,
+        2,
+    );
+    row(
+        "vs 1-flow (%)",
+        &reports
+            .iter()
+            .map(|r| pct(r.total_goodput().0 / reports[0].total_goodput().0))
+            .collect::<Vec<_>>(),
+        8,
+        1,
+    );
+    row(
+        "accel util (%)",
+        &reports.iter().map(|r| pct(r.accel_util[0])).collect::<Vec<_>>(),
+        8,
+        1,
+    );
+
+    banner("Fig 7(c): combined factors — VM1 16×1KB (RX) + VM2 4×4KB (RX) on one 32G engine");
+    let line = Rate::gbps(50.0);
+    let mut flows = Vec::new();
+    for i in 0..16 {
+        flows.push(FlowSpec::new(
+            i,
+            0,
+            Path::InlineNicRx,
+            TrafficPattern::fixed(KB, 1.0 / 16.0 * 0.40, line),
+            Slo::gbps(14.0 / 16.0),
+            0,
+        ));
+    }
+    for i in 16..20 {
+        flows.push(FlowSpec::new(
+            i,
+            1,
+            Path::InlineNicRx,
+            TrafficPattern::fixed(4 * KB, 1.0 / 4.0 * 0.40, line),
+            Slo::gbps(14.0 / 4.0),
+            0,
+        ));
+    }
+    let spec = ExperimentSpec::new(Mode::Arcus, vec![AccelModel::ipsec_32g()], flows)
+        .with_duration(bench_duration())
+        .with_warmup(warmup());
+    let r = arcus::system::run(&spec);
+    let vm1 = r.vm_goodput(0).as_gbps();
+    let vm2 = r.vm_goodput(1).as_gbps();
+    println!("VM1 (16×1KB): {vm1:.2} Gbps   VM2 (4×4KB): {vm2:.2} Gbps   ratio {:.2}", vm1 / vm2.max(1e-9));
+    println!("(paper: the control plane classifies this mixture as able to sustain a 50/50 split — y ≈ 1)");
+
+    banner("Fig 7(c) continued: the profile table's classification for those contexts");
+    let profile = ProfileTable::learn(&[AccelModel::ipsec_32g()], &FabricConfig::gen3_x8());
+    for (label, size, n) in [("1KB × 16 flows", 1024u64, 16usize), ("4KB × 4 flows", 4096, 4)] {
+        let e = profile.capacity("ipsec", Path::InlineNicRx, size, n).unwrap();
+        println!(
+            "{label:<16}: capacity {:>8.2} Gbps  bound_by {:?}  tag {}",
+            e.capacity.as_gbps(),
+            e.bound_by,
+            if e.slo_friendly { "SLO-Friendly" } else { "SLO-Violating" }
+        );
+    }
+    for (label, size, n) in [("64B × 16 flows", 64u64, 16usize), ("256B × 8 flows", 256, 8)] {
+        let e = profile.capacity("ipsec", Path::InlineNicRx, size, n).unwrap();
+        println!(
+            "{label:<16}: capacity {:>8.2} Gbps  bound_by {:?}  tag {}",
+            e.capacity.as_gbps(),
+            e.bound_by,
+            if e.slo_friendly { "SLO-Friendly" } else { "SLO-Violating" }
+        );
+    }
+}

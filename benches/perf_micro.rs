@@ -1,0 +1,109 @@
+//! §5.3.1 micro-benchmarks + §Perf instrumentation.
+//!
+//! - Shaping decision cost: the paper measures 36 ns in hardware vs >10 µs
+//!   for software shaping. Here: wall-clock nanoseconds per
+//!   `try_acquire` on the hardware-model token bucket (the L3 serving
+//!   path's gate) and per software-shaper decision including its modeled
+//!   timing error handling.
+//! - Reconfiguration: `set_rate` cost (the paper's 10 µs is PCIe MMIO
+//!   round-trips; ours is the register-derivation compute).
+//! - DES throughput: events/second on a reference two-flow experiment —
+//!   the simulator's §Perf headline.
+//! - Serving-path dispatch: end-to-end request latency through the real
+//!   server at batch sizes 1 and 32.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use arcus::accel::AccelModel;
+use arcus::flow::{FlowSpec, Path, Slo, TrafficPattern};
+use arcus::shaping::{ShapeMode, Shaper, SoftwareShaper, SoftwareShaperConfig, TokenBucket};
+use arcus::system::{run, ExperimentSpec, Mode};
+use arcus::util::units::{Rate, MILLIS};
+use common::banner;
+
+fn main() {
+    banner("Shaping decision cost (wall-clock per try_acquire)");
+    let rate = Rate::gbps(100.0).as_bits_per_sec() / 8.0;
+    let mut tb = TokenBucket::for_rate(rate, ShapeMode::Gbps);
+    let n = 5_000_000u64;
+    let t0 = Instant::now();
+    let mut admitted = 0u64;
+    for i in 0..n {
+        if matches!(tb.try_acquire(i * 200_000, 1500), arcus::shaping::Verdict::Admit) {
+            admitted += 1;
+        }
+    }
+    let per = t0.elapsed().as_nanos() as f64 / n as f64;
+    println!("hardware token bucket: {per:.1} ns/decision ({admitted} admits)   paper HW: 36 ns");
+
+    let mut sw = SoftwareShaper::new(rate, ShapeMode::Gbps, SoftwareShaperConfig::reflex(), 1);
+    let t0 = Instant::now();
+    let mut admitted = 0u64;
+    for i in 0..n {
+        if matches!(sw.try_acquire(i * 200_000, 1500), arcus::shaping::Verdict::Admit) {
+            admitted += 1;
+        }
+    }
+    let per_sw = t0.elapsed().as_nanos() as f64 / n as f64;
+    println!("software shaper model:  {per_sw:.1} ns/decision ({admitted} admits)   paper SW: >10 µs *modeled in virtual time*");
+
+    banner("Reconfiguration (ReshapeDecision → register write)");
+    let t0 = Instant::now();
+    let m = 100_000;
+    for i in 0..m {
+        tb.set_rate(i * 1_000_000, rate * (1.0 + (i % 7) as f64 * 0.01));
+    }
+    println!(
+        "set_rate (derive registers + reprogram): {:.2} µs/call   paper end-to-end reconfig: 10 µs of PCIe MMIO",
+        t0.elapsed().as_micros() as f64 / m as f64
+    );
+
+    banner("DES throughput (§Perf L3 target)");
+    let line = Rate::gbps(32.0);
+    let flows = vec![
+        FlowSpec::new(0, 0, Path::FunctionCall, TrafficPattern::fixed(1500, 0.6, line), Slo::gbps(10.0), 0),
+        FlowSpec::new(1, 1, Path::FunctionCall, TrafficPattern::fixed(1500, 0.6, line), Slo::gbps(12.0), 0),
+    ];
+    let spec = ExperimentSpec::new(Mode::Arcus, vec![AccelModel::ipsec_32g()], flows)
+        .with_duration(20 * MILLIS)
+        .with_warmup(2 * MILLIS);
+    let r = run(&spec);
+    println!(
+        "two-flow Arcus reference: {} events in {:.2}s wall = {:.2} M events/s",
+        r.events,
+        r.wall_secs,
+        r.events_per_sec() / 1e6
+    );
+
+    banner("Serving path dispatch (real PJRT engine)");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        println!("(skipping: run `make artifacts` first)");
+        return;
+    }
+    use arcus::server::{Server, ServerConfig, Work};
+    let server = Server::start(ServerConfig::new(dir).tenant("t", None)).expect("server");
+    let _ = server.submit_blocking(0, Work::Checksum { data: vec![0; 1024] });
+    // Sequential (batch of 1).
+    let n = if common::fast_mode() { 200 } else { 1000 };
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let _ = server.submit_blocking(0, Work::Checksum { data: vec![7; 1024] });
+    }
+    let seq = t0.elapsed().as_micros() as f64 / n as f64;
+    // Pipelined (batcher can group).
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n).map(|_| server.submit(0, Work::Checksum { data: vec![7; 1024] })).collect();
+    for rx in rxs {
+        let _ = rx.recv().unwrap();
+    }
+    let piped = t0.elapsed().as_micros() as f64 / n as f64;
+    let stats = server.stats();
+    println!(
+        "sequential: {seq:.0} µs/req   pipelined: {piped:.1} µs/req amortized (mean group fill {:.1})",
+        stats.mean_group_fill()
+    );
+}

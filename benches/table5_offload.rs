@@ -1,0 +1,137 @@
+//! Table 5 — acceleration opportunities: CPU cost of datacenter-tax tasks
+//! vs their offloaded throughput on this testbed.
+//!
+//! The paper's survey lists the CPU share of (de)compression, hashing,
+//! encryption, etc., and the accelerator that absorbs each. Here we measure
+//! the actual CPU cost of each task on this machine (single thread) and the
+//! throughput the Arcus serving runtime sustains for the same task through
+//! PJRT, giving the measured offload opportunity.
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use arcus::apps::offload::compress_cpu;
+use arcus::runtime::{fletcher_native, pack_bytes};
+use arcus::server::{Output, Server, ServerConfig, Work};
+use common::banner;
+
+fn cpu_rate<F: FnMut() -> usize>(mut f: F, min_secs: f64) -> f64 {
+    let t0 = Instant::now();
+    let mut bytes = 0usize;
+    while t0.elapsed().as_secs_f64() < min_secs {
+        bytes += f();
+    }
+    bytes as f64 / t0.elapsed().as_secs_f64() / 1e6
+}
+
+fn main() {
+    let fast = common::fast_mode();
+    let secs = if fast { 0.5 } else { 2.0 };
+    let block = vec![0x5Au8; 4096];
+    let compressible: Vec<u8> = (0..4096u32).map(|i| (i % 13) as u8).collect();
+
+    banner("Table 5 (measured): CPU cost of datacenter-tax tasks on one core");
+    println!("{:<26} {:>14}", "task", "MB/s per core");
+    let checksum_rate = cpu_rate(
+        || {
+            let w = pack_bytes(&block);
+            std::hint::black_box(fletcher_native(&w));
+            block.len()
+        },
+        secs,
+    );
+    println!("{:<26} {:>14.0}", "checksum (fletcher)", checksum_rate);
+    let crc_rate = cpu_rate(
+        || {
+            std::hint::black_box(crc32fast::hash(&block));
+            block.len()
+        },
+        secs,
+    );
+    println!("{:<26} {:>14.0}", "checksum (crc32c/sse)", crc_rate);
+    let compress_rate = cpu_rate(
+        || {
+            std::hint::black_box(compress_cpu(&compressible));
+            compressible.len()
+        },
+        secs,
+    );
+    println!("{:<26} {:>14.0}", "compression (deflate)", compress_rate);
+    let sha_rate = cpu_rate(
+        || {
+            use sha2::Digest;
+            std::hint::black_box(sha2::Sha256::digest(&block));
+            block.len()
+        },
+        secs,
+    );
+    println!("{:<26} {:>14.0}", "hashing (sha256)", sha_rate);
+    let aes_rate = cpu_rate(
+        || {
+            use aes::cipher::{generic_array::GenericArray, BlockEncrypt, KeyInit};
+            let cipher = aes::Aes128::new(GenericArray::from_slice(&[7u8; 16]));
+            let mut b = *GenericArray::from_slice(&block[..16]);
+            for _ in 0..(block.len() / 16) {
+                cipher.encrypt_block(&mut b);
+            }
+            std::hint::black_box(b);
+            block.len()
+        },
+        secs,
+    );
+    println!("{:<26} {:>14.0}", "encryption (aes128 sw)", aes_rate);
+
+    banner("Offloaded throughput through the Arcus serving runtime (PJRT engine)");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        println!("(skipping: run `make artifacts` first)");
+        return;
+    }
+    let server = Server::start(ServerConfig::new(dir).tenant("t", None)).expect("server");
+    // Warm executable caches.
+    let _ = server.submit_blocking(0, Work::Checksum { data: block.clone() });
+    let _ = server.submit_blocking(
+        0,
+        Work::EncryptDigest { data: block.clone(), key: [1; 8], nonce: [2; 3], counter0: 0 },
+    );
+
+    for (name, mk) in [
+        ("checksum offload", 0usize),
+        ("encrypt+MAC offload", 1usize),
+    ] {
+        let t0 = Instant::now();
+        let mut bytes = 0usize;
+        let n = if fast { 400 } else { 2000 };
+        let rxs: Vec<_> = (0..n)
+            .map(|i| {
+                bytes += block.len();
+                if mk == 0 {
+                    server.submit(0, Work::Checksum { data: block.clone() })
+                } else {
+                    server.submit(
+                        0,
+                        Work::EncryptDigest {
+                            data: block.clone(),
+                            key: [1; 8],
+                            nonce: [2; 3],
+                            counter0: i as u32 * 64,
+                        },
+                    )
+                }
+            })
+            .collect();
+        let mut ok = 0;
+        for rx in rxs {
+            match rx.recv().unwrap().output {
+                Output::Rejected(_) => {}
+                _ => ok += 1,
+            }
+        }
+        let rate = bytes as f64 / t0.elapsed().as_secs_f64() / 1e6;
+        println!("{:<26} {:>11.0} MB/s  ({ok}/{n} ok)", name, rate);
+    }
+    println!("\nPaper shape: each task consumes whole cores in software (Table 5's 1–15% fleet");
+    println!("shares) while the offload sustains it on the accelerator with ~0 application CPU.");
+}

@@ -1,0 +1,56 @@
+//! Quickstart: two tenants, one 32 Gbps IPSec engine, SLOs of 10 and 12 Gbps.
+//!
+//! Both tenants offer ~16 Gbps (oversubscribed). Under Arcus, per-flow
+//! hardware token buckets fetch each tenant's DMA buffer at exactly the SLO
+//! pace (PatternA → PatternA′); the unshaped baseline splits the engine by
+//! arbitration luck.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use arcus::accel::AccelModel;
+use arcus::flow::{FlowSpec, Path, Slo, TrafficPattern};
+use arcus::system::{run, ExperimentSpec, Mode};
+use arcus::util::units::{Rate, MILLIS};
+
+fn main() {
+    let line = Rate::gbps(32.0);
+    let flows = vec![
+        FlowSpec::new(
+            0,
+            0,
+            Path::FunctionCall,
+            TrafficPattern::fixed(1500, 0.5, line),
+            Slo::gbps(10.0),
+            0,
+        ),
+        FlowSpec::new(
+            1,
+            1,
+            Path::FunctionCall,
+            TrafficPattern::fixed(1500, 0.5, line),
+            Slo::gbps(12.0),
+            0,
+        ),
+    ];
+
+    println!("tenant SLOs: 10 Gbps and 12 Gbps; both offer ~16 Gbps\n");
+    for mode in [Mode::Arcus, Mode::HostNoTs] {
+        let spec = ExperimentSpec::new(mode, vec![AccelModel::ipsec_32g()], flows.clone())
+            .with_duration(20 * MILLIS)
+            .with_warmup(2 * MILLIS);
+        let report = run(&spec);
+        println!("=== {} ===", mode.name());
+        for f in &report.per_flow {
+            println!(
+                "  tenant {}: {:>7.2} Gbps  (SLO attainment {:>5.1}%, window CV {:.2}%)",
+                f.vm,
+                f.goodput.as_gbps(),
+                f.slo_attainment().unwrap_or(0.0) * 100.0,
+                f.sampler.cv() * 100.0
+            );
+        }
+        println!();
+    }
+    println!("Arcus: both tenants land on their SLO with <1% variance.");
+    println!("Baseline: the engine splits evenly — whoever paid for more loses it.");
+}

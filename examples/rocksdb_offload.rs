@@ -1,0 +1,166 @@
+//! END-TO-END DRIVER: the full three-layer stack on a real workload.
+//!
+//! This is the repository's proof that all layers compose (Table 4's
+//! experiment as a living system):
+//!
+//!   L1  Pallas kernels (ARX cipher / tree hash / Fletcher) — compiled once
+//!       by `make artifacts` into HLO text;
+//!   L2  JAX models batching them over request groups;
+//!   L3  the Rust server: per-tenant wall-clock token buckets, dynamic
+//!       batcher, PJRT engine thread — serving a mini-LSM storage engine
+//!       that offloads every SST block's checksum (and compression to the
+//!       offload pool) while a secure-KV tenant shares the same engines.
+//!
+//! Reported: serving latency/throughput per tenant, batching efficiency,
+//! LSM write throughput + app-thread CPU vs the all-CPU baseline, and a
+//! correctness audit (read-back + checksum verification) at the end.
+//!
+//! Run: `make artifacts && cargo run --release --example rocksdb_offload`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use arcus::apps::{thread_cpu_seconds, Backend, CompressorPool, MiniLsm, MiniLsmConfig, SecureKv};
+use arcus::server::{Server, ServerConfig};
+
+fn lsm_cfg() -> MiniLsmConfig {
+    MiniLsmConfig { memtable_bytes: 512 * 1024, block_bytes: 4096, l0_compact_at: 4 }
+}
+
+fn row(i: u32) -> (Vec<u8>, Vec<u8>) {
+    // Mildly compressible serialized rows, like real LSM payloads.
+    let key = format!("user{:010}", i * 7919 % 1_000_000);
+    let val = format!(
+        "{{\"id\":{i},\"name\":\"user-{i}\",\"flags\":\"{}\",\"pad\":\"{}\"}}",
+        "abcdefgh".repeat(4),
+        "x".repeat(100 + (i % 64) as usize)
+    );
+    (key.into_bytes(), val.into_bytes())
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(dir.join("manifest.txt").exists(), "run `make artifacts` first");
+
+    println!("== arcus end-to-end driver: LSM offload + secure KV on one PJRT engine ==\n");
+
+    // ---- Baseline: everything on the application thread. ----------------
+    let n_rows = 60_000u32;
+    let mut baseline = MiniLsm::new(lsm_cfg(), Backend::Cpu);
+    let cpu0 = thread_cpu_seconds();
+    let t0 = Instant::now();
+    for i in 0..n_rows {
+        let (k, v) = row(i);
+        baseline.put(&k, &v);
+    }
+    baseline.flush();
+    let base_wall = t0.elapsed().as_secs_f64();
+    let base_cpu = thread_cpu_seconds() - cpu0;
+    let logical_mb = baseline.stats.logical_bytes as f64 / 1e6;
+
+    // ---- Arcus-enabled: checksums through PJRT, compression offloaded, --
+    //      plus a co-located secure-KV tenant on the same engine. ---------
+    let server = Arc::new(Server::start(
+        ServerConfig::new(&dir)
+            .tenant("rocksdb", None)
+            .tenant("securekv", Some(30e6))
+            .with_queue_cap(1 << 16),
+    )?);
+    // Warm the executable cache outside the measured window.
+    let _ = server.submit_blocking(0, arcus::server::Work::Checksum { data: vec![0; 4096] });
+    let _ = server.submit_blocking(
+        1,
+        arcus::server::Work::EncryptDigest { data: vec![0; 1024], key: [1; 8], nonce: [2; 3], counter0: 0 },
+    );
+    let pool = Arc::new(CompressorPool::new(6));
+    let mut lsm = MiniLsm::new(
+        lsm_cfg(),
+        Backend::Offload { server: server.clone(), tenant: 0, pool },
+    );
+    let kv = SecureKv::new(server.clone(), 1, [0xAB; 8], [7, 8, 9]);
+
+    // The KV tenant hums along on another thread while the LSM writes.
+    let kv = Arc::new(kv);
+    let kv_thread = {
+        let kv = kv.clone();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let h = std::thread::spawn(move || {
+            let mut n = 0u64;
+            let val = vec![0xEE; 512];
+            while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+                let k = format!("kv{}", n % 512);
+                kv.put(k.as_bytes(), &val).unwrap();
+                if n % 8 == 0 {
+                    let _ = kv.get(k.as_bytes());
+                }
+                n += 1;
+            }
+            n
+        });
+        (stop, h)
+    };
+
+    let cpu0 = thread_cpu_seconds();
+    let t0 = Instant::now();
+    for i in 0..n_rows {
+        let (k, v) = row(i);
+        lsm.put(&k, &v);
+    }
+    lsm.flush();
+    let off_wall = t0.elapsed().as_secs_f64();
+    let off_cpu = thread_cpu_seconds() - cpu0;
+
+    kv_thread.0.store(true, std::sync::atomic::Ordering::Relaxed);
+    let kv_ops = kv_thread.1.join().unwrap();
+
+    // ---- Correctness audit: read back through the verified path. --------
+    let t0 = Instant::now();
+    let mut audited = 0u32;
+    for i in (0..n_rows).step_by(997) {
+        let (k, v) = row(i);
+        // Later rows may have overwritten earlier ones (keys repeat by
+        // construction); only assert when this i produced the last write.
+        if let Some(got) = lsm.get(&k) {
+            if got == v {
+                audited += 1;
+            }
+        }
+    }
+    let audit = t0.elapsed().as_secs_f64();
+    assert_eq!(lsm.stats.checksum_failures, 0, "no corruption in the verified path");
+
+    // ---- Report. ---------------------------------------------------------
+    let stats = server.stats();
+    println!("LSM write path ({logical_mb:.1} MB logical, write-amp {:.2}):",
+        lsm.stats.pipeline_bytes as f64 / lsm.stats.logical_bytes as f64);
+    println!("{:<24} {:>12} {:>16}", "", "thr (MB/s)", "app-CPU (s/GB)");
+    println!("{:<24} {:>12.1} {:>16.2}", "  ext4-style (CPU)", logical_mb / base_wall, base_cpu / (logical_mb / 1e3));
+    println!("{:<24} {:>12.1} {:>16.2}", "  Arcus-enabled", logical_mb / off_wall, off_cpu / (logical_mb / 1e3));
+    println!(
+        "  → throughput {:.2}×, app-thread CPU savings {:.1}%  (paper Table 4: 1.43×, 58.9%)",
+        (logical_mb / off_wall) / (logical_mb / base_wall),
+        (1.0 - off_cpu / base_cpu.max(1e-9)) * 100.0
+    );
+
+    println!("\nServing engine:");
+    println!(
+        "  batches {}  mean group fill {:.1} requests/call",
+        stats.batches,
+        stats.mean_group_fill()
+    );
+    for (name, t) in ["rocksdb", "securekv"].iter().zip(stats.tenants.iter()) {
+        println!(
+            "  {:<9} {:>8} reqs  {:>8.2} MB/s  p50 {:>7.1} µs  p99 {:>8.1} µs",
+            name,
+            t.completed,
+            t.goodput() / 1e6,
+            t.latency_ns.percentile(50.0) as f64 / 1e3,
+            t.latency_ns.percentile(99.0) as f64 / 1e3
+        );
+    }
+    println!("  securekv co-tenant completed {kv_ops} ops while the LSM wrote");
+    println!("\nAudit: {audited} sampled keys verified through checksum+decompress in {audit:.2}s;");
+    println!("checksum failures: {} (every block re-verified through the PJRT kernels).", lsm.stats.checksum_failures);
+    Ok(())
+}

@@ -1,0 +1,124 @@
+"""AOT compiler: lower the L2 models to HLO text artifacts.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Each model entry point is lowered at a fixed set of batch shapes (the
+dynamic batcher in the Rust server pads to the nearest compiled shape). The
+output directory gets one ``<name>_b<B>.hlo.txt`` per (entry, batch) plus a
+``manifest.txt`` the Rust runtime parses — a simple line format (no JSON
+dependency on the Rust side)::
+
+    # name kind batch outputs
+    encdig_b256 encrypt_digest 256 2
+
+Usage: ``python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Batch shapes (64 B blocks per call) compiled per entry point. The server
+# picks the smallest shape that fits a batch and pads.
+BATCH_SHAPES = (64, 256, 1024)
+
+# (group, blocks) shapes for the grouped variants: G requests of B blocks
+# each per executable call (1 KB and 4 KB request classes).
+GROUP_SHAPES = ((8, 16), (32, 16), (8, 64))
+
+U32 = jnp.uint32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entries(batch):
+    """(name, fn, example_args, n_outputs) per entry point at one batch."""
+    payload = jax.ShapeDtypeStruct((batch, 16), U32)
+    key = jax.ShapeDtypeStruct((8,), U32)
+    nonce = jax.ShapeDtypeStruct((3,), U32)
+    counters = jax.ShapeDtypeStruct((batch,), U32)
+    return [
+        (
+            f"encdig_b{batch}",
+            "encrypt_digest",
+            model.encrypt_digest,
+            (payload, key, nonce, counters),
+            2,
+        ),
+        (f"digest_b{batch}", "digest_only", model.digest_only, (payload, key), 1),
+        (f"checksum_b{batch}", "checksum_block", model.checksum_block, (payload,), 1),
+    ]
+
+
+def group_entries(group, batch):
+    """Grouped entry points at one (G, B) shape."""
+    payloads = jax.ShapeDtypeStruct((group, batch, 16), U32)
+    keys = jax.ShapeDtypeStruct((group, 8), U32)
+    nonces = jax.ShapeDtypeStruct((group, 3), U32)
+    counters = jax.ShapeDtypeStruct((group, batch), U32)
+    return [
+        (
+            f"encdig_g{group}_b{batch}",
+            "encrypt_digest_many",
+            model.encrypt_digest_many,
+            (payloads, keys, nonces, counters),
+            2,
+        ),
+        (
+            f"checksum_g{group}_b{batch}",
+            "checksum_many",
+            model.checksum_many,
+            (payloads,),
+            1,
+        ),
+    ]
+
+
+def build(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+
+    def emit(name, kind, fn, args, group, batch, n_out):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        manifest.append(f"{name} {kind} {group} {batch} {n_out}")
+        print(f"  {name}: {len(text)} chars")
+
+    for batch in BATCH_SHAPES:
+        for name, kind, fn, args, n_out in entries(batch):
+            emit(name, kind, fn, args, 1, batch, n_out)
+    for group, batch in GROUP_SHAPES:
+        for name, kind, fn, args, n_out in group_entries(group, batch):
+            emit(name, kind, fn, args, group, batch, n_out)
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# name kind group batch outputs\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts + manifest to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

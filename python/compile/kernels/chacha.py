@@ -1,0 +1,87 @@
+"""Pallas ARX stream-cipher kernel (counter mode).
+
+The paper's encryption accelerators (AES-128-CBC, IPSec/ESP) are
+table-based designs mapped onto FPGA LUTs. §Hardware-Adaptation (DESIGN.md):
+on a TPU-style target the same datapath role — keystream generation + XOR at
+line rate — is best served by an ARX cipher: pure add/rotate/xor over
+32-bit vector lanes, no gather/scatter, so the whole round function is VPU
+element-wise work and the kernel is memory-bound (stream each tile exactly
+once).
+
+Layout: payload is ``(blocks, 16)`` uint32 — one row per 64 B ChaCha block.
+BlockSpec tiles ``TILE_ROWS`` rows per grid step: payload tile + keystream
+live in VMEM (TILE_ROWS×64 B ≤ 16 KiB/tile), the key/nonce are tiny
+broadcast operands, and each tile is read and written exactly once —
+the HBM↔VMEM schedule the FPGA expressed with AXI streaming.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are identical.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Rows (64 B blocks) per grid step. 256 rows = 16 KiB payload tile; with
+# payload + keystream + output live that is ~48 KiB of VMEM — comfortably
+# inside a TPU core's ~16 MiB even with double-buffering.
+TILE_ROWS = 256
+
+U32 = jnp.uint32
+
+
+def _keystream(key, nonce, counters):
+    """ChaCha keystream rows for a vector of counters — same math as
+    :func:`ref.chacha_block`, expressed over the tile in VMEM."""
+    ones = jnp.ones_like(counters)
+    s = [ones * U32(c) for c in ref.CHACHA_CONST]
+    s += [ones * key[i] for i in range(8)]
+    s += [counters]
+    s += [ones * nonce[i] for i in range(3)]
+    init = list(s)
+    for _ in range(ref.DOUBLE_ROUNDS):
+        s[0], s[4], s[8], s[12] = ref._quarter_round(s[0], s[4], s[8], s[12])
+        s[1], s[5], s[9], s[13] = ref._quarter_round(s[1], s[5], s[9], s[13])
+        s[2], s[6], s[10], s[14] = ref._quarter_round(s[2], s[6], s[10], s[14])
+        s[3], s[7], s[11], s[15] = ref._quarter_round(s[3], s[7], s[11], s[15])
+        s[0], s[5], s[10], s[15] = ref._quarter_round(s[0], s[5], s[10], s[15])
+        s[1], s[6], s[11], s[12] = ref._quarter_round(s[1], s[6], s[11], s[12])
+        s[2], s[7], s[8], s[13] = ref._quarter_round(s[2], s[7], s[8], s[13])
+        s[3], s[4], s[9], s[14] = ref._quarter_round(s[3], s[4], s[9], s[14])
+    return jnp.stack([s[i] + init[i] for i in range(16)], axis=-1)
+
+
+def _chacha_tile_kernel(payload_ref, key_ref, nonce_ref, ctr_ref, out_ref):
+    rows = payload_ref[...]
+    key = key_ref[...]
+    nonce = nonce_ref[...]
+    counters = ctr_ref[...]
+    out_ref[...] = rows ^ _keystream(key, nonce, counters)
+
+
+def chacha_encrypt(payload, key, nonce, counters):
+    """Counter-mode encrypt/decrypt.
+
+    payload: (B, 16) uint32, B a multiple of TILE_ROWS or < TILE_ROWS.
+    key: (8,) uint32. nonce: (3,) uint32. counters: (B,) uint32 — one per
+    row (the model layer assigns message-unique counter ranges).
+    """
+    b = payload.shape[0]
+    tile = min(b, TILE_ROWS)
+    assert b % tile == 0, f"batch {b} not a multiple of tile {tile}"
+    grid = b // tile
+    return pl.pallas_call(
+        _chacha_tile_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile, 16), lambda i: (i, 0)),
+            pl.BlockSpec((8,), lambda i: (0,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile, 16), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 16), jnp.uint32),
+        interpret=True,
+    )(payload.astype(U32), key.astype(U32), nonce.astype(U32), counters.astype(U32))

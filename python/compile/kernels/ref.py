@@ -1,0 +1,167 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written in
+plain ``jax.numpy`` with no Pallas constructs. All arithmetic is uint32 with
+wrapping semantics, so kernel-vs-reference comparisons are **bit-exact** —
+the pytest suite asserts array equality, not allclose.
+
+The three kernels model the datapath compute of the paper's accelerator zoo
+(§5.4's end-to-end prototypes):
+
+- :func:`chacha_ref` — ARX counter-mode stream cipher (the AES-128-CBC /
+  IPSec encryption role, re-thought for TPU-style vector lanes: AES's
+  table-based S-boxes are hostile to the VPU; an ARX cipher is pure
+  add/rotate/xor over 32-bit lanes).
+- :func:`treehash_ref` — tree-structured keyed digest with a fixed 64 B
+  output (the SHA1-HMAC / SHA-3-512 role; fixed egress regardless of input
+  size, the paper's R-taxonomy example).
+- :func:`fletcher_ref` — position-weighted checksum (the RocksDB CRC32C
+  offload role in Table 4).
+
+Payload layout: a message is padded to 64-byte blocks and viewed as a
+``(blocks, 16)`` uint32 array — one row per 64 B block, matching the
+paper's 256-bit datapath beat structure (two beats per row).
+"""
+
+import jax.numpy as jnp
+
+# ChaCha constants: "expa" "nd 3" "2-by" "te k" as little-endian u32.
+CHACHA_CONST = (0x61707865, 0x3320646E, 0x79622D32, 0x6B206574)
+
+# Number of ChaCha double rounds (ChaCha20 = 10).
+DOUBLE_ROUNDS = 10
+
+U32 = jnp.uint32
+
+
+def rotl(x, n):
+    """Rotate-left each uint32 lane by ``n`` bits."""
+    x = x.astype(U32)
+    return (x << U32(n)) | (x >> U32(32 - n))
+
+
+def _quarter_round(a, b, c, d):
+    a = a + b
+    d = rotl(d ^ a, 16)
+    c = c + d
+    b = rotl(b ^ c, 12)
+    a = a + b
+    d = rotl(d ^ a, 8)
+    c = c + d
+    b = rotl(b ^ c, 7)
+    return a, b, c, d
+
+
+def chacha_block(key, counter, nonce):
+    """Keystream block(s) for uint32 ``counter`` (scalar or vector).
+
+    key: (8,) uint32; nonce: (3,) uint32; counter: (...,) uint32.
+    Returns (..., 16) uint32 keystream.
+    """
+    key = key.astype(U32)
+    nonce = nonce.astype(U32)
+    counter = jnp.asarray(counter, U32)
+    batch = counter.shape
+    ones = jnp.ones(batch, U32)
+
+    # State lanes 0..15, each shaped like `counter`.
+    s = [ones * U32(c) for c in CHACHA_CONST]
+    s += [ones * key[i] for i in range(8)]
+    s += [counter]
+    s += [ones * nonce[i] for i in range(3)]
+    init = list(s)
+
+    for _ in range(DOUBLE_ROUNDS):
+        # Column rounds.
+        s[0], s[4], s[8], s[12] = _quarter_round(s[0], s[4], s[8], s[12])
+        s[1], s[5], s[9], s[13] = _quarter_round(s[1], s[5], s[9], s[13])
+        s[2], s[6], s[10], s[14] = _quarter_round(s[2], s[6], s[10], s[14])
+        s[3], s[7], s[11], s[15] = _quarter_round(s[3], s[7], s[11], s[15])
+        # Diagonal rounds.
+        s[0], s[5], s[10], s[15] = _quarter_round(s[0], s[5], s[10], s[15])
+        s[1], s[6], s[11], s[12] = _quarter_round(s[1], s[6], s[11], s[12])
+        s[2], s[7], s[8], s[13] = _quarter_round(s[2], s[7], s[8], s[13])
+        s[3], s[4], s[9], s[14] = _quarter_round(s[3], s[4], s[9], s[14])
+
+    out = [s[i] + init[i] for i in range(16)]
+    return jnp.stack(out, axis=-1)
+
+
+def chacha_ref(payload, key, nonce, counter0=0):
+    """Counter-mode encrypt/decrypt ``payload`` (blocks, 16) uint32.
+
+    Row ``i`` is XORed with the keystream block at counter ``counter0 + i``.
+    Involution: applying twice returns the payload.
+    """
+    payload = payload.astype(U32)
+    n = payload.shape[0]
+    counters = U32(counter0) + jnp.arange(n, dtype=U32)
+    ks = chacha_block(key, counters, nonce)
+    return payload ^ ks
+
+
+def mix_rows(a, b):
+    """Combine two (?, 16) digest rows with an ARX mix."""
+    x = a + rotl(b, 7)
+    y = b ^ rotl(x, 13)
+    z = x + rotl(y, 17)
+    return z ^ (y >> U32(3))
+
+
+def treehash_ref(payload, key):
+    """Tree-structured keyed digest of ``payload`` (blocks, 16) uint32.
+
+    Each row is first whitened with the key and its row index; rows are then
+    pairwise-combined in a binary tree until one 16-lane (64 B) digest
+    remains. Rows must be a power of two (the model layer pads).
+    """
+    payload = payload.astype(U32)
+    n = payload.shape[0]
+    assert n & (n - 1) == 0, "treehash rows must be a power of two"
+    idx = jnp.arange(n, dtype=U32)[:, None]
+    lane = jnp.arange(16, dtype=U32)[None, :]
+    key16 = jnp.tile(key.astype(U32), 2)
+    rows = payload ^ key16[None, :]
+    rows = mix_rows(rows, idx * U32(0x9E3779B9) + lane)
+    while rows.shape[0] > 1:
+        rows = mix_rows(rows[0::2], rows[1::2])
+    return stir(rows[0])
+
+
+def roll_lanes(x, n):
+    """Rotate the 16 lanes of a (..., 16) array by ``n`` positions."""
+    return jnp.concatenate([x[..., -n:], x[..., :-n]], axis=-1)
+
+
+def stir(d):
+    """Cross-lane finalization: four mix rounds against lane rotations by
+    1/2/4/8 fully diffuse every lane into every other (mix_rows itself is
+    lane-wise, which keeps the tree reduction cheap on the VPU)."""
+    for n in (1, 2, 4, 8):
+        d = mix_rows(d[None, :], roll_lanes(rotl(d, 11), n)[None, :])[0]
+    return d
+
+
+def fletcher_ref(payload):
+    """Position-weighted checksum of ``payload`` (blocks, 16) uint32.
+
+    Returns (2,) uint32: ``s1`` = wrapping sum of all words, ``s2`` = the
+    position-weighted sum ``sum((N - i) * x_i)`` (equal to the sum of
+    prefix sums) — the classic Fletcher structure on u32 lanes.
+    """
+    x = payload.astype(U32).reshape(-1)
+    n = x.shape[0]
+    s1 = jnp.sum(x, dtype=U32)
+    weights = (U32(n) - jnp.arange(n, dtype=U32)).astype(U32)
+    s2 = jnp.sum(weights * x, dtype=U32)
+    return jnp.stack([s1, s2])
+
+
+def pad_to_blocks(data: bytes, min_blocks: int = 1):
+    """Pack raw bytes into the (blocks, 16) uint32 layout (zero-padded)."""
+    import numpy as np
+
+    blocks = max((len(data) + 63) // 64, min_blocks)
+    buf = np.zeros(blocks * 64, dtype=np.uint8)
+    buf[: len(data)] = np.frombuffer(data, dtype=np.uint8)
+    return jnp.asarray(buf.view(np.uint32).reshape(blocks, 16))

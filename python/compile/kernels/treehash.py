@@ -1,0 +1,85 @@
+"""Pallas tree-hash kernel: keyed digest with a fixed 64 B output.
+
+Models the paper's hash/digest accelerators (SHA1-HMAC, SHA-3-512) — the
+R-taxonomy case where egress size is fixed no matter how large the input
+(§2.2). The digest is a binary tree over 64 B rows: leaves are whitened with
+the key and their global row index, then adjacent rows combine pairwise
+(ARX mix) until one row remains.
+
+Tiling: each grid step tree-reduces one contiguous ``TILE_ROWS`` tile to a
+single row in VMEM (that subtree only touches its own tile — no cross-tile
+traffic); the wrapper then recursively reduces the per-tile digests. Because
+the tree pairs *adjacent* rows, tile-local subtrees + a tree over tile
+digests is exactly the same tree as the flat reference.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE_ROWS = 256
+
+U32 = jnp.uint32
+
+
+def _tree_reduce(rows):
+    """Pairwise-combine (T, 16) rows down to (1, 16); T a power of two."""
+    while rows.shape[0] > 1:
+        rows = ref.mix_rows(rows[0::2], rows[1::2])
+    return rows
+
+
+def _leaf_kernel(payload_ref, key_ref, idx_ref, out_ref):
+    rows = payload_ref[...]
+    key16 = jnp.tile(key_ref[...], 2)
+    idx = idx_ref[...][:, None]
+    lane = jnp.arange(16, dtype=U32)[None, :]
+    rows = rows ^ key16[None, :]
+    rows = ref.mix_rows(rows, idx * U32(0x9E3779B9) + lane)
+    out_ref[...] = _tree_reduce(rows)
+
+
+def _internal_kernel(rows_ref, out_ref):
+    out_ref[...] = _tree_reduce(rows_ref[...])
+
+
+def treehash(payload, key):
+    """Keyed 16-lane (64 B) digest of ``payload`` (B, 16) uint32.
+
+    B must be a power of two (the model layer pads to one).
+    """
+    b = payload.shape[0]
+    assert b & (b - 1) == 0, "treehash rows must be a power of two"
+    tile = min(b, TILE_ROWS)
+    grid = b // tile
+    idx = jnp.arange(b, dtype=U32)
+    # Leaf pass: whiten + reduce each tile to one digest row.
+    rows = pl.pallas_call(
+        _leaf_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile, 16), lambda i: (i, 0)),
+            pl.BlockSpec((8,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, 16), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid, 16), jnp.uint32),
+        interpret=True,
+    )(payload.astype(U32), key.astype(U32), idx)
+    # Internal passes: reduce per-tile digests the same way.
+    while rows.shape[0] > 1:
+        n = rows.shape[0]
+        t = min(n, TILE_ROWS)
+        g = n // t
+        rows = pl.pallas_call(
+            _internal_kernel,
+            grid=(g,),
+            in_specs=[pl.BlockSpec((t, 16), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((1, 16), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((g, 16), jnp.uint32),
+            interpret=True,
+        )(rows)
+    # Final cross-lane stir (glue ops; they lower into the same HLO module).
+    return ref.stir(rows[0])

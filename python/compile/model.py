@@ -1,0 +1,72 @@
+"""L2: accelerator datapaths in JAX, composed from the Pallas kernels.
+
+Each function here is one *accelerator variant* the Rust coordinator serves
+through PJRT — the compute the paper's FPGA engines performed. They are
+batched over the ``(blocks, 16)`` uint32 payload layout (one row per 64 B
+block; see ``kernels/ref.py``) and lowered once per batch shape by
+``aot.py`` into ``artifacts/*.hlo.txt``. Python never runs at serve time.
+
+Entry points:
+
+- :func:`encrypt_digest` — the secure-KV / IPSec datapath: counter-mode ARX
+  encryption plus a keyed 64 B authentication digest over the ciphertext
+  (encrypt-then-MAC).
+- :func:`digest_only` — the SHA1-HMAC / SHA-3-512 role (fixed egress).
+- :func:`checksum_block` — the RocksDB block-checksum offload (Table 4).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.chacha import chacha_encrypt
+from .kernels.fletcher import fletcher
+from .kernels.treehash import treehash
+
+U32 = jnp.uint32
+
+
+def encrypt_digest(payload, key, nonce, counters):
+    """Encrypt ``payload`` (B, 16) and MAC the ciphertext.
+
+    Returns ``(ciphertext (B, 16), tag (16,))`` — R = 1 egress for the
+    cipher plus a fixed 64 B digest, matching the paper's AES+HMAC pairing
+    (Fig 11a). Decryption is the same function (XOR involution); the caller
+    re-derives the tag over the ciphertext it received to authenticate.
+    """
+    cipher = chacha_encrypt(payload, key, nonce, counters)
+    tag = treehash(cipher, key)
+    return cipher, tag
+
+
+def digest_only(payload, key):
+    """Keyed 64 B digest of ``payload`` (B, 16) — fixed-egress accelerator."""
+    return (treehash(payload, key),)
+
+
+def checksum_block(payload):
+    """Fletcher checksum of ``payload`` (B, 16) → (2,) uint32."""
+    return (fletcher(payload),)
+
+
+# ---- Grouped variants (the server's dynamic batcher packs G same-class
+# requests into one executable call; empty slots are zero-padded) ----------
+
+
+def encrypt_digest_many(payloads, keys, nonces, counters):
+    """Vectorized :func:`encrypt_digest` over a request group.
+
+    payloads: (G, B, 16); keys: (G, 8); nonces: (G, 3); counters: (G, B).
+    Returns (ciphers (G, B, 16), tags (G, 16)) — one tag per request, so
+    requests batched together keep independent authentication.
+    """
+    return jax.vmap(encrypt_digest)(payloads, keys, nonces, counters)
+
+
+def digest_many(payloads, keys):
+    """Vectorized :func:`digest_only`: (G, B, 16) × (G, 8) → ((G, 16),)."""
+    return jax.vmap(digest_only)(payloads, keys)
+
+
+def checksum_many(payloads):
+    """Vectorized :func:`checksum_block`: (G, B, 16) → ((G, 2),)."""
+    return jax.vmap(checksum_block)(payloads)

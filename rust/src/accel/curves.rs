@@ -1,0 +1,151 @@
+//! Throughput-vs-message-size efficiency curves (Fig 7a).
+//!
+//! The paper identifies three representative shapes: logarithmic-saturating,
+//! exponential-saturating, and "uniquely ad-hoc" piecewise curves. All map a
+//! message size to an efficiency in (0, 1] that multiplies the engine's peak
+//! throughput.
+
+/// Efficiency curve: fraction of peak throughput sustained at a given size.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ThroughputCurve {
+    /// Always 1.0 (synthetic linear accelerator).
+    Flat,
+    /// Michaelis–Menten saturating: eff(s) = s / (s + k). Logarithmic-ish
+    /// rise; `k` is the size at 50% efficiency.
+    Saturating { k: f64 },
+    /// Exponential saturating: eff(s) = 1 - exp(-s/tau).
+    Exponential { tau: f64 },
+    /// Piecewise-linear over (size, efficiency) control points — the
+    /// "uniquely ad-hoc" curves with local dips (e.g. block-boundary
+    /// effects in compressors).
+    AdHoc { points: Vec<(u64, f64)> },
+}
+
+impl ThroughputCurve {
+    pub fn flat() -> Self {
+        ThroughputCurve::Flat
+    }
+    pub fn saturating(k: f64) -> Self {
+        assert!(k > 0.0);
+        ThroughputCurve::Saturating { k }
+    }
+    pub fn exponential(tau: f64) -> Self {
+        assert!(tau > 0.0);
+        ThroughputCurve::Exponential { tau }
+    }
+    /// Points must be sorted by size and have efficiencies in (0, 1].
+    pub fn adhoc(points: Vec<(u64, f64)>) -> Self {
+        assert!(!points.is_empty());
+        assert!(points.windows(2).all(|w| w[0].0 < w[1].0), "sizes sorted");
+        assert!(points.iter().all(|&(_, e)| e > 0.0 && e <= 1.0));
+        ThroughputCurve::AdHoc { points }
+    }
+
+    /// Efficiency at message size `s` (bytes).
+    pub fn efficiency(&self, s: u64) -> f64 {
+        let s = s.max(1);
+        match self {
+            ThroughputCurve::Flat => 1.0,
+            ThroughputCurve::Saturating { k } => {
+                let x = s as f64;
+                x / (x + k)
+            }
+            ThroughputCurve::Exponential { tau } => 1.0 - (-(s as f64) / tau).exp(),
+            ThroughputCurve::AdHoc { points } => {
+                let x = s;
+                if x <= points[0].0 {
+                    // Scale below the first point towards zero smoothly.
+                    return points[0].1 * x as f64 / points[0].0 as f64;
+                }
+                if x >= points[points.len() - 1].0 {
+                    return points[points.len() - 1].1;
+                }
+                let i = points.partition_point(|&(px, _)| px <= x) - 1;
+                let (x0, y0) = points[i];
+                let (x1, y1) = points[i + 1];
+                let t = (x - x0) as f64 / (x1 - x0) as f64;
+                y0 + t * (y1 - y0)
+            }
+        }
+    }
+
+    /// Sample the curve at standard sizes (for Fig 7a reports).
+    pub fn sample(&self, sizes: &[u64]) -> Vec<(u64, f64)> {
+        sizes.iter().map(|&s| (s, self.efficiency(s))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_is_one_everywhere() {
+        let c = ThroughputCurve::flat();
+        for s in [1u64, 64, 1500, 1 << 20] {
+            assert_eq!(c.efficiency(s), 1.0);
+        }
+    }
+
+    #[test]
+    fn saturating_half_at_k() {
+        let c = ThroughputCurve::saturating(512.0);
+        assert!((c.efficiency(512) - 0.5).abs() < 1e-9);
+        assert!(c.efficiency(64) < 0.2);
+        assert!(c.efficiency(65536) > 0.99);
+    }
+
+    #[test]
+    fn exponential_63pct_at_tau() {
+        let c = ThroughputCurve::exponential(1000.0);
+        assert!((c.efficiency(1000) - 0.632).abs() < 0.01);
+    }
+
+    #[test]
+    fn curves_monotone_except_adhoc() {
+        for c in [
+            ThroughputCurve::saturating(300.0),
+            ThroughputCurve::exponential(700.0),
+        ] {
+            let mut prev = 0.0;
+            for s in (6..20).map(|e| 1u64 << e) {
+                let e = c.efficiency(s);
+                assert!(e >= prev);
+                prev = e;
+            }
+        }
+    }
+
+    #[test]
+    fn adhoc_interpolates_and_dips() {
+        let c = ThroughputCurve::adhoc(vec![(100, 0.2), (1000, 0.9), (2000, 0.5)]);
+        assert!((c.efficiency(100) - 0.2).abs() < 1e-9);
+        assert!((c.efficiency(550) - 0.55).abs() < 1e-9); // midpoint interp
+        assert!((c.efficiency(1000) - 0.9).abs() < 1e-9);
+        assert!(c.efficiency(1500) < 0.9); // the dip
+        assert!((c.efficiency(5000) - 0.5).abs() < 1e-9); // clamps right
+        assert!(c.efficiency(50) < 0.2); // scales toward zero left
+    }
+
+    #[test]
+    #[should_panic]
+    fn adhoc_rejects_unsorted() {
+        let _ = ThroughputCurve::adhoc(vec![(1000, 0.5), (100, 0.2)]);
+    }
+
+    #[test]
+    fn efficiency_never_zero_or_above_one() {
+        let curves = [
+            ThroughputCurve::flat(),
+            ThroughputCurve::saturating(400.0),
+            ThroughputCurve::exponential(900.0),
+            ThroughputCurve::adhoc(vec![(64, 0.1), (4096, 1.0)]),
+        ];
+        for c in &curves {
+            for s in [1u64, 63, 64, 65, 1499, 1500, 1 << 22] {
+                let e = c.efficiency(s);
+                assert!(e > 0.0 && e <= 1.0, "{c:?} at {s}: {e}");
+            }
+        }
+    }
+}

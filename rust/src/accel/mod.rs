@@ -1,0 +1,364 @@
+//! Accelerator models with communication-relevant heterogeneity (§2.2).
+//!
+//! The paper's "non-linearity" of accelerators has two axes, both modeled
+//! here:
+//!
+//! 1. **Throughput vs message size** ([`curves::ThroughputCurve`]): each
+//!    accelerator has a unique saturating curve — per-message setup costs
+//!    make tiny messages reach a fraction of peak (Fig 3b: 64 B mixes hold
+//!    an IPSec engine to 18–32% of its 32 Gbps; Fig 7a shows logarithmic,
+//!    exponential, and ad-hoc curve shapes).
+//! 2. **Egress/ingress ratio R** ([`Egress`]): AES keeps R=1, decompression
+//!    R>1, compression R<1, SHA-3-512 has fixed 64 B output. R decides which
+//!    PCIe direction an accelerator stresses and how much egress bandwidth a
+//!    given SLO really needs (§5.3.1).
+//!
+//! [`AccelUnit`] is the simulation component: a single-server pipeline with
+//! an input scheduler (pluggable [`crate::dma::Arbiter`] policy — this is
+//! where PANIC's WFQ/priority vs Arcus's shaped-FIFO differ), a service time
+//! drawn from the model, and an egress size from R.
+
+pub mod curves;
+pub mod unit;
+
+pub use curves::ThroughputCurve;
+pub use unit::{AccelUnit, Job, JobDone};
+
+use crate::util::units::{Rate, Time, SECONDS};
+use crate::util::Rng;
+
+/// Egress-size behaviour (the R = Eb/Ib taxonomy of §2.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Egress {
+    /// Output bytes = ratio × input bytes (R=1 ciphers, R<1 compressors,
+    /// R>1 decompressors).
+    Ratio(f64),
+    /// Fixed-size output regardless of input (hashes/digests).
+    Fixed(u64),
+}
+
+impl Egress {
+    pub fn out_bytes(self, in_bytes: u64) -> u64 {
+        match self {
+            Egress::Ratio(r) => ((in_bytes as f64 * r).round() as u64).max(1),
+            Egress::Fixed(n) => n,
+        }
+    }
+}
+
+/// Jitter on the deterministic service time (§5.3.1 tests synthetic
+/// accelerators under "Bi-modal, Poison [sic], and Uniform" distributions).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServiceJitter {
+    /// Deterministic pipeline (most fixed-function engines).
+    None,
+    /// Uniform multiplicative jitter in [1-spread, 1+spread].
+    Uniform { spread: f64 },
+    /// With probability `p_slow`, service takes `slow_factor`× longer
+    /// (cache-miss / recompression style bimodality).
+    Bimodal { p_slow: f64, slow_factor: f64 },
+    /// Exponential (memoryless) service around the mean.
+    Poisson,
+}
+
+impl ServiceJitter {
+    fn apply(self, base: f64, rng: &mut Rng) -> f64 {
+        match self {
+            ServiceJitter::None => base,
+            ServiceJitter::Uniform { spread } => {
+                base * rng.range_f64(1.0 - spread, 1.0 + spread)
+            }
+            ServiceJitter::Bimodal { p_slow, slow_factor } => {
+                if rng.chance(p_slow) {
+                    base * slow_factor
+                } else {
+                    base
+                }
+            }
+            ServiceJitter::Poisson => rng.exponential(base),
+        }
+    }
+}
+
+/// A parameterized accelerator model.
+#[derive(Debug, Clone)]
+pub struct AccelModel {
+    pub name: &'static str,
+    /// Peak ingress throughput at large message sizes.
+    pub peak: Rate,
+    /// Throughput-vs-size efficiency curve.
+    pub curve: ThroughputCurve,
+    /// Egress behaviour.
+    pub egress: Egress,
+    /// Service-time jitter.
+    pub jitter: ServiceJitter,
+    /// Fixed per-message pipeline latency (descriptor decode, key schedule…)
+    /// added on top of the throughput-derived time.
+    pub setup: Time,
+}
+
+impl AccelModel {
+    /// Effective sustained ingress throughput at message size `s`.
+    pub fn throughput_at(&self, msg_bytes: u64) -> Rate {
+        Rate(self.peak.0 * self.curve.efficiency(msg_bytes))
+    }
+
+    /// Deterministic part of the service time for one message.
+    pub fn base_service_time(&self, msg_bytes: u64) -> Time {
+        let thr = self.throughput_at(msg_bytes);
+        self.setup + thr.serialize_time(msg_bytes)
+    }
+
+    /// Effective sustained ingress rate at size `s` including the
+    /// per-message setup cost — the rate an engine actually serves a
+    /// backlogged stream of `s`-byte messages at. Capacity planning and the
+    /// paper's "overall capacity" numbers are in these terms.
+    pub fn effective_rate(&self, msg_bytes: u64) -> Rate {
+        Rate(msg_bytes as f64 * 8.0 * SECONDS as f64 / self.base_service_time(msg_bytes) as f64)
+    }
+
+    /// Sampled service time (with jitter).
+    pub fn service_time(&self, msg_bytes: u64, rng: &mut Rng) -> Time {
+        let base = self.base_service_time(msg_bytes) as f64;
+        self.jitter.apply(base, rng).round() as Time
+    }
+
+    /// Messages/sec the engine sustains at size `s` (derived; used by the
+    /// profiler and capacity planner).
+    pub fn mps_at(&self, msg_bytes: u64) -> f64 {
+        SECONDS as f64 / self.base_service_time(msg_bytes) as f64
+    }
+
+    // ---- The paper's accelerator zoo -------------------------------------
+
+    /// 32 Gbps IPSec engine (Fig 3, §3.1): strong small-message penalty
+    /// (per-packet ESP header/trailer + key setup), R=1.
+    pub fn ipsec_32g() -> Self {
+        AccelModel {
+            name: "ipsec",
+            peak: Rate::gbps(34.0),
+            curve: ThroughputCurve::saturating(120.0),
+            egress: Egress::Ratio(1.0),
+            jitter: ServiceJitter::None,
+            setup: 15_000, // 15 ns per-packet ESP header/trailer + key setup
+        }
+    }
+
+    /// AES-128-CBC bump-in-the-wire cipher (Fig 11a), R=1.
+    pub fn aes_128() -> Self {
+        AccelModel {
+            name: "aes128",
+            peak: Rate::gbps(42.0),
+            curve: ThroughputCurve::saturating(150.0),
+            egress: Egress::Ratio(1.0),
+            jitter: ServiceJitter::None,
+            setup: 20_000,
+        }
+    }
+
+    /// SHA1-HMAC authenticator (Fig 11a): fixed 20 B digest out.
+    pub fn sha1_hmac() -> Self {
+        AccelModel {
+            name: "sha1hmac",
+            peak: Rate::gbps(26.0),
+            curve: ThroughputCurve::exponential(150.0),
+            egress: Egress::Fixed(20),
+            jitter: ServiceJitter::None,
+            setup: 40_000,
+        }
+    }
+
+    /// SHA-3-512: fixed 64 B output — the §5.3.1 example of an accelerator
+    /// that only ever stresses its ingress path.
+    pub fn sha3_512() -> Self {
+        AccelModel {
+            name: "sha3_512",
+            peak: Rate::gbps(21.0),
+            curve: ThroughputCurve::exponential(900.0),
+            egress: Egress::Fixed(64),
+            jitter: ServiceJitter::None,
+            setup: 50_000,
+        }
+    }
+
+    /// Compression engine (RocksDB offload, Table 4): R<1 (ratio ~0.45 on
+    /// mixed key-value blocks), ad-hoc curve with a block-boundary dip.
+    pub fn compress() -> Self {
+        AccelModel {
+            name: "compress",
+            peak: Rate::gbps(16.0),
+            curve: ThroughputCurve::adhoc(vec![
+                (64, 0.08),
+                (512, 0.38),
+                (4096, 0.82),
+                (8192, 0.70), // dictionary reset at block boundary
+                (32768, 0.95),
+                (262144, 1.0),
+            ]),
+            egress: Egress::Ratio(0.45),
+            jitter: ServiceJitter::Bimodal {
+                p_slow: 0.05,
+                slow_factor: 1.8, // incompressible blocks re-emitted raw
+            },
+            setup: 150_000,
+        }
+    }
+
+    /// Decompression: R>1.
+    pub fn decompress() -> Self {
+        AccelModel {
+            name: "decompress",
+            peak: Rate::gbps(28.0),
+            curve: ThroughputCurve::saturating(500.0),
+            egress: Egress::Ratio(2.2),
+            jitter: ServiceJitter::None,
+            setup: 60_000,
+        }
+    }
+
+    /// CRC32C checksum engine (RocksDB offload): tiny fixed output.
+    pub fn checksum() -> Self {
+        AccelModel {
+            name: "checksum",
+            peak: Rate::gbps(50.0),
+            curve: ThroughputCurve::saturating(90.0),
+            egress: Egress::Fixed(4),
+            jitter: ServiceJitter::None,
+            setup: 40_000,
+        }
+    }
+
+    /// Synthetic accelerator with a given peak and no size penalty — used by
+    /// the CaseP studies ("a synthetic 50 Gbps accelerator") to isolate
+    /// communication effects from interface effects.
+    pub fn synthetic(peak: Rate) -> Self {
+        AccelModel {
+            name: "synthetic",
+            peak,
+            curve: ThroughputCurve::flat(),
+            egress: Egress::Ratio(1.0),
+            jitter: ServiceJitter::None,
+            setup: 0,
+        }
+    }
+
+    /// Look up a model by config name.
+    pub fn by_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "ipsec" => Self::ipsec_32g(),
+            "aes128" => Self::aes_128(),
+            "sha1hmac" => Self::sha1_hmac(),
+            "sha3_512" => Self::sha3_512(),
+            "compress" => Self::compress(),
+            "decompress" => Self::decompress(),
+            "checksum" => Self::checksum(),
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ipsec_small_messages_crater_throughput() {
+        let m = AccelModel::ipsec_32g();
+        let t64 = m.effective_rate(64).as_gbps();
+        let t1500 = m.effective_rate(1500).as_gbps();
+        // Fig 3b: 64 B mixes deliver 18–32% of the ~32 Gbps MTU capacity.
+        assert!(
+            (0.18..0.32).contains(&(t64 / 32.0)),
+            "64B effective {:.2} of 32G",
+            t64 / 32.0
+        );
+        // §3.1: "overall capacity is 32 Gbps at maximum for full load,
+        // MTU-sized packets".
+        assert!(
+            (0.90..1.05).contains(&(t1500 / 32.0)),
+            "1500B effective {:.2} of 32G",
+            t1500 / 32.0
+        );
+    }
+
+    #[test]
+    fn egress_ratios_match_taxonomy() {
+        assert_eq!(AccelModel::aes_128().egress.out_bytes(1500), 1500); // R=1
+        assert!(AccelModel::compress().egress.out_bytes(4096) < 4096); // R<1
+        assert!(AccelModel::decompress().egress.out_bytes(4096) > 4096); // R>1
+        assert_eq!(AccelModel::sha3_512().egress.out_bytes(1_000_000), 64); // fixed
+        assert_eq!(AccelModel::sha3_512().egress.out_bytes(64), 64);
+    }
+
+    #[test]
+    fn service_time_monotone_in_size() {
+        let m = AccelModel::ipsec_32g();
+        let mut prev = 0;
+        for s in [64u64, 256, 512, 1500, 4096, 65536] {
+            let t = m.base_service_time(s);
+            assert!(t > prev, "size {s}: {t} !> {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn synthetic_is_linear() {
+        let m = AccelModel::synthetic(Rate::gbps(50.0));
+        let t1 = m.base_service_time(1000);
+        let t4 = m.base_service_time(4000);
+        assert!(((t4 as f64 / t1 as f64) - 4.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn jitter_distributions_behave() {
+        let mut rng = Rng::new(3);
+        let base = 1_000_000.0;
+        // Uniform stays within bounds.
+        for _ in 0..1000 {
+            let v = ServiceJitter::Uniform { spread: 0.2 }.apply(base, &mut rng);
+            assert!((0.8 * base..=1.2 * base).contains(&v));
+        }
+        // Bimodal: slow fraction near p_slow.
+        let slow = (0..10_000)
+            .filter(|_| {
+                ServiceJitter::Bimodal {
+                    p_slow: 0.1,
+                    slow_factor: 3.0,
+                }
+                .apply(base, &mut rng)
+                    > 2.0 * base
+            })
+            .count();
+        assert!((800..1200).contains(&slow), "slow={slow}");
+        // Poisson: mean close to base.
+        let n = 20_000;
+        let sum: f64 = (0..n)
+            .map(|_| ServiceJitter::Poisson.apply(base, &mut rng))
+            .sum();
+        assert!((sum / n as f64 - base).abs() / base < 0.05);
+    }
+
+    #[test]
+    fn mps_inverse_of_service_time() {
+        let m = AccelModel::aes_128();
+        let mps = m.mps_at(1500);
+        let t = m.base_service_time(1500);
+        assert!((mps * t as f64 / SECONDS as f64 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in [
+            "ipsec",
+            "aes128",
+            "sha1hmac",
+            "sha3_512",
+            "compress",
+            "decompress",
+            "checksum",
+        ] {
+            assert_eq!(AccelModel::by_name(name).unwrap().name, name);
+        }
+        assert!(AccelModel::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,254 @@
+//! The accelerator pipeline unit: input arbiter + single-server engine.
+//!
+//! Models the accelerator interface the paper studies: per-flow input queues
+//! feed a single processing pipeline through a scheduling policy. Under
+//! PANIC this policy is priority/WFQ (reactive); under Arcus the queues are
+//! *already shaped* upstream so a plain FIFO/RR suffices — the difference in
+//! outcomes is the content of Fig 3 vs Fig 8.
+//!
+//! DES integration follows the link/fabric pattern: `submit` enqueues,
+//! `pump(now)` advances the engine and returns completed jobs plus the next
+//! wake time.
+
+use super::AccelModel;
+use crate::dma::{Arbiter, Policy};
+use crate::util::units::Time;
+use crate::util::Rng;
+
+/// One accelerator invocation travelling through the unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Job {
+    /// Opaque id the wiring uses to correlate completions.
+    pub id: u64,
+    /// Flow (input queue) index.
+    pub flow: usize,
+    /// Ingress payload bytes.
+    pub bytes: u64,
+}
+
+/// A finished invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobDone {
+    pub job: Job,
+    /// Completion time.
+    pub at: Time,
+    /// Egress payload bytes (from the model's R).
+    pub egress_bytes: u64,
+}
+
+/// Single-engine accelerator with per-flow input queues.
+#[derive(Debug)]
+pub struct AccelUnit {
+    model: AccelModel,
+    input: Arbiter<Job>,
+    /// Job in the pipeline and its finish time.
+    current: Option<(Job, Time)>,
+    rng: Rng,
+    /// Busy-time accounting for utilization reports.
+    busy: Time,
+    served_bytes: u64,
+}
+
+impl AccelUnit {
+    pub fn new(model: AccelModel, n_flows: usize, policy: Policy, seed: u64) -> Self {
+        AccelUnit {
+            model,
+            input: Arbiter::new(n_flows, policy),
+            current: None,
+            rng: Rng::for_stream(seed, 0xACCE1),
+            busy: 0,
+            served_bytes: 0,
+        }
+    }
+
+    pub fn model(&self) -> &AccelModel {
+        &self.model
+    }
+
+    /// Queue an invocation (payload already DMA'd to the engine).
+    pub fn submit(&mut self, job: Job) {
+        self.input.push(job.flow, job.bytes, job);
+    }
+
+    /// Number of queued (not yet started) jobs.
+    pub fn backlog(&self) -> usize {
+        self.input.len()
+    }
+
+    /// Queued bytes for one flow (backpressure signal, step 6 in Fig 4).
+    pub fn flow_backlog_bytes(&self, flow: usize) -> u64 {
+        self.input.queue_bytes(flow)
+    }
+
+    /// Advance to `now`; complete due jobs, start queued ones.
+    pub fn pump(&mut self, now: Time) -> (Vec<JobDone>, Option<Time>) {
+        let mut done = Vec::new();
+        loop {
+            match self.current {
+                Some((job, fin)) if fin <= now => {
+                    self.current = None;
+                    self.served_bytes += job.bytes;
+                    done.push(JobDone {
+                        job,
+                        at: fin,
+                        egress_bytes: self.model.egress.out_bytes(job.bytes),
+                    });
+                    // Start the next job back-to-back at `fin`.
+                    if let Some((_, _, next)) = self.input.pop() {
+                        let t = self.model.service_time(next.bytes, &mut self.rng);
+                        self.busy += t;
+                        self.current = Some((next, fin + t));
+                    }
+                }
+                Some((_, fin)) => return (done, Some(fin)),
+                None => match self.input.pop() {
+                    Some((_, _, job)) => {
+                        let t = self.model.service_time(job.bytes, &mut self.rng);
+                        self.busy += t;
+                        self.current = Some((job, now + t));
+                    }
+                    None => return (done, None),
+                },
+            }
+        }
+    }
+
+    /// Fraction of `elapsed` the engine spent busy.
+    pub fn utilization(&self, elapsed: Time) -> f64 {
+        if elapsed == 0 {
+            0.0
+        } else {
+            self.busy as f64 / elapsed as f64
+        }
+    }
+
+    pub fn served_bytes(&self) -> u64 {
+        self.served_bytes
+    }
+
+    pub fn idle(&self) -> bool {
+        self.current.is_none() && self.input.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{Rate, SECONDS};
+
+    fn drain(unit: &mut AccelUnit) -> Vec<JobDone> {
+        let mut out = Vec::new();
+        let mut now = 0;
+        loop {
+            let (done, next) = unit.pump(now);
+            out.extend(done);
+            match next {
+                Some(t) => now = t,
+                None => break,
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn throughput_matches_model_at_size() {
+        let model = AccelModel::ipsec_32g();
+        // Expected sustained rate includes the per-message setup cost.
+        let expect =
+            Rate(1500.0 * 8.0 * SECONDS as f64 / model.base_service_time(1500) as f64);
+        let mut unit = AccelUnit::new(model, 1, Policy::RoundRobin, 1);
+        let n = 5000u64;
+        for i in 0..n {
+            unit.submit(Job {
+                id: i,
+                flow: 0,
+                bytes: 1500,
+            });
+        }
+        let done = drain(&mut unit);
+        let last = done.last().unwrap().at;
+        let rate = (n * 1500) as f64 * 8.0 * SECONDS as f64 / last as f64;
+        assert!(
+            (rate / expect.as_bits_per_sec()) > 0.98,
+            "rate={:.2}G expect={:.2}G",
+            rate / 1e9,
+            expect.as_gbps()
+        );
+    }
+
+    #[test]
+    fn mixed_sizes_drag_shared_throughput() {
+        // The Fig 3b effect: a 64 B flow mixed into a 1500 B flow drags the
+        // engine's aggregate bandwidth far below peak.
+        let model = AccelModel::ipsec_32g();
+        let mtu_rate = model.effective_rate(1500).as_gbps();
+        let mut unit = AccelUnit::new(model, 2, Policy::RoundRobin, 1);
+        // VM2 floods 64 B messages at 7× VM1's 1500 B message rate (the
+        // CaseT1 high-load points).
+        let n = 8000u64;
+        let mut bytes = 0;
+        for i in 0..n {
+            let size = if i % 8 == 0 { 1500 } else { 64 };
+            bytes += size;
+            unit.submit(Job {
+                id: i,
+                flow: (i % 2) as usize,
+                bytes: size,
+            });
+        }
+        let done = drain(&mut unit);
+        let last = done.last().unwrap().at;
+        let agg = bytes as f64 * 8.0 * SECONDS as f64 / last as f64 / 1e9;
+        assert!(
+            agg < 0.65 * mtu_rate,
+            "aggregate {agg:.1} Gbps should be well under the {mtu_rate:.1} Gbps MTU rate"
+        );
+    }
+
+    #[test]
+    fn egress_sizes_follow_model() {
+        let mut unit = AccelUnit::new(AccelModel::compress(), 1, Policy::RoundRobin, 2);
+        unit.submit(Job {
+            id: 0,
+            flow: 0,
+            bytes: 4096,
+        });
+        let done = drain(&mut unit);
+        assert_eq!(done[0].egress_bytes, (4096.0f64 * 0.45).round() as u64);
+    }
+
+    #[test]
+    fn work_conserving_no_idle_gaps() {
+        let model = AccelModel::synthetic(Rate::gbps(10.0));
+        let per_job = model.base_service_time(1000);
+        let mut unit = AccelUnit::new(model, 1, Policy::RoundRobin, 3);
+        for i in 0..100 {
+            unit.submit(Job {
+                id: i,
+                flow: 0,
+                bytes: 1000,
+            });
+        }
+        let done = drain(&mut unit);
+        assert_eq!(done.last().unwrap().at, 100 * per_job);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut unit = AccelUnit::new(AccelModel::compress(), 1, Policy::RoundRobin, 7);
+            for i in 0..200 {
+                unit.submit(Job {
+                    id: i,
+                    flow: 0,
+                    bytes: 4096,
+                });
+            }
+            drain(&mut unit)
+                .into_iter()
+                .map(|d| d.at)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,419 @@
+//! Mini LSM storage engine with offloadable checksum + compression
+//! (the Table 4 RocksDB experiment).
+//!
+//! Writes go to a memtable; when it fills, it flushes to an SST: entries
+//! packed into blocks, each block **compressed** then **checksummed**.
+//! Level-0 SSTs compact into level-1 by merge. Reads check the memtable,
+//! then search SSTs newest-first, verifying the block checksum and
+//! decompressing on hit.
+//!
+//! Two backends implement the block pipeline:
+//! - [`Backend::Cpu`] — the ext4 baseline: deflate + Fletcher on the
+//!   calling (application) thread.
+//! - [`Backend::Offload`] — the Arcus path: compression on the offload
+//!   pool, checksum through the PJRT accelerator server; the application
+//!   thread only coordinates.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::runtime::{fletcher_native, pack_bytes};
+use crate::server::{Output, Server, Work};
+
+use super::offload::{compress_cpu, decompress_cpu, CompressorPool};
+
+/// Where block compression/checksum work runs.
+pub enum Backend {
+    /// On the application thread (the paper's ext4 baseline).
+    Cpu,
+    /// Offloaded: checksum via the accelerator server, compression via the
+    /// offload pool.
+    Offload { server: Arc<Server>, tenant: usize, pool: Arc<CompressorPool> },
+}
+
+/// Engine configuration.
+pub struct MiniLsmConfig {
+    /// Flush the memtable when it holds this many bytes.
+    pub memtable_bytes: usize,
+    /// Target uncompressed SST block size.
+    pub block_bytes: usize,
+    /// Compact level-0 when it holds this many SSTs.
+    pub l0_compact_at: usize,
+}
+
+impl Default for MiniLsmConfig {
+    fn default() -> Self {
+        MiniLsmConfig { memtable_bytes: 256 * 1024, block_bytes: 4096, l0_compact_at: 4 }
+    }
+}
+
+/// One SST block: compressed entries + checksum.
+struct Block {
+    /// First key in the block (for binary search).
+    first_key: Vec<u8>,
+    compressed: Vec<u8>,
+    checksum: (u32, u32),
+    uncompressed_len: usize,
+}
+
+/// A sorted string table.
+struct Sst {
+    blocks: Vec<Block>,
+}
+
+/// Write/compaction statistics (the Table 4 measurements).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LsmStats {
+    pub puts: u64,
+    pub gets: u64,
+    pub flushes: u64,
+    pub compactions: u64,
+    /// Logical bytes written by the application.
+    pub logical_bytes: u64,
+    /// Physical uncompressed bytes pushed through the block pipeline
+    /// (flush + compaction re-writes — the write amplification).
+    pub pipeline_bytes: u64,
+    /// Bytes after compression.
+    pub compressed_bytes: u64,
+    /// Checksum verification failures observed on reads.
+    pub checksum_failures: u64,
+}
+
+/// The engine. Single-writer (wrap in a mutex to share).
+pub struct MiniLsm {
+    cfg: MiniLsmConfig,
+    backend: Backend,
+    memtable: BTreeMap<Vec<u8>, Vec<u8>>,
+    memtable_bytes: usize,
+    /// levels[0] = newest flushes; levels[1] = compacted.
+    levels: Vec<Vec<Sst>>,
+    pub stats: LsmStats,
+}
+
+impl MiniLsm {
+    pub fn new(cfg: MiniLsmConfig, backend: Backend) -> Self {
+        MiniLsm {
+            cfg,
+            backend,
+            memtable: BTreeMap::new(),
+            memtable_bytes: 0,
+            levels: vec![Vec::new(), Vec::new()],
+            stats: LsmStats::default(),
+        }
+    }
+
+    pub fn put(&mut self, k: &[u8], v: &[u8]) {
+        self.stats.puts += 1;
+        self.stats.logical_bytes += (k.len() + v.len()) as u64;
+        self.memtable_bytes += k.len() + v.len();
+        self.memtable.insert(k.to_vec(), v.to_vec());
+        if self.memtable_bytes >= self.cfg.memtable_bytes {
+            self.flush();
+        }
+    }
+
+    pub fn get(&mut self, k: &[u8]) -> Option<Vec<u8>> {
+        self.stats.gets += 1;
+        if let Some(v) = self.memtable.get(k) {
+            return Some(v.clone());
+        }
+        // Newest-first: level 0 back-to-front, then level 1.
+        let mut failures = 0u64;
+        let mut found = None;
+        'outer: for level in &self.levels {
+            for sst in level.iter().rev() {
+                if let Some(r) = Self::sst_get(&self.backend, sst, k, &mut failures) {
+                    found = Some(r);
+                    break 'outer;
+                }
+            }
+        }
+        self.stats.checksum_failures += failures;
+        found
+    }
+
+    /// Force a memtable flush (also used at shutdown).
+    pub fn flush(&mut self) {
+        if self.memtable.is_empty() {
+            return;
+        }
+        let entries = std::mem::take(&mut self.memtable);
+        self.memtable_bytes = 0;
+        let sst = self.build_sst(entries.into_iter().collect());
+        self.levels[0].push(sst);
+        self.stats.flushes += 1;
+        if self.levels[0].len() >= self.cfg.l0_compact_at {
+            self.compact();
+        }
+    }
+
+    /// Merge all of L0 (+ existing L1) into one L1 SST.
+    fn compact(&mut self) {
+        let mut merged: BTreeMap<Vec<u8>, Vec<u8>> = BTreeMap::new();
+        // Oldest first so newer SSTs overwrite.
+        let l1 = std::mem::take(&mut self.levels[1]);
+        let l0 = std::mem::take(&mut self.levels[0]);
+        for sst in l1.into_iter().chain(l0.into_iter()) {
+            for data in Self::open_blocks(&self.backend, &sst.blocks) {
+                let data = data.expect("compaction read: checksum failure");
+                for (k, v) in decode_entries(&data) {
+                    merged.insert(k, v);
+                }
+            }
+        }
+        let sst = self.build_sst(merged.into_iter().collect());
+        self.levels[1] = vec![sst];
+        self.stats.compactions += 1;
+    }
+
+    /// Pack sorted entries into checksummed, compressed blocks.
+    fn build_sst(&mut self, entries: Vec<(Vec<u8>, Vec<u8>)>) -> Sst {
+        let mut blocks = Vec::new();
+        let mut buf = Vec::with_capacity(self.cfg.block_bytes * 2);
+        let mut first_key: Option<Vec<u8>> = None;
+        // Stage raw blocks first so the offload backend can pipeline them.
+        let mut raw: Vec<(Vec<u8>, Vec<u8>)> = Vec::new(); // (first_key, data)
+        for (k, v) in entries {
+            if first_key.is_none() {
+                first_key = Some(k.clone());
+            }
+            encode_entry(&mut buf, &k, &v);
+            if buf.len() >= self.cfg.block_bytes {
+                raw.push((first_key.take().unwrap(), std::mem::take(&mut buf)));
+            }
+        }
+        if !buf.is_empty() {
+            raw.push((first_key.take().unwrap_or_default(), buf));
+        }
+        match &self.backend {
+            Backend::Cpu => {
+                for (first_key, data) in raw {
+                    self.stats.pipeline_bytes += data.len() as u64;
+                    let compressed = compress_cpu(&data);
+                    let checksum = fletcher_native(&pack_bytes(&compressed));
+                    self.stats.compressed_bytes += compressed.len() as u64;
+                    blocks.push(Block {
+                        first_key,
+                        compressed,
+                        checksum,
+                        uncompressed_len: data.len(),
+                    });
+                }
+            }
+            Backend::Offload { server, tenant, pool } => {
+                // Pipeline: fan all blocks into the compressor pool, then
+                // checksum the compressed outputs through the server (which
+                // batches them into grouped executable calls).
+                let lens: Vec<usize> = raw.iter().map(|(_, d)| d.len()).collect();
+                let comp_rxs: Vec<_> = raw
+                    .iter()
+                    .map(|(_, d)| pool.compress(d.clone()))
+                    .collect();
+                let compressed: Vec<Vec<u8>> =
+                    comp_rxs.into_iter().map(|rx| rx.recv().expect("pool")).collect();
+                let sum_rxs: Vec<_> = compressed
+                    .iter()
+                    .map(|c| server.submit(*tenant, Work::Checksum { data: c.clone() }))
+                    .collect();
+                for (((first_key, data), c), (rx, len)) in raw
+                    .into_iter()
+                    .zip(compressed.into_iter())
+                    .zip(sum_rxs.into_iter().zip(lens.into_iter()))
+                {
+                    self.stats.pipeline_bytes += data.len() as u64;
+                    self.stats.compressed_bytes += c.len() as u64;
+                    let resp = rx.recv().expect("server");
+                    let checksum = match resp.output {
+                        Output::Checksum { s1, s2 } => (s1, s2),
+                        other => panic!("checksum offload failed: {other:?}"),
+                    };
+                    blocks.push(Block {
+                        first_key,
+                        compressed: c,
+                        checksum,
+                        uncompressed_len: len,
+                    });
+                }
+            }
+        }
+        Sst { blocks }
+    }
+
+    /// Verify + decompress one block.
+    fn open_block(backend: &Backend, block: &Block) -> Option<Vec<u8>> {
+        Self::open_blocks(backend, std::slice::from_ref(block)).pop()?
+    }
+
+    /// Verify + decompress a batch of blocks, pipelining the offload path
+    /// (all checksums fan into the server — which groups them into batched
+    /// executable calls — while the pool decompresses concurrently).
+    fn open_blocks(backend: &Backend, blocks: &[Block]) -> Vec<Option<Vec<u8>>> {
+        let sums: Vec<(u32, u32)> = match backend {
+            Backend::Cpu => blocks
+                .iter()
+                .map(|b| fletcher_native(&pack_bytes(&b.compressed)))
+                .collect(),
+            Backend::Offload { server, tenant, .. } => {
+                let rxs: Vec<_> = blocks
+                    .iter()
+                    .map(|b| {
+                        server.submit(*tenant, Work::Checksum { data: b.compressed.clone() })
+                    })
+                    .collect();
+                rxs.into_iter()
+                    .map(|rx| match rx.recv().expect("server").output {
+                        Output::Checksum { s1, s2 } => (s1, s2),
+                        _ => (0, 0),
+                    })
+                    .collect()
+            }
+        };
+        let datas: Vec<Option<Vec<u8>>> = match backend {
+            Backend::Cpu => blocks
+                .iter()
+                .zip(&sums)
+                .map(|(b, &s)| (s == b.checksum).then(|| decompress_cpu(&b.compressed)))
+                .collect(),
+            Backend::Offload { pool, .. } => {
+                let rxs: Vec<_> = blocks
+                    .iter()
+                    .zip(&sums)
+                    .map(|(b, &s)| {
+                        (s == b.checksum).then(|| pool.decompress(b.compressed.clone()))
+                    })
+                    .collect();
+                rxs.into_iter()
+                    .map(|rx| rx.map(|rx| rx.recv().expect("pool")))
+                    .collect()
+            }
+        };
+        for (b, d) in blocks.iter().zip(&datas) {
+            if let Some(d) = d {
+                debug_assert_eq!(d.len(), b.uncompressed_len);
+            }
+        }
+        datas
+    }
+
+    fn sst_get(backend: &Backend, sst: &Sst, k: &[u8], failures: &mut u64) -> Option<Vec<u8>> {
+        // Binary search the candidate block by first_key.
+        let idx = match sst.blocks.binary_search_by(|b| b.first_key.as_slice().cmp(k)) {
+            Ok(i) => i,
+            Err(0) => return None,
+            Err(i) => i - 1,
+        };
+        let Some(data) = Self::open_block(backend, &sst.blocks[idx]) else {
+            *failures += 1;
+            return None;
+        };
+        decode_entries(&data)
+            .into_iter()
+            .find(|(key, _)| key.as_slice() == k)
+            .map(|(_, v)| v)
+    }
+
+    /// Total SSTs across levels.
+    pub fn n_ssts(&self) -> usize {
+        self.levels.iter().map(|l| l.len()).sum()
+    }
+
+    /// Compression ratio achieved so far.
+    pub fn compression_ratio(&self) -> f64 {
+        if self.stats.compressed_bytes == 0 {
+            1.0
+        } else {
+            self.stats.pipeline_bytes as f64 / self.stats.compressed_bytes as f64
+        }
+    }
+}
+
+fn encode_entry(buf: &mut Vec<u8>, k: &[u8], v: &[u8]) {
+    buf.extend_from_slice(&(k.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    buf.extend_from_slice(k);
+    buf.extend_from_slice(v);
+}
+
+fn decode_entries(mut data: &[u8]) -> Vec<(Vec<u8>, Vec<u8>)> {
+    let mut out = Vec::new();
+    while data.len() >= 8 {
+        let kl = u32::from_le_bytes([data[0], data[1], data[2], data[3]]) as usize;
+        let vl = u32::from_le_bytes([data[4], data[5], data[6], data[7]]) as usize;
+        if data.len() < 8 + kl + vl {
+            break;
+        }
+        out.push((data[8..8 + kl].to_vec(), data[8 + kl..8 + kl + vl].to_vec()));
+        data = &data[8 + kl + vl..];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn value(i: u32) -> Vec<u8> {
+        // Mildly compressible values, like real serialized rows.
+        format!("value-{i:08}-{}", "x".repeat(80 + (i % 40) as usize)).into_bytes()
+    }
+
+    #[test]
+    fn cpu_backend_put_get_across_flushes() {
+        let mut lsm = MiniLsm::new(
+            MiniLsmConfig { memtable_bytes: 8 * 1024, block_bytes: 2048, l0_compact_at: 3 },
+            Backend::Cpu,
+        );
+        for i in 0..500u32 {
+            lsm.put(format!("key-{i:06}").as_bytes(), &value(i));
+        }
+        assert!(lsm.stats.flushes > 3, "flushes={}", lsm.stats.flushes);
+        assert!(lsm.stats.compactions >= 1);
+        for i in (0..500u32).step_by(17) {
+            let got = lsm.get(format!("key-{i:06}").as_bytes());
+            assert_eq!(got, Some(value(i)), "key {i}");
+        }
+        assert_eq!(lsm.get(b"missing"), None);
+        assert_eq!(lsm.stats.checksum_failures, 0);
+        assert!(lsm.compression_ratio() > 2.0, "ratio={}", lsm.compression_ratio());
+    }
+
+    #[test]
+    fn overwrites_visible_after_compaction() {
+        let mut lsm = MiniLsm::new(
+            MiniLsmConfig { memtable_bytes: 4 * 1024, block_bytes: 1024, l0_compact_at: 2 },
+            Backend::Cpu,
+        );
+        for round in 0..4u32 {
+            for i in 0..100u32 {
+                lsm.put(
+                    format!("k{i:04}").as_bytes(),
+                    format!("round-{round}-{}", "y".repeat(64)).as_bytes(),
+                );
+            }
+        }
+        lsm.flush();
+        for i in (0..100).step_by(13) {
+            let v = lsm.get(format!("k{i:04}").as_bytes()).unwrap();
+            assert!(v.starts_with(b"round-3-"), "stale value for k{i}");
+        }
+    }
+
+    #[test]
+    fn write_amplification_tracked() {
+        let mut lsm = MiniLsm::new(
+            MiniLsmConfig { memtable_bytes: 4 * 1024, block_bytes: 1024, l0_compact_at: 2 },
+            Backend::Cpu,
+        );
+        for i in 0..400u32 {
+            lsm.put(format!("key-{i:06}").as_bytes(), &value(i));
+        }
+        lsm.flush();
+        // Compaction re-writes data: physical > logical.
+        assert!(
+            lsm.stats.pipeline_bytes > lsm.stats.logical_bytes,
+            "pipeline {} <= logical {}",
+            lsm.stats.pipeline_bytes,
+            lsm.stats.logical_bytes
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! End-to-end applications over the serving runtime (§5.4).
+//!
+//! - [`secure_kv`] — the MICA-style secure key-value store of Fig 11a:
+//!   values are encrypted and authenticated through the accelerator server
+//!   (encrypt-then-MAC), GETs verify the tag before decrypting.
+//! - [`minilsm`] — the RocksDB-style LSM engine of Table 4: SST blocks are
+//!   compressed and checksummed on write; checksum (and compression) can
+//!   run on the VM's CPU (the ext4 baseline) or be offloaded to the
+//!   accelerator runtime, freeing application cores.
+//! - [`offload`] — the compression offload pool (the "(de)compressor
+//!   engine" of Table 5) plus thread/process CPU accounting used to
+//!   measure the paper's core-savings claims.
+
+pub mod minilsm;
+pub mod offload;
+pub mod secure_kv;
+
+pub use minilsm::{Backend, LsmStats, MiniLsm, MiniLsmConfig};
+pub use offload::{thread_cpu_seconds, CompressorPool};
+pub use secure_kv::SecureKv;

@@ -1,0 +1,201 @@
+//! Secure key-value store (the Fig 11a MICA-with-crypto application).
+//!
+//! Values are encrypted and authenticated through the accelerator server
+//! (encrypt-then-MAC): PUT sends the value through `encrypt_digest`, stores
+//! ciphertext + tag + counter; GET re-runs the cipher on the ciphertext
+//! (counter-mode involution) *after* recomputing and checking the tag.
+//! Tampered ciphertext is detected and the read rejected.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use crate::runtime::Digest;
+use crate::server::{Output, Server, Work};
+
+struct Entry {
+    cipher: Vec<u8>,
+    tag: Digest,
+    counter0: u32,
+}
+
+/// Read errors.
+#[derive(Debug, PartialEq, Eq)]
+pub enum KvError {
+    NotFound,
+    /// Tag mismatch: the stored ciphertext was corrupted or forged.
+    AuthFailed,
+    Rejected,
+}
+
+/// The store: one tenant on the shared accelerator server.
+pub struct SecureKv {
+    server: Arc<Server>,
+    tenant: usize,
+    key: [u32; 8],
+    nonce: [u32; 3],
+    counter: AtomicU32,
+    map: std::sync::Mutex<HashMap<Vec<u8>, Entry>>,
+}
+
+impl SecureKv {
+    pub fn new(server: Arc<Server>, tenant: usize, key: [u32; 8], nonce: [u32; 3]) -> Self {
+        SecureKv {
+            server,
+            tenant,
+            key,
+            nonce,
+            counter: AtomicU32::new(1),
+            map: std::sync::Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Unique counter range for a value of `blocks` 64 B blocks (counters
+    /// must never repeat under one (key, nonce) pair).
+    fn alloc_counters(&self, blocks: u32) -> u32 {
+        self.counter.fetch_add(blocks.max(1), Ordering::Relaxed)
+    }
+
+    /// Encrypt-then-MAC PUT.
+    pub fn put(&self, k: &[u8], v: &[u8]) -> Result<(), KvError> {
+        let blocks = (v.len().div_ceil(64)).max(1) as u32;
+        let counter0 = self.alloc_counters(blocks);
+        let r = self.server.submit_blocking(
+            self.tenant,
+            Work::EncryptDigest {
+                data: v.to_vec(),
+                key: self.key,
+                nonce: self.nonce,
+                counter0,
+            },
+        );
+        match r.output {
+            Output::Encrypted { cipher, tag } => {
+                self.map
+                    .lock()
+                    .unwrap()
+                    .insert(k.to_vec(), Entry { cipher, tag, counter0 });
+                Ok(())
+            }
+            _ => Err(KvError::Rejected),
+        }
+    }
+
+    /// Verify-then-decrypt GET.
+    pub fn get(&self, k: &[u8]) -> Result<Vec<u8>, KvError> {
+        let (cipher, tag, counter0) = {
+            let map = self.map.lock().unwrap();
+            let e = map.get(k).ok_or(KvError::NotFound)?;
+            (e.cipher.clone(), e.tag, e.counter0)
+        };
+        // Decrypt = encrypt on the ciphertext; the engine also recomputes
+        // the tag over what we handed it. Because the stored tag was taken
+        // over the *ciphertext*, we check it against a digest of the stored
+        // bytes: run the cipher call and compare tags computed over the
+        // same ciphertext. The encrypt_digest artifact MACs its *output*,
+        // so to verify we MAC the stored ciphertext explicitly first.
+        let verify = self.server.submit_blocking(
+            self.tenant,
+            Work::EncryptDigest {
+                data: cipher.clone(),
+                key: self.key,
+                nonce: self.nonce,
+                counter0,
+            },
+        );
+        match verify.output {
+            Output::Encrypted { cipher: plain, tag: _plain_tag } => {
+                // Recompute the storage tag: MAC(cipher). Encrypting the
+                // plaintext again reproduces (cipher, tag) deterministically.
+                let recheck = self.server.submit_blocking(
+                    self.tenant,
+                    Work::EncryptDigest {
+                        data: plain.clone(),
+                        key: self.key,
+                        nonce: self.nonce,
+                        counter0,
+                    },
+                );
+                match recheck.output {
+                    Output::Encrypted { cipher: c2, tag: t2 } => {
+                        if c2 != cipher || t2 != tag {
+                            Err(KvError::AuthFailed)
+                        } else {
+                            Ok(plain)
+                        }
+                    }
+                    _ => Err(KvError::Rejected),
+                }
+            }
+            _ => Err(KvError::Rejected),
+        }
+    }
+
+    /// Corrupt a stored value in place (test/bench hook for the tamper
+    /// detection path).
+    pub fn tamper(&self, k: &[u8], byte: usize) -> bool {
+        let mut map = self.map.lock().unwrap();
+        match map.get_mut(k) {
+            Some(e) if byte < e.cipher.len() => {
+                e.cipher[byte] ^= 0x01;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::ServerConfig;
+    use std::path::Path;
+
+    fn server() -> Option<Arc<Server>> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Arc::new(
+            Server::start(ServerConfig::new(dir).tenant("kv", None)).unwrap(),
+        ))
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_tamper_detection() {
+        let Some(server) = server() else { return };
+        let kv = SecureKv::new(server, 0, [11; 8], [1, 2, 3]);
+        kv.put(b"alpha", b"the quick brown fox").unwrap();
+        kv.put(b"beta", &[0xEE; 300]).unwrap();
+        assert_eq!(kv.get(b"alpha").unwrap(), b"the quick brown fox");
+        assert_eq!(kv.get(b"beta").unwrap(), vec![0xEE; 300]);
+        assert_eq!(kv.get(b"gamma"), Err(KvError::NotFound));
+        // Flip one ciphertext byte: authentication must fail.
+        assert!(kv.tamper(b"beta", 17));
+        assert_eq!(kv.get(b"beta"), Err(KvError::AuthFailed));
+        // alpha untouched.
+        assert_eq!(kv.get(b"alpha").unwrap(), b"the quick brown fox");
+    }
+
+    #[test]
+    fn distinct_values_distinct_ciphertexts() {
+        let Some(server) = server() else { return };
+        let kv = SecureKv::new(server, 0, [7; 8], [9, 9, 9]);
+        kv.put(b"k1", &[0xAA; 64]).unwrap();
+        kv.put(b"k2", &[0xAA; 64]).unwrap();
+        let (c1, c2) = {
+            let map = kv.map.lock().unwrap();
+            (map[b"k1".as_slice()].cipher.clone(), map[b"k2".as_slice()].cipher.clone())
+        };
+        // Same plaintext, different counters → different ciphertexts.
+        assert_ne!(c1, c2);
+    }
+}

@@ -1,0 +1,227 @@
+//! Typed experiment construction from a parsed config document.
+//!
+//! Schema (TOML subset; see `configs/` for examples):
+//!
+//! ```toml
+//! [experiment]
+//! mode = "arcus"            # arcus | host_no_ts | host_ts_reflex |
+//!                           # host_ts_firecracker | bypassed_panic
+//! duration_ms = 20
+//! warmup_ms = 2
+//! seed = 1
+//! shared_port = false
+//!
+//! [[accels]]
+//! kind = "ipsec"            # or "synthetic" with peak_gbps = 50.0
+//!
+//! [raid]                    # optional: enables storage flows
+//! drives = 4
+//!
+//! [[flows]]
+//! vm = 0
+//! path = "function_call"    # function_call | inline_nic_rx | inline_nic_tx | inline_p2p
+//! size = 1500               # fixed message size (bytes)
+//! load = 0.5                # fraction of line_gbps
+//! line_gbps = 32.0
+//! burst = "paced"           # paced | poisson | onoff
+//! burst_len = 16            # for onoff
+//! slo_gbps = 10.0           # or slo_kiops = 300.0, slo_latency_us = 1.0,
+//!                           # or slo = "best_effort"
+//! accel = 0                 # index into [[accels]]
+//! kind = "accel"            # accel | storage_read | storage_write
+//! priority = 1
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::accel::AccelModel;
+use crate::flow::pattern::{Burstiness, SizeDist};
+use crate::flow::{FlowKind, FlowSpec, Path, Slo, TrafficPattern};
+use crate::storage::SsdConfig;
+use crate::system::{ExperimentSpec, Mode};
+use crate::util::units::{Rate, MICROS, MILLIS};
+
+use super::{Document, Table, TableExt};
+
+/// Build an [`ExperimentSpec`] from a parsed document.
+pub fn spec_from_document(doc: &Document) -> Result<ExperimentSpec> {
+    let mode_name = doc.str_or("experiment", "mode", "arcus");
+    let mode = Mode::by_name(mode_name)
+        .with_context(|| format!("unknown mode `{mode_name}`"))?;
+
+    let mut accels = Vec::new();
+    for t in doc.array_of("accels") {
+        accels.push(accel_from_table(t)?);
+    }
+
+    let mut flows = Vec::new();
+    for (i, t) in doc.array_of("flows").iter().enumerate() {
+        flows.push(flow_from_table(i, t, accels.len())?);
+    }
+    if flows.is_empty() {
+        bail!("config defines no [[flows]]");
+    }
+
+    let mut spec = ExperimentSpec::new(mode, accels, flows)
+        .with_duration(doc.float_or("experiment", "duration_ms", 20.0) as u64 * MILLIS)
+        .with_warmup(doc.float_or("experiment", "warmup_ms", 2.0) as u64 * MILLIS)
+        .with_seed(doc.int_or("experiment", "seed", 1) as u64);
+    if doc.bool_or("experiment", "shared_port", false) {
+        spec = spec.with_shared_port();
+    }
+    if doc.bool_or("experiment", "trace", false) {
+        spec = spec.with_trace();
+    }
+    if doc.tables.contains_key("raid") {
+        let drives = doc.int_or("raid", "drives", 4) as usize;
+        spec = spec.with_raid(drives, SsdConfig::samsung_983dct());
+    }
+    spec.control_period = (doc.float_or("experiment", "control_period_us", 100.0) * MICROS as f64) as u64;
+    spec.queue_cap = doc.int_or("experiment", "queue_cap", 4096) as usize;
+    Ok(spec)
+}
+
+fn accel_from_table(t: &Table) -> Result<AccelModel> {
+    let kind = t.str_or("kind", "synthetic");
+    if kind == "synthetic" {
+        let peak = t.float_or("peak_gbps", 50.0);
+        return Ok(AccelModel::synthetic(Rate::gbps(peak)));
+    }
+    AccelModel::by_name(kind).with_context(|| format!("unknown accelerator `{kind}`"))
+}
+
+fn flow_from_table(i: usize, t: &Table, n_accels: usize) -> Result<FlowSpec> {
+    let path_name = t.str_or("path", "function_call");
+    let path = Path::by_name(path_name)
+        .with_context(|| format!("flow {i}: unknown path `{path_name}`"))?;
+    let size = t.int_or("size", 1500) as u64;
+    let load = t.float_or("load", 0.5);
+    let line = Rate::gbps(t.float_or("line_gbps", 50.0));
+    let burst = match t.str_or("burst", "paced") {
+        "paced" => Burstiness::Paced,
+        "poisson" => Burstiness::Poisson,
+        "onoff" => Burstiness::OnOff { burst_len: t.int_or("burst_len", 16) as u32 },
+        other => bail!("flow {i}: unknown burst `{other}`"),
+    };
+    let pattern = TrafficPattern { sizes: SizeDist::Fixed(size), load, line_rate: line, burst };
+
+    let slo = if let Some(g) = t.get("slo_gbps").and_then(super::Value::as_float) {
+        Slo::gbps(g)
+    } else if let Some(k) = t.get("slo_kiops").and_then(super::Value::as_float) {
+        Slo::iops(k * 1e3)
+    } else if let Some(us) = t.get("slo_latency_us").and_then(super::Value::as_float) {
+        Slo::Latency { max_ps: (us * MICROS as f64) as u64, percentile: 99.0 }
+    } else {
+        Slo::BestEffort
+    };
+
+    let kind = match t.str_or("kind", "accel") {
+        "accel" => FlowKind::Accel,
+        "storage_read" => FlowKind::StorageRead,
+        "storage_write" => FlowKind::StorageWrite,
+        other => bail!("flow {i}: unknown kind `{other}`"),
+    };
+    let accel = t.int_or("accel", 0) as usize;
+    if kind == FlowKind::Accel && accel >= n_accels.max(1) {
+        bail!("flow {i}: accel index {accel} out of range ({n_accels} defined)");
+    }
+
+    Ok(FlowSpec {
+        id: i,
+        vm: t.int_or("vm", i as i64) as usize,
+        path,
+        pattern,
+        slo,
+        accel,
+        kind,
+        priority: t.int_or("priority", 1) as u32,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[experiment]
+mode = "arcus"
+duration_ms = 5
+warmup_ms = 1
+seed = 7
+
+[[accels]]
+kind = "ipsec"
+
+[[accels]]
+kind = "synthetic"
+peak_gbps = 50.0
+
+[[flows]]
+vm = 0
+path = "function_call"
+size = 1500
+load = 0.5
+line_gbps = 32.0
+slo_gbps = 10.0
+accel = 0
+
+[[flows]]
+vm = 1
+path = "inline_nic_rx"
+size = 64
+load = 0.2
+burst = "poisson"
+slo_latency_us = 1.0
+accel = 1
+"#;
+
+    #[test]
+    fn builds_spec_from_document() {
+        let doc = Document::from_str(SAMPLE).unwrap();
+        let spec = spec_from_document(&doc).unwrap();
+        assert_eq!(spec.mode, Mode::Arcus);
+        assert_eq!(spec.duration, 5 * MILLIS);
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.accels.len(), 2);
+        assert_eq!(spec.accels[0].name, "ipsec");
+        assert_eq!(spec.flows.len(), 2);
+        assert_eq!(spec.flows[0].slo, Slo::gbps(10.0));
+        assert!(matches!(spec.flows[1].slo, Slo::Latency { .. }));
+        assert_eq!(spec.flows[1].path, Path::InlineNicRx);
+    }
+
+    #[test]
+    fn storage_flow_requires_kind() {
+        let text = r#"
+[experiment]
+mode = "host_no_ts"
+[raid]
+drives = 4
+[[flows]]
+kind = "storage_read"
+path = "inline_p2p"
+size = 4096
+slo_kiops = 300.0
+"#;
+        let doc = Document::from_str(text).unwrap();
+        let spec = spec_from_document(&doc).unwrap();
+        assert!(spec.raid.is_some());
+        assert_eq!(spec.flows[0].kind, FlowKind::StorageRead);
+        assert!(matches!(spec.flows[0].slo, Slo::Iops { target, .. } if target == 300_000.0));
+    }
+
+    #[test]
+    fn rejects_bad_mode_and_path() {
+        let doc = Document::from_str("[experiment]\nmode = \"bogus\"\n[[flows]]\nvm = 0\n").unwrap();
+        assert!(spec_from_document(&doc).is_err());
+        let doc =
+            Document::from_str("[[flows]]\npath = \"teleport\"\n").unwrap();
+        assert!(spec_from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_accel() {
+        let doc = Document::from_str("[[flows]]\naccel = 3\n").unwrap();
+        assert!(spec_from_document(&doc).is_err());
+    }
+}

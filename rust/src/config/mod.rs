@@ -1,0 +1,218 @@
+//! Configuration system.
+//!
+//! `serde`/`toml` are not available in the offline registry, so this module
+//! implements a TOML-subset parser sufficient for experiment and deployment
+//! configs: `[section]` / `[section.sub]` headers, `key = value` pairs with
+//! string / integer / float / boolean / homogeneous-array values, `#`
+//! comments, and repeated `[[array-of-tables]]` sections (used for flow
+//! lists). Typed experiment structs live in `system::spec`; this layer is the
+//! untyped document plus typed accessors with good error messages.
+
+pub mod experiment;
+pub mod parse;
+
+pub use experiment::spec_from_document;
+pub use parse::{parse_document, ParseError};
+
+use std::collections::BTreeMap;
+
+/// A scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// One `[section]`: ordered key/value map.
+pub type Table = BTreeMap<String, Value>;
+
+/// A parsed document: named tables plus arrays-of-tables.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    /// `[a.b]` sections, keyed by dotted path; root keys land under "".
+    pub tables: BTreeMap<String, Table>,
+    /// `[[a.b]]` repeated sections, in file order.
+    pub table_arrays: BTreeMap<String, Vec<Table>>,
+}
+
+impl Document {
+    pub fn from_str(text: &str) -> Result<Self, ParseError> {
+        parse_document(text)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {}: {e}", path.display()))?;
+        Ok(Self::from_str(&text)?)
+    }
+
+    /// Look up `section` (dotted) then `key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.tables.get(section).and_then(|t| t.get(key))
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default)
+    }
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_int).unwrap_or(default)
+    }
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_float).unwrap_or(default)
+    }
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Required typed accessors with contextual errors.
+    pub fn require_str(&self, section: &str, key: &str) -> anyhow::Result<&str> {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("missing string `{key}` in [{section}]"))
+    }
+    pub fn require_float(&self, section: &str, key: &str) -> anyhow::Result<f64> {
+        self.get(section, key)
+            .and_then(Value::as_float)
+            .ok_or_else(|| anyhow::anyhow!("missing number `{key}` in [{section}]"))
+    }
+    pub fn require_int(&self, section: &str, key: &str) -> anyhow::Result<i64> {
+        self.get(section, key)
+            .and_then(Value::as_int)
+            .ok_or_else(|| anyhow::anyhow!("missing integer `{key}` in [{section}]"))
+    }
+
+    /// All tables of a `[[name]]` array, empty slice if absent.
+    pub fn array_of(&self, name: &str) -> &[Table] {
+        self.table_arrays
+            .get(name)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+}
+
+/// Helper for typed reads out of a [`Table`] (array-of-tables entries).
+pub trait TableExt {
+    fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str;
+    fn int_or(&self, key: &str, default: i64) -> i64;
+    fn float_or(&self, key: &str, default: f64) -> f64;
+    fn bool_or(&self, key: &str, default: bool) -> bool;
+}
+
+impl TableExt for Table {
+    fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+    fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+    fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+    fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+title = "fig3"
+
+[pcie]
+gen = 3
+lanes = 8
+efficiency = 0.85
+duplex = true
+
+[accelerator]
+kind = "ipsec"
+peak_gbps = 32.0
+
+[[flows]]
+vm = 1
+size = 256
+load = 0.1
+
+[[flows]]
+vm = 2
+size = 64
+load = 0.5
+sizes = [64, 256, 1500]
+"#;
+
+    #[test]
+    fn parses_sections_and_root() {
+        let doc = Document::from_str(SAMPLE).unwrap();
+        assert_eq!(doc.str_or("", "title", "?"), "fig3");
+        assert_eq!(doc.int_or("pcie", "gen", 0), 3);
+        assert_eq!(doc.int_or("pcie", "lanes", 0), 8);
+        assert!((doc.float_or("pcie", "efficiency", 0.0) - 0.85).abs() < 1e-12);
+        assert!(doc.bool_or("pcie", "duplex", false));
+        assert_eq!(doc.str_or("accelerator", "kind", "?"), "ipsec");
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = Document::from_str("[a]\nx = 3\n").unwrap();
+        assert_eq!(doc.float_or("a", "x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn array_of_tables_in_order() {
+        let doc = Document::from_str(SAMPLE).unwrap();
+        let flows = doc.array_of("flows");
+        assert_eq!(flows.len(), 2);
+        assert_eq!(flows[0].int_or("vm", 0), 1);
+        assert_eq!(flows[1].int_or("vm", 0), 2);
+        let sizes = flows[1].get("sizes").unwrap().as_array().unwrap();
+        assert_eq!(sizes.len(), 3);
+        assert_eq!(sizes[2].as_int(), Some(1500));
+    }
+
+    #[test]
+    fn missing_required_key_errors() {
+        let doc = Document::from_str(SAMPLE).unwrap();
+        assert!(doc.require_str("pcie", "nope").is_err());
+        assert!(doc.require_float("accelerator", "peak_gbps").is_ok());
+    }
+}

@@ -1,0 +1,304 @@
+//! TOML-subset tokenizer/parser for [`super::Document`].
+//!
+//! Supported grammar (a strict subset of TOML 1.0):
+//!
+//! ```text
+//! document   := line*
+//! line       := ws (comment | header | arrayheader | pair)? ws
+//! header     := '[' dotted ']'
+//! arrayheader:= '[[' dotted ']]'
+//! pair       := key ws '=' ws value
+//! value      := string | float | int | bool | array
+//! array      := '[' (value (',' value)* ','?)? ']'
+//! ```
+//!
+//! Strings are double-quoted with `\"`, `\\`, `\n`, `\t` escapes. Unsupported
+//! TOML features (multi-line strings, dates, inline tables) produce errors
+//! rather than silent misparses.
+
+use super::{Document, Table, Value};
+
+/// Parse error with line number context.
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError {
+        line,
+        msg: msg.into(),
+    })
+}
+
+/// Parse a complete document.
+pub fn parse_document(text: &str) -> Result<Document, ParseError> {
+    let mut doc = Document::default();
+    // Current insertion target: either a named table or the latest entry of
+    // an array-of-tables.
+    enum Target {
+        Table(String),
+        ArrayEntry(String),
+    }
+    let mut target = Target::Table(String::new());
+    doc.tables.insert(String::new(), Table::new());
+
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let name = name.trim();
+            if name.is_empty() {
+                return err(lineno, "empty [[table]] name");
+            }
+            validate_key_path(name, lineno)?;
+            doc.table_arrays
+                .entry(name.to_string())
+                .or_default()
+                .push(Table::new());
+            target = Target::ArrayEntry(name.to_string());
+        } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let name = name.trim();
+            if name.is_empty() {
+                return err(lineno, "empty [table] name");
+            }
+            validate_key_path(name, lineno)?;
+            doc.tables.entry(name.to_string()).or_default();
+            target = Target::Table(name.to_string());
+        } else if let Some(eq) = find_top_level_eq(line) {
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return err(lineno, "empty key");
+            }
+            validate_key_path(key, lineno)?;
+            let (value, rest) = parse_value(line[eq + 1..].trim(), lineno)?;
+            if !rest.trim().is_empty() {
+                return err(lineno, format!("trailing characters: `{rest}`"));
+            }
+            let table = match &target {
+                Target::Table(name) => doc.tables.get_mut(name).unwrap(),
+                Target::ArrayEntry(name) => {
+                    doc.table_arrays.get_mut(name).unwrap().last_mut().unwrap()
+                }
+            };
+            if table.insert(key.to_string(), value).is_some() {
+                return err(lineno, format!("duplicate key `{key}`"));
+            }
+        } else {
+            return err(lineno, format!("unrecognized line: `{line}`"));
+        }
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment unless it is inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str => {
+                escaped = !escaped;
+                continue;
+            }
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        escaped = false;
+    }
+    line
+}
+
+/// Find the first `=` outside of quotes.
+fn find_top_level_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str => {
+                escaped = !escaped;
+                continue;
+            }
+            '"' if !escaped => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+        escaped = false;
+    }
+    None
+}
+
+fn validate_key_path(key: &str, lineno: usize) -> Result<(), ParseError> {
+    for part in key.split('.') {
+        if part.is_empty()
+            || !part
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+        {
+            return err(lineno, format!("invalid key `{key}`"));
+        }
+    }
+    Ok(())
+}
+
+/// Parse a value from the front of `s`; return (value, unconsumed rest).
+fn parse_value<'a>(s: &'a str, lineno: usize) -> Result<(Value, &'a str), ParseError> {
+    let s = s.trim_start();
+    if s.is_empty() {
+        return err(lineno, "missing value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        return parse_string(rest, lineno);
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        return parse_array(rest, lineno);
+    }
+    // Scalar token: up to a delimiter.
+    let end = s
+        .find(|c: char| c == ',' || c == ']' || c.is_whitespace())
+        .unwrap_or(s.len());
+    let (tok, rest) = s.split_at(end);
+    let value = match tok {
+        "true" => Value::Bool(true),
+        "false" => Value::Bool(false),
+        _ => {
+            // TOML allows underscores in numbers.
+            let clean: String = tok.chars().filter(|&c| c != '_').collect();
+            if let Ok(i) = clean.parse::<i64>() {
+                Value::Int(i)
+            } else if let Ok(f) = clean.parse::<f64>() {
+                Value::Float(f)
+            } else {
+                return err(lineno, format!("cannot parse value `{tok}`"));
+            }
+        }
+    };
+    Ok((value, rest))
+}
+
+fn parse_string<'a>(s: &'a str, lineno: usize) -> Result<(Value, &'a str), ParseError> {
+    let mut out = String::new();
+    let mut chars = s.char_indices();
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '"' => return Ok((Value::Str(out), &s[i + 1..])),
+            '\\' => match chars.next() {
+                Some((_, 'n')) => out.push('\n'),
+                Some((_, 't')) => out.push('\t'),
+                Some((_, '"')) => out.push('"'),
+                Some((_, '\\')) => out.push('\\'),
+                other => {
+                    return err(lineno, format!("bad escape: {other:?}"));
+                }
+            },
+            _ => out.push(c),
+        }
+    }
+    err(lineno, "unterminated string")
+}
+
+fn parse_array<'a>(mut s: &'a str, lineno: usize) -> Result<(Value, &'a str), ParseError> {
+    let mut items = Vec::new();
+    loop {
+        s = s.trim_start();
+        if let Some(rest) = s.strip_prefix(']') {
+            return Ok((Value::Array(items), rest));
+        }
+        if s.is_empty() {
+            return err(lineno, "unterminated array");
+        }
+        let (v, rest) = parse_value(s, lineno)?;
+        items.push(v);
+        s = rest.trim_start();
+        if let Some(rest) = s.strip_prefix(',') {
+            s = rest;
+        } else if !s.starts_with(']') {
+            return err(lineno, "expected `,` or `]` in array");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_types() {
+        let doc = parse_document("a = 1\nb = 2.5\nc = true\nd = \"hi\"\n").unwrap();
+        let root = &doc.tables[""];
+        assert_eq!(root["a"], Value::Int(1));
+        assert_eq!(root["b"], Value::Float(2.5));
+        assert_eq!(root["c"], Value::Bool(true));
+        assert_eq!(root["d"], Value::Str("hi".into()));
+    }
+
+    #[test]
+    fn negative_and_underscored_numbers() {
+        let doc = parse_document("a = -3\nb = 1_000_000\nc = -2.5e3\n").unwrap();
+        let root = &doc.tables[""];
+        assert_eq!(root["a"], Value::Int(-3));
+        assert_eq!(root["b"], Value::Int(1_000_000));
+        assert_eq!(root["c"], Value::Float(-2500.0));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = parse_document(r#"s = "a\"b\\c\nd""#).unwrap();
+        assert_eq!(doc.tables[""]["s"], Value::Str("a\"b\\c\nd".into()));
+    }
+
+    #[test]
+    fn comments_stripped_not_in_strings() {
+        let doc = parse_document("a = \"x # y\" # real comment\nb = 2\n").unwrap();
+        assert_eq!(doc.tables[""]["a"], Value::Str("x # y".into()));
+        assert_eq!(doc.tables[""]["b"], Value::Int(2));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = parse_document("a = [[1, 2], [3]]\n").unwrap();
+        match &doc.tables[""]["a"] {
+            Value::Array(outer) => {
+                assert_eq!(outer.len(), 2);
+                assert_eq!(outer[0], Value::Array(vec![Value::Int(1), Value::Int(2)]));
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_comma_allowed() {
+        let doc = parse_document("a = [1, 2,]\n").unwrap();
+        assert_eq!(
+            doc.tables[""]["a"],
+            Value::Array(vec![Value::Int(1), Value::Int(2)])
+        );
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse_document("good = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse_document("x = \"unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse_document("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn dotted_sections() {
+        let doc = parse_document("[a.b-c]\nx = 1\n").unwrap();
+        assert_eq!(doc.tables["a.b-c"]["x"], Value::Int(1));
+        assert!(parse_document("[a..b]\n").is_err());
+        assert!(parse_document("[a b]\n").is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! The Arcus control plane (§4.3): SLO management runtime.
+//!
+//! This is the paper's software half. It owns three data structures —
+//!
+//! - [`profile::ProfileTable`] — offline-learned `Capacity(t, X, N)` over
+//!   traffic-pattern and path combinations, each entry tagged SLO-Friendly
+//!   or SLO-Violating;
+//! - an `AccTable` ([`profile::AccTable`]) mapping accelerators to their
+//!   available paths;
+//! - [`status::PerFlowStatusTable`] — the dynamic per-flow registry
+//!   (VM/path/accelerator ids, SLO, configured mechanism parameters,
+//!   measured SLO status);
+//!
+//! — and runs Algorithm 1 periodically ([`planner::run_tick`]): check each
+//! flow's SLO from hardware counters, re-adjust (path selection + reshape
+//! decision) on violation, and admit/reject new registrations via capacity
+//! planning. Decisions come back as [`planner::Action`]s; the enclosing
+//! system (simulator or serving runtime) applies them to the shapers with
+//! the measured ~10 µs reconfiguration latency.
+
+pub mod planner;
+pub mod profile;
+pub mod status;
+
+pub use planner::{run_tick, Action, PlannerConfig};
+pub use profile::{AccTable, ProfileKey, ProfileTable};
+pub use status::{FlowStatus, MeasuredWindow, PerFlowStatusTable, SloState};

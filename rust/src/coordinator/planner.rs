@@ -1,0 +1,523 @@
+//! Algorithm 1 — the Arcus runtime: capacity planning, admission control,
+//! path selection, and reshape decisions.
+//!
+//! The planner is pure: it reads the [`ProfileTable`] and
+//! [`PerFlowStatusTable`] and emits [`Action`]s; the enclosing system
+//! applies them to the hardware (token-bucket registers, path routing) with
+//! the measured reconfiguration latency. Keeping it side-effect-free makes
+//! the control plane unit-testable and lets both the simulator and the
+//! wall-clock serving runtime share it.
+
+use super::profile::{AccTable, ProfileTable};
+use super::status::{PerFlowStatusTable, SloState};
+use crate::flow::{FlowId, Path, Slo};
+use crate::shaping::{ShapeMode, TokenBucketParams};
+
+/// Planner tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct PlannerConfig {
+    /// Violating windows required before reshaping (hysteresis).
+    pub reshape_after: u32,
+    /// Multiplicative step when compensating an under-attaining flow.
+    pub boost_step: f64,
+    /// Hard cap on over-provisioning relative to the SLO (keeps one flow's
+    /// compensation from stealing the accelerator).
+    pub max_boost: f64,
+    /// Headroom the admission controller reserves (fraction of capacity it
+    /// refuses to commit).
+    pub admission_headroom: f64,
+    /// Shaping-rate headroom over the SLO: buckets are programmed slightly
+    /// above the target so sampling effects still *measure* at the SLO.
+    pub shaping_headroom: f64,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            reshape_after: 2,
+            boost_step: 1.05,
+            max_boost: 1.30,
+            admission_headroom: 0.05,
+            shaping_headroom: 1.01,
+        }
+    }
+}
+
+/// Decisions emitted by one planner tick.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Reprogram a flow's token bucket to a new rate (units/sec, with the
+    /// derived register values).
+    Reshape {
+        flow: FlowId,
+        rate: f64,
+        params: TokenBucketParams,
+    },
+    /// Move a flow to a less-contended path (Scenario 3 with PathSelection).
+    SwitchPath { flow: FlowId, to: Path },
+}
+
+/// Admission-control verdict for a new registration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Admission {
+    /// Accepted, with the initial shaping parameters to program.
+    Accept {
+        rate: f64,
+        params: TokenBucketParams,
+    },
+    /// Rejected: committed SLOs plus this one exceed profiled capacity.
+    Reject { reason: String },
+}
+
+/// CapacityPlanning(CHECK) + AdmissionControl (Algorithm 1 lines 7–10,
+/// 14–16; Scenarios 1 & 2): admit iff the accelerator's profiled capacity
+/// in this flow's context covers all committed SLO rates plus the new one.
+/// Sum of committed rates on an accelerator, normalized to bytes/sec
+/// (IOPS commitments convert via each flow's message-size hint).
+pub fn committed_bytes_per_sec(status: &PerFlowStatusTable, accel: usize) -> f64 {
+    status
+        .flows_on_accel(accel)
+        .iter()
+        .filter_map(|r| {
+            r.slo.required_rate().map(|(rate, mode)| match mode {
+                ShapeMode::Gbps => rate,
+                ShapeMode::Iops => rate * r.size_hint as f64,
+            })
+        })
+        .sum()
+}
+
+pub fn admission_control(
+    cfg: &PlannerConfig,
+    profile: &ProfileTable,
+    status: &PerFlowStatusTable,
+    accel: usize,
+    accel_name: &str,
+    path: Path,
+    size_hint: u64,
+    slo: &Slo,
+) -> Admission {
+    let Some((rate, mode)) = slo.required_rate() else {
+        // Best-effort / latency flows take no committed bandwidth; they are
+        // always admitted and shaped opportunistically.
+        return Admission::Accept {
+            rate: 0.0,
+            params: TokenBucketParams::for_rate(1.0, ShapeMode::Iops),
+        };
+    };
+    let n_after = status.flows_on_accel(accel).len() + 1;
+    let entry = match profile.capacity(accel_name, path, size_hint, n_after) {
+        Some(e) => e,
+        None => {
+            return Admission::Reject {
+                reason: format!("no profile for {accel_name} on {}", path.name()),
+            }
+        }
+    };
+    if !entry.slo_friendly {
+        return Admission::Reject {
+            reason: format!(
+                "context tagged SLO-Violating ({accel_name}, {}B, {} flows)",
+                size_hint, n_after
+            ),
+        };
+    }
+    // The binding capacity is the TIGHTEST context among every committed
+    // flow's (size, path) and the new one — a later large-message flow must
+    // not overcommit an engine already constrained by a small-message
+    // tenant (Scenario 1's availability check over the whole mixture).
+    let mut capacity_bytes = entry.capacity.as_bits_per_sec() / 8.0;
+    for r in status.flows_on_accel(accel) {
+        if r.slo.required_rate().is_none() {
+            continue;
+        }
+        if let Some(e) = profile.capacity(accel_name, r.path, r.size_hint, n_after) {
+            capacity_bytes = capacity_bytes.min(e.capacity.as_bits_per_sec() / 8.0);
+        }
+    }
+    let rate_bytes = match mode {
+        ShapeMode::Gbps => rate,
+        ShapeMode::Iops => rate * size_hint as f64,
+    };
+    let committed = committed_bytes_per_sec(status, accel);
+    let budget = capacity_bytes * (1.0 - cfg.admission_headroom);
+    if committed + rate_bytes > budget {
+        return Admission::Reject {
+            reason: format!(
+                "capacity {budget:.3e} B/s, committed {committed:.3e}, requested {rate_bytes:.3e}"
+            ),
+        };
+    }
+    Admission::Accept {
+        rate,
+        params: TokenBucketParams::for_rate(rate, mode),
+    }
+}
+
+/// ReshapeDecision (Algorithm 1 line 20): compute a corrected shaping rate
+/// for a violating flow. The controller is multiplicative-increase toward
+/// the SLO, bounded by `max_boost` and by the flow's fair share of profiled
+/// capacity — the decoupling insight: we adjust the *fetch* pattern, never
+/// asking the VM to change its submission pattern.
+pub fn reshape_decision(
+    cfg: &PlannerConfig,
+    profile: &ProfileTable,
+    status: &PerFlowStatusTable,
+    flow: FlowId,
+) -> Option<Action> {
+    let row = status.get(flow)?;
+    let (slo_rate, mode) = row.slo.required_rate()?;
+    let current = row.shaped_rate.unwrap_or(slo_rate);
+    let measured = match mode {
+        ShapeMode::Gbps => row.measured.throughput().as_bits_per_sec() / 8.0,
+        ShapeMode::Iops => row.measured.iops(),
+    };
+    if measured <= 0.0 {
+        return None;
+    }
+    // Under-attainment ratio drives the correction.
+    let deficit = slo_rate / measured;
+    let mut new_rate = (current * deficit.min(cfg.boost_step.powi(2)))
+        .max(current * cfg.boost_step);
+    // Cap: never boost past max_boost × SLO, never past the flow's share of
+    // the profiled context capacity.
+    new_rate = new_rate.min(slo_rate * cfg.max_boost);
+    if let Some(entry) = profile.capacity(
+        &row.accel_name,
+        row.path,
+        row.size_hint,
+        status.flows_on_accel(row.accel).len(),
+    ) {
+        let cap_units = match mode {
+            ShapeMode::Gbps => entry.capacity.as_bits_per_sec() / 8.0,
+            ShapeMode::Iops => {
+                entry.capacity.as_bits_per_sec() / 8.0 / row.size_hint as f64
+            }
+        };
+        new_rate = new_rate.min(cap_units);
+    }
+    if (new_rate - current).abs() / current < 0.01 {
+        return None; // nothing meaningful to change
+    }
+    Some(Action::Reshape {
+        flow,
+        rate: new_rate,
+        params: TokenBucketParams::for_rate(new_rate, mode),
+    })
+}
+
+/// PathSelection (Algorithm 1 line 18): if the flow's current path context
+/// is capacity-bound below its SLO and the accelerator is reachable via
+/// another path with more profiled capacity, move it.
+pub fn path_selection(
+    profile: &ProfileTable,
+    acc_table: &AccTable,
+    status: &PerFlowStatusTable,
+    flow: FlowId,
+) -> Option<Action> {
+    let row = status.get(flow)?;
+    let (slo_rate, mode) = row.slo.required_rate()?;
+    let n = status.flows_on_accel(row.accel).len();
+    let cap_of = |path: Path| -> f64 {
+        profile
+            .capacity(&row.accel_name, path, row.size_hint, n)
+            .map(|e| match mode {
+                ShapeMode::Gbps => e.capacity.as_bits_per_sec() / 8.0,
+                ShapeMode::Iops => {
+                    e.capacity.as_bits_per_sec() / 8.0 / row.size_hint as f64
+                }
+            })
+            .unwrap_or(0.0)
+    };
+    let current_cap = cap_of(row.path);
+    if current_cap >= slo_rate {
+        return None; // current path can carry the SLO; reshape instead
+    }
+    let best = acc_table
+        .paths(&row.accel_name)
+        .iter()
+        .filter(|&&p| p != row.path)
+        .map(|&p| (p, cap_of(p)))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+    if best.1 > current_cap * 1.2 && best.1 >= slo_rate {
+        Some(Action::SwitchPath {
+            flow,
+            to: best.0,
+        })
+    } else {
+        None
+    }
+}
+
+/// One periodic tick of Algorithm 1 (lines 2–6): walk every flow, and for
+/// each violating one emit a path switch (preferred when the path itself is
+/// the bottleneck) or a reshape. `status` must already hold fresh measured
+/// windows (the system records hardware counters before calling).
+pub fn run_tick(
+    cfg: &PlannerConfig,
+    profile: &ProfileTable,
+    acc_table: &AccTable,
+    status: &PerFlowStatusTable,
+) -> Vec<Action> {
+    let mut actions = Vec::new();
+    for row in status.iter() {
+        // Meeting flows that were boosted above their SLO decay back toward
+        // it — compensation is temporary, precision is the steady state.
+        if row.state == SloState::Meeting {
+            if let (Some(shaped), Some((slo_rate, mode))) =
+                (row.shaped_rate, row.slo.required_rate())
+            {
+                let floor = slo_rate * cfg.shaping_headroom;
+                if shaped > floor * 1.02 {
+                    let rate = (shaped / cfg.boost_step).max(floor);
+                    actions.push(Action::Reshape {
+                        flow: row.flow,
+                        rate,
+                        params: TokenBucketParams::for_rate(rate, mode),
+                    });
+                }
+            }
+            continue;
+        }
+        if row.state != SloState::Violating || row.violations < cfg.reshape_after {
+            continue;
+        }
+        if let Some(switch) = path_selection(profile, acc_table, status, row.flow) {
+            actions.push(switch);
+            continue;
+        }
+        if let Some(reshape) = reshape_decision(cfg, profile, status, row.flow) {
+            actions.push(reshape);
+        }
+    }
+    actions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AccelModel;
+    use crate::coordinator::status::{FlowStatus, MeasuredWindow};
+    use crate::pcie::fabric::FabricConfig;
+    use crate::util::units::{Rate, MILLIS};
+
+    fn setup() -> (ProfileTable, AccTable) {
+        let profile = ProfileTable::learn(
+            &[AccelModel::ipsec_32g(), AccelModel::sha3_512()],
+            &FabricConfig::gen3_x8(),
+        );
+        let mut acc = AccTable::default();
+        acc.register(
+            "ipsec",
+            vec![Path::FunctionCall, Path::InlineNicRx, Path::InlineP2p],
+        );
+        (profile, acc)
+    }
+
+    fn flow(id: FlowId, slo: Slo, size: u64) -> FlowStatus {
+        FlowStatus::new(id, id, Path::FunctionCall, 0, "ipsec", slo, size)
+    }
+
+    #[test]
+    fn admission_accepts_within_capacity() {
+        let (profile, _) = setup();
+        let status = PerFlowStatusTable::default();
+        let cfg = PlannerConfig::default();
+        // 10 + 20 Gbps on a 32 Gbps engine at 1500B (~26 Gbps effective):
+        // first flow of 10 Gbps fits.
+        match admission_control(
+            &cfg,
+            &profile,
+            &status,
+            0,
+            "ipsec",
+            Path::FunctionCall,
+            1500,
+            &Slo::gbps(10.0),
+        ) {
+            Admission::Accept { rate, params } => {
+                assert!((rate - 1.25e9).abs() < 1.0);
+                assert!(params.nominal_rate() > 0.0);
+            }
+            Admission::Reject { reason } => panic!("rejected: {reason}"),
+        }
+    }
+
+    #[test]
+    fn admission_rejects_over_commitment() {
+        let (profile, _) = setup();
+        let mut status = PerFlowStatusTable::default();
+        let cfg = PlannerConfig::default();
+        status.register(flow(0, Slo::gbps(15.0), 1500));
+        status.register(flow(1, Slo::gbps(10.0), 1500));
+        // Engine sustains ~26 Gbps at 1500 B; 15+10 committed, +8 must fail.
+        let verdict = admission_control(
+            &cfg,
+            &profile,
+            &status,
+            0,
+            "ipsec",
+            Path::FunctionCall,
+            1500,
+            &Slo::gbps(8.0),
+        );
+        assert!(matches!(verdict, Admission::Reject { .. }), "{verdict:?}");
+    }
+
+    #[test]
+    fn admission_rejects_slo_violating_context() {
+        let (profile, _) = setup();
+        let status = PerFlowStatusTable::default();
+        let cfg = PlannerConfig::default();
+        // 64 B ipsec context is tagged SLO-Violating by the profiler.
+        let verdict = admission_control(
+            &cfg,
+            &profile,
+            &status,
+            0,
+            "ipsec",
+            Path::FunctionCall,
+            64,
+            &Slo::gbps(1.0),
+        );
+        assert!(matches!(verdict, Admission::Reject { .. }));
+    }
+
+    #[test]
+    fn best_effort_always_admitted() {
+        let (profile, _) = setup();
+        let mut status = PerFlowStatusTable::default();
+        let cfg = PlannerConfig::default();
+        for i in 0..20 {
+            status.register(flow(i, Slo::gbps(1.5), 1500));
+        }
+        let verdict = admission_control(
+            &cfg,
+            &profile,
+            &status,
+            0,
+            "ipsec",
+            Path::FunctionCall,
+            1500,
+            &Slo::BestEffort,
+        );
+        assert!(matches!(verdict, Admission::Accept { .. }));
+    }
+
+    #[test]
+    fn reshape_boosts_underattaining_flow() {
+        let (profile, _) = setup();
+        let mut status = PerFlowStatusTable::default();
+        let cfg = PlannerConfig::default();
+        let mut f = flow(0, Slo::gbps(10.0), 1500);
+        f.shaped_rate = Some(1.25e9);
+        // Measured only 8 Gbps of a 10 Gbps SLO.
+        f.measured = MeasuredWindow {
+            span: MILLIS,
+            bytes: 1_000_000,
+            ops: 667,
+            p99_latency: None,
+        };
+        f.state = SloState::Violating;
+        f.violations = 3;
+        status.register(f);
+        match reshape_decision(&cfg, &profile, &status, 0).unwrap() {
+            Action::Reshape { rate, .. } => {
+                assert!(rate > 1.25e9, "boosted rate {rate:.3e}");
+                assert!(rate <= 1.25e9 * cfg.max_boost * 1.001);
+            }
+            other => panic!("expected reshape, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reshape_noop_when_meeting() {
+        let (profile, acc) = setup();
+        let mut status = PerFlowStatusTable::default();
+        let cfg = PlannerConfig::default();
+        let mut f = flow(0, Slo::gbps(10.0), 1500);
+        f.shaped_rate = Some(1.25e9);
+        f.measured = MeasuredWindow {
+            span: MILLIS,
+            bytes: 1_300_000, // 10.4 Gbps
+            ops: 867,
+            p99_latency: None,
+        };
+        f.state = f.check();
+        status.register(f);
+        assert!(run_tick(&cfg, &profile, &acc, &status).is_empty());
+    }
+
+    #[test]
+    fn path_selection_moves_capacity_bound_flow() {
+        let (mut profile, acc) = setup();
+        // Force FunctionCall context capacity below SLO, keep InlineNicRx
+        // plentiful (as if Down direction were congested).
+        profile.observe(
+            crate::coordinator::profile::ProfileKey {
+                accel: "ipsec".into(),
+                path: Path::FunctionCall,
+                size: 1500,
+                n_flows: 1,
+            },
+            Rate::gbps(5.0),
+            true,
+        );
+        let mut status = PerFlowStatusTable::default();
+        let mut f = flow(0, Slo::gbps(10.0), 1500);
+        f.state = SloState::Violating;
+        f.violations = 5;
+        status.register(f);
+        let actions = run_tick(&PlannerConfig::default(), &profile, &acc, &status);
+        assert!(
+            actions
+                .iter()
+                .any(|a| matches!(a, Action::SwitchPath { to, .. } if *to != Path::FunctionCall)),
+            "actions={actions:?}"
+        );
+    }
+
+    #[test]
+    fn boosted_meeting_flow_decays_toward_slo() {
+        let (profile, acc) = setup();
+        let cfg = PlannerConfig::default();
+        let mut status = PerFlowStatusTable::default();
+        let mut f = flow(0, Slo::gbps(10.0), 1500);
+        f.shaped_rate = Some(1.25e9 * 1.3); // boosted to 13 G
+        f.measured = MeasuredWindow {
+            span: MILLIS,
+            bytes: 1_400_000, // 11.2 Gbps: meeting
+            ops: 933,
+            p99_latency: None,
+        };
+        f.state = f.check();
+        status.register(f);
+        let actions = run_tick(&cfg, &profile, &acc, &status);
+        match &actions[..] {
+            [Action::Reshape { rate, .. }] => {
+                assert!(*rate < 1.25e9 * 1.3, "decayed: {rate:.3e}");
+                assert!(*rate >= 1.25e9, "never below the SLO rate");
+            }
+            other => panic!("expected one decay reshape, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tick_respects_hysteresis() {
+        let (profile, acc) = setup();
+        let cfg = PlannerConfig::default();
+        let mut status = PerFlowStatusTable::default();
+        let mut f = flow(0, Slo::gbps(30.0), 1500);
+        f.shaped_rate = Some(30e9 / 8.0);
+        f.measured = MeasuredWindow {
+            span: MILLIS,
+            bytes: 100_000,
+            ops: 67,
+            p99_latency: None,
+        };
+        f.state = SloState::Violating;
+        f.violations = 1; // below reshape_after=2
+        status.register(f);
+        assert!(run_tick(&cfg, &profile, &acc, &status).is_empty());
+    }
+}

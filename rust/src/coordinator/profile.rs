@@ -1,0 +1,367 @@
+//! Offline profiling: the `Capacity(t, X, N)` table and the AccTable.
+//!
+//! §3.3: "perform offline profiling to learn Capacity(t, X, N), the
+//! available capacity of an accelerator X at a given time shared by N VMs,
+//! w.r.t. traffic patterns T, path mode combinations P, and system settings
+//! S (e.g. PCIe bandwidth). We store this as a table for the control plane
+//! to make online decisions."
+//!
+//! Entries are keyed on (accelerator, path, message-size bucket, flow-count
+//! bucket) and record the sustainable ingress capacity of that context: the
+//! minimum of the accelerator's curve-derived throughput at that size and
+//! the communication budget of the path (per-direction PCIe bandwidth net of
+//! TLP overheads and the egress-ratio R feedback — a compressor's egress is
+//! cheap, a decompressor's is expensive, SHA's is free). Each entry carries
+//! the 1-bit SLO-Friendly tag of §4.3.
+//!
+//! Learning is analytic over the device models here (`learn`), and can be
+//! refined by measurement (`observe`) — the control plane treats both the
+//! same way, exactly like the paper's table of "profiled results".
+
+use crate::accel::{AccelModel, Egress};
+use crate::flow::Path;
+use crate::pcie::fabric::FabricConfig;
+use crate::pcie::link::Dir;
+use crate::util::units::Rate;
+use std::collections::HashMap;
+
+/// Size buckets used by the table (powers of four-ish around the paper's
+/// sweep points).
+pub const SIZE_BUCKETS: [u64; 9] = [64, 128, 256, 1024, 1500, 4096, 16384, 65536, 524288];
+
+/// Bucket a message size to the nearest profiled size.
+pub fn size_bucket(bytes: u64) -> u64 {
+    *SIZE_BUCKETS
+        .iter()
+        .min_by_key(|&&b| (b as i64 - bytes as i64).unsigned_abs())
+        .unwrap()
+}
+
+/// Flow-count buckets (1, 2, 4, 8, 16 — Fig 7b's sweep).
+pub const FLOW_BUCKETS: [usize; 5] = [1, 2, 4, 8, 16];
+
+pub fn flow_bucket(n: usize) -> usize {
+    *FLOW_BUCKETS
+        .iter()
+        .min_by_key(|&&b| (b as i64 - n as i64).unsigned_abs())
+        .unwrap()
+}
+
+/// Table key: one profiled context.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ProfileKey {
+    pub accel: String,
+    pub path: Path,
+    pub size: u64,
+    pub n_flows: usize,
+}
+
+/// One profiled context's learned capacity.
+#[derive(Debug, Clone, Copy)]
+pub struct ProfileEntry {
+    /// Sustainable aggregate ingress rate in this context.
+    pub capacity: Rate,
+    /// Which resource binds: useful for path selection.
+    pub bound_by: Bound,
+    /// §4.3's 1-bit tag: can SLOs be met in this context at all, or does
+    /// the pattern mixture inherently violate (e.g. tiny-message mixtures
+    /// that crater the engine below any reasonable SLO sum)?
+    pub slo_friendly: bool,
+}
+
+/// The binding resource for a context.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    Accelerator,
+    PcieUp,
+    PcieDown,
+}
+
+/// AccTable (§4.3): which paths can reach each accelerator.
+#[derive(Debug, Clone, Default)]
+pub struct AccTable {
+    entries: HashMap<String, Vec<Path>>,
+}
+
+impl AccTable {
+    pub fn register(&mut self, accel: &str, paths: Vec<Path>) {
+        self.entries.insert(accel.to_string(), paths);
+    }
+    pub fn paths(&self, accel: &str) -> &[Path] {
+        self.entries.get(accel).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+/// The Capacity(t, X, N) table.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileTable {
+    entries: HashMap<ProfileKey, ProfileEntry>,
+}
+
+/// Fraction of the engine's MTU-size effective rate below which a context
+/// is tagged SLO-Violating: pattern mixtures that hold the engine under
+/// this can't honor meaningful SLO sums and should be strictly avoided by
+/// the control plane (§4.3's 1-bit tag).
+const FRIENDLY_EFFICIENCY: f64 = 0.30;
+
+impl ProfileTable {
+    /// Analytically learn the table for a set of accelerator models on a
+    /// PCIe fabric. Covers every (accel, path, size-bucket, flow-bucket).
+    pub fn learn(models: &[AccelModel], fabric: &FabricConfig) -> Self {
+        let mut t = ProfileTable::default();
+        for m in models {
+            for &path in &Path::ALL {
+                for &size in &SIZE_BUCKETS {
+                    for &n in &FLOW_BUCKETS {
+                        let key = ProfileKey {
+                            accel: m.name.to_string(),
+                            path,
+                            size,
+                            n_flows: n,
+                        };
+                        t.entries.insert(key, Self::derive(m, fabric, path, size, n));
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Capacity of one context = min(engine rate at size, path comm budget).
+    fn derive(
+        m: &AccelModel,
+        fabric: &FabricConfig,
+        path: Path,
+        size: u64,
+        n_flows: usize,
+    ) -> ProfileEntry {
+        // Engine-side: sustained ingress rate at this message size,
+        // including per-message setup (amortized). Multi-flow sharing of a
+        // single engine costs a small context-switch-like overhead per flow
+        // beyond 1 (measured in Fig 7b as slightly sub-linear scaling).
+        let per_msg = m.base_service_time(size) as f64;
+        let flow_penalty = 1.0 + 0.004 * (n_flows.saturating_sub(1)) as f64;
+        let engine = Rate(size as f64 * 8.0 / (per_msg * flow_penalty) * 1e12);
+
+        // Communication side: per-direction payload bandwidth at this
+        // message size — wire efficiency AND the root-complex TLP-rate
+        // ceiling (64 B messages collapse here, not on the wire).
+        let net = fabric.link.effective_payload_rate(size).as_bits_per_sec();
+        let r = match m.egress {
+            Egress::Ratio(r) => r,
+            Egress::Fixed(out) => out as f64 / size as f64,
+        };
+        // Direction load per unit of ingress, by path (see DESIGN.md):
+        //   FunctionCall: ingress rides Down (read completions), egress Up.
+        //   InlineNicRx:  ingress from the wire, egress DMA-writes Up.
+        //   InlineNicTx:  ingress DMA-reads Down, egress to the wire.
+        //   InlineP2p:    ingress Down (from host buffers), egress Up (NVMe).
+        let (down_per_in, up_per_in) = match path {
+            Path::FunctionCall => (1.0, r),
+            Path::InlineNicRx => (0.0, r),
+            Path::InlineNicTx => (1.0, 0.0),
+            Path::InlineP2p => (1.0, r),
+        };
+        let down_cap = if down_per_in > 0.0 {
+            net / down_per_in
+        } else {
+            f64::INFINITY
+        };
+        let up_cap = if up_per_in > 0.0 {
+            net / up_per_in
+        } else {
+            f64::INFINITY
+        };
+
+        let (capacity, bound_by) = {
+            let mut best = (engine.0, Bound::Accelerator);
+            if down_cap < best.0 {
+                best = (down_cap, Bound::PcieDown);
+            }
+            if up_cap < best.0 {
+                best = (up_cap, Bound::PcieUp);
+            }
+            best
+        };
+        // Friendliness is relative to what the engine sustains at MTU —
+        // the paper's "full load, MTU-sized packets" reference point.
+        let mtu_rate = m.effective_rate(crate::util::units::MTU).0.max(1.0);
+        ProfileEntry {
+            capacity: Rate(capacity),
+            bound_by,
+            slo_friendly: engine.0 / mtu_rate >= FRIENDLY_EFFICIENCY,
+        }
+    }
+
+    /// Refine an entry from a measured run (the paper re-runs classification
+    /// "every time a new flow is registered").
+    pub fn observe(&mut self, key: ProfileKey, measured: Rate, friendly: bool) {
+        let bound = self
+            .entries
+            .get(&key)
+            .map(|e| e.bound_by)
+            .unwrap_or(Bound::Accelerator);
+        self.entries.insert(
+            key,
+            ProfileEntry {
+                capacity: measured,
+                bound_by: bound,
+                slo_friendly: friendly,
+            },
+        );
+    }
+
+    /// Look up the capacity for a context (bucketing size and flow count).
+    pub fn capacity(&self, accel: &str, path: Path, size: u64, n_flows: usize) -> Option<ProfileEntry> {
+        self.entries
+            .get(&ProfileKey {
+                accel: accel.to_string(),
+                path,
+                size: size_bucket(size),
+                n_flows: flow_bucket(n_flows),
+            })
+            .copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All profiled entries for an accelerator, for reports (Fig 7a/7c).
+    pub fn entries_for(&self, accel: &str) -> Vec<(&ProfileKey, &ProfileEntry)> {
+        let mut v: Vec<_> = self
+            .entries
+            .iter()
+            .filter(|(k, _)| k.accel == accel)
+            .collect();
+        v.sort_by_key(|(k, _)| (k.path.name(), k.size, k.n_flows));
+        v
+    }
+}
+
+/// Direction utilization helper used by path selection: which PCIe direction
+/// does a path's ingress ride on?
+pub fn ingress_dir(path: Path) -> Option<Dir> {
+    match path {
+        Path::FunctionCall | Path::InlineNicTx | Path::InlineP2p => Some(Dir::Down),
+        Path::InlineNicRx => None, // from the wire
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> ProfileTable {
+        ProfileTable::learn(
+            &[
+                AccelModel::ipsec_32g(),
+                AccelModel::sha3_512(),
+                AccelModel::compress(),
+                AccelModel::decompress(),
+            ],
+            &FabricConfig::gen3_x8(),
+        )
+    }
+
+    #[test]
+    fn covers_full_grid() {
+        let t = table();
+        assert_eq!(
+            t.len(),
+            4 * Path::ALL.len() * SIZE_BUCKETS.len() * FLOW_BUCKETS.len()
+        );
+    }
+
+    #[test]
+    fn small_messages_tagged_violating() {
+        let t = table();
+        let tiny = t.capacity("ipsec", Path::FunctionCall, 64, 2).unwrap();
+        let big = t.capacity("ipsec", Path::FunctionCall, 4096, 2).unwrap();
+        assert!(!tiny.slo_friendly, "64B ipsec should be SLO-violating");
+        assert!(big.slo_friendly);
+        assert!(big.capacity.0 > 3.0 * tiny.capacity.0);
+    }
+
+    #[test]
+    fn sha3_never_egress_bound() {
+        // SHA-3-512's 64 B fixed output cannot bind the Up direction.
+        let t = table();
+        for &size in &SIZE_BUCKETS {
+            let e = t.capacity("sha3_512", Path::InlineNicRx, size, 1).unwrap();
+            assert_ne!(e.bound_by, Bound::PcieUp, "size={size}");
+        }
+    }
+
+    #[test]
+    fn decompress_egress_binds_at_large_sizes() {
+        // R=2.2: pushing X in costs 2.2X out — the Up direction saturates
+        // before the engine at large sizes on write-heavy paths.
+        let t = table();
+        let e = t
+            .capacity("decompress", Path::InlineNicRx, 65536, 1)
+            .unwrap();
+        assert_eq!(e.bound_by, Bound::PcieUp);
+        // Required PCIe egress for X Gbps of decompression SLO is 2.2X —
+        // the §5.3.1 observation, inverted for decompression.
+        assert!(e.capacity.as_gbps() < 30.0);
+    }
+
+    #[test]
+    fn compression_needs_more_ingress_than_slo() {
+        // §5.3.1: "allocating X Gbps PCIe bandwidth is not sufficient to
+        // feed a compression accelerator where SLO = X Gbps" — ingress is
+        // the bottleneck dimension; capacity reflects ingress feed rate.
+        let t = table();
+        let e = t.capacity("compress", Path::FunctionCall, 16384, 1).unwrap();
+        // Engine-bound at 16 Gbps peak × curve, not egress-bound.
+        assert_ne!(e.bound_by, Bound::PcieUp);
+    }
+
+    #[test]
+    fn capacity_bucketing_uses_nearest() {
+        let t = table();
+        let a = t.capacity("ipsec", Path::FunctionCall, 1400, 2).unwrap();
+        let b = t.capacity("ipsec", Path::FunctionCall, 1500, 2).unwrap();
+        assert_eq!(a.capacity.0, b.capacity.0);
+        assert_eq!(size_bucket(90), 64);
+        assert_eq!(size_bucket(104), 128);
+        assert_eq!(size_bucket(200), 256);
+        assert_eq!(flow_bucket(3), 2); // nearest of [1,2,4,8,16] — ties to 2
+    }
+
+    #[test]
+    fn observe_overrides_analytic() {
+        let mut t = table();
+        let key = ProfileKey {
+            accel: "ipsec".into(),
+            path: Path::FunctionCall,
+            size: 1500,
+            n_flows: 2,
+        };
+        t.observe(key.clone(), Rate::gbps(5.0), false);
+        let e = t.capacity("ipsec", Path::FunctionCall, 1500, 2).unwrap();
+        assert!((e.capacity.as_gbps() - 5.0).abs() < 1e-9);
+        assert!(!e.slo_friendly);
+    }
+
+    #[test]
+    fn acctable_paths() {
+        let mut at = AccTable::default();
+        at.register("ipsec", vec![Path::FunctionCall, Path::InlineNicRx]);
+        assert_eq!(at.paths("ipsec").len(), 2);
+        assert!(at.paths("unknown").is_empty());
+    }
+
+    #[test]
+    fn more_flows_slightly_reduce_capacity() {
+        let t = table();
+        let one = t.capacity("ipsec", Path::FunctionCall, 1500, 1).unwrap();
+        let sixteen = t.capacity("ipsec", Path::FunctionCall, 1500, 16).unwrap();
+        assert!(sixteen.capacity.0 < one.capacity.0);
+        assert!(sixteen.capacity.0 > 0.9 * one.capacity.0); // near-full at 16 (Fig 7b)
+    }
+}

@@ -1,0 +1,305 @@
+//! PerFlowStatusTable (§4.3): the dynamic flow registry.
+//!
+//! "Each entry includes … the VM ID, path ID and accelerator ID for this
+//! flow, per-flow SLO, the mechanism parameters configured for this flow,
+//! and the current SLO status measured from hardware counters."
+
+use crate::flow::{FlowId, Path, Slo};
+use crate::shaping::TokenBucketParams;
+use crate::util::units::{Rate, Time};
+
+/// Measured hardware-counter window for one flow.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MeasuredWindow {
+    /// Window span.
+    pub span: Time,
+    /// Bytes completed in the window.
+    pub bytes: u64,
+    /// Operations completed in the window.
+    pub ops: u64,
+    /// 99th-percentile latency in the window (ps), if tracked.
+    pub p99_latency: Option<u64>,
+}
+
+impl MeasuredWindow {
+    pub fn throughput(&self) -> Rate {
+        if self.span == 0 {
+            Rate::ZERO
+        } else {
+            crate::util::units::throughput(self.bytes, self.span)
+        }
+    }
+    pub fn iops(&self) -> f64 {
+        if self.span == 0 {
+            0.0
+        } else {
+            self.ops as f64 * crate::util::units::SECONDS as f64 / self.span as f64
+        }
+    }
+}
+
+/// Current SLO standing of a flow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloState {
+    /// No full measurement window yet.
+    Warmup,
+    Meeting,
+    Violating,
+}
+
+/// One PerFlowStatusTable row.
+#[derive(Debug, Clone)]
+pub struct FlowStatus {
+    pub flow: FlowId,
+    pub vm: usize,
+    pub path: Path,
+    pub accel: usize,
+    pub accel_name: String,
+    pub slo: Slo,
+    /// Message size this flow predominantly uses (profiling context key).
+    pub size_hint: u64,
+    /// Mechanism parameters currently programmed into the flow's shaper.
+    pub params: Option<TokenBucketParams>,
+    /// Shaping rate currently programmed (units/sec).
+    pub shaped_rate: Option<f64>,
+    /// Latest measured window.
+    pub measured: MeasuredWindow,
+    pub state: SloState,
+    /// Consecutive violating windows (hysteresis for reshape decisions).
+    pub violations: u32,
+    /// Total reconfigurations applied (reporting).
+    pub reconfigs: u32,
+}
+
+impl FlowStatus {
+    pub fn new(
+        flow: FlowId,
+        vm: usize,
+        path: Path,
+        accel: usize,
+        accel_name: &str,
+        slo: Slo,
+        size_hint: u64,
+    ) -> Self {
+        FlowStatus {
+            flow,
+            vm,
+            path,
+            accel,
+            accel_name: accel_name.to_string(),
+            slo,
+            size_hint,
+            params: None,
+            shaped_rate: None,
+            measured: MeasuredWindow::default(),
+            state: SloState::Warmup,
+            violations: 0,
+            reconfigs: 0,
+        }
+    }
+
+    /// Evaluate the SLO against the measured window (Algorithm 1's
+    /// `SLOViolationChecker`: "ReadSLOPerfCnts[FlowID] < target[FlowID]").
+    /// A small tolerance keeps the checker from flapping on quantization.
+    pub fn check(&self) -> SloState {
+        const TOL: f64 = 0.02;
+        if self.measured.span == 0 {
+            return SloState::Warmup;
+        }
+        let ok = match self.slo {
+            Slo::Throughput { target, .. } => {
+                self.measured.throughput().0 >= target.0 * (1.0 - TOL)
+            }
+            Slo::Iops { target, .. } => self.measured.iops() >= target * (1.0 - TOL),
+            Slo::Latency { max_ps, .. } => match self.measured.p99_latency {
+                Some(p99) => p99 <= max_ps,
+                None => true,
+            },
+            Slo::BestEffort => true,
+        };
+        if ok {
+            SloState::Meeting
+        } else {
+            SloState::Violating
+        }
+    }
+}
+
+/// The table: rows indexed by FlowID.
+#[derive(Debug, Clone, Default)]
+pub struct PerFlowStatusTable {
+    rows: Vec<FlowStatus>,
+}
+
+impl PerFlowStatusTable {
+    pub fn register(&mut self, status: FlowStatus) -> FlowId {
+        let id = status.flow;
+        debug_assert!(
+            !self.rows.iter().any(|r| r.flow == id),
+            "duplicate flow {id}"
+        );
+        self.rows.push(status);
+        id
+    }
+
+    pub fn deregister(&mut self, flow: FlowId) -> Option<FlowStatus> {
+        let idx = self.rows.iter().position(|r| r.flow == flow)?;
+        Some(self.rows.remove(idx))
+    }
+
+    pub fn get(&self, flow: FlowId) -> Option<&FlowStatus> {
+        self.rows.iter().find(|r| r.flow == flow)
+    }
+    pub fn get_mut(&mut self, flow: FlowId) -> Option<&mut FlowStatus> {
+        self.rows.iter_mut().find(|r| r.flow == flow)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &FlowStatus> {
+        self.rows.iter()
+    }
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut FlowStatus> {
+        self.rows.iter_mut()
+    }
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Flows sharing an accelerator (capacity-planning denominator).
+    pub fn flows_on_accel(&self, accel: usize) -> Vec<&FlowStatus> {
+        self.rows.iter().filter(|r| r.accel == accel).collect()
+    }
+
+    /// Sum of required shaping rates (units/s) already committed on an
+    /// accelerator — Scenario 1's "how much available capacity is left".
+    pub fn committed_rate(&self, accel: usize) -> f64 {
+        self.rows
+            .iter()
+            .filter(|r| r.accel == accel)
+            .filter_map(|r| r.slo.required_rate().map(|(rate, _)| rate))
+            .sum()
+    }
+
+    /// Update a flow's measured window and its SLO state; returns the new
+    /// state.
+    pub fn record_window(&mut self, flow: FlowId, w: MeasuredWindow) -> Option<SloState> {
+        let row = self.get_mut(flow)?;
+        row.measured = w;
+        let state = row.check();
+        match state {
+            SloState::Violating => row.violations += 1,
+            SloState::Meeting => row.violations = 0,
+            SloState::Warmup => {}
+        }
+        row.state = state;
+        Some(state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{Rate, MICROS, MILLIS};
+
+    fn status(flow: FlowId, accel: usize, slo: Slo) -> FlowStatus {
+        FlowStatus::new(flow, flow, Path::FunctionCall, accel, "ipsec", slo, 1500)
+    }
+
+    #[test]
+    fn register_lookup_deregister() {
+        let mut t = PerFlowStatusTable::default();
+        t.register(status(0, 0, Slo::gbps(10.0)));
+        t.register(status(1, 0, Slo::gbps(20.0)));
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.get(1).unwrap().vm, 1);
+        assert!(t.deregister(0).is_some());
+        assert!(t.get(0).is_none());
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn committed_rate_sums_per_accel() {
+        let mut t = PerFlowStatusTable::default();
+        t.register(status(0, 0, Slo::gbps(10.0)));
+        t.register(status(1, 0, Slo::gbps(20.0)));
+        t.register(status(2, 1, Slo::gbps(40.0)));
+        t.register(status(3, 0, Slo::BestEffort)); // no commitment
+        let bytes_per_sec = t.committed_rate(0);
+        assert!((bytes_per_sec - 30e9 / 8.0).abs() < 1.0);
+        assert_eq!(t.flows_on_accel(0).len(), 3);
+    }
+
+    #[test]
+    fn throughput_slo_check() {
+        let mut s = status(0, 0, Slo::gbps(10.0));
+        assert_eq!(s.check(), SloState::Warmup);
+        // 10 Gbps over 1 ms = 1.25 MB.
+        s.measured = MeasuredWindow {
+            span: MILLIS,
+            bytes: 1_250_000,
+            ops: 800,
+            p99_latency: None,
+        };
+        assert_eq!(s.check(), SloState::Meeting);
+        s.measured.bytes = 900_000;
+        assert_eq!(s.check(), SloState::Violating);
+    }
+
+    #[test]
+    fn latency_slo_check() {
+        let mut s = status(
+            0,
+            0,
+            Slo::Latency {
+                max_ps: MICROS,
+                percentile: 99.0,
+            },
+        );
+        s.measured = MeasuredWindow {
+            span: MILLIS,
+            bytes: 0,
+            ops: 100,
+            p99_latency: Some(MICROS / 2),
+        };
+        assert_eq!(s.check(), SloState::Meeting);
+        s.measured.p99_latency = Some(2 * MICROS);
+        assert_eq!(s.check(), SloState::Violating);
+    }
+
+    #[test]
+    fn violations_count_with_hysteresis() {
+        let mut t = PerFlowStatusTable::default();
+        t.register(status(0, 0, Slo::gbps(10.0)));
+        let bad = MeasuredWindow {
+            span: MILLIS,
+            bytes: 100_000,
+            ops: 10,
+            p99_latency: None,
+        };
+        let good = MeasuredWindow {
+            span: MILLIS,
+            bytes: 2_000_000,
+            ops: 10,
+            p99_latency: None,
+        };
+        assert_eq!(t.record_window(0, bad), Some(SloState::Violating));
+        assert_eq!(t.record_window(0, bad), Some(SloState::Violating));
+        assert_eq!(t.get(0).unwrap().violations, 2);
+        assert_eq!(t.record_window(0, good), Some(SloState::Meeting));
+        assert_eq!(t.get(0).unwrap().violations, 0);
+    }
+
+    #[test]
+    fn best_effort_never_violates() {
+        let mut s = status(0, 0, Slo::BestEffort);
+        s.measured = MeasuredWindow {
+            span: MILLIS,
+            bytes: 0,
+            ops: 0,
+            p99_latency: Some(u64::MAX),
+        };
+        assert_eq!(s.check(), SloState::Meeting);
+    }
+}

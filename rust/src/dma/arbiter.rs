@@ -1,0 +1,333 @@
+//! Multi-queue arbiter with pluggable scheduling policies.
+//!
+//! Policies:
+//! - [`Policy::RoundRobin`] — per-message RR (the SR-IOV arbiter of §5.1).
+//!   Message-blind: byte share follows message size, which is exactly how
+//!   large-message flows "steal" bandwidth in Fig 8.
+//! - [`Policy::WeightedRoundRobin`] — messages proportional to weight.
+//! - [`Policy::Priority`] — strict priority (PANIC's high-priority class).
+//! - [`Policy::DeficitRoundRobin`] — byte-accurate weighted fair queueing
+//!   (PANIC's WFQ approximation); fair in *bytes*, not messages.
+
+use std::collections::VecDeque;
+
+/// Scheduling policy for an [`Arbiter`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Policy {
+    RoundRobin,
+    /// weights[i] messages per cycle for queue i.
+    WeightedRoundRobin(Vec<u32>),
+    /// Lower value = higher priority; FIFO within a level.
+    Priority(Vec<u32>),
+    /// Byte-accurate DRR with per-queue weights; quantum = weight × base.
+    DeficitRoundRobin { weights: Vec<u32>, quantum: u64 },
+}
+
+#[derive(Debug)]
+struct QueueState<T> {
+    items: VecDeque<(u64, T)>, // (byte cost, payload)
+    /// WRR: messages still owed this round. DRR: byte deficit.
+    credit: u64,
+}
+
+/// The arbiter: N per-flow queues + a policy.
+#[derive(Debug)]
+pub struct Arbiter<T> {
+    queues: Vec<QueueState<T>>,
+    policy: Policy,
+    next: usize,
+    len: usize,
+}
+
+impl<T> Arbiter<T> {
+    pub fn new(n_queues: usize, policy: Policy) -> Self {
+        match &policy {
+            Policy::WeightedRoundRobin(w) | Policy::Priority(w) => {
+                assert_eq!(w.len(), n_queues, "policy weights must match queues")
+            }
+            Policy::DeficitRoundRobin { weights, .. } => {
+                assert_eq!(weights.len(), n_queues)
+            }
+            Policy::RoundRobin => {}
+        }
+        Arbiter {
+            queues: (0..n_queues)
+                .map(|_| QueueState {
+                    items: VecDeque::new(),
+                    credit: 0,
+                })
+                .collect(),
+            policy,
+            next: 0,
+            len: 0,
+        }
+    }
+
+    pub fn push(&mut self, queue: usize, cost: u64, item: T) {
+        self.queues[queue].items.push_back((cost, item));
+        self.len += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+    pub fn queue_len(&self, queue: usize) -> usize {
+        self.queues[queue].items.len()
+    }
+    pub fn queue_bytes(&self, queue: usize) -> u64 {
+        self.queues[queue].items.iter().map(|&(c, _)| c).sum()
+    }
+
+    /// Dequeue the next message per the policy: (queue, cost, item).
+    pub fn pop(&mut self) -> Option<(usize, u64, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.queues.len();
+        let picked = match &self.policy {
+            Policy::RoundRobin => {
+                let mut found = None;
+                for i in 0..n {
+                    let idx = (self.next + i) % n;
+                    if !self.queues[idx].items.is_empty() {
+                        found = Some(idx);
+                        break;
+                    }
+                }
+                let idx = found?;
+                self.next = (idx + 1) % n;
+                idx
+            }
+            Policy::WeightedRoundRobin(weights) => {
+                // Serve `weight` messages from a queue before advancing.
+                let weights = weights.clone();
+                let mut found = None;
+                for i in 0..n {
+                    let idx = (self.next + i) % n;
+                    if self.queues[idx].items.is_empty() {
+                        continue;
+                    }
+                    if i > 0 {
+                        // Moved past self.next: reset its round credit.
+                        self.queues[idx].credit = 0;
+                    }
+                    found = Some(idx);
+                    break;
+                }
+                let idx = found?;
+                self.queues[idx].credit += 1;
+                if self.queues[idx].credit >= weights[idx].max(1) as u64 {
+                    self.queues[idx].credit = 0;
+                    self.next = (idx + 1) % n;
+                } else {
+                    self.next = idx;
+                }
+                idx
+            }
+            Policy::Priority(prios) => {
+                // Lowest priority value with a non-empty queue; RR among
+                // equals via self.next.
+                let best = prios
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, _)| !self.queues[i].items.is_empty())
+                    .map(|(_, &p)| p)
+                    .min()?;
+                let mut found = None;
+                for i in 0..n {
+                    let idx = (self.next + i) % n;
+                    if prios[idx] == best && !self.queues[idx].items.is_empty() {
+                        found = Some(idx);
+                        break;
+                    }
+                }
+                let idx = found?;
+                self.next = (idx + 1) % n;
+                idx
+            }
+            Policy::DeficitRoundRobin { weights, quantum } => {
+                let weights = weights.clone();
+                let quantum = *quantum;
+                // Classic DRR: visit queues round-robin; top up deficit by
+                // weight×quantum on each visit; serve while head fits.
+                let mut idx = self.next;
+                let mut guard = 0;
+                loop {
+                    guard += 1;
+                    debug_assert!(guard < 10 * n + 100, "DRR failed to converge");
+                    if self.queues[idx].items.is_empty() {
+                        self.queues[idx].credit = 0; // empty queues lose deficit
+                        idx = (idx + 1) % n;
+                        continue;
+                    }
+                    let head_cost = self.queues[idx].items.front().unwrap().0;
+                    if self.queues[idx].credit >= head_cost {
+                        self.queues[idx].credit -= head_cost;
+                        // Stay on this queue next time (serve while fits).
+                        self.next = idx;
+                        break idx;
+                    }
+                    // Not enough deficit: top up and move on.
+                    self.queues[idx].credit +=
+                        quantum.max(1) * weights[idx].max(1) as u64;
+                    // Serve immediately if the top-up suffices; else rotate.
+                    if self.queues[idx].credit >= head_cost {
+                        self.queues[idx].credit -= head_cost;
+                        self.next = (idx + 1) % n;
+                        break idx;
+                    }
+                    idx = (idx + 1) % n;
+                }
+            }
+        };
+        let (cost, item) = self.queues[picked].items.pop_front()?;
+        self.len -= 1;
+        Some((picked, cost, item))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Helper: fill queues then measure byte share over `rounds` pops.
+    fn byte_share(arb: &mut Arbiter<u32>, pops: usize, n: usize) -> Vec<u64> {
+        let mut bytes = vec![0u64; n];
+        for _ in 0..pops {
+            if let Some((q, cost, _)) = arb.pop() {
+                bytes[q] += cost;
+            }
+        }
+        bytes
+    }
+
+    #[test]
+    fn rr_fair_in_messages_not_bytes() {
+        let mut arb = Arbiter::new(2, Policy::RoundRobin);
+        for i in 0..1000 {
+            arb.push(0, 4096, i);
+            arb.push(1, 64, i);
+        }
+        let bytes = byte_share(&mut arb, 1000, 2);
+        // Message-fair: byte ratio equals size ratio 64:1.
+        let ratio = bytes[0] as f64 / bytes[1] as f64;
+        assert!((ratio - 64.0).abs() < 1.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn drr_fair_in_bytes() {
+        let mut arb = Arbiter::new(
+            2,
+            Policy::DeficitRoundRobin {
+                weights: vec![1, 1],
+                quantum: 1500,
+            },
+        );
+        for i in 0..4000 {
+            arb.push(0, 4096, i);
+            arb.push(1, 64, i);
+        }
+        let bytes = byte_share(&mut arb, 3000, 2);
+        let ratio = bytes[0] as f64 / bytes[1] as f64;
+        assert!((0.8..1.25).contains(&ratio), "byte ratio={ratio}");
+    }
+
+    #[test]
+    fn drr_respects_weights() {
+        let mut arb = Arbiter::new(
+            2,
+            Policy::DeficitRoundRobin {
+                weights: vec![1, 2],
+                quantum: 1500,
+            },
+        );
+        for i in 0..6000 {
+            arb.push(0, 1500, i);
+            arb.push(1, 1500, i);
+        }
+        let bytes = byte_share(&mut arb, 6000, 2);
+        let ratio = bytes[1] as f64 / bytes[0] as f64;
+        assert!((1.8..2.2).contains(&ratio), "weighted ratio={ratio}");
+    }
+
+    #[test]
+    fn priority_starves_low() {
+        let mut arb = Arbiter::new(2, Policy::Priority(vec![0, 1]));
+        for i in 0..100 {
+            arb.push(0, 100, i);
+            arb.push(1, 100, i);
+        }
+        // First 100 pops all come from queue 0.
+        for _ in 0..100 {
+            let (q, _, _) = arb.pop().unwrap();
+            assert_eq!(q, 0);
+        }
+        let (q, _, _) = arb.pop().unwrap();
+        assert_eq!(q, 1);
+    }
+
+    #[test]
+    fn wrr_message_proportions() {
+        let mut arb = Arbiter::new(2, Policy::WeightedRoundRobin(vec![3, 1]));
+        for i in 0..4000 {
+            arb.push(0, 100, i);
+            arb.push(1, 100, i);
+        }
+        let mut counts = [0u32; 2];
+        for _ in 0..4000 {
+            let (q, _, _) = arb.pop().unwrap();
+            counts[q] += 1;
+        }
+        let ratio = counts[0] as f64 / counts[1] as f64;
+        assert!((2.7..3.3).contains(&ratio), "wrr ratio={ratio}");
+    }
+
+    #[test]
+    fn empty_and_single_queue_edge_cases() {
+        let mut arb: Arbiter<u32> = Arbiter::new(3, Policy::RoundRobin);
+        assert!(arb.pop().is_none());
+        arb.push(1, 10, 42);
+        assert_eq!(arb.pop(), Some((1, 10, 42)));
+        assert!(arb.pop().is_none());
+        assert!(arb.is_empty());
+    }
+
+    #[test]
+    fn fifo_within_queue() {
+        let mut arb: Arbiter<u32> = Arbiter::new(1, Policy::RoundRobin);
+        for i in 0..10 {
+            arb.push(0, 1, i);
+        }
+        for i in 0..10 {
+            assert_eq!(arb.pop().unwrap().2, i);
+        }
+    }
+
+    #[test]
+    fn drr_skips_empty_queues_without_hoarding() {
+        let mut arb = Arbiter::new(
+            3,
+            Policy::DeficitRoundRobin {
+                weights: vec![1, 1, 1],
+                quantum: 500,
+            },
+        );
+        // Only queue 2 has traffic; it must get full service.
+        for i in 0..100 {
+            arb.push(2, 1500, i);
+        }
+        for _ in 0..100 {
+            assert_eq!(arb.pop().unwrap().0, 2);
+        }
+        // Now queue 0 joins; deficit hoarded while empty must not matter.
+        for i in 0..10 {
+            arb.push(0, 1500, i);
+            arb.push(2, 1500, i);
+        }
+        let bytes = byte_share(&mut arb, 20, 3);
+        assert_eq!(bytes[0], bytes[2]);
+    }
+}

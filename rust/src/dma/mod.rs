@@ -1,0 +1,12 @@
+//! DMA engine scheduling: multi-queue arbitration policies.
+//!
+//! The paper's prototype wraps the FPGA's DMA engine with "an SR-IOV arbiter
+//! (a simple round robin policy) and queues … which in our case contains
+//! accelerator per-flow contexts" (§5.1). Baseline systems differ exactly
+//! here: `Host_no_TS` uses weighted round-robin, PANIC uses priority +
+//! weighted-fair queueing. The [`Arbiter`] is the shared mechanism; the
+//! policy decides which per-flow queue supplies the next message.
+
+pub mod arbiter;
+
+pub use arbiter::{Arbiter, Policy};

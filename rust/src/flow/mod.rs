@@ -1,0 +1,192 @@
+//! The accelerator-flow abstraction (§3.3) and traffic patterns.
+//!
+//! A *flow* is the unit of SLO management: a stream of accelerator
+//! invocations from one VM over one path. Flows carry a [`Path`] (which
+//! communication route the invocations take — Fig 2), a [`TrafficPattern`]
+//! (message-size and injection-rate behaviour, the knobs Table 1 sweeps),
+//! and an [`Slo`] target. The [`generator::TrafficGen`] turns a pattern into
+//! a deterministic arrival stream.
+
+pub mod generator;
+pub mod pattern;
+
+pub use generator::TrafficGen;
+pub use pattern::{Burstiness, SizeDist, TrafficPattern};
+
+use crate::util::units::Rate;
+
+/// Flow identifier (index into the per-flow tables).
+pub type FlowId = usize;
+
+/// Invocation paths from Fig 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Path {
+    /// ①② Loop-back through host memory: DMA read payload Down, result
+    /// written back Up.
+    FunctionCall,
+    /// ③ TX inline: host pushes data out through the accelerator.
+    InlineNicTx,
+    /// ③ RX inline: packets arrive from the wire, accelerator processes,
+    /// DMA-writes to host memory (loads the Up direction only).
+    InlineNicRx,
+    /// ④ Peer-to-peer with another device (NVMe in our prototypes).
+    InlineP2p,
+}
+
+impl Path {
+    pub fn name(self) -> &'static str {
+        match self {
+            Path::FunctionCall => "function_call",
+            Path::InlineNicTx => "inline_nic_tx",
+            Path::InlineNicRx => "inline_nic_rx",
+            Path::InlineP2p => "inline_p2p",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Path> {
+        Some(match name {
+            "function_call" => Path::FunctionCall,
+            "inline_nic_tx" => Path::InlineNicTx,
+            "inline_nic_rx" => Path::InlineNicRx,
+            "inline_p2p" => Path::InlineP2p,
+            _ => return None,
+        })
+    }
+
+    pub const ALL: [Path; 4] = [
+        Path::FunctionCall,
+        Path::InlineNicTx,
+        Path::InlineNicRx,
+        Path::InlineP2p,
+    ];
+}
+
+/// An SLO target for one flow: a throughput (or IOPS) number under a
+/// percentile guarantee (§1: "an SLO specifies (1) a precise performance
+/// number and (2) low variance").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Slo {
+    /// Sustained bandwidth target.
+    Throughput { target: Rate, percentile: f64 },
+    /// Operation-rate target.
+    Iops { target: f64, percentile: f64 },
+    /// Tail-latency bound (Fig 9's 64 B latency-critical flow).
+    Latency { max_ps: u64, percentile: f64 },
+    /// Opportunistic / best-effort (§6's no-guarantee class; the live
+    /// migration background job).
+    BestEffort,
+}
+
+impl Slo {
+    pub fn gbps(g: f64) -> Slo {
+        Slo::Throughput {
+            target: Rate::gbps(g),
+            percentile: 99.0,
+        }
+    }
+    pub fn iops(k: f64) -> Slo {
+        Slo::Iops {
+            target: k,
+            percentile: 99.0,
+        }
+    }
+
+    /// The shaping rate (units/sec) this SLO requires, and its mode.
+    pub fn required_rate(&self) -> Option<(f64, crate::shaping::ShapeMode)> {
+        match *self {
+            Slo::Throughput { target, .. } => {
+                Some((target.as_bits_per_sec() / 8.0, crate::shaping::ShapeMode::Gbps))
+            }
+            Slo::Iops { target, .. } => Some((target, crate::shaping::ShapeMode::Iops)),
+            Slo::Latency { .. } | Slo::BestEffort => None,
+        }
+    }
+}
+
+/// What a flow's invocations actually do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FlowKind {
+    /// Invoke an accelerator (the default).
+    #[default]
+    Accel,
+    /// NVMe read through the inline-P2P path (Fig 6, Fig 11b).
+    StorageRead,
+    /// NVMe write through the inline-P2P path.
+    StorageWrite,
+}
+
+/// Static description of one flow (what a VM registers with the runtime).
+#[derive(Debug, Clone)]
+pub struct FlowSpec {
+    pub id: FlowId,
+    /// Owning VM (for per-VM aggregation in reports).
+    pub vm: usize,
+    pub path: Path,
+    pub pattern: TrafficPattern,
+    pub slo: Slo,
+    /// Which accelerator this flow invokes (index into the system's list).
+    pub accel: usize,
+    pub kind: FlowKind,
+    /// Strict-priority class for the PANIC baseline (lower = higher).
+    pub priority: u32,
+}
+
+impl FlowSpec {
+    /// Accelerator flow with default priority.
+    pub fn new(id: FlowId, vm: usize, path: Path, pattern: TrafficPattern, slo: Slo, accel: usize) -> Self {
+        FlowSpec {
+            id,
+            vm,
+            path,
+            pattern,
+            slo,
+            accel,
+            kind: FlowKind::Accel,
+            priority: 1,
+        }
+    }
+
+    /// Storage flow (inline-P2P).
+    pub fn storage(id: FlowId, vm: usize, pattern: TrafficPattern, slo: Slo, kind: FlowKind) -> Self {
+        debug_assert!(kind != FlowKind::Accel);
+        FlowSpec {
+            id,
+            vm,
+            path: Path::InlineP2p,
+            pattern,
+            slo,
+            accel: 0,
+            kind,
+            priority: 1,
+        }
+    }
+
+    pub fn with_priority(mut self, p: u32) -> Self {
+        self.priority = p;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_name_roundtrip() {
+        for p in Path::ALL {
+            assert_eq!(Path::by_name(p.name()), Some(p));
+        }
+        assert_eq!(Path::by_name("bogus"), None);
+    }
+
+    #[test]
+    fn slo_required_rate() {
+        let (rate, mode) = Slo::gbps(10.0).required_rate().unwrap();
+        assert!((rate - 1.25e9).abs() < 1.0);
+        assert_eq!(mode, crate::shaping::ShapeMode::Gbps);
+        let (iops, mode) = Slo::iops(300_000.0).required_rate().unwrap();
+        assert_eq!(iops, 300_000.0);
+        assert_eq!(mode, crate::shaping::ShapeMode::Iops);
+        assert!(Slo::BestEffort.required_rate().is_none());
+    }
+}

@@ -1,0 +1,152 @@
+//! Traffic patterns: message-size distributions, injection load, burstiness.
+//!
+//! Table 1 parameterizes each VM's stream as `{size, load}` where load is a
+//! fraction of a reference line rate; real tenants add burstiness on top.
+//! Patterns are deliberately *descriptive* (what a VM does), not normative —
+//! Arcus's whole point is that the interface re-shapes PatternA into
+//! PatternA′ regardless of what tenants choose.
+
+use crate::util::units::{Rate, Time, SECONDS};
+use crate::util::Rng;
+
+/// Message-size distribution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SizeDist {
+    /// Every message the same size (the paper's case studies).
+    Fixed(u64),
+    /// Uniform over [lo, hi].
+    Uniform { lo: u64, hi: u64 },
+    /// Two sizes with probability split (tiny-RPC + bulk mixtures).
+    Bimodal { a: u64, b: u64, p_a: f64 },
+    /// Choice from a set with equal probability.
+    Choice(Vec<u64>),
+}
+
+impl SizeDist {
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        match self {
+            SizeDist::Fixed(s) => *s,
+            SizeDist::Uniform { lo, hi } => rng.range_u64(*lo, *hi),
+            SizeDist::Bimodal { a, b, p_a } => {
+                if rng.chance(*p_a) {
+                    *a
+                } else {
+                    *b
+                }
+            }
+            SizeDist::Choice(v) => *rng.choose(v),
+        }
+    }
+
+    /// Expected message size.
+    pub fn mean(&self) -> f64 {
+        match self {
+            SizeDist::Fixed(s) => *s as f64,
+            SizeDist::Uniform { lo, hi } => (*lo + *hi) as f64 / 2.0,
+            SizeDist::Bimodal { a, b, p_a } => {
+                *a as f64 * p_a + *b as f64 * (1.0 - p_a)
+            }
+            SizeDist::Choice(v) => {
+                v.iter().sum::<u64>() as f64 / v.len() as f64
+            }
+        }
+    }
+}
+
+/// Inter-arrival behaviour.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Burstiness {
+    /// Constant spacing (paced traffic generator, the Table 1 studies).
+    Paced,
+    /// Poisson arrivals (open-loop server workloads).
+    Poisson,
+    /// On/off bursts: `burst_len` back-to-back messages, then idle to keep
+    /// the long-run load (Fig 9's "bursty tiny messages").
+    OnOff { burst_len: u32 },
+}
+
+/// A complete traffic pattern.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficPattern {
+    pub sizes: SizeDist,
+    /// Injection load as a fraction of `line_rate` (Table 1's `load`).
+    pub load: f64,
+    /// Reference line rate the load fraction is relative to.
+    pub line_rate: Rate,
+    pub burst: Burstiness,
+}
+
+impl TrafficPattern {
+    /// Table 1 style: fixed size, load fraction of a line rate, paced.
+    pub fn fixed(size: u64, load: f64, line_rate: Rate) -> Self {
+        TrafficPattern {
+            sizes: SizeDist::Fixed(size),
+            load,
+            line_rate,
+            burst: Burstiness::Paced,
+        }
+    }
+
+    /// Offered byte rate.
+    pub fn offered(&self) -> Rate {
+        Rate(self.line_rate.0 * self.load)
+    }
+
+    /// Mean messages/sec implied by the pattern.
+    pub fn mean_mps(&self) -> f64 {
+        self.offered().as_bits_per_sec() / 8.0 / self.sizes.mean()
+    }
+
+    /// Mean inter-arrival gap in ps.
+    pub fn mean_gap(&self) -> Time {
+        (SECONDS as f64 / self.mean_mps()).round() as Time
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_pattern_rates() {
+        let p = TrafficPattern::fixed(1500, 0.5, Rate::gbps(50.0));
+        assert!((p.offered().as_gbps() - 25.0).abs() < 1e-9);
+        let mps = p.mean_mps();
+        assert!((mps - 25e9 / 8.0 / 1500.0).abs() < 1.0);
+        // gap * mps == 1 second
+        assert!((p.mean_gap() as f64 * mps / SECONDS as f64 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn size_dist_sampling() {
+        let mut rng = Rng::new(5);
+        assert_eq!(SizeDist::Fixed(640).sample(&mut rng), 640);
+        for _ in 0..1000 {
+            let s = SizeDist::Uniform { lo: 64, hi: 1500 }.sample(&mut rng);
+            assert!((64..=1500).contains(&s));
+        }
+        let bi = SizeDist::Bimodal {
+            a: 64,
+            b: 4096,
+            p_a: 0.9,
+        };
+        let small = (0..10_000).filter(|_| bi.sample(&mut rng) == 64).count();
+        assert!((8_800..9_200).contains(&small), "small={small}");
+    }
+
+    #[test]
+    fn size_dist_means() {
+        assert_eq!(SizeDist::Fixed(100).mean(), 100.0);
+        assert_eq!(SizeDist::Uniform { lo: 0, hi: 100 }.mean(), 50.0);
+        assert_eq!(
+            SizeDist::Bimodal {
+                a: 0,
+                b: 100,
+                p_a: 0.75
+            }
+            .mean(),
+            25.0
+        );
+        assert_eq!(SizeDist::Choice(vec![10, 20, 30]).mean(), 20.0);
+    }
+}

@@ -1,0 +1,45 @@
+//! # Arcus — SLO Management for Accelerators in the Cloud with Traffic Shaping
+//!
+//! A full reproduction of the Arcus system (Zhao et al., 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the Arcus coordinator: per-flow accelerator traffic
+//!   shaping (hardware-modeled token buckets), an SLO-aware control plane
+//!   (profiling, admission control, capacity planning, online re-shaping), a
+//!   cycle-granular host–FPGA simulator substrate (PCIe, DMA, accelerators,
+//!   NVMe storage, NICs), all paper baselines, and a wall-clock serving
+//!   runtime that executes AOT-compiled accelerator kernels via PJRT.
+//! - **L2 (python/compile/model.py)** — batched accelerator datapaths in JAX,
+//!   lowered once to HLO text artifacts.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots (stream cipher, tree hash, checksum), verified against
+//!   pure-jnp oracles.
+//!
+//! Python never runs on the request path: `make artifacts` compiles the
+//! kernels ahead of time, and the Rust binary loads `artifacts/*.hlo.txt`
+//! through the PJRT CPU client.
+//!
+//! See `DESIGN.md` for the substitution table (the paper's FPGA/PCIe/SSD
+//! testbed → this simulator) and the per-experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod accel;
+pub mod apps;
+pub mod config;
+pub mod coordinator;
+pub mod dma;
+pub mod flow;
+pub mod metrics;
+pub mod nic;
+pub mod pcie;
+pub mod runtime;
+pub mod server;
+pub mod shaping;
+pub mod storage;
+pub mod sim;
+pub mod system;
+pub mod testkit;
+pub mod util;
+pub mod workload;
+
+pub use util::units::{Rate, Time};

@@ -1,0 +1,309 @@
+//! Log-bucketed latency/throughput histogram with percentile queries.
+//!
+//! This is an HDR-histogram-style structure (hdrhistogram is not in the
+//! offline registry): values are bucketed by (exponent, sub-bucket) with a
+//! configurable number of significant-digit bits, giving bounded relative
+//! error at every magnitude. All SLO tail metrics in the evaluation
+//! (95th/99th/99.9th latency, throughput percentiles of Fig 6 / Table 3)
+//! are computed from these histograms.
+
+/// Number of linear sub-buckets per octave; 64 gives <1.6% relative error.
+const SUB_BITS: u32 = 6;
+const SUB_COUNT: usize = 1 << SUB_BITS;
+
+/// Log-bucketed histogram over u64 values (picoseconds, IOPS, bytes...).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// counts[octave][sub]
+    counts: Vec<[u64; SUB_COUNT]>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![[0; SUB_COUNT]; 64 - SUB_BITS as usize + 1],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    fn index(value: u64) -> (usize, usize) {
+        if value < SUB_COUNT as u64 {
+            return (0, value as usize);
+        }
+        let octave = 63 - value.leading_zeros(); // position of msb, >= SUB_BITS
+        let shift = octave - SUB_BITS + 1;
+        let sub = (value >> shift) as usize & (SUB_COUNT - 1);
+        ((octave - SUB_BITS + 1) as usize, sub)
+    }
+
+    /// Representative (upper-edge midpoint) value for a bucket.
+    fn value_at(octave: usize, sub: usize) -> u64 {
+        if octave == 0 {
+            return sub as u64;
+        }
+        let base = (SUB_COUNT >> 1 << octave) as u64; // 2^(octave+SUB_BITS-1)
+        let width = 1u64 << (octave - 1).min(63);
+        // Reconstruct: value had msb at octave+SUB_BITS-1 and the sub bits
+        // below it; midpoint of the bucket.
+        base + (sub as u64 & ((SUB_COUNT as u64 >> 1) - 1)) * width * 2 + width
+    }
+
+    /// Record one observation.
+    #[inline]
+    pub fn record(&mut self, value: u64) {
+        let (o, s) = Self::index(value);
+        self.counts[o][s] += 1;
+        self.total += 1;
+        self.sum += value as u128;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    /// Record `n` identical observations.
+    pub fn record_n(&mut self, value: u64, n: u64) {
+        let (o, s) = Self::index(value);
+        self.counts[o][s] += n;
+        self.total += n;
+        self.sum += value as u128 * n as u128;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Value at quantile `q` in [0,1]. Returns exact min/max at the edges.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        if q <= 0.0 {
+            return self.min();
+        }
+        if q >= 1.0 {
+            return self.max;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (o, subs) in self.counts.iter().enumerate() {
+            for (s, &c) in subs.iter().enumerate() {
+                acc += c;
+                if acc >= target {
+                    return Self::value_at(o, s).min(self.max).max(self.min);
+                }
+            }
+        }
+        self.max
+    }
+
+    /// Convenience percentile (`p` in [0, 100]).
+    pub fn percentile(&self, p: f64) -> u64 {
+        self.quantile(p / 100.0)
+    }
+
+    /// Standard deviation of recorded values (approximate: bucket midpoints).
+    pub fn std_dev(&self) -> f64 {
+        if self.total < 2 {
+            return 0.0;
+        }
+        let mean = self.mean();
+        let mut var = 0.0f64;
+        for (o, subs) in self.counts.iter().enumerate() {
+            for (s, &c) in subs.iter().enumerate() {
+                if c > 0 {
+                    let v = Self::value_at(o, s) as f64;
+                    var += c as f64 * (v - mean) * (v - mean);
+                }
+            }
+        }
+        (var / self.total as f64).sqrt()
+    }
+
+    /// Coefficient of variation (std/mean) — the paper's "variance" metric
+    /// for throughput stability is reported as a relative spread.
+    pub fn cv(&self) -> f64 {
+        let m = self.mean();
+        if m == 0.0 {
+            0.0
+        } else {
+            self.std_dev() / m
+        }
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (o, subs) in other.counts.iter().enumerate() {
+            for (s, &c) in subs.iter().enumerate() {
+                self.counts[o][s] += c;
+            }
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Iterate (value, count) over non-empty buckets, ascending.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.counts.iter().enumerate().flat_map(|(o, subs)| {
+            subs.iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(move |(s, &c)| (Self::value_at(o, s), c))
+        })
+    }
+
+    /// Empirical CDF as (value, cumulative fraction) points, for figures.
+    pub fn cdf(&self) -> Vec<(u64, f64)> {
+        let mut acc = 0u64;
+        self.iter()
+            .map(|(v, c)| {
+                acc += c;
+                (v, acc as f64 / self.total as f64)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn small_values_exact() {
+        let mut h = Histogram::new();
+        for v in 0..SUB_COUNT as u64 {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), SUB_COUNT as u64 - 1);
+        // Small values land in exact buckets.
+        assert_eq!(h.quantile(0.0), 0);
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut h = Histogram::new();
+        let v = 1_234_567_890u64;
+        h.record(v);
+        let q = h.quantile(0.5);
+        let err = (q as f64 - v as f64).abs() / v as f64;
+        assert!(err < 0.04, "err={err} q={q}");
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut h = Histogram::new();
+        let mut rng = crate::util::Rng::new(5);
+        for _ in 0..100_000 {
+            h.record(rng.range_u64(100, 1_000_000));
+        }
+        let p50 = h.percentile(50.0);
+        let p90 = h.percentile(90.0);
+        let p99 = h.percentile(99.0);
+        let p999 = h.percentile(99.9);
+        assert!(p50 <= p90 && p90 <= p99 && p99 <= p999);
+        assert!(h.min() <= p50 && p999 <= h.max());
+    }
+
+    #[test]
+    fn uniform_median_close() {
+        let mut h = Histogram::new();
+        let mut rng = crate::util::Rng::new(8);
+        for _ in 0..200_000 {
+            h.record(rng.range_u64(0, 1_000_000));
+        }
+        let p50 = h.percentile(50.0) as f64;
+        assert!((p50 - 500_000.0).abs() / 500_000.0 < 0.05, "p50={p50}");
+    }
+
+    #[test]
+    fn merge_matches_combined() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        let mut rng = crate::util::Rng::new(21);
+        for i in 0..10_000 {
+            let v = rng.range_u64(1, 1 << 40);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            c.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.percentile(99.0), c.percentile(99.0));
+    }
+
+    #[test]
+    fn cdf_monotone_ends_at_one() {
+        let mut h = Histogram::new();
+        for v in [5u64, 10, 10, 200, 3_000_000] {
+            h.record(v);
+        }
+        let cdf = h.cdf();
+        for w in cdf.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn record_n_equivalent() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record_n(777, 5);
+        for _ in 0..5 {
+            b.record(777);
+        }
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.mean(), b.mean());
+        assert_eq!(a.percentile(50.0), b.percentile(50.0));
+    }
+}

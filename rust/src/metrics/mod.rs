@@ -1,0 +1,230 @@
+//! Measurement infrastructure: histograms, throughput samplers, flow stats.
+//!
+//! Every experiment in the paper reports one of three things — a throughput
+//! distribution sampled over fixed windows (Fig 6, Table 3), a latency tail
+//! (§5.2, Fig 9), or an aggregate achieved-vs-SLO ratio (Fig 3, 8, 11).
+//! [`FlowMetrics`] collects all three per flow; [`ThroughputSampler`]
+//! implements the paper's "sample throughput every N requests" methodology.
+
+pub mod hist;
+
+pub use hist::Histogram;
+
+use crate::util::units::{throughput, Rate, Time, SECONDS};
+
+/// Per-flow rolling measurement state.
+#[derive(Debug, Clone, Default)]
+pub struct FlowMetrics {
+    /// End-to-end latency of completed requests (ps).
+    pub latency: Histogram,
+    /// Completed requests.
+    pub completed: u64,
+    /// Rejected / dropped requests (admission control or queue overflow).
+    pub dropped: u64,
+    /// Total payload bytes completed.
+    pub bytes: u64,
+    /// First/last completion timestamps for aggregate throughput.
+    pub first_completion: Option<Time>,
+    pub last_completion: Option<Time>,
+}
+
+impl FlowMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_complete(&mut self, now: Time, submitted_at: Time, bytes: u64) {
+        self.latency.record(now.saturating_sub(submitted_at));
+        self.completed += 1;
+        self.bytes += bytes;
+        if self.first_completion.is_none() {
+            self.first_completion = Some(now);
+        }
+        self.last_completion = Some(now);
+    }
+
+    pub fn on_drop(&mut self) {
+        self.dropped += 1;
+    }
+
+    /// Aggregate goodput over the active window.
+    pub fn goodput(&self) -> Rate {
+        match (self.first_completion, self.last_completion) {
+            (Some(a), Some(b)) if b > a => throughput(self.bytes, b - a),
+            _ => Rate::ZERO,
+        }
+    }
+
+    /// Aggregate operation rate (completions per second).
+    pub fn ops_per_sec(&self) -> f64 {
+        match (self.first_completion, self.last_completion) {
+            (Some(a), Some(b)) if b > a => {
+                self.completed as f64 * SECONDS as f64 / (b - a) as f64
+            }
+            _ => 0.0,
+        }
+    }
+}
+
+/// Samples achieved throughput every `window_requests` completions, as in
+/// §5.2 ("we sample the throughput of the two users every 500 requests").
+/// The resulting distribution of window rates is the CDF of Fig 6.
+#[derive(Debug, Clone)]
+pub struct ThroughputSampler {
+    window_requests: u64,
+    in_window: u64,
+    window_bytes: u64,
+    window_start: Option<Time>,
+    /// Sampled window rates in bits/sec, recorded into a histogram
+    /// (value = Kbit/s to keep integer resolution sensible).
+    pub samples: Histogram,
+    /// Also kept raw for exact CDF plots.
+    pub raw: Vec<f64>,
+}
+
+impl ThroughputSampler {
+    pub fn new(window_requests: u64) -> Self {
+        assert!(window_requests > 0);
+        ThroughputSampler {
+            window_requests,
+            in_window: 0,
+            window_bytes: 0,
+            window_start: None,
+            samples: Histogram::new(),
+            raw: Vec::new(),
+        }
+    }
+
+    /// Record a completion; closes the window when full.
+    pub fn on_complete(&mut self, now: Time, bytes: u64) {
+        if self.window_start.is_none() {
+            self.window_start = Some(now);
+            return; // first completion anchors the window
+        }
+        self.in_window += 1;
+        self.window_bytes += bytes;
+        if self.in_window >= self.window_requests {
+            let start = self.window_start.unwrap();
+            if now > start {
+                let bps = self.window_bytes as f64 * 8.0 * SECONDS as f64
+                    / (now - start) as f64;
+                self.samples.record((bps / 1e3) as u64); // Kbit/s buckets
+                self.raw.push(bps);
+            }
+            self.in_window = 0;
+            self.window_bytes = 0;
+            self.window_start = Some(now);
+        }
+    }
+
+    /// Record a completion counted in operations (IOPS mode): bytes ignored.
+    pub fn on_complete_op(&mut self, now: Time) {
+        if self.window_start.is_none() {
+            self.window_start = Some(now);
+            return;
+        }
+        self.in_window += 1;
+        if self.in_window >= self.window_requests {
+            let start = self.window_start.unwrap();
+            if now > start {
+                let iops =
+                    self.in_window as f64 * SECONDS as f64 / (now - start) as f64;
+                self.samples.record(iops as u64);
+                self.raw.push(iops);
+            }
+            self.in_window = 0;
+            self.window_start = Some(now);
+        }
+    }
+
+    /// Deviation of a quantile of the sampled distribution from `target`,
+    /// as a signed fraction — this is exactly Table 3's metric.
+    pub fn quantile_deviation(&self, q: f64, target: f64) -> f64 {
+        if self.raw.is_empty() || target == 0.0 {
+            return 0.0;
+        }
+        let mut sorted = self.raw.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((q * (sorted.len() - 1) as f64).round() as usize)
+            .min(sorted.len() - 1);
+        (sorted[idx] - target) / target
+    }
+
+    /// Coefficient of variation of sampled window rates ("throughput
+    /// variance" headline: Arcus keeps it <1%).
+    pub fn cv(&self) -> f64 {
+        if self.raw.len() < 2 {
+            return 0.0;
+        }
+        let n = self.raw.len() as f64;
+        let mean = self.raw.iter().sum::<f64>() / n;
+        if mean == 0.0 {
+            return 0.0;
+        }
+        let var = self.raw.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        var.sqrt() / mean
+    }
+
+    /// Mean of sampled window rates (bps or IOPS depending on mode).
+    pub fn mean(&self) -> f64 {
+        if self.raw.is_empty() {
+            return 0.0;
+        }
+        self.raw.iter().sum::<f64>() / self.raw.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{MICROS, NANOS};
+
+    #[test]
+    fn flow_metrics_goodput() {
+        let mut m = FlowMetrics::new();
+        // 10 completions of 1250 bytes each, 1 us apart => 10 Gbps.
+        for i in 0..10u64 {
+            m.on_complete(i * MICROS, 0, 1250);
+        }
+        let g = m.goodput();
+        // 9 us window, 12500 bytes... first window anchors at t=0.
+        assert!((g.as_gbps() - 12500.0 * 8.0 / 9000.0).abs() < 0.01);
+        assert_eq!(m.completed, 10);
+    }
+
+    #[test]
+    fn sampler_constant_rate_zero_cv() {
+        let mut s = ThroughputSampler::new(100);
+        // Perfectly paced: 1 KB every 100 ns => 81.92 Gbps.
+        for i in 0..5_000u64 {
+            s.on_complete(i * 100 * NANOS, 1024);
+        }
+        assert!(s.raw.len() >= 40);
+        assert!(s.cv() < 1e-9, "cv={}", s.cv());
+        let bps = s.mean();
+        assert!((bps - 1024.0 * 8.0 / 100e-9).abs() / bps < 1e-6);
+    }
+
+    #[test]
+    fn sampler_deviation_sign() {
+        let mut s = ThroughputSampler::new(10);
+        for i in 0..200u64 {
+            s.on_complete(i * 100 * NANOS, 1024);
+        }
+        let actual = s.mean();
+        assert!(s.quantile_deviation(0.5, actual * 2.0) < 0.0);
+        assert!(s.quantile_deviation(0.5, actual / 2.0) > 0.0);
+    }
+
+    #[test]
+    fn iops_mode_counts_ops() {
+        let mut s = ThroughputSampler::new(500);
+        // 1 op per microsecond = 1M IOPS.
+        for i in 0..5_000u64 {
+            s.on_complete_op(i * MICROS);
+        }
+        assert!(!s.raw.is_empty());
+        let iops = s.mean();
+        assert!((iops - 1e6).abs() / 1e6 < 0.01, "iops={iops}");
+    }
+}

@@ -1,0 +1,302 @@
+//! NIC model: Ethernet ports with RX/TX buffers (inline-NIC paths, Fig 2 ③).
+//!
+//! The paper's FPGA carries two 50 Gbps Ethernet ports; inline-mode flows
+//! traverse the on-NIC receive buffer, which Arcus drains "in pull-based
+//! fashion" with a shaped fetch pattern (§4.1). The SLO-relevant behaviour
+//! is: (1) the port serializes at line rate, (2) the RX buffer is finite —
+//! an unshaped large-message flow can congest it and cause drops or
+//! head-of-line blocking for a co-located tiny-message flow (Fig 9 / Fig
+//! 11a's live-migration interference).
+
+use crate::util::units::{Rate, Time};
+use std::collections::VecDeque;
+
+/// One Ethernet port with an RX buffer.
+#[derive(Debug)]
+pub struct NicPort {
+    rate: Rate,
+    /// RX buffer capacity in bytes.
+    rx_capacity: u64,
+    rx_buffered: u64,
+    rx_queue: VecDeque<Frame>,
+    /// Per-flow buffer quota in bytes (Arcus's per-flow SRAM queues +
+    /// backpressure: one flow's backlog cannot evict another's frames).
+    /// None = single shared FIFO budget (the baselines).
+    flow_quota: Option<u64>,
+    per_flow_bytes: std::collections::HashMap<usize, u64>,
+    /// Wire serialization horizon (frames arrive back-to-back at line rate).
+    wire_busy_until: Time,
+    /// TX wire horizon (independent full-duplex direction).
+    tx_busy_until: Time,
+    pub rx_dropped: u64,
+    pub rx_drop_bytes: u64,
+}
+
+/// A frame sitting in the RX buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Frame {
+    pub id: u64,
+    /// Source flow.
+    pub flow: usize,
+    pub bytes: u64,
+    /// Time fully received off the wire.
+    pub arrived: Time,
+}
+
+impl NicPort {
+    pub fn new(rate: Rate, rx_capacity: u64) -> Self {
+        NicPort {
+            rate,
+            rx_capacity,
+            rx_buffered: 0,
+            rx_queue: VecDeque::new(),
+            flow_quota: None,
+            per_flow_bytes: std::collections::HashMap::new(),
+            wire_busy_until: 0,
+            tx_busy_until: 0,
+            rx_dropped: 0,
+            rx_drop_bytes: 0,
+        }
+    }
+
+    /// The paper's ports: 50 Gbps, 512 KB RX buffer (typical FPGA MAC FIFO).
+    pub fn port_50g() -> Self {
+        NicPort::new(Rate::gbps(50.0), 512 * 1024)
+    }
+
+    pub fn rate(&self) -> Rate {
+        self.rate
+    }
+
+    /// Partition the buffer into per-flow quotas of `bytes` each.
+    pub fn set_flow_quota(&mut self, bytes: u64) {
+        self.flow_quota = Some(bytes);
+    }
+
+    /// A frame begins arriving at `now` (or when the wire frees up): wire
+    /// serialization only — returns the time the last bit lands. The caller
+    /// must call [`Self::rx_deliver`] at that time; the buffer-occupancy
+    /// decision belongs to delivery, not to the wire (a frame still on the
+    /// wire occupies no SRAM).
+    pub fn rx_begin(&mut self, now: Time, bytes: u64) -> Time {
+        // Ethernet overhead: preamble+SFD (8) + FCS (4) + IFG (12).
+        let wire_bytes = bytes + 24;
+        let start = now.max(self.wire_busy_until);
+        let done = start + self.rate.serialize_time(wire_bytes);
+        self.wire_busy_until = done;
+        done
+    }
+
+    /// Deliver a fully-received frame into the RX buffer at `arrived`;
+    /// returns false (and counts a drop) when the buffer — or, with
+    /// per-flow quotas, the flow's share of it — is full.
+    pub fn rx_deliver(&mut self, id: u64, flow: usize, bytes: u64, arrived: Time) -> bool {
+        let flow_ok = match self.flow_quota {
+            Some(q) => self.per_flow_bytes.get(&flow).copied().unwrap_or(0) + bytes <= q,
+            None => true,
+        };
+        if flow_ok && self.rx_buffered + bytes <= self.rx_capacity {
+            self.rx_buffered += bytes;
+            *self.per_flow_bytes.entry(flow).or_insert(0) += bytes;
+            self.rx_queue.push_back(Frame { id, flow, bytes, arrived });
+            true
+        } else {
+            self.rx_dropped += 1;
+            self.rx_drop_bytes += bytes;
+            false
+        }
+    }
+
+    /// Wire + immediate delivery (tests and senders that do not model the
+    /// in-flight gap): returns (arrival time, dropped).
+    pub fn rx_frame(&mut self, now: Time, id: u64, flow: usize, bytes: u64) -> (Time, bool) {
+        let done = self.rx_begin(now, bytes);
+        let dropped = !self.rx_deliver(id, flow, bytes, done);
+        (done, dropped)
+    }
+
+    /// Transmit a frame out the wire (TX direction, full duplex with RX):
+    /// returns the time the last bit leaves.
+    pub fn tx_frame(&mut self, now: Time, bytes: u64) -> Time {
+        let wire_bytes = bytes + 24;
+        let start = now.max(self.tx_busy_until);
+        let done = start + self.rate.serialize_time(wire_bytes);
+        self.tx_busy_until = done;
+        done
+    }
+
+    /// Pull-based drain (the Arcus interface fetches at its shaped pace):
+    /// pop the head frame if it has fully arrived by `now`.
+    pub fn rx_pull(&mut self, now: Time) -> Option<Frame> {
+        match self.rx_queue.front() {
+            Some(f) if f.arrived <= now => {
+                let f = *f;
+                self.rx_queue.pop_front();
+                self.rx_buffered -= f.bytes;
+                if let Some(b) = self.per_flow_bytes.get_mut(&f.flow) {
+                    *b -= f.bytes;
+                }
+                Some(f)
+            }
+            _ => None,
+        }
+    }
+
+    /// Peek the first fully-arrived frame belonging to `flow` without
+    /// popping it (the shaper decides on its size before the pull).
+    pub fn rx_flow_head(&self, now: Time, flow: usize) -> Option<Frame> {
+        self.rx_queue
+            .iter()
+            .find(|f| f.flow == flow && f.arrived <= now)
+            .copied()
+    }
+
+    /// Per-flow pull: pop the first fully-arrived frame belonging to `flow`
+    /// (the Arcus interface parses headers into per-flow SRAM queues; this
+    /// models that demux without a separate copy).
+    pub fn rx_pull_flow(&mut self, now: Time, flow: usize) -> Option<Frame> {
+        let idx = self
+            .rx_queue
+            .iter()
+            .position(|f| f.flow == flow && f.arrived <= now)?;
+        let f = self.rx_queue.remove(idx).unwrap();
+        self.rx_buffered -= f.bytes;
+        if let Some(b) = self.per_flow_bytes.get_mut(&f.flow) {
+            *b -= f.bytes;
+        }
+        Some(f)
+    }
+
+    /// Earliest arrival time among buffered frames of `flow`.
+    pub fn rx_flow_head_ready(&self, flow: usize) -> Option<Time> {
+        self.rx_queue
+            .iter()
+            .filter(|f| f.flow == flow)
+            .map(|f| f.arrived)
+            .min()
+    }
+
+    /// Buffered frame count for one flow.
+    pub fn rx_flow_depth(&self, flow: usize) -> usize {
+        self.rx_queue.iter().filter(|f| f.flow == flow).count()
+    }
+
+    /// Peek the FIFO head frame (single-ring interfaces drain in order —
+    /// the bypassed baseline's head-of-line blocking).
+    pub fn rx_head(&self) -> Option<Frame> {
+        self.rx_queue.front().copied()
+    }
+
+    /// Peek the head frame's arrival time (when a puller should wake).
+    pub fn rx_head_ready(&self) -> Option<Time> {
+        self.rx_queue.front().map(|f| f.arrived)
+    }
+
+    pub fn rx_buffered_bytes(&self) -> u64 {
+        self.rx_buffered
+    }
+
+    pub fn rx_depth(&self) -> usize {
+        self.rx_queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{MICROS, NANOS, SECONDS};
+
+    #[test]
+    fn wire_serialization_at_line_rate() {
+        let mut port = NicPort::port_50g();
+        // 1500 B + 24 overhead at 50 Gbps = 243.84 ns
+        let (done, _) = port.rx_frame(0, 0, 0, 1500);
+        assert_eq!(done, ((1524 * 8) as f64 / 50e9 * SECONDS as f64).ceil() as u64);
+        // Second frame queues behind the first on the wire.
+        let (done2, _) = port.rx_frame(0, 1, 0, 1500);
+        assert_eq!(done2, 2 * done);
+    }
+
+    #[test]
+    fn buffer_overflow_drops() {
+        let mut port = NicPort::new(Rate::gbps(50.0), 4096);
+        let mut t = 0;
+        for i in 0..10 {
+            t = port.rx_frame(t, i, 0, 1500).0;
+        }
+        // Nothing pulled: only 2 frames fit (3000 B ≤ 4096 < 4500).
+        assert_eq!(port.rx_depth(), 2);
+        assert_eq!(port.rx_dropped, 8);
+    }
+
+    #[test]
+    fn pull_respects_arrival_time() {
+        let mut port = NicPort::port_50g();
+        let (done, _) = port.rx_frame(0, 7, 1, 4096);
+        assert!(port.rx_pull(done - NANOS).is_none());
+        let f = port.rx_pull(done).unwrap();
+        assert_eq!(f.id, 7);
+        assert_eq!(f.flow, 1);
+        assert!(port.rx_pull(done).is_none());
+    }
+
+    #[test]
+    fn per_flow_quota_isolates_backlogs() {
+        let mut port = NicPort::new(Rate::gbps(50.0), 16 * 1024);
+        port.set_flow_quota(4096);
+        // Flow 0 floods: only its quota's worth is buffered.
+        let mut t = 0;
+        for i in 0..10 {
+            t = port.rx_frame(t, i, 0, 1500).0;
+        }
+        assert_eq!(port.rx_flow_depth(0), 2); // 3000 B ≤ 4096 < 4500
+        assert_eq!(port.rx_dropped, 8);
+        // Flow 1 still has room despite flow 0's backlog.
+        let (_, dropped) = port.rx_frame(t, 100, 1, 1500);
+        assert!(!dropped);
+        assert_eq!(port.rx_flow_depth(1), 1);
+        // Pulling flow 0 frees its quota.
+        let _ = port.rx_pull_flow(t + 1, 0).unwrap();
+        let (_, dropped) = port.rx_frame(t, 101, 0, 1500);
+        assert!(!dropped);
+    }
+
+    #[test]
+    fn fifo_head_vs_per_flow_pull() {
+        let mut port = NicPort::port_50g();
+        let (t1, _) = port.rx_frame(0, 0, 0, 1500);
+        let (t2, _) = port.rx_frame(0, 1, 1, 64);
+        // FIFO head is flow 0's frame; flow 1 cannot pull it via rx_pull.
+        assert_eq!(port.rx_head().unwrap().flow, 0);
+        // Per-flow pull (Arcus) reaches past the head.
+        let f = port.rx_pull_flow(t2, 1).unwrap();
+        assert_eq!(f.flow, 1);
+        // FIFO pull then yields flow 0.
+        assert_eq!(port.rx_pull(t1).unwrap().flow, 0);
+    }
+
+    #[test]
+    fn tx_is_full_duplex_with_rx() {
+        let mut port = NicPort::port_50g();
+        let (rx_done, _) = port.rx_frame(0, 0, 0, 1500);
+        let tx_done = port.tx_frame(0, 1500);
+        // Same serialization time, independent directions.
+        assert_eq!(rx_done, tx_done);
+        // Back-to-back TX queues on the TX horizon only.
+        let tx2 = port.tx_frame(0, 1500);
+        assert_eq!(tx2, 2 * tx_done);
+    }
+
+    #[test]
+    fn draining_frees_buffer_space() {
+        let mut port = NicPort::new(Rate::gbps(50.0), 3000);
+        let (t1, _) = port.rx_frame(0, 0, 0, 1500);
+        let _ = port.rx_frame(0, 1, 0, 1500);
+        assert_eq!(port.rx_buffered_bytes(), 3000);
+        let _ = port.rx_pull(t1).unwrap();
+        assert_eq!(port.rx_buffered_bytes(), 1500);
+        // Space for one more now.
+        let _ = port.rx_frame(10 * MICROS, 2, 0, 1500);
+        assert_eq!(port.rx_dropped, 0);
+    }
+}

@@ -1,0 +1,371 @@
+//! DMA operation layer over the duplex link: read round-trips, writes,
+//! outstanding-tag limits, and root-complex turnaround latency.
+//!
+//! A DMA **read** of S bytes from host memory (the accelerator fetching a
+//! payload) costs: one read-request TLP Up, root-complex turnaround, then
+//! ⌈S/MaxPayload⌉ completion TLPs Down. A DMA **write** (pushing results or
+//! inline RX data to the host) costs data TLPs Up. The asymmetry is the
+//! whole point: function-call-mode ingress loads the *Down* direction while
+//! everything else loads *Up*, which is why mixing paths recovers the
+//! full-duplex bandwidth (Fig 3f).
+//!
+//! Tag limit: real DMA engines support a bounded number of outstanding
+//! non-posted reads (we default to 32, typical for FPGA hard IP). When tags
+//! are exhausted further reads queue — the paper's "running out of PCIe
+//! credits" stall.
+
+use super::link::{Delivered, Dir, DuplexLink, LinkConfig};
+use crate::util::units::{Time, NANOS};
+use std::collections::{HashMap, VecDeque};
+
+/// Kind of a completed DMA operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    Read,
+    Write,
+}
+
+/// A completed DMA operation, surfaced to the simulation wiring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpComplete {
+    pub op: u64,
+    pub kind: OpKind,
+    pub at: Time,
+}
+
+/// Fabric configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct FabricConfig {
+    pub link: LinkConfig,
+    /// Outstanding read tags per source (DMA engine).
+    pub read_tags: usize,
+    /// Root-complex turnaround: request arrival → first completion queued.
+    pub rc_latency: Time,
+}
+
+impl FabricConfig {
+    pub fn gen3_x8() -> Self {
+        FabricConfig {
+            link: LinkConfig::gen3_x8(),
+            read_tags: 32,
+            rc_latency: 250 * NANOS, // typical host memory + RC pipeline
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct PendingRead {
+    op: u64,
+    bytes: u64,
+}
+
+/// Internal message-id namespace: reads use two link messages (request +
+/// completion), writes one. We tag the phase in the low bits.
+const PHASE_READ_REQ: u64 = 0;
+const PHASE_READ_DATA: u64 = 1;
+const PHASE_WRITE: u64 = 2;
+
+fn msg_id(op: u64, phase: u64) -> u64 {
+    op << 2 | phase
+}
+fn msg_op(msg: u64) -> u64 {
+    msg >> 2
+}
+fn msg_phase(msg: u64) -> u64 {
+    msg & 0b11
+}
+
+/// DMA fabric shared by all sources on one PCIe link.
+#[derive(Debug)]
+pub struct Fabric {
+    cfg: FabricConfig,
+    link: DuplexLink,
+    /// Per-source FIFO of reads waiting for a free tag.
+    read_waiting: Vec<VecDeque<PendingRead>>,
+    /// Per-source count of in-flight reads (tag usage).
+    read_inflight: Vec<usize>,
+    /// op → (source, bytes) for reads whose completions are pending.
+    read_ctx: HashMap<u64, (usize, u64)>,
+    /// Reads whose request TLP arrived; completion data queued after
+    /// rc_latency. (ready_time, op)
+    rc_pipe: VecDeque<(Time, u64)>,
+    /// Completions collected by pump.
+    done: Vec<OpComplete>,
+}
+
+impl Fabric {
+    pub fn new(cfg: FabricConfig, sources: usize) -> Self {
+        Fabric {
+            cfg,
+            link: DuplexLink::new(cfg.link, sources),
+            read_waiting: (0..sources).map(|_| VecDeque::new()).collect(),
+            read_inflight: vec![0; sources],
+            read_ctx: HashMap::new(),
+            rc_pipe: VecDeque::new(),
+            done: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &FabricConfig {
+        &self.cfg
+    }
+
+    pub fn link(&self) -> &DuplexLink {
+        &self.link
+    }
+
+    /// Issue a DMA read of `bytes` host-memory bytes for `source`.
+    pub fn read(&mut self, source: usize, bytes: u64, op: u64) {
+        debug_assert!(!self.read_ctx.contains_key(&op), "duplicate op id {op}");
+        if self.read_inflight[source] < self.cfg.read_tags {
+            self.start_read(source, bytes, op);
+        } else {
+            self.read_waiting[source].push_back(PendingRead { op, bytes });
+        }
+    }
+
+    fn start_read(&mut self, source: usize, bytes: u64, op: u64) {
+        self.read_inflight[source] += 1;
+        self.read_ctx.insert(op, (source, bytes));
+        self.link
+            .enqueue_read_req(Dir::Up, source, msg_id(op, PHASE_READ_REQ));
+    }
+
+    /// Issue a DMA write of `bytes` to host memory for `source`.
+    pub fn write(&mut self, source: usize, bytes: u64, op: u64) {
+        self.link
+            .enqueue_data(Dir::Up, source, bytes, msg_id(op, PHASE_WRITE));
+    }
+
+    /// Issue a host→device transfer (e.g. MMIO/descriptor push) — data TLPs
+    /// in the Down direction. Completion surfaces as a Write completion.
+    pub fn push_down(&mut self, source: usize, bytes: u64, op: u64) {
+        self.link
+            .enqueue_data(Dir::Down, source, bytes, msg_id(op, PHASE_WRITE));
+    }
+
+    fn handle_delivery(&mut self, d: Delivered) {
+        let op = msg_op(d.msg);
+        match msg_phase(d.msg) {
+            PHASE_READ_REQ => {
+                // Request reached the host; data flows back after RC latency.
+                self.rc_pipe.push_back((d.at + self.cfg.rc_latency, op));
+            }
+            PHASE_READ_DATA => {
+                let (source, _) = self.read_ctx.remove(&op).expect("unknown read op");
+                self.read_inflight[source] -= 1;
+                // A waiting read can now take the freed tag.
+                if let Some(next) = self.read_waiting[source].pop_front() {
+                    self.start_read(source, next.bytes, next.op);
+                }
+                self.done.push(OpComplete {
+                    op,
+                    kind: OpKind::Read,
+                    at: d.at,
+                });
+            }
+            PHASE_WRITE => {
+                self.done.push(OpComplete {
+                    op,
+                    kind: OpKind::Write,
+                    at: d.at,
+                });
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Advance everything to `now`; returns completed ops and the earliest
+    /// future time the fabric needs pumping again (None = fully idle).
+    pub fn pump(&mut self, now: Time) -> (Vec<OpComplete>, Option<Time>) {
+        // Iterate because link completions can enqueue new TLPs (rc_pipe →
+        // completion data) that may themselves complete by `now`.
+        loop {
+            let mut progressed = false;
+            for dir in [Dir::Up, Dir::Down] {
+                let (deliveries, _) = self.link.pump(now, dir);
+                for d in deliveries {
+                    progressed = true;
+                    self.handle_delivery(d);
+                }
+            }
+            // Release read completions whose RC latency has elapsed.
+            while let Some(&(ready, op)) = self.rc_pipe.front() {
+                if ready <= now {
+                    self.rc_pipe.pop_front();
+                    let (source, bytes) = self.read_ctx[&op];
+                    self.link.enqueue_data(
+                        Dir::Down,
+                        source,
+                        bytes,
+                        msg_id(op, PHASE_READ_DATA),
+                    );
+                    progressed = true;
+                } else {
+                    break;
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        // Next wake: earliest of in-flight TLP finishes and RC releases.
+        let mut next: Option<Time> = None;
+        for dir in [Dir::Up, Dir::Down] {
+            let (_, t) = self.link.pump(now, dir);
+            next = merge_min(next, t);
+        }
+        if let Some(&(ready, _)) = self.rc_pipe.front() {
+            next = merge_min(next, Some(ready));
+        }
+        (std::mem::take(&mut self.done), next)
+    }
+
+    /// True when no work is queued or in flight anywhere.
+    pub fn idle(&self) -> bool {
+        self.link.idle(Dir::Up)
+            && self.link.idle(Dir::Down)
+            && self.rc_pipe.is_empty()
+            && self.read_ctx.is_empty()
+    }
+}
+
+fn merge_min(a: Option<Time>, b: Option<Time>) -> Option<Time> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(x.min(y)),
+        (x, None) => x,
+        (None, y) => y,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{Rate, MICROS, SECONDS};
+
+    /// Drive the fabric to completion, returning all op completions.
+    fn drain(fab: &mut Fabric) -> Vec<OpComplete> {
+        let mut out = Vec::new();
+        let mut now = 0;
+        loop {
+            let (done, next) = fab.pump(now);
+            out.extend(done);
+            match next {
+                Some(t) => now = t.max(now + 1),
+                None => break,
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn read_round_trip_latency() {
+        let cfg = FabricConfig::gen3_x8();
+        let mut fab = Fabric::new(cfg, 1);
+        fab.read(0, 4096, 1);
+        let done = drain(&mut fab);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].kind, OpKind::Read);
+        // request (~28 B, floor-bound) + 250 ns RC + 16 completion TLPs.
+        let req = cfg.link.tlp_time(28);
+        let data = cfg.link.tlp_time(280) * 16;
+        let expect = req + cfg.rc_latency + data;
+        let got = done[0].at;
+        assert!(
+            (got as i64 - expect as i64).unsigned_abs() < 100,
+            "got={got} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn writes_only_load_up_direction() {
+        let mut fab = Fabric::new(FabricConfig::gen3_x8(), 1);
+        for i in 0..100 {
+            fab.write(0, 4096, i);
+        }
+        let done = drain(&mut fab);
+        assert_eq!(done.len(), 100);
+        assert_eq!(fab.link.bytes_serialized(Dir::Down), 0);
+        assert!(fab.link.bytes_serialized(Dir::Up) > 100 * 4096);
+    }
+
+    #[test]
+    fn reads_load_mostly_down_direction() {
+        let mut fab = Fabric::new(FabricConfig::gen3_x8(), 1);
+        for i in 0..100 {
+            fab.read(0, 4096, i);
+        }
+        let done = drain(&mut fab);
+        assert_eq!(done.len(), 100);
+        let up = fab.link.bytes_serialized(Dir::Up);
+        let down = fab.link.bytes_serialized(Dir::Down);
+        assert!(up < 100 * 64, "up={up} (requests only)");
+        assert!(down > 100 * 4096, "down={down} (completion data)");
+    }
+
+    #[test]
+    fn tag_limit_throttles_read_issue() {
+        let mut cfg = FabricConfig::gen3_x8();
+        cfg.read_tags = 2;
+        cfg.rc_latency = 10 * MICROS; // long RC latency exposes the limit
+        let mut fab = Fabric::new(cfg, 1);
+        for i in 0..8 {
+            fab.read(0, 256, i);
+        }
+        let done = drain(&mut fab);
+        assert_eq!(done.len(), 8);
+        // With 2 tags and 10us RC latency, 8 reads need ≥ 4 RC "generations":
+        // total time must exceed 3 full RC latencies.
+        assert!(
+            done.last().unwrap().at > 3 * 10 * MICROS,
+            "last={}",
+            done.last().unwrap().at
+        );
+    }
+
+    #[test]
+    fn duplex_reads_and_writes_overlap() {
+        // Same aggregate bytes, (a) all writes (Up only) vs (b) half reads +
+        // half writes (both directions): (b) finishes materially earlier.
+        let total_msgs = 400;
+        let mut all_writes = Fabric::new(FabricConfig::gen3_x8(), 2);
+        for i in 0..total_msgs {
+            all_writes.write(i as usize % 2, 4096, i);
+        }
+        let t_writes = drain(&mut all_writes).last().unwrap().at;
+
+        let mut mixed = Fabric::new(FabricConfig::gen3_x8(), 2);
+        for i in 0..total_msgs {
+            if i % 2 == 0 {
+                mixed.write(0, 4096, i);
+            } else {
+                mixed.read(1, 4096, i);
+            }
+        }
+        let t_mixed = drain(&mut mixed).last().unwrap().at;
+        assert!(
+            (t_mixed as f64) < 0.65 * t_writes as f64,
+            "mixed={t_mixed} writes={t_writes}"
+        );
+    }
+
+    #[test]
+    fn aggregate_read_bandwidth_near_line_rate() {
+        let cfg = FabricConfig::gen3_x8();
+        let mut fab = Fabric::new(cfg, 1);
+        let n: u64 = 2000;
+        for i in 0..n {
+            fab.read(0, 4096, i);
+        }
+        let done = drain(&mut fab);
+        let last = done.last().unwrap().at;
+        let goodput = Rate((n * 4096) as f64 * 8.0 * SECONDS as f64 / last as f64);
+        // Ceiling: 256 B payload per max(wire, TLP-floor) occupancy.
+        let ceiling = cfg.link.effective_payload_rate(4096).as_gbps();
+        assert!(
+            goodput.as_gbps() > 0.95 * ceiling,
+            "goodput={} ceiling={ceiling:.1}",
+            goodput
+        );
+    }
+}

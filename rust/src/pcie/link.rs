@@ -1,0 +1,376 @@
+//! Full-duplex PCIe link serializer with TLP splitting and per-TLP
+//! round-robin arbitration across sources.
+
+use crate::util::units::{Rate, Time};
+use std::collections::VecDeque;
+
+/// Transfer direction over the link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    /// Host → device (DMA read completions, MMIO writes, descriptors).
+    Down = 0,
+    /// Device → host (DMA writes, read requests, interrupts).
+    Up = 1,
+}
+
+/// Physical-layer configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkConfig {
+    /// Effective serialized rate per direction (after line coding).
+    pub rate: Rate,
+    /// MaxPayload per TLP (256 B on the paper's platform).
+    pub max_payload: u64,
+    /// Wire overhead per data TLP: TLP header + DLLP + framing.
+    pub tlp_overhead: u64,
+    /// Wire size of a read-request TLP (no payload).
+    pub read_req_bytes: u64,
+    /// Minimum per-TLP occupancy: root-complex / DMA-engine header
+    /// processing caps the TLP *rate* regardless of payload size — the
+    /// effect that makes 64 B traffic collapse over PCIe (Neugebauer et
+    /// al., SIGCOMM'18; the paper's "PCIe contention" references). 40 ns
+    /// ≈ 25 M TLP/s per direction, typical for Gen3-era root complexes.
+    pub min_tlp_time: Time,
+}
+
+impl LinkConfig {
+    /// The paper's platform: PCIe Gen 3.0 x8.
+    pub fn gen3_x8() -> Self {
+        LinkConfig {
+            rate: super::PcieGen::Gen3.link_rate(8),
+            max_payload: 256,
+            tlp_overhead: 24, // 4B framing + 2B seq + 12-16B header + 4B LCRC
+            read_req_bytes: 28,
+            min_tlp_time: 40_000, // 40 ns
+        }
+    }
+
+    /// Time one TLP of `wire_bytes` occupies the direction.
+    #[inline]
+    pub fn tlp_time(&self, wire_bytes: u64) -> Time {
+        self.rate.serialize_time(wire_bytes).max(self.min_tlp_time)
+    }
+
+    /// Sustainable payload bandwidth (bits/s) for messages of `msg_bytes`:
+    /// min(wire efficiency, TLP-rate ceiling). The capacity profiler uses
+    /// this as the per-direction communication budget.
+    pub fn effective_payload_rate(&self, msg_bytes: u64) -> Rate {
+        let msg_bytes = msg_bytes.max(1);
+        let full = msg_bytes / self.max_payload;
+        let tail = msg_bytes % self.max_payload;
+        let mut time = full * self.tlp_time(self.max_payload + self.tlp_overhead);
+        if tail > 0 {
+            time += self.tlp_time(tail + self.tlp_overhead);
+        }
+        Rate(msg_bytes as f64 * 8.0 / time as f64 * crate::util::units::SECONDS as f64)
+    }
+}
+
+/// One queued TLP.
+#[derive(Debug, Clone, Copy)]
+struct Tlp {
+    /// Wire bytes (payload + overhead).
+    wire_bytes: u64,
+    /// Opaque message id; the fabric maps these back to operations.
+    msg: u64,
+    /// TLPs remaining for this message *after* this one (0 = final).
+    last: bool,
+}
+
+/// Per-direction state: per-source FIFO queues + RR pointer + in-flight TLP.
+#[derive(Debug)]
+struct DirState {
+    queues: Vec<VecDeque<Tlp>>,
+    rr_next: usize,
+    /// Currently serializing TLP and its finish time.
+    current: Option<(Tlp, Time)>,
+    /// Total bytes ever serialized (utilization accounting).
+    bytes_serialized: u64,
+    busy_time: Time,
+}
+
+impl DirState {
+    fn new(sources: usize) -> Self {
+        DirState {
+            queues: (0..sources).map(|_| VecDeque::new()).collect(),
+            rr_next: 0,
+            current: None,
+            bytes_serialized: 0,
+            busy_time: 0,
+        }
+    }
+
+    fn queued(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Pick the next TLP by round-robin over non-empty source queues.
+    fn next_tlp(&mut self) -> Option<Tlp> {
+        let n = self.queues.len();
+        for i in 0..n {
+            let idx = (self.rr_next + i) % n;
+            if let Some(tlp) = self.queues[idx].pop_front() {
+                self.rr_next = (idx + 1) % n;
+                return Some(tlp);
+            }
+        }
+        None
+    }
+}
+
+/// Completed message notification from [`DuplexLink::pump`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Delivered {
+    pub msg: u64,
+    pub dir: Dir,
+    pub at: Time,
+}
+
+/// The full-duplex link. Owned by the fabric; pumped by the simulation.
+#[derive(Debug)]
+pub struct DuplexLink {
+    cfg: LinkConfig,
+    dirs: [DirState; 2],
+}
+
+impl DuplexLink {
+    pub fn new(cfg: LinkConfig, sources: usize) -> Self {
+        DuplexLink {
+            cfg,
+            dirs: [DirState::new(sources), DirState::new(sources)],
+        }
+    }
+
+    pub fn config(&self) -> &LinkConfig {
+        &self.cfg
+    }
+
+    /// Enqueue a data transfer of `payload_bytes` for message `msg` from
+    /// `source`; it is split into MaxPayload TLPs.
+    pub fn enqueue_data(&mut self, dir: Dir, source: usize, payload_bytes: u64, msg: u64) {
+        let d = &mut self.dirs[dir as usize];
+        let mut remaining = payload_bytes.max(1);
+        while remaining > 0 {
+            let chunk = remaining.min(self.cfg.max_payload);
+            remaining -= chunk;
+            d.queues[source].push_back(Tlp {
+                wire_bytes: chunk + self.cfg.tlp_overhead,
+                msg,
+                last: remaining == 0,
+            });
+        }
+    }
+
+    /// Enqueue a read-request TLP (no payload) for message `msg`.
+    pub fn enqueue_read_req(&mut self, dir: Dir, source: usize, msg: u64) {
+        let d = &mut self.dirs[dir as usize];
+        d.queues[source].push_back(Tlp {
+            wire_bytes: self.cfg.read_req_bytes,
+            msg,
+            last: true,
+        });
+    }
+
+    /// Advance the serializer at `now`: complete any due TLP, start the next
+    /// queued one. Returns messages whose final TLP finished, plus the next
+    /// time this direction needs pumping (None = idle).
+    pub fn pump(&mut self, now: Time, dir: Dir) -> (Vec<Delivered>, Option<Time>) {
+        let cfg = self.cfg;
+        let d = &mut self.dirs[dir as usize];
+        let mut done = Vec::new();
+        // Loop: multiple TLPs may have finished if pumping was lazy.
+        loop {
+            match d.current {
+                Some((tlp, fin)) if fin <= now => {
+                    d.current = None;
+                    d.bytes_serialized += tlp.wire_bytes;
+                    if tlp.last {
+                        done.push(Delivered {
+                            msg: tlp.msg,
+                            dir,
+                            at: fin,
+                        });
+                    }
+                    // fall through to start the next TLP at `fin`
+                    if let Some(next) = d.next_tlp() {
+                        let t = cfg.tlp_time(next.wire_bytes);
+                        d.busy_time += t;
+                        d.current = Some((next, fin + t));
+                    }
+                }
+                Some((_, fin)) => return (done, Some(fin)),
+                None => {
+                    match d.next_tlp() {
+                        Some(next) => {
+                            let t = cfg.tlp_time(next.wire_bytes);
+                            d.busy_time += t;
+                            d.current = Some((next, now + t));
+                        }
+                        None => return (done, None),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bytes serialized so far in a direction (wire bytes incl. overhead).
+    pub fn bytes_serialized(&self, dir: Dir) -> u64 {
+        self.dirs[dir as usize].bytes_serialized
+    }
+
+    /// Busy time accumulated in a direction.
+    pub fn busy_time(&self, dir: Dir) -> Time {
+        self.dirs[dir as usize].busy_time
+    }
+
+    /// Queued TLPs in a direction (diagnostics / backpressure).
+    pub fn queue_depth(&self, dir: Dir) -> usize {
+        self.dirs[dir as usize].queued()
+    }
+
+    /// True if a direction has nothing queued or in flight.
+    pub fn idle(&self, dir: Dir) -> bool {
+        let d = &self.dirs[dir as usize];
+        d.current.is_none() && d.queued() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{MICROS, SECONDS};
+
+    fn drain(link: &mut DuplexLink, dir: Dir) -> Vec<Delivered> {
+        let mut out = Vec::new();
+        let mut now = 0;
+        loop {
+            let (done, next) = link.pump(now, dir);
+            out.extend(done);
+            match next {
+                Some(t) => now = t,
+                None => break,
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn single_transfer_serialization_time() {
+        let mut link = DuplexLink::new(LinkConfig::gen3_x8(), 1);
+        link.enqueue_data(Dir::Up, 0, 4096, 1);
+        let done = drain(&mut link, Dir::Up);
+        assert_eq!(done.len(), 1);
+        // 4096 B = 16 TLPs of 256+24 B = 4480 wire bytes at ~63 Gbps.
+        let expect = LinkConfig::gen3_x8().tlp_time(280) * 16;
+        let got = done[0].at;
+        assert!(
+            (got as i64 - expect as i64).unsigned_abs() <= 16,
+            "got={got} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn directions_are_independent() {
+        let mut link = DuplexLink::new(LinkConfig::gen3_x8(), 1);
+        link.enqueue_data(Dir::Up, 0, 1_000_000, 1);
+        link.enqueue_data(Dir::Down, 0, 1_000_000, 2);
+        let up = drain(&mut link, Dir::Up);
+        let down = drain(&mut link, Dir::Down);
+        // Both complete in one direction's serialization time (full duplex).
+        assert_eq!(up.len(), 1);
+        assert_eq!(down.len(), 1);
+        let dt = (up[0].at as i64 - down[0].at as i64).unsigned_abs();
+        assert!(dt <= 16, "duplex skew {dt}");
+    }
+
+    #[test]
+    fn per_tlp_rr_gives_bandwidth_by_tlp_size() {
+        // Source 0 sends 4 KB messages (16 TLPs each), source 1 sends 64 B
+        // messages (1 TLP each). Per-TLP RR interleaves one TLP each, so
+        // byte share is (256+24):(64+24) ≈ 3.2:1 — the paper's ~4x
+        // same-path unfairness (CaseP_same_path).
+        let mut link = DuplexLink::new(LinkConfig::gen3_x8(), 2);
+        let n = 500;
+        for i in 0..n {
+            link.enqueue_data(Dir::Up, 0, 4096, i);
+        }
+        for i in 0..n * 64 {
+            link.enqueue_data(Dir::Up, 1, 64, 10_000 + i);
+        }
+        // Pump for a fixed window, then compare completed bytes.
+        let mut now = 0;
+        let horizon = 200 * MICROS;
+        let mut bytes = [0u64; 2];
+        loop {
+            let (done, next) = link.pump(now, Dir::Up);
+            for d in done {
+                if d.at > horizon {
+                    continue;
+                }
+                if d.msg < 10_000 {
+                    bytes[0] += 4096;
+                } else {
+                    bytes[1] += 64;
+                }
+            }
+            match next {
+                Some(t) if t <= horizon => now = t,
+                _ => break,
+            }
+        }
+        let ratio = bytes[0] as f64 / bytes[1] as f64;
+        assert!(
+            (2.5..5.0).contains(&ratio),
+            "large/small byte ratio {ratio:.2} (bytes {bytes:?})"
+        );
+    }
+
+    #[test]
+    fn aggregate_rate_matches_link_rate() {
+        let cfg = LinkConfig::gen3_x8();
+        let mut link = DuplexLink::new(cfg, 1);
+        let total: u64 = 10_000_000;
+        for i in 0..total / 4096 {
+            link.enqueue_data(Dir::Up, 0, 4096, i);
+        }
+        let done = drain(&mut link, Dir::Up);
+        let last = done.last().unwrap().at;
+        let goodput = (total as f64 * 8.0) * SECONDS as f64 / last as f64;
+        // Goodput = 256 B payload per max(wire time, TLP floor).
+        let expect = 256.0 * 8.0 / cfg.tlp_time(280) as f64 * SECONDS as f64;
+        assert!(
+            ((goodput - expect) / expect).abs() < 0.01,
+            "goodput={:.2}Gbps expect={:.2}Gbps",
+            goodput / 1e9,
+            expect / 1e9
+        );
+    }
+
+    #[test]
+    fn read_request_is_small() {
+        let mut link = DuplexLink::new(LinkConfig::gen3_x8(), 1);
+        link.enqueue_read_req(Dir::Up, 0, 7);
+        let done = drain(&mut link, Dir::Up);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].at, LinkConfig::gen3_x8().min_tlp_time); // floor-bound
+    }
+
+    #[test]
+    fn lazy_pumping_catches_up() {
+        // Start the pipe at t=0, then pump far in the future: all queued
+        // TLPs complete at their correct serialized times, not at `now`.
+        let mut link = DuplexLink::new(LinkConfig::gen3_x8(), 1);
+        for i in 0..10 {
+            link.enqueue_data(Dir::Up, 0, 256, i);
+        }
+        let (started, _) = link.pump(0, Dir::Up);
+        assert!(started.is_empty());
+        let (done, next) = link.pump(SECONDS, Dir::Up);
+        assert_eq!(done.len(), 10);
+        assert!(next.is_none());
+        // Completion stamps are increasing and spaced by one TLP time.
+        for w in done.windows(2) {
+            assert!(w[1].at > w[0].at);
+        }
+        assert!(done.last().unwrap().at < MICROS);
+    }
+}

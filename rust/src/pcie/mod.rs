@@ -1,0 +1,79 @@
+//! PCIe interconnect model.
+//!
+//! The paper's communication-induced SLO violations come from contention on
+//! "root complex, PCIe interconnects, buffers, and queues" — resources with
+//! no tenant-level isolation ("VMs' traffic is not isolated across PCIe
+//! lanes but allocated by credits"). This module models what matters for
+//! those effects at TLP granularity:
+//!
+//! - **Full-duplex serialization**: each direction (host→device "Down",
+//!   device→host "Up") is an independent serialized resource — the source of
+//!   the CaseP_same_path vs CaseP_multi_path gap (Fig 3f): same-path flows
+//!   fight over one direction while multi-path flows use both.
+//! - **TLP framing**: payloads split into MaxPayload-sized TLPs with header
+//!   overhead; DMA reads cost a request TLP one way plus completion TLPs
+//!   the other way, so "read-heavy" traffic loads both directions.
+//! - **Per-TLP round-robin arbitration** across requesters: hardware
+//!   arbiters are message-blind, so a 4 KB flow (16 TLPs/message) beats a
+//!   64 B flow (1 TLP/message) ~4× in bandwidth — the paper's observed
+//!   unfairness in CaseP_same_path.
+//! - **Outstanding-read tags and completion credits**: a bounded number of
+//!   in-flight DMA reads per engine (running out = the paper's "PCIe credit"
+//!   stall).
+//!
+//! [`fabric::Fabric`] exposes DMA read/write operations and is pumped by the
+//! simulation wiring; [`link::DuplexLink`] is the underlying serializer.
+
+pub mod fabric;
+pub mod link;
+
+pub use fabric::{Fabric, FabricConfig, OpKind};
+pub use link::{Dir, DuplexLink, LinkConfig};
+
+use crate::util::units::Rate;
+
+/// PCIe generation/width presets (effective data rate per direction after
+/// 128b/130b encoding; protocol overhead is modeled per-TLP, not here).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PcieGen {
+    Gen3,
+    Gen4,
+    Gen5,
+}
+
+impl PcieGen {
+    /// Per-lane effective rate.
+    pub fn lane_rate(self) -> Rate {
+        match self {
+            // 8 GT/s * 128/130
+            PcieGen::Gen3 => Rate::bits_per_sec(8e9 * 128.0 / 130.0),
+            PcieGen::Gen4 => Rate::bits_per_sec(16e9 * 128.0 / 130.0),
+            PcieGen::Gen5 => Rate::bits_per_sec(32e9 * 128.0 / 130.0),
+        }
+    }
+
+    /// Effective per-direction rate for an xN link.
+    pub fn link_rate(self, lanes: u32) -> Rate {
+        Rate(self.lane_rate().0 * lanes as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen3_x8_is_about_63gbps() {
+        let r = PcieGen::Gen3.link_rate(8);
+        assert!((r.as_gbps() - 63.0).abs() < 0.1, "rate={r}");
+    }
+
+    #[test]
+    fn gen_scaling() {
+        assert!(
+            (PcieGen::Gen4.link_rate(4).as_gbps() - PcieGen::Gen3.link_rate(8).as_gbps())
+                .abs()
+                < 0.01
+        );
+    }
+}

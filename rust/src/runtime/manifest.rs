@@ -1,0 +1,242 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt` in a simple line
+//! format (`name kind batch outputs`, `#` comments) so the Rust side needs
+//! no JSON dependency.
+
+use std::path::{Path, PathBuf};
+
+/// Which L2 entry point an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `encrypt_digest(payload, key, nonce, counters) -> (cipher, tag)`.
+    EncryptDigest,
+    /// `digest_only(payload, key) -> (tag,)`.
+    DigestOnly,
+    /// `checksum_block(payload) -> (sums,)`.
+    ChecksumBlock,
+    /// Grouped `encrypt_digest` over G requests (the dynamic batcher's
+    /// target): `(G,B,16) × (G,8) × (G,3) × (G,B) -> ((G,B,16), (G,16))`.
+    EncryptDigestMany,
+    /// Grouped checksum: `(G,B,16) -> ((G,2),)`.
+    ChecksumMany,
+}
+
+impl ArtifactKind {
+    pub fn by_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "encrypt_digest" => ArtifactKind::EncryptDigest,
+            "digest_only" => ArtifactKind::DigestOnly,
+            "checksum_block" => ArtifactKind::ChecksumBlock,
+            "encrypt_digest_many" => ArtifactKind::EncryptDigestMany,
+            "checksum_many" => ArtifactKind::ChecksumMany,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ArtifactKind::EncryptDigest => "encrypt_digest",
+            ArtifactKind::DigestOnly => "digest_only",
+            ArtifactKind::ChecksumBlock => "checksum_block",
+            ArtifactKind::EncryptDigestMany => "encrypt_digest_many",
+            ArtifactKind::ChecksumMany => "checksum_many",
+        }
+    }
+}
+
+/// One compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Request group size (1 for the ungrouped entries).
+    pub group: usize,
+    /// Compiled batch size in 64 B blocks per request.
+    pub batch: usize,
+    /// Number of tuple outputs.
+    pub outputs: usize,
+    /// Path to the HLO text file.
+    pub path: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 5 {
+                anyhow::bail!("manifest line {}: expected 5 fields, got {}", lineno + 1, f.len());
+            }
+            let kind = ArtifactKind::by_name(f[1])
+                .ok_or_else(|| anyhow::anyhow!("manifest line {}: unknown kind {}", lineno + 1, f[1]))?;
+            entries.push(ManifestEntry {
+                name: f[0].to_string(),
+                kind,
+                group: f[2].parse()?,
+                batch: f[3].parse()?,
+                outputs: f[4].parse()?,
+                path: dir.join(format!("{}.hlo.txt", f[0])),
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Compiled batch sizes for a kind, ascending.
+    pub fn batches(&self, kind: ArtifactKind) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| e.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Smallest compiled batch that fits `blocks`, or the largest batch if
+    /// none fits (the caller chunks).
+    pub fn pick_batch(&self, kind: ArtifactKind, blocks: usize) -> Option<usize> {
+        let batches = self.batches(kind);
+        batches
+            .iter()
+            .find(|&&b| b >= blocks)
+            .copied()
+            .or_else(|| batches.last().copied())
+    }
+
+    /// Available (group, batch) shapes for a grouped kind.
+    pub fn group_shapes(&self, kind: ArtifactKind) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| (e.group, e.batch))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Best (group, batch) for `n_requests` requests of at most `blocks`
+    /// blocks each: the smallest batch that fits the blocks, then the
+    /// smallest group that fits the request count (or the largest group if
+    /// none does — the caller splits the batch).
+    pub fn pick_group_shape(
+        &self,
+        kind: ArtifactKind,
+        blocks: usize,
+        n_requests: usize,
+    ) -> Option<(usize, usize)> {
+        let shapes = self.group_shapes(kind);
+        let fitting_batch = shapes
+            .iter()
+            .filter(|&&(_, b)| b >= blocks)
+            .map(|&(_, b)| b)
+            .min()
+            .or_else(|| shapes.iter().map(|&(_, b)| b).max())?;
+        let groups: Vec<usize> = shapes
+            .iter()
+            .filter(|&&(_, b)| b == fitting_batch)
+            .map(|&(g, _)| g)
+            .collect();
+        let group = groups
+            .iter()
+            .find(|&&g| g >= n_requests)
+            .or_else(|| groups.iter().max())
+            .copied()?;
+        Some((group, fitting_batch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# name kind group batch outputs
+encdig_b64 encrypt_digest 1 64 2
+encdig_b256 encrypt_digest 1 256 2
+checksum_b64 checksum_block 1 64 1
+encdig_g8_b16 encrypt_digest_many 8 16 2
+";
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert_eq!(m.entries.len(), 4);
+        assert_eq!(m.entries[0].kind, ArtifactKind::EncryptDigest);
+        assert_eq!(m.entries[0].group, 1);
+        assert_eq!(m.entries[0].batch, 64);
+        assert_eq!(m.entries[0].outputs, 2);
+        assert_eq!(m.entries[0].path, Path::new("/x/encdig_b64.hlo.txt"));
+        assert_eq!(m.entries[3].kind, ArtifactKind::EncryptDigestMany);
+        assert_eq!(m.entries[3].group, 8);
+    }
+
+    #[test]
+    fn pick_batch_prefers_smallest_fit() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert_eq!(m.pick_batch(ArtifactKind::EncryptDigest, 10), Some(64));
+        assert_eq!(m.pick_batch(ArtifactKind::EncryptDigest, 64), Some(64));
+        assert_eq!(m.pick_batch(ArtifactKind::EncryptDigest, 65), Some(256));
+        // Bigger than every compiled batch: take the largest (caller chunks).
+        assert_eq!(m.pick_batch(ArtifactKind::EncryptDigest, 5000), Some(256));
+        assert_eq!(m.pick_batch(ArtifactKind::DigestOnly, 1), None);
+    }
+
+    #[test]
+    fn group_shape_selection() {
+        let text = "\
+a encrypt_digest_many 8 16 2
+b encrypt_digest_many 32 16 2
+c encrypt_digest_many 8 64 2
+";
+        let m = Manifest::parse(text, Path::new("/x")).unwrap();
+        // 1 KB request (16 blocks), 5 requests → (8, 16).
+        assert_eq!(m.pick_group_shape(ArtifactKind::EncryptDigestMany, 16, 5), Some((8, 16)));
+        // 20 requests → (32, 16).
+        assert_eq!(m.pick_group_shape(ArtifactKind::EncryptDigestMany, 16, 20), Some((32, 16)));
+        // 100 requests: no group fits, take the largest (caller splits).
+        assert_eq!(m.pick_group_shape(ArtifactKind::EncryptDigestMany, 16, 100), Some((32, 16)));
+        // 4 KB request → the (8, 64) shape.
+        assert_eq!(m.pick_group_shape(ArtifactKind::EncryptDigestMany, 64, 3), Some((8, 64)));
+        // Oversized blocks: largest batch.
+        assert_eq!(m.pick_group_shape(ArtifactKind::EncryptDigestMany, 500, 3), Some((8, 64)));
+        assert_eq!(m.pick_group_shape(ArtifactKind::ChecksumMany, 16, 1), None);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("bogus line", Path::new("/x")).is_err());
+        assert!(Manifest::parse("a unknown_kind 1 64 1", Path::new("/x")).is_err());
+    }
+
+    #[test]
+    fn kind_name_roundtrip() {
+        for k in [
+            ArtifactKind::EncryptDigest,
+            ArtifactKind::DigestOnly,
+            ArtifactKind::ChecksumBlock,
+            ArtifactKind::EncryptDigestMany,
+            ArtifactKind::ChecksumMany,
+        ] {
+            assert_eq!(ArtifactKind::by_name(k.name()), Some(k));
+        }
+    }
+}

@@ -1,0 +1,500 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! Rust serving path.
+//!
+//! Python runs once (`make artifacts`); this module loads the HLO **text**
+//! each artifact was lowered to (`HloModuleProto::from_text_file` — the
+//! text parser reassigns the 64-bit instruction ids jax ≥ 0.5 emits, which
+//! xla_extension 0.5.1's proto path rejects), compiles one executable per
+//! (entry point, batch shape) on the PJRT CPU client, and exposes typed
+//! call wrappers. The serving hot path never touches Python.
+//!
+//! Payload layout matches the kernels: a message is padded to 64 B blocks
+//! and viewed as `blocks × 16` little-endian u32 words.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactKind, Manifest, ManifestEntry};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+/// A 64 B digest as 16 u32 lanes.
+pub type Digest = [u32; 16];
+
+/// PJRT executables for the artifacts in a directory, compiled lazily on
+/// first use (XLA compilation of the unrolled cipher takes seconds per
+/// batch shape; a serving process usually touches only a few shapes).
+///
+/// `PjRtClient` is `!Send` (PJRT handles are thread-affine in the `xla`
+/// crate), so a runtime lives on ONE thread — the server runs a dedicated
+/// engine thread that owns it and feeds it through channels
+/// (`crate::server::engine`).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    exes: RefCell<HashMap<(ArtifactKind, usize, usize), Rc<xla::PjRtLoadedExecutable>>>,
+    manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Open the artifact directory (expects `manifest.txt`). Compilation is
+    /// deferred to first use per (entry, batch); use [`Self::precompile`]
+    /// to front-load it.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime { client, exes: RefCell::new(HashMap::new()), manifest })
+    }
+
+    /// Compile every artifact now (server startup).
+    pub fn precompile(&self) -> Result<()> {
+        let entries = self.manifest.entries.clone();
+        for e in &entries {
+            let _ = self.exe(e.kind, e.group, e.batch)?;
+        }
+        Ok(())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of compiled executables so far.
+    pub fn n_executables(&self) -> usize {
+        self.exes.borrow().len()
+    }
+
+    fn exe(
+        &self,
+        kind: ArtifactKind,
+        group: usize,
+        batch: usize,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(&(kind, group, batch)) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .manifest
+            .entries
+            .iter()
+            .find(|e| e.kind == kind && e.group == group && e.batch == batch)
+            .with_context(|| {
+                format!("no artifact for {} group {group} batch {batch}", kind.name())
+            })?;
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing {}", entry.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", entry.name))?,
+        );
+        self.exes.borrow_mut().insert((kind, group, batch), exe.clone());
+        Ok(exe)
+    }
+
+    /// Largest compiled batch for a kind (per-call block capacity).
+    pub fn max_batch(&self, kind: ArtifactKind) -> usize {
+        self.manifest.batches(kind).last().copied().unwrap_or(0)
+    }
+
+    /// Pad `payload` (blocks × 16 words) up to `batch` rows of zeros.
+    fn pad(payload: &[u32], batch: usize) -> Vec<u32> {
+        debug_assert_eq!(payload.len() % 16, 0);
+        let mut v = Vec::with_capacity(batch * 16);
+        v.extend_from_slice(payload);
+        v.resize(batch * 16, 0);
+        v
+    }
+
+    /// Encrypt `payload` (len = 16·blocks) and MAC the ciphertext.
+    ///
+    /// Returns the ciphertext (same length) and the 64 B tag computed over
+    /// the *padded* batch (callers must use the same block count to verify).
+    /// Counter-mode involution: calling this again on the ciphertext with
+    /// the same key/nonce/counter returns the plaintext.
+    pub fn encrypt_digest(
+        &self,
+        payload: &[u32],
+        key: &[u32; 8],
+        nonce: &[u32; 3],
+        counter0: u32,
+    ) -> Result<(Vec<u32>, Digest)> {
+        let blocks = payload.len() / 16;
+        let batch = self
+            .manifest
+            .pick_batch(ArtifactKind::EncryptDigest, blocks)
+            .context("no encrypt_digest artifacts")?;
+        anyhow::ensure!(
+            blocks <= batch,
+            "payload of {blocks} blocks exceeds the largest compiled batch {batch}"
+        );
+        let exe = self.exe(ArtifactKind::EncryptDigest, 1, batch)?;
+        let padded = Self::pad(payload, batch);
+        let counters: Vec<u32> = (0..batch as u32).map(|i| counter0.wrapping_add(i)).collect();
+
+        let p = xla::Literal::vec1(&padded).reshape(&[batch as i64, 16])?;
+        let k = xla::Literal::vec1(&key[..]);
+        let n = xla::Literal::vec1(&nonce[..]);
+        let c = xla::Literal::vec1(&counters);
+        let result = exe.execute::<xla::Literal>(&[p, k, n, c])?[0][0].to_literal_sync()?;
+        let (cipher_lit, tag_lit) = result.to_tuple2()?;
+        let mut cipher = cipher_lit.to_vec::<u32>()?;
+        cipher.truncate(blocks * 16);
+        let tag_v = tag_lit.to_vec::<u32>()?;
+        let mut tag = [0u32; 16];
+        tag.copy_from_slice(&tag_v);
+        Ok((cipher, tag))
+    }
+
+    /// Keyed 64 B digest of `payload` (len = 16·blocks).
+    pub fn digest(&self, payload: &[u32], key: &[u32; 8]) -> Result<Digest> {
+        let blocks = payload.len() / 16;
+        let batch = self
+            .manifest
+            .pick_batch(ArtifactKind::DigestOnly, blocks)
+            .context("no digest artifacts")?;
+        anyhow::ensure!(
+            blocks <= batch,
+            "payload of {blocks} blocks exceeds the largest compiled batch {batch}"
+        );
+        let exe = self.exe(ArtifactKind::DigestOnly, 1, batch)?;
+        let padded = Self::pad(payload, batch);
+        let p = xla::Literal::vec1(&padded).reshape(&[batch as i64, 16])?;
+        let k = xla::Literal::vec1(&key[..]);
+        let result = exe.execute::<xla::Literal>(&[p, k])?[0][0].to_literal_sync()?;
+        let tag_lit = result.to_tuple1()?;
+        let tag_v = tag_lit.to_vec::<u32>()?;
+        let mut tag = [0u32; 16];
+        tag.copy_from_slice(&tag_v);
+        Ok(tag)
+    }
+
+    /// Fletcher checksum `(s1, s2)` of `payload` (len = 16·blocks).
+    ///
+    /// Payloads larger than the biggest compiled batch are chunked and the
+    /// partial sums combined exactly (see `combine` below): with chunk
+    /// weights `W_b - g` and the chunk placed at word offset `o` in a
+    /// message of `N` words, the global weight is
+    /// `(N - o - g) = (W_b - g) + (N - o - W_b)`, so
+    /// `s2 += s2_chunk + (N - o - W_b) · s1_chunk` (all wrapping).
+    pub fn checksum(&self, payload: &[u32]) -> Result<(u32, u32)> {
+        let blocks = payload.len() / 16;
+        let max = self.max_batch(ArtifactKind::ChecksumBlock);
+        anyhow::ensure!(max > 0, "no checksum artifacts");
+        let n_words = (blocks * 16) as u32;
+        let mut s1: u32 = 0;
+        let mut s2: u32 = 0;
+        let mut offset_words: u32 = 0;
+        for chunk in payload.chunks(max * 16) {
+            let chunk_blocks = chunk.len() / 16;
+            let batch = self
+                .manifest
+                .pick_batch(ArtifactKind::ChecksumBlock, chunk_blocks)
+                .unwrap();
+            let exe = self.exe(ArtifactKind::ChecksumBlock, 1, batch)?;
+            let padded = Self::pad(chunk, batch);
+            let p = xla::Literal::vec1(&padded).reshape(&[batch as i64, 16])?;
+            let result = exe.execute::<xla::Literal>(&[p])?[0][0].to_literal_sync()?;
+            let sums = result.to_tuple1()?.to_vec::<u32>()?;
+            let (c1, c2) = (sums[0], sums[1]);
+            let w_b = (batch * 16) as u32;
+            // Zero padding contributes nothing to either sum; only the
+            // weight base differs between the chunk and global frames.
+            let shift = n_words.wrapping_sub(offset_words).wrapping_sub(w_b);
+            s1 = s1.wrapping_add(c1);
+            s2 = s2.wrapping_add(c2.wrapping_add(shift.wrapping_mul(c1)));
+            offset_words += chunk.len() as u32;
+        }
+        Ok((s1, s2))
+    }
+}
+
+/// One request in a grouped `encrypt_digest_many` call.
+#[derive(Debug, Clone)]
+pub struct EncRequest {
+    /// Payload words (16 per 64 B block).
+    pub payload: Vec<u32>,
+    pub key: [u32; 8],
+    pub nonce: [u32; 3],
+    pub counter0: u32,
+}
+
+impl PjrtRuntime {
+    /// Grouped encrypt+MAC: runs up to `group` requests in one executable
+    /// call at the given (group, batch) shape (empty slots zero-padded).
+    /// Each request keeps its own key/nonce/counters and gets its own tag.
+    pub fn encrypt_digest_group(
+        &self,
+        reqs: &[EncRequest],
+        shape: (usize, usize),
+    ) -> Result<Vec<(Vec<u32>, Digest)>> {
+        let (group, batch) = shape;
+        anyhow::ensure!(reqs.len() <= group, "{} requests > group {group}", reqs.len());
+        for r in reqs {
+            anyhow::ensure!(
+                r.payload.len() <= batch * 16,
+                "request of {} words exceeds batch {batch}",
+                r.payload.len()
+            );
+        }
+        let exe = self.exe(ArtifactKind::EncryptDigestMany, group, batch)?;
+        let mut payloads = vec![0u32; group * batch * 16];
+        let mut keys = vec![0u32; group * 8];
+        let mut nonces = vec![0u32; group * 3];
+        let mut counters = vec![0u32; group * batch];
+        for (i, r) in reqs.iter().enumerate() {
+            payloads[i * batch * 16..i * batch * 16 + r.payload.len()]
+                .copy_from_slice(&r.payload);
+            keys[i * 8..(i + 1) * 8].copy_from_slice(&r.key);
+            nonces[i * 3..(i + 1) * 3].copy_from_slice(&r.nonce);
+            for (j, c) in counters[i * batch..(i + 1) * batch].iter_mut().enumerate() {
+                *c = r.counter0.wrapping_add(j as u32);
+            }
+        }
+        let p = xla::Literal::vec1(&payloads).reshape(&[group as i64, batch as i64, 16])?;
+        let k = xla::Literal::vec1(&keys).reshape(&[group as i64, 8])?;
+        let n = xla::Literal::vec1(&nonces).reshape(&[group as i64, 3])?;
+        let c = xla::Literal::vec1(&counters).reshape(&[group as i64, batch as i64])?;
+        let result = exe.execute::<xla::Literal>(&[p, k, n, c])?[0][0].to_literal_sync()?;
+        let (cipher_lit, tag_lit) = result.to_tuple2()?;
+        let ciphers = cipher_lit.to_vec::<u32>()?;
+        let tags = tag_lit.to_vec::<u32>()?;
+        Ok(reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let c = ciphers[i * batch * 16..i * batch * 16 + r.payload.len()].to_vec();
+                let mut t = [0u32; 16];
+                t.copy_from_slice(&tags[i * 16..(i + 1) * 16]);
+                (c, t)
+            })
+            .collect())
+    }
+
+    /// Grouped checksum at the given (group, batch) shape.
+    pub fn checksum_group(
+        &self,
+        payloads_in: &[Vec<u32>],
+        shape: (usize, usize),
+    ) -> Result<Vec<(u32, u32)>> {
+        let (group, batch) = shape;
+        anyhow::ensure!(payloads_in.len() <= group, "{} payloads > group {group}", payloads_in.len());
+        let exe = self.exe(ArtifactKind::ChecksumMany, group, batch)?;
+        let mut payloads = vec![0u32; group * batch * 16];
+        for (i, p) in payloads_in.iter().enumerate() {
+            anyhow::ensure!(p.len() <= batch * 16, "payload exceeds batch");
+            payloads[i * batch * 16..i * batch * 16 + p.len()].copy_from_slice(p);
+        }
+        let p = xla::Literal::vec1(&payloads).reshape(&[group as i64, batch as i64, 16])?;
+        let result = exe.execute::<xla::Literal>(&[p])?[0][0].to_literal_sync()?;
+        let sums = result.to_tuple1()?.to_vec::<u32>()?;
+        // The kernel weights positions against the padded batch width
+        // (W_b = batch·16); shift each slot's s2 back to its own length so
+        // grouped results equal the unpadded native checksum:
+        //   weight_true = n_i − g = (W_b − g) + (n_i − W_b).
+        let w_b = (batch * 16) as u32;
+        Ok(payloads_in
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let (s1, s2) = (sums[i * 2], sums[i * 2 + 1]);
+                let shift = (p.len() as u32).wrapping_sub(w_b);
+                (s1, s2.wrapping_add(shift.wrapping_mul(s1)))
+            })
+            .collect())
+    }
+}
+
+/// Native Rust Fletcher oracle (for tests and the CPU-baseline benches):
+/// must match the kernel bit-for-bit.
+pub fn fletcher_native(payload: &[u32]) -> (u32, u32) {
+    let n = payload.len() as u32;
+    let mut s1: u32 = 0;
+    let mut s2: u32 = 0;
+    for (i, &x) in payload.iter().enumerate() {
+        s1 = s1.wrapping_add(x);
+        s2 = s2.wrapping_add((n.wrapping_sub(i as u32)).wrapping_mul(x));
+    }
+    (s1, s2)
+}
+
+/// Pack raw bytes into the block layout (zero-padded 64 B blocks).
+pub fn pack_bytes(data: &[u8]) -> Vec<u32> {
+    let blocks = data.len().div_ceil(64).max(1);
+    let mut buf = vec![0u8; blocks * 64];
+    buf[..data.len()].copy_from_slice(data);
+    buf.chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Unpack the first `len` bytes from the block layout.
+pub fn unpack_bytes(words: &[u32], len: usize) -> Vec<u8> {
+    let mut out: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+    out.truncate(len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Executables compile lazily, so a per-test runtime only pays for the
+    /// batch shapes the test actually touches.
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(PjrtRuntime::load(&dir).expect("artifact load"))
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let data: Vec<u8> = (0..=255).collect();
+        let words = pack_bytes(&data);
+        assert_eq!(words.len() % 16, 0);
+        assert_eq!(unpack_bytes(&words, data.len()), data);
+    }
+
+    #[test]
+    fn fletcher_native_basic() {
+        assert_eq!(fletcher_native(&[0, 0, 0]), (0, 0));
+        // n=2: s1 = 3+5 = 8, s2 = 2*3 + 1*5 = 11.
+        assert_eq!(fletcher_native(&[3, 5]), (8, 11));
+    }
+
+    #[test]
+    fn artifacts_load_and_report() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.manifest().entries.len(), 15, "3 kinds × 3 batches + 2 grouped kinds × 3 shapes");
+        assert!(rt.platform().to_lowercase().contains("cpu"));
+        assert_eq!(rt.max_batch(ArtifactKind::EncryptDigest), 1024);
+    }
+
+    #[test]
+    fn encrypt_is_involution() {
+        let Some(rt) = runtime() else { return };
+        let payload = pack_bytes(b"the paper's dataplane protocol decouples PatternA from PatternA'");
+        let key = [1u32, 2, 3, 4, 5, 6, 7, 8];
+        let nonce = [9u32, 10, 11];
+        let (cipher, tag1) = rt.encrypt_digest(&payload, &key, &nonce, 100).unwrap();
+        assert_ne!(cipher, payload);
+        let (back, _) = rt.encrypt_digest(&cipher, &key, &nonce, 100).unwrap();
+        assert_eq!(back, payload);
+        // Tag is deterministic.
+        let (_, tag2) = rt.encrypt_digest(&payload, &key, &nonce, 100).unwrap();
+        assert_eq!(tag1, tag2);
+    }
+
+    #[test]
+    fn different_keys_different_ciphertexts() {
+        let Some(rt) = runtime() else { return };
+        let payload = pack_bytes(&[0xAB; 256]);
+        let nonce = [0u32, 0, 0];
+        let (c1, t1) = rt.encrypt_digest(&payload, &[1; 8], &nonce, 0).unwrap();
+        let (c2, t2) = rt.encrypt_digest(&payload, &[2; 8], &nonce, 0).unwrap();
+        assert_ne!(c1, c2);
+        assert_ne!(t1, t2);
+    }
+
+    #[test]
+    fn digest_avalanche() {
+        let Some(rt) = runtime() else { return };
+        let mut payload = pack_bytes(&[0x55; 512]);
+        let key = [7u32; 8];
+        let d1 = rt.digest(&payload, &key).unwrap();
+        payload[3] ^= 1;
+        let d2 = rt.digest(&payload, &key).unwrap();
+        assert_ne!(d1, d2);
+        // Roughly half the bits should flip (avalanche): sanity band.
+        let flipped: u32 = d1
+            .iter()
+            .zip(d2.iter())
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert!((128..=384).contains(&flipped), "flipped {flipped} of 512");
+    }
+
+    #[test]
+    fn checksum_matches_native_including_chunked() {
+        let Some(rt) = runtime() else { return };
+        // Small (one batch) and large (chunked beyond the 1024 max batch).
+        // 1500 and 3000 blocks exceed the 1024 max batch: chunked combine.
+        for blocks in [1usize, 64, 100, 129, 200, 1500, 3000] {
+            let payload: Vec<u32> = (0..blocks * 16).map(|i| (i as u32).wrapping_mul(0x9E37_79B9)).collect();
+            let (s1, s2) = rt.checksum(&payload).unwrap();
+            let (n1, n2) = fletcher_native(&payload);
+            assert_eq!((s1, s2), (n1, n2), "blocks={blocks}");
+        }
+    }
+
+    #[test]
+    fn grouped_encrypt_matches_involution_and_varies_per_slot() {
+        let Some(rt) = runtime() else { return };
+        let shape = rt.manifest().pick_group_shape(ArtifactKind::EncryptDigestMany, 16, 3).unwrap();
+        let reqs: Vec<EncRequest> = (0..3)
+            .map(|i| EncRequest {
+                payload: pack_bytes(&vec![i as u8 + 1; 700]),
+                key: [i as u32 + 1; 8],
+                nonce: [9, 9, 9],
+                counter0: i as u32 * 1000,
+            })
+            .collect();
+        let out = rt.encrypt_digest_group(&reqs, shape).unwrap();
+        assert_eq!(out.len(), 3);
+        // Distinct keys → distinct tags.
+        assert_ne!(out[0].1, out[1].1);
+        // Involution per slot.
+        let back: Vec<EncRequest> = reqs
+            .iter()
+            .zip(out.iter())
+            .map(|(r, (c, _))| EncRequest { payload: c.clone(), ..r.clone() })
+            .collect();
+        let out2 = rt.encrypt_digest_group(&back, shape).unwrap();
+        for (r, (p, _)) in reqs.iter().zip(out2.iter()) {
+            assert_eq!(&r.payload, p);
+        }
+    }
+
+    #[test]
+    fn grouped_checksum_matches_native_per_slot() {
+        let Some(rt) = runtime() else { return };
+        let shape = rt.manifest().pick_group_shape(ArtifactKind::ChecksumMany, 16, 4).unwrap();
+        let payloads: Vec<Vec<u32>> = (0..4u32)
+            .map(|i| (0..16 * 16).map(|j| i.wrapping_mul(77).wrapping_add(j)).collect())
+            .collect();
+        let sums = rt.checksum_group(&payloads, shape).unwrap();
+        for (p, &(s1, s2)) in payloads.iter().zip(sums.iter()) {
+            // Grouped results are shift-corrected to the unpadded length:
+            // they must equal the native oracle exactly.
+            assert_eq!((s1, s2), fletcher_native(p));
+        }
+    }
+
+    #[test]
+    fn padding_does_not_change_results() {
+        let Some(rt) = runtime() else { return };
+        // 10 blocks runs on the 64-batch executable; the 54 pad rows must
+        // not affect the ciphertext of the 10 real rows.
+        let payload = pack_bytes(&[0x42; 640]);
+        let key = [3u32; 8];
+        let nonce = [1u32, 2, 3];
+        let (cipher, _) = rt.encrypt_digest(&payload, &key, &nonce, 0).unwrap();
+        assert_eq!(cipher.len(), payload.len());
+        let (back, _) = rt.encrypt_digest(&cipher, &key, &nonce, 0).unwrap();
+        assert_eq!(back, payload);
+    }
+}

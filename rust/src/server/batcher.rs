@@ -1,0 +1,139 @@
+//! Dynamic batcher: stage admitted requests per (work kind, block class)
+//! and flush a group when it fills or its oldest member exceeds the batch
+//! timeout — the classic serving trade between throughput (bigger groups
+//! amortize dispatch) and latency (don't hold a lone request hostage).
+
+use std::time::{Duration, Instant};
+
+use crate::runtime::ArtifactKind;
+
+/// Work classes the server batches (grouped artifacts exist for these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkKind {
+    EncryptDigest,
+    Checksum,
+}
+
+impl WorkKind {
+    pub fn grouped_artifact(self) -> ArtifactKind {
+        match self {
+            WorkKind::EncryptDigest => ArtifactKind::EncryptDigestMany,
+            WorkKind::Checksum => ArtifactKind::ChecksumMany,
+        }
+    }
+}
+
+/// A staged request (opaque ticket + the shape-relevant facts).
+#[derive(Debug)]
+pub struct Staged<T> {
+    pub ticket: T,
+    pub blocks: usize,
+    pub staged_at: Instant,
+}
+
+/// One batch class: requests whose padded size fits `batch` blocks.
+#[derive(Debug)]
+pub struct BatchClass<T> {
+    pub kind: WorkKind,
+    /// Blocks per request slot.
+    pub batch: usize,
+    /// Requests per executable call.
+    pub group: usize,
+    staged: Vec<Staged<T>>,
+}
+
+impl<T> BatchClass<T> {
+    pub fn new(kind: WorkKind, group: usize, batch: usize) -> Self {
+        BatchClass { kind, batch, group, staged: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.staged.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.staged.is_empty()
+    }
+
+    /// Does a request of `blocks` belong to this class?
+    pub fn fits(&self, blocks: usize) -> bool {
+        blocks <= self.batch
+    }
+
+    pub fn stage(&mut self, ticket: T, blocks: usize, now: Instant) {
+        debug_assert!(self.fits(blocks));
+        self.staged.push(Staged { ticket, blocks, staged_at: now });
+    }
+
+    /// Time the oldest staged request has waited.
+    pub fn oldest_age(&self, now: Instant) -> Option<Duration> {
+        self.staged.first().map(|s| now.duration_since(s.staged_at))
+    }
+
+    /// Flush decision: full group, or timeout expired on the oldest.
+    pub fn should_flush(&self, now: Instant, timeout: Duration) -> bool {
+        self.staged.len() >= self.group
+            || self.oldest_age(now).map(|a| a >= timeout).unwrap_or(false)
+    }
+
+    /// Take up to one group's worth of staged requests (FIFO).
+    pub fn take_group(&mut self) -> Vec<Staged<T>> {
+        let n = self.staged.len().min(self.group);
+        self.staged.drain(..n).collect()
+    }
+
+    /// Deadline at which the current oldest request must flush.
+    pub fn flush_deadline(&self, timeout: Duration) -> Option<Instant> {
+        self.staged.first().map(|s| s.staged_at + timeout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_on_full_group() {
+        let now = Instant::now();
+        let mut c: BatchClass<u32> = BatchClass::new(WorkKind::Checksum, 4, 16);
+        for i in 0..3 {
+            c.stage(i, 10, now);
+            assert!(!c.should_flush(now, Duration::from_millis(1)));
+        }
+        c.stage(3, 10, now);
+        assert!(c.should_flush(now, Duration::from_millis(1)));
+        let g = c.take_group();
+        assert_eq!(g.len(), 4);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let now = Instant::now();
+        let mut c: BatchClass<u32> = BatchClass::new(WorkKind::Checksum, 8, 16);
+        c.stage(0, 16, now);
+        let timeout = Duration::from_micros(200);
+        assert!(!c.should_flush(now, timeout));
+        assert!(c.should_flush(now + Duration::from_micros(300), timeout));
+        assert_eq!(c.flush_deadline(timeout), Some(now + timeout));
+    }
+
+    #[test]
+    fn take_group_is_fifo_and_partial() {
+        let now = Instant::now();
+        let mut c: BatchClass<u32> = BatchClass::new(WorkKind::EncryptDigest, 2, 64);
+        for i in 0..5 {
+            c.stage(i, 1, now);
+        }
+        assert_eq!(c.take_group().iter().map(|s| s.ticket).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(c.take_group().iter().map(|s| s.ticket).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(c.take_group().len(), 1);
+        assert!(c.take_group().is_empty());
+    }
+
+    #[test]
+    fn fits_respects_batch() {
+        let c: BatchClass<u32> = BatchClass::new(WorkKind::Checksum, 8, 16);
+        assert!(c.fits(16));
+        assert!(!c.fits(17));
+    }
+}

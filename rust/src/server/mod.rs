@@ -1,0 +1,728 @@
+//! The Arcus serving runtime: a real (wall-clock) server that shapes,
+//! batches, and executes accelerator requests through PJRT.
+//!
+//! This is the paper's architecture on the serving path instead of the
+//! simulator: tenants submit requests; a per-tenant **wall-clock token
+//! bucket** (provider-programmed, `set_tenant_rate` = the MMIO register
+//! write) gates admission; a **dynamic batcher** packs admitted requests of
+//! the same work class into grouped executable calls; a single **engine
+//! thread** owns the `PjrtRuntime` (PJRT handles are thread-affine) and
+//! runs the compiled kernels. Python never runs here.
+//!
+//! ```text
+//! submit() ─→ tenant queues ─(token buckets)─→ batch classes ─→ PJRT engine
+//!                    ▲ control plane: set_tenant_rate()            │
+//!                    └── responses (per-request channel) ←─────────┘
+//! ```
+
+pub mod batcher;
+pub mod wallclock;
+
+pub use batcher::WorkKind;
+pub use wallclock::WallBucket;
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::metrics::Histogram;
+use crate::runtime::{pack_bytes, unpack_bytes, Digest, EncRequest, PjrtRuntime};
+use batcher::BatchClass;
+
+/// One tenant's static configuration.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Shaped rate in bytes/sec (None = unshaped / best effort).
+    pub rate_bytes_per_sec: Option<f64>,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifacts_dir: PathBuf,
+    pub tenants: Vec<TenantSpec>,
+    /// Max time a staged request waits for its group to fill.
+    pub batch_timeout: Duration,
+    /// Per-tenant queue capacity (requests beyond are rejected).
+    pub queue_cap: usize,
+}
+
+impl ServerConfig {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Self {
+        ServerConfig {
+            artifacts_dir: artifacts_dir.into(),
+            tenants: Vec::new(),
+            batch_timeout: Duration::from_micros(200),
+            queue_cap: 4096,
+        }
+    }
+
+    pub fn tenant(mut self, name: &str, rate_bytes_per_sec: Option<f64>) -> Self {
+        self.tenants.push(TenantSpec { name: name.into(), rate_bytes_per_sec });
+        self
+    }
+
+    pub fn with_queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap;
+        self
+    }
+}
+
+/// A request body.
+#[derive(Debug, Clone)]
+pub enum Work {
+    /// Encrypt + MAC `data` with the tenant's key material.
+    EncryptDigest { data: Vec<u8>, key: [u32; 8], nonce: [u32; 3], counter0: u32 },
+    /// Checksum `data`.
+    Checksum { data: Vec<u8> },
+}
+
+impl Work {
+    fn kind(&self) -> WorkKind {
+        match self {
+            Work::EncryptDigest { .. } => WorkKind::EncryptDigest,
+            Work::Checksum { .. } => WorkKind::Checksum,
+        }
+    }
+    fn data_len(&self) -> usize {
+        match self {
+            Work::EncryptDigest { data, .. } | Work::Checksum { data } => data.len(),
+        }
+    }
+}
+
+/// A completed request.
+#[derive(Debug)]
+pub enum Output {
+    Encrypted { cipher: Vec<u8>, tag: Digest },
+    Checksum { s1: u32, s2: u32 },
+    /// Rejected before execution (queue overflow or shutdown).
+    Rejected(&'static str),
+}
+
+/// Response with timing breakdown.
+#[derive(Debug)]
+pub struct Response {
+    pub tenant: usize,
+    pub output: Output,
+    /// submit → response.
+    pub latency: Duration,
+    /// Bytes of request payload.
+    pub bytes: usize,
+}
+
+struct Pending {
+    work: Work,
+    tx: mpsc::Sender<Response>,
+    tenant: usize,
+    submitted: Instant,
+}
+
+#[derive(Default)]
+struct Inner {
+    queues: Vec<VecDeque<Pending>>,
+    /// Pending rate changes: (tenant, bytes/sec or None).
+    rate_updates: Vec<(usize, Option<f64>)>,
+    shutdown: bool,
+}
+
+/// Per-tenant serving statistics.
+#[derive(Debug, Clone, Default)]
+pub struct TenantStats {
+    pub completed: u64,
+    pub rejected: u64,
+    pub bytes: u64,
+    /// Latency histogram in nanoseconds.
+    pub latency_ns: Histogram,
+    pub first: Option<Instant>,
+    pub last: Option<Instant>,
+}
+
+impl TenantStats {
+    /// Sustained goodput over the active window (bytes/sec).
+    pub fn goodput(&self) -> f64 {
+        match (self.first, self.last) {
+            (Some(a), Some(b)) if b > a => self.bytes as f64 / (b - a).as_secs_f64(),
+            _ => 0.0,
+        }
+    }
+}
+
+/// Aggregate server statistics snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct StatsSnapshot {
+    pub tenants: Vec<TenantStats>,
+    pub batches: u64,
+    pub batched_requests: u64,
+}
+
+impl StatsSnapshot {
+    /// Mean requests per executable call.
+    pub fn mean_group_fill(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// The server handle. Dropping it (or calling [`Server::shutdown`]) stops
+/// the engine thread.
+pub struct Server {
+    shared: Arc<(Mutex<Inner>, Condvar)>,
+    stats: Arc<Mutex<StatsSnapshot>>,
+    inflight: Arc<AtomicU64>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    n_tenants: usize,
+    queue_cap: usize,
+}
+
+impl Server {
+    /// Start the engine thread (compiles artifacts lazily on it).
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let n = cfg.tenants.len();
+        let shared = Arc::new((
+            Mutex::new(Inner {
+                queues: (0..n).map(|_| VecDeque::new()).collect(),
+                rate_updates: Vec::new(),
+                shutdown: false,
+            }),
+            Condvar::new(),
+        ));
+        let stats = Arc::new(Mutex::new(StatsSnapshot {
+            tenants: vec![TenantStats::default(); n],
+            ..Default::default()
+        }));
+        let inflight = Arc::new(AtomicU64::new(0));
+
+        // Fail fast on a missing manifest before spawning.
+        anyhow::ensure!(
+            cfg.artifacts_dir.join("manifest.txt").exists(),
+            "no artifacts at {} — run `make artifacts`",
+            cfg.artifacts_dir.display()
+        );
+
+        let queue_cap = cfg.queue_cap;
+        let worker = {
+            let shared = shared.clone();
+            let stats = stats.clone();
+            let inflight = inflight.clone();
+            std::thread::Builder::new()
+                .name("arcus-engine".into())
+                .spawn(move || engine_main(cfg, shared, stats, inflight))?
+        };
+        Ok(Server { shared, stats, inflight, worker: Some(worker), n_tenants: n, queue_cap })
+    }
+
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(&self, tenant: usize, work: Work) -> mpsc::Receiver<Response> {
+        assert!(tenant < self.n_tenants, "unknown tenant {tenant}");
+        let (tx, rx) = mpsc::channel();
+        let (lock, cv) = &*self.shared;
+        let mut inner = lock.lock().unwrap();
+        let pending = Pending { work, tx, tenant, submitted: Instant::now() };
+        if inner.shutdown {
+            respond_rejected(pending, "shutdown");
+        } else if inner.queues[tenant].len() >= self.queue_cap {
+            respond_rejected(pending, "queue full");
+        } else {
+            self.inflight.fetch_add(1, Ordering::Relaxed);
+            inner.queues[tenant].push_back(pending);
+            cv.notify_one();
+        }
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn submit_blocking(&self, tenant: usize, work: Work) -> Response {
+        self.submit(tenant, work).recv().expect("engine thread died")
+    }
+
+    /// Reprogram a tenant's shaping rate (the control plane's register
+    /// write; takes effect on the next worker iteration).
+    pub fn set_tenant_rate(&self, tenant: usize, rate_bytes_per_sec: Option<f64>) {
+        let (lock, cv) = &*self.shared;
+        let mut inner = lock.lock().unwrap();
+        inner.rate_updates.push((tenant, rate_bytes_per_sec));
+        cv.notify_one();
+    }
+
+    /// Requests accepted but not yet answered.
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        {
+            let (lock, cv) = &*self.shared;
+            lock.lock().unwrap().shutdown = true;
+            cv.notify_all();
+        }
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn respond_rejected(p: Pending, why: &'static str) {
+    let _ = p.tx.send(Response {
+        tenant: p.tenant,
+        output: Output::Rejected(why),
+        latency: p.submitted.elapsed(),
+        bytes: 0,
+    });
+}
+
+/// A request admitted past its tenant's shaper, staged for batching.
+struct Ticket {
+    pending: Pending,
+    payload: Vec<u32>,
+}
+
+/// The engine thread: shaping, batching, execution.
+fn engine_main(
+    cfg: ServerConfig,
+    shared: Arc<(Mutex<Inner>, Condvar)>,
+    stats: Arc<Mutex<StatsSnapshot>>,
+    inflight: Arc<AtomicU64>,
+) {
+    let rt = match PjrtRuntime::load(&cfg.artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("arcus-engine: failed to load artifacts: {e:#}");
+            // Drain everything with rejections until shutdown.
+            let (lock, _) = &*shared;
+            let mut inner = lock.lock().unwrap();
+            inner.shutdown = true;
+            for q in &mut inner.queues {
+                while let Some(p) = q.pop_front() {
+                    respond_rejected(p, "artifact load failed");
+                }
+            }
+            return;
+        }
+    };
+
+    let mut shapers: Vec<Option<WallBucket>> = cfg
+        .tenants
+        .iter()
+        .map(|t| t.rate_bytes_per_sec.map(WallBucket::for_rate))
+        .collect();
+
+    // One staging class per (kind, batch size), with capacity = the LARGEST
+    // compiled group for that batch; the executable shape is picked at
+    // flush time to fit the actual group (a 5-request flush runs on the
+    // 8-slot executable, a 100-request burst on the 128-slot one).
+    let mut classes: Vec<BatchClass<Ticket>> = Vec::new();
+    for kind in [WorkKind::EncryptDigest, WorkKind::Checksum] {
+        let mut by_batch: std::collections::HashMap<usize, usize> = Default::default();
+        for (group, batch) in rt.manifest().group_shapes(kind.grouped_artifact()) {
+            let g = by_batch.entry(batch).or_insert(0);
+            *g = (*g).max(group);
+        }
+        for (batch, group) in by_batch {
+            classes.push(BatchClass::new(kind, group, batch));
+        }
+    }
+    classes.sort_by_key(|c| c.batch);
+
+    let mut rr_next = 0usize; // round-robin pointer over tenants
+    loop {
+        // -- 1. Pull work from tenant queues through the shapers. ---------
+        let mut earliest_retry: Option<Duration> = None;
+        let mut admitted: Vec<Ticket> = Vec::new();
+        let shutdown;
+        {
+            let (lock, _) = &*shared;
+            let mut inner = lock.lock().unwrap();
+            shutdown = inner.shutdown;
+            for (tenant, rate) in inner.rate_updates.drain(..) {
+                shapers[tenant] = rate.map(WallBucket::for_rate);
+            }
+            let n = inner.queues.len().max(1);
+            for i in 0..n {
+                let t = (rr_next + i) % n;
+                loop {
+                    let Some(front) = inner.queues[t].front() else { break };
+                    let cost = front.work.data_len() as u64;
+                    match shapers[t].as_mut().map(|s| s.try_acquire(cost)) {
+                        Some(Err(wait)) => {
+                            earliest_retry = Some(match earliest_retry {
+                                Some(w) => w.min(wait),
+                                None => wait,
+                            });
+                            break;
+                        }
+                        _ => {
+                            let p = inner.queues[t].pop_front().unwrap();
+                            let payload = match &p.work {
+                                Work::EncryptDigest { data, .. } | Work::Checksum { data } => {
+                                    pack_bytes(data)
+                                }
+                            };
+                            admitted.push(Ticket { pending: p, payload });
+                        }
+                    }
+                }
+            }
+            rr_next = (rr_next + 1) % n;
+        }
+
+        // -- 2. Stage admitted requests into batch classes. ---------------
+        let now = Instant::now();
+        for ticket in admitted {
+            let kind = ticket.pending.work.kind();
+            let blocks = ticket.payload.len() / 16;
+            let class = classes
+                .iter_mut()
+                .filter(|c| c.kind == kind)
+                .find(|c| c.fits(blocks));
+            match class {
+                Some(c) => c.stage(ticket, blocks, now),
+                None => {
+                    // Bigger than every grouped shape: execute singly.
+                    execute_single(&rt, ticket, &stats, &inflight);
+                }
+            }
+        }
+
+        // -- 3. Flush ready classes. A partial group also flushes when no
+        //       more work is queued (idle flush) — but only after a short
+        //       grace period, so a burst mid-submission still coalesces
+        //       into full groups while a lone sequential request pays tens
+        //       of microseconds instead of the full batch timeout.
+        let queues_empty = {
+            let (lock, _) = &*shared;
+            let inner = lock.lock().unwrap();
+            inner.queues.iter().all(|q| q.is_empty())
+        };
+        let grace = cfg.batch_timeout / 2;
+        let now = Instant::now();
+        let mut flushed_any = false;
+        for c in classes.iter_mut() {
+            while c.should_flush(now, cfg.batch_timeout)
+                || (queues_empty
+                    && c.oldest_age(now).map(|a| a >= grace).unwrap_or(false))
+            {
+                let group = c.take_group();
+                if group.is_empty() {
+                    break;
+                }
+                flushed_any = true;
+                let shape = rt
+                    .manifest()
+                    .pick_group_shape(c.kind.grouped_artifact(), c.batch, group.len())
+                    .expect("grouped artifact exists");
+                execute_group(&rt, c.kind, shape, group, &stats, &inflight);
+            }
+        }
+        if flushed_any {
+            continue; // new capacity may admit more work immediately
+        }
+
+        if shutdown {
+            // Reject whatever is left and exit.
+            let (lock, _) = &*shared;
+            let mut inner = lock.lock().unwrap();
+            for q in &mut inner.queues {
+                while let Some(p) = q.pop_front() {
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                    respond_rejected(p, "shutdown");
+                }
+            }
+            for c in classes.iter_mut() {
+                for s in c.take_group() {
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                    respond_rejected(s.ticket.pending, "shutdown");
+                }
+            }
+            return;
+        }
+
+        // -- 4. Sleep until the next deadline (shaper retry or batch
+        //       timeout), or a submitter wakes us. -------------------------
+        let now = Instant::now();
+        let mut wait = earliest_retry.unwrap_or(Duration::from_millis(5));
+        let deadline_window = if queues_empty { grace } else { cfg.batch_timeout };
+        for c in &classes {
+            if let Some(d) = c.flush_deadline(deadline_window) {
+                wait = wait.min(d.saturating_duration_since(now));
+            }
+        }
+        let (lock, cv) = &*shared;
+        let inner = lock.lock().unwrap();
+        if !inner.shutdown && inner.queues.iter().all(|q| q.is_empty()) || !wait.is_zero() {
+            let _ = cv
+                .wait_timeout(inner, wait.max(Duration::from_micros(10)))
+                .unwrap();
+        }
+    }
+}
+
+fn record_response(
+    stats: &Arc<Mutex<StatsSnapshot>>,
+    inflight: &Arc<AtomicU64>,
+    pending: Pending,
+    output: Output,
+    bytes: usize,
+) {
+    let now = Instant::now();
+    let latency = now.duration_since(pending.submitted);
+    {
+        let mut s = stats.lock().unwrap();
+        let t = &mut s.tenants[pending.tenant];
+        match output {
+            Output::Rejected(_) => t.rejected += 1,
+            _ => {
+                t.completed += 1;
+                t.bytes += bytes as u64;
+                t.latency_ns.record(latency.as_nanos() as u64);
+                if t.first.is_none() {
+                    t.first = Some(now);
+                }
+                t.last = Some(now);
+            }
+        }
+    }
+    inflight.fetch_sub(1, Ordering::Relaxed);
+    let _ = pending.tx.send(Response { tenant: pending.tenant, output, latency, bytes });
+}
+
+fn execute_group(
+    rt: &PjrtRuntime,
+    kind: WorkKind,
+    shape: (usize, usize),
+    group: Vec<batcher::Staged<Ticket>>,
+    stats: &Arc<Mutex<StatsSnapshot>>,
+    inflight: &Arc<AtomicU64>,
+) {
+    {
+        let mut s = stats.lock().unwrap();
+        s.batches += 1;
+        s.batched_requests += group.len() as u64;
+    }
+    match kind {
+        WorkKind::EncryptDigest => {
+            let reqs: Vec<EncRequest> = group
+                .iter()
+                .map(|s| {
+                    let Work::EncryptDigest { key, nonce, counter0, .. } =
+                        &s.ticket.pending.work
+                    else {
+                        unreachable!()
+                    };
+                    EncRequest {
+                        payload: s.ticket.payload.clone(),
+                        key: *key,
+                        nonce: *nonce,
+                        counter0: *counter0,
+                    }
+                })
+                .collect();
+            match rt.encrypt_digest_group(&reqs, shape) {
+                Ok(outs) => {
+                    for (staged, (cipher, tag)) in group.into_iter().zip(outs) {
+                        let len = staged.ticket.pending.work.data_len();
+                        let bytes = unpack_bytes(&cipher, len);
+                        record_response(
+                            stats,
+                            inflight,
+                            staged.ticket.pending,
+                            Output::Encrypted { cipher: bytes, tag },
+                            len,
+                        );
+                    }
+                }
+                Err(e) => reject_group(group, stats, inflight, e),
+            }
+        }
+        WorkKind::Checksum => {
+            let payloads: Vec<Vec<u32>> =
+                group.iter().map(|s| s.ticket.payload.clone()).collect();
+            match rt.checksum_group(&payloads, shape) {
+                Ok(sums) => {
+                    for (staged, (s1, s2)) in group.into_iter().zip(sums) {
+                        let len = staged.ticket.pending.work.data_len();
+                        record_response(
+                            stats,
+                            inflight,
+                            staged.ticket.pending,
+                            Output::Checksum { s1, s2 },
+                            len,
+                        );
+                    }
+                }
+                Err(e) => reject_group(group, stats, inflight, e),
+            }
+        }
+    }
+}
+
+fn reject_group(
+    group: Vec<batcher::Staged<Ticket>>,
+    stats: &Arc<Mutex<StatsSnapshot>>,
+    inflight: &Arc<AtomicU64>,
+    e: anyhow::Error,
+) {
+    eprintln!("arcus-engine: batch failed: {e:#}");
+    for staged in group {
+        record_response(stats, inflight, staged.ticket.pending, Output::Rejected("exec failed"), 0);
+    }
+}
+
+fn execute_single(
+    rt: &PjrtRuntime,
+    ticket: Ticket,
+    stats: &Arc<Mutex<StatsSnapshot>>,
+    inflight: &Arc<AtomicU64>,
+) {
+    let len = ticket.pending.work.data_len();
+    let out = match &ticket.pending.work {
+        Work::EncryptDigest { key, nonce, counter0, .. } => rt
+            .encrypt_digest(&ticket.payload, key, nonce, *counter0)
+            .map(|(cipher, tag)| Output::Encrypted { cipher: unpack_bytes(&cipher, len), tag }),
+        Work::Checksum { .. } => {
+            rt.checksum(&ticket.payload).map(|(s1, s2)| Output::Checksum { s1, s2 })
+        }
+    };
+    match out {
+        Ok(output) => record_response(stats, inflight, ticket.pending, output, len),
+        Err(e) => {
+            eprintln!("arcus-engine: request failed: {e:#}");
+            record_response(stats, inflight, ticket.pending, Output::Rejected("exec failed"), 0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn artifacts() -> Option<PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            Some(dir)
+        } else {
+            eprintln!("skipping: run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn serve_encrypt_roundtrip_and_checksum() {
+        let Some(dir) = artifacts() else { return };
+        let server = Server::start(
+            ServerConfig::new(dir).tenant("t0", None).tenant("t1", None),
+        )
+        .unwrap();
+        let data = b"arcus serves accelerator requests with slo guarantees".to_vec();
+        let key = [5u32; 8];
+        let nonce = [1u32, 2, 3];
+        let r = server.submit_blocking(
+            0,
+            Work::EncryptDigest { data: data.clone(), key, nonce, counter0: 7 },
+        );
+        let Output::Encrypted { cipher, tag } = r.output else {
+            panic!("unexpected output {:?}", r.output)
+        };
+        assert_ne!(cipher, data);
+        // Round-trip through the server (counter-mode involution).
+        let r2 = server.submit_blocking(
+            0,
+            Work::EncryptDigest { data: cipher.clone(), key, nonce, counter0: 7 },
+        );
+        let Output::Encrypted { cipher: back, tag: tag2 } = r2.output else {
+            panic!()
+        };
+        assert_eq!(back, data);
+        let _ = (tag, tag2);
+
+        // Checksum matches the native oracle exactly (grouped results are
+        // shift-corrected to the request's own length).
+        let r3 = server.submit_blocking(1, Work::Checksum { data: data.clone() });
+        let Output::Checksum { s1, s2 } = r3.output else { panic!() };
+        let words = crate::runtime::pack_bytes(&data);
+        assert_eq!((s1, s2), crate::runtime::fletcher_native(&words));
+        server.shutdown();
+    }
+
+    #[test]
+    fn batching_groups_concurrent_requests() {
+        let Some(dir) = artifacts() else { return };
+        let server = std::sync::Arc::new(
+            Server::start(
+                ServerConfig::new(dir).tenant("t0", None),
+            )
+            .unwrap(),
+        );
+        // Warm up (compile) before the batch burst.
+        let _ = server.submit_blocking(0, Work::Checksum { data: vec![1; 512] });
+        let rxs: Vec<_> = (0..32)
+            .map(|i| server.submit(0, Work::Checksum { data: vec![i as u8; 512] }))
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(matches!(r.output, Output::Checksum { .. }));
+        }
+        let stats = server.stats();
+        assert_eq!(stats.tenants[0].completed, 33);
+        assert!(
+            stats.mean_group_fill() > 1.5,
+            "expected batching, got fill {:.2} over {} batches",
+            stats.mean_group_fill(),
+            stats.batches
+        );
+    }
+
+    #[test]
+    fn shaping_limits_tenant_throughput() {
+        let Some(dir) = artifacts() else { return };
+        // Tenant 0 shaped to 2 MB/s, tenant 1 unshaped.
+        let server = Server::start(
+            ServerConfig::new(dir)
+                .tenant("shaped", Some(2_000_000.0))
+                .tenant("free", None),
+        )
+        .unwrap();
+        // Warm up the executable cache.
+        let _ = server.submit_blocking(0, Work::Checksum { data: vec![0; 1024] });
+        let start = Instant::now();
+        let rxs: Vec<_> = (0..200)
+            .map(|_| server.submit(0, Work::Checksum { data: vec![7; 4096] }))
+            .collect();
+        for rx in rxs {
+            let _ = rx.recv().unwrap();
+        }
+        let elapsed = start.elapsed().as_secs_f64();
+        let rate = 200.0 * 4096.0 / elapsed;
+        // 819 KB of work at 2 MB/s ≈ 0.4 s (minus the ~20 KB initial burst).
+        assert!(
+            rate < 3_000_000.0,
+            "shaped tenant ran at {:.2} MB/s",
+            rate / 1e6
+        );
+        server.shutdown();
+    }
+}

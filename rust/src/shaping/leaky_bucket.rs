@@ -1,0 +1,134 @@
+//! Leaky-bucket shaper — resource-efficient but burst-hostile (§4.2).
+//!
+//! Considered and rejected by the paper for bursty request patterns: the
+//! bucket drains at a constant rate and every admitted unit occupies bucket
+//! space, so a burst larger than the (small) bucket is spread out even when
+//! the long-run rate is far below the limit. Implemented as a virtual-time
+//! leaky bucket (equivalent to GCRA): `deadline` tracks when the bucket
+//! would drain to empty.
+
+use super::{Shaper, Verdict};
+use crate::util::units::{Time, SECONDS};
+
+#[derive(Debug, Clone)]
+pub struct LeakyBucket {
+    /// Drain rate, units/sec.
+    rate: f64,
+    /// Bucket depth in units; small by design (the point of the ablation).
+    depth: f64,
+    /// Virtual drain horizon: the time at which the bucket empties.
+    horizon: Time,
+}
+
+impl LeakyBucket {
+    /// Depth defaults to ~10 µs of traffic — the classic shallow bucket.
+    pub fn new(units_per_sec: f64) -> Self {
+        LeakyBucket {
+            rate: units_per_sec,
+            depth: (units_per_sec * 10e-6).max(1.0),
+            horizon: 0,
+        }
+    }
+
+    pub fn with_depth(units_per_sec: f64, depth_units: f64) -> Self {
+        LeakyBucket {
+            rate: units_per_sec,
+            depth: depth_units.max(1.0),
+            horizon: 0,
+        }
+    }
+
+    #[inline]
+    fn drain_time(&self, units: u64) -> Time {
+        (units as f64 / self.rate * SECONDS as f64).ceil() as Time
+    }
+}
+
+impl Shaper for LeakyBucket {
+    fn try_acquire(&mut self, now: Time, cost: u64) -> Verdict {
+        let level_at_now = if self.horizon > now {
+            // Units still in the bucket, expressed in time-to-drain.
+            (self.horizon - now) as f64 * self.rate / SECONDS as f64
+        } else {
+            0.0
+        };
+        if level_at_now + cost as f64 <= self.depth {
+            let base = self.horizon.max(now);
+            self.horizon = base + self.drain_time(cost);
+            Verdict::Admit
+        } else {
+            // Earliest time the bucket has room for `cost` units.
+            let excess = level_at_now + cost as f64 - self.depth;
+            let wait = (excess / self.rate * SECONDS as f64).ceil() as Time;
+            Verdict::RetryAt(now + wait.max(1))
+        }
+    }
+
+    fn set_rate(&mut self, _now: Time, units_per_sec: f64) {
+        self.rate = units_per_sec;
+        self.depth = (units_per_sec * 10e-6).max(1.0);
+    }
+
+    fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    fn state_bytes(&self) -> usize {
+        3 * std::mem::size_of::<u64>()
+    }
+
+    fn name(&self) -> &'static str {
+        "leaky_bucket"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shaping::replay;
+    use crate::util::units::{Rate, MICROS, SECONDS};
+
+    #[test]
+    fn long_run_rate_converges() {
+        let target = Rate::gbps(10.0).as_bits_per_sec() / 8.0;
+        let mut lb = LeakyBucket::new(target);
+        let arrivals: Vec<(Time, u64)> = (0..20_000).map(|_| (0, 1500)).collect();
+        let (admitted, last) = replay(&mut lb, &arrivals);
+        let rate = admitted as f64 * SECONDS as f64 / last as f64;
+        assert!(((rate - target) / target).abs() < 0.02, "rate={rate:.3e}");
+    }
+
+    #[test]
+    fn burst_hostile_compared_to_token_bucket() {
+        // A 64 KB burst after a long idle: the token bucket absorbs it, the
+        // leaky bucket spreads it out. This is the paper's reason for
+        // choosing the token bucket.
+        let target = Rate::gbps(10.0).as_bits_per_sec() / 8.0;
+        let burst: Vec<(Time, u64)> = (0..43).map(|_| (SECONDS, 1500)).collect(); // ~64 KB
+
+        let mut lb = LeakyBucket::new(target);
+        let (_, lb_done) = replay(&mut lb, &burst);
+
+        let mut tb =
+            crate::shaping::TokenBucket::for_rate(target, crate::shaping::ShapeMode::Gbps);
+        let (_, tb_done) = replay(&mut tb, &burst);
+
+        let lb_spread = lb_done - SECONDS;
+        let tb_spread = tb_done - SECONDS;
+        assert!(
+            lb_spread > 4 * tb_spread.max(1),
+            "leaky spread {lb_spread} vs token {tb_spread}"
+        );
+    }
+
+    #[test]
+    fn respects_depth_exactly() {
+        let mut lb = LeakyBucket::with_depth(1e9, 3000.0); // 1 GB/s, 3000-unit depth
+        assert_eq!(lb.try_acquire(0, 1500), Verdict::Admit);
+        assert_eq!(lb.try_acquire(0, 1500), Verdict::Admit);
+        match lb.try_acquire(0, 1500) {
+            Verdict::RetryAt(at) => assert!(at > 0 && at <= 2 * MICROS),
+            v => panic!("expected retry, got {v:?}"),
+        }
+    }
+}

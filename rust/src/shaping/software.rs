@@ -1,0 +1,266 @@
+//! Host-software traffic shaper — the `Host_TS_reflex` / `Host_TS_firecracker`
+//! baseline mechanism (§5.1, §5.2).
+//!
+//! ReFlex- and Firecracker-style rate limiting runs a token bucket *in
+//! software on the host CPU*. The paper's measurements attribute their
+//! 6.5–11.7% throughput loss, 8.7–24.3% over-provisioning (Table 3), and
+//! micro-second-scale shaping latency (>10 µs vs 36 ns, §5.3.1) to three
+//! effects, all modeled here on top of the ideal token-bucket arithmetic:
+//!
+//! 1. **Timer quantization** — software timers fire on a coarse grid (high-
+//!    resolution timers still slip to ~1–10 µs under load); a release that
+//!    should happen at `t` happens at the next timer edge ≥ `t`.
+//! 2. **CPU interference jitter** — the shaping thread shares cores with VM
+//!    vCPUs; scheduler preemption adds heavy-tailed (Pareto) delay.
+//! 3. **Batched catch-up** — after a delayed wakeup the software releases
+//!    everything accumulated, producing over-provisioned windows (the +24.3%
+//!    99th-percentile windows of Table 3).
+//!
+//! Profiles for the two named baselines differ only in constants: ReFlex
+//! (polling dataplane) has finer timers but loses whole quanta to its
+//! polling loop; Firecracker (interrupt-driven) quantizes coarser.
+
+use super::{ShapeMode, Shaper, TokenBucket, Verdict};
+use crate::util::units::{Time, MICROS, NANOS};
+use crate::util::Rng;
+
+/// Jitter/quantization profile of a software shaper deployment.
+#[derive(Debug, Clone)]
+pub struct SoftwareShaperConfig {
+    /// Timer grid: releases snap up to multiples of this.
+    pub timer_quantum: Time,
+    /// Probability a wakeup is preempted by CPU interference.
+    pub preempt_prob: f64,
+    /// Pareto scale (minimum extra delay) when preempted.
+    pub preempt_scale: Time,
+    /// Pareto shape; smaller = heavier tail.
+    pub preempt_alpha: f64,
+    /// Upper bound on one preemption stall (the scheduler does run).
+    pub preempt_cap: Time,
+    /// Tokens carried across a stall (catch-up burst budget).
+    pub catchup_carry: Time,
+    /// Per-decision software overhead (syscall + bookkeeping).
+    pub decision_overhead: Time,
+}
+
+impl SoftwareShaperConfig {
+    /// ReFlex-like: polling dataplane, 1 µs quantum, moderate interference
+    /// (vCPUs sharing the socket preempt the polling core occasionally).
+    pub fn reflex() -> Self {
+        SoftwareShaperConfig {
+            timer_quantum: MICROS,
+            preempt_prob: 0.09,
+            preempt_scale: 15 * MICROS,
+            preempt_alpha: 1.6,
+            preempt_cap: 1_000 * MICROS,
+            catchup_carry: 150 * MICROS,
+            decision_overhead: 300 * NANOS,
+        }
+    }
+
+    /// Firecracker-like: interrupt-driven, 4 µs effective quantum, heavier
+    /// stalls and burstier catch-up (its larger positive deviations in
+    /// Table 3).
+    pub fn firecracker() -> Self {
+        SoftwareShaperConfig {
+            timer_quantum: 4 * MICROS,
+            preempt_prob: 0.04,
+            preempt_scale: 35 * MICROS,
+            preempt_alpha: 1.3,
+            preempt_cap: 2_000 * MICROS,
+            catchup_carry: 520 * MICROS,
+            decision_overhead: 500 * NANOS,
+        }
+    }
+}
+
+/// Software token bucket: ideal arithmetic + OS-level timing error.
+#[derive(Debug, Clone)]
+pub struct SoftwareShaper {
+    inner: TokenBucket,
+    cfg: SoftwareShaperConfig,
+    rng: Rng,
+    /// Next time the software thread actually runs (wakeup edge).
+    next_wakeup: Time,
+}
+
+impl SoftwareShaper {
+    pub fn new(
+        units_per_sec: f64,
+        mode: ShapeMode,
+        cfg: SoftwareShaperConfig,
+        seed: u64,
+    ) -> Self {
+        // Software buckets accrue during scheduler stalls and release the
+        // backlog at the next wakeup ("batched catch-up"): carry up to
+        // ~400 µs of tokens across a stall, producing the over-provisioned
+        // windows the paper measures (+8.7…+24.3% at the 99th percentile);
+        // anything stalled longer is lost rate (the −6.7…−11.7% side).
+        let mut params = crate::shaping::TokenBucketParams::for_rate(units_per_sec, mode);
+        let carry_units = units_per_sec * (cfg.catchup_carry as f64 / 1e12);
+        params.bkt_size = params
+            .bkt_size
+            .max((carry_units / params.token_unit as f64).ceil() as u64);
+        let mut inner = TokenBucket::new(params, mode);
+        // Rate limiters initialize empty in software (no free startup burst).
+        use crate::shaping::Shaper as _;
+        let _ = inner.try_acquire(0, params.bkt_size * params.token_unit);
+        SoftwareShaper {
+            inner,
+            cfg,
+            rng: Rng::for_stream(seed, 0x50F7),
+            next_wakeup: 0,
+        }
+    }
+
+    /// Snap `t` to the software timer grid and add interference.
+    fn software_delay(&mut self, t: Time) -> Time {
+        let q = self.cfg.timer_quantum;
+        let snapped = t.div_ceil(q) * q;
+        let jitter = if self.rng.chance(self.cfg.preempt_prob) {
+            (self
+                .rng
+                .pareto(self.cfg.preempt_scale as f64, self.cfg.preempt_alpha) as Time)
+                .min(self.cfg.preempt_cap)
+        } else {
+            0
+        };
+        snapped + jitter + self.cfg.decision_overhead
+    }
+}
+
+impl Shaper for SoftwareShaper {
+    fn try_acquire(&mut self, now: Time, cost: u64) -> Verdict {
+        // The shaping thread only observes the world at wakeup edges.
+        if now < self.next_wakeup {
+            return Verdict::RetryAt(self.next_wakeup);
+        }
+        match self.inner.try_acquire(now, cost) {
+            Verdict::Admit => Verdict::Admit,
+            Verdict::RetryAt(ideal) => {
+                let actual = self.software_delay(ideal);
+                self.next_wakeup = actual;
+                Verdict::RetryAt(actual.max(now + 1))
+            }
+        }
+    }
+
+    fn set_rate(&mut self, now: Time, units_per_sec: f64) {
+        self.inner.set_rate(now, units_per_sec);
+    }
+
+    fn rate(&self) -> f64 {
+        self.inner.rate()
+    }
+
+    fn state_bytes(&self) -> usize {
+        // Software state is cheap; the cost is timing, not memory.
+        self.inner.state_bytes() + std::mem::size_of::<SoftwareShaperConfig>()
+    }
+
+    fn name(&self) -> &'static str {
+        "software_token_bucket"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shaping::replay;
+    use crate::util::units::{Rate, SECONDS};
+
+    fn measure_cv(shaper: &mut dyn Shaper, n_msgs: usize, size: u64) -> (f64, f64) {
+        // Saturating queue; sample per-500-message window rates (the paper's
+        // sampling method) and return (mean_rate, cv).
+        let arrivals: Vec<(Time, u64)> = (0..n_msgs).map(|_| (0, size)).collect();
+        let mut admit_times = Vec::with_capacity(n_msgs);
+        let mut now = 0u64;
+        for &(t, cost) in &arrivals {
+            now = now.max(t);
+            loop {
+                match shaper.try_acquire(now, cost) {
+                    Verdict::Admit => {
+                        admit_times.push(now);
+                        break;
+                    }
+                    Verdict::RetryAt(at) => now = at,
+                }
+            }
+        }
+        let window = 500;
+        let mut rates = Vec::new();
+        for chunk in admit_times.chunks(window) {
+            if chunk.len() == window {
+                let span = chunk[window - 1] - chunk[0];
+                if span > 0 {
+                    rates.push(
+                        (window as f64 - 1.0) * size as f64 * SECONDS as f64 / span as f64,
+                    );
+                }
+            }
+        }
+        let mean = rates.iter().sum::<f64>() / rates.len() as f64;
+        let var =
+            rates.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>() / rates.len() as f64;
+        (mean, var.sqrt() / mean)
+    }
+
+    #[test]
+    fn software_variance_exceeds_hardware() {
+        let target = Rate::gbps(10.0).as_bits_per_sec() / 8.0;
+        let mut hw = TokenBucket::for_rate(target, ShapeMode::Gbps);
+        let mut sw = SoftwareShaper::new(
+            target,
+            ShapeMode::Gbps,
+            SoftwareShaperConfig::firecracker(),
+            42,
+        );
+        let (hw_mean, hw_cv) = measure_cv(&mut hw, 30_000, 4096);
+        let (sw_mean, sw_cv) = measure_cv(&mut sw, 30_000, 4096);
+        // Hardware: sub-1% variance (the paper's headline). Software: worse.
+        assert!(hw_cv < 0.01, "hw cv={hw_cv}");
+        assert!(sw_cv > 2.0 * hw_cv, "sw cv={sw_cv} hw cv={hw_cv}");
+        // Both still track the mean within a few percent.
+        assert!((hw_mean - target).abs() / target < 0.02);
+        assert!((sw_mean - target).abs() / target < 0.15, "sw_mean={sw_mean:.3e}");
+    }
+
+    #[test]
+    fn reflex_tighter_than_firecracker() {
+        let target = Rate::gbps(10.0).as_bits_per_sec() / 8.0;
+        let mut reflex = SoftwareShaper::new(
+            target,
+            ShapeMode::Gbps,
+            SoftwareShaperConfig::reflex(),
+            7,
+        );
+        let mut fc = SoftwareShaper::new(
+            target,
+            ShapeMode::Gbps,
+            SoftwareShaperConfig::firecracker(),
+            7,
+        );
+        let (_, reflex_cv) = measure_cv(&mut reflex, 30_000, 4096);
+        let (_, fc_cv) = measure_cv(&mut fc, 30_000, 4096);
+        assert!(
+            reflex_cv < fc_cv,
+            "reflex cv={reflex_cv} firecracker cv={fc_cv}"
+        );
+    }
+
+    #[test]
+    fn long_run_rate_still_converges() {
+        // Software shaping is sloppy per-window but unbiased long-run.
+        let target = Rate::gbps(10.0).as_bits_per_sec() / 8.0;
+        let mut sw = SoftwareShaper::new(
+            target,
+            ShapeMode::Gbps,
+            SoftwareShaperConfig::reflex(),
+            99,
+        );
+        let arrivals: Vec<(Time, u64)> = (0..40_000).map(|_| (0, 1500)).collect();
+        let (admitted, last) = replay(&mut sw, &arrivals);
+        let rate = admitted as f64 * SECONDS as f64 / last as f64;
+        assert!(((rate - target) / target).abs() < 0.10, "rate={rate:.3e}");
+    }
+}

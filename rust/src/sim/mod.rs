@@ -1,0 +1,308 @@
+//! Discrete-event simulation core.
+//!
+//! The Arcus prototype is a host–FPGA system; we reproduce it as a
+//! cycle-granular discrete-event simulation. The core is deliberately small:
+//! a virtual clock in picoseconds, a binary-heap event queue with
+//! deterministic FIFO tie-breaking, and events that are boxed closures over a
+//! user-supplied world type `W` (the component graph). Components are plain
+//! structs inside `W`; the wiring code in `system/` schedules closures that
+//! mutate them and schedule follow-up events.
+//!
+//! Determinism contract: given the same world, seed, and schedule calls, two
+//! runs produce identical event orders — ties at equal timestamps are broken
+//! by insertion sequence number, never by heap internals.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::util::units::Time;
+
+/// An event action: runs against the world and may schedule more events.
+pub type Action<W> = Box<dyn FnOnce(&mut W, &mut Sim<W>)>;
+
+struct Entry<W> {
+    time: Time,
+    seq: u64,
+    action: Action<W>,
+}
+
+impl<W> PartialEq for Entry<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<W> Eq for Entry<W> {}
+impl<W> PartialOrd for Entry<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<W> Ord for Entry<W> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse order: BinaryHeap is a max-heap, we want earliest first.
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The simulator: virtual clock + event queue.
+pub struct Sim<W> {
+    now: Time,
+    seq: u64,
+    queue: BinaryHeap<Entry<W>>,
+    executed: u64,
+}
+
+impl<W> Default for Sim<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<W> Sim<W> {
+    pub fn new() -> Self {
+        Sim {
+            now: 0,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            executed: 0,
+        }
+    }
+
+    /// Current virtual time (ps).
+    #[inline]
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Number of events executed so far (perf accounting).
+    pub fn executed(&self) -> u64 {
+        self.executed
+    }
+
+    /// Number of pending events.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Schedule an action at absolute virtual time `t` (>= now).
+    pub fn at<F>(&mut self, t: Time, action: F)
+    where
+        F: FnOnce(&mut W, &mut Sim<W>) + 'static,
+    {
+        debug_assert!(t >= self.now, "scheduling into the past: {t} < {}", self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Entry {
+            time: t.max(self.now),
+            seq,
+            action: Box::new(action),
+        });
+    }
+
+    /// Schedule an action `delay` picoseconds from now. A `Time::MAX` delay
+    /// (e.g. serialization over a stalled zero-rate link) is dropped: the
+    /// event would never fire.
+    pub fn after<F>(&mut self, delay: Time, action: F)
+    where
+        F: FnOnce(&mut W, &mut Sim<W>) + 'static,
+    {
+        if delay == Time::MAX {
+            return;
+        }
+        self.at(self.now.saturating_add(delay), action);
+    }
+
+    /// Run a single event; returns false when the queue is empty.
+    pub fn step(&mut self, world: &mut W) -> bool {
+        match self.queue.pop() {
+            Some(e) => {
+                debug_assert!(e.time >= self.now);
+                self.now = e.time;
+                self.executed += 1;
+                (e.action)(world, self);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Run until the queue drains or virtual time would exceed `until`.
+    /// Events strictly after `until` stay queued; `now` advances to `until`.
+    pub fn run_until(&mut self, world: &mut W, until: Time) {
+        while let Some(head) = self.queue.peek() {
+            if head.time > until {
+                break;
+            }
+            // Unwrap is safe: peeked non-empty, no other pops in between.
+            let e = self.queue.pop().unwrap();
+            self.now = e.time;
+            self.executed += 1;
+            (e.action)(world, self);
+        }
+        self.now = self.now.max(until);
+    }
+
+    /// Run to queue exhaustion (or `max_events` as a runaway guard).
+    pub fn run(&mut self, world: &mut W, max_events: u64) {
+        let limit = self.executed + max_events;
+        while self.executed < limit && self.step(world) {}
+    }
+}
+
+/// A periodic ticker: reschedules itself every `period` until `world` says
+/// stop. Used for the control-plane loop (Algorithm 1 runs periodically) and
+/// for monitors.
+pub fn every<W, F>(sim: &mut Sim<W>, period: Time, mut f: F)
+where
+    W: 'static,
+    F: FnMut(&mut W, &mut Sim<W>) -> bool + 'static,
+{
+    fn tick<W, F>(period: Time, mut f: F) -> Action<W>
+    where
+        W: 'static,
+        F: FnMut(&mut W, &mut Sim<W>) -> bool + 'static,
+    {
+        Box::new(move |w, sim| {
+            if f(w, sim) {
+                let next = tick(period, f);
+                sim.after(period, move |w, s| next(w, s));
+            }
+        })
+    }
+    let action = tick(period, move |w: &mut W, s: &mut Sim<W>| f(w, s));
+    sim.after(period, move |w, s| action(w, s));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{MICROS, NANOS};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[derive(Default)]
+    struct World {
+        log: Vec<(Time, u32)>,
+        count: u64,
+    }
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.at(30, |w, s| w.log.push((s.now(), 3)));
+        sim.at(10, |w, s| w.log.push((s.now(), 1)));
+        sim.at(20, |w, s| w.log.push((s.now(), 2)));
+        sim.run(&mut w, 100);
+        assert_eq!(w.log, vec![(10, 1), (20, 2), (30, 3)]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        for i in 0..50u32 {
+            sim.at(100, move |w, _| w.log.push((100, i)));
+        }
+        sim.run(&mut w, 1000);
+        let ids: Vec<u32> = w.log.iter().map(|&(_, i)| i).collect();
+        assert_eq!(ids, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn events_can_schedule_events() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.at(5, |w, s| {
+            w.log.push((s.now(), 0));
+            s.after(7, |w, s| w.log.push((s.now(), 1)));
+        });
+        sim.run(&mut w, 100);
+        assert_eq!(w.log, vec![(5, 0), (12, 1)]);
+    }
+
+    #[test]
+    fn run_until_stops_at_boundary() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        for i in 1..=10u64 {
+            sim.at(i * MICROS, |w, _| w.count += 1);
+        }
+        sim.run_until(&mut w, 5 * MICROS);
+        assert_eq!(w.count, 5);
+        assert_eq!(sim.now(), 5 * MICROS);
+        sim.run_until(&mut w, 20 * MICROS);
+        assert_eq!(w.count, 10);
+        assert_eq!(sim.now(), 20 * MICROS);
+    }
+
+    #[test]
+    fn periodic_ticker_runs_until_false() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        every(&mut sim, 100 * NANOS, |w, _| {
+            w.count += 1;
+            w.count < 5
+        });
+        sim.run(&mut w, 1000);
+        assert_eq!(w.count, 5);
+        assert_eq!(sim.now(), 500 * NANOS);
+    }
+
+    #[test]
+    fn max_delay_event_is_dropped() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.after(Time::MAX, |w, _| w.count += 1);
+        sim.run(&mut w, 10);
+        assert_eq!(w.count, 0);
+        assert_eq!(sim.pending(), 0);
+    }
+
+    #[test]
+    fn determinism_two_identical_runs() {
+        fn run_once() -> Vec<(Time, u32)> {
+            let mut sim: Sim<World> = Sim::new();
+            let mut w = World::default();
+            let mut rng = crate::util::Rng::new(99);
+            for i in 0..200u32 {
+                let t = rng.range_u64(0, 1000) * NANOS;
+                sim.at(t, move |w, s| w.log.push((s.now(), i)));
+            }
+            sim.run(&mut w, 10_000);
+            w.log
+        }
+        assert_eq!(run_once(), run_once());
+    }
+
+    #[test]
+    fn executed_counter_counts() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        for i in 0..7u64 {
+            sim.at(i, |_, _| {});
+        }
+        sim.run(&mut w, 100);
+        assert_eq!(sim.executed(), 7);
+    }
+
+    #[test]
+    fn rc_refcell_worlds_compose() {
+        // Components sometimes need shared handles; make sure the pattern
+        // works through the closure-based event type.
+        let shared = Rc::new(RefCell::new(0u64));
+        struct W2 {
+            shared: Rc<RefCell<u64>>,
+        }
+        let mut sim: Sim<W2> = Sim::new();
+        let mut w = W2 {
+            shared: shared.clone(),
+        };
+        sim.at(1, |w, _| *w.shared.borrow_mut() += 41);
+        sim.run(&mut w, 10);
+        assert_eq!(*shared.borrow(), 41);
+    }
+}

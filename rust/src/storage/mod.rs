@@ -1,0 +1,14 @@
+//! NVMe SSD and RAID-0 models for the inline-P2P experiments (Fig 11b).
+//!
+//! The paper's storage prototype is four Samsung 983 DCT SSDs in RAID-0
+//! behind an FVM-style NVMe stack. The SLO-relevant behaviour is **internal
+//! read/write interference**: SSD writes occupy the flash channel and the
+//! FTL long enough to starve reads ("the root cause is internal read-write
+//! interference in SSD sub-systems", §5.4), which is why unshaped write
+//! over-provisioning degrades overall RAID throughput by 2.2×.
+
+pub mod nvme;
+pub mod raid;
+
+pub use nvme::{Ssd, SsdConfig};
+pub use raid::Raid0;

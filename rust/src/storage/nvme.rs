@@ -1,0 +1,302 @@
+//! Single-SSD model with channel parallelism and read/write interference.
+
+use crate::util::units::{Time, MICROS};
+use crate::util::Rng;
+use std::collections::VecDeque;
+
+/// Operation kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoKind {
+    Read,
+    Write,
+}
+
+/// One I/O request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Io {
+    pub id: u64,
+    pub kind: IoKind,
+    pub bytes: u64,
+}
+
+/// A completed I/O.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IoDone {
+    pub io: Io,
+    pub at: Time,
+}
+
+/// Datasheet-style SSD parameters (defaults model a Samsung 983 DCT-class
+/// enterprise NVMe drive).
+#[derive(Debug, Clone, Copy)]
+pub struct SsdConfig {
+    /// Independent flash channels (concurrent ops).
+    pub channels: usize,
+    /// 4 KB random-read service time per channel at QD=channels.
+    pub read_service: Time,
+    /// 4 KB write (program) service time per channel.
+    pub write_service: Time,
+    /// Multiplier applied to read service per in-flight write — FTL and
+    /// flash-die contention (program suspends reads on the same die).
+    pub write_read_penalty: f64,
+    /// Service-time jitter spread (uniform ±).
+    pub jitter: f64,
+}
+
+impl SsdConfig {
+    pub fn samsung_983dct() -> Self {
+        SsdConfig {
+            channels: 8,
+            // ~540K read IOPS: 8 channels / 14.8 µs
+            read_service: 14_800_000 / 1000 * 1000, // 14.8 µs in ps
+            // ~48K write IOPS: 8 channels / 165 µs
+            write_service: 165 * MICROS,
+            write_read_penalty: 0.55,
+            jitter: 0.08,
+        }
+    }
+}
+
+/// The SSD: a channel pool + FIFO queue (the NVMe SQ after arbitration).
+#[derive(Debug)]
+pub struct Ssd {
+    cfg: SsdConfig,
+    queue: VecDeque<Io>,
+    /// Per-channel: finish time of the op in service (None = idle), plus
+    /// whether it is a write (for interference accounting).
+    channels: Vec<Option<(Io, Time)>>,
+    rng: Rng,
+    completed_reads: u64,
+    completed_writes: u64,
+}
+
+impl Ssd {
+    pub fn new(cfg: SsdConfig, seed: u64) -> Self {
+        Ssd {
+            channels: vec![None; cfg.channels],
+            cfg,
+            queue: VecDeque::new(),
+            rng: Rng::for_stream(seed, 0x55D),
+            completed_reads: 0,
+            completed_writes: 0,
+        }
+    }
+
+    pub fn submit(&mut self, io: Io) {
+        self.queue.push_back(io);
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn writes_in_flight(&self) -> usize {
+        self.channels
+            .iter()
+            .flatten()
+            .filter(|(io, _)| io.kind == IoKind::Write)
+            .count()
+    }
+
+    fn service_time(&mut self, io: Io) -> Time {
+        let base = match io.kind {
+            IoKind::Read => {
+                // Reads slow down per in-flight write.
+                let w = self.writes_in_flight() as f64;
+                self.cfg.read_service as f64
+                    * (1.0 + w * self.cfg.write_read_penalty)
+                    * (io.bytes as f64 / 4096.0).max(0.25).min(64.0)
+            }
+            IoKind::Write => {
+                self.cfg.write_service as f64 * (io.bytes as f64 / 4096.0).max(0.25)
+            }
+        };
+        let jit = self.rng.range_f64(1.0 - self.cfg.jitter, 1.0 + self.cfg.jitter);
+        (base * jit).round() as Time
+    }
+
+    /// Advance to `now`: retire due ops, dispatch queued ops to free
+    /// channels. Returns completions and the next wake time.
+    pub fn pump(&mut self, now: Time) -> (Vec<IoDone>, Option<Time>) {
+        let mut done = Vec::new();
+        loop {
+            let mut progressed = false;
+            // Retire.
+            for ch in self.channels.iter_mut() {
+                if let Some((io, fin)) = *ch {
+                    if fin <= now {
+                        *ch = None;
+                        match io.kind {
+                            IoKind::Read => self.completed_reads += 1,
+                            IoKind::Write => self.completed_writes += 1,
+                        }
+                        done.push(IoDone { io, at: fin });
+                        progressed = true;
+                    }
+                }
+            }
+            // Dispatch (interference depends on current in-flight mix, so
+            // recompute per dispatch).
+            for i in 0..self.channels.len() {
+                if self.channels[i].is_none() {
+                    if let Some(io) = self.queue.pop_front() {
+                        let t = self.service_time(io);
+                        self.channels[i] = Some((io, now + t));
+                        progressed = true;
+                    }
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        let next = self
+            .channels
+            .iter()
+            .flatten()
+            .map(|&(_, fin)| fin)
+            .min();
+        (done, next)
+    }
+
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.channels.iter().all(Option::is_none)
+    }
+
+    pub fn completed(&self) -> (u64, u64) {
+        (self.completed_reads, self.completed_writes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::SECONDS;
+
+    fn drain(ssd: &mut Ssd) -> Vec<IoDone> {
+        let mut out = Vec::new();
+        let mut now = 0;
+        loop {
+            let (done, next) = ssd.pump(now);
+            out.extend(done);
+            match next {
+                Some(t) => now = t,
+                None => break,
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn read_iops_near_datasheet() {
+        let mut ssd = Ssd::new(SsdConfig::samsung_983dct(), 1);
+        let n = 50_000u64;
+        for i in 0..n {
+            ssd.submit(Io {
+                id: i,
+                kind: IoKind::Read,
+                bytes: 4096,
+            });
+        }
+        let done = drain(&mut ssd);
+        let last = done.last().unwrap().at;
+        let iops = n as f64 * SECONDS as f64 / last as f64;
+        assert!(
+            (480_000.0..600_000.0).contains(&iops),
+            "read iops={iops:.0}"
+        );
+    }
+
+    #[test]
+    fn write_iops_near_datasheet() {
+        let mut ssd = Ssd::new(SsdConfig::samsung_983dct(), 2);
+        let n = 5_000u64;
+        for i in 0..n {
+            ssd.submit(Io {
+                id: i,
+                kind: IoKind::Write,
+                bytes: 4096,
+            });
+        }
+        let done = drain(&mut ssd);
+        let iops = n as f64 * SECONDS as f64 / done.last().unwrap().at as f64;
+        assert!((42_000.0..56_000.0).contains(&iops), "write iops={iops:.0}");
+    }
+
+    #[test]
+    fn writes_degrade_concurrent_reads() {
+        // Pure-read IOPS vs reads mixed with a write stream.
+        let run = |write_every: Option<u64>| {
+            let mut ssd = Ssd::new(SsdConfig::samsung_983dct(), 3);
+            let mut id = 0;
+            for i in 0..40_000u64 {
+                ssd.submit(Io {
+                    id,
+                    kind: IoKind::Read,
+                    bytes: 4096,
+                });
+                id += 1;
+                if let Some(k) = write_every {
+                    if i % k == 0 {
+                        ssd.submit(Io {
+                            id,
+                            kind: IoKind::Write,
+                            bytes: 4096,
+                        });
+                        id += 1;
+                    }
+                }
+            }
+            let done = drain(&mut ssd);
+            let reads = done
+                .iter()
+                .filter(|d| d.io.kind == IoKind::Read)
+                .count() as f64;
+            reads * SECONDS as f64 / done.last().unwrap().at as f64
+        };
+        let pure = run(None);
+        let mixed = run(Some(20)); // 5% writes
+        assert!(
+            mixed < 0.75 * pure,
+            "mixed={mixed:.0} should be well below pure={pure:.0}"
+        );
+    }
+
+    #[test]
+    fn small_reads_faster_than_4k() {
+        let cfg = SsdConfig::samsung_983dct();
+        let mut ssd = Ssd::new(cfg, 4);
+        let n = 20_000u64;
+        for i in 0..n {
+            ssd.submit(Io {
+                id: i,
+                kind: IoKind::Read,
+                bytes: 1024,
+            });
+        }
+        let done = drain(&mut ssd);
+        let iops_1k = n as f64 * SECONDS as f64 / done.last().unwrap().at as f64;
+        // 1KB reads quantize to 0.25 of the 4K service time.
+        assert!(iops_1k > 1_500_000.0, "1k iops={iops_1k:.0}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let run = || {
+            let mut ssd = Ssd::new(SsdConfig::samsung_983dct(), 9);
+            for i in 0..1000 {
+                ssd.submit(Io {
+                    id: i,
+                    kind: if i % 10 == 0 {
+                        IoKind::Write
+                    } else {
+                        IoKind::Read
+                    },
+                    bytes: 4096,
+                });
+            }
+            drain(&mut ssd).iter().map(|d| d.at).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,1268 @@
+//! The experiment engine: executes an [`ExperimentSpec`] on the DES core.
+//!
+//! One [`World`] holds every component; events are small closures that call
+//! back into `World` handler methods. The wiring follows the dataplane
+//! protocol of §4.1 per path:
+//!
+//! - **Function call**: VM places payloads in its DMA buffer (the per-flow
+//!   software queue); the device *fetches* them (DMA read — request TLP Up,
+//!   completion data Down), runs the accelerator, and DMA-writes the result
+//!   back (Up). Under Arcus the fetch is gated by the flow's hardware token
+//!   bucket — PatternA → PatternA′.
+//! - **Inline NIC RX**: frames arrive off the wire into the port's RX
+//!   buffer; the device pulls per-flow (shaped under Arcus), runs the
+//!   accelerator, DMA-writes results to host memory (Up).
+//! - **Inline NIC TX**: payload fetched from host (Down), accelerated, sent
+//!   out the wire.
+//! - **Inline P2P**: ingress like RX; egress re-shaped into the NVMe
+//!   subsystem (fabric write + SSD program) — Fig 5(b)'s PatternC.
+//! - **Storage flows** (Fig 6 / 11b): reads = SSD read then data DMA'd Up;
+//!   writes = data fetched Down then SSD program.
+//!
+//! Mode differences (§5.1): Arcus = per-flow hardware token buckets + the
+//! Algorithm-1 control loop; Host_TS_* = software token buckets with timer
+//! quantization + CPU-interference jitter on both shaping and completion
+//! paths; Host_no_TS / Bypassed_PANIC = no shaping, with PANIC using
+//! priority scheduling at the accelerator input.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::accel::{AccelUnit, Job};
+use crate::coordinator::planner::{self, Admission, PlannerConfig};
+use crate::coordinator::status::{FlowStatus, MeasuredWindow};
+use crate::coordinator::{AccTable, PerFlowStatusTable, ProfileTable};
+use crate::dma::Policy;
+use crate::flow::{FlowKind, Path, Slo, TrafficGen};
+use crate::metrics::{FlowMetrics, ThroughputSampler};
+use crate::nic::NicPort;
+use crate::pcie::fabric::{Fabric, OpComplete, OpKind};
+use crate::shaping::{
+    ShapeMode, Shaper, SoftwareShaper, SoftwareShaperConfig, TokenBucket, Verdict,
+};
+use crate::sim::Sim;
+use crate::storage::nvme::{Io, IoKind};
+use crate::storage::Raid0;
+use crate::util::units::{Time, NANOS};
+use crate::util::Rng;
+
+use super::report::{FlowReport, SystemReport};
+use super::spec::{ExperimentSpec, Mode};
+
+/// Hardware shaping decision latency (§5.3.1: 36 ns).
+const SHAPING_LATENCY: Time = 36 * NANOS;
+
+#[doc(hidden)]
+pub static EV_FETCH: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+#[doc(hidden)]
+pub static EV_FABRIC: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+#[doc(hidden)]
+pub static EV_ACCEL: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+#[doc(hidden)]
+pub static EV_RAID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+#[doc(hidden)]
+pub static EV_ARRIVE: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// A message travelling through the system.
+#[derive(Debug, Clone, Copy)]
+struct Msg {
+    flow: usize,
+    bytes: u64,
+    born: Time,
+}
+
+/// Which leg of its journey an in-flight operation is on.
+#[derive(Debug, Clone, Copy)]
+enum Stage {
+    /// DMA read of the ingress payload, or residence in the accelerator.
+    Fetch,
+    /// DMA write of the accelerator result / storage read data.
+    Egress,
+    /// Storage read in the SSD.
+    SsdRead,
+    /// Storage write program in the SSD.
+    SsdWrite,
+    /// P2P egress crossing PCIe toward the NVMe subsystem.
+    P2pStore,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct OpCtx {
+    msg: Msg,
+    stage: Stage,
+}
+
+/// Per-flow runtime state.
+struct FlowState {
+    gen: TrafficGen,
+    /// VM-side DMA buffer (function-call / TX / storage paths).
+    queue: VecDeque<Msg>,
+    shaper: Option<Box<dyn Shaper>>,
+    /// Cost units for shaping and sampling (bytes vs messages).
+    mode: ShapeMode,
+    inflight: usize,
+    /// Earliest already-scheduled fetch event (dedupe).
+    fetch_scheduled: Time,
+    /// Generation token: a scheduled fetch event is void unless its token
+    /// matches (prevents superseded events from spawning wake chains).
+    fetch_gen: u64,
+    admitted: bool,
+    /// NIC port for inline paths.
+    port: usize,
+    /// Current path (can change via SwitchPath).
+    path: Path,
+    /// Counters at the last control-plane window.
+    last_bytes: u64,
+    last_ops: u64,
+    last_tick: Time,
+    /// Latencies completed in the current control window (for p99).
+    window_lat: Vec<u64>,
+    reconfigs: u32,
+}
+
+/// The component graph.
+pub struct World {
+    spec: ExperimentSpec,
+    flows: Vec<FlowState>,
+    fabric: Fabric,
+    fabric_scheduled: Time,
+    fabric_gen: u64,
+    accels: Vec<AccelUnit>,
+    accel_scheduled: Vec<Time>,
+    accel_gen: Vec<u64>,
+    ports: Vec<NicPort>,
+    raid: Option<Raid0>,
+    raid_scheduled: Time,
+    raid_gen: u64,
+    op_ctx: HashMap<u64, OpCtx>,
+    /// Injection time of frames parked in NIC RX buffers.
+    frame_born: HashMap<u64, Time>,
+    next_op: u64,
+    metrics: Vec<FlowMetrics>,
+    samplers: Vec<ThroughputSampler>,
+    traces: Vec<Vec<(Time, Time, u64)>>,
+    /// Host-software interference model for interposed modes.
+    host_cfg: Option<SoftwareShaperConfig>,
+    host_rng: Rng,
+    // Control plane (Arcus only).
+    profile: ProfileTable,
+    acc_table: AccTable,
+    status: PerFlowStatusTable,
+    planner_cfg: PlannerConfig,
+}
+
+impl World {
+    fn new(spec: ExperimentSpec) -> Self {
+        let n = spec.flows.len();
+        let fabric = Fabric::new(spec.fabric, n.max(1));
+        let mut ports = vec![
+            NicPort::new(spec.nic_rate, 512 * 1024),
+            NicPort::new(spec.nic_rate, 512 * 1024),
+        ];
+        // Arcus's interface keeps per-flow SRAM queues with backpressure:
+        // partition each port's buffer among the inline flows it carries so
+        // one tenant's backlog cannot evict another's frames (Fig 4 step 6).
+        if spec.mode == Mode::Arcus {
+            for (p, port) in ports.iter_mut().enumerate() {
+                let inline = spec
+                    .flows
+                    .iter()
+                    .filter(|f| {
+                        matches!(f.path, Path::InlineNicRx | Path::InlineP2p)
+                            && f.kind == FlowKind::Accel
+                            && (if spec.shared_port { 0 } else { f.id % 2 }) == p
+                    })
+                    .count()
+                    .max(1);
+                port.set_flow_quota(512 * 1024 / inline as u64);
+            }
+        }
+        let raid = spec
+            .raid
+            .map(|r| Raid0::new(r.drives, r.ssd, spec.seed ^ 0x0A1D));
+        let profile = ProfileTable::learn(&spec.accels, &spec.fabric);
+        let mut acc_table = AccTable::default();
+        for m in &spec.accels {
+            acc_table.register(
+                m.name,
+                vec![
+                    Path::FunctionCall,
+                    Path::InlineNicRx,
+                    Path::InlineNicTx,
+                    Path::InlineP2p,
+                ],
+            );
+        }
+        let host_cfg = match spec.mode {
+            Mode::HostTsReflex => Some(SoftwareShaperConfig::reflex()),
+            Mode::HostTsFirecracker => Some(SoftwareShaperConfig::firecracker()),
+            _ => None,
+        };
+
+        let policy = match spec.mode {
+            Mode::BypassedPanic => {
+                Policy::Priority(spec.flows.iter().map(|f| f.priority).collect())
+            }
+            _ => Policy::RoundRobin,
+        };
+        let accels: Vec<AccelUnit> = spec
+            .accels
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                AccelUnit::new(m.clone(), n.max(1), policy.clone(), spec.seed ^ (i as u64 + 1))
+            })
+            .collect();
+
+        let flows: Vec<FlowState> = spec
+            .flows
+            .iter()
+            .map(|f| FlowState {
+                gen: TrafficGen::new(f.pattern.clone(), spec.seed, f.id as u64),
+                queue: VecDeque::new(),
+                shaper: None,
+                mode: match f.slo {
+                    Slo::Iops { .. } => ShapeMode::Iops,
+                    _ => ShapeMode::Gbps,
+                },
+                inflight: 0,
+                fetch_scheduled: Time::MAX,
+                fetch_gen: 0,
+                admitted: true,
+                port: if spec.shared_port { 0 } else { f.id % 2 },
+                path: f.path,
+                last_bytes: 0,
+                last_ops: 0,
+                last_tick: 0,
+                window_lat: Vec::new(),
+                reconfigs: 0,
+            })
+            .collect();
+
+        World {
+            host_rng: Rng::for_stream(spec.seed, 0x4057),
+            flows,
+            fabric,
+            fabric_scheduled: Time::MAX,
+            fabric_gen: 0,
+            accel_scheduled: vec![Time::MAX; accels.len()],
+            accel_gen: vec![0; accels.len()],
+            accels,
+            ports,
+            raid,
+            raid_scheduled: Time::MAX,
+            raid_gen: 0,
+            op_ctx: HashMap::new(),
+            frame_born: HashMap::new(),
+            next_op: 0,
+            metrics: (0..n).map(|_| FlowMetrics::new()).collect(),
+            samplers: (0..n)
+                .map(|_| ThroughputSampler::new(spec.sampler_window))
+                .collect(),
+            traces: (0..n).map(|_| Vec::new()).collect(),
+            host_cfg,
+            profile,
+            acc_table,
+            status: PerFlowStatusTable::default(),
+            planner_cfg: PlannerConfig::default(),
+            spec,
+        }
+    }
+
+    // ---- Registration & shaping setup ----------------------------------
+
+    /// Register every flow: admission control + initial shaper programming.
+    fn register_flows(&mut self) {
+        for i in 0..self.flows.len() {
+            let fs = self.spec.flows[i].clone();
+            let size_hint = fs.pattern.sizes.mean().round() as u64;
+            match self.spec.mode {
+                Mode::Arcus => {
+                    // Storage flows bypass the accelerator profile: the SSD
+                    // is its own capacity authority; shape at the SLO rate.
+                    if fs.kind != FlowKind::Accel {
+                        if let Some((rate, mode)) = fs.slo.required_rate() {
+                            self.flows[i].shaper = Some(Box::new(TokenBucket::for_rate(
+                                rate * self.planner_cfg.shaping_headroom,
+                                mode,
+                            )));
+                            self.flows[i].mode = mode;
+                        }
+                        self.register_status(i, size_hint, fs.slo.required_rate());
+                        continue;
+                    }
+                    let accel_name = self.spec.accels[fs.accel].name;
+                    match &fs.slo {
+                        Slo::BestEffort => {
+                            // Opportunistic class (§6): shaped to the current
+                            // headroom, refreshed every control tick.
+                            self.register_status(i, size_hint, None);
+                            let rate = self.opportunistic_rate(i);
+                            self.flows[i].shaper = Some(Box::new(TokenBucket::for_rate(
+                                rate.max(1.0),
+                                ShapeMode::Gbps,
+                            )));
+                            self.flows[i].mode = ShapeMode::Gbps;
+                        }
+                        Slo::Latency { .. } => {
+                            // Latency-critical flows run unshaped; Arcus
+                            // protects them by shaping everyone else.
+                            self.register_status(i, size_hint, None);
+                        }
+                        _ => {
+                            let verdict = planner::admission_control(
+                                &self.planner_cfg,
+                                &self.profile,
+                                &self.status,
+                                fs.accel,
+                                accel_name,
+                                fs.path,
+                                size_hint,
+                                &fs.slo,
+                            );
+                            match verdict {
+                                Admission::Accept { rate, params } => {
+                                    let mode = fs
+                                        .slo
+                                        .required_rate()
+                                        .map(|(_, m)| m)
+                                        .unwrap_or(ShapeMode::Gbps);
+                                    let mut tb = TokenBucket::new(params, mode);
+                                    // Program slightly above the SLO so the
+                                    // measured rate lands ON it.
+                                    tb.set_rate(0, rate * self.planner_cfg.shaping_headroom);
+                                    self.flows[i].shaper = Some(Box::new(tb));
+                                    self.flows[i].mode = mode;
+                                    self.register_status(i, size_hint, Some((rate, mode)));
+                                }
+                                Admission::Reject { .. } => {
+                                    self.flows[i].admitted = false;
+                                }
+                            }
+                        }
+                    }
+                }
+                Mode::HostTsReflex | Mode::HostTsFirecracker => {
+                    // Software rate limiting at the SLO's average rate (§5.1:
+                    // "the average ingress rate can be rate limited on the
+                    // host"; no heterogeneity / contention awareness).
+                    if let Some((rate, mode)) = fs.slo.required_rate() {
+                        let cfg = self.host_cfg.clone().unwrap();
+                        self.flows[i].shaper = Some(Box::new(SoftwareShaper::new(
+                            rate,
+                            mode,
+                            cfg,
+                            self.spec.seed ^ (0x50 + i as u64),
+                        )));
+                        self.flows[i].mode = mode;
+                    }
+                }
+                Mode::HostNoTs | Mode::BypassedPanic => {}
+            }
+        }
+    }
+
+    fn register_status(&mut self, i: usize, size_hint: u64, committed: Option<(f64, ShapeMode)>) {
+        let fs = &self.spec.flows[i];
+        let accel_name = if fs.kind == FlowKind::Accel {
+            self.spec.accels[fs.accel].name
+        } else {
+            "storage"
+        };
+        let mut row =
+            FlowStatus::new(fs.id, fs.vm, fs.path, fs.accel, accel_name, fs.slo, size_hint);
+        if let Some((rate, _)) = committed {
+            row.shaped_rate = Some(rate);
+        }
+        self.status.register(row);
+    }
+
+    /// Headroom available to an opportunistic flow on its accelerator.
+    fn opportunistic_rate(&self, i: usize) -> f64 {
+        let fs = &self.spec.flows[i];
+        let accel_name = self.spec.accels[fs.accel].name;
+        let size = fs.pattern.sizes.mean().round() as u64;
+        let n = self.status.flows_on_accel(fs.accel).len().max(1);
+        let cap = self
+            .profile
+            .capacity(accel_name, fs.path, size, n)
+            .map(|e| e.capacity.as_bits_per_sec() / 8.0)
+            .unwrap_or(0.0);
+        let committed = self.status.committed_rate(fs.accel);
+        (cap * (1.0 - self.planner_cfg.admission_headroom) - committed).max(cap * 0.02)
+    }
+
+    // ---- Arrivals --------------------------------------------------------
+
+    fn schedule_next_arrival(&mut self, sim: &mut Sim<World>, flow: usize) {
+        let a = self.flows[flow].gen.next();
+        if a.at >= self.spec.duration {
+            return;
+        }
+        let bytes = a.bytes;
+        sim.at(a.at.max(sim.now()), move |w, s| w.inject(s, flow, bytes));
+    }
+
+    /// A message enters the system at `now`.
+    fn inject(&mut self, sim: &mut Sim<World>, flow: usize, bytes: u64) {
+        EV_ARRIVE.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let now = sim.now();
+        self.schedule_next_arrival(sim, flow);
+        if !self.flows[flow].admitted {
+            self.metrics[flow].on_drop();
+            return;
+        }
+        if self.ingress_is_wire(flow) {
+            // Frame serializes over the wire, then lands in the RX buffer
+            // (or drops there if the shaped puller left it full).
+            let port = self.flows[flow].port;
+            let id = self.next_op;
+            self.next_op += 1;
+            let done = self.ports[port].rx_begin(now, bytes);
+            sim.at(done, move |w, s| {
+                let arrived = s.now();
+                if w.ports[port].rx_deliver(id, flow, bytes, arrived) {
+                    w.frame_born.insert(id, now);
+                    w.kick_fetch(s, flow, arrived);
+                } else if arrived >= w.spec.warmup {
+                    w.metrics[flow].on_drop();
+                }
+            });
+        } else {
+            // VM-side DMA buffer (function call / TX / storage).
+            if self.flows[flow].queue.len() >= self.spec.queue_cap {
+                if now >= self.spec.warmup {
+                    self.metrics[flow].on_drop();
+                }
+                return;
+            }
+            self.flows[flow].queue.push_back(Msg { flow, bytes, born: now });
+            self.kick_fetch(sim, flow, now);
+        }
+    }
+
+    /// Does this flow's ingress come off the wire (RX buffer) rather than
+    /// host memory?
+    fn ingress_is_wire(&self, flow: usize) -> bool {
+        matches!(self.flows[flow].path, Path::InlineNicRx | Path::InlineP2p)
+            && self.spec.flows[flow].kind == FlowKind::Accel
+    }
+
+    // ---- Fetch engine ----------------------------------------------------
+
+    /// Schedule a fetch attempt at `t` unless an earlier one is pending.
+    /// A generation token voids superseded events (an event scheduled for a
+    /// later time that a newer, earlier schedule replaced must not run, or
+    /// stale self-rescheduling chains accumulate).
+    fn kick_fetch(&mut self, sim: &mut Sim<World>, flow: usize, t: Time) {
+        let t = t.max(sim.now());
+        if t >= self.flows[flow].fetch_scheduled {
+            return;
+        }
+        self.flows[flow].fetch_scheduled = t;
+        self.flows[flow].fetch_gen += 1;
+        let gen = self.flows[flow].fetch_gen;
+        sim.at(t, move |w, s| {
+            if w.flows[flow].fetch_gen != gen {
+                return; // superseded
+            }
+            w.flows[flow].fetch_scheduled = Time::MAX;
+            w.ev_fetch(s, flow);
+        });
+    }
+
+    /// The device-side fetch engine for one flow: gated by the shaper and
+    /// the outstanding-fetch pipeline. This is where PatternA becomes
+    /// PatternA′ — the decoupling of §4.1.
+    fn ev_fetch(&mut self, sim: &mut Sim<World>, flow: usize) {
+        EV_FETCH.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        loop {
+            let now = sim.now();
+            if self.flows[flow].inflight >= self.spec.fetch_pipeline {
+                return; // a completion will re-kick
+            }
+            let is_rx = self.ingress_is_wire(flow);
+            // Size of the next candidate message. Under Arcus the interface
+            // keeps per-flow queues (frames demuxed by header); the
+            // baselines drain a single FIFO ring, so a flow may only pull
+            // when its frame is at the head — the head-of-line blocking the
+            // paper attributes to interfaces without per-flow interposition.
+            let per_flow_queues = self.spec.mode == Mode::Arcus;
+            let bytes = if is_rx {
+                let port = self.flows[flow].port;
+                if per_flow_queues {
+                    match self.ports[port].rx_flow_head(now, flow) {
+                        Some(f) => f.bytes,
+                        None => {
+                            if let Some(ready) = self.ports[port].rx_flow_head_ready(flow) {
+                                self.kick_fetch(sim, flow, ready);
+                            }
+                            return;
+                        }
+                    }
+                } else {
+                    match self.ports[port].rx_head() {
+                        Some(f) if f.flow == flow && f.arrived <= now => f.bytes,
+                        Some(f) if f.flow == flow => {
+                            self.kick_fetch(sim, flow, f.arrived);
+                            return;
+                        }
+                        _ => return, // head owned by another flow (or empty)
+                    }
+                }
+            } else {
+                match self.flows[flow].queue.front() {
+                    Some(m) => m.bytes,
+                    None => return,
+                }
+            };
+            let cost = match self.flows[flow].mode {
+                ShapeMode::Gbps => bytes,
+                ShapeMode::Iops => 1,
+            };
+            let verdict = match &mut self.flows[flow].shaper {
+                Some(s) => s.try_acquire(now, cost),
+                None => Verdict::Admit,
+            };
+            match verdict {
+                Verdict::Admit => {
+                    self.flows[flow].inflight += 1;
+                    if is_rx {
+                        let port = self.flows[flow].port;
+                        let frame = if per_flow_queues {
+                            self.ports[port]
+                                .rx_pull_flow(now, flow)
+                                .expect("head frame vanished")
+                        } else {
+                            let f = self.ports[port].rx_pull(now).expect("head vanished");
+                            debug_assert_eq!(f.flow, flow);
+                            // The new FIFO head may belong to another flow.
+                            if let Some(next) = self.ports[port].rx_head() {
+                                if next.flow != flow {
+                                    self.kick_fetch(sim, next.flow, next.arrived.max(now));
+                                }
+                            }
+                            f
+                        };
+                        let born = self
+                            .frame_born
+                            .remove(&frame.id)
+                            .unwrap_or(frame.arrived);
+                        let msg = Msg { flow, bytes: frame.bytes, born };
+                        // RX ingress data is already on the device: into the
+                        // accelerator after the shaping decision latency.
+                        let accel = self.spec.flows[flow].accel;
+                        sim.at(now + SHAPING_LATENCY, move |w, s| {
+                            w.submit_accel(s, accel, msg)
+                        });
+                    } else {
+                        let msg = self.flows[flow].queue.pop_front().unwrap();
+                        self.issue_ingress(sim, msg);
+                    }
+                }
+                Verdict::RetryAt(t) => {
+                    self.kick_fetch(sim, flow, t);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Issue the PCIe/SSD leg of a message's ingress per its path/kind.
+    fn issue_ingress(&mut self, sim: &mut Sim<World>, msg: Msg) {
+        let flow = msg.flow;
+        let op = self.next_op;
+        self.next_op += 1;
+        match self.spec.flows[flow].kind {
+            FlowKind::Accel => {
+                // Fetch the payload from host memory: DMA read.
+                self.op_ctx.insert(op, OpCtx { msg, stage: Stage::Fetch });
+                self.fabric.read(flow, msg.bytes, op);
+                self.wake_fabric(sim);
+            }
+            FlowKind::StorageRead => {
+                // NVMe read: SSD first, then data DMA'd Up to the host.
+                self.op_ctx.insert(op, OpCtx { msg, stage: Stage::SsdRead });
+                self.raid
+                    .as_mut()
+                    .expect("storage flow without RAID")
+                    .submit(Io { id: op, kind: IoKind::Read, bytes: msg.bytes });
+                self.wake_raid(sim);
+            }
+            FlowKind::StorageWrite => {
+                // NVMe write: fetch the data from host memory (Down), then
+                // program the SSD.
+                self.op_ctx.insert(op, OpCtx { msg, stage: Stage::Fetch });
+                self.fabric.read(flow, msg.bytes, op);
+                self.wake_fabric(sim);
+            }
+        }
+    }
+
+    /// Submit a payload-resident message to an accelerator.
+    fn submit_accel(&mut self, sim: &mut Sim<World>, accel: usize, msg: Msg) {
+        let op = self.next_op;
+        self.next_op += 1;
+        self.op_ctx.insert(op, OpCtx { msg, stage: Stage::Fetch });
+        self.accels[accel].submit(Job { id: op, flow: msg.flow, bytes: msg.bytes });
+        self.wake_accel(sim, accel);
+    }
+
+    // ---- Component pumps (dedup-scheduled wakes) ------------------------
+
+    fn wake_fabric(&mut self, sim: &mut Sim<World>) {
+        EV_FABRIC.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let now = sim.now();
+        let (done, next) = self.fabric.pump(now);
+        for d in done {
+            self.on_fabric_op(sim, d);
+        }
+        if let Some(t) = next {
+            let t = t.max(now + 1);
+            if t < self.fabric_scheduled {
+                self.fabric_scheduled = t;
+                self.fabric_gen += 1;
+                let gen = self.fabric_gen;
+                sim.at(t, move |w, s| {
+                    if w.fabric_gen != gen {
+                        return; // superseded
+                    }
+                    w.fabric_scheduled = Time::MAX;
+                    w.wake_fabric(s);
+                });
+            }
+        }
+    }
+
+    fn wake_accel(&mut self, sim: &mut Sim<World>, i: usize) {
+        EV_ACCEL.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let now = sim.now();
+        let (done, next) = self.accels[i].pump(now);
+        for d in done {
+            self.on_accel_done(sim, d.job.id, d.egress_bytes, d.at);
+        }
+        if let Some(t) = next {
+            let t = t.max(now + 1);
+            if t < self.accel_scheduled[i] {
+                self.accel_scheduled[i] = t;
+                self.accel_gen[i] += 1;
+                let gen = self.accel_gen[i];
+                sim.at(t, move |w, s| {
+                    if w.accel_gen[i] != gen {
+                        return; // superseded
+                    }
+                    w.accel_scheduled[i] = Time::MAX;
+                    w.wake_accel(s, i);
+                });
+            }
+        }
+    }
+
+    fn wake_raid(&mut self, sim: &mut Sim<World>) {
+        let now = sim.now();
+        let Some(raid) = self.raid.as_mut() else { return };
+        let (done, next) = raid.pump(now);
+        for d in done {
+            self.on_raid_done(sim, d.io.id);
+        }
+        if let Some(t) = next {
+            let t = t.max(now + 1);
+            if t < self.raid_scheduled {
+                self.raid_scheduled = t;
+                self.raid_gen += 1;
+                let gen = self.raid_gen;
+                sim.at(t, move |w, s| {
+                    if w.raid_gen != gen {
+                        return; // superseded
+                    }
+                    w.raid_scheduled = Time::MAX;
+                    w.wake_raid(s);
+                });
+            }
+        }
+    }
+
+    // ---- Stage transitions ----------------------------------------------
+
+    fn on_fabric_op(&mut self, sim: &mut Sim<World>, d: OpComplete) {
+        let Some(ctx) = self.op_ctx.remove(&d.op) else { return };
+        let msg = ctx.msg;
+        let flow = msg.flow;
+        match (ctx.stage, d.kind) {
+            (Stage::Fetch, OpKind::Read) => match self.spec.flows[flow].kind {
+                FlowKind::Accel => {
+                    let accel = self.spec.flows[flow].accel;
+                    self.submit_accel(sim, accel, msg);
+                }
+                FlowKind::StorageWrite => {
+                    let op = self.next_op;
+                    self.next_op += 1;
+                    self.op_ctx.insert(op, OpCtx { msg, stage: Stage::SsdWrite });
+                    self.raid
+                        .as_mut()
+                        .expect("storage flow without RAID")
+                        .submit(Io { id: op, kind: IoKind::Write, bytes: msg.bytes });
+                    self.wake_raid(sim);
+                }
+                FlowKind::StorageRead => unreachable!("reads start at the SSD"),
+            },
+            (Stage::Egress, OpKind::Write) => {
+                self.complete(sim, msg, d.at);
+            }
+            (Stage::P2pStore, OpKind::Write) => {
+                // Result crossed PCIe into the NVMe buffer: program the SSD.
+                let op = self.next_op;
+                self.next_op += 1;
+                self.op_ctx.insert(op, OpCtx { msg, stage: Stage::SsdWrite });
+                self.raid
+                    .as_mut()
+                    .expect("p2p flow without RAID")
+                    .submit(Io { id: op, kind: IoKind::Write, bytes: msg.bytes });
+                self.wake_raid(sim);
+            }
+            (stage, kind) => unreachable!("fabric {kind:?} in stage {stage:?}"),
+        }
+    }
+
+    fn on_accel_done(&mut self, sim: &mut Sim<World>, op: u64, egress_bytes: u64, at: Time) {
+        let Some(ctx) = self.op_ctx.remove(&op) else { return };
+        let msg = ctx.msg;
+        let flow = msg.flow;
+        match self.flows[flow].path {
+            Path::FunctionCall | Path::InlineNicRx => {
+                // Result DMA-written to host memory (Up).
+                let op2 = self.next_op;
+                self.next_op += 1;
+                self.op_ctx.insert(op2, OpCtx { msg, stage: Stage::Egress });
+                self.fabric.write(flow, egress_bytes, op2);
+                self.wake_fabric(sim);
+            }
+            Path::InlineNicTx => {
+                // Result leaves on the wire.
+                let port = self.flows[flow].port;
+                let done = self.ports[port].tx_frame(at, egress_bytes);
+                sim.at(done.max(sim.now()), move |w, s| {
+                    let t = s.now();
+                    w.complete(s, msg, t);
+                });
+            }
+            Path::InlineP2p => {
+                // Result shaped into the NVMe subsystem: PCIe write + program.
+                let op2 = self.next_op;
+                self.next_op += 1;
+                self.op_ctx.insert(op2, OpCtx { msg, stage: Stage::P2pStore });
+                self.fabric.write(flow, egress_bytes, op2);
+                self.wake_fabric(sim);
+            }
+        }
+    }
+
+    fn on_raid_done(&mut self, sim: &mut Sim<World>, op: u64) {
+        let Some(ctx) = self.op_ctx.remove(&op) else { return };
+        let msg = ctx.msg;
+        let flow = msg.flow;
+        match ctx.stage {
+            Stage::SsdRead => {
+                // Data DMA'd Up to the host.
+                let op2 = self.next_op;
+                self.next_op += 1;
+                self.op_ctx.insert(op2, OpCtx { msg, stage: Stage::Egress });
+                self.fabric.write(flow, msg.bytes, op2);
+                self.wake_fabric(sim);
+            }
+            Stage::SsdWrite => {
+                let t = sim.now();
+                self.complete(sim, msg, t);
+            }
+            other => unreachable!("raid completion in stage {other:?}"),
+        }
+    }
+
+    /// A message finished its device-side journey.
+    fn complete(&mut self, sim: &mut Sim<World>, msg: Msg, at: Time) {
+        // Host-interposed modes pay CPU-interference cost on the completion
+        // path (guest notification / vCPU wakeup through the hypervisor).
+        if let Some(cfg) = self.host_cfg.clone() {
+            let mut extra = cfg.decision_overhead;
+            if self.host_rng.chance(cfg.preempt_prob) {
+                extra += (self
+                    .host_rng
+                    .pareto(cfg.preempt_scale as f64, cfg.preempt_alpha)
+                    as Time)
+                    .min(cfg.preempt_cap);
+            }
+            if extra > 0 {
+                let later = at.max(sim.now()) + extra;
+                sim.at(later, move |w, s| {
+                    let t = s.now();
+                    w.finish(s, msg, t);
+                });
+                return;
+            }
+        }
+        self.finish(sim, msg, at.max(sim.now()));
+    }
+
+    fn finish(&mut self, sim: &mut Sim<World>, msg: Msg, at: Time) {
+        let flow = msg.flow;
+        self.flows[flow].inflight = self.flows[flow].inflight.saturating_sub(1);
+        if at >= self.spec.warmup {
+            self.metrics[flow].on_complete(at, msg.born, msg.bytes);
+            match self.flows[flow].mode {
+                ShapeMode::Iops => self.samplers[flow].on_complete_op(at),
+                ShapeMode::Gbps => self.samplers[flow].on_complete(at, msg.bytes),
+            }
+            let lat = at.saturating_sub(msg.born);
+            self.flows[flow].window_lat.push(lat);
+            if self.spec.trace {
+                self.traces[flow].push((at, lat, msg.bytes));
+            }
+        }
+        // The freed pipeline slot can admit the next message.
+        self.kick_fetch(sim, flow, at);
+    }
+
+    // ---- Control plane ----------------------------------------------------
+
+    /// One tick of Algorithm 1 (Arcus only).
+    fn ev_control_tick(&mut self, sim: &mut Sim<World>) {
+        let now = sim.now();
+        // 1. Refresh measured windows from the "hardware counters".
+        for i in 0..self.flows.len() {
+            if self.status.get(i).is_none() {
+                continue;
+            }
+            let m = &self.metrics[i];
+            let span = now - self.flows[i].last_tick;
+            let bytes = m.bytes - self.flows[i].last_bytes;
+            let ops = m.completed - self.flows[i].last_ops;
+            let p99 = if self.flows[i].window_lat.is_empty() {
+                None
+            } else {
+                let mut v = std::mem::take(&mut self.flows[i].window_lat);
+                v.sort_unstable();
+                let idx = ((v.len() - 1) as f64 * 0.99).round() as usize;
+                Some(v[idx])
+            };
+            self.flows[i].last_bytes = m.bytes;
+            self.flows[i].last_ops = m.completed;
+            self.flows[i].last_tick = now;
+            self.status
+                .record_window(i, MeasuredWindow { span, bytes, ops, p99_latency: p99 });
+        }
+        // 2. Plan.
+        let actions = planner::run_tick(
+            &self.planner_cfg,
+            &self.profile,
+            &self.acc_table,
+            &self.status,
+        );
+        // 3. Apply after the reconfiguration latency (~10 µs of MMIO round
+        //    trips, §5.3.1), without interrupting dataplane operation.
+        let delay = self.spec.reconfig_latency;
+        for a in actions {
+            sim.after(delay, move |w, s| w.apply_action(s, a));
+        }
+        // 4. Refresh opportunistic flows (§6's no-guarantee class): back off
+        //    multiplicatively whenever a committed flow on the same engine
+        //    is violating (the harvest must never cost an SLO), otherwise
+        //    creep back up toward the profiled headroom.
+        let mut accel_violated = vec![false; self.accels.len()];
+        for row in self.status.iter() {
+            if row.state == crate::coordinator::status::SloState::Violating
+                && row.violations >= self.planner_cfg.reshape_after
+                && !matches!(row.slo, Slo::BestEffort)
+            {
+                if let Some(v) = accel_violated.get_mut(row.accel) {
+                    *v = true;
+                }
+            }
+        }
+        for i in 0..self.flows.len() {
+            if matches!(self.spec.flows[i].slo, Slo::BestEffort)
+                && self.flows[i].shaper.is_some()
+            {
+                let headroom = self.opportunistic_rate(i);
+                let violated = accel_violated
+                    .get(self.spec.flows[i].accel)
+                    .copied()
+                    .unwrap_or(false);
+                if let Some(s) = &mut self.flows[i].shaper {
+                    let current = s.rate();
+                    let target = if violated {
+                        (current * 0.6).max(headroom * 0.02)
+                    } else {
+                        (current * 1.10).min(headroom)
+                    };
+                    if (current - target).abs() / current.max(1.0) > 0.02 {
+                        s.set_rate(now, target.max(1.0));
+                        self.flows[i].reconfigs += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    fn apply_action(&mut self, sim: &mut Sim<World>, a: planner::Action) {
+        let now = sim.now();
+        match a {
+            planner::Action::Reshape { flow, rate, params } => {
+                if let Some(s) = &mut self.flows[flow].shaper {
+                    s.set_rate(now, rate);
+                    self.flows[flow].reconfigs += 1;
+                }
+                if let Some(row) = self.status.get_mut(flow) {
+                    row.shaped_rate = Some(rate);
+                    row.params = Some(params);
+                    row.reconfigs += 1;
+                }
+                self.kick_fetch(sim, flow, now);
+            }
+            planner::Action::SwitchPath { flow, to } => {
+                self.flows[flow].path = to;
+                if let Some(row) = self.status.get_mut(flow) {
+                    row.path = to;
+                    row.reconfigs += 1;
+                }
+                self.flows[flow].reconfigs += 1;
+                self.kick_fetch(sim, flow, now);
+            }
+        }
+    }
+}
+
+/// The engine: a [`World`] plus its simulator.
+pub struct Engine {
+    pub sim: Sim<World>,
+    pub world: World,
+}
+
+impl Engine {
+    pub fn new(spec: ExperimentSpec) -> Self {
+        let mut world = World::new(spec);
+        world.register_flows();
+        let mut sim = Sim::new();
+        // Seed the first arrival of every flow.
+        for i in 0..world.flows.len() {
+            world.schedule_next_arrival(&mut sim, i);
+        }
+        // Control-plane ticker (Algorithm 1 "run by every client server
+        // periodically"); Arcus only.
+        if world.spec.mode == Mode::Arcus {
+            let period = world.spec.control_period;
+            crate::sim::every(&mut sim, period, |w: &mut World, s| {
+                w.ev_control_tick(s);
+                s.now() < w.spec.duration
+            });
+        }
+        Engine { sim, world }
+    }
+
+    /// Run to the spec's duration and produce the report.
+    pub fn run(mut self) -> SystemReport {
+        let start = std::time::Instant::now();
+        let duration = self.world.spec.duration;
+        self.sim.run_until(&mut self.world, duration);
+        let wall = start.elapsed().as_secs_f64();
+        let w = self.world;
+        let span = duration - w.spec.warmup;
+        let per_flow = w
+            .spec
+            .flows
+            .iter()
+            .enumerate()
+            .map(|(i, f)| {
+                FlowReport::from_metrics(
+                    f.id,
+                    f.vm,
+                    f.slo,
+                    !w.flows[i].admitted,
+                    &w.metrics[i],
+                    w.samplers[i].clone(),
+                    w.flows[i].reconfigs,
+                    w.traces[i].clone(),
+                )
+            })
+            .collect();
+        use crate::pcie::link::Dir;
+        SystemReport {
+            mode: w.spec.mode.name(),
+            per_flow,
+            measured_span: span,
+            pcie_up_util: w.fabric.link().busy_time(Dir::Up) as f64 / duration as f64,
+            pcie_down_util: w.fabric.link().busy_time(Dir::Down) as f64 / duration as f64,
+            accel_util: w.accels.iter().map(|a| a.utilization(duration)).collect(),
+            nic_rx_dropped: w.ports.iter().map(|p| p.rx_dropped).sum(),
+            events: self.sim.executed(),
+            wall_secs: wall,
+        }
+    }
+}
+
+/// Convenience: build + run in one call.
+pub fn run(spec: &ExperimentSpec) -> SystemReport {
+    Engine::new(spec.clone()).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AccelModel;
+    use crate::flow::{FlowSpec, TrafficPattern};
+    use crate::storage::SsdConfig;
+    use crate::util::units::{Rate, MILLIS};
+
+    fn two_flow_spec(mode: Mode, load1: f64, load2: f64) -> ExperimentSpec {
+        let line = Rate::gbps(32.0);
+        let flows = vec![
+            FlowSpec::new(
+                0,
+                0,
+                Path::FunctionCall,
+                TrafficPattern::fixed(1500, load1, line),
+                Slo::gbps(10.0),
+                0,
+            ),
+            FlowSpec::new(
+                1,
+                1,
+                Path::FunctionCall,
+                TrafficPattern::fixed(1500, load2, line),
+                Slo::gbps(12.0),
+                0,
+            ),
+        ];
+        ExperimentSpec::new(mode, vec![AccelModel::ipsec_32g()], flows)
+            .with_duration(3 * MILLIS)
+            .with_warmup(MILLIS / 2)
+    }
+
+    #[test]
+    fn function_call_flow_completes_under_all_modes() {
+        for mode in [
+            Mode::Arcus,
+            Mode::HostNoTs,
+            Mode::HostTsReflex,
+            Mode::HostTsFirecracker,
+            Mode::BypassedPanic,
+        ] {
+            let report = run(&two_flow_spec(mode, 0.2, 0.2));
+            for f in &report.per_flow {
+                assert!(
+                    f.completed > 1000,
+                    "{}: flow {} completed {}",
+                    mode.name(),
+                    f.flow,
+                    f.completed
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn arcus_shapes_to_slo_under_oversubscription() {
+        // Both flows offer 0.5×32 G each (oversubscribed vs their SLOs);
+        // Arcus should trim them to ~10 and ~12 Gbps.
+        let report = run(&two_flow_spec(Mode::Arcus, 0.5, 0.5));
+        let f0 = &report.per_flow[0];
+        let f1 = &report.per_flow[1];
+        let a0 = f0.goodput.as_gbps();
+        let a1 = f1.goodput.as_gbps();
+        assert!((a0 - 10.0).abs() / 10.0 < 0.08, "flow0 {a0:.2} Gbps");
+        assert!((a1 - 12.0).abs() / 12.0 < 0.08, "flow1 {a1:.2} Gbps");
+    }
+
+    #[test]
+    fn unshaped_baseline_violates_slo_split() {
+        // Same demand, no shaping: flows split the engine ~evenly instead of
+        // the 10/12 SLO, and variance is higher.
+        let report = run(&two_flow_spec(Mode::HostNoTs, 0.8, 0.8));
+        let a0 = report.per_flow[0].goodput.as_gbps();
+        let a1 = report.per_flow[1].goodput.as_gbps();
+        // Engine sustains ~26 Gbps at 1500 B; equal split ≈ 13/13 — flow 1
+        // under-attains its 12 G SLO is false here, but flow 0 *over*-attains
+        // 10 G: allocation does not follow SLOs.
+        assert!((a0 / a1 - 1.0).abs() < 0.1, "even split expected: {a0:.1}/{a1:.1}");
+    }
+
+    #[test]
+    fn storage_flows_complete_and_shape() {
+        let ssd = SsdConfig::samsung_983dct();
+        let flows = vec![
+            FlowSpec::storage(
+                0,
+                0,
+                TrafficPattern::fixed(4096, 0.5, Rate::gbps(20.0)),
+                Slo::iops(300_000.0),
+                FlowKind::StorageRead,
+            ),
+            FlowSpec::storage(
+                1,
+                1,
+                TrafficPattern::fixed(4096, 0.5, Rate::gbps(20.0)),
+                Slo::iops(200_000.0),
+                FlowKind::StorageWrite,
+            ),
+        ];
+        let spec = ExperimentSpec::new(Mode::Arcus, vec![], flows)
+            .with_duration(10 * MILLIS)
+            .with_warmup(MILLIS)
+            .with_raid(4, ssd);
+        let report = run(&spec);
+        assert!(report.per_flow[0].completed > 1000);
+        assert!(report.per_flow[1].completed > 100);
+        // Reads shaped at 300K IOPS: 0.5×20G/4KB = 305K offered.
+        let iops0 = report.per_flow[0].iops;
+        assert!(
+            (iops0 - 300_000.0).abs() / 300_000.0 < 0.05,
+            "read iops {iops0:.0}"
+        );
+    }
+
+    #[test]
+    fn rx_path_flows_complete() {
+        let flows = vec![FlowSpec::new(
+            0,
+            0,
+            Path::InlineNicRx,
+            TrafficPattern::fixed(1500, 0.4, Rate::gbps(50.0)),
+            Slo::gbps(15.0),
+            0,
+        )];
+        let spec = ExperimentSpec::new(Mode::Arcus, vec![AccelModel::aes_128()], flows)
+            .with_duration(5 * MILLIS)
+            .with_warmup(MILLIS);
+        let report = run(&spec);
+        assert!(report.per_flow[0].completed > 1000);
+        let gbps = report.per_flow[0].goodput.as_gbps();
+        assert!((gbps - 15.0).abs() / 15.0 < 0.1, "rx goodput {gbps:.2}");
+    }
+
+    #[test]
+    fn baseline_fifo_ring_blocks_latency_flow_behind_backlog() {
+        // Shared port, a tiny latency flow beside an oversubscribed MTU
+        // stream: Arcus (per-flow queues) must beat the FIFO-ring baseline
+        // on the tiny flow's tail.
+        let line = Rate::gbps(50.0);
+        let mk = |mode| {
+            let flows = vec![
+                FlowSpec {
+                    id: 0,
+                    vm: 0,
+                    path: Path::InlineNicRx,
+                    pattern: TrafficPattern::fixed(64, 0.02, line),
+                    slo: Slo::Latency { max_ps: crate::util::units::MICROS, percentile: 99.0 },
+                    accel: 0,
+                    kind: FlowKind::Accel,
+                    priority: 0,
+                },
+                FlowSpec {
+                    id: 1,
+                    vm: 1,
+                    path: Path::InlineNicRx,
+                    pattern: {
+                        let mut p = TrafficPattern::fixed(1500, 0.72, line);
+                        p.burst = crate::flow::pattern::Burstiness::Poisson;
+                        p
+                    },
+                    slo: Slo::gbps(32.0),
+                    accel: 0,
+                    kind: FlowKind::Accel,
+                    priority: 1,
+                },
+            ];
+            ExperimentSpec::new(
+                mode,
+                vec![AccelModel::synthetic(Rate::gbps(40.0))],
+                flows,
+            )
+            .with_duration(4 * MILLIS)
+            .with_warmup(MILLIS)
+            .with_shared_port()
+        };
+        let arcus = run(&mk(Mode::Arcus));
+        let base = run(&mk(Mode::BypassedPanic));
+        assert!(
+            arcus.per_flow[0].lat_p99 < base.per_flow[0].lat_p99,
+            "arcus p99 {} !< baseline p99 {}",
+            arcus.per_flow[0].lat_p99,
+            base.per_flow[0].lat_p99
+        );
+        // And the stream is pinned at its SLO only under Arcus.
+        let a = arcus.per_flow[1].goodput.as_gbps();
+        let b = base.per_flow[1].goodput.as_gbps();
+        assert!((a - 32.0).abs() < 1.2, "arcus stream {a:.2}");
+        assert!(b > 34.0, "baseline overload expected, got {b:.2}");
+    }
+
+    #[test]
+    fn best_effort_backs_off_when_committed_flow_violates() {
+        // A committed flow and a greedy best-effort flow; mid-run the
+        // committed flow's demand rises. The BE flow must shrink.
+        let line = Rate::gbps(32.0);
+        let flows = vec![
+            FlowSpec::new(
+                0,
+                0,
+                Path::FunctionCall,
+                TrafficPattern::fixed(4096, 0.6, line),
+                Slo::gbps(18.0),
+                0,
+            ),
+            FlowSpec::new(
+                1,
+                1,
+                Path::FunctionCall,
+                TrafficPattern::fixed(4096, 0.9, line),
+                Slo::BestEffort,
+                0,
+            ),
+        ];
+        let spec = ExperimentSpec::new(Mode::Arcus, vec![AccelModel::ipsec_32g()], flows)
+            .with_duration(8 * MILLIS)
+            .with_warmup(2 * MILLIS);
+        let r = run(&spec);
+        let committed = r.per_flow[0].slo_attainment().unwrap();
+        assert!(committed > 0.93, "committed attainment {committed:.2}");
+        // Engine ~32 G effective at 4 KB: BE gets the leftover, not more.
+        let be = r.per_flow[1].goodput.as_gbps();
+        assert!(be < 16.0, "best effort {be:.2} should be bounded by leftovers");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut spec = two_flow_spec(Mode::BypassedPanic, 0.3, 0.4);
+        spec.duration = 2 * MILLIS;
+        let a = run(&spec);
+        let b = run(&spec);
+        for (x, y) in a.per_flow.iter().zip(b.per_flow.iter()) {
+            assert_eq!(x.completed, y.completed);
+            assert_eq!(x.bytes, y.bytes);
+            assert_eq!(x.lat_p99, y.lat_p99);
+        }
+    }
+
+    #[test]
+    fn admission_rejects_oversubscribed_third_flow() {
+        let line = Rate::gbps(32.0);
+        let mut flows: Vec<FlowSpec> = (0..3)
+            .map(|i| {
+                FlowSpec::new(
+                    i,
+                    i,
+                    Path::FunctionCall,
+                    TrafficPattern::fixed(1500, 0.5, line),
+                    Slo::gbps(12.0),
+                    0,
+                )
+            })
+            .collect();
+        flows[2].slo = Slo::gbps(15.0); // 12+12+15 > ~26G capacity at 1500B
+        let spec = ExperimentSpec::new(Mode::Arcus, vec![AccelModel::ipsec_32g()], flows)
+            .with_duration(5 * MILLIS);
+        let report = run(&spec);
+        assert!(!report.per_flow[0].rejected);
+        assert!(!report.per_flow[1].rejected);
+        assert!(report.per_flow[2].rejected, "third flow should be rejected");
+        assert_eq!(report.per_flow[2].completed, 0);
+    }
+}

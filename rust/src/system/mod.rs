@@ -1,0 +1,16 @@
+//! System builder: wires flows, shapers, PCIe fabric, accelerators, NIC
+//! ports and storage into one runnable discrete-event experiment, under any
+//! of the five management architectures of §5.1 (Arcus + four baselines).
+//!
+//! The [`spec::ExperimentSpec`] is the typed experiment description; the
+//! [`engine::Engine`] executes it on the [`crate::sim`] core and returns a
+//! [`report::SystemReport`] with the per-flow metrics every figure in the
+//! paper is derived from.
+
+pub mod engine;
+pub mod report;
+pub mod spec;
+
+pub use engine::{run, Engine};
+pub use report::{FlowReport, SystemReport};
+pub use spec::{ExperimentSpec, Mode, RaidSpec};

@@ -1,0 +1,171 @@
+//! Experiment specification: which management architecture, which devices,
+//! which flows — the typed form of an experiment config file.
+
+use crate::accel::AccelModel;
+use crate::flow::FlowSpec;
+use crate::pcie::fabric::FabricConfig;
+use crate::storage::nvme::SsdConfig;
+use crate::util::units::{Rate, Time, MICROS, MILLIS};
+
+/// Management architecture under test (§5.1 Configurations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Arcus: per-flow hardware token buckets + SLO-aware control plane.
+    Arcus,
+    /// Kernel-bypass access, weighted-round-robin arbitration, no shaping.
+    HostNoTs,
+    /// ReFlex-style on-host software shaping (fine timers, polling).
+    HostTsReflex,
+    /// Firecracker-style on-host software shaping (coarser timers).
+    HostTsFirecracker,
+    /// PANIC interface: hypervisor-bypassed, priority + WFQ scheduling at
+    /// the accelerator, no shaping, no proactive SLO management.
+    BypassedPanic,
+}
+
+impl Mode {
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Arcus => "arcus",
+            Mode::HostNoTs => "host_no_ts",
+            Mode::HostTsReflex => "host_ts_reflex",
+            Mode::HostTsFirecracker => "host_ts_firecracker",
+            Mode::BypassedPanic => "bypassed_panic",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Mode> {
+        Some(match s {
+            "arcus" => Mode::Arcus,
+            "host_no_ts" => Mode::HostNoTs,
+            "host_ts_reflex" => Mode::HostTsReflex,
+            "host_ts_firecracker" => Mode::HostTsFirecracker,
+            "bypassed_panic" => Mode::BypassedPanic,
+            _ => return None,
+        })
+    }
+
+    /// Does this architecture interpose host software on the data path?
+    pub fn host_interposed(self) -> bool {
+        matches!(self, Mode::HostTsReflex | Mode::HostTsFirecracker)
+    }
+}
+
+/// A full experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub mode: Mode,
+    pub seed: u64,
+    /// Virtual duration of the measured run.
+    pub duration: Time,
+    /// Virtual warmup discarded from metrics.
+    pub warmup: Time,
+    pub fabric: FabricConfig,
+    /// Accelerators on the device (flows reference them by index).
+    pub accels: Vec<AccelModel>,
+    pub flows: Vec<FlowSpec>,
+    /// RAID-0 array present (storage flows require it).
+    pub raid: Option<RaidSpec>,
+    /// NIC port line rate for inline flows.
+    pub nic_rate: Rate,
+    /// Control-plane period (Algorithm 1 cadence).
+    pub control_period: Time,
+    /// Reconfiguration latency (MMIO over PCIe, §5.3.1: ~10 µs).
+    pub reconfig_latency: Time,
+    /// Throughput sampling window in requests (§5.2: every 500 requests).
+    pub sampler_window: u64,
+    /// Per-flow software-queue capacity in messages (drop beyond).
+    pub queue_cap: usize,
+    /// Max outstanding ingress fetches per flow (DMA pipelining).
+    pub fetch_pipeline: usize,
+    /// Record per-completion traces (time, latency, bytes) for time-series
+    /// plots (Fig 9). Off by default: traces cost memory.
+    pub trace: bool,
+    /// Put every inline flow on NIC port 0 (bump-in-the-wire sharing, Fig 9
+    /// / Fig 11a); default spreads flows across the two ports.
+    pub shared_port: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct RaidSpec {
+    pub drives: usize,
+    pub ssd: SsdConfig,
+}
+
+impl ExperimentSpec {
+    /// Sensible defaults matching the paper's testbed constants.
+    pub fn new(mode: Mode, accels: Vec<AccelModel>, flows: Vec<FlowSpec>) -> Self {
+        ExperimentSpec {
+            mode,
+            seed: 1,
+            duration: 20 * MILLIS,
+            warmup: 2 * MILLIS,
+            fabric: FabricConfig::gen3_x8(),
+            accels,
+            flows,
+            raid: None,
+            nic_rate: Rate::gbps(50.0),
+            control_period: 100 * MICROS,
+            reconfig_latency: 10 * MICROS,
+            sampler_window: 500,
+            queue_cap: 4096,
+            fetch_pipeline: 16,
+            trace: false,
+            shared_port: false,
+        }
+    }
+
+    pub fn with_trace(mut self) -> Self {
+        self.trace = true;
+        self
+    }
+
+    pub fn with_shared_port(mut self) -> Self {
+        self.shared_port = true;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+    pub fn with_duration(mut self, d: Time) -> Self {
+        self.duration = d;
+        self
+    }
+    pub fn with_warmup(mut self, w: Time) -> Self {
+        self.warmup = w;
+        self
+    }
+    pub fn with_raid(mut self, drives: usize, ssd: SsdConfig) -> Self {
+        self.raid = Some(RaidSpec { drives, ssd });
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_name_roundtrip() {
+        for m in [
+            Mode::Arcus,
+            Mode::HostNoTs,
+            Mode::HostTsReflex,
+            Mode::HostTsFirecracker,
+            Mode::BypassedPanic,
+        ] {
+            assert_eq!(Mode::by_name(m.name()), Some(m));
+        }
+        assert!(Mode::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn defaults_match_paper_constants() {
+        let spec = ExperimentSpec::new(Mode::Arcus, vec![], vec![]);
+        assert_eq!(spec.control_period, 100 * MICROS);
+        assert_eq!(spec.reconfig_latency, 10 * MICROS);
+        assert_eq!(spec.sampler_window, 500);
+    }
+}

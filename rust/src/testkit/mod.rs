@@ -1,0 +1,266 @@
+//! Minimal property-based testing kit.
+//!
+//! `proptest` is not available in the offline registry, so this module
+//! provides the subset we need: seeded generators, a `forall` driver that
+//! runs N random cases, and greedy input shrinking for failing cases. It is
+//! used by the coordinator/shaping property tests (routing, batching,
+//! token-bucket conservation, admission-control soundness).
+
+use crate::util::Rng;
+
+/// A generator of random values of `T` plus a shrinker.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller inputs, most aggressive first. Default: none.
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Uniform u64 in [lo, hi].
+pub struct U64Range(pub u64, pub u64);
+impl Gen for U64Range {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        rng.range_u64(self.0, self.1)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0); // jump to minimum
+            out.push(self.0 + (*v - self.0) / 2); // halve the distance
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform f64 in [lo, hi).
+pub struct F64Range(pub f64, pub f64);
+impl Gen for F64Range {
+    type Value = f64;
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        rng.range_f64(self.0, self.1)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2.0);
+        }
+        out
+    }
+}
+
+/// Vector of values from an element generator with length in [min_len, max_len].
+pub struct VecOf<G: Gen> {
+    pub elem: G,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+        let len = rng.range_u64(self.min_len as u64, self.max_len as u64) as usize;
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        // Remove halves, then single elements, then shrink one element.
+        if v.len() > self.min_len {
+            let half = (v.len() / 2).max(self.min_len);
+            out.push(v[..half].to_vec());
+            let mut minus_last = v.clone();
+            minus_last.pop();
+            out.push(minus_last);
+        }
+        if let Some(first) = v.first() {
+            for smaller in self.elem.shrink(first) {
+                let mut copy = v.clone();
+                copy[0] = smaller;
+                out.push(copy);
+            }
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairOf<A: Gen, B: Gen>(pub A, pub B);
+impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, (a, b): &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(a)
+            .into_iter()
+            .map(|a2| (a2, b.clone()))
+            .collect();
+        out.extend(self.1.shrink(b).into_iter().map(|b2| (a.clone(), b2)));
+        out
+    }
+}
+
+/// Choose uniformly from a fixed set of values.
+pub struct OneOf<T: Clone + std::fmt::Debug>(pub Vec<T>);
+impl<T: Clone + std::fmt::Debug> Gen for OneOf<T> {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng) -> T {
+        self.0[rng.below(self.0.len() as u64) as usize].clone()
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+    pub max_shrink_steps: u32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed is fixed for reproducibility; override via ARCUS_PROP_SEED.
+        let seed = std::env::var("ARCUS_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xA5C5_2024);
+        Config {
+            cases: 256,
+            seed,
+            max_shrink_steps: 500,
+        }
+    }
+}
+
+/// Run `prop` on `cfg.cases` random inputs; on failure, shrink greedily and
+/// panic with the minimal failing input and the seed to reproduce.
+pub fn forall<G, F>(gen: &G, prop: F)
+where
+    G: Gen,
+    F: FnMut(&G::Value) -> bool,
+{
+    forall_cfg(&Config::default(), gen, prop)
+}
+
+/// Like [`forall`] with explicit configuration.
+pub fn forall_cfg<G, F>(cfg: &Config, gen: &G, mut prop: F)
+where
+    G: Gen,
+    F: FnMut(&G::Value) -> bool,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Rng::for_stream(cfg.seed, case as u64);
+        let input = gen.generate(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(cfg, gen, &mut prop, input);
+            panic!(
+                "property failed (seed={:#x}, case={case}); minimal input: {minimal:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+fn shrink_loop<G, F>(cfg: &Config, gen: &G, prop: &mut F, mut failing: G::Value) -> G::Value
+where
+    G: Gen,
+    F: FnMut(&G::Value) -> bool,
+{
+    let mut steps = 0;
+    'outer: while steps < cfg.max_shrink_steps {
+        for candidate in gen.shrink(&failing) {
+            steps += 1;
+            if !prop(&candidate) {
+                failing = candidate;
+                continue 'outer;
+            }
+            if steps >= cfg.max_shrink_steps {
+                break;
+            }
+        }
+        break; // no candidate failed: local minimum
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(&U64Range(0, 1000), |&x| x <= 1000);
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        let result = std::panic::catch_unwind(|| {
+            forall(&U64Range(0, 1_000_000), |&x| x < 500_000);
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().expect("panic payload"),
+            Ok(()) => panic!("property should have failed"),
+        };
+        // Greedy halving from any failing point lands near the boundary.
+        assert!(msg.contains("minimal input"), "msg={msg}");
+        let num: u64 = msg
+            .rsplit(": ")
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .expect("numeric minimal input");
+        assert!(num >= 500_000 && num < 1_000_000, "shrunk to {num}");
+        assert!(num < 800_000, "should have shrunk substantially: {num}");
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = VecOf {
+            elem: U64Range(1, 9),
+            min_len: 2,
+            max_len: 6,
+        };
+        forall(&g, |v| {
+            v.len() >= 2 && v.len() <= 6 && v.iter().all(|&x| (1..=9).contains(&x))
+        });
+    }
+
+    #[test]
+    fn pair_gen_generates_both() {
+        let g = PairOf(U64Range(0, 10), F64Range(0.5, 1.5));
+        forall(&g, |&(a, b)| a <= 10 && (0.5..1.5).contains(&b));
+    }
+
+    #[test]
+    fn one_of_only_choices() {
+        let g = OneOf(vec![64u64, 256, 1500, 4096]);
+        forall(&g, |&x| [64, 256, 1500, 4096].contains(&x));
+    }
+
+    #[test]
+    fn reproducible_given_same_seed() {
+        let cfg = Config {
+            cases: 16,
+            seed: 1234,
+            max_shrink_steps: 10,
+        };
+        let g = U64Range(0, u64::MAX);
+        let mut first = Vec::new();
+        forall_cfg(&cfg, &g, |&x| {
+            first.push(x);
+            true
+        });
+        let mut second = Vec::new();
+        forall_cfg(&cfg, &g, |&x| {
+            second.push(x);
+            true
+        });
+        assert_eq!(first, second);
+    }
+}

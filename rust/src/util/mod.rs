@@ -1,0 +1,72 @@
+//! Shared utilities: deterministic RNG, units, and small helpers.
+
+pub mod rng;
+pub mod units;
+
+pub use rng::Rng;
+pub use units::{Rate, Time};
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+#[inline]
+pub fn round_up(x: u64, m: u64) -> u64 {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn div_ceil(a: u64, b: u64) -> u64 {
+    a.div_ceil(b)
+}
+
+/// Clamp a float into [lo, hi].
+#[inline]
+pub fn clampf(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+/// Simple exponentially-weighted moving average used by monitors.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma { alpha, value: None }
+    }
+    pub fn observe(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        });
+    }
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        assert!(e.get().is_none());
+        for _ in 0..64 {
+            e.observe(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-9);
+    }
+}

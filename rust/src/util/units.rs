@@ -1,0 +1,189 @@
+//! Time, rate, and size units used throughout the simulator and coordinator.
+//!
+//! Virtual time is an integer count of **picoseconds** (`Time`), which gives
+//! exact cycle arithmetic at the paper's 250 MHz FPGA clock (1 cycle =
+//! 4000 ps) and sub-nanosecond resolution for PCIe serialization times
+//! without floating-point drift in the event queue.
+
+/// Virtual time in picoseconds.
+pub type Time = u64;
+
+/// One nanosecond in picoseconds.
+pub const NANOS: Time = 1_000;
+/// One microsecond in picoseconds.
+pub const MICROS: Time = 1_000_000;
+/// One millisecond in picoseconds.
+pub const MILLIS: Time = 1_000_000_000;
+/// One second in picoseconds.
+pub const SECONDS: Time = 1_000_000_000_000;
+
+/// The Arcus FPGA prototype clock: 250 MHz, i.e. 4 ns per cycle (§5.1).
+pub const FPGA_CLOCK_HZ: u64 = 250_000_000;
+/// Picoseconds per FPGA cycle.
+pub const PS_PER_CYCLE: Time = SECONDS / FPGA_CLOCK_HZ; // 4000
+
+/// Convert FPGA cycles to picoseconds.
+#[inline]
+pub const fn cycles(n: u64) -> Time {
+    n * PS_PER_CYCLE
+}
+
+/// Convert picoseconds to (whole) FPGA cycles.
+#[inline]
+pub const fn to_cycles(t: Time) -> u64 {
+    t / PS_PER_CYCLE
+}
+
+/// Format a time for human-readable reports.
+pub fn fmt_time(t: Time) -> String {
+    if t >= SECONDS {
+        format!("{:.3}s", t as f64 / SECONDS as f64)
+    } else if t >= MILLIS {
+        format!("{:.3}ms", t as f64 / MILLIS as f64)
+    } else if t >= MICROS {
+        format!("{:.3}us", t as f64 / MICROS as f64)
+    } else if t >= NANOS {
+        format!("{:.3}ns", t as f64 / NANOS as f64)
+    } else {
+        format!("{t}ps")
+    }
+}
+
+/// A data rate. Stored as bits per second (f64) with conversion helpers.
+///
+/// SLOs in the paper are expressed either in Gbps (bandwidth SLOs) or IOPS
+/// (operation-rate SLOs); [`Rate`] covers the former, IOPS are plain f64.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub struct Rate(pub f64);
+
+impl Rate {
+    pub const ZERO: Rate = Rate(0.0);
+
+    #[inline]
+    pub fn gbps(g: f64) -> Rate {
+        Rate(g * 1e9)
+    }
+    #[inline]
+    pub fn mbps(m: f64) -> Rate {
+        Rate(m * 1e6)
+    }
+    #[inline]
+    pub fn bits_per_sec(b: f64) -> Rate {
+        Rate(b)
+    }
+
+    #[inline]
+    pub fn as_gbps(self) -> f64 {
+        self.0 / 1e9
+    }
+    #[inline]
+    pub fn as_bits_per_sec(self) -> f64 {
+        self.0
+    }
+    /// Bytes transferred per picosecond at this rate.
+    #[inline]
+    pub fn bytes_per_ps(self) -> f64 {
+        self.0 / 8.0 / SECONDS as f64
+    }
+
+    /// Time (ps) to serialize `bytes` at this rate. Saturates to `Time::MAX`
+    /// for a zero rate so a stalled link never produces a bogus 0-delay event.
+    #[inline]
+    pub fn serialize_time(self, bytes: u64) -> Time {
+        if self.0 <= 0.0 {
+            return Time::MAX;
+        }
+        let ps = (bytes as f64 * 8.0) * SECONDS as f64 / self.0;
+        ps.ceil() as Time
+    }
+}
+
+impl std::ops::Add for Rate {
+    type Output = Rate;
+    fn add(self, rhs: Rate) -> Rate {
+        Rate(self.0 + rhs.0)
+    }
+}
+impl std::ops::Sub for Rate {
+    type Output = Rate;
+    fn sub(self, rhs: Rate) -> Rate {
+        Rate(self.0 - rhs.0)
+    }
+}
+impl std::ops::Mul<f64> for Rate {
+    type Output = Rate;
+    fn mul(self, k: f64) -> Rate {
+        Rate(self.0 * k)
+    }
+}
+impl std::fmt::Display for Rate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.0 >= 1e9 {
+            write!(f, "{:.2}Gbps", self.0 / 1e9)
+        } else if self.0 >= 1e6 {
+            write!(f, "{:.2}Mbps", self.0 / 1e6)
+        } else {
+            write!(f, "{:.0}bps", self.0)
+        }
+    }
+}
+
+/// Message/payload sizes in bytes; helpers for the sizes the paper sweeps.
+pub const KB: u64 = 1024;
+pub const MB: u64 = 1024 * 1024;
+/// MTU-sized message used throughout the paper's experiments.
+pub const MTU: u64 = 1500;
+
+/// Measure achieved throughput: bytes over a virtual-time window.
+#[inline]
+pub fn throughput(bytes: u64, window: Time) -> Rate {
+    if window == 0 {
+        return Rate::ZERO;
+    }
+    Rate(bytes as f64 * 8.0 * SECONDS as f64 / window as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_roundtrip() {
+        assert_eq!(PS_PER_CYCLE, 4000);
+        assert_eq!(cycles(64), 256_000); // Table 2: 64 cycles = 256 ns
+        assert_eq!(to_cycles(cycles(1000)), 1000);
+    }
+
+    #[test]
+    fn serialize_time_matches_rate() {
+        // 1500B at 50 Gbps = 1500*8/50e9 s = 240 ns.
+        let t = Rate::gbps(50.0).serialize_time(1500);
+        assert_eq!(t, 240 * NANOS);
+    }
+
+    #[test]
+    fn serialize_time_zero_rate_saturates() {
+        assert_eq!(Rate::ZERO.serialize_time(100), Time::MAX);
+    }
+
+    #[test]
+    fn throughput_inverse_of_serialize() {
+        let r = Rate::gbps(32.0);
+        let t = r.serialize_time(1_000_000);
+        let back = throughput(1_000_000, t);
+        assert!((back.as_gbps() - 32.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(500), "500ps");
+        assert_eq!(fmt_time(2 * MICROS), "2.000us");
+        assert_eq!(fmt_time(3 * SECONDS), "3.000s");
+    }
+
+    #[test]
+    fn rate_display() {
+        assert_eq!(Rate::gbps(32.0).to_string(), "32.00Gbps");
+        assert_eq!(Rate::mbps(5.0).to_string(), "5.00Mbps");
+    }
+}

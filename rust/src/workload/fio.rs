@@ -1,0 +1,89 @@
+//! FIO-style storage workloads (Fig 6, Fig 11b).
+//!
+//! Fig 6: "two users simultaneously send 4 KB random read requests to the
+//! SSD", SLOs 300 K / 200 K IOPS under 99th% guarantee.
+//!
+//! Fig 11b: "two users run reads and writes … reads are 1 KB random reads;
+//! writes are 4 KB sequential writes", SLO 2 M read IOPS / 25 K write IOPS,
+//! shared RAID-0 of four drives.
+
+use crate::flow::pattern::{Burstiness, SizeDist};
+use crate::flow::{FlowKind, FlowSpec, Slo, TrafficPattern};
+use crate::util::units::Rate;
+
+/// One FIO job description.
+#[derive(Debug, Clone, Copy)]
+pub struct FioJob {
+    pub vm: usize,
+    /// I/O size in bytes.
+    pub bs: u64,
+    /// Offered rate in IOPS.
+    pub offered_iops: f64,
+    /// The per-flow SLO.
+    pub slo_iops: f64,
+}
+
+fn pattern(job: &FioJob, burst: Burstiness) -> TrafficPattern {
+    let line = Rate::gbps(50.0);
+    let offered_bps = job.offered_iops * job.bs as f64 * 8.0;
+    TrafficPattern {
+        sizes: SizeDist::Fixed(job.bs),
+        load: offered_bps / line.as_bits_per_sec(),
+        line_rate: line,
+        burst,
+    }
+}
+
+/// A random-read job (Poisson arrivals: open-loop load generator).
+pub fn fio_read_flow(id: usize, job: FioJob) -> FlowSpec {
+    FlowSpec {
+        id,
+        vm: job.vm,
+        path: crate::flow::Path::InlineP2p,
+        pattern: pattern(&job, Burstiness::Poisson),
+        slo: Slo::iops(job.slo_iops),
+        accel: 0,
+        kind: FlowKind::StorageRead,
+        priority: 1,
+    }
+}
+
+/// A sequential-write job (paced arrivals: the writer streams).
+pub fn fio_write_flow(id: usize, job: FioJob) -> FlowSpec {
+    FlowSpec {
+        id,
+        vm: job.vm,
+        path: crate::flow::Path::InlineP2p,
+        pattern: pattern(&job, Burstiness::Paced),
+        slo: Slo::iops(job.slo_iops),
+        accel: 0,
+        kind: FlowKind::StorageWrite,
+        priority: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offered_rate_matches_iops() {
+        let job = FioJob { vm: 0, bs: 4096, offered_iops: 360_000.0, slo_iops: 300_000.0 };
+        let f = fio_read_flow(0, job);
+        // 360K × 4KB × 8 = 11.8 Gbps offered.
+        let offered = f.pattern.offered().as_bits_per_sec();
+        assert!((offered - 360_000.0 * 4096.0 * 8.0).abs() < 1.0);
+        // Mean message rate equals the IOPS.
+        assert!((f.pattern.mean_mps() - 360_000.0).abs() < 1.0);
+        assert_eq!(f.kind, FlowKind::StorageRead);
+    }
+
+    #[test]
+    fn write_flow_is_paced_storage_write() {
+        let job = FioJob { vm: 1, bs: 4096, offered_iops: 50_000.0, slo_iops: 25_000.0 };
+        let f = fio_write_flow(1, job);
+        assert_eq!(f.kind, FlowKind::StorageWrite);
+        assert_eq!(f.pattern.burst, Burstiness::Paced);
+        assert!(matches!(f.slo, Slo::Iops { target, .. } if target == 25_000.0));
+    }
+}

@@ -1,0 +1,100 @@
+//! RocksDB-style LSM traffic (Table 4's checksum+compression offload).
+//!
+//! An LSM engine writes SST files during flush and compaction; every block
+//! (typically 4–32 KB) is compressed and checksummed before hitting the
+//! filesystem. Offloading both (function-call mode) is the paper's Table 4
+//! experiment. This module models the *traffic* an LSM instance generates
+//! toward those two engines; the real end-to-end app (with actual
+//! compression and PJRT checksums) lives in `apps/`.
+
+use crate::flow::pattern::{Burstiness, SizeDist};
+use crate::flow::{FlowKind, FlowSpec, Path, Slo, TrafficPattern};
+use crate::util::units::Rate;
+
+/// LSM instance parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct LsmConfig {
+    pub vm: usize,
+    /// SST block size (RocksDB default 4 KB; compaction reads bigger).
+    pub block_bytes: u64,
+    /// Sustained flush+compaction byte rate (MB/s).
+    pub write_mbps: f64,
+    /// Write amplification from compaction re-writes (each logical byte is
+    /// re-compressed/checksummed this many times).
+    pub write_amp: f64,
+    /// Accelerator SLO for the offload streams.
+    pub slo: Slo,
+}
+
+impl Default for LsmConfig {
+    fn default() -> Self {
+        LsmConfig {
+            vm: 0,
+            block_bytes: 4096,
+            write_mbps: 200.0,
+            write_amp: 3.0,
+            slo: Slo::gbps(5.0),
+        }
+    }
+}
+
+/// The flows an LSM instance drives into the checksum + compression engines.
+#[derive(Debug)]
+pub struct LsmTraffic {
+    pub checksum: FlowSpec,
+    pub compress: FlowSpec,
+}
+
+impl LsmConfig {
+    /// Physical byte rate after write amplification.
+    pub fn physical_rate(&self) -> Rate {
+        Rate(self.write_mbps * 1e6 * 8.0 * self.write_amp)
+    }
+
+    /// Build the two offload flows (ids 0 and 1; renumber when combining).
+    pub fn flows(&self, checksum_idx: usize, compress_idx: usize) -> LsmTraffic {
+        let line = Rate::gbps(50.0);
+        // Compaction produces bursts of back-to-back blocks.
+        let pattern = TrafficPattern {
+            sizes: SizeDist::Fixed(self.block_bytes),
+            load: self.physical_rate().as_bits_per_sec() / line.as_bits_per_sec(),
+            line_rate: line,
+            burst: Burstiness::OnOff { burst_len: 32 },
+        };
+        let mk = |id: usize, accel: usize| FlowSpec {
+            id,
+            vm: self.vm,
+            path: Path::FunctionCall,
+            pattern: pattern.clone(),
+            slo: self.slo,
+            accel,
+            kind: FlowKind::Accel,
+            priority: 1,
+        };
+        LsmTraffic {
+            checksum: mk(0, checksum_idx),
+            compress: mk(1, compress_idx),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn physical_rate_includes_amplification() {
+        let cfg = LsmConfig { write_mbps: 100.0, write_amp: 3.0, ..Default::default() };
+        // 100 MB/s × 3 = 2.4 Gbps.
+        assert!((cfg.physical_rate().as_gbps() - 2.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flows_target_both_engines() {
+        let t = LsmConfig::default().flows(2, 3);
+        assert_eq!(t.checksum.accel, 2);
+        assert_eq!(t.compress.accel, 3);
+        assert_eq!(t.checksum.path, Path::FunctionCall);
+        assert!(matches!(t.compress.pattern.burst, Burstiness::OnOff { .. }));
+    }
+}

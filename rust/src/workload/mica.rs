@@ -1,0 +1,128 @@
+//! MICA-style key-value serving + live-migration workloads (Fig 11a).
+//!
+//! "Two users run low-latency MICA, each with 50/50 GET/SET. The value
+//! sizes are 64 B and 256 B for user1 and user2. Two users share two
+//! accelerators, SHA1-HMAC and AES-128-CBC, required by secure network
+//! applications. In addition, another live migration (LM) is co-running,
+//! contending for the AES accelerator. The LM job sends MTU-sized large
+//! messages, i.e. 1500 B."
+//!
+//! A secure-KV request touches *both* engines (encrypt the value, MAC the
+//! message); we model each user as one flow per engine carrying the user's
+//! full request stream — the same engine-side load, and contention on both
+//! engines, without cross-engine chaining in the DES.
+
+use crate::flow::{FlowKind, FlowSpec, Path, Slo, TrafficPattern};
+use crate::flow::pattern::{Burstiness, SizeDist};
+use crate::util::units::{Rate, MTU};
+
+/// One MICA tenant.
+#[derive(Debug, Clone, Copy)]
+pub struct MicaUser {
+    pub vm: usize,
+    /// Value size (64 B for user1, 256 B for user2 in the paper).
+    pub value_bytes: u64,
+    /// Offered request rate in Mops.
+    pub mops: f64,
+    /// Accelerator-throughput SLO per engine.
+    pub slo: Slo,
+}
+
+impl MicaUser {
+    /// The request message on the wire: key (16 B) + header (24 B) + value.
+    pub fn message_bytes(&self) -> u64 {
+        self.value_bytes + 40
+    }
+
+    /// Offered byte rate implied by the op rate.
+    pub fn offered(&self) -> Rate {
+        Rate(self.mops * 1e6 * self.message_bytes() as f64 * 8.0)
+    }
+}
+
+/// Flows for a set of MICA users sharing `aes_idx` and `sha_idx` engines on
+/// the inline-NIC RX path. Flow ids are assigned sequentially from 0 in
+/// (user, engine) order; renumber after combining with other builders.
+pub fn mica_flows(users: &[MicaUser], aes_idx: usize, sha_idx: usize) -> Vec<FlowSpec> {
+    let mut flows = Vec::new();
+    for u in users {
+        // 50/50 GET/SET: GETs return the value (engine work on the egress),
+        // SETs carry it inbound. Engine-side both directions see the same
+        // message mix, so the pattern is a single fixed-size stream.
+        let pattern = TrafficPattern {
+            sizes: SizeDist::Fixed(u.message_bytes()),
+            load: u.offered().as_bits_per_sec() / Rate::gbps(50.0).as_bits_per_sec(),
+            line_rate: Rate::gbps(50.0),
+            burst: Burstiness::Poisson,
+        };
+        for &accel in &[aes_idx, sha_idx] {
+            flows.push(FlowSpec {
+                id: flows.len(),
+                vm: u.vm,
+                path: Path::InlineNicRx,
+                pattern: pattern.clone(),
+                slo: u.slo,
+                accel,
+                kind: FlowKind::Accel,
+                priority: 0, // latency-critical class (PANIC priority)
+            });
+        }
+    }
+    flows
+}
+
+/// The live-migration background stream: MTU messages into the AES engine,
+/// best-effort class ("remaining throughput can be harvested by background
+/// tasks such as LM", §5.4), low priority under PANIC.
+pub fn live_migration_flow(id: usize, vm: usize, aes_idx: usize, gbps: f64) -> FlowSpec {
+    FlowSpec {
+        id,
+        vm,
+        path: Path::InlineNicRx,
+        pattern: TrafficPattern {
+            sizes: SizeDist::Fixed(MTU),
+            load: gbps / 50.0,
+            line_rate: Rate::gbps(50.0),
+            burst: Burstiness::Paced,
+        },
+        slo: Slo::BestEffort,
+        accel: aes_idx,
+        kind: FlowKind::Accel,
+        priority: 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_sizes_include_header() {
+        let u = MicaUser { vm: 0, value_bytes: 64, mops: 1.0, slo: Slo::gbps(1.0) };
+        assert_eq!(u.message_bytes(), 104);
+        // 1 Mops of 104 B messages = 832 Mbps.
+        assert!((u.offered().as_gbps() - 0.832).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_users_make_four_flows() {
+        let users = [
+            MicaUser { vm: 0, value_bytes: 64, mops: 2.0, slo: Slo::gbps(2.0) },
+            MicaUser { vm: 1, value_bytes: 256, mops: 1.0, slo: Slo::gbps(3.0) },
+        ];
+        let flows = mica_flows(&users, 0, 1);
+        assert_eq!(flows.len(), 4);
+        assert_eq!(flows.iter().filter(|f| f.accel == 0).count(), 2);
+        assert_eq!(flows.iter().filter(|f| f.accel == 1).count(), 2);
+        assert!(flows.iter().all(|f| f.path == Path::InlineNicRx));
+        assert!(flows.iter().all(|f| f.priority == 0));
+    }
+
+    #[test]
+    fn lm_is_best_effort_low_priority() {
+        let lm = live_migration_flow(4, 2, 0, 20.0);
+        assert_eq!(lm.slo, Slo::BestEffort);
+        assert!(lm.priority > 0);
+        assert!((lm.pattern.offered().as_gbps() - 20.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,59 @@
+//! Application workload models (§5.4's end-to-end evaluations).
+//!
+//! Each builder turns an application description into the [`FlowSpec`]s the
+//! system engine runs:
+//!
+//! - [`mica`] — low-latency key-value serving (MICA): 50/50 GET/SET over
+//!   small values; each user's traffic invokes the AES (encryption) and
+//!   SHA1-HMAC (authentication) engines of a secure network application
+//!   (Fig 11a).
+//! - [`live_migration`] — the provider's background bulk stream: MTU-sized
+//!   messages through the cipher engine, best-effort (harvests leftover
+//!   capacity under Arcus; tramples tenants without it).
+//! - [`fio`] — storage benchmark patterns (Fig 6, Fig 11b): random reads
+//!   and sequential writes at configurable sizes/depths.
+//! - [`rocksdb`] — the LSM engine's flush+compaction I/O with offloaded
+//!   checksum+compression (Table 4); modeled as function-call accelerator
+//!   flows sized like SST blocks.
+
+pub mod fio;
+pub mod lsm;
+pub mod mica;
+
+pub use fio::{fio_read_flow, fio_write_flow, FioJob};
+pub use lsm::{LsmConfig, LsmTraffic};
+pub use mica::{live_migration_flow, mica_flows, MicaUser};
+
+use crate::flow::FlowSpec;
+
+/// Re-number flow ids sequentially (builders produce ids starting at 0; use
+/// this after concatenating several builders' outputs).
+pub fn renumber(mut flows: Vec<FlowSpec>) -> Vec<FlowSpec> {
+    for (i, f) in flows.iter_mut().enumerate() {
+        f.id = i;
+    }
+    flows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::{Path, Slo, TrafficPattern};
+    use crate::util::units::Rate;
+
+    #[test]
+    fn renumber_assigns_sequential_ids() {
+        let mk = |id| {
+            FlowSpec::new(
+                id,
+                0,
+                Path::FunctionCall,
+                TrafficPattern::fixed(64, 0.1, Rate::gbps(1.0)),
+                Slo::BestEffort,
+                0,
+            )
+        };
+        let flows = renumber(vec![mk(5), mk(5), mk(0)]);
+        assert_eq!(flows.iter().map(|f| f.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,189 @@
+//! Property-based tests (via the in-tree `testkit`) on the coordinator's
+//! invariants: shaping conservation, admission soundness, arbiter work
+//! conservation, and batcher bounds.
+
+use arcus::coordinator::planner::{admission_control, Admission, PlannerConfig};
+use arcus::coordinator::status::{FlowStatus, PerFlowStatusTable};
+use arcus::coordinator::ProfileTable;
+use arcus::dma::{Arbiter, Policy};
+use arcus::flow::{Path, Slo};
+use arcus::pcie::fabric::FabricConfig;
+use arcus::accel::AccelModel;
+use arcus::shaping::{ShapeMode, Shaper, TokenBucket, Verdict};
+use arcus::testkit::{forall_cfg, Config, OneOf, PairOf, U64Range, VecOf};
+use arcus::util::units::SECONDS;
+
+fn cfg(cases: u32) -> Config {
+    Config { cases, ..Default::default() }
+}
+
+/// Token bucket conservation: on any arrival pattern, admitted bytes never
+/// exceed initial burst + rate × elapsed (no free bandwidth, ever).
+#[test]
+fn prop_token_bucket_never_overspends() {
+    let gen = PairOf(
+        VecOf { elem: PairOf(U64Range(0, 2_000_000), U64Range(64, 9000)), min_len: 1, max_len: 400 },
+        OneOf(vec![1.0f64, 5.0, 25.0]),
+    );
+    forall_cfg(&cfg(128), &gen, |(arrivals, gbps)| {
+        let rate = gbps * 1e9 / 8.0;
+        let mut tb = TokenBucket::for_rate(rate, ShapeMode::Gbps);
+        let burst = tb.params().bkt_size * tb.params().token_unit;
+        let mut arrivals: Vec<(u64, u64)> = arrivals.iter().map(|&(t, s)| (t * 1000, s)).collect();
+        arrivals.sort_by_key(|&(t, _)| t);
+        let mut admitted = 0u64;
+        let mut last_t = 0u64;
+        for &(t, size) in &arrivals {
+            if let Verdict::Admit = tb.try_acquire(t, size) {
+                admitted += size;
+                last_t = last_t.max(t);
+            }
+        }
+        let budget = burst as f64 + rate * (last_t as f64 / SECONDS as f64) + 9000.0;
+        admitted as f64 <= budget
+    });
+}
+
+/// Admission soundness: however registrations arrive, the sum of committed
+/// SLO rates on an accelerator never exceeds the profiled capacity budget.
+#[test]
+fn prop_admission_never_overcommits() {
+    let profile = ProfileTable::learn(&[AccelModel::ipsec_32g()], &FabricConfig::gen3_x8());
+    let pcfg = PlannerConfig::default();
+    let gen = VecOf {
+        elem: PairOf(U64Range(1, 20), OneOf(vec![256u64, 1024, 1500, 4096])),
+        min_len: 1,
+        max_len: 24,
+    };
+    forall_cfg(&cfg(128), &gen, |requests| {
+        let mut status = PerFlowStatusTable::default();
+        for (i, &(gbps, size)) in requests.iter().enumerate() {
+            let slo = Slo::gbps(gbps as f64);
+            match admission_control(
+                &pcfg,
+                &profile,
+                &status,
+                0,
+                "ipsec",
+                Path::FunctionCall,
+                size,
+                &slo,
+            ) {
+                Admission::Accept { rate, .. } => {
+                    let mut row = FlowStatus::new(i, i, Path::FunctionCall, 0, "ipsec", slo, size);
+                    row.shaped_rate = Some(rate);
+                    status.register(row);
+                }
+                Admission::Reject { .. } => {}
+            }
+        }
+        // Invariant: the committed byte-rate fits the TIGHTEST context any
+        // admitted flow imposes on the engine.
+        let committed =
+            arcus::coordinator::planner::committed_bytes_per_sec(&status, 0);
+        let tightest = status
+            .iter()
+            .filter_map(|r| {
+                profile
+                    .capacity("ipsec", Path::FunctionCall, r.size_hint, status.len())
+                    .map(|e| e.capacity.as_bits_per_sec() / 8.0)
+            })
+            .fold(f64::INFINITY, f64::min);
+        status.is_empty() || committed <= tightest + 1.0
+    });
+}
+
+/// Arbiter work conservation: every pushed message is eventually popped,
+/// exactly once, regardless of policy.
+#[test]
+fn prop_arbiters_conserve_messages() {
+    let gen = PairOf(
+        VecOf { elem: PairOf(U64Range(0, 3), U64Range(1, 9000)), min_len: 0, max_len: 300 },
+        OneOf(vec![0usize, 1, 2, 3]),
+    );
+    forall_cfg(&cfg(128), &gen, |(pushes, policy_idx)| {
+        let policy = match policy_idx {
+            0 => Policy::RoundRobin,
+            1 => Policy::WeightedRoundRobin(vec![1, 2, 3, 4]),
+            2 => Policy::Priority(vec![0, 1, 1, 2]),
+            _ => Policy::DeficitRoundRobin { weights: vec![1, 1, 2, 2], quantum: 1500 },
+        };
+        let mut arb: Arbiter<usize> = Arbiter::new(4, policy);
+        for (i, &(q, cost)) in pushes.iter().enumerate() {
+            arb.push(q as usize, cost, i);
+        }
+        let mut seen = vec![false; pushes.len()];
+        while let Some((_, _, id)) = arb.pop() {
+            if seen[id] {
+                return false; // double pop
+            }
+            seen[id] = true;
+        }
+        arb.is_empty() && seen.iter().all(|&s| s)
+    });
+}
+
+/// Shaper monotonicity: RetryAt hints strictly advance virtual time, so the
+/// engine's fetch loop can never livelock.
+#[test]
+fn prop_retry_hints_advance_time() {
+    let gen = PairOf(
+        VecOf { elem: U64Range(64, 65536), min_len: 1, max_len: 200 },
+        OneOf(vec![0.5f64, 2.0, 10.0]),
+    );
+    forall_cfg(&cfg(128), &gen, |(sizes, gbps)| {
+        let mut tb = TokenBucket::for_rate(gbps * 1e9 / 8.0, ShapeMode::Gbps);
+        let mut now = 0u64;
+        for &size in sizes {
+            let mut guard = 0;
+            loop {
+                match tb.try_acquire(now, size) {
+                    Verdict::Admit => break,
+                    Verdict::RetryAt(t) => {
+                        if t <= now {
+                            return false;
+                        }
+                        now = t;
+                    }
+                }
+                guard += 1;
+                if guard > 10_000 {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+/// Batch classes never emit more than `group` tickets and preserve FIFO.
+#[test]
+fn prop_batcher_bounds_and_fifo() {
+    use arcus::server::batcher::{BatchClass, WorkKind};
+    use std::time::Instant;
+    let gen = PairOf(U64Range(1, 64), U64Range(1, 200));
+    forall_cfg(&cfg(128), &gen, |&(group, n)| {
+        let mut c: BatchClass<u64> = BatchClass::new(WorkKind::Checksum, group as usize, 16);
+        let now = Instant::now();
+        for i in 0..n {
+            c.stage(i, 8, now);
+        }
+        let mut expected = 0u64;
+        loop {
+            let g = c.take_group();
+            if g.is_empty() {
+                break;
+            }
+            if g.len() > group as usize {
+                return false;
+            }
+            for s in g {
+                if s.ticket != expected {
+                    return false;
+                }
+                expected += 1;
+            }
+        }
+        expected == n
+    });
+}
