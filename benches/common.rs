@@ -8,7 +8,7 @@
 
 #![allow(dead_code)]
 
-use arcus::system::{run, ExperimentSpec, SystemReport};
+use arcus::system::{ExperimentSpec, SystemReport};
 use arcus::util::units::{Time, MILLIS};
 
 /// Measured virtual duration for sweeps.
@@ -33,41 +33,12 @@ pub fn fast_mode() -> bool {
 }
 
 /// Run a set of independent experiment specs across threads.
+///
+/// Thin wrapper over the library's scenario-sweep engine
+/// ([`arcus::sweep::run_specs`]): benches and tests share one parallel
+/// execution substrate, and reports come back in input order.
 pub fn parallel_sweep(specs: Vec<ExperimentSpec>) -> Vec<SystemReport> {
-    let threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(4)
-        .min(specs.len().max(1));
-    let specs = std::sync::Arc::new(std::sync::Mutex::new(
-        specs.into_iter().enumerate().collect::<Vec<_>>(),
-    ));
-    let results = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
-    let handles: Vec<_> = (0..threads)
-        .map(|_| {
-            let specs = specs.clone();
-            let results = results.clone();
-            std::thread::spawn(move || loop {
-                let job = specs.lock().unwrap().pop();
-                match job {
-                    Some((idx, spec)) => {
-                        let report = run(&spec);
-                        results.lock().unwrap().push((idx, report));
-                    }
-                    None => return,
-                }
-            })
-        })
-        .collect();
-    for h in handles {
-        h.join().expect("sweep worker");
-    }
-    let mut out = std::sync::Arc::try_unwrap(results)
-        .ok()
-        .expect("all workers joined")
-        .into_inner()
-        .unwrap();
-    out.sort_by_key(|(i, _)| *i);
-    out.into_iter().map(|(_, r)| r).collect()
+    arcus::sweep::run_specs(specs)
 }
 
 /// Section header in the output.

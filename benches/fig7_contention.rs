@@ -13,8 +13,10 @@ mod common;
 
 use arcus::accel::AccelModel;
 use arcus::coordinator::ProfileTable;
+use arcus::flow::pattern::Burstiness;
 use arcus::flow::{FlowSpec, Path, Slo, TrafficPattern};
 use arcus::pcie::fabric::FabricConfig;
+use arcus::sweep::{aggregate, GridBase, SizeMix, SweepGrid, SweepRunner};
 use arcus::system::{ExperimentSpec, Mode};
 use arcus::util::units::{Rate, KB};
 use common::*;
@@ -41,30 +43,28 @@ fn main() {
     }
 
     banner("Fig 7(b): scalability — overall throughput, 1 → 16 equal flows (Arcus)");
+    // The scenario grid expresses the paper's sweep directly: n equal
+    // tenants splitting a 28 Gbps aggregate SLO (tightness = 28 G over the
+    // engine's effective 4 KB capacity) at 0.95 × 32 G offered load.
     let counts = [1usize, 2, 4, 8, 16];
-    let specs: Vec<ExperimentSpec> = counts
-        .iter()
-        .map(|&n| {
-            let line = Rate::gbps(32.0);
-            // n equal flows splitting a 30 Gbps aggregate SLO.
-            let flows: Vec<FlowSpec> = (0..n)
-                .map(|i| {
-                    FlowSpec::new(
-                        i,
-                        i,
-                        Path::FunctionCall,
-                        TrafficPattern::fixed(4 * KB, 0.95 / n as f64, line),
-                        Slo::gbps(28.0 / n as f64),
-                        0,
-                    )
-                })
-                .collect();
-            ExperimentSpec::new(Mode::Arcus, vec![AccelModel::ipsec_32g()], flows)
-                .with_duration(bench_duration())
-                .with_warmup(warmup())
-        })
-        .collect();
-    let reports = parallel_sweep(specs);
+    let eff_4k = AccelModel::ipsec_32g().effective_rate(4 * KB).as_gbps();
+    let grid = SweepGrid::new(GridBase {
+        duration: bench_duration(),
+        warmup: warmup(),
+        line_rate: Rate::gbps(32.0),
+        load: 0.95,
+        path: Path::FunctionCall,
+        seed: 1,
+    })
+    .modes(vec![Mode::Arcus])
+    .tenants(counts.to_vec())
+    .mixes(vec![SizeMix::Bulk])
+    .bursts(vec![Burstiness::Paced])
+    .tightness(vec![28.0 / eff_4k])
+    .accels(vec![AccelModel::ipsec_32g()])
+    .seeds(vec![1]);
+    let outcomes = SweepRunner::new().run(&grid);
+    let reports: Vec<_> = outcomes.iter().map(|o| &o.report).collect();
     header("flows", &counts.iter().map(|c| c.to_string()).collect::<Vec<_>>(), 8);
     row(
         "overall Gbps",
@@ -87,6 +87,8 @@ fn main() {
         8,
         1,
     );
+    println!("\nper-axis aggregate (worst-flow attainment, tails, variance):");
+    print!("{}", aggregate(&outcomes).render());
 
     banner("Fig 7(c): combined factors — VM1 16×1KB (RX) + VM2 4×4KB (RX) on one 32G engine");
     let line = Rate::gbps(50.0);

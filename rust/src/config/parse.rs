@@ -19,12 +19,22 @@
 use super::{Document, Table, Value};
 
 /// Parse error with line number context.
-#[derive(Debug, thiserror::Error)]
-#[error("config parse error at line {line}: {msg}")]
+///
+/// (Display/Error are hand-implemented: `thiserror` is a proc-macro crate
+/// the offline build environment cannot provide.)
+#[derive(Debug)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, ParseError> {
     Err(ParseError {

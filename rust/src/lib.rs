@@ -7,8 +7,10 @@
 //!   shaping (hardware-modeled token buckets), an SLO-aware control plane
 //!   (profiling, admission control, capacity planning, online re-shaping), a
 //!   cycle-granular host–FPGA simulator substrate (PCIe, DMA, accelerators,
-//!   NVMe storage, NICs), all paper baselines, and a wall-clock serving
-//!   runtime that executes AOT-compiled accelerator kernels via PJRT.
+//!   NVMe storage, NICs), all paper baselines, a parallel scenario-sweep
+//!   engine ([`sweep`]) that expands experiment templates over traffic/
+//!   tenant/mode axes, and a wall-clock serving runtime that executes
+//!   AOT-compiled accelerator kernels via PJRT.
 //! - **L2 (python/compile/model.py)** — batched accelerator datapaths in JAX,
 //!   lowered once to HLO text artifacts.
 //! - **L1 (python/compile/kernels/)** — Pallas kernels for the compute
@@ -37,6 +39,7 @@ pub mod server;
 pub mod shaping;
 pub mod storage;
 pub mod sim;
+pub mod sweep;
 pub mod system;
 pub mod testkit;
 pub mod util;

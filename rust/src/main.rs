@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   quickstart                     two-flow demo: Arcus vs unshaped baseline
 //!   simulate <config.toml> [...]   run experiment configs on the simulator
+//!   sweep [axis flags]             expand a scenario grid and run it in parallel
 //!   profile [accel ...]            print the offline Capacity(t, X, N) table
 //!   serve [--artifacts DIR]        start the PJRT serving runtime + demo load
 //!   modes                          list management modes and accelerators
@@ -14,8 +15,10 @@ use std::path::PathBuf;
 use arcus::accel::AccelModel;
 use arcus::config::{spec_from_document, Document};
 use arcus::coordinator::ProfileTable;
+use arcus::flow::pattern::Burstiness;
 use arcus::flow::{FlowSpec, Path, Slo, TrafficPattern};
 use arcus::pcie::fabric::FabricConfig;
+use arcus::sweep::{aggregate, GridBase, SizeMix, SweepGrid, SweepRunner};
 use arcus::system::{run, ExperimentSpec, Mode};
 use arcus::util::units::{Rate, MILLIS};
 
@@ -24,6 +27,7 @@ fn main() {
     let code = match args.first().map(String::as_str) {
         Some("quickstart") => quickstart(),
         Some("simulate") => simulate(&args[1..]),
+        Some("sweep") => sweep(&args[1..]),
         Some("profile") => profile(&args[1..]),
         Some("serve") => serve(&args[1..]),
         Some("modes") => modes(),
@@ -44,8 +48,11 @@ fn usage() {
     println!(
         "arcus — SLO management for accelerators with traffic shaping\n\n\
          USAGE:\n  arcus quickstart\n  arcus simulate <config.toml> [more.toml ...]\n  \
+         arcus sweep [--modes a,b] [--tenants 1,2,4] [--mixes mtu,bulk] [--bursts paced,poisson]\n  \
+             [--tightness 0.5,0.8] [--accels ipsec] [--seeds 1,2] [--duration-ms N]\n  \
+             [--load F] [--threads N] [--scenarios]\n  \
          arcus profile [accel ...]\n  arcus serve [--artifacts DIR]\n  arcus modes\n\n\
-         Experiment configs: see configs/*.toml. Paper benches: `cargo bench`."
+         Experiment configs: see rust/configs/*.toml. Paper benches: `cargo bench`."
     );
 }
 
@@ -135,6 +142,215 @@ fn simulate(paths: &[String]) -> i32 {
         );
         println!();
     }
+    0
+}
+
+/// `arcus sweep`: expand a scenario grid over the requested axes, run every
+/// scenario across worker threads, and print the per-axis comparison
+/// tables. Defaults give a 3-mode × 3-tenant-count × 2-mix × 2-burst ×
+/// 2-seed grid (72 scenarios) in a few seconds.
+fn sweep(args: &[String]) -> i32 {
+    let mut modes = vec![Mode::Arcus, Mode::HostNoTs, Mode::BypassedPanic];
+    let mut tenants = vec![1usize, 2, 4];
+    let mut mixes = vec![SizeMix::Mtu, SizeMix::Bulk];
+    let mut bursts = vec![Burstiness::Paced, Burstiness::Poisson];
+    let mut tightness = vec![0.7f64];
+    let mut accel_names = vec!["ipsec".to_string()];
+    let mut seeds = vec![1u64, 2];
+    let mut duration_ms = 5u64;
+    let mut load = 0.9f64;
+    let mut threads: Option<usize> = None;
+    let mut long_form = false;
+
+    let mut i = 0;
+    while i < args.len() {
+        let flag = args[i].as_str();
+        if flag == "--scenarios" {
+            long_form = true;
+            i += 1;
+            continue;
+        }
+        let Some(value) = args.get(i + 1) else {
+            eprintln!("flag `{flag}` needs a value");
+            return 2;
+        };
+        let parts: Vec<&str> = value.split(',').filter(|s| !s.is_empty()).collect();
+        if parts.is_empty() {
+            eprintln!("flag `{flag}` got an empty value");
+            return 2;
+        }
+        match flag {
+            "--modes" => {
+                modes.clear();
+                for p in &parts {
+                    match Mode::by_name(p) {
+                        Some(m) => modes.push(m),
+                        None => {
+                            eprintln!("unknown mode `{p}` (see `arcus modes`)");
+                            return 2;
+                        }
+                    }
+                }
+            }
+            "--tenants" => {
+                tenants.clear();
+                for p in &parts {
+                    match p.parse::<usize>() {
+                        Ok(n) if n > 0 => tenants.push(n),
+                        _ => {
+                            eprintln!("bad tenant count `{p}`");
+                            return 2;
+                        }
+                    }
+                }
+            }
+            "--mixes" => {
+                mixes.clear();
+                for p in &parts {
+                    match SizeMix::by_name(p) {
+                        Some(m) => mixes.push(m),
+                        None => {
+                            eprintln!(
+                                "unknown mix `{p}` (tiny|small|mtu|bulk|mixed|bimodal)"
+                            );
+                            return 2;
+                        }
+                    }
+                }
+            }
+            "--bursts" => {
+                bursts.clear();
+                for p in &parts {
+                    let b = if *p == "paced" {
+                        Burstiness::Paced
+                    } else if *p == "poisson" {
+                        Burstiness::Poisson
+                    } else if let Some(n) = p.strip_prefix("onoff") {
+                        match n.parse::<u32>() {
+                            Ok(len) if len > 0 => Burstiness::OnOff { burst_len: len },
+                            _ => {
+                                eprintln!("bad burst `{p}` (paced|poisson|onoff<N>)");
+                                return 2;
+                            }
+                        }
+                    } else {
+                        eprintln!("unknown burst `{p}` (paced|poisson|onoff<N>)");
+                        return 2;
+                    };
+                    bursts.push(b);
+                }
+            }
+            "--tightness" => {
+                tightness.clear();
+                for p in &parts {
+                    match p.parse::<f64>() {
+                        Ok(x) if x > 0.0 => tightness.push(x),
+                        _ => {
+                            eprintln!("bad tightness `{p}`");
+                            return 2;
+                        }
+                    }
+                }
+            }
+            "--accels" => {
+                accel_names = parts.iter().map(|s| s.to_string()).collect();
+            }
+            "--seeds" => {
+                seeds.clear();
+                for p in &parts {
+                    match p.parse::<u64>() {
+                        Ok(s) => seeds.push(s),
+                        Err(_) => {
+                            eprintln!("bad seed `{p}`");
+                            return 2;
+                        }
+                    }
+                }
+            }
+            "--duration-ms" => match value.parse::<u64>() {
+                Ok(d) if d > 0 => duration_ms = d,
+                _ => {
+                    eprintln!("bad duration `{value}`");
+                    return 2;
+                }
+            },
+            "--load" => match value.parse::<f64>() {
+                Ok(l) if l > 0.0 => load = l,
+                _ => {
+                    eprintln!("bad load `{value}`");
+                    return 2;
+                }
+            },
+            "--threads" => match value.parse::<usize>() {
+                Ok(t) if t > 0 => threads = Some(t),
+                _ => {
+                    eprintln!("bad thread count `{value}`");
+                    return 2;
+                }
+            },
+            other => {
+                eprintln!("unknown flag `{other}`");
+                return 2;
+            }
+        }
+        i += 2;
+    }
+
+    let mut accels = Vec::new();
+    for n in &accel_names {
+        match AccelModel::by_name(n) {
+            Some(m) => accels.push(m),
+            None => {
+                eprintln!("unknown accelerator `{n}` (see `arcus modes`)");
+                return 2;
+            }
+        }
+    }
+
+    // Tightness values are labeled at 4 decimals; values that collide
+    // there would silently merge into one aggregate row.
+    let mut seen = std::collections::HashSet::new();
+    for &t in &tightness {
+        if !seen.insert(format!("{t:.4}")) {
+            eprintln!("tightness values collide at 4 decimals ({t:.4}); space them further apart");
+            return 2;
+        }
+    }
+
+    let grid = SweepGrid::new(GridBase {
+        duration: duration_ms * MILLIS,
+        warmup: (duration_ms * MILLIS / 5).max(MILLIS / 2),
+        line_rate: Rate::gbps(32.0),
+        load,
+        path: Path::FunctionCall,
+        seed: 1,
+    })
+    .modes(modes)
+    .tenants(tenants)
+    .mixes(mixes)
+    .bursts(bursts)
+    .tightness(tightness)
+    .accels(accels)
+    .seeds(seeds);
+
+    let runner = match threads {
+        Some(t) => SweepRunner::with_threads(t),
+        None => SweepRunner::new(),
+    };
+    // Progress goes to stderr: stdout carries only the deterministic
+    // tables, so `sweep --threads 1 > a` / `--threads 8 > b` diff clean.
+    eprintln!(
+        "expanding {} scenarios ({} workers) ...",
+        grid.cardinality(),
+        runner.threads()
+    );
+    let outcomes = runner.run(&grid);
+    let agg = aggregate(&outcomes);
+    if long_form {
+        print!("{}", agg.render_scenarios());
+        println!();
+    }
+    print!("{}", agg.render());
     0
 }
 

@@ -1,0 +1,353 @@
+//! Aggregation: fold scenario reports into per-axis comparison tables.
+//!
+//! Every executed scenario is first reduced to a [`ScenarioSummary`] of the
+//! paper's headline metrics — worst-flow SLO attainment, p99/p99.9 latency
+//! tails, aggregate goodput, windowed-throughput variance (Fig 6/7's
+//! metrics) — and then grouped along each grid axis into an [`AxisTable`]
+//! (e.g. "attainment by management mode", "p99 by tenant count").
+//!
+//! Determinism contract: summaries use only deterministic report fields
+//! (never wall-clock accounting), grouping is ordered by formatted axis
+//! value, and accumulation visits scenarios in expansion order — so
+//! [`SweepAggregate::render`] is byte-identical across runs of the same
+//! grid, regardless of worker-thread interleaving. Tests assert exactly
+//! that.
+
+use std::collections::BTreeMap;
+
+use crate::flow::Slo;
+use crate::util::units::MICROS;
+
+use super::grid::{burst_name, ScenarioKey};
+use super::runner::ScenarioOutcome;
+
+/// One scenario reduced to headline metrics.
+#[derive(Debug, Clone)]
+pub struct ScenarioSummary {
+    pub key: ScenarioKey,
+    /// Worst committed-flow attainment (achieved / SLO); 0 when no
+    /// committed flow survived admission.
+    pub attainment_min: f64,
+    /// Mean committed-flow attainment.
+    pub attainment_mean: f64,
+    /// Worst flow p99 latency, µs.
+    pub p99_us: f64,
+    /// Worst flow p99.9 latency, µs.
+    pub p999_us: f64,
+    /// Aggregate goodput, Gbps.
+    pub goodput_gbps: f64,
+    /// Worst flow windowed-throughput coefficient of variation, %.
+    pub cv_pct: f64,
+    /// Messages dropped (queue overflow / RX-buffer loss) post-warmup.
+    pub dropped: u64,
+    /// Flows rejected by admission control.
+    pub rejected: usize,
+}
+
+/// Reduce one outcome to its summary.
+pub fn summarize(outcome: &ScenarioOutcome) -> ScenarioSummary {
+    let r = &outcome.report;
+    let mut att = Vec::new();
+    let mut rejected = 0usize;
+    for f in &r.per_flow {
+        if f.rejected {
+            rejected += 1;
+            continue;
+        }
+        if matches!(f.slo, Slo::BestEffort) {
+            continue;
+        }
+        if let Some(a) = f.slo_attainment() {
+            att.push(a);
+        }
+    }
+    let attainment_min = att.iter().copied().fold(f64::INFINITY, f64::min);
+    let attainment_mean = if att.is_empty() {
+        0.0
+    } else {
+        att.iter().sum::<f64>() / att.len() as f64
+    };
+    let live = r.per_flow.iter().filter(|f| !f.rejected);
+    let p99_us = live
+        .clone()
+        .map(|f| f.lat_p99)
+        .max()
+        .unwrap_or(0) as f64
+        / MICROS as f64;
+    let p999_us = live
+        .clone()
+        .map(|f| f.lat_p999)
+        .max()
+        .unwrap_or(0) as f64
+        / MICROS as f64;
+    let cv_pct = live
+        .clone()
+        .map(|f| f.sampler.cv() * 100.0)
+        .fold(0.0f64, f64::max);
+    ScenarioSummary {
+        key: outcome.key.clone(),
+        attainment_min: if attainment_min.is_finite() { attainment_min } else { 0.0 },
+        attainment_mean,
+        p99_us,
+        p999_us,
+        goodput_gbps: r.total_goodput().as_gbps(),
+        cv_pct,
+        dropped: r.per_flow.iter().map(|f| f.dropped).sum(),
+        rejected,
+    }
+}
+
+/// Aggregated statistics for one axis value.
+#[derive(Debug, Clone, Default)]
+pub struct AxisStats {
+    pub scenarios: usize,
+    /// Mean over scenarios of the worst-flow attainment.
+    pub attainment_mean: f64,
+    /// Worst attainment seen in any scenario of this group.
+    pub attainment_worst: f64,
+    pub p99_us_mean: f64,
+    pub p999_us_mean: f64,
+    pub goodput_gbps_mean: f64,
+    pub cv_pct_mean: f64,
+    pub dropped_total: u64,
+    pub rejected_total: usize,
+}
+
+impl AxisStats {
+    fn fold(group: &[&ScenarioSummary]) -> AxisStats {
+        let n = group.len().max(1) as f64;
+        AxisStats {
+            scenarios: group.len(),
+            attainment_mean: group.iter().map(|s| s.attainment_min).sum::<f64>() / n,
+            attainment_worst: group
+                .iter()
+                .map(|s| s.attainment_min)
+                .fold(f64::INFINITY, f64::min)
+                .min(f64::MAX),
+            p99_us_mean: group.iter().map(|s| s.p99_us).sum::<f64>() / n,
+            p999_us_mean: group.iter().map(|s| s.p999_us).sum::<f64>() / n,
+            goodput_gbps_mean: group.iter().map(|s| s.goodput_gbps).sum::<f64>() / n,
+            cv_pct_mean: group.iter().map(|s| s.cv_pct).sum::<f64>() / n,
+            dropped_total: group.iter().map(|s| s.dropped).sum(),
+            rejected_total: group.iter().map(|s| s.rejected).sum(),
+        }
+    }
+}
+
+/// One axis's comparison table, rows ordered by formatted axis value.
+#[derive(Debug, Clone)]
+pub struct AxisTable {
+    /// Axis name (`mode`, `tenants`, `mix`, `burst`, `tightness`,
+    /// `accel`, `seed`).
+    pub axis: &'static str,
+    pub rows: Vec<(String, AxisStats)>,
+}
+
+/// The full aggregate: per-scenario summaries plus per-axis tables.
+#[derive(Debug, Clone)]
+pub struct SweepAggregate {
+    /// Summaries in grid expansion order.
+    pub scenarios: Vec<ScenarioSummary>,
+    pub axes: Vec<AxisTable>,
+}
+
+/// Axis label formatters. Numeric labels are zero-padded / fixed-precision
+/// so lexicographic BTreeMap order equals numeric order.
+fn axis_value(axis: &str, key: &ScenarioKey) -> String {
+    match axis {
+        "mode" => key.mode.name().to_string(),
+        "tenants" => format!("t{:04}", key.tenants),
+        "mix" => key.mix.name().to_string(),
+        "burst" => burst_name(key.burst),
+        // Zero-padded integer part keeps lexicographic == numeric order up
+        // to 9999; four decimals keep close CLI-supplied values distinct.
+        "tightness" => format!("x{:09.4}", key.tightness),
+        "accel" => key.accel.to_string(),
+        "seed" => format!("s{:020}", key.seed),
+        other => unreachable!("unknown axis {other}"),
+    }
+}
+
+const AXES: [&str; 7] = ["mode", "tenants", "mix", "burst", "tightness", "accel", "seed"];
+
+/// Fold executed scenarios into the aggregate.
+pub fn aggregate(outcomes: &[ScenarioOutcome]) -> SweepAggregate {
+    let scenarios: Vec<ScenarioSummary> = outcomes.iter().map(summarize).collect();
+    let mut axes = Vec::new();
+    for axis in AXES {
+        let mut groups: BTreeMap<String, Vec<&ScenarioSummary>> = BTreeMap::new();
+        for s in &scenarios {
+            groups.entry(axis_value(axis, &s.key)).or_default().push(s);
+        }
+        // Single-valued axes carry no comparison; keep them only when the
+        // grid actually sweeps them (or the grid is empty).
+        if groups.len() <= 1 {
+            continue;
+        }
+        axes.push(AxisTable {
+            axis,
+            rows: groups
+                .into_iter()
+                .map(|(value, group)| (value, AxisStats::fold(&group)))
+                .collect(),
+        });
+    }
+    SweepAggregate { scenarios, axes }
+}
+
+impl SweepAggregate {
+    /// Render the per-axis comparison tables. Byte-identical across runs
+    /// of the same grid (see module docs).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "sweep aggregate: {} scenarios, {} swept axes\n",
+            self.scenarios.len(),
+            self.axes.len()
+        ));
+        for table in &self.axes {
+            out.push_str(&format!("\n[by {}]\n", table.axis));
+            out.push_str(&format!(
+                "{:<22} {:>5} {:>9} {:>9} {:>10} {:>10} {:>9} {:>7} {:>6} {:>5}\n",
+                "value", "n", "att.mean", "att.min", "p99(us)", "p999(us)", "Gbps", "cv%", "drop", "rej"
+            ));
+            for (value, s) in &table.rows {
+                out.push_str(&format!(
+                    "{:<22} {:>5} {:>9.3} {:>9.3} {:>10.2} {:>10.2} {:>9.2} {:>7.2} {:>6} {:>5}\n",
+                    value,
+                    s.scenarios,
+                    s.attainment_mean,
+                    s.attainment_worst,
+                    s.p99_us_mean,
+                    s.p999_us_mean,
+                    s.goodput_gbps_mean,
+                    s.cv_pct_mean,
+                    s.dropped_total,
+                    s.rejected_total
+                ));
+            }
+        }
+        out
+    }
+
+    /// Render every scenario row (the long-form report).
+    pub fn render_scenarios(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<44} {:>9} {:>10} {:>9} {:>7} {:>6} {:>5}\n",
+            "scenario", "att.min", "p99(us)", "Gbps", "cv%", "drop", "rej"
+        ));
+        for s in &self.scenarios {
+            out.push_str(&format!(
+                "{:<44} {:>9.3} {:>10.2} {:>9.2} {:>7.2} {:>6} {:>5}\n",
+                s.key.label(),
+                s.attainment_min,
+                s.p99_us,
+                s.goodput_gbps,
+                s.cv_pct,
+                s.dropped,
+                s.rejected
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::pattern::Burstiness;
+    use crate::metrics::{FlowMetrics, ThroughputSampler};
+    use crate::system::{FlowReport, Mode, SystemReport};
+    use crate::sweep::grid::SizeMix;
+    use crate::util::units::Rate;
+
+    fn outcome(index: usize, mode: Mode, tenants: usize, goodput_gbps: f64) -> ScenarioOutcome {
+        let key = ScenarioKey {
+            mode,
+            tenants,
+            mix: SizeMix::Mtu,
+            burst: Burstiness::Paced,
+            tightness: 0.7,
+            accel: "ipsec",
+            seed: 1,
+        };
+        let mut metrics = FlowMetrics::new();
+        // Synthesize a goodput: N bytes over 1 ms.
+        let bytes = (goodput_gbps * 1e9 / 8.0 * 1e-3) as u64;
+        metrics.on_complete(0, 0, 0);
+        metrics.on_complete(crate::util::units::MILLIS, 0, bytes);
+        let per_flow = vec![FlowReport::from_metrics(
+            0,
+            0,
+            crate::flow::Slo::gbps(goodput_gbps),
+            false,
+            &metrics,
+            ThroughputSampler::new(500),
+            0,
+            Vec::new(),
+        )];
+        ScenarioOutcome {
+            index,
+            key,
+            report: SystemReport {
+                mode: mode.name(),
+                per_flow,
+                measured_span: crate::util::units::MILLIS,
+                pcie_up_util: 0.0,
+                pcie_down_util: 0.0,
+                accel_util: vec![0.5],
+                nic_rx_dropped: 0,
+                events: 10,
+                wall_secs: 0.001,
+            },
+        }
+    }
+
+    #[test]
+    fn groups_by_swept_axes_only() {
+        let outcomes = vec![
+            outcome(0, Mode::Arcus, 1, 10.0),
+            outcome(1, Mode::Arcus, 2, 12.0),
+            outcome(2, Mode::HostNoTs, 1, 14.0),
+            outcome(3, Mode::HostNoTs, 2, 16.0),
+        ];
+        let agg = aggregate(&outcomes);
+        assert_eq!(agg.scenarios.len(), 4);
+        let axes: Vec<&str> = agg.axes.iter().map(|t| t.axis).collect();
+        assert_eq!(axes, vec!["mode", "tenants"]);
+        let mode_table = &agg.axes[0];
+        assert_eq!(mode_table.rows.len(), 2);
+        assert_eq!(mode_table.rows[0].0, "arcus");
+        assert_eq!(mode_table.rows[0].1.scenarios, 2);
+    }
+
+    #[test]
+    fn render_is_deterministic_and_excludes_wall_clock() {
+        let mk = |wall: f64| {
+            let mut o = vec![
+                outcome(0, Mode::Arcus, 1, 10.0),
+                outcome(1, Mode::HostNoTs, 1, 14.0),
+            ];
+            for x in &mut o {
+                x.report.wall_secs = wall;
+            }
+            o
+        };
+        let a = aggregate(&mk(0.001)).render();
+        let b = aggregate(&mk(9.999)).render();
+        assert_eq!(a, b);
+        assert!(a.contains("[by mode]"));
+    }
+
+    #[test]
+    fn attainment_reflects_goodput_over_slo() {
+        // Goodput == SLO → attainment ≈ 1.
+        let o = vec![outcome(0, Mode::Arcus, 1, 10.0), outcome(1, Mode::HostNoTs, 1, 10.0)];
+        let agg = aggregate(&o);
+        for s in &agg.scenarios {
+            assert!((s.attainment_min - 1.0).abs() < 0.05, "{}", s.attainment_min);
+        }
+        let _ = Rate::gbps(1.0); // keep the import referenced
+    }
+}

@@ -1,0 +1,488 @@
+//! Scenario grid: one experiment template expanded over evaluation axes.
+//!
+//! Arcus's claim is that SLO attainment holds across *diverse, mixed,
+//! hard-to-predict* traffic mixtures (§3). A [`SweepGrid`] makes that
+//! diversity first-class: it holds one [`GridBase`] template plus a value
+//! list per axis — tenant count, management [`Mode`], burstiness,
+//! message-size mix, SLO tightness, accelerator model, and seed — and
+//! [`SweepGrid::expand`] takes the full cartesian product into a
+//! deterministic list of [`Scenario`]s (one [`crate::system::ExperimentSpec`]
+//! each). Benches, tests, and the `arcus sweep` subcommand all build their
+//! experiments from this one vocabulary, so a "scenario" means the same
+//! thing everywhere.
+//!
+//! Determinism contract: expansion order is the nested-loop order of the
+//! axis declarations (mode outermost, seed innermost), and scenario labels
+//! AND simulator seeds are pure functions of the axis coordinates (the
+//! seed hashes `(grid seed, label)` through FNV-1a + SplitMix64) — two
+//! expansions of equal grids are identical element-wise, and the same
+//! cell keeps its seed when other axes grow.
+
+use crate::accel::AccelModel;
+use crate::flow::pattern::{Burstiness, SizeDist};
+use crate::flow::{FlowSpec, Path, Slo};
+use crate::flow::TrafficPattern;
+use crate::system::{ExperimentSpec, Mode};
+use crate::util::rng::splitmix64;
+use crate::util::units::{Rate, Time, MILLIS};
+
+/// Named message-size mixtures (Table 1's size axis) — the shared
+/// vocabulary for benches, tests, and the `sweep` subcommand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SizeMix {
+    /// 64 B RPCs — the mixture that craters fixed-function engines.
+    Tiny,
+    /// 256 B small messages.
+    Small,
+    /// MTU-sized (1500 B) — the paper's reference point.
+    Mtu,
+    /// 4 KB blocks (storage/KV payloads).
+    Bulk,
+    /// Equal-probability choice over 64/256/1500/4096.
+    Mixed,
+    /// 90% 64 B RPCs + 10% 4 KB bulk (tiny-RPC + bulk tenants).
+    Bimodal,
+}
+
+impl SizeMix {
+    pub const ALL: [SizeMix; 6] = [
+        SizeMix::Tiny,
+        SizeMix::Small,
+        SizeMix::Mtu,
+        SizeMix::Bulk,
+        SizeMix::Mixed,
+        SizeMix::Bimodal,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SizeMix::Tiny => "tiny",
+            SizeMix::Small => "small",
+            SizeMix::Mtu => "mtu",
+            SizeMix::Bulk => "bulk",
+            SizeMix::Mixed => "mixed",
+            SizeMix::Bimodal => "bimodal",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<SizeMix> {
+        Self::ALL.iter().copied().find(|m| m.name() == s)
+    }
+
+    pub fn dist(self) -> SizeDist {
+        match self {
+            SizeMix::Tiny => SizeDist::Fixed(64),
+            SizeMix::Small => SizeDist::Fixed(256),
+            SizeMix::Mtu => SizeDist::Fixed(1500),
+            SizeMix::Bulk => SizeDist::Fixed(4096),
+            SizeMix::Mixed => SizeDist::Choice(vec![64, 256, 1500, 4096]),
+            SizeMix::Bimodal => SizeDist::Bimodal { a: 64, b: 4096, p_a: 0.9 },
+        }
+    }
+
+    /// Mean message size (profiling context / SLO sizing).
+    pub fn mean_bytes(self) -> u64 {
+        self.dist().mean().round().max(1.0) as u64
+    }
+}
+
+/// Human label for a burstiness axis value.
+pub fn burst_name(b: Burstiness) -> String {
+    match b {
+        Burstiness::Paced => "paced".to_string(),
+        Burstiness::Poisson => "poisson".to_string(),
+        Burstiness::OnOff { burst_len } => format!("onoff{burst_len}"),
+    }
+}
+
+/// Template parameters shared by every scenario in a grid.
+#[derive(Debug, Clone)]
+pub struct GridBase {
+    /// Virtual measured duration per scenario.
+    pub duration: Time,
+    /// Virtual warmup discarded from metrics.
+    pub warmup: Time,
+    /// Reference line rate the load fraction is relative to.
+    pub line_rate: Rate,
+    /// Aggregate offered load across all tenants, as a fraction of
+    /// `line_rate` (each tenant offers `load / tenants`).
+    pub load: f64,
+    /// Invocation path every flow uses.
+    pub path: Path,
+    /// Base seed every scenario seed is derived from.
+    pub seed: u64,
+}
+
+impl Default for GridBase {
+    fn default() -> Self {
+        GridBase {
+            duration: 4 * MILLIS,
+            warmup: MILLIS,
+            line_rate: Rate::gbps(32.0),
+            load: 0.9,
+            path: Path::FunctionCall,
+            seed: 1,
+        }
+    }
+}
+
+/// The grid: a template plus one value list per axis.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub base: GridBase,
+    pub modes: Vec<Mode>,
+    pub tenants: Vec<usize>,
+    pub mixes: Vec<SizeMix>,
+    pub bursts: Vec<Burstiness>,
+    /// SLO tightness: the fraction of the accelerator's effective capacity
+    /// (at the mix's mean message size) committed across all tenants.
+    /// 1.0 commits the whole engine; >1.0 is deliberately inadmissible.
+    pub tightness: Vec<f64>,
+    pub accels: Vec<AccelModel>,
+    /// Seed axis: replications of every cell with decorrelated randomness.
+    pub seeds: Vec<u64>,
+}
+
+impl SweepGrid {
+    /// A grid with empty axes; fill every axis before expanding.
+    pub fn new(base: GridBase) -> Self {
+        SweepGrid {
+            base,
+            modes: Vec::new(),
+            tenants: Vec::new(),
+            mixes: Vec::new(),
+            bursts: Vec::new(),
+            tightness: Vec::new(),
+            accels: Vec::new(),
+            seeds: Vec::new(),
+        }
+    }
+
+    pub fn modes(mut self, v: Vec<Mode>) -> Self {
+        self.modes = v;
+        self
+    }
+    pub fn tenants(mut self, v: Vec<usize>) -> Self {
+        self.tenants = v;
+        self
+    }
+    pub fn mixes(mut self, v: Vec<SizeMix>) -> Self {
+        self.mixes = v;
+        self
+    }
+    pub fn bursts(mut self, v: Vec<Burstiness>) -> Self {
+        self.bursts = v;
+        self
+    }
+    pub fn tightness(mut self, v: Vec<f64>) -> Self {
+        self.tightness = v;
+        self
+    }
+    pub fn accels(mut self, v: Vec<AccelModel>) -> Self {
+        self.accels = v;
+        self
+    }
+    pub fn seeds(mut self, v: Vec<u64>) -> Self {
+        self.seeds = v;
+        self
+    }
+
+    /// Number of scenarios the grid expands to: the product of axis
+    /// lengths (zero if any axis is empty).
+    pub fn cardinality(&self) -> usize {
+        self.modes.len()
+            * self.tenants.len()
+            * self.mixes.len()
+            * self.bursts.len()
+            * self.tightness.len()
+            * self.accels.len()
+            * self.seeds.len()
+    }
+
+    /// Expand the full cartesian product into scenarios, in deterministic
+    /// nested-loop order (mode outermost, seed innermost).
+    pub fn expand(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.cardinality());
+        let mut index = 0usize;
+        for &mode in &self.modes {
+            for &tenants in &self.tenants {
+                for &mix in &self.mixes {
+                    for &burst in &self.bursts {
+                        for &tightness in &self.tightness {
+                            for accel in &self.accels {
+                                for &seed in &self.seeds {
+                                    let key = ScenarioKey {
+                                        mode,
+                                        tenants,
+                                        mix,
+                                        burst,
+                                        tightness,
+                                        accel: accel.name,
+                                        seed,
+                                    };
+                                    let spec = self.scenario_spec(&key, accel);
+                                    out.push(Scenario { index, key, spec });
+                                    index += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn scenario_spec(&self, key: &ScenarioKey, accel: &AccelModel) -> ExperimentSpec {
+        let tenants = key.tenants.max(1);
+        // The engine's sustainable ingress rate at this mixture's mean
+        // size; `tightness` of it is committed, split evenly per tenant.
+        let capacity = accel.effective_rate(key.mix.mean_bytes());
+        let per_flow_slo = Rate(capacity.0 * key.tightness / tenants as f64);
+        let per_flow_load = self.base.load / tenants as f64;
+        let flows: Vec<FlowSpec> = (0..tenants)
+            .map(|t| {
+                let pattern = TrafficPattern {
+                    sizes: key.mix.dist(),
+                    load: per_flow_load,
+                    line_rate: self.base.line_rate,
+                    burst: key.burst,
+                };
+                FlowSpec::new(
+                    t,
+                    t,
+                    self.base.path,
+                    pattern,
+                    Slo::Throughput { target: per_flow_slo, percentile: 99.0 },
+                    0,
+                )
+            })
+            .collect();
+        ExperimentSpec::new(key.mode, vec![accel.clone()], flows)
+            .with_duration(self.base.duration)
+            .with_warmup(self.base.warmup)
+            .with_seed(scenario_seed(self.base.seed, key))
+    }
+}
+
+/// Derive a scenario's simulator seed from the grid seed and the
+/// scenario's axis coordinates (FNV-1a over the label, mixed through
+/// SplitMix64). A pure function of the coordinates: the cell labeled
+/// `arcus/t02/mtu/paced/x0.7000/ipsec/s1` keeps the same seed no matter
+/// which other axis values surround it, so reports stay comparable as a
+/// grid grows. Distinct coordinates give decorrelated (and, over 64 bits,
+/// distinct) seeds.
+pub fn scenario_seed(base: u64, key: &ScenarioKey) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325; // FNV-1a offset basis
+    for b in key.label().bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3); // FNV-1a prime
+    }
+    // The label carries tightness at 4 decimals; fold in the exact bits so
+    // tightness values that collide in the label still get distinct seeds.
+    h ^= key.tightness.to_bits().wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut s = base ^ h;
+    let first = splitmix64(&mut s);
+    first ^ splitmix64(&mut s)
+}
+
+/// The axis coordinates of one scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioKey {
+    pub mode: Mode,
+    pub tenants: usize,
+    pub mix: SizeMix,
+    pub burst: Burstiness,
+    pub tightness: f64,
+    /// Accelerator model name (axis label).
+    pub accel: &'static str,
+    /// Seed-axis value (not the derived simulator seed).
+    pub seed: u64,
+}
+
+impl ScenarioKey {
+    /// Stable human-readable identifier, e.g.
+    /// `arcus/t04/mtu/poisson/x0.7000/ipsec/s2`. Tightness carries four
+    /// decimals so nearby swept values keep distinct labels.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/t{:02}/{}/{}/x{:.4}/{}/s{}",
+            self.mode.name(),
+            self.tenants,
+            self.mix.name(),
+            burst_name(self.burst),
+            self.tightness,
+            self.accel,
+            self.seed
+        )
+    }
+}
+
+/// One expanded grid cell: coordinates plus the runnable spec.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Position in expansion order.
+    pub index: usize,
+    pub key: ScenarioKey,
+    pub spec: ExperimentSpec,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall_cfg, Config, VecOf, U64Range};
+    use std::collections::HashSet;
+
+    /// Build a grid whose seven axis lengths are `lens` (each 1..=4),
+    /// taking prefixes of canonical per-axis menus.
+    fn grid_with_lens(lens: &[u64]) -> SweepGrid {
+        assert_eq!(lens.len(), 7);
+        let modes = [Mode::Arcus, Mode::HostNoTs, Mode::HostTsReflex, Mode::BypassedPanic];
+        let tenants = [1usize, 2, 3, 4];
+        let mixes = [SizeMix::Mtu, SizeMix::Bulk, SizeMix::Tiny, SizeMix::Mixed];
+        let bursts = [
+            Burstiness::Paced,
+            Burstiness::Poisson,
+            Burstiness::OnOff { burst_len: 16 },
+            Burstiness::OnOff { burst_len: 4 },
+        ];
+        let tightness = [0.4, 0.6, 0.8, 1.0];
+        let accels = [
+            AccelModel::ipsec_32g(),
+            AccelModel::aes_128(),
+            AccelModel::sha1_hmac(),
+            AccelModel::synthetic(Rate::gbps(50.0)),
+        ];
+        let seeds = [1u64, 2, 3, 4];
+        SweepGrid::new(GridBase::default())
+            .modes(modes[..lens[0] as usize].to_vec())
+            .tenants(tenants[..lens[1] as usize].to_vec())
+            .mixes(mixes[..lens[2] as usize].to_vec())
+            .bursts(bursts[..lens[3] as usize].to_vec())
+            .tightness(tightness[..lens[4] as usize].to_vec())
+            .accels(accels[..lens[5] as usize].to_vec())
+            .seeds(seeds[..lens[6] as usize].to_vec())
+    }
+
+    fn lens_gen() -> VecOf<U64Range> {
+        VecOf { elem: U64Range(1, 4), min_len: 7, max_len: 7 }
+    }
+
+    #[test]
+    fn prop_expansion_cardinality_is_axis_product() {
+        forall_cfg(&Config { cases: 64, ..Default::default() }, &lens_gen(), |lens| {
+            let grid = grid_with_lens(lens);
+            let product: u64 = lens.iter().product();
+            grid.cardinality() == product as usize
+                && grid.expand().len() == grid.cardinality()
+        });
+    }
+
+    #[test]
+    fn prop_scenario_seeds_pairwise_distinct() {
+        forall_cfg(&Config { cases: 48, ..Default::default() }, &lens_gen(), |lens| {
+            let grid = grid_with_lens(lens);
+            let scenarios = grid.expand();
+            let seeds: HashSet<u64> = scenarios.iter().map(|s| s.spec.seed).collect();
+            seeds.len() == scenarios.len()
+        });
+    }
+
+    #[test]
+    fn prop_labels_unique_and_expansion_deterministic() {
+        forall_cfg(&Config { cases: 32, ..Default::default() }, &lens_gen(), |lens| {
+            let grid = grid_with_lens(lens);
+            let a = grid.expand();
+            let b = grid.expand();
+            let labels: HashSet<String> = a.iter().map(|s| s.key.label()).collect();
+            labels.len() == a.len()
+                && a.len() == b.len()
+                && a.iter().zip(b.iter()).all(|(x, y)| {
+                    x.key.label() == y.key.label()
+                        && x.spec.seed == y.spec.seed
+                        && x.spec.flows.len() == y.spec.flows.len()
+                })
+        });
+    }
+
+    #[test]
+    fn seeds_stable_when_other_axes_grow() {
+        // The same coordinate cell must keep its simulator seed no matter
+        // which other axis values surround it (cross-run comparability).
+        let base = || {
+            SweepGrid::new(GridBase::default())
+                .modes(vec![Mode::Arcus, Mode::HostNoTs])
+                .mixes(vec![SizeMix::Mtu])
+                .bursts(vec![Burstiness::Paced])
+                .tightness(vec![0.7])
+                .accels(vec![AccelModel::ipsec_32g()])
+                .seeds(vec![1])
+        };
+        let small = base().tenants(vec![1, 2]).expand();
+        let large = base().tenants(vec![1, 2, 4]).seeds(vec![1, 2]).expand();
+        let by_label: std::collections::HashMap<String, u64> =
+            large.iter().map(|s| (s.key.label(), s.spec.seed)).collect();
+        for s in &small {
+            assert_eq!(
+                by_label.get(&s.key.label()),
+                Some(&s.spec.seed),
+                "{} changed seed when the grid grew",
+                s.key.label()
+            );
+        }
+    }
+
+    #[test]
+    fn empty_axis_empty_grid() {
+        let grid = SweepGrid::new(GridBase::default())
+            .modes(vec![Mode::Arcus])
+            .tenants(vec![2])
+            .mixes(vec![SizeMix::Mtu])
+            .bursts(vec![])
+            .tightness(vec![0.7])
+            .accels(vec![AccelModel::ipsec_32g()])
+            .seeds(vec![1]);
+        assert_eq!(grid.cardinality(), 0);
+        assert!(grid.expand().is_empty());
+    }
+
+    #[test]
+    fn scenario_flows_match_coordinates() {
+        let grid = SweepGrid::new(GridBase { load: 0.8, ..GridBase::default() })
+            .modes(vec![Mode::Arcus])
+            .tenants(vec![4])
+            .mixes(vec![SizeMix::Bulk])
+            .bursts(vec![Burstiness::Poisson])
+            .tightness(vec![0.5])
+            .accels(vec![AccelModel::ipsec_32g()])
+            .seeds(vec![9]);
+        let scenarios = grid.expand();
+        assert_eq!(scenarios.len(), 1);
+        let spec = &scenarios[0].spec;
+        assert_eq!(spec.flows.len(), 4);
+        assert_eq!(spec.mode, Mode::Arcus);
+        // Per-tenant load splits the aggregate evenly.
+        assert!((spec.flows[0].pattern.load - 0.2).abs() < 1e-12);
+        // Committed SLO sum = tightness × capacity at the mean size.
+        let cap = AccelModel::ipsec_32g().effective_rate(4096);
+        let total: f64 = spec
+            .flows
+            .iter()
+            .map(|f| match f.slo {
+                Slo::Throughput { target, .. } => target.0,
+                _ => panic!("grid scenarios carry throughput SLOs"),
+            })
+            .sum();
+        assert!((total - cap.0 * 0.5).abs() / (cap.0 * 0.5) < 1e-9);
+    }
+
+    #[test]
+    fn size_mix_roundtrip_and_means() {
+        for m in SizeMix::ALL {
+            assert_eq!(SizeMix::by_name(m.name()), Some(m));
+            assert!(m.mean_bytes() >= 64);
+        }
+        assert_eq!(SizeMix::Mtu.mean_bytes(), 1500);
+        assert!(SizeMix::by_name("jumbo").is_none());
+    }
+}

@@ -1,0 +1,31 @@
+//! Scenario-sweep engine: grid expansion → parallel execution → per-axis
+//! aggregation.
+//!
+//! The paper's evaluation is a family of grids — traffic mixtures × tenant
+//! counts × management architectures, each point a full multi-tenant
+//! experiment (§5, Figs 3/6/7/8). This subsystem makes that methodology a
+//! library:
+//!
+//! - [`grid`] — [`SweepGrid`] expands one [`GridBase`] template over seven
+//!   axes (tenant count, [`crate::system::Mode`], burstiness, message-size
+//!   mix, SLO tightness, accelerator model, seed) into a deterministic
+//!   scenario list; [`SizeMix`] is the shared message-size vocabulary.
+//! - [`runner`] — [`SweepRunner`] executes scenarios across `std::thread`
+//!   workers; each simulation stays single-threaded and deterministic
+//!   (seeded per scenario), so threading never changes a result.
+//! - [`aggregate`] — folds the resulting [`crate::system::SystemReport`]s
+//!   into per-axis comparison tables of the paper's headline metrics
+//!   (worst-flow SLO attainment, p99/p99.9 tails, goodput, throughput
+//!   variance), with byte-identical rendering across runs.
+//!
+//! Entry points: `arcus sweep` on the CLI, [`SweepRunner::run`] from code,
+//! and [`run_specs`] / [`run_parallel`] as the substrate the paper-figure
+//! benches fan out on.
+
+pub mod aggregate;
+pub mod grid;
+pub mod runner;
+
+pub use aggregate::{aggregate, AxisStats, AxisTable, ScenarioSummary, SweepAggregate};
+pub use grid::{burst_name, scenario_seed, GridBase, Scenario, ScenarioKey, SizeMix, SweepGrid};
+pub use runner::{default_threads, run_parallel, run_specs, ScenarioOutcome, SweepRunner};

@@ -1,0 +1,154 @@
+//! Parallel sweep execution.
+//!
+//! Scenarios are embarrassingly parallel — each simulation is
+//! single-threaded and deterministic given its spec (the per-scenario seed
+//! is baked in at expansion time) — so the runner fans a work queue out
+//! over `std::thread` workers and reassembles results in expansion order.
+//! Parallelism therefore never changes any report: the only nondeterministic
+//! field a simulation produces is its wall-clock accounting, which the
+//! aggregation layer deliberately ignores.
+
+use std::sync::Mutex;
+
+use crate::system::{self, ExperimentSpec, SystemReport};
+
+use super::grid::{Scenario, ScenarioKey, SweepGrid};
+
+/// Run independent jobs across `threads` workers; results in input order.
+///
+/// The generic work-queue primitive under [`SweepRunner`], also used
+/// directly by bench scaffolding for non-scenario jobs (e.g. the shaper
+/// ablation's per-mechanism measurements).
+pub fn run_parallel<T, F>(jobs: Vec<F>, threads: usize) -> Vec<T>
+where
+    F: FnOnce() -> T + Send,
+    T: Send,
+{
+    let threads = threads.max(1).min(jobs.len().max(1));
+    let queue: Mutex<Vec<(usize, F)>> = Mutex::new(jobs.into_iter().enumerate().collect());
+    let results: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let job = queue.lock().unwrap().pop();
+                match job {
+                    Some((index, f)) => {
+                        let r = f();
+                        results.lock().unwrap().push((index, r));
+                    }
+                    None => return,
+                }
+            });
+        }
+    });
+    let mut out = results.into_inner().unwrap();
+    out.sort_by_key(|&(index, _)| index);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Default worker count: one per available core.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// One executed scenario: its coordinates plus the simulation report.
+#[derive(Debug)]
+pub struct ScenarioOutcome {
+    /// Position in grid expansion order.
+    pub index: usize,
+    pub key: ScenarioKey,
+    pub report: SystemReport,
+}
+
+/// Executes grids (or pre-expanded scenario lists) across worker threads.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepRunner {
+    threads: usize,
+}
+
+impl Default for SweepRunner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SweepRunner {
+    pub fn new() -> Self {
+        SweepRunner { threads: default_threads() }
+    }
+
+    pub fn with_threads(threads: usize) -> Self {
+        SweepRunner { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Expand and execute a grid; outcomes in expansion order.
+    pub fn run(&self, grid: &SweepGrid) -> Vec<ScenarioOutcome> {
+        self.run_scenarios(grid.expand())
+    }
+
+    /// Execute pre-expanded scenarios; outcomes in input order.
+    pub fn run_scenarios(&self, scenarios: Vec<Scenario>) -> Vec<ScenarioOutcome> {
+        let jobs: Vec<_> = scenarios
+            .into_iter()
+            .map(|sc| {
+                move || ScenarioOutcome {
+                    index: sc.index,
+                    report: system::run(&sc.spec),
+                    key: sc.key,
+                }
+            })
+            .collect();
+        run_parallel(jobs, self.threads)
+    }
+}
+
+/// Convenience for bench scaffolding: run raw specs in parallel, reports
+/// in input order.
+pub fn run_specs(specs: Vec<ExperimentSpec>) -> Vec<SystemReport> {
+    let jobs: Vec<_> = specs
+        .into_iter()
+        .map(|spec| move || system::run(&spec))
+        .collect();
+    run_parallel(jobs, default_threads())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_parallel_preserves_order() {
+        let jobs: Vec<_> = (0..64u64)
+            .map(|i| {
+                move || {
+                    // Uneven work so completion order scrambles.
+                    let mut x = i;
+                    for _ in 0..(i % 7) * 1000 {
+                        x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    }
+                    std::hint::black_box(x);
+                    i
+                }
+            })
+            .collect();
+        let out = run_parallel(jobs, 8);
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_parallel_handles_empty_and_single() {
+        let empty: Vec<fn() -> u32> = Vec::new();
+        assert!(run_parallel(empty, 4).is_empty());
+        assert_eq!(run_parallel(vec![|| 7u32], 4), vec![7]);
+    }
+
+    #[test]
+    fn more_threads_than_jobs_is_fine() {
+        let jobs: Vec<_> = (0..3u32).map(|i| move || i * 2).collect();
+        assert_eq!(run_parallel(jobs, 64), vec![0, 2, 4]);
+    }
+}

@@ -1,0 +1,120 @@
+//! Integration tests for the scenario-sweep engine: the acceptance smoke
+//! grid (≥48 scenarios across ≥3 modes and ≥2 tenant counts) and the
+//! determinism-under-threading contract — two parallel runs of the same
+//! grid must produce byte-identical aggregate tables.
+
+use arcus::accel::AccelModel;
+use arcus::flow::pattern::Burstiness;
+use arcus::flow::Path;
+use arcus::sweep::{aggregate, GridBase, SizeMix, SweepGrid, SweepRunner};
+use arcus::system::Mode;
+use arcus::testkit::{forall_cfg, Config, OneOf, PairOf};
+use arcus::util::units::{Rate, MILLIS};
+
+fn smoke_grid() -> SweepGrid {
+    SweepGrid::new(GridBase {
+        duration: 2 * MILLIS,
+        warmup: MILLIS / 2,
+        line_rate: Rate::gbps(32.0),
+        load: 0.9,
+        path: Path::FunctionCall,
+        seed: 11,
+    })
+    .modes(vec![Mode::Arcus, Mode::HostNoTs, Mode::BypassedPanic])
+    .tenants(vec![1, 2])
+    .mixes(vec![SizeMix::Mtu, SizeMix::Bulk])
+    .bursts(vec![Burstiness::Paced, Burstiness::Poisson])
+    .tightness(vec![0.7])
+    .accels(vec![AccelModel::ipsec_32g()])
+    .seeds(vec![1, 2])
+}
+
+#[test]
+fn sweep_smoke_expands_48_scenarios_and_threading_is_deterministic() {
+    let grid = smoke_grid();
+    // Acceptance shape: ≥48 scenarios over ≥3 modes and ≥2 tenant counts.
+    assert!(grid.modes.len() >= 3);
+    assert!(grid.tenants.len() >= 2);
+    assert_eq!(grid.cardinality(), 48);
+    let scenarios = grid.expand();
+    assert_eq!(scenarios.len(), 48);
+
+    // Two runs with different worker counts: reports must match flow-wise
+    // and the aggregate tables must be byte-identical.
+    let a = SweepRunner::with_threads(4).run(&grid);
+    let b = SweepRunner::with_threads(2).run(&grid);
+    assert_eq!(a.len(), 48);
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.index, y.index);
+        assert_eq!(x.key.label(), y.key.label());
+        assert_eq!(x.report.per_flow.len(), y.report.per_flow.len());
+        for (fx, fy) in x.report.per_flow.iter().zip(y.report.per_flow.iter()) {
+            assert_eq!(fx.completed, fy.completed, "{}", x.key.label());
+            assert_eq!(fx.bytes, fy.bytes);
+            assert_eq!(fx.lat_p999, fy.lat_p999);
+            assert_eq!(fx.dropped, fy.dropped);
+        }
+    }
+    let ta = aggregate(&a).render();
+    let tb = aggregate(&b).render();
+    assert_eq!(ta, tb, "aggregate tables diverged across thread counts");
+
+    // The tables actually compare the swept axes...
+    assert!(ta.contains("[by mode]"), "{ta}");
+    assert!(ta.contains("[by tenants]"));
+    assert!(ta.contains("arcus"));
+    // ...and every scenario moved real traffic.
+    for o in &a {
+        let completed: u64 = o.report.per_flow.iter().map(|f| f.completed).sum();
+        assert!(completed > 100, "{} completed only {completed}", o.key.label());
+    }
+}
+
+#[test]
+fn arcus_attains_slos_across_the_smoke_grid() {
+    // On the Arcus slice of the smoke grid, every committed flow that
+    // passed admission lands near its SLO — the paper's core claim, held
+    // across mixtures rather than at one hand-picked point.
+    let grid = smoke_grid().modes(vec![Mode::Arcus]);
+    let outcomes = SweepRunner::new().run(&grid);
+    for o in &outcomes {
+        for f in o.report.per_flow.iter().filter(|f| !f.rejected) {
+            let att = f.slo_attainment().expect("grid flows carry throughput SLOs");
+            assert!(
+                (0.85..1.25).contains(&att),
+                "{} flow {}: attainment {att:.3}",
+                o.key.label(),
+                f.flow
+            );
+        }
+    }
+}
+
+/// Satellite property (b): identical grids yield byte-identical aggregated
+/// reports across two parallel runs, over randomized small grids.
+#[test]
+fn prop_random_grids_aggregate_identically_across_parallel_runs() {
+    let gen = PairOf(OneOf(vec![1usize, 2, 3]), OneOf(vec![0usize, 1]));
+    forall_cfg(&Config { cases: 4, ..Default::default() }, &gen, |&(tenants, mix_idx)| {
+        let mix = [SizeMix::Mtu, SizeMix::Bulk][mix_idx];
+        let grid = SweepGrid::new(GridBase {
+            duration: MILLIS,
+            warmup: MILLIS / 4,
+            line_rate: Rate::gbps(32.0),
+            load: 0.6,
+            path: Path::FunctionCall,
+            seed: 5,
+        })
+        .modes(vec![Mode::Arcus, Mode::HostNoTs])
+        .tenants(vec![tenants])
+        .mixes(vec![mix])
+        .bursts(vec![Burstiness::Paced])
+        .tightness(vec![0.6])
+        .accels(vec![AccelModel::ipsec_32g()])
+        .seeds(vec![1]);
+        let a = SweepRunner::with_threads(2).run(&grid);
+        let b = SweepRunner::with_threads(3).run(&grid);
+        aggregate(&a).render() == aggregate(&b).render()
+            && aggregate(&a).render_scenarios() == aggregate(&b).render_scenarios()
+    });
+}

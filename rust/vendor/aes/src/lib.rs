@@ -1,0 +1,226 @@
+//! Offline shim for the `aes` crate: pure-Rust AES-128 block encryption
+//! behind the `cipher` trait surface the workspace uses
+//! (`KeyInit::new`, `BlockEncrypt::encrypt_block`, `GenericArray`).
+//!
+//! The S-box is generated at key-setup time from its FIPS-197 definition
+//! (multiplicative inverse in GF(2^8) followed by the affine transform), so
+//! there is no 256-entry table to mistype.
+
+pub mod cipher {
+    //! Subset of the `cipher` crate's surface.
+
+    pub mod generic_array {
+        /// 16-byte block, layout-compatible with `[u8; 16]`.
+        #[repr(transparent)]
+        #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+        pub struct GenericArray(pub [u8; 16]);
+
+        impl GenericArray {
+            /// View a 16-byte slice as a block (panics on wrong length,
+            /// like the real crate).
+            pub fn from_slice(slice: &[u8]) -> &GenericArray {
+                assert_eq!(slice.len(), 16, "GenericArray::from_slice needs 16 bytes");
+                // SAFETY: repr(transparent) over [u8; 16]; length checked;
+                // alignment of both types is 1.
+                unsafe { &*(slice.as_ptr() as *const GenericArray) }
+            }
+
+            pub fn as_slice(&self) -> &[u8] {
+                &self.0
+            }
+        }
+    }
+
+    use generic_array::GenericArray;
+
+    /// Construct a cipher from a key block.
+    pub trait KeyInit: Sized {
+        fn new(key: &GenericArray) -> Self;
+    }
+
+    /// Encrypt one 16-byte block in place.
+    pub trait BlockEncrypt {
+        fn encrypt_block(&self, block: &mut GenericArray);
+    }
+}
+
+use cipher::generic_array::GenericArray;
+use cipher::{BlockEncrypt, KeyInit};
+
+/// GF(2^8) multiply modulo x^8 + x^4 + x^3 + x + 1.
+fn gmul(mut a: u8, mut b: u8) -> u8 {
+    let mut p = 0u8;
+    for _ in 0..8 {
+        if b & 1 != 0 {
+            p ^= a;
+        }
+        let hi = a & 0x80;
+        a <<= 1;
+        if hi != 0 {
+            a ^= 0x1B;
+        }
+        b >>= 1;
+    }
+    p
+}
+
+/// FIPS-197 S-box: inverse in GF(2^8) (x^254) then the affine transform.
+fn build_sbox() -> [u8; 256] {
+    let mut sbox = [0u8; 256];
+    for (i, slot) in sbox.iter_mut().enumerate() {
+        let x = i as u8;
+        let inv = if x == 0 {
+            0
+        } else {
+            // x^254 = x^(2+4+8+16+32+64+128) via square-and-multiply.
+            let mut acc = 1u8;
+            let mut sq = x;
+            for _ in 1..8 {
+                sq = gmul(sq, sq);
+                acc = gmul(acc, sq);
+            }
+            acc
+        };
+        *slot = inv
+            ^ inv.rotate_left(1)
+            ^ inv.rotate_left(2)
+            ^ inv.rotate_left(3)
+            ^ inv.rotate_left(4)
+            ^ 0x63;
+    }
+    sbox
+}
+
+/// AES-128 with precomputed round keys.
+pub struct Aes128 {
+    sbox: [u8; 256],
+    round_keys: [[u8; 16]; 11],
+}
+
+impl KeyInit for Aes128 {
+    fn new(key: &GenericArray) -> Self {
+        let sbox = build_sbox();
+        // Key expansion over 44 words.
+        let mut w = [[0u8; 4]; 44];
+        for i in 0..4 {
+            w[i].copy_from_slice(&key.0[i * 4..(i + 1) * 4]);
+        }
+        let mut rcon = 1u8;
+        for i in 4..44 {
+            let mut t = w[i - 1];
+            if i % 4 == 0 {
+                t.rotate_left(1); // RotWord
+                for b in t.iter_mut() {
+                    *b = sbox[*b as usize]; // SubWord
+                }
+                t[0] ^= rcon;
+                rcon = gmul(rcon, 2);
+            }
+            for j in 0..4 {
+                w[i][j] = w[i - 4][j] ^ t[j];
+            }
+        }
+        let mut round_keys = [[0u8; 16]; 11];
+        for r in 0..11 {
+            for c in 0..4 {
+                round_keys[r][c * 4..(c + 1) * 4].copy_from_slice(&w[r * 4 + c]);
+            }
+        }
+        Aes128 { sbox, round_keys }
+    }
+}
+
+impl Aes128 {
+    fn add_round_key(state: &mut [u8; 16], rk: &[u8; 16]) {
+        for (s, k) in state.iter_mut().zip(rk.iter()) {
+            *s ^= k;
+        }
+    }
+
+    fn sub_bytes(&self, state: &mut [u8; 16]) {
+        for b in state.iter_mut() {
+            *b = self.sbox[*b as usize];
+        }
+    }
+
+    /// State byte order is column-major (byte i sits at row i%4, col i/4).
+    fn shift_rows(state: &mut [u8; 16]) {
+        let old = *state;
+        for r in 1..4 {
+            for c in 0..4 {
+                state[r + 4 * c] = old[r + 4 * ((c + r) % 4)];
+            }
+        }
+    }
+
+    fn mix_columns(state: &mut [u8; 16]) {
+        for c in 0..4 {
+            let col = [state[4 * c], state[4 * c + 1], state[4 * c + 2], state[4 * c + 3]];
+            state[4 * c] = gmul(col[0], 2) ^ gmul(col[1], 3) ^ col[2] ^ col[3];
+            state[4 * c + 1] = col[0] ^ gmul(col[1], 2) ^ gmul(col[2], 3) ^ col[3];
+            state[4 * c + 2] = col[0] ^ col[1] ^ gmul(col[2], 2) ^ gmul(col[3], 3);
+            state[4 * c + 3] = gmul(col[0], 3) ^ col[1] ^ col[2] ^ gmul(col[3], 2);
+        }
+    }
+}
+
+impl BlockEncrypt for Aes128 {
+    fn encrypt_block(&self, block: &mut GenericArray) {
+        let state = &mut block.0;
+        Self::add_round_key(state, &self.round_keys[0]);
+        for r in 1..10 {
+            self.sub_bytes(state);
+            Self::shift_rows(state);
+            Self::mix_columns(state);
+            Self::add_round_key(state, &self.round_keys[r]);
+        }
+        self.sub_bytes(state);
+        Self::shift_rows(state);
+        Self::add_round_key(state, &self.round_keys[10]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sbox_known_entries() {
+        let sbox = build_sbox();
+        assert_eq!(sbox[0x00], 0x63);
+        assert_eq!(sbox[0x01], 0x7C);
+        assert_eq!(sbox[0x53], 0xED);
+    }
+
+    #[test]
+    fn fips197_appendix_b_vector() {
+        // FIPS-197 Appendix B: key 2b7e1516... , plaintext 3243f6a8...
+        let key: [u8; 16] = [
+            0x2B, 0x7E, 0x15, 0x16, 0x28, 0xAE, 0xD2, 0xA6, 0xAB, 0xF7, 0x15, 0x88, 0x09, 0xCF,
+            0x4F, 0x3C,
+        ];
+        let plain: [u8; 16] = [
+            0x32, 0x43, 0xF6, 0xA8, 0x88, 0x5A, 0x30, 0x8D, 0x31, 0x31, 0x98, 0xA2, 0xE0, 0x37,
+            0x07, 0x34,
+        ];
+        let expected: [u8; 16] = [
+            0x39, 0x25, 0x84, 0x1D, 0x02, 0xDC, 0x09, 0xFB, 0xDC, 0x11, 0x85, 0x97, 0x19, 0x6A,
+            0x0B, 0x32,
+        ];
+        let cipher = Aes128::new(GenericArray::from_slice(&key));
+        let mut block = *GenericArray::from_slice(&plain);
+        cipher.encrypt_block(&mut block);
+        assert_eq!(block.0, expected);
+    }
+
+    #[test]
+    fn encryption_is_key_dependent() {
+        let c1 = Aes128::new(GenericArray::from_slice(&[1u8; 16]));
+        let c2 = Aes128::new(GenericArray::from_slice(&[2u8; 16]));
+        let mut b1 = *GenericArray::from_slice(&[0u8; 16]);
+        let mut b2 = *GenericArray::from_slice(&[0u8; 16]);
+        c1.encrypt_block(&mut b1);
+        c2.encrypt_block(&mut b2);
+        assert_ne!(b1.0, b2.0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Offline shim for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this crate reimplements
+//! the small slice of anyhow's API the workspace uses, on std alone:
+//!
+//! - [`Error`]: an erased error with a human-readable cause chain,
+//!   constructed from any `std::error::Error` (capturing its `source()`
+//!   chain) or from a message. `{}` prints the outermost message, `{:#}`
+//!   prints the full chain joined by `": "` — the same formatting contract
+//!   as real anyhow.
+//! - [`Result`] with a defaulted error parameter.
+//! - [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//! - The [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Dropping in the real crate requires no source changes.
+
+use std::fmt;
+
+/// An erased error: an outermost message plus the chain of causes.
+pub struct Error {
+    /// `chain[0]` is the outermost message; later entries are causes.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message.
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message (used by [`Context`]).
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+// The blanket From mirrors anyhow's: it is the hook `?` uses. `Error`
+// itself deliberately does NOT implement `std::error::Error`, which is what
+// keeps this impl coherent next to `impl From<T> for T`.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// `anyhow::Result<T>` — error parameter defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Add context to errors (on `Result`) or turn `None` into an error.
+pub trait Context<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_formats() {
+        let e: Result<()> = Err(io_err());
+        let e = e.with_context(|| "loading config").unwrap_err();
+        assert_eq!(format!("{e}"), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: missing thing");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing here").unwrap_err();
+        assert_eq!(e.to_string(), "nothing here");
+        assert_eq!(Some(5).context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        fn bails(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            bail!("always")
+        }
+        assert_eq!(bails(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(bails(true).unwrap_err().to_string(), "always");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_rewraps() {
+        let e: Result<()> = Err(Error::msg("inner"));
+        let e = e.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(e.chain().count(), 2);
+    }
+}

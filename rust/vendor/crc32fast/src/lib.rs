@@ -1,0 +1,82 @@
+//! Offline shim for the `crc32fast` crate: a plain table-driven IEEE CRC32
+//! (reflected polynomial 0xEDB88320). No SIMD — the table5 bench that uses
+//! this measures a CPU baseline, which this honestly is.
+
+const fn table() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+}
+
+/// Table built once at compile time — `hash` in a hot loop pays only the
+/// per-byte cost (this backs the table5 CPU-baseline measurement).
+const TABLE: [u32; 256] = table();
+
+/// One-shot CRC32 of a buffer.
+pub fn hash(buf: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(buf);
+    h.finalize()
+}
+
+/// Streaming hasher matching crc32fast's surface.
+#[derive(Debug, Clone)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Default for Hasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hasher {
+    pub fn new() -> Hasher {
+        Hasher { state: !0 }
+    }
+
+    pub fn update(&mut self, buf: &[u8]) {
+        let mut c = self.state;
+        for &b in buf {
+            c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    pub fn finalize(&self) -> u32 {
+        !self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard IEEE CRC32 check value.
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b""), 0);
+        assert_eq!(hash(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let mut h = Hasher::new();
+        h.update(&data[..10]);
+        h.update(&data[10..]);
+        assert_eq!(h.finalize(), hash(data));
+    }
+}

@@ -1,0 +1,314 @@
+//! Offline shim for the `flate2` crate.
+//!
+//! Only the `write::DeflateEncoder` / `write::DeflateDecoder` pair the
+//! workspace uses is provided. The wire format is NOT RFC 1951 deflate — it
+//! is a self-contained LZSS container (length header + flag-byte token
+//! stream with 12-bit offsets / 4-bit lengths over a 4 KB window), which
+//! gives real LZ77-style compression on repetitive payloads and exact
+//! round-trips on arbitrary data. Both directions use this codec, so blocks
+//! written by the encoder are always readable by the decoder; no external
+//! system consumes the bytes.
+//!
+//! Dropping in the real crate requires no source changes (and upgrades the
+//! format to actual deflate).
+
+use std::io::{self, Write};
+
+/// Compression level. Accepted for API compatibility; the LZSS codec has a
+/// single effort level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Compression(pub u32);
+
+impl Compression {
+    pub fn new(level: u32) -> Compression {
+        Compression(level)
+    }
+    pub fn none() -> Compression {
+        Compression(0)
+    }
+    pub fn fast() -> Compression {
+        Compression(1)
+    }
+    pub fn best() -> Compression {
+        Compression(9)
+    }
+}
+
+impl Default for Compression {
+    fn default() -> Compression {
+        Compression(6)
+    }
+}
+
+const WINDOW: usize = 4096; // offsets 1..=4095 (12 bits)
+const MIN_MATCH: usize = 3;
+const MAX_MATCH: usize = 18; // 4-bit length field stores len - 3
+const HASH_BITS: u32 = 13;
+const MAX_CHAIN: usize = 32;
+
+#[inline]
+fn hash3(a: u8, b: u8, c: u8) -> usize {
+    let v = u32::from_le_bytes([a, b, c, 0]);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Compress `input` into the LZSS container format.
+pub fn lzss_compress(input: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(input.len() / 2 + 16);
+    out.extend_from_slice(&(input.len() as u64).to_le_bytes());
+
+    let mut head = vec![usize::MAX; 1 << HASH_BITS];
+    let mut prev = vec![usize::MAX; input.len()];
+    let insert = |pos: usize, head: &mut [usize], prev: &mut [usize]| {
+        if pos + MIN_MATCH <= input.len() {
+            let h = hash3(input[pos], input[pos + 1], input[pos + 2]);
+            prev[pos] = head[h];
+            head[h] = pos;
+        }
+    };
+
+    let mut flag = 0u8;
+    let mut nflag = 0u32;
+    let mut flag_idx = out.len();
+    out.push(0);
+
+    let mut i = 0;
+    while i < input.len() {
+        // Greedy best match against the hash chain.
+        let mut best_len = 0usize;
+        let mut best_off = 0usize;
+        if i + MIN_MATCH <= input.len() {
+            let h = hash3(input[i], input[i + 1], input[i + 2]);
+            let mut cand = head[h];
+            let mut steps = 0;
+            while cand != usize::MAX && i - cand < WINDOW && steps < MAX_CHAIN {
+                let limit = MAX_MATCH.min(input.len() - i);
+                let mut l = 0;
+                // `cand + l` may run past `i` (overlapping match): the
+                // decoder copies byte-by-byte, so the comparison against
+                // `input[cand + l]` is exactly what it will reproduce.
+                while l < limit && input[cand + l] == input[i + l] {
+                    l += 1;
+                }
+                if l > best_len {
+                    best_len = l;
+                    best_off = i - cand;
+                    if l == MAX_MATCH {
+                        break;
+                    }
+                }
+                steps += 1;
+                cand = prev[cand];
+            }
+        }
+
+        if best_len >= MIN_MATCH {
+            flag |= 1 << nflag;
+            out.push((best_off & 0xFF) as u8);
+            out.push((((best_off >> 8) as u8) << 4) | ((best_len - MIN_MATCH) as u8));
+            for j in i..i + best_len {
+                insert(j, &mut head, &mut prev);
+            }
+            i += best_len;
+        } else {
+            out.push(input[i]);
+            insert(i, &mut head, &mut prev);
+            i += 1;
+        }
+
+        nflag += 1;
+        if nflag == 8 {
+            out[flag_idx] = flag;
+            flag = 0;
+            nflag = 0;
+            flag_idx = out.len();
+            out.push(0);
+        }
+    }
+
+    if nflag > 0 {
+        out[flag_idx] = flag;
+    } else {
+        // Trailing placeholder flag byte was never used.
+        debug_assert_eq!(flag_idx, out.len() - 1);
+        out.pop();
+    }
+    out
+}
+
+fn corrupt(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("lzss: {msg}"))
+}
+
+/// Decompress an LZSS container produced by [`lzss_compress`].
+pub fn lzss_decompress(data: &[u8]) -> io::Result<Vec<u8>> {
+    if data.len() < 8 {
+        return Err(corrupt("truncated header"));
+    }
+    let n = u64::from_le_bytes(data[..8].try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(n);
+    let mut i = 8;
+    let mut flag = 0u8;
+    let mut nflag = 8u32;
+    while out.len() < n {
+        if nflag == 8 {
+            flag = *data.get(i).ok_or_else(|| corrupt("missing flag byte"))?;
+            i += 1;
+            nflag = 0;
+        }
+        let is_match = (flag >> nflag) & 1 == 1;
+        nflag += 1;
+        if is_match {
+            let b0 = *data.get(i).ok_or_else(|| corrupt("truncated match"))?;
+            let b1 = *data.get(i + 1).ok_or_else(|| corrupt("truncated match"))?;
+            i += 2;
+            let off = (((b1 >> 4) as usize) << 8) | b0 as usize;
+            let len = (b1 & 0x0F) as usize + MIN_MATCH;
+            if off == 0 || off > out.len() {
+                return Err(corrupt("bad match offset"));
+            }
+            for _ in 0..len {
+                let b = out[out.len() - off];
+                out.push(b);
+            }
+        } else {
+            out.push(*data.get(i).ok_or_else(|| corrupt("truncated literal"))?);
+            i += 1;
+        }
+    }
+    if out.len() != n {
+        return Err(corrupt("length mismatch"));
+    }
+    Ok(out)
+}
+
+pub mod write {
+    //! Write-side adapters matching `flate2::write`.
+
+    use super::{lzss_compress, lzss_decompress, Compression};
+    use std::io::{self, Write};
+
+    /// Buffers writes; compresses and forwards to the inner writer on
+    /// [`DeflateEncoder::finish`].
+    pub struct DeflateEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> DeflateEncoder<W> {
+        pub fn new(inner: W, _level: Compression) -> Self {
+            DeflateEncoder { inner, buf: Vec::new() }
+        }
+
+        pub fn finish(mut self) -> io::Result<W> {
+            let packed = lzss_compress(&self.buf);
+            self.inner.write_all(&packed)?;
+            self.inner.flush()?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for DeflateEncoder<W> {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    /// Buffers writes; decompresses and forwards to the inner writer on
+    /// [`DeflateDecoder::finish`].
+    pub struct DeflateDecoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> DeflateDecoder<W> {
+        pub fn new(inner: W) -> Self {
+            DeflateDecoder { inner, buf: Vec::new() }
+        }
+
+        pub fn finish(mut self) -> io::Result<W> {
+            let plain = lzss_decompress(&self.buf)?;
+            self.inner.write_all(&plain)?;
+            self.inner.flush()?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for DeflateDecoder<W> {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::write::{DeflateDecoder, DeflateEncoder};
+    use super::*;
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(data).unwrap();
+        let packed = enc.finish().unwrap();
+        let mut dec = DeflateDecoder::new(Vec::new());
+        dec.write_all(&packed).unwrap();
+        dec.finish().unwrap()
+    }
+
+    #[test]
+    fn roundtrip_empty_and_tiny() {
+        assert_eq!(roundtrip(b""), b"");
+        assert_eq!(roundtrip(b"a"), b"a");
+        assert_eq!(roundtrip(b"ab"), b"ab");
+        assert_eq!(roundtrip(b"abc"), b"abc");
+    }
+
+    #[test]
+    fn roundtrip_arbitrary_bytes() {
+        // Deterministic pseudo-random payload (incompressible-ish).
+        let mut x = 0x12345678u32;
+        let data: Vec<u8> = (0..50_000)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 17;
+                x ^= x << 5;
+                x as u8
+            })
+            .collect();
+        assert_eq!(roundtrip(&data), data);
+    }
+
+    #[test]
+    fn periodic_data_compresses() {
+        // Period-251 pattern: needs real back-references, not RLE.
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        let packed = lzss_compress(&data);
+        assert!(packed.len() < data.len() / 2, "packed {}", packed.len());
+        assert_eq!(lzss_decompress(&packed).unwrap(), data);
+    }
+
+    #[test]
+    fn constant_data_compresses_via_overlap() {
+        let data = vec![0x42u8; 4096];
+        let packed = lzss_compress(&data);
+        assert!(packed.len() < 700, "packed {}", packed.len());
+        assert_eq!(lzss_decompress(&packed).unwrap(), data);
+    }
+
+    #[test]
+    fn corrupt_input_errors() {
+        assert!(lzss_decompress(&[1, 2, 3]).is_err());
+        // Valid header claiming bytes that aren't there.
+        let mut bad = (100u64).to_le_bytes().to_vec();
+        bad.push(0); // flag byte: 8 literals promised, none present
+        assert!(lzss_decompress(&bad).is_err());
+    }
+}
