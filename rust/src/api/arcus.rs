@@ -1,0 +1,550 @@
+//! [`ArcusControlPlane`]: the Algorithm-1 implementation of the
+//! control-plane API.
+//!
+//! Owns the three coordinator data structures — the offline-learned
+//! [`ProfileTable`], the [`AccTable`] of reachable paths, and the dynamic
+//! [`PerFlowStatusTable`] — and drives [`crate::coordinator::planner`]
+//! through the [`ControlPlane`] trait:
+//!
+//! - `register_flow` → CapacityPlanning(CHECK) + AdmissionControl over the
+//!   committed SLO sum in the flow's profiled context;
+//! - `update_slo` → the same check with the flow's own commitment excluded
+//!   (Scenario 2's mid-run renegotiation);
+//! - `deregister_flow` → releases the commitment (tenant churn);
+//! - `tick` → SLOViolationChecker + PathSelection + ReshapeDecision, plus
+//!   the §6 opportunistic-class refresh, emitted as [`Directive`]s.
+
+use crate::accel::AccelModel;
+use crate::coordinator::planner::{self, Admission, PlannerConfig};
+use crate::coordinator::status::{FlowStatus, MeasuredWindow, SloState};
+use crate::coordinator::{AccTable, PerFlowStatusTable, ProfileTable};
+use crate::flow::{FlowId, FlowKind, Path, Slo};
+use crate::pcie::fabric::FabricConfig;
+use crate::shaping::{ShapeMode, TokenBucketParams};
+use crate::util::units::Time;
+
+use super::control::{
+    Admitted, ApiError, ControlPlane, Directive, FlowStatusView, RegisterRequest, ShaperProgram,
+};
+
+/// The Arcus SLO runtime behind the [`ControlPlane`] trait.
+pub struct ArcusControlPlane {
+    cfg: PlannerConfig,
+    profile: ProfileTable,
+    acc_table: AccTable,
+    status: PerFlowStatusTable,
+}
+
+impl ArcusControlPlane {
+    pub fn new(profile: ProfileTable, acc_table: AccTable, cfg: PlannerConfig) -> Self {
+        ArcusControlPlane { cfg, profile, acc_table, status: PerFlowStatusTable::default() }
+    }
+
+    /// Learn the profile table for a device list on a PCIe fabric and
+    /// register every accelerator's reachable paths — the construction the
+    /// simulator and serving runtime share.
+    pub fn from_models(models: &[AccelModel], fabric: &FabricConfig, cfg: PlannerConfig) -> Self {
+        let profile = ProfileTable::learn(models, fabric);
+        let mut acc_table = AccTable::default();
+        for m in models {
+            acc_table.register(
+                m.name,
+                vec![
+                    Path::FunctionCall,
+                    Path::InlineNicRx,
+                    Path::InlineNicTx,
+                    Path::InlineP2p,
+                ],
+            );
+        }
+        Self::new(profile, acc_table, cfg)
+    }
+
+    /// Read-only view of the flow registry (observability / tests).
+    pub fn status_table(&self) -> &PerFlowStatusTable {
+        &self.status
+    }
+
+    /// Read-only view of the profile table.
+    pub fn profile(&self) -> &ProfileTable {
+        &self.profile
+    }
+
+    pub fn planner_cfg(&self) -> &PlannerConfig {
+        &self.cfg
+    }
+
+    /// Storage-contract program: the SSD is its own capacity authority, so
+    /// the bucket derives directly from the SLO rate with the shaping
+    /// headroom pre-applied — no accelerator-profile lookup, at
+    /// registration and renegotiation alike.
+    fn storage_program(&self, rate: f64, mode: ShapeMode) -> ShaperProgram {
+        let shaped = rate * self.cfg.shaping_headroom;
+        ShaperProgram::TokenBucket {
+            params: TokenBucketParams::for_rate(shaped, mode),
+            rate: shaped,
+            mode,
+        }
+    }
+
+    /// Headroom available to an opportunistic flow on its accelerator:
+    /// profiled capacity net of the admission reserve and every committed
+    /// rate, floored at 2% of capacity so the class never fully starves.
+    fn opportunistic_rate(&self, flow: FlowId) -> f64 {
+        let Some(row) = self.status.get(flow) else { return 0.0 };
+        let n = self.status.flows_on_accel(row.accel).len().max(1);
+        let cap = self
+            .profile
+            .capacity(&row.accel_name, row.path, row.size_hint, n)
+            .map(|e| e.capacity.as_bits_per_sec() / 8.0)
+            .unwrap_or(0.0);
+        let committed = self.status.committed_rate(row.accel);
+        (cap * (1.0 - self.cfg.admission_headroom) - committed).max(cap * 0.02)
+    }
+
+    /// §6's no-guarantee class: back a best-effort flow off multiplicatively
+    /// whenever a committed flow on the same engine is violating (the
+    /// harvest must never cost an SLO), otherwise creep back up toward the
+    /// profiled headroom.
+    fn refresh_opportunistic(&mut self) -> Vec<Directive> {
+        let mut violated_accels: Vec<usize> = Vec::new();
+        for row in self.status.iter() {
+            if row.state == SloState::Violating
+                && row.violations >= self.cfg.reshape_after
+                && !matches!(row.slo, Slo::BestEffort)
+                && !violated_accels.contains(&row.accel)
+            {
+                violated_accels.push(row.accel);
+            }
+        }
+        let candidates: Vec<FlowId> = self
+            .status
+            .iter()
+            .filter(|r| matches!(r.slo, Slo::BestEffort) && r.shaped_rate.is_some())
+            .map(|r| r.flow)
+            .collect();
+        let mut out = Vec::new();
+        for flow in candidates {
+            let headroom = self.opportunistic_rate(flow);
+            let (current, accel) = match self.status.get(flow) {
+                Some(r) => (r.shaped_rate.unwrap_or(0.0), r.accel),
+                None => continue,
+            };
+            let target = if violated_accels.contains(&accel) {
+                (current * 0.6).max(headroom * 0.02)
+            } else {
+                (current * 1.10).min(headroom)
+            };
+            if (current - target).abs() / current.max(1.0) > 0.02 {
+                let rate = target.max(1.0);
+                // Track the *nominal* register rate the bucket will realize,
+                // so the next refresh compares against what the hardware
+                // actually shapes to (exactly as reading it back would).
+                let nominal =
+                    TokenBucketParams::for_rate(rate, ShapeMode::Gbps).nominal_rate();
+                if let Some(r) = self.status.get_mut(flow) {
+                    r.shaped_rate = Some(nominal);
+                }
+                out.push(Directive::SetRate { flow, rate });
+            }
+        }
+        out
+    }
+}
+
+impl ControlPlane for ArcusControlPlane {
+    fn register_flow(&mut self, req: &RegisterRequest) -> Result<Admitted, ApiError> {
+        if self.status.get(req.flow).is_some() {
+            return Err(ApiError::AlreadyRegistered { flow: req.flow });
+        }
+        let mut row = FlowStatus::new(
+            req.flow,
+            req.vm,
+            req.path,
+            req.accel,
+            &req.accel_name,
+            req.slo,
+            req.size_hint,
+        );
+        // Storage flows bypass the accelerator profile: the SSD is its own
+        // capacity authority; shape at the SLO rate.
+        if req.kind != FlowKind::Accel {
+            let (committed_rate, program) = match req.slo.required_rate() {
+                Some((rate, mode)) => {
+                    row.shaped_rate = Some(rate);
+                    (Some(rate), self.storage_program(rate, mode))
+                }
+                None => (None, ShaperProgram::Unshaped),
+            };
+            self.status.register(row);
+            return Ok(Admitted { committed_rate, program });
+        }
+        match req.slo {
+            Slo::BestEffort => {
+                // Opportunistic class (§6): shaped to the current headroom,
+                // refreshed every control tick. Registered first so the
+                // headroom computation counts this flow in N.
+                self.status.register(row);
+                let rate = self.opportunistic_rate(req.flow).max(1.0);
+                let params = TokenBucketParams::for_rate(rate, ShapeMode::Gbps);
+                if let Some(r) = self.status.get_mut(req.flow) {
+                    r.shaped_rate = Some(params.nominal_rate());
+                }
+                Ok(Admitted {
+                    committed_rate: None,
+                    program: ShaperProgram::TokenBucket {
+                        params,
+                        rate,
+                        mode: ShapeMode::Gbps,
+                    },
+                })
+            }
+            Slo::Latency { .. } => {
+                // Latency-critical flows run unshaped; Arcus protects them
+                // by shaping everyone else.
+                self.status.register(row);
+                Ok(Admitted { committed_rate: None, program: ShaperProgram::Unshaped })
+            }
+            _ => {
+                let verdict = planner::admission_control(
+                    &self.cfg,
+                    &self.profile,
+                    &self.status,
+                    req.accel,
+                    &req.accel_name,
+                    req.path,
+                    req.size_hint,
+                    &req.slo,
+                );
+                match verdict {
+                    Admission::Accept { rate, params } => {
+                        let mode = req
+                            .slo
+                            .required_rate()
+                            .map(|(_, m)| m)
+                            .unwrap_or(ShapeMode::Gbps);
+                        row.shaped_rate = Some(rate);
+                        self.status.register(row);
+                        Ok(Admitted {
+                            committed_rate: Some(rate),
+                            // Program slightly above the SLO so the measured
+                            // rate lands ON it.
+                            program: ShaperProgram::TokenBucket {
+                                params,
+                                rate: rate * self.cfg.shaping_headroom,
+                                mode,
+                            },
+                        })
+                    }
+                    Admission::Reject { reason } => {
+                        Err(ApiError::AdmissionRejected { reason })
+                    }
+                }
+            }
+        }
+    }
+
+    fn update_slo(&mut self, flow: FlowId, slo: Slo) -> Result<Admitted, ApiError> {
+        let Some(is_storage) = self.status.get(flow).map(|r| r.accel_name == "storage") else {
+            return Err(ApiError::UnknownFlow { flow });
+        };
+        // Storage flows bypass the accelerator profile on renegotiation
+        // exactly as they do at registration: the SSD is its own capacity
+        // authority, so the new rate is accepted and shaped directly.
+        if is_storage {
+            let contract = slo
+                .required_rate()
+                .map(|(rate, mode)| (rate, self.storage_program(rate, mode)));
+            let row = self.status.get_mut(flow).expect("checked above");
+            row.slo = slo;
+            row.violations = 0;
+            row.state = SloState::Warmup;
+            return Ok(match contract {
+                Some((rate, program)) => {
+                    row.shaped_rate = Some(rate);
+                    row.reconfigs += 1;
+                    Admitted { committed_rate: Some(rate), program }
+                }
+                None => {
+                    row.shaped_rate = None;
+                    row.params = None;
+                    Admitted { committed_rate: None, program: ShaperProgram::Unshaped }
+                }
+            });
+        }
+        let verdict =
+            planner::renegotiation_control(&self.cfg, &self.profile, &self.status, flow, &slo);
+        match verdict {
+            Admission::Accept { rate, params } => {
+                let headroom = self.cfg.shaping_headroom;
+                {
+                    let row = self.status.get_mut(flow).expect("checked above");
+                    row.slo = slo;
+                    // A fresh contract restarts measurement: hysteresis
+                    // resets and the next windows are judged against the
+                    // new target.
+                    row.violations = 0;
+                    row.state = SloState::Warmup;
+                }
+                match slo.required_rate() {
+                    Some((_, mode)) => {
+                        let row = self.status.get_mut(flow).expect("checked above");
+                        row.shaped_rate = Some(rate);
+                        row.params = Some(params);
+                        row.reconfigs += 1;
+                        Ok(Admitted {
+                            committed_rate: Some(rate),
+                            program: ShaperProgram::TokenBucket {
+                                params,
+                                rate: rate * headroom,
+                                mode,
+                            },
+                        })
+                    }
+                    None if matches!(slo, Slo::BestEffort) => {
+                        // Dropping to the opportunistic class gets the same
+                        // §6 program as a fresh best-effort registration —
+                        // the harvest must never run unshaped. (The row's
+                        // slo is already BestEffort, so the headroom
+                        // computation no longer counts the old commitment.)
+                        let be_rate = self.opportunistic_rate(flow).max(1.0);
+                        let be_params =
+                            TokenBucketParams::for_rate(be_rate, ShapeMode::Gbps);
+                        let row = self.status.get_mut(flow).expect("checked above");
+                        row.shaped_rate = Some(be_params.nominal_rate());
+                        row.params = Some(be_params);
+                        row.reconfigs += 1;
+                        Ok(Admitted {
+                            committed_rate: None,
+                            program: ShaperProgram::TokenBucket {
+                                params: be_params,
+                                rate: be_rate,
+                                mode: ShapeMode::Gbps,
+                            },
+                        })
+                    }
+                    None => {
+                        // Latency-critical flows run unshaped by design
+                        // (Arcus protects them by shaping everyone else).
+                        let row = self.status.get_mut(flow).expect("checked above");
+                        row.shaped_rate = None;
+                        row.params = None;
+                        Ok(Admitted {
+                            committed_rate: None,
+                            program: ShaperProgram::Unshaped,
+                        })
+                    }
+                }
+            }
+            Admission::Reject { reason } => Err(ApiError::AdmissionRejected { reason }),
+        }
+    }
+
+    fn deregister_flow(&mut self, flow: FlowId) -> Result<(), ApiError> {
+        match self.status.deregister(flow) {
+            Some(_) => Ok(()),
+            None => Err(ApiError::UnknownFlow { flow }),
+        }
+    }
+
+    fn query_status(&self, flow: FlowId) -> Option<FlowStatusView> {
+        self.status.get(flow).map(|r| FlowStatusView {
+            flow: r.flow,
+            vm: r.vm,
+            path: r.path,
+            accel: r.accel,
+            slo: r.slo,
+            shaped_rate: r.shaped_rate,
+            state: r.state,
+            violations: r.violations,
+            reconfigs: r.reconfigs,
+        })
+    }
+
+    fn tick(&mut self, _now: Time, windows: &[(FlowId, MeasuredWindow)]) -> Vec<Directive> {
+        // 1. Ingest the hardware counters (SLOViolationChecker).
+        for &(flow, w) in windows {
+            self.status.record_window(flow, w);
+        }
+        // 2. Plan: path selection + reshape decisions for violating flows.
+        let actions =
+            planner::run_tick(&self.cfg, &self.profile, &self.acc_table, &self.status);
+        let mut out = Vec::with_capacity(actions.len());
+        for a in actions {
+            match a {
+                planner::Action::Reshape { flow, rate, params } => {
+                    if let Some(row) = self.status.get_mut(flow) {
+                        row.shaped_rate = Some(rate);
+                        row.params = Some(params);
+                        row.reconfigs += 1;
+                    }
+                    out.push(Directive::SetRate { flow, rate });
+                }
+                planner::Action::SwitchPath { flow, to } => {
+                    if let Some(row) = self.status.get_mut(flow) {
+                        row.path = to;
+                        row.reconfigs += 1;
+                    }
+                    out.push(Directive::SwitchPath { flow, to });
+                }
+            }
+        }
+        // 3. Opportunistic-class refresh (§6).
+        out.extend(self.refresh_opportunistic());
+        out
+    }
+
+    fn needs_ticks(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        "arcus"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::Rate;
+
+    fn cp() -> ArcusControlPlane {
+        ArcusControlPlane::from_models(
+            &[AccelModel::ipsec_32g()],
+            &FabricConfig::gen3_x8(),
+            PlannerConfig::default(),
+        )
+    }
+
+    fn req(flow: FlowId, slo: Slo) -> RegisterRequest {
+        RegisterRequest {
+            flow,
+            vm: flow,
+            path: Path::FunctionCall,
+            accel: 0,
+            accel_name: "ipsec".into(),
+            kind: FlowKind::Accel,
+            slo,
+            size_hint: 1500,
+        }
+    }
+
+    #[test]
+    fn register_admits_within_capacity_and_rejects_beyond() {
+        let mut cp = cp();
+        // Engine sustains ~26 Gbps at 1500 B; 12 + 12 fit, +15 must not.
+        let a = cp.register_flow(&req(0, Slo::gbps(12.0))).unwrap();
+        assert!(a.committed_rate.unwrap() > 0.0);
+        assert!(matches!(a.program, ShaperProgram::TokenBucket { .. }));
+        cp.register_flow(&req(1, Slo::gbps(12.0))).unwrap();
+        let e = cp.register_flow(&req(2, Slo::gbps(15.0))).unwrap_err();
+        assert!(matches!(e, ApiError::AdmissionRejected { .. }), "{e}");
+        assert!(cp.query_status(2).is_none());
+    }
+
+    #[test]
+    fn duplicate_registration_is_an_error() {
+        let mut cp = cp();
+        cp.register_flow(&req(0, Slo::gbps(5.0))).unwrap();
+        let e = cp.register_flow(&req(0, Slo::gbps(5.0))).unwrap_err();
+        assert_eq!(e, ApiError::AlreadyRegistered { flow: 0 });
+    }
+
+    #[test]
+    fn departure_releases_capacity_for_later_arrivals() {
+        let mut cp = cp();
+        cp.register_flow(&req(0, Slo::gbps(12.0))).unwrap();
+        cp.register_flow(&req(1, Slo::gbps(12.0))).unwrap();
+        assert!(cp.register_flow(&req(2, Slo::gbps(12.0))).is_err());
+        cp.deregister_flow(0).unwrap();
+        assert!(cp.query_status(0).is_none());
+        // The freed 12 Gbps admits the previously-rejected request.
+        cp.register_flow(&req(2, Slo::gbps(12.0))).unwrap();
+        assert!(cp.deregister_flow(0).is_err(), "double deregister");
+    }
+
+    #[test]
+    fn renegotiation_checks_capacity_excluding_own_commitment() {
+        let mut cp = cp();
+        cp.register_flow(&req(0, Slo::gbps(10.0))).unwrap();
+        cp.register_flow(&req(1, Slo::gbps(10.0))).unwrap();
+        // 10 → 14 fits (14 + 10 < ~24.6 budget); the flow's own 10 must not
+        // be double-counted.
+        let a = cp.update_slo(0, Slo::gbps(14.0)).unwrap();
+        assert!((a.committed_rate.unwrap() - 14e9 / 8.0).abs() < 1.0);
+        assert_eq!(cp.query_status(0).unwrap().slo, Slo::gbps(14.0));
+        // 14 → 20 exceeds what flow 1 leaves free: rejected, SLO kept.
+        assert!(cp.update_slo(0, Slo::gbps(20.0)).is_err());
+        assert_eq!(cp.query_status(0).unwrap().slo, Slo::gbps(14.0));
+        // Unknown flows are a typed error.
+        assert_eq!(
+            cp.update_slo(9, Slo::gbps(1.0)).unwrap_err(),
+            ApiError::UnknownFlow { flow: 9 }
+        );
+        // Dropping to best-effort keeps the flow shaped (the §6
+        // opportunistic program), never unshaped.
+        let a = cp.update_slo(0, Slo::BestEffort).unwrap();
+        assert!(a.committed_rate.is_none());
+        match a.program {
+            ShaperProgram::TokenBucket { rate, .. } => assert!(rate >= 1.0),
+            other => panic!("expected opportunistic bucket, got {other:?}"),
+        }
+        assert!(cp.query_status(0).unwrap().shaped_rate.is_some());
+    }
+
+    #[test]
+    fn storage_flows_renegotiate_without_accelerator_profile() {
+        // The SSD is its own capacity authority: the accelerator profile
+        // has no "storage" entries, yet renegotiation must succeed exactly
+        // as registration does.
+        let mut cp = cp();
+        let mut r = req(0, Slo::iops(200_000.0));
+        r.kind = FlowKind::StorageRead;
+        r.accel_name = "storage".into();
+        cp.register_flow(&r).unwrap();
+        let a = cp.update_slo(0, Slo::iops(300_000.0)).unwrap();
+        assert!((a.committed_rate.unwrap() - 300_000.0).abs() < 1.0);
+        assert!(matches!(a.program, ShaperProgram::TokenBucket { .. }));
+        assert_eq!(cp.query_status(0).unwrap().slo, Slo::iops(300_000.0));
+    }
+
+    #[test]
+    fn best_effort_gets_positive_opportunistic_program() {
+        let mut cp = cp();
+        cp.register_flow(&req(0, Slo::gbps(10.0))).unwrap();
+        let a = cp.register_flow(&req(1, Slo::BestEffort)).unwrap();
+        assert!(a.committed_rate.is_none());
+        match a.program {
+            ShaperProgram::TokenBucket { rate, .. } => assert!(rate >= 1.0),
+            other => panic!("expected token bucket, got {other:?}"),
+        }
+        // The registry tracks the nominal programmed rate.
+        assert!(cp.query_status(1).unwrap().shaped_rate.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn tick_reshapes_violating_flow_through_directives() {
+        let mut cp = cp();
+        cp.register_flow(&req(0, Slo::gbps(10.0))).unwrap();
+        // Three consecutive windows at 8 of 10 Gbps: hysteresis (2) passes
+        // and a SetRate boost comes out.
+        let w = MeasuredWindow {
+            span: crate::util::units::MILLIS,
+            bytes: 1_000_000,
+            ops: 667,
+            p99_latency: None,
+        };
+        let mut boosts = Vec::new();
+        for _ in 0..3 {
+            boosts = cp.tick(0, &[(0, w)]);
+        }
+        let prev = 10e9 / 8.0;
+        match &boosts[..] {
+            [Directive::SetRate { flow: 0, rate }] => {
+                assert!(*rate > prev, "boosted rate {rate:.3e}");
+            }
+            other => panic!("expected one boost, got {other:?}"),
+        }
+        let _ = Rate::gbps(1.0);
+    }
+}

@@ -1,0 +1,234 @@
+//! Baseline control planes (§5.1): the management architectures Arcus is
+//! compared against, behind the same [`ControlPlane`] trait.
+//!
+//! - [`NoOpControlPlane`] — Host_no_TS / Bypassed_PANIC: every registration
+//!   is admitted unshaped, nothing is ever reshaped. SLO "management" is
+//!   whatever the interface's arbiter happens to do.
+//! - [`StaticRateControlPlane`] — Host_TS_*: software rate limiting at the
+//!   SLO's average rate, configured once at registration ("the average
+//!   ingress rate can be rate limited on the host"); no heterogeneity or
+//!   contention awareness, no reshaping, renegotiations blindly accepted.
+
+use crate::coordinator::status::{MeasuredWindow, SloState};
+use crate::flow::{FlowId, Slo};
+use crate::util::units::Time;
+
+use super::control::{
+    Admitted, ApiError, ControlPlane, Directive, FlowStatusView, RegisterRequest, ShaperProgram,
+};
+
+/// Minimal registry shared by the baseline implementations.
+#[derive(Debug, Default)]
+struct Registry {
+    rows: Vec<RegisterRequest>,
+}
+
+impl Registry {
+    fn get(&self, flow: FlowId) -> Option<&RegisterRequest> {
+        self.rows.iter().find(|r| r.flow == flow)
+    }
+
+    fn insert(&mut self, req: &RegisterRequest) -> Result<(), ApiError> {
+        if self.get(req.flow).is_some() {
+            return Err(ApiError::AlreadyRegistered { flow: req.flow });
+        }
+        self.rows.push(req.clone());
+        Ok(())
+    }
+
+    fn remove(&mut self, flow: FlowId) -> Result<(), ApiError> {
+        match self.rows.iter().position(|r| r.flow == flow) {
+            Some(i) => {
+                self.rows.remove(i);
+                Ok(())
+            }
+            None => Err(ApiError::UnknownFlow { flow }),
+        }
+    }
+
+    fn view(&self, flow: FlowId, shaped_rate: Option<f64>) -> Option<FlowStatusView> {
+        self.get(flow).map(|r| FlowStatusView {
+            flow: r.flow,
+            vm: r.vm,
+            path: r.path,
+            accel: r.accel,
+            slo: r.slo,
+            shaped_rate,
+            state: SloState::Warmup,
+            violations: 0,
+            reconfigs: 0,
+        })
+    }
+}
+
+/// Admit-everything, shape-nothing (Host_no_TS / Bypassed_PANIC).
+#[derive(Debug, Default)]
+pub struct NoOpControlPlane {
+    registry: Registry,
+}
+
+impl NoOpControlPlane {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ControlPlane for NoOpControlPlane {
+    fn register_flow(&mut self, req: &RegisterRequest) -> Result<Admitted, ApiError> {
+        self.registry.insert(req)?;
+        Ok(Admitted { committed_rate: None, program: ShaperProgram::Unshaped })
+    }
+
+    fn update_slo(&mut self, flow: FlowId, slo: Slo) -> Result<Admitted, ApiError> {
+        match self.registry.rows.iter_mut().find(|r| r.flow == flow) {
+            Some(r) => {
+                r.slo = slo;
+                Ok(Admitted { committed_rate: None, program: ShaperProgram::Unshaped })
+            }
+            None => Err(ApiError::UnknownFlow { flow }),
+        }
+    }
+
+    fn deregister_flow(&mut self, flow: FlowId) -> Result<(), ApiError> {
+        self.registry.remove(flow)
+    }
+
+    fn query_status(&self, flow: FlowId) -> Option<FlowStatusView> {
+        self.registry.view(flow, None)
+    }
+
+    fn tick(&mut self, _now: Time, _windows: &[(FlowId, MeasuredWindow)]) -> Vec<Directive> {
+        Vec::new()
+    }
+
+    fn needs_ticks(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "noop"
+    }
+}
+
+/// Static software shaping at the SLO average (Host_TS_Reflex /
+/// Host_TS_Firecracker).
+#[derive(Debug, Default)]
+pub struct StaticRateControlPlane {
+    registry: Registry,
+}
+
+impl StaticRateControlPlane {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn program_for(slo: &Slo) -> ShaperProgram {
+        match slo.required_rate() {
+            Some((rate, mode)) => ShaperProgram::Software { rate, mode },
+            None => ShaperProgram::Unshaped,
+        }
+    }
+}
+
+impl ControlPlane for StaticRateControlPlane {
+    fn register_flow(&mut self, req: &RegisterRequest) -> Result<Admitted, ApiError> {
+        self.registry.insert(req)?;
+        Ok(Admitted {
+            committed_rate: req.slo.required_rate().map(|(r, _)| r),
+            program: Self::program_for(&req.slo),
+        })
+    }
+
+    fn update_slo(&mut self, flow: FlowId, slo: Slo) -> Result<Admitted, ApiError> {
+        // No capacity planning: the host limiter is blindly reprogrammed.
+        match self.registry.rows.iter_mut().find(|r| r.flow == flow) {
+            Some(r) => {
+                r.slo = slo;
+                Ok(Admitted {
+                    committed_rate: slo.required_rate().map(|(rate, _)| rate),
+                    program: Self::program_for(&slo),
+                })
+            }
+            None => Err(ApiError::UnknownFlow { flow }),
+        }
+    }
+
+    fn deregister_flow(&mut self, flow: FlowId) -> Result<(), ApiError> {
+        self.registry.remove(flow)
+    }
+
+    fn query_status(&self, flow: FlowId) -> Option<FlowStatusView> {
+        let rate = self
+            .registry
+            .get(flow)
+            .and_then(|r| r.slo.required_rate())
+            .map(|(rate, _)| rate);
+        self.registry.view(flow, rate)
+    }
+
+    fn tick(&mut self, _now: Time, _windows: &[(FlowId, MeasuredWindow)]) -> Vec<Directive> {
+        Vec::new()
+    }
+
+    fn needs_ticks(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "static_rate"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flow::{FlowKind, Path};
+
+    fn req(flow: FlowId, slo: Slo) -> RegisterRequest {
+        RegisterRequest {
+            flow,
+            vm: flow,
+            path: Path::FunctionCall,
+            accel: 0,
+            accel_name: "ipsec".into(),
+            kind: FlowKind::Accel,
+            slo,
+            size_hint: 1500,
+        }
+    }
+
+    #[test]
+    fn noop_admits_everything_unshaped() {
+        let mut cp = NoOpControlPlane::new();
+        for i in 0..32 {
+            let a = cp.register_flow(&req(i, Slo::gbps(100.0))).unwrap();
+            assert_eq!(a.program, ShaperProgram::Unshaped);
+            assert!(a.committed_rate.is_none());
+        }
+        assert!(cp.tick(0, &[]).is_empty());
+        assert!(!cp.needs_ticks());
+        assert!(cp.query_status(3).is_some());
+        cp.deregister_flow(3).unwrap();
+        assert!(cp.query_status(3).is_none());
+        assert!(cp.register_flow(&req(0, Slo::gbps(1.0))).is_err());
+    }
+
+    #[test]
+    fn static_rate_programs_software_shaper_at_slo_average() {
+        let mut cp = StaticRateControlPlane::new();
+        let a = cp.register_flow(&req(0, Slo::gbps(10.0))).unwrap();
+        match a.program {
+            ShaperProgram::Software { rate, .. } => {
+                assert!((rate - 1.25e9).abs() < 1.0);
+            }
+            other => panic!("expected software program, got {other:?}"),
+        }
+        // Best-effort flows stay unshaped even here.
+        let b = cp.register_flow(&req(1, Slo::BestEffort)).unwrap();
+        assert_eq!(b.program, ShaperProgram::Unshaped);
+        // Renegotiation reprograms blindly (no capacity planning).
+        let c = cp.update_slo(0, Slo::gbps(50.0)).unwrap();
+        assert!(matches!(c.program, ShaperProgram::Software { .. }));
+        assert_eq!(cp.query_status(0).unwrap().slo, Slo::gbps(50.0));
+    }
+}

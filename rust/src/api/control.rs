@@ -1,0 +1,180 @@
+//! The control-plane API: typed requests, responses, errors, and the
+//! [`ControlPlane`] trait.
+//!
+//! Arcus's core contribution is an SLO-aware *protocol* between tenants and
+//! the accelerator runtime (§4.3): a flow registers with an SLO and is
+//! admitted or rejected by capacity planning; a registered flow may
+//! renegotiate its SLO; the runtime watches hardware counters and reshapes
+//! violating flows; a departing flow releases its committed capacity. This
+//! module types that protocol so the dataplane (the DES engine today, the
+//! wall-clock serving runtime and any multi-node frontend tomorrow) talks to
+//! the coordinator exclusively through it.
+//!
+//! Division of labour: the control plane *decides* (admission, shaping
+//! rates, path moves) and the dataplane *applies* (programs token-bucket
+//! registers, re-routes DMA). Decisions come back as a [`ShaperProgram`] on
+//! the synchronous calls and as [`Directive`]s from [`ControlPlane::tick`];
+//! the dataplane applies directives after the measured ~10 µs MMIO
+//! reconfiguration latency (§5.3.1), never stalling active flows.
+
+use crate::coordinator::status::{MeasuredWindow, SloState};
+use crate::flow::{FlowId, FlowKind, Path, Slo};
+use crate::shaping::{ShapeMode, TokenBucketParams};
+use crate::util::units::Time;
+
+/// What a tenant submits when registering a flow (the PerFlowStatusTable
+/// context of §4.3: VM, path, accelerator, SLO, and the message-size hint
+/// that keys the Capacity(t, X, N) profile lookup).
+#[derive(Debug, Clone)]
+pub struct RegisterRequest {
+    pub flow: FlowId,
+    pub vm: usize,
+    pub path: Path,
+    /// Accelerator index in the system's device list.
+    pub accel: usize,
+    /// Accelerator model name (profile-table key; "storage" for NVMe flows).
+    pub accel_name: String,
+    pub kind: FlowKind,
+    pub slo: Slo,
+    /// Message size this flow predominantly uses (profiling context key).
+    pub size_hint: u64,
+}
+
+/// A shaper configuration the dataplane must program at the interface.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShaperProgram {
+    /// Leave the flow unshaped (latency-critical flows, unmanaged modes).
+    Unshaped,
+    /// Program a hardware token bucket: install `params`, then retune the
+    /// registers to `rate` units/sec (the control plane pre-applies its
+    /// shaping headroom so the measured rate lands ON the SLO).
+    TokenBucket {
+        params: TokenBucketParams,
+        rate: f64,
+        mode: ShapeMode,
+    },
+    /// Program a host-software rate limiter (the Host_TS_* baselines).
+    Software { rate: f64, mode: ShapeMode },
+}
+
+/// Successful registration / renegotiation outcome.
+#[derive(Debug, Clone)]
+pub struct Admitted {
+    /// Shaping rate (units/sec) now committed in the capacity plan, if the
+    /// SLO carries one.
+    pub committed_rate: Option<f64>,
+    /// Shaper program the dataplane must install for this flow.
+    pub program: ShaperProgram,
+}
+
+/// Typed control-plane failures.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiError {
+    /// Capacity planning refused the SLO (Algorithm 1 lines 7–10).
+    AdmissionRejected { reason: String },
+    /// The flow id is already registered.
+    AlreadyRegistered { flow: FlowId },
+    /// The flow id is not registered.
+    UnknownFlow { flow: FlowId },
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ApiError::AdmissionRejected { reason } => {
+                write!(f, "admission rejected: {reason}")
+            }
+            ApiError::AlreadyRegistered { flow } => {
+                write!(f, "flow {flow} is already registered")
+            }
+            ApiError::UnknownFlow { flow } => write!(f, "flow {flow} is not registered"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+/// An asynchronous reconfiguration the control plane asks the dataplane to
+/// apply (MMIO register writes / path re-routing; the dataplane models the
+/// ~10 µs PCIe round-trip latency before the change takes effect).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Directive {
+    /// Reprogram a flow's shaper to a new rate (units/sec).
+    SetRate { flow: FlowId, rate: f64 },
+    /// Re-route a flow to a less-contended invocation path.
+    SwitchPath { flow: FlowId, to: Path },
+}
+
+/// Point-in-time view of one registered flow, for `query_status`.
+#[derive(Debug, Clone)]
+pub struct FlowStatusView {
+    pub flow: FlowId,
+    pub vm: usize,
+    pub path: Path,
+    pub accel: usize,
+    pub slo: Slo,
+    /// Shaping rate currently programmed (units/sec), if shaped.
+    pub shaped_rate: Option<f64>,
+    pub state: SloState,
+    /// Consecutive violating windows.
+    pub violations: u32,
+    /// Reconfigurations issued for this flow.
+    pub reconfigs: u32,
+}
+
+/// The flow-lifecycle protocol between tenants/dataplane and the SLO
+/// runtime.
+///
+/// Implementations: [`crate::api::ArcusControlPlane`] (profile tables +
+/// Algorithm 1), [`crate::api::StaticRateControlPlane`] (Host_TS software
+/// shaping at the SLO average), and [`crate::api::NoOpControlPlane`]
+/// (unmanaged baselines). The dataplane owns the hardware (shapers, DMA
+/// routing) and must not reach past this trait into coordinator internals.
+pub trait ControlPlane {
+    /// Register a flow: admission control plus initial shaper programming.
+    fn register_flow(&mut self, req: &RegisterRequest) -> Result<Admitted, ApiError>;
+
+    /// Renegotiate a registered flow's SLO. On rejection the old SLO (and
+    /// its shaper program) stays in force.
+    fn update_slo(&mut self, flow: FlowId, slo: Slo) -> Result<Admitted, ApiError>;
+
+    /// Deregister a flow, releasing its committed capacity for later
+    /// arrivals or renegotiations to claim.
+    fn deregister_flow(&mut self, flow: FlowId) -> Result<(), ApiError>;
+
+    /// Current status of one registered flow (None when unknown).
+    fn query_status(&self, flow: FlowId) -> Option<FlowStatusView>;
+
+    /// One control-loop tick: ingest the dataplane's measured hardware
+    /// counters and emit reconfiguration directives (Algorithm 1 lines
+    /// 2–6). `now` is virtual time; `windows` holds one fresh
+    /// [`MeasuredWindow`] per registered flow.
+    fn tick(&mut self, now: Time, windows: &[(FlowId, MeasuredWindow)]) -> Vec<Directive>;
+
+    /// Does this control plane run a periodic tick at all? (The unmanaged
+    /// and statically-shaped baselines do not.)
+    fn needs_ticks(&self) -> bool;
+
+    /// Implementation name, for reports.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn api_error_display_is_informative() {
+        let e = ApiError::AdmissionRejected { reason: "capacity 1e9, requested 2e9".into() };
+        assert!(e.to_string().contains("admission rejected"));
+        assert!(e.to_string().contains("capacity"));
+        assert_eq!(
+            ApiError::UnknownFlow { flow: 7 }.to_string(),
+            "flow 7 is not registered"
+        );
+        assert_eq!(
+            ApiError::AlreadyRegistered { flow: 3 }.to_string(),
+            "flow 3 is already registered"
+        );
+    }
+}

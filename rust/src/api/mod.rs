@@ -1,0 +1,25 @@
+//! First-class control-plane API: the flow-lifecycle protocol between
+//! tenants / the dataplane and the SLO runtime.
+//!
+//! The [`ControlPlane`] trait is the seam of the system: *everything* that
+//! admits, reshapes, renegotiates, or retires a flow goes through it. The
+//! DES engine ([`crate::system::engine`]) is one consumer; the wall-clock
+//! serving runtime and future multi-node frontends are the others — none of
+//! them may touch the coordinator's tables directly.
+//!
+//! - [`control`] — the trait plus its typed request/response/error/directive
+//!   vocabulary ([`RegisterRequest`], [`Admitted`], [`ShaperProgram`],
+//!   [`Directive`], [`ApiError`], [`FlowStatusView`]).
+//! - [`arcus`] — [`ArcusControlPlane`]: profile tables + Algorithm 1.
+//! - [`baseline`] — [`NoOpControlPlane`] (Host_no_TS / Bypassed_PANIC) and
+//!   [`StaticRateControlPlane`] (Host_TS_*).
+
+pub mod arcus;
+pub mod baseline;
+pub mod control;
+
+pub use arcus::ArcusControlPlane;
+pub use baseline::{NoOpControlPlane, StaticRateControlPlane};
+pub use control::{
+    Admitted, ApiError, ControlPlane, Directive, FlowStatusView, RegisterRequest, ShaperProgram,
+};

@@ -30,6 +30,13 @@
 //! accel = 0                 # index into [[accels]]
 //! kind = "accel"            # accel | storage_read | storage_write
 //! priority = 1
+//!
+//! [[lifecycle]]             # optional tenant-churn schedule
+//! flow = 2                  # index into [[flows]]
+//! event = "arrive"          # arrive | depart | renegotiate
+//! at_ms = 3.0
+//! slo_gbps = 12.0           # renegotiate only (slo_kiops also accepted;
+//!                           # neither = drop to best_effort)
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -38,7 +45,7 @@ use crate::accel::AccelModel;
 use crate::flow::pattern::{Burstiness, SizeDist};
 use crate::flow::{FlowKind, FlowSpec, Path, Slo, TrafficPattern};
 use crate::storage::SsdConfig;
-use crate::system::{ExperimentSpec, Mode};
+use crate::system::{ExperimentSpec, LifecycleEvent, Mode};
 use crate::util::units::{Rate, MICROS, MILLIS};
 
 use super::{Document, Table, TableExt};
@@ -46,8 +53,7 @@ use super::{Document, Table, TableExt};
 /// Build an [`ExperimentSpec`] from a parsed document.
 pub fn spec_from_document(doc: &Document) -> Result<ExperimentSpec> {
     let mode_name = doc.str_or("experiment", "mode", "arcus");
-    let mode = Mode::by_name(mode_name)
-        .with_context(|| format!("unknown mode `{mode_name}`"))?;
+    let mode = Mode::parse(mode_name).map_err(|e| anyhow::anyhow!("{e}"))?;
 
     let mut accels = Vec::new();
     for t in doc.array_of("accels") {
@@ -78,7 +84,51 @@ pub fn spec_from_document(doc: &Document) -> Result<ExperimentSpec> {
     }
     spec.control_period = (doc.float_or("experiment", "control_period_us", 100.0) * MICROS as f64) as u64;
     spec.queue_cap = doc.int_or("experiment", "queue_cap", 4096) as usize;
+    for (i, t) in doc.array_of("lifecycle").iter().enumerate() {
+        spec.lifecycle
+            .push(lifecycle_from_table(i, t, spec.flows.len(), spec.duration)?);
+    }
     Ok(spec)
+}
+
+fn lifecycle_from_table(
+    i: usize,
+    t: &Table,
+    n_flows: usize,
+    duration: crate::util::units::Time,
+) -> Result<LifecycleEvent> {
+    let flow = t.int_or("flow", -1);
+    if flow < 0 || flow as usize >= n_flows {
+        bail!("lifecycle {i}: `flow` must index a [[flows]] entry (0..{n_flows})");
+    }
+    let flow = flow as usize;
+    let at_ms = t.float_or("at_ms", 0.0);
+    if at_ms < 0.0 {
+        bail!("lifecycle {i}: `at_ms` must be non-negative (got {at_ms})");
+    }
+    let at = (at_ms * MILLIS as f64) as u64;
+    if at >= duration {
+        bail!(
+            "lifecycle {i}: at_ms {at_ms} is at/after the run's duration \
+             ({} ms) — the event would never fire",
+            duration as f64 / MILLIS as f64
+        );
+    }
+    match t.str_or("event", "") {
+        "arrive" => Ok(LifecycleEvent::Arrive { flow, at }),
+        "depart" => Ok(LifecycleEvent::Depart { flow, at }),
+        "renegotiate" => {
+            let slo = if let Some(g) = t.get("slo_gbps").and_then(super::Value::as_float) {
+                Slo::gbps(g)
+            } else if let Some(k) = t.get("slo_kiops").and_then(super::Value::as_float) {
+                Slo::iops(k * 1e3)
+            } else {
+                Slo::BestEffort
+            };
+            Ok(LifecycleEvent::Renegotiate { flow, at, slo })
+        }
+        other => bail!("lifecycle {i}: unknown event `{other}` (arrive|depart|renegotiate)"),
+    }
 }
 
 fn accel_from_table(t: &Table) -> Result<AccelModel> {
@@ -211,9 +261,74 @@ slo_kiops = 300.0
     }
 
     #[test]
+    fn parses_lifecycle_schedule() {
+        let text = r#"
+[experiment]
+mode = "arcus"
+[[accels]]
+kind = "ipsec"
+[[flows]]
+vm = 0
+slo_gbps = 8.0
+[[flows]]
+vm = 1
+slo_gbps = 7.0
+[[lifecycle]]
+flow = 1
+event = "arrive"
+at_ms = 3.0
+[[lifecycle]]
+flow = 0
+event = "renegotiate"
+at_ms = 5.0
+slo_gbps = 11.0
+[[lifecycle]]
+flow = 0
+event = "depart"
+at_ms = 7.0
+"#;
+        let doc = Document::from_str(text).unwrap();
+        let spec = spec_from_document(&doc).unwrap();
+        assert_eq!(spec.lifecycle.len(), 3);
+        assert_eq!(spec.lifecycle[0], LifecycleEvent::Arrive { flow: 1, at: 3 * MILLIS });
+        assert_eq!(
+            spec.lifecycle[1],
+            LifecycleEvent::Renegotiate { flow: 0, at: 5 * MILLIS, slo: Slo::gbps(11.0) }
+        );
+        assert_eq!(spec.lifecycle[2], LifecycleEvent::Depart { flow: 0, at: 7 * MILLIS });
+        assert_eq!(spec.arrival_time(1), 3 * MILLIS);
+    }
+
+    #[test]
+    fn rejects_bad_lifecycle_entries() {
+        // Flow index out of range.
+        let text = "[[flows]]\nvm = 0\n[[lifecycle]]\nflow = 5\nevent = \"arrive\"\n";
+        let doc = Document::from_str(text).unwrap();
+        assert!(spec_from_document(&doc).is_err());
+        // Unknown event name.
+        let text = "[[flows]]\nvm = 0\n[[lifecycle]]\nflow = 0\nevent = \"vanish\"\n";
+        let doc = Document::from_str(text).unwrap();
+        let err = spec_from_document(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("vanish"), "{err:#}");
+        // Event at/after the run's end would silently never fire.
+        let text = "[experiment]\nduration_ms = 10\n[[flows]]\nvm = 0\n\
+                    [[lifecycle]]\nflow = 0\nevent = \"depart\"\nat_ms = 15.0\n";
+        let doc = Document::from_str(text).unwrap();
+        let err = spec_from_document(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("never fire"), "{err:#}");
+        // Negative times are rejected, not saturated to zero.
+        let text = "[[flows]]\nvm = 0\n\
+                    [[lifecycle]]\nflow = 0\nevent = \"arrive\"\nat_ms = -1.0\n";
+        let doc = Document::from_str(text).unwrap();
+        assert!(spec_from_document(&doc).is_err());
+    }
+
+    #[test]
     fn rejects_bad_mode_and_path() {
         let doc = Document::from_str("[experiment]\nmode = \"bogus\"\n[[flows]]\nvm = 0\n").unwrap();
-        assert!(spec_from_document(&doc).is_err());
+        let err = spec_from_document(&doc).unwrap_err();
+        // The error names the valid menu, not just the bad value.
+        assert!(format!("{err:#}").contains("arcus"), "{err:#}");
         let doc =
             Document::from_str("[[flows]]\npath = \"teleport\"\n").unwrap();
         assert!(spec_from_document(&doc).is_err());

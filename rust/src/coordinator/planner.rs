@@ -87,6 +87,7 @@ pub fn committed_bytes_per_sec(status: &PerFlowStatusTable, accel: usize) -> f64
         .sum()
 }
 
+#[allow(clippy::too_many_arguments)]
 pub fn admission_control(
     cfg: &PlannerConfig,
     profile: &ProfileTable,
@@ -97,6 +98,63 @@ pub fn admission_control(
     size_hint: u64,
     slo: &Slo,
 ) -> Admission {
+    let n_after = status.flows_on_accel(accel).len() + 1;
+    capacity_check(
+        cfg, profile, status, accel, accel_name, path, size_hint, slo, n_after, None,
+    )
+}
+
+/// SLO renegotiation (Scenario 2): the same CHECK for an *already
+/// registered* flow — the flow count on the accelerator is unchanged, and
+/// the committed sum excludes the flow's own current commitment (the new
+/// rate replaces it rather than stacking on top). Accepting returns the
+/// fresh shaping parameters; rejecting leaves the old contract in force
+/// (callers must not mutate the table on rejection).
+pub fn renegotiation_control(
+    cfg: &PlannerConfig,
+    profile: &ProfileTable,
+    status: &PerFlowStatusTable,
+    flow: FlowId,
+    new_slo: &Slo,
+) -> Admission {
+    let Some(row) = status.get(flow) else {
+        return Admission::Reject {
+            reason: format!("flow {flow} is not registered"),
+        };
+    };
+    let n = status.flows_on_accel(row.accel).len();
+    capacity_check(
+        cfg,
+        profile,
+        status,
+        row.accel,
+        &row.accel_name,
+        row.path,
+        row.size_hint,
+        new_slo,
+        n,
+        Some(flow),
+    )
+}
+
+/// The one CapacityPlanning CHECK both entry points share: can `slo` be
+/// committed for a flow in context `(accel_name, path, size_hint)` with `n`
+/// flows sharing the engine? `exclude` names a flow whose current
+/// commitment is replaced rather than added (renegotiation); `None` means
+/// a new registration (the candidate is not yet in the table).
+#[allow(clippy::too_many_arguments)]
+fn capacity_check(
+    cfg: &PlannerConfig,
+    profile: &ProfileTable,
+    status: &PerFlowStatusTable,
+    accel: usize,
+    accel_name: &str,
+    path: Path,
+    size_hint: u64,
+    slo: &Slo,
+    n: usize,
+    exclude: Option<FlowId>,
+) -> Admission {
     let Some((rate, mode)) = slo.required_rate() else {
         // Best-effort / latency flows take no committed bandwidth; they are
         // always admitted and shaped opportunistically.
@@ -105,8 +163,7 @@ pub fn admission_control(
             params: TokenBucketParams::for_rate(1.0, ShapeMode::Iops),
         };
     };
-    let n_after = status.flows_on_accel(accel).len() + 1;
-    let entry = match profile.capacity(accel_name, path, size_hint, n_after) {
+    let entry = match profile.capacity(accel_name, path, size_hint, n) {
         Some(e) => e,
         None => {
             return Admission::Reject {
@@ -118,7 +175,7 @@ pub fn admission_control(
         return Admission::Reject {
             reason: format!(
                 "context tagged SLO-Violating ({accel_name}, {}B, {} flows)",
-                size_hint, n_after
+                size_hint, n
             ),
         };
     }
@@ -128,10 +185,10 @@ pub fn admission_control(
     // tenant (Scenario 1's availability check over the whole mixture).
     let mut capacity_bytes = entry.capacity.as_bits_per_sec() / 8.0;
     for r in status.flows_on_accel(accel) {
-        if r.slo.required_rate().is_none() {
+        if Some(r.flow) == exclude || r.slo.required_rate().is_none() {
             continue;
         }
-        if let Some(e) = profile.capacity(accel_name, r.path, r.size_hint, n_after) {
+        if let Some(e) = profile.capacity(accel_name, r.path, r.size_hint, n) {
             capacity_bytes = capacity_bytes.min(e.capacity.as_bits_per_sec() / 8.0);
         }
     }
@@ -139,7 +196,16 @@ pub fn admission_control(
         ShapeMode::Gbps => rate,
         ShapeMode::Iops => rate * size_hint as f64,
     };
-    let committed = committed_bytes_per_sec(status, accel);
+    let excluded_bytes = exclude
+        .and_then(|f| status.get(f))
+        .and_then(|r| {
+            r.slo.required_rate().map(|(own, m)| match m {
+                ShapeMode::Gbps => own,
+                ShapeMode::Iops => own * r.size_hint as f64,
+            })
+        })
+        .unwrap_or(0.0);
+    let committed = committed_bytes_per_sec(status, accel) - excluded_bytes;
     let budget = capacity_bytes * (1.0 - cfg.admission_headroom);
     if committed + rate_bytes > budget {
         return Admission::Reject {
@@ -402,6 +468,60 @@ mod tests {
             &Slo::BestEffort,
         );
         assert!(matches!(verdict, Admission::Accept { .. }));
+    }
+
+    #[test]
+    fn admission_boundary_exactly_at_capacity() {
+        // Satellite edge: a request that lands *exactly* on the remaining
+        // budget is admitted; one epsilon above is rejected. The check is
+        // `committed + requested > budget`, so equality passes.
+        let (profile, _) = setup();
+        let status = PerFlowStatusTable::default();
+        let cfg = PlannerConfig::default();
+        let entry = profile
+            .capacity("ipsec", Path::FunctionCall, 1500, 1)
+            .unwrap();
+        let budget_bytes =
+            entry.capacity.as_bits_per_sec() / 8.0 * (1.0 - cfg.admission_headroom);
+        // Rate(x*8)/8 == x exactly in f64 (power-of-two scaling).
+        let at_capacity = Slo::Throughput {
+            target: Rate(budget_bytes * 8.0),
+            percentile: 99.0,
+        };
+        let verdict = admission_control(
+            &cfg, &profile, &status, 0, "ipsec", Path::FunctionCall, 1500, &at_capacity,
+        );
+        assert!(matches!(verdict, Admission::Accept { .. }), "{verdict:?}");
+        let above = Slo::Throughput {
+            target: Rate((budget_bytes + 1.0) * 8.0),
+            percentile: 99.0,
+        };
+        let verdict = admission_control(
+            &cfg, &profile, &status, 0, "ipsec", Path::FunctionCall, 1500, &above,
+        );
+        assert!(matches!(verdict, Admission::Reject { .. }), "{verdict:?}");
+    }
+
+    #[test]
+    fn renegotiation_excludes_own_commitment() {
+        let (profile, _) = setup();
+        let cfg = PlannerConfig::default();
+        let mut status = PerFlowStatusTable::default();
+        status.register(flow(0, Slo::gbps(10.0), 1500));
+        status.register(flow(1, Slo::gbps(10.0), 1500));
+        // Naively re-admitting 14 on top of 10+10 would fail; excluding the
+        // flow's own 10 it fits.
+        let v = renegotiation_control(&cfg, &profile, &status, 0, &Slo::gbps(14.0));
+        assert!(matches!(v, Admission::Accept { .. }), "{v:?}");
+        // 20 exceeds what flow 1 leaves free.
+        let v = renegotiation_control(&cfg, &profile, &status, 0, &Slo::gbps(20.0));
+        assert!(matches!(v, Admission::Reject { .. }), "{v:?}");
+        // Unregistered flows are rejected outright.
+        let v = renegotiation_control(&cfg, &profile, &status, 7, &Slo::gbps(1.0));
+        assert!(matches!(v, Admission::Reject { .. }));
+        // Dropping to best-effort always succeeds.
+        let v = renegotiation_control(&cfg, &profile, &status, 0, &Slo::BestEffort);
+        assert!(matches!(v, Admission::Accept { .. }));
     }
 
     #[test]

@@ -334,6 +334,67 @@ mod tests {
     }
 
     #[test]
+    fn unknown_accelerator_key_returns_none() {
+        let t = table();
+        assert!(t
+            .capacity("no_such_engine", Path::FunctionCall, 1500, 2)
+            .is_none());
+        // Known accelerator, but an empty table has nothing either.
+        let empty = ProfileTable::default();
+        assert!(empty.capacity("ipsec", Path::FunctionCall, 1500, 2).is_none());
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn lookups_beyond_profiled_range_clamp_to_largest_bucket() {
+        let t = table();
+        // Flow counts past the largest profiled bucket (16) clamp to it.
+        assert_eq!(flow_bucket(100), 16);
+        let at16 = t.capacity("ipsec", Path::FunctionCall, 1500, 16).unwrap();
+        let at100 = t.capacity("ipsec", Path::FunctionCall, 1500, 100).unwrap();
+        assert_eq!(at16.capacity.0, at100.capacity.0);
+        // Sizes past the largest profiled bucket (512 KB) clamp likewise.
+        assert_eq!(size_bucket(64 << 20), 524288);
+        let huge = t
+            .capacity("ipsec", Path::FunctionCall, 64 << 20, 2)
+            .unwrap();
+        let max_bucket = t.capacity("ipsec", Path::FunctionCall, 524288, 2).unwrap();
+        assert_eq!(huge.capacity.0, max_bucket.capacity.0);
+        // And zero-size lookups clamp down to the smallest bucket.
+        assert_eq!(size_bucket(0), 64);
+        assert!(t.capacity("ipsec", Path::FunctionCall, 0, 1).is_some());
+    }
+
+    #[test]
+    fn slo_friendly_boundary_exactly_at_threshold() {
+        // The 1-bit tag flips where the engine's rate at the profiled size
+        // falls below FRIENDLY_EFFICIENCY of its MTU rate. A measured
+        // `observe` exactly at a context's capacity must keep whatever tag
+        // the observer supplies — the boundary case the control plane acts
+        // on when a context sits exactly at the committed sum.
+        let mut t = table();
+        let key = ProfileKey {
+            accel: "ipsec".into(),
+            path: Path::FunctionCall,
+            size: 1500,
+            n_flows: 2,
+        };
+        let learned = t.capacity("ipsec", Path::FunctionCall, 1500, 2).unwrap();
+        // Re-observing the exact same capacity, flipped to SLO-Violating:
+        // lookups must now report unfriendly at unchanged capacity.
+        t.observe(key.clone(), learned.capacity, false);
+        let e = t.capacity("ipsec", Path::FunctionCall, 1500, 2).unwrap();
+        assert_eq!(e.capacity.0, learned.capacity.0);
+        assert!(!e.slo_friendly);
+        // Flip back friendly at the same capacity.
+        t.observe(key, learned.capacity, true);
+        assert!(t
+            .capacity("ipsec", Path::FunctionCall, 1500, 2)
+            .unwrap()
+            .slo_friendly);
+    }
+
+    #[test]
     fn observe_overrides_analytic() {
         let mut t = table();
         let key = ProfileKey {

@@ -5,7 +5,9 @@
 //!
 //! - **L3 (this crate)** — the Arcus coordinator: per-flow accelerator traffic
 //!   shaping (hardware-modeled token buckets), an SLO-aware control plane
-//!   (profiling, admission control, capacity planning, online re-shaping), a
+//!   behind a first-class flow-lifecycle API ([`api::ControlPlane`]:
+//!   registration/admission, SLO renegotiation, departure, periodic
+//!   re-planning — profiling, capacity planning, online re-shaping), a
 //!   cycle-granular host–FPGA simulator substrate (PCIe, DMA, accelerators,
 //!   NVMe storage, NICs), all paper baselines, a parallel scenario-sweep
 //!   engine ([`sweep`]) that expands experiment templates over traffic/
@@ -26,6 +28,7 @@
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod accel;
+pub mod api;
 pub mod apps;
 pub mod config;
 pub mod coordinator;

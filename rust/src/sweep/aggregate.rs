@@ -162,13 +162,15 @@ fn axis_value(axis: &str, key: &ScenarioKey) -> String {
         // Zero-padded integer part keeps lexicographic == numeric order up
         // to 9999; four decimals keep close CLI-supplied values distinct.
         "tightness" => format!("x{:09.4}", key.tightness),
+        "churn" => key.churn.name().to_string(),
         "accel" => key.accel.to_string(),
         "seed" => format!("s{:020}", key.seed),
         other => unreachable!("unknown axis {other}"),
     }
 }
 
-const AXES: [&str; 7] = ["mode", "tenants", "mix", "burst", "tightness", "accel", "seed"];
+const AXES: [&str; 8] =
+    ["mode", "tenants", "mix", "burst", "tightness", "churn", "accel", "seed"];
 
 /// Fold executed scenarios into the aggregate.
 pub fn aggregate(outcomes: &[ScenarioOutcome]) -> SweepAggregate {
@@ -269,6 +271,7 @@ mod tests {
             mix: SizeMix::Mtu,
             burst: Burstiness::Paced,
             tightness: 0.7,
+            churn: crate::sweep::Churn::Static,
             accel: "ipsec",
             seed: 1,
         };

@@ -22,7 +22,7 @@ use crate::accel::AccelModel;
 use crate::flow::pattern::{Burstiness, SizeDist};
 use crate::flow::{FlowSpec, Path, Slo};
 use crate::flow::TrafficPattern;
-use crate::system::{ExperimentSpec, Mode};
+use crate::system::{ExperimentSpec, LifecycleEvent, Mode};
 use crate::util::rng::splitmix64;
 use crate::util::units::{Rate, Time, MILLIS};
 
@@ -84,6 +84,86 @@ impl SizeMix {
     pub fn mean_bytes(self) -> u64 {
         self.dist().mean().round().max(1.0) as u64
     }
+
+    /// Parse a mix name, or explain which names are valid.
+    pub fn parse(s: &str) -> Result<SizeMix, String> {
+        SizeMix::by_name(s).ok_or_else(|| {
+            let valid: Vec<&str> = SizeMix::ALL.iter().map(|m| m.name()).collect();
+            format!("unknown size mix `{s}` (valid mixes: {})", valid.join(", "))
+        })
+    }
+}
+
+/// Tenant-churn pattern: which flow-lifecycle events a scenario schedules
+/// (the paper's Scenarios 1–2 — dynamic registration, departure, and SLO
+/// renegotiation against the control-plane API).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Churn {
+    /// Every tenant present for the whole run (the legacy grid; scenario
+    /// labels and seeds are unchanged from pre-churn grids).
+    Static,
+    /// The later half of the tenant roster arrives staggered mid-run and
+    /// must pass admission control against the incumbents' commitments.
+    Arrivals,
+    /// The earlier half departs staggered mid-run, releasing capacity.
+    Departures,
+    /// Tenant 0 renegotiates its SLO upward at mid-run.
+    Renegotiation,
+    /// One arrival, one departure, and one renegotiation in sequence.
+    Mixed,
+}
+
+impl Churn {
+    pub const ALL: [Churn; 5] = [
+        Churn::Static,
+        Churn::Arrivals,
+        Churn::Departures,
+        Churn::Renegotiation,
+        Churn::Mixed,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Churn::Static => "static",
+            Churn::Arrivals => "arrivals",
+            Churn::Departures => "departures",
+            Churn::Renegotiation => "renegotiation",
+            Churn::Mixed => "mixed",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Churn> {
+        Self::ALL.iter().copied().find(|c| c.name() == s)
+    }
+
+    /// Parse a churn name, or explain which names are valid.
+    pub fn parse(s: &str) -> Result<Churn, String> {
+        Churn::by_name(s).ok_or_else(|| {
+            let valid: Vec<&str> = Churn::ALL.iter().map(|c| c.name()).collect();
+            format!("unknown churn `{s}` (valid churns: {})", valid.join(", "))
+        })
+    }
+}
+
+/// Parse a burstiness axis value (`paced`, `poisson`, `onoff<N>`), or
+/// explain the vocabulary.
+pub fn parse_burst(s: &str) -> Result<Burstiness, String> {
+    match s {
+        "paced" => Ok(Burstiness::Paced),
+        "poisson" => Ok(Burstiness::Poisson),
+        _ => {
+            if let Some(n) = s.strip_prefix("onoff") {
+                if let Ok(len) = n.parse::<u32>() {
+                    if len > 0 {
+                        return Ok(Burstiness::OnOff { burst_len: len });
+                    }
+                }
+            }
+            Err(format!(
+                "unknown burst `{s}` (valid bursts: paced, poisson, onoff<N> with N ≥ 1)"
+            ))
+        }
+    }
 }
 
 /// Human label for a burstiness axis value.
@@ -138,13 +218,17 @@ pub struct SweepGrid {
     /// (at the mix's mean message size) committed across all tenants.
     /// 1.0 commits the whole engine; >1.0 is deliberately inadmissible.
     pub tightness: Vec<f64>,
+    /// Tenant-churn axis (defaults to `[Churn::Static]`, so legacy grids
+    /// are unchanged).
+    pub churn: Vec<Churn>,
     pub accels: Vec<AccelModel>,
     /// Seed axis: replications of every cell with decorrelated randomness.
     pub seeds: Vec<u64>,
 }
 
 impl SweepGrid {
-    /// A grid with empty axes; fill every axis before expanding.
+    /// A grid with empty axes (churn defaults to static); fill every other
+    /// axis before expanding.
     pub fn new(base: GridBase) -> Self {
         SweepGrid {
             base,
@@ -153,6 +237,7 @@ impl SweepGrid {
             mixes: Vec::new(),
             bursts: Vec::new(),
             tightness: Vec::new(),
+            churn: vec![Churn::Static],
             accels: Vec::new(),
             seeds: Vec::new(),
         }
@@ -178,6 +263,10 @@ impl SweepGrid {
         self.tightness = v;
         self
     }
+    pub fn churn(mut self, v: Vec<Churn>) -> Self {
+        self.churn = v;
+        self
+    }
     pub fn accels(mut self, v: Vec<AccelModel>) -> Self {
         self.accels = v;
         self
@@ -195,8 +284,36 @@ impl SweepGrid {
             * self.mixes.len()
             * self.bursts.len()
             * self.tightness.len()
+            * self.churn.len()
             * self.accels.len()
             * self.seeds.len()
+    }
+
+    /// Validate the grid before expansion, with actionable errors — the
+    /// alternative is a panic (or a silent u64 wrap) deep inside the
+    /// engine once a worker thread reaches the first scenario.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.base.duration == 0 {
+            return Err("grid duration must be positive".to_string());
+        }
+        if self.base.warmup >= self.base.duration {
+            return Err(format!(
+                "grid warmup ({} ms) must be shorter than its duration ({} ms): \
+                 nothing would be measured",
+                self.base.warmup as f64 / MILLIS as f64,
+                self.base.duration as f64 / MILLIS as f64
+            ));
+        }
+        if self.base.load.is_nan() || self.base.load <= 0.0 {
+            return Err(format!("grid load must be positive (got {})", self.base.load));
+        }
+        if let Some(&t) = self.tenants.iter().find(|&&t| t == 0) {
+            return Err(format!("tenant counts must be ≥ 1 (got {t})"));
+        }
+        if let Some(&x) = self.tightness.iter().find(|&&x| x.is_nan() || x <= 0.0) {
+            return Err(format!("tightness values must be positive (got {x})"));
+        }
+        Ok(())
     }
 
     /// Expand the full cartesian product into scenarios, in deterministic
@@ -209,20 +326,23 @@ impl SweepGrid {
                 for &mix in &self.mixes {
                     for &burst in &self.bursts {
                         for &tightness in &self.tightness {
-                            for accel in &self.accels {
-                                for &seed in &self.seeds {
-                                    let key = ScenarioKey {
-                                        mode,
-                                        tenants,
-                                        mix,
-                                        burst,
-                                        tightness,
-                                        accel: accel.name,
-                                        seed,
-                                    };
-                                    let spec = self.scenario_spec(&key, accel);
-                                    out.push(Scenario { index, key, spec });
-                                    index += 1;
+                            for &churn in &self.churn {
+                                for accel in &self.accels {
+                                    for &seed in &self.seeds {
+                                        let key = ScenarioKey {
+                                            mode,
+                                            tenants,
+                                            mix,
+                                            burst,
+                                            tightness,
+                                            churn,
+                                            accel: accel.name,
+                                            seed,
+                                        };
+                                        let spec = self.scenario_spec(&key, accel);
+                                        out.push(Scenario { index, key, spec });
+                                        index += 1;
+                                    }
                                 }
                             }
                         }
@@ -262,6 +382,75 @@ impl SweepGrid {
             .with_duration(self.base.duration)
             .with_warmup(self.base.warmup)
             .with_seed(scenario_seed(self.base.seed, key))
+            .with_lifecycle(churn_events(key.churn, tenants, self.base.duration, per_flow_slo))
+    }
+}
+
+/// The lifecycle schedule a churn pattern implies for `tenants` flows over
+/// a run of `duration`. Pure arithmetic over the coordinates (no RNG), so
+/// expansion stays deterministic; event times sit past typical warmups and
+/// are staggered so capacity changes are observable one at a time.
+pub fn churn_events(
+    churn: Churn,
+    tenants: usize,
+    duration: Time,
+    per_flow_slo: Rate,
+) -> Vec<LifecycleEvent> {
+    let t = tenants.max(1);
+    match churn {
+        Churn::Static => Vec::new(),
+        Churn::Arrivals => {
+            // The later half arrives staggered across [40%, 90%) of the
+            // run — the window divides by the mover count so every event
+            // lands inside the run at any tenant count.
+            let movers = (t / 2).max(1);
+            let window = duration / 2;
+            (0..movers)
+                .map(|k| LifecycleEvent::Arrive {
+                    flow: t - movers + k,
+                    at: duration * 2 / 5 + k as Time * window / movers as Time,
+                })
+                .collect()
+        }
+        Churn::Departures => {
+            // The earlier half departs staggered across [50%, 90%).
+            let movers = (t / 2).max(1);
+            let window = duration * 2 / 5;
+            (0..movers)
+                .map(|k| LifecycleEvent::Depart {
+                    flow: k,
+                    at: duration / 2 + k as Time * window / movers as Time,
+                })
+                .collect()
+        }
+        Churn::Renegotiation => vec![LifecycleEvent::Renegotiate {
+            flow: 0,
+            at: duration / 2,
+            slo: Slo::Throughput {
+                target: Rate(per_flow_slo.0 * 1.25),
+                percentile: 99.0,
+            },
+        }],
+        Churn::Mixed => {
+            let mut events = vec![LifecycleEvent::Arrive {
+                flow: t - 1,
+                at: duration * 2 / 5,
+            }];
+            if t >= 2 {
+                events.push(LifecycleEvent::Depart { flow: 0, at: duration * 11 / 20 });
+            }
+            if t >= 3 {
+                events.push(LifecycleEvent::Renegotiate {
+                    flow: 1,
+                    at: duration * 7 / 10,
+                    slo: Slo::Throughput {
+                        target: Rate(per_flow_slo.0 * 1.2),
+                        percentile: 99.0,
+                    },
+                });
+            }
+            events
+        }
     }
 }
 
@@ -294,6 +483,7 @@ pub struct ScenarioKey {
     pub mix: SizeMix,
     pub burst: Burstiness,
     pub tightness: f64,
+    pub churn: Churn,
     /// Accelerator model name (axis label).
     pub accel: &'static str,
     /// Seed-axis value (not the derived simulator seed).
@@ -302,16 +492,24 @@ pub struct ScenarioKey {
 
 impl ScenarioKey {
     /// Stable human-readable identifier, e.g.
-    /// `arcus/t04/mtu/poisson/x0.7000/ipsec/s2`. Tightness carries four
-    /// decimals so nearby swept values keep distinct labels.
+    /// `arcus/t04/mtu/poisson/x0.7000/arrivals/ipsec/s2`. Tightness carries
+    /// four decimals so nearby swept values keep distinct labels. Static
+    /// (no-churn) cells omit the churn segment, so their labels — and the
+    /// simulator seeds derived from them — are byte-identical to grids
+    /// that predate the churn axis.
     pub fn label(&self) -> String {
+        let churn = match self.churn {
+            Churn::Static => String::new(),
+            c => format!("{}/", c.name()),
+        };
         format!(
-            "{}/t{:02}/{}/{}/x{:.4}/{}/s{}",
+            "{}/t{:02}/{}/{}/x{:.4}/{}{}/s{}",
             self.mode.name(),
             self.tenants,
             self.mix.name(),
             burst_name(self.burst),
             self.tightness,
+            churn,
             self.accel,
             self.seed
         )
@@ -484,5 +682,123 @@ mod tests {
         }
         assert_eq!(SizeMix::Mtu.mean_bytes(), 1500);
         assert!(SizeMix::by_name("jumbo").is_none());
+        let err = SizeMix::parse("jumbo").unwrap_err();
+        assert!(err.contains("mtu") && err.contains("bimodal"), "{err}");
+    }
+
+    #[test]
+    fn churn_roundtrip_and_parse_errors_list_menu() {
+        for c in Churn::ALL {
+            assert_eq!(Churn::by_name(c.name()), Some(c));
+            assert_eq!(Churn::parse(c.name()), Ok(c));
+        }
+        let err = Churn::parse("tidal").unwrap_err();
+        for c in Churn::ALL {
+            assert!(err.contains(c.name()), "{err} missing {}", c.name());
+        }
+        assert!(parse_burst("paced").is_ok());
+        assert!(parse_burst("onoff8").is_ok());
+        let err = parse_burst("lumpy").unwrap_err();
+        assert!(err.contains("poisson"), "{err}");
+        assert!(parse_burst("onoff0").is_err());
+    }
+
+    #[test]
+    fn static_labels_and_seeds_unchanged_by_churn_axis() {
+        let base = || {
+            SweepGrid::new(GridBase::default())
+                .modes(vec![Mode::Arcus])
+                .tenants(vec![2])
+                .mixes(vec![SizeMix::Mtu])
+                .bursts(vec![Burstiness::Paced])
+                .tightness(vec![0.7])
+                .accels(vec![AccelModel::ipsec_32g()])
+                .seeds(vec![1])
+        };
+        let legacy = base().expand();
+        let churned = base()
+            .churn(vec![Churn::Static, Churn::Arrivals, Churn::Departures])
+            .expand();
+        assert_eq!(legacy.len(), 1);
+        assert_eq!(churned.len(), 3);
+        // The static cell keeps the legacy label, seed, and (empty)
+        // lifecycle; churned cells get distinct labels and schedules.
+        assert_eq!(churned[0].key.label(), legacy[0].key.label());
+        assert_eq!(churned[0].spec.seed, legacy[0].spec.seed);
+        assert!(churned[0].spec.lifecycle.is_empty());
+        assert!(churned[1].key.label().contains("/arrivals/"));
+        assert!(!churned[1].spec.lifecycle.is_empty());
+        assert_ne!(churned[1].spec.seed, legacy[0].spec.seed);
+        let labels: HashSet<String> = churned.iter().map(|s| s.key.label()).collect();
+        assert_eq!(labels.len(), 3);
+    }
+
+    #[test]
+    fn churn_events_shapes() {
+        use crate::system::LifecycleEvent;
+        let d = 10 * MILLIS;
+        let slo = Rate::gbps(5.0);
+        assert!(churn_events(Churn::Static, 4, d, slo).is_empty());
+        // Arrivals: later half, staggered, inside the run.
+        let ev = churn_events(Churn::Arrivals, 4, d, slo);
+        assert_eq!(ev.len(), 2);
+        assert!(matches!(ev[0], LifecycleEvent::Arrive { flow: 2, .. }));
+        assert!(matches!(ev[1], LifecycleEvent::Arrive { flow: 3, .. }));
+        assert!(ev.iter().all(|e| e.at() > 0 && e.at() < d));
+        // Departures: earlier half.
+        let ev = churn_events(Churn::Departures, 4, d, slo);
+        assert!(matches!(ev[0], LifecycleEvent::Depart { flow: 0, .. }));
+        // Renegotiation raises tenant 0's target by 25%.
+        let ev = churn_events(Churn::Renegotiation, 4, d, slo);
+        match ev[..] {
+            [LifecycleEvent::Renegotiate { flow: 0, slo: Slo::Throughput { target, .. }, .. }] => {
+                assert!((target.0 - slo.0 * 1.25).abs() < 1.0);
+            }
+            _ => panic!("unexpected renegotiation events: {ev:?}"),
+        }
+        // Mixed degrades gracefully with the roster size.
+        assert_eq!(churn_events(Churn::Mixed, 1, d, slo).len(), 1);
+        assert_eq!(churn_events(Churn::Mixed, 2, d, slo).len(), 2);
+        assert_eq!(churn_events(Churn::Mixed, 3, d, slo).len(), 3);
+        // A single tenant still produces one event for arrivals/departures.
+        assert_eq!(churn_events(Churn::Arrivals, 1, d, slo).len(), 1);
+        assert_eq!(churn_events(Churn::Departures, 1, d, slo).len(), 1);
+        // Every event lands strictly inside the run at any roster size —
+        // events past `duration` would silently never fire.
+        for t in [1usize, 2, 7, 28, 100] {
+            for c in Churn::ALL {
+                for e in churn_events(c, t, d, slo) {
+                    assert!(
+                        e.at() < d,
+                        "{c:?} t={t}: event at {} outside run of {d}",
+                        e.at()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_grids() {
+        let good = grid_with_lens(&[1, 1, 1, 1, 1, 1, 1]);
+        assert!(good.validate().is_ok());
+        // Warmup >= duration is the classic deep-runner panic; it must be
+        // caught at grid-build time with an actionable message.
+        let mut bad = grid_with_lens(&[1, 1, 1, 1, 1, 1, 1]);
+        bad.base.warmup = bad.base.duration;
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("warmup"), "{err}");
+        let mut bad = grid_with_lens(&[1, 1, 1, 1, 1, 1, 1]);
+        bad.base.duration = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = grid_with_lens(&[1, 1, 1, 1, 1, 1, 1]);
+        bad.tenants = vec![0];
+        assert!(bad.validate().is_err());
+        let mut bad = grid_with_lens(&[1, 1, 1, 1, 1, 1, 1]);
+        bad.tightness = vec![-0.5];
+        assert!(bad.validate().is_err());
+        let mut bad = grid_with_lens(&[1, 1, 1, 1, 1, 1, 1]);
+        bad.base.load = 0.0;
+        assert!(bad.validate().is_err());
     }
 }

@@ -6,10 +6,11 @@
 //! experiment (§5, Figs 3/6/7/8). This subsystem makes that methodology a
 //! library:
 //!
-//! - [`grid`] — [`SweepGrid`] expands one [`GridBase`] template over seven
+//! - [`grid`] — [`SweepGrid`] expands one [`GridBase`] template over eight
 //!   axes (tenant count, [`crate::system::Mode`], burstiness, message-size
-//!   mix, SLO tightness, accelerator model, seed) into a deterministic
-//!   scenario list; [`SizeMix`] is the shared message-size vocabulary.
+//!   mix, SLO tightness, tenant churn, accelerator model, seed) into a
+//!   deterministic scenario list; [`SizeMix`] is the shared message-size
+//!   vocabulary and [`Churn`] the tenant-lifecycle one.
 //! - [`runner`] — [`SweepRunner`] executes scenarios across `std::thread`
 //!   workers; each simulation stays single-threaded and deterministic
 //!   (seeded per scenario), so threading never changes a result.
@@ -27,5 +28,8 @@ pub mod grid;
 pub mod runner;
 
 pub use aggregate::{aggregate, AxisStats, AxisTable, ScenarioSummary, SweepAggregate};
-pub use grid::{burst_name, scenario_seed, GridBase, Scenario, ScenarioKey, SizeMix, SweepGrid};
+pub use grid::{
+    burst_name, churn_events, parse_burst, scenario_seed, Churn, GridBase, Scenario,
+    ScenarioKey, SizeMix, SweepGrid,
+};
 pub use runner::{default_threads, run_parallel, run_specs, ScenarioOutcome, SweepRunner};

@@ -86,7 +86,15 @@ impl SweepRunner {
     }
 
     /// Expand and execute a grid; outcomes in expansion order.
+    ///
+    /// Panics (with the validation message) on a degenerate grid — e.g.
+    /// warmup ≥ duration, which would otherwise surface as a bare
+    /// arithmetic panic deep inside a worker thread. Call
+    /// [`SweepGrid::validate`] first to handle the error gracefully.
     pub fn run(&self, grid: &SweepGrid) -> Vec<ScenarioOutcome> {
+        if let Err(e) = grid.validate() {
+            panic!("invalid sweep grid: {e}");
+        }
         self.run_scenarios(grid.expand())
     }
 

@@ -24,13 +24,25 @@
 //! quantization + CPU-interference jitter on both shaping and completion
 //! paths; Host_no_TS / Bypassed_PANIC = no shaping, with PANIC using
 //! priority scheduling at the accelerator input.
+//!
+//! Control-plane boundary: the engine owns the *dataplane* (queues, shapers,
+//! DMA, devices, counters) and talks to the SLO runtime exclusively through
+//! the [`ControlPlane`] trait — flow registration, SLO renegotiation,
+//! departure, and the periodic Algorithm-1 tick are all API calls; the
+//! resulting [`Directive`]s are applied to the hardware after the paper's
+//! ~10 µs MMIO reconfiguration latency. The [`ExperimentSpec`]'s
+//! [`LifecycleEvent`] schedule drives tenant churn (arrivals mid-run pass
+//! admission control against whatever capacity the incumbents left).
 
 use std::collections::{HashMap, VecDeque};
 
 use crate::accel::{AccelUnit, Job};
-use crate::coordinator::planner::{self, Admission, PlannerConfig};
-use crate::coordinator::status::{FlowStatus, MeasuredWindow};
-use crate::coordinator::{AccTable, PerFlowStatusTable, ProfileTable};
+use crate::api::{
+    ApiError, ArcusControlPlane, ControlPlane, Directive, NoOpControlPlane, RegisterRequest,
+    ShaperProgram, StaticRateControlPlane,
+};
+use crate::coordinator::planner::PlannerConfig;
+use crate::coordinator::status::MeasuredWindow;
 use crate::dma::Policy;
 use crate::flow::{FlowKind, Path, Slo, TrafficGen};
 use crate::metrics::{FlowMetrics, ThroughputSampler};
@@ -46,7 +58,7 @@ use crate::util::units::{Time, NANOS};
 use crate::util::Rng;
 
 use super::report::{FlowReport, SystemReport};
-use super::spec::{ExperimentSpec, Mode};
+use super::spec::{ExperimentSpec, LifecycleEvent, Mode};
 
 /// Hardware shaping decision latency (§5.3.1: 36 ns).
 const SHAPING_LATENCY: Time = 36 * NANOS;
@@ -117,6 +129,24 @@ struct FlowState {
     /// Latencies completed in the current control window (for p99).
     window_lat: Vec<u64>,
     reconfigs: u32,
+    /// Current SLO (diverges from the spec after renegotiation).
+    current_slo: Slo,
+    /// Virtual time the flow registered (lifecycle arrivals).
+    arrived_at: Time,
+    /// Set when the flow deregistered mid-run.
+    departed_at: Option<Time>,
+    /// An arrival-chain inject event is scheduled (guards re-arrival from
+    /// spawning a second generator chain alongside a live one).
+    arrival_pending: bool,
+    /// Renegotiations capacity planning refused.
+    renegotiations_rejected: u32,
+    /// When the current SLO contract took effect (> 0 after an accepted
+    /// renegotiation was applied; attainment is measured from here so
+    /// contract eras don't mix).
+    contract_start: Time,
+    /// Post-warmup bytes/ops completed before the current contract.
+    contract_base_bytes: u64,
+    contract_base_ops: u64,
 }
 
 /// The component graph.
@@ -143,11 +173,9 @@ pub struct World {
     /// Host-software interference model for interposed modes.
     host_cfg: Option<SoftwareShaperConfig>,
     host_rng: Rng,
-    // Control plane (Arcus only).
-    profile: ProfileTable,
-    acc_table: AccTable,
-    status: PerFlowStatusTable,
-    planner_cfg: PlannerConfig,
+    /// The SLO runtime. All admission / renegotiation / reshape decisions
+    /// cross this trait; the engine never reads coordinator tables.
+    ctrl: Box<dyn ControlPlane>,
 }
 
 impl World {
@@ -179,19 +207,17 @@ impl World {
         let raid = spec
             .raid
             .map(|r| Raid0::new(r.drives, r.ssd, spec.seed ^ 0x0A1D));
-        let profile = ProfileTable::learn(&spec.accels, &spec.fabric);
-        let mut acc_table = AccTable::default();
-        for m in &spec.accels {
-            acc_table.register(
-                m.name,
-                vec![
-                    Path::FunctionCall,
-                    Path::InlineNicRx,
-                    Path::InlineNicTx,
-                    Path::InlineP2p,
-                ],
-            );
-        }
+        let ctrl: Box<dyn ControlPlane> = match spec.mode {
+            Mode::Arcus => Box::new(ArcusControlPlane::from_models(
+                &spec.accels,
+                &spec.fabric,
+                PlannerConfig::default(),
+            )),
+            Mode::HostTsReflex | Mode::HostTsFirecracker => {
+                Box::new(StaticRateControlPlane::new())
+            }
+            Mode::HostNoTs | Mode::BypassedPanic => Box::new(NoOpControlPlane::new()),
+        };
         let host_cfg = match spec.mode {
             Mode::HostTsReflex => Some(SoftwareShaperConfig::reflex()),
             Mode::HostTsFirecracker => Some(SoftwareShaperConfig::firecracker()),
@@ -235,6 +261,14 @@ impl World {
                 last_tick: 0,
                 window_lat: Vec::new(),
                 reconfigs: 0,
+                current_slo: f.slo,
+                arrived_at: 0,
+                departed_at: None,
+                arrival_pending: false,
+                renegotiations_rejected: 0,
+                contract_start: 0,
+                contract_base_bytes: 0,
+                contract_base_ops: 0,
             })
             .collect();
 
@@ -260,135 +294,176 @@ impl World {
                 .collect(),
             traces: (0..n).map(|_| Vec::new()).collect(),
             host_cfg,
-            profile,
-            acc_table,
-            status: PerFlowStatusTable::default(),
-            planner_cfg: PlannerConfig::default(),
+            ctrl,
             spec,
         }
     }
 
-    // ---- Registration & shaping setup ----------------------------------
+    /// Read-only handle on the control plane (observability / tests).
+    pub fn control_plane(&self) -> &dyn ControlPlane {
+        self.ctrl.as_ref()
+    }
 
-    /// Register every flow: admission control + initial shaper programming.
-    fn register_flows(&mut self) {
-        for i in 0..self.flows.len() {
-            let fs = self.spec.flows[i].clone();
-            let size_hint = fs.pattern.sizes.mean().round() as u64;
-            match self.spec.mode {
-                Mode::Arcus => {
-                    // Storage flows bypass the accelerator profile: the SSD
-                    // is its own capacity authority; shape at the SLO rate.
-                    if fs.kind != FlowKind::Accel {
-                        if let Some((rate, mode)) = fs.slo.required_rate() {
-                            self.flows[i].shaper = Some(Box::new(TokenBucket::for_rate(
-                                rate * self.planner_cfg.shaping_headroom,
-                                mode,
-                            )));
-                            self.flows[i].mode = mode;
-                        }
-                        self.register_status(i, size_hint, fs.slo.required_rate());
-                        continue;
-                    }
-                    let accel_name = self.spec.accels[fs.accel].name;
-                    match &fs.slo {
-                        Slo::BestEffort => {
-                            // Opportunistic class (§6): shaped to the current
-                            // headroom, refreshed every control tick.
-                            self.register_status(i, size_hint, None);
-                            let rate = self.opportunistic_rate(i);
-                            self.flows[i].shaper = Some(Box::new(TokenBucket::for_rate(
-                                rate.max(1.0),
-                                ShapeMode::Gbps,
-                            )));
-                            self.flows[i].mode = ShapeMode::Gbps;
-                        }
-                        Slo::Latency { .. } => {
-                            // Latency-critical flows run unshaped; Arcus
-                            // protects them by shaping everyone else.
-                            self.register_status(i, size_hint, None);
-                        }
-                        _ => {
-                            let verdict = planner::admission_control(
-                                &self.planner_cfg,
-                                &self.profile,
-                                &self.status,
-                                fs.accel,
-                                accel_name,
-                                fs.path,
-                                size_hint,
-                                &fs.slo,
-                            );
-                            match verdict {
-                                Admission::Accept { rate, params } => {
-                                    let mode = fs
-                                        .slo
-                                        .required_rate()
-                                        .map(|(_, m)| m)
-                                        .unwrap_or(ShapeMode::Gbps);
-                                    let mut tb = TokenBucket::new(params, mode);
-                                    // Program slightly above the SLO so the
-                                    // measured rate lands ON it.
-                                    tb.set_rate(0, rate * self.planner_cfg.shaping_headroom);
-                                    self.flows[i].shaper = Some(Box::new(tb));
-                                    self.flows[i].mode = mode;
-                                    self.register_status(i, size_hint, Some((rate, mode)));
-                                }
-                                Admission::Reject { .. } => {
-                                    self.flows[i].admitted = false;
-                                }
-                            }
-                        }
-                    }
-                }
-                Mode::HostTsReflex | Mode::HostTsFirecracker => {
-                    // Software rate limiting at the SLO's average rate (§5.1:
-                    // "the average ingress rate can be rate limited on the
-                    // host"; no heterogeneity / contention awareness).
-                    if let Some((rate, mode)) = fs.slo.required_rate() {
-                        let cfg = self.host_cfg.clone().unwrap();
-                        self.flows[i].shaper = Some(Box::new(SoftwareShaper::new(
-                            rate,
-                            mode,
-                            cfg,
-                            self.spec.seed ^ (0x50 + i as u64),
-                        )));
-                        self.flows[i].mode = mode;
-                    }
-                }
-                Mode::HostNoTs | Mode::BypassedPanic => {}
+    // ---- Flow lifecycle (through the control-plane API) -----------------
+
+    /// Register one flow with the control plane: admission control plus
+    /// initial shaper programming. Failure marks the flow rejected (its
+    /// offered traffic is dropped at the interface).
+    fn api_register(&mut self, now: Time, flow: usize) {
+        let fs = &self.spec.flows[flow];
+        let accel_name = if fs.kind == FlowKind::Accel {
+            self.spec.accels[fs.accel].name.to_string()
+        } else {
+            "storage".to_string()
+        };
+        let req = RegisterRequest {
+            flow: fs.id,
+            vm: fs.vm,
+            path: fs.path,
+            accel: fs.accel,
+            accel_name,
+            kind: fs.kind,
+            slo: self.flows[flow].current_slo,
+            size_hint: fs.pattern.sizes.mean().round() as u64,
+        };
+        match self.ctrl.register_flow(&req) {
+            Ok(admitted) => {
+                self.flows[flow].admitted = true;
+                self.install_program(now, flow, admitted.program);
+            }
+            Err(_) => {
+                self.flows[flow].admitted = false;
+            }
+        }
+        // Counter baseline: the first measured window must span the flow's
+        // own lifetime, not the pre-arrival era.
+        self.flows[flow].last_tick = now;
+        self.flows[flow].last_bytes = self.metrics[flow].bytes;
+        self.flows[flow].last_ops = self.metrics[flow].completed;
+        // A returning tenant that had renegotiated re-anchors its contract
+        // era too — the silent departed gap must not dilute attainment.
+        if self.flows[flow].contract_start > 0 {
+            self.flows[flow].contract_start = now.max(1);
+            self.flows[flow].contract_base_bytes = self.metrics[flow].bytes;
+            self.flows[flow].contract_base_ops = self.metrics[flow].completed;
+        }
+        self.flows[flow].arrived_at = now;
+    }
+
+    /// Program the interface hardware (or host limiter) a control-plane
+    /// response asked for.
+    fn install_program(&mut self, now: Time, flow: usize, program: ShaperProgram) {
+        match program {
+            ShaperProgram::Unshaped => {
+                self.flows[flow].shaper = None;
+            }
+            ShaperProgram::TokenBucket { params, rate, mode } => {
+                let mut tb = TokenBucket::new(params, mode);
+                tb.set_rate(now, rate);
+                self.flows[flow].shaper = Some(Box::new(tb));
+                self.flows[flow].mode = mode;
+            }
+            ShaperProgram::Software { rate, mode } => {
+                // Software rate limiting at the SLO's average rate (§5.1:
+                // "the average ingress rate can be rate limited on the
+                // host"); the engine supplies its CPU-interference model.
+                let cfg = self
+                    .host_cfg
+                    .clone()
+                    .unwrap_or_else(SoftwareShaperConfig::reflex);
+                self.flows[flow].shaper = Some(Box::new(SoftwareShaper::new(
+                    rate,
+                    mode,
+                    cfg,
+                    self.spec.seed ^ (0x50 + flow as u64),
+                )));
+                self.flows[flow].mode = mode;
             }
         }
     }
 
-    fn register_status(&mut self, i: usize, size_hint: u64, committed: Option<(f64, ShapeMode)>) {
-        let fs = &self.spec.flows[i];
-        let accel_name = if fs.kind == FlowKind::Accel {
-            self.spec.accels[fs.accel].name
-        } else {
-            "storage"
-        };
-        let mut row =
-            FlowStatus::new(fs.id, fs.vm, fs.path, fs.accel, accel_name, fs.slo, size_hint);
-        if let Some((rate, _)) = committed {
-            row.shaped_rate = Some(rate);
+    /// A lifecycle `Arrive` fires: register with the control plane, then
+    /// start the flow's traffic from now on (pre-arrival epochs of the
+    /// deterministic generator are skipped, not replayed).
+    fn ev_flow_arrives(&mut self, sim: &mut Sim<World>, flow: usize) {
+        let now = sim.now();
+        // A tenant may return after departing: re-arrival clears the
+        // departed state so its traffic flows again, and re-registers
+        // (re-facing admission control) since the departure released the
+        // row. A duplicate Arrive while still registered is a no-op.
+        self.flows[flow].departed_at = None;
+        if self.ctrl.query_status(flow).is_none() {
+            self.api_register(now, flow);
         }
-        self.status.register(row);
+        if !self.flows[flow].arrival_pending {
+            self.activate_arrivals(sim, flow);
+        }
     }
 
-    /// Headroom available to an opportunistic flow on its accelerator.
-    fn opportunistic_rate(&self, i: usize) -> f64 {
-        let fs = &self.spec.flows[i];
-        let accel_name = self.spec.accels[fs.accel].name;
-        let size = fs.pattern.sizes.mean().round() as u64;
-        let n = self.status.flows_on_accel(fs.accel).len().max(1);
-        let cap = self
-            .profile
-            .capacity(accel_name, fs.path, size, n)
-            .map(|e| e.capacity.as_bits_per_sec() / 8.0)
-            .unwrap_or(0.0);
-        let committed = self.status.committed_rate(fs.accel);
-        (cap * (1.0 - self.planner_cfg.admission_headroom) - committed).max(cap * 0.02)
+    /// A lifecycle `Depart` fires: deregister (releasing committed
+    /// capacity), stop the generator, and drain the interface state.
+    fn ev_flow_departs(&mut self, sim: &mut Sim<World>, flow: usize) {
+        let _ = self.ctrl.deregister_flow(flow);
+        let now = sim.now();
+        self.flows[flow].departed_at = Some(now);
+        self.flows[flow].shaper = None;
+        self.flows[flow].queue.clear();
+    }
+
+    /// A lifecycle `Renegotiate` fires: ask the control plane for a new
+    /// contract. Acceptance reprograms the shaper after the reconfiguration
+    /// latency; rejection keeps the old SLO in force.
+    fn ev_renegotiate(&mut self, sim: &mut Sim<World>, flow: usize, slo: Slo) {
+        if self.flows[flow].departed_at.is_some() || !self.flows[flow].admitted {
+            return;
+        }
+        match self.ctrl.update_slo(flow, slo) {
+            Ok(admitted) => {
+                self.flows[flow].current_slo = slo;
+                // The new contract's attainment era starts at the decision
+                // (the ~10 µs apply skew is negligible, and anchoring here
+                // guarantees the era exists even when the run — or the
+                // flow — ends inside the reconfiguration window).
+                let now = sim.now();
+                self.flows[flow].contract_start = now.max(1);
+                self.flows[flow].contract_base_bytes = self.metrics[flow].bytes;
+                self.flows[flow].contract_base_ops = self.metrics[flow].completed;
+                let program = admitted.program;
+                sim.after(self.spec.reconfig_latency, move |w, s| {
+                    if w.flows[flow].departed_at.is_some() {
+                        return; // departed inside the reconfig window
+                    }
+                    let t = s.now();
+                    w.install_program(t, flow, program);
+                    w.flows[flow].reconfigs += 1;
+                    w.kick_fetch(s, flow, t);
+                });
+            }
+            Err(ApiError::AdmissionRejected { .. }) => {
+                self.flows[flow].renegotiations_rejected += 1;
+            }
+            // UnknownFlow / ordering errors (e.g. renegotiating before the
+            // flow's Arrive event) are not capacity rejections.
+            Err(_) => {}
+        }
+    }
+
+    /// Schedule the flow's first arrival at or after `now`, skipping any
+    /// generator epochs before it.
+    fn activate_arrivals(&mut self, sim: &mut Sim<World>, flow: usize) {
+        let now = sim.now();
+        loop {
+            let a = self.flows[flow].gen.next();
+            if a.at >= self.spec.duration {
+                return;
+            }
+            if a.at >= now {
+                let bytes = a.bytes;
+                self.flows[flow].arrival_pending = true;
+                sim.at(a.at, move |w, s| w.inject(s, flow, bytes));
+                return;
+            }
+        }
     }
 
     // ---- Arrivals --------------------------------------------------------
@@ -399,12 +474,17 @@ impl World {
             return;
         }
         let bytes = a.bytes;
+        self.flows[flow].arrival_pending = true;
         sim.at(a.at.max(sim.now()), move |w, s| w.inject(s, flow, bytes));
     }
 
     /// A message enters the system at `now`.
     fn inject(&mut self, sim: &mut Sim<World>, flow: usize, bytes: u64) {
         EV_ARRIVE.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.flows[flow].arrival_pending = false;
+        if self.flows[flow].departed_at.is_some() {
+            return; // departed: the VM stopped submitting (chain ends here)
+        }
         let now = sim.now();
         self.schedule_next_arrival(sim, flow);
         if !self.flows[flow].admitted {
@@ -823,12 +903,17 @@ impl World {
 
     // ---- Control plane ----------------------------------------------------
 
-    /// One tick of Algorithm 1 (Arcus only).
+    /// One tick of Algorithm 1 (control planes that need ticks only): read
+    /// the hardware counters into per-flow windows, hand them to the
+    /// control plane, and apply the resulting directives after the
+    /// reconfiguration latency (~10 µs of MMIO round trips, §5.3.1) —
+    /// without interrupting dataplane operation.
     fn ev_control_tick(&mut self, sim: &mut Sim<World>) {
         let now = sim.now();
         // 1. Refresh measured windows from the "hardware counters".
+        let mut windows: Vec<(usize, MeasuredWindow)> = Vec::new();
         for i in 0..self.flows.len() {
-            if self.status.get(i).is_none() {
+            if self.ctrl.query_status(i).is_none() {
                 continue;
             }
             let m = &self.metrics[i];
@@ -846,83 +931,29 @@ impl World {
             self.flows[i].last_bytes = m.bytes;
             self.flows[i].last_ops = m.completed;
             self.flows[i].last_tick = now;
-            self.status
-                .record_window(i, MeasuredWindow { span, bytes, ops, p99_latency: p99 });
+            windows.push((i, MeasuredWindow { span, bytes, ops, p99_latency: p99 }));
         }
-        // 2. Plan.
-        let actions = planner::run_tick(
-            &self.planner_cfg,
-            &self.profile,
-            &self.acc_table,
-            &self.status,
-        );
-        // 3. Apply after the reconfiguration latency (~10 µs of MMIO round
-        //    trips, §5.3.1), without interrupting dataplane operation.
+        // 2. Plan through the API; 3. apply with the MMIO latency.
+        let directives = self.ctrl.tick(now, &windows);
         let delay = self.spec.reconfig_latency;
-        for a in actions {
-            sim.after(delay, move |w, s| w.apply_action(s, a));
-        }
-        // 4. Refresh opportunistic flows (§6's no-guarantee class): back off
-        //    multiplicatively whenever a committed flow on the same engine
-        //    is violating (the harvest must never cost an SLO), otherwise
-        //    creep back up toward the profiled headroom.
-        let mut accel_violated = vec![false; self.accels.len()];
-        for row in self.status.iter() {
-            if row.state == crate::coordinator::status::SloState::Violating
-                && row.violations >= self.planner_cfg.reshape_after
-                && !matches!(row.slo, Slo::BestEffort)
-            {
-                if let Some(v) = accel_violated.get_mut(row.accel) {
-                    *v = true;
-                }
-            }
-        }
-        for i in 0..self.flows.len() {
-            if matches!(self.spec.flows[i].slo, Slo::BestEffort)
-                && self.flows[i].shaper.is_some()
-            {
-                let headroom = self.opportunistic_rate(i);
-                let violated = accel_violated
-                    .get(self.spec.flows[i].accel)
-                    .copied()
-                    .unwrap_or(false);
-                if let Some(s) = &mut self.flows[i].shaper {
-                    let current = s.rate();
-                    let target = if violated {
-                        (current * 0.6).max(headroom * 0.02)
-                    } else {
-                        (current * 1.10).min(headroom)
-                    };
-                    if (current - target).abs() / current.max(1.0) > 0.02 {
-                        s.set_rate(now, target.max(1.0));
-                        self.flows[i].reconfigs += 1;
-                    }
-                }
-            }
+        for d in directives {
+            sim.after(delay, move |w, s| w.apply_directive(s, d));
         }
     }
 
-    fn apply_action(&mut self, sim: &mut Sim<World>, a: planner::Action) {
+    /// Apply one control-plane directive to the hardware.
+    fn apply_directive(&mut self, sim: &mut Sim<World>, d: Directive) {
         let now = sim.now();
-        match a {
-            planner::Action::Reshape { flow, rate, params } => {
+        match d {
+            Directive::SetRate { flow, rate } => {
                 if let Some(s) = &mut self.flows[flow].shaper {
                     s.set_rate(now, rate);
                     self.flows[flow].reconfigs += 1;
                 }
-                if let Some(row) = self.status.get_mut(flow) {
-                    row.shaped_rate = Some(rate);
-                    row.params = Some(params);
-                    row.reconfigs += 1;
-                }
                 self.kick_fetch(sim, flow, now);
             }
-            planner::Action::SwitchPath { flow, to } => {
+            Directive::SwitchPath { flow, to } => {
                 self.flows[flow].path = to;
-                if let Some(row) = self.status.get_mut(flow) {
-                    row.path = to;
-                    row.reconfigs += 1;
-                }
                 self.flows[flow].reconfigs += 1;
                 self.kick_fetch(sim, flow, now);
             }
@@ -939,15 +970,58 @@ pub struct Engine {
 impl Engine {
     pub fn new(spec: ExperimentSpec) -> Self {
         let mut world = World::new(spec);
-        world.register_flows();
         let mut sim = Sim::new();
-        // Seed the first arrival of every flow.
-        for i in 0..world.flows.len() {
-            world.schedule_next_arrival(&mut sim, i);
+        let n = world.flows.len();
+        // A flow is present from t = 0 unless its *earliest* lifecycle
+        // event is an Arrive (it joins later). Initially-present flows
+        // register through the control plane in id order (the legacy
+        // admission sequence) before any sim event fires.
+        let present: Vec<bool> = (0..n)
+            .map(|i| {
+                world
+                    .spec
+                    .lifecycle
+                    .iter()
+                    .filter(|e| e.flow() == i)
+                    .min_by_key(|e| e.at())
+                    .map(|e| !matches!(e, LifecycleEvent::Arrive { .. }))
+                    .unwrap_or(true)
+            })
+            .collect();
+        for i in 0..n {
+            if present[i] {
+                world.api_register(0, i);
+            }
+        }
+        for i in 0..n {
+            if present[i] {
+                world.activate_arrivals(&mut sim, i);
+            }
+        }
+        // Every lifecycle event is scheduled — including repeat Arrives
+        // (a tenant returning after a departure re-faces admission).
+        for e in &world.spec.lifecycle {
+            debug_assert!(
+                e.flow() < n,
+                "lifecycle event for unknown flow {} (spec has {n} flows)",
+                e.flow()
+            );
+            match *e {
+                LifecycleEvent::Arrive { flow, at } if flow < n => {
+                    sim.at(at, move |w, s| w.ev_flow_arrives(s, flow));
+                }
+                LifecycleEvent::Depart { flow, at } if flow < n => {
+                    sim.at(at, move |w, s| w.ev_flow_departs(s, flow));
+                }
+                LifecycleEvent::Renegotiate { flow, at, slo } if flow < n => {
+                    sim.at(at, move |w, s| w.ev_renegotiate(s, flow, slo));
+                }
+                _ => {}
+            }
         }
         // Control-plane ticker (Algorithm 1 "run by every client server
-        // periodically"); Arcus only.
-        if world.spec.mode == Mode::Arcus {
+        // periodically"); only control planes that plan online need it.
+        if world.ctrl.needs_ticks() {
             let period = world.spec.control_period;
             crate::sim::every(&mut sim, period, |w: &mut World, s| {
                 w.ev_control_tick(s);
@@ -971,16 +1045,42 @@ impl Engine {
             .iter()
             .enumerate()
             .map(|(i, f)| {
-                FlowReport::from_metrics(
+                let mut r = FlowReport::from_metrics(
                     f.id,
                     f.vm,
-                    f.slo,
+                    w.flows[i].current_slo,
                     !w.flows[i].admitted,
                     &w.metrics[i],
                     w.samplers[i].clone(),
                     w.flows[i].reconfigs,
                     w.traces[i].clone(),
-                )
+                );
+                r.arrived_at = w.flows[i].arrived_at;
+                r.departed_at = w.flows[i].departed_at;
+                r.renegotiations_rejected = w.flows[i].renegotiations_rejected;
+                // Attainment era for renegotiated flows: from the moment
+                // the new contract's shaper took effect.
+                if w.flows[i].contract_start > 0 {
+                    let m = &w.metrics[i];
+                    if let Some(last) = m.last_completion {
+                        // Metrics only accrue post-warmup: a contract
+                        // agreed before warmup must not count the silent
+                        // prefix against itself.
+                        let start = w.flows[i].contract_start.max(w.spec.warmup);
+                        let era = last.saturating_sub(start);
+                        if era > 0 {
+                            let bytes = m.bytes - w.flows[i].contract_base_bytes;
+                            let ops = m.completed - w.flows[i].contract_base_ops;
+                            r.contract_goodput =
+                                Some(crate::util::units::throughput(bytes, era));
+                            r.contract_iops = Some(
+                                ops as f64 * crate::util::units::SECONDS as f64
+                                    / era as f64,
+                            );
+                        }
+                    }
+                }
+                r
             })
             .collect();
         use crate::pcie::link::Dir;
@@ -1239,6 +1339,111 @@ mod tests {
             assert_eq!(x.bytes, y.bytes);
             assert_eq!(x.lat_p99, y.lat_p99);
         }
+    }
+
+    #[test]
+    fn departed_flow_stops_completing_and_releases_capacity() {
+        // Flow 0 departs at 1.5 ms; its completions must stop shortly after
+        // and flow 1 keeps meeting its SLO.
+        let mut spec = two_flow_spec(Mode::Arcus, 0.5, 0.5);
+        spec = spec
+            .with_duration(6 * MILLIS)
+            .with_warmup(MILLIS / 2)
+            .with_event(LifecycleEvent::Depart { flow: 0, at: 3 * MILLIS })
+            .with_trace();
+        let report = run(&spec);
+        let last0 = report.per_flow[0]
+            .trace
+            .iter()
+            .map(|&(at, _, _)| at)
+            .max()
+            .unwrap_or(0);
+        assert!(
+            last0 < 3 * MILLIS + MILLIS / 2,
+            "flow 0 still completing at {last0} after departing at 3 ms"
+        );
+        assert_eq!(report.per_flow[0].departed_at, Some(3 * MILLIS));
+        assert!(report.per_flow[1].departed_at.is_none());
+        let a1 = report.per_flow[1].goodput.as_gbps();
+        assert!((a1 - 12.0).abs() / 12.0 < 0.08, "flow1 {a1:.2} Gbps");
+    }
+
+    #[test]
+    fn tenant_re_arrival_after_departure_resumes_traffic() {
+        // Flow 0 runs from t = 0 (its earliest event is a Depart), leaves
+        // at 3 ms, and returns at 5 ms — re-facing admission and flowing
+        // again, with silence in between.
+        let mut spec = two_flow_spec(Mode::Arcus, 0.5, 0.5);
+        spec = spec
+            .with_duration(9 * MILLIS)
+            .with_warmup(MILLIS / 2)
+            .with_event(LifecycleEvent::Depart { flow: 0, at: 3 * MILLIS })
+            .with_event(LifecycleEvent::Arrive { flow: 0, at: 5 * MILLIS })
+            .with_trace();
+        let r = run(&spec);
+        let f0 = &r.per_flow[0];
+        assert!(!f0.rejected);
+        assert_eq!(f0.arrived_at, 5 * MILLIS, "re-registration time recorded");
+        assert!(f0.departed_at.is_none(), "re-arrival clears the departure");
+        let gap = f0
+            .trace
+            .iter()
+            .filter(|&&(at, _, _)| at >= 3 * MILLIS + MILLIS / 2 && at < 5 * MILLIS)
+            .count();
+        assert_eq!(gap, 0, "no completions while departed");
+        let tail = f0.trace.iter().filter(|&&(at, _, _)| at >= 6 * MILLIS).count();
+        assert!(tail > 1000, "traffic resumed after re-arrival: {tail}");
+    }
+
+    #[test]
+    fn renegotiated_slo_reshapes_flow_mid_run() {
+        // Flow 0 (10 G) renegotiates to 12 G halfway (12 + 12 fits under
+        // the ~24.6 G budget); post-renegotiation completions must run near
+        // the new target, and the report carries the new SLO.
+        let mut spec = two_flow_spec(Mode::Arcus, 0.6, 0.5);
+        spec = spec
+            .with_duration(8 * MILLIS)
+            .with_warmup(MILLIS)
+            .with_event(LifecycleEvent::Renegotiate {
+                flow: 0,
+                at: 4 * MILLIS,
+                slo: Slo::gbps(12.0),
+            })
+            .with_trace();
+        let report = run(&spec);
+        assert_eq!(report.per_flow[0].slo, Slo::gbps(12.0));
+        assert_eq!(report.per_flow[0].renegotiations_rejected, 0);
+        // Rate over the final 3 ms (well past the reconfig latency).
+        let tail_bytes: u64 = report.per_flow[0]
+            .trace
+            .iter()
+            .filter(|&&(at, _, _)| at >= 5 * MILLIS)
+            .map(|&(_, _, b)| b)
+            .sum();
+        let tail_gbps = tail_bytes as f64 * 8.0 / (3 * MILLIS) as f64 * 1e3;
+        assert!(
+            (tail_gbps - 12.0).abs() / 12.0 < 0.1,
+            "post-renegotiation rate {tail_gbps:.2} Gbps"
+        );
+        // Attainment judges the new contract over its own era, not the
+        // mixed lifetime (which would read ≈0.9 here and look violating).
+        let att = report.per_flow[0].slo_attainment().unwrap();
+        assert!((att - 1.0).abs() < 0.08, "contract-era attainment {att:.3}");
+    }
+
+    #[test]
+    fn over_capacity_renegotiation_is_rejected_and_old_slo_kept() {
+        let mut spec = two_flow_spec(Mode::Arcus, 0.5, 0.5);
+        spec = spec.with_duration(6 * MILLIS).with_event(LifecycleEvent::Renegotiate {
+            flow: 0,
+            at: 3 * MILLIS,
+            slo: Slo::gbps(30.0), // 30 + 12 >> ~26 G capacity
+        });
+        let report = run(&spec);
+        assert_eq!(report.per_flow[0].slo, Slo::gbps(10.0), "old SLO kept");
+        assert_eq!(report.per_flow[0].renegotiations_rejected, 1);
+        let a0 = report.per_flow[0].goodput.as_gbps();
+        assert!((a0 - 10.0).abs() / 10.0 < 0.08, "flow0 {a0:.2} Gbps");
     }
 
     #[test]

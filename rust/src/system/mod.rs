@@ -13,4 +13,4 @@ pub mod spec;
 
 pub use engine::{run, Engine};
 pub use report::{FlowReport, SystemReport};
-pub use spec::{ExperimentSpec, Mode, RaidSpec};
+pub use spec::{ExperimentSpec, LifecycleEvent, Mode, RaidSpec};

@@ -28,12 +28,26 @@ pub struct FlowReport {
     pub sampler: ThroughputSampler,
     /// Reconfigurations the control plane applied to this flow.
     pub reconfigs: u32,
+    /// Virtual time the flow arrived (0 unless a lifecycle schedule
+    /// delayed it).
+    pub arrived_at: Time,
+    /// Virtual time the flow departed, if it deregistered mid-run.
+    pub departed_at: Option<Time>,
+    /// SLO renegotiations rejected by capacity planning.
+    pub renegotiations_rejected: u32,
+    /// Goodput measured over the *current SLO contract's* era only — set
+    /// after an accepted mid-run renegotiation so attainment judges the
+    /// new target against traffic shaped under it, not the mixed lifetime.
+    pub contract_goodput: Option<Rate>,
+    /// IOPS over the current contract's era (see `contract_goodput`).
+    pub contract_iops: Option<f64>,
     /// Optional completion trace: (completion time, latency, bytes), for
     /// time-series plots (Fig 9).
     pub trace: Vec<(Time, Time, u64)>,
 }
 
 impl FlowReport {
+    #[allow(clippy::too_many_arguments)]
     pub fn from_metrics(
         flow: usize,
         vm: usize,
@@ -61,15 +75,26 @@ impl FlowReport {
             lat_mean: m.latency.mean(),
             sampler,
             reconfigs,
+            arrived_at: 0,
+            departed_at: None,
+            renegotiations_rejected: 0,
+            contract_goodput: None,
+            contract_iops: None,
             trace,
         }
     }
 
-    /// Achieved / SLO-target ratio (1.0 = exactly the SLO).
+    /// Achieved / SLO-target ratio (1.0 = exactly the SLO). For flows that
+    /// renegotiated mid-run, the achieved rate is measured over the current
+    /// contract's era only.
     pub fn slo_attainment(&self) -> Option<f64> {
         match self.slo {
-            Slo::Throughput { target, .. } => Some(self.goodput.0 / target.0),
-            Slo::Iops { target, .. } => Some(self.iops / target),
+            Slo::Throughput { target, .. } => {
+                Some(self.contract_goodput.unwrap_or(self.goodput).0 / target.0)
+            }
+            Slo::Iops { target, .. } => {
+                Some(self.contract_iops.unwrap_or(self.iops) / target)
+            }
             Slo::Latency { max_ps, .. } => {
                 // Attainment >= 1 means meeting: invert so that 1.0 = at bound.
                 Some(max_ps as f64 / self.lat_p99.max(1) as f64)
@@ -151,7 +176,7 @@ impl SystemReport {
                 "{:>4} {:>2} {:>10} {:>9.0} {:>9.2}us {:>9.2}us {:>9.2}us {:>6} {:>5.2}\n",
                 f.flow,
                 f.vm,
-                format!("{}", f.goodput),
+                f.goodput.to_string(),
                 f.iops,
                 f.lat_p50 as f64 / MICROS as f64,
                 f.lat_p99 as f64 / MICROS as f64,

@@ -1,8 +1,9 @@
 //! Experiment specification: which management architecture, which devices,
-//! which flows — the typed form of an experiment config file.
+//! which flows, and the flow-lifecycle schedule — the typed form of an
+//! experiment config file.
 
 use crate::accel::AccelModel;
-use crate::flow::FlowSpec;
+use crate::flow::{FlowSpec, Slo};
 use crate::pcie::fabric::FabricConfig;
 use crate::storage::nvme::SsdConfig;
 use crate::util::units::{Rate, Time, MICROS, MILLIS};
@@ -24,6 +25,15 @@ pub enum Mode {
 }
 
 impl Mode {
+    /// Every management architecture, in presentation order.
+    pub const ALL: [Mode; 5] = [
+        Mode::Arcus,
+        Mode::HostNoTs,
+        Mode::HostTsReflex,
+        Mode::HostTsFirecracker,
+        Mode::BypassedPanic,
+    ];
+
     pub fn name(self) -> &'static str {
         match self {
             Mode::Arcus => "arcus",
@@ -45,9 +55,53 @@ impl Mode {
         })
     }
 
+    /// Parse a mode name, or explain which names are valid — CLI and config
+    /// errors must name the menu, not just shrug.
+    pub fn parse(s: &str) -> Result<Mode, String> {
+        Mode::by_name(s).ok_or_else(|| {
+            let valid: Vec<&str> = Mode::ALL.iter().map(|m| m.name()).collect();
+            format!("unknown mode `{s}` (valid modes: {})", valid.join(", "))
+        })
+    }
+
     /// Does this architecture interpose host software on the data path?
     pub fn host_interposed(self) -> bool {
         matches!(self, Mode::HostTsReflex | Mode::HostTsFirecracker)
+    }
+}
+
+/// One scheduled flow-lifecycle event (tenant churn / SLO renegotiation —
+/// the paper's Scenarios 1–2, §4.3). Flows without an `Arrive` event are
+/// registered at t = 0, so an empty schedule reproduces the legacy
+/// fixed-roster experiment exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LifecycleEvent {
+    /// The flow registers (admission control) and starts offering traffic
+    /// at `at` instead of t = 0.
+    Arrive { flow: usize, at: Time },
+    /// The flow deregisters at `at`, releasing its committed capacity for
+    /// later arrivals or renegotiations to claim.
+    Depart { flow: usize, at: Time },
+    /// The flow renegotiates its SLO at `at`; on rejection the old SLO
+    /// stays in force.
+    Renegotiate { flow: usize, at: Time, slo: Slo },
+}
+
+impl LifecycleEvent {
+    pub fn flow(&self) -> usize {
+        match *self {
+            LifecycleEvent::Arrive { flow, .. }
+            | LifecycleEvent::Depart { flow, .. }
+            | LifecycleEvent::Renegotiate { flow, .. } => flow,
+        }
+    }
+
+    pub fn at(&self) -> Time {
+        match *self {
+            LifecycleEvent::Arrive { at, .. }
+            | LifecycleEvent::Depart { at, .. }
+            | LifecycleEvent::Renegotiate { at, .. } => at,
+        }
     }
 }
 
@@ -84,6 +138,9 @@ pub struct ExperimentSpec {
     /// Put every inline flow on NIC port 0 (bump-in-the-wire sharing, Fig 9
     /// / Fig 11a); default spreads flows across the two ports.
     pub shared_port: bool,
+    /// Flow-lifecycle schedule: arrivals, departures, and SLO
+    /// renegotiations (empty = every flow present for the whole run).
+    pub lifecycle: Vec<LifecycleEvent>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -112,6 +169,36 @@ impl ExperimentSpec {
             fetch_pipeline: 16,
             trace: false,
             shared_port: false,
+            lifecycle: Vec::new(),
+        }
+    }
+
+    /// Replace the flow-lifecycle schedule.
+    pub fn with_lifecycle(mut self, events: Vec<LifecycleEvent>) -> Self {
+        self.lifecycle = events;
+        self
+    }
+
+    /// Append one lifecycle event.
+    pub fn with_event(mut self, event: LifecycleEvent) -> Self {
+        self.lifecycle.push(event);
+        self
+    }
+
+    /// The time a flow first arrives (registers and starts offering
+    /// traffic). A flow is present from t = 0 unless its *earliest*
+    /// lifecycle event is an `Arrive` — a flow whose first event is a
+    /// `Depart` or `Renegotiate` must have been running already; later
+    /// `Arrive` events are re-arrivals after a departure.
+    pub fn arrival_time(&self, flow: usize) -> Time {
+        match self
+            .lifecycle
+            .iter()
+            .filter(|e| e.flow() == flow)
+            .min_by_key(|e| e.at())
+        {
+            Some(LifecycleEvent::Arrive { at, .. }) => *at,
+            _ => 0,
         }
     }
 
@@ -149,16 +236,35 @@ mod tests {
 
     #[test]
     fn mode_name_roundtrip() {
-        for m in [
-            Mode::Arcus,
-            Mode::HostNoTs,
-            Mode::HostTsReflex,
-            Mode::HostTsFirecracker,
-            Mode::BypassedPanic,
-        ] {
+        for m in Mode::ALL {
             assert_eq!(Mode::by_name(m.name()), Some(m));
+            assert_eq!(Mode::parse(m.name()), Ok(m));
         }
         assert!(Mode::by_name("nope").is_none());
+        let err = Mode::parse("nope").unwrap_err();
+        assert!(err.contains("unknown mode `nope`"), "{err}");
+        // The error lists every valid mode name.
+        for m in Mode::ALL {
+            assert!(err.contains(m.name()), "{err} missing {}", m.name());
+        }
+    }
+
+    #[test]
+    fn lifecycle_schedule_accessors() {
+        use crate::flow::Slo;
+        let spec = ExperimentSpec::new(Mode::Arcus, vec![], vec![])
+            .with_event(LifecycleEvent::Arrive { flow: 2, at: 3 * MILLIS })
+            .with_event(LifecycleEvent::Depart { flow: 0, at: 5 * MILLIS })
+            .with_event(LifecycleEvent::Renegotiate {
+                flow: 1,
+                at: 7 * MILLIS,
+                slo: Slo::gbps(4.0),
+            });
+        assert_eq!(spec.lifecycle.len(), 3);
+        assert_eq!(spec.arrival_time(2), 3 * MILLIS);
+        assert_eq!(spec.arrival_time(0), 0, "no Arrive event means t = 0");
+        assert_eq!(spec.lifecycle[1].flow(), 0);
+        assert_eq!(spec.lifecycle[2].at(), 7 * MILLIS);
     }
 
     #[test]

@@ -1,0 +1,183 @@
+//! Churn integration: the acceptance contract for the control-plane API.
+//!
+//! - A flow arriving mid-run is admitted or rejected per Algorithm 1,
+//!   reached only through the `ControlPlane` trait (the engine holds no
+//!   coordinator tables).
+//! - Departures release committed capacity that later arrivals claim.
+//! - Static (no-churn) sweep cells are unaffected by the churn axis: same
+//!   labels, same seeds, same per-flow results, byte-identical aggregate
+//!   tables.
+
+use arcus::accel::AccelModel;
+use arcus::flow::pattern::Burstiness;
+use arcus::flow::{FlowSpec, Path, Slo, TrafficPattern};
+use arcus::sweep::{aggregate, Churn, GridBase, SizeMix, SweepGrid, SweepRunner};
+use arcus::system::{run, ExperimentSpec, LifecycleEvent, Mode};
+use arcus::util::units::{Rate, MILLIS};
+
+fn flow(id: usize, slo_gbps: f64, load: f64) -> FlowSpec {
+    FlowSpec::new(
+        id,
+        id,
+        Path::FunctionCall,
+        TrafficPattern::fixed(1500, load, Rate::gbps(32.0)),
+        Slo::gbps(slo_gbps),
+        0,
+    )
+}
+
+fn base(flows: Vec<FlowSpec>) -> ExperimentSpec {
+    ExperimentSpec::new(Mode::Arcus, vec![AccelModel::ipsec_32g()], flows)
+        .with_duration(10 * MILLIS)
+        .with_warmup(MILLIS)
+}
+
+/// Mid-run arrival within leftover capacity: admitted, runs at its SLO,
+/// and the incumbents' attainment holds.
+#[test]
+fn mid_run_arrival_admitted_within_capacity() {
+    let spec = base(vec![flow(0, 9.0, 0.4), flow(1, 8.0, 0.4), flow(2, 6.0, 0.4)])
+        .with_event(LifecycleEvent::Arrive { flow: 2, at: 4 * MILLIS });
+    let r = run(&spec);
+    let late = &r.per_flow[2];
+    assert!(!late.rejected, "9 + 8 + 6 fits the ~24.6 G budget");
+    assert_eq!(late.arrived_at, 4 * MILLIS);
+    assert!(late.completed > 1000, "late flow completed {}", late.completed);
+    // Goodput is measured first-to-last completion, so the late arrival is
+    // judged over its own lifetime.
+    let g = late.goodput.as_gbps();
+    assert!((g - 6.0).abs() / 6.0 < 0.1, "late flow {g:.2} Gbps");
+    for f in &r.per_flow[..2] {
+        let att = f.slo_attainment().unwrap();
+        assert!(att > 0.93, "incumbent {} attainment {att:.3}", f.flow);
+    }
+}
+
+/// Mid-run arrival beyond leftover capacity: rejected, zero completions,
+/// incumbents untouched.
+#[test]
+fn mid_run_arrival_rejected_over_capacity() {
+    let spec = base(vec![flow(0, 9.0, 0.4), flow(1, 8.0, 0.4), flow(2, 10.0, 0.4)])
+        .with_event(LifecycleEvent::Arrive { flow: 2, at: 4 * MILLIS });
+    let r = run(&spec);
+    assert!(r.per_flow[2].rejected, "9 + 8 + 10 exceeds the budget");
+    assert_eq!(r.per_flow[2].completed, 0);
+    for f in &r.per_flow[..2] {
+        let att = f.slo_attainment().unwrap();
+        assert!(att > 0.93, "incumbent {} attainment {att:.3}", f.flow);
+    }
+}
+
+/// A departure releases committed capacity; the identical later arrival
+/// that is inadmissible without the departure is admitted with it.
+#[test]
+fn departure_releases_capacity_for_later_arrival() {
+    let roster = || vec![flow(0, 10.0, 0.4), flow(1, 10.0, 0.4), flow(2, 10.0, 0.4)];
+    // Without the departure: 10 + 10 committed, +10 requested → rejected.
+    let without = base(roster())
+        .with_event(LifecycleEvent::Arrive { flow: 2, at: 6 * MILLIS });
+    let r = run(&without);
+    assert!(r.per_flow[2].rejected, "control: arrival must fail while flow 0 holds 10 G");
+    // With flow 0 departing first, the same arrival is admitted.
+    let with = base(roster())
+        .with_event(LifecycleEvent::Depart { flow: 0, at: 4 * MILLIS })
+        .with_event(LifecycleEvent::Arrive { flow: 2, at: 6 * MILLIS });
+    let r = run(&with);
+    assert_eq!(r.per_flow[0].departed_at, Some(4 * MILLIS));
+    assert!(!r.per_flow[2].rejected, "freed capacity admits the arrival");
+    let g = r.per_flow[2].goodput.as_gbps();
+    assert!((g - 10.0).abs() / 10.0 < 0.1, "late flow {g:.2} Gbps");
+    // The survivor incumbent held its SLO across both transitions.
+    assert!(r.per_flow[1].slo_attainment().unwrap() > 0.93);
+}
+
+/// The churn axis leaves static cells untouched: per-flow results and the
+/// aggregate tables of the static subset match a legacy (churn-free) grid
+/// byte for byte.
+#[test]
+fn static_cells_unchanged_by_churn_axis() {
+    let grid = |churn: Vec<Churn>| {
+        SweepGrid::new(GridBase {
+            duration: 2 * MILLIS,
+            warmup: MILLIS / 2,
+            line_rate: Rate::gbps(32.0),
+            load: 0.9,
+            path: Path::FunctionCall,
+            seed: 11,
+        })
+        .modes(vec![Mode::Arcus, Mode::HostNoTs])
+        .tenants(vec![1, 2])
+        .mixes(vec![SizeMix::Mtu])
+        .bursts(vec![Burstiness::Paced, Burstiness::Poisson])
+        .tightness(vec![0.7])
+        .churn(churn)
+        .accels(vec![AccelModel::ipsec_32g()])
+        .seeds(vec![1])
+    };
+    let runner = SweepRunner::with_threads(4);
+    let legacy = runner.run(&grid(vec![Churn::Static]));
+    let churned = runner.run(&grid(vec![Churn::Static, Churn::Arrivals, Churn::Departures]));
+    assert_eq!(churned.len(), 3 * legacy.len());
+    // Match static cells by label: identical seeds and per-flow results.
+    for l in &legacy {
+        let c = churned
+            .iter()
+            .find(|c| c.key.label() == l.key.label())
+            .expect("static cell present in the churned grid");
+        assert!(matches!(c.key.churn, Churn::Static));
+        assert_eq!(l.report.per_flow.len(), c.report.per_flow.len());
+        for (x, y) in l.report.per_flow.iter().zip(c.report.per_flow.iter()) {
+            assert_eq!(x.completed, y.completed, "{}", l.key.label());
+            assert_eq!(x.bytes, y.bytes, "{}", l.key.label());
+            assert_eq!(x.lat_p99, y.lat_p99, "{}", l.key.label());
+            assert_eq!(x.dropped, y.dropped, "{}", l.key.label());
+        }
+    }
+    // And the aggregate over the static subset renders byte-identically.
+    let static_subset: Vec<_> = churned
+        .into_iter()
+        .filter(|c| matches!(c.key.churn, Churn::Static))
+        .collect();
+    assert_eq!(aggregate(&legacy).render(), aggregate(&static_subset).render());
+}
+
+/// Churned cells differ from static ones (the axis is live), and every
+/// churned scenario still completes with a sane report.
+#[test]
+fn churn_axis_produces_live_distinct_cells() {
+    let grid = SweepGrid::new(GridBase {
+        duration: 4 * MILLIS,
+        warmup: MILLIS,
+        line_rate: Rate::gbps(32.0),
+        load: 0.9,
+        path: Path::FunctionCall,
+        seed: 3,
+    })
+    .modes(vec![Mode::Arcus])
+    .tenants(vec![4])
+    .mixes(vec![SizeMix::Mtu])
+    .bursts(vec![Burstiness::Paced])
+    .tightness(vec![0.6])
+    .churn(vec![Churn::Static, Churn::Arrivals, Churn::Departures, Churn::Renegotiation, Churn::Mixed])
+    .accels(vec![AccelModel::ipsec_32g()])
+    .seeds(vec![1]);
+    let outcomes = SweepRunner::with_threads(4).run(&grid);
+    assert_eq!(outcomes.len(), 5);
+    for o in &outcomes {
+        let total: u64 = o.report.per_flow.iter().map(|f| f.completed).sum();
+        assert!(total > 1000, "{}: only {total} completions", o.key.label());
+    }
+    let static_total: u64 = outcomes[0].report.per_flow.iter().map(|f| f.completed).sum();
+    let arrivals = &outcomes[1];
+    assert!(arrivals.key.label().contains("arrivals"));
+    let arrivals_total: u64 =
+        arrivals.report.per_flow.iter().map(|f| f.completed).sum();
+    // Late arrivals offer less total traffic than the always-on roster.
+    assert!(
+        arrivals_total < static_total,
+        "arrivals {arrivals_total} !< static {static_total}"
+    );
+    // Departing tenants stop completing.
+    let departures = &outcomes[2];
+    assert!(departures.report.per_flow[0].departed_at.is_some());
+}

@@ -116,7 +116,7 @@ fn mixed_storage_and_accel_flows_coexist() {
         }
     }
     // Storage flows actually used the RAID.
-    assert_eq!(report.per_flow[3].kind_is_storage(), true);
+    assert!(report.per_flow[3].kind_is_storage());
 }
 
 /// Helper lives on the report side: storage flows report IOPS.
