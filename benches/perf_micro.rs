@@ -7,28 +7,154 @@
 //!   timing error handling.
 //! - Reconfiguration: `set_rate` cost (the paper's 10 µs is PCIe MMIO
 //!   round-trips; ours is the register-derivation compute).
-//! - DES throughput: events/second on a reference two-flow experiment —
-//!   the simulator's §Perf headline.
+//! - **Event-core micro**: the boxed-closure event loop (the pre-refactor
+//!   design, reimplemented here as the measured baseline) vs the typed
+//!   zero-allocation core on both queue disciplines — the before/after
+//!   numbers behind the `arcus bench` trajectory.
+//! - DES throughput: events/second on the committed bench presets
+//!   (`arcus bench` emits the same numbers as BENCH_<name>.json).
 //! - Serving-path dispatch: end-to-end request latency through the real
 //!   server at batch sizes 1 and 32.
 
 #[path = "common.rs"]
 mod common;
 
+use std::collections::BinaryHeap;
 use std::time::Instant;
 
-use arcus::accel::AccelModel;
-use arcus::flow::{FlowSpec, Path, Slo, TrafficPattern};
+use arcus::perf::{self, QueueKind};
 use arcus::shaping::{ShapeMode, Shaper, SoftwareShaper, SoftwareShaperConfig, TokenBucket};
-use arcus::system::{run, ExperimentSpec, Mode};
-use arcus::util::units::{Rate, MILLIS};
+use arcus::sim::{BinaryHeapQueue, CalendarQueue, EventQueue, Handler, Sim};
+use arcus::util::units::{Rate, NANOS};
 use common::banner;
+
+// ---------------------------------------------------------------------------
+// Boxed-closure baseline: a faithful miniature of the pre-refactor DES core
+// (`Box<dyn FnOnce>` actions on one binary heap with (time, seq) ordering).
+// Kept here, not in the library, so the baseline stays measurable after the
+// production core moved to typed events.
+// ---------------------------------------------------------------------------
+
+type BoxedAction = Box<dyn FnOnce(&mut BoxedSim)>;
+
+struct BoxedEntry {
+    time: u64,
+    seq: u64,
+    action: BoxedAction,
+}
+
+impl PartialEq for BoxedEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for BoxedEntry {}
+impl PartialOrd for BoxedEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for BoxedEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+#[derive(Default)]
+struct BoxedSim {
+    now: u64,
+    seq: u64,
+    count: u64,
+    queue: BinaryHeap<BoxedEntry>,
+}
+
+impl BoxedSim {
+    fn at(&mut self, time: u64, action: BoxedAction) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(BoxedEntry { time, seq, action });
+    }
+
+    fn run(&mut self) {
+        while let Some(e) = self.queue.pop() {
+            self.now = e.time;
+            (e.action)(self);
+        }
+    }
+}
+
+/// The self-rescheduling chain each boxed event runs: bump the counter and
+/// re-arm until the budget is spent — the minimal shape of the engine's
+/// fetch/wake chains (alloc + virtual dispatch + heap op per event).
+fn boxed_chain(budget: u64) -> BoxedAction {
+    Box::new(move |s: &mut BoxedSim| {
+        s.count += 1;
+        if budget > 0 {
+            // 40-118 ns steps: the engine's event spacing (TLP times,
+            // shaper refill edges), so the calendar queue's wheel — not a
+            // single bucket — is what gets measured.
+            let t = s.now + (40 + (s.count % 7) * 13) * NANOS;
+            s.at(t, boxed_chain(budget - 1));
+        }
+    })
+}
+
+/// Typed-event twin of the boxed chain.
+#[derive(Clone, Copy)]
+enum MicroEv {
+    Chain { budget: u64 },
+}
+
+#[derive(Default)]
+struct MicroWorld {
+    count: u64,
+}
+
+impl Handler<MicroEv> for MicroWorld {
+    fn handle<Q: EventQueue<MicroEv>>(&mut self, sim: &mut Sim<MicroEv, Q>, ev: MicroEv) {
+        match ev {
+            MicroEv::Chain { budget } => {
+                self.count += 1;
+                if budget > 0 {
+                    let t = sim.now() + (40 + (self.count % 7) * 13) * NANOS;
+                    sim.at(t, MicroEv::Chain { budget: budget - 1 });
+                }
+            }
+        }
+    }
+}
+
+/// Events/sec through the boxed-closure baseline core.
+fn run_boxed(chains: u64, budget: u64) -> f64 {
+    let mut sim = BoxedSim::default();
+    for i in 0..chains {
+        sim.at(i, boxed_chain(budget));
+    }
+    let t0 = Instant::now();
+    sim.run();
+    sim.count as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Events/sec through the typed core on queue discipline `Q`.
+fn run_typed<Q: EventQueue<MicroEv> + Default>(chains: u64, budget: u64) -> f64 {
+    let mut sim: Sim<MicroEv, Q> = Sim::new();
+    let mut w = MicroWorld::default();
+    for i in 0..chains {
+        sim.at(i, MicroEv::Chain { budget });
+    }
+    let t0 = Instant::now();
+    sim.run(&mut w, u64::MAX);
+    w.count as f64 / t0.elapsed().as_secs_f64()
+}
 
 fn main() {
     banner("Shaping decision cost (wall-clock per try_acquire)");
     let rate = Rate::gbps(100.0).as_bits_per_sec() / 8.0;
     let mut tb = TokenBucket::for_rate(rate, ShapeMode::Gbps);
-    let n = 5_000_000u64;
+    let n = if common::fast_mode() { 500_000u64 } else { 5_000_000u64 };
     let t0 = Instant::now();
     let mut admitted = 0u64;
     for i in 0..n {
@@ -52,7 +178,7 @@ fn main() {
 
     banner("Reconfiguration (ReshapeDecision → register write)");
     let t0 = Instant::now();
-    let m = 100_000;
+    let m = if common::fast_mode() { 10_000 } else { 100_000 };
     for i in 0..m {
         tb.set_rate(i * 1_000_000, rate * (1.0 + (i % 7) as f64 * 0.01));
     }
@@ -61,22 +187,43 @@ fn main() {
         t0.elapsed().as_micros() as f64 / m as f64
     );
 
-    banner("DES throughput (§Perf L3 target)");
-    let line = Rate::gbps(32.0);
-    let flows = vec![
-        FlowSpec::new(0, 0, Path::FunctionCall, TrafficPattern::fixed(1500, 0.6, line), Slo::gbps(10.0), 0),
-        FlowSpec::new(1, 1, Path::FunctionCall, TrafficPattern::fixed(1500, 0.6, line), Slo::gbps(12.0), 0),
-    ];
-    let spec = ExperimentSpec::new(Mode::Arcus, vec![AccelModel::ipsec_32g()], flows)
-        .with_duration(20 * MILLIS)
-        .with_warmup(2 * MILLIS);
-    let r = run(&spec);
+    banner("Event-core micro: boxed closures vs typed events");
+    let (chains, budget) = if common::fast_mode() { (64, 5_000) } else { (64, 40_000) };
+    let total = chains * (budget + 1);
+    let boxed = run_boxed(chains, budget);
+    let typed_heap = run_typed::<BinaryHeapQueue<MicroEv>>(chains, budget);
+    let typed_cal = run_typed::<CalendarQueue<MicroEv>>(chains, budget);
+    println!("({total} events, {chains} interleaved self-rescheduling chains)");
+    println!("boxed-closure heap (pre-refactor core): {:>8.2} M ev/s", boxed / 1e6);
     println!(
-        "two-flow Arcus reference: {} events in {:.2}s wall = {:.2} M events/s",
-        r.events,
-        r.wall_secs,
-        r.events_per_sec() / 1e6
+        "typed events + binary heap:             {:>8.2} M ev/s   ({:.2}x boxed)",
+        typed_heap / 1e6,
+        typed_heap / boxed
     );
+    println!(
+        "typed events + calendar queue:          {:>8.2} M ev/s   ({:.2}x boxed)",
+        typed_cal / 1e6,
+        typed_cal / boxed
+    );
+
+    banner("DES throughput on the committed bench presets (§Perf L3 target)");
+    let presets: &[&str] = if common::fast_mode() { &["small"] } else { &["small", "medium", "large"] };
+    for name in presets {
+        let p = perf::preset_by_name(name).unwrap();
+        for q in [QueueKind::Heap, QueueKind::Calendar] {
+            let r = perf::run_preset(&p, q);
+            println!(
+                "{:<7} {:<11} {:>9} events  {:>7.2} M ev/s  wall {:>8.1} ms  peakq {}",
+                r.scenario,
+                r.queue,
+                r.events_executed,
+                r.events_per_sec / 1e6,
+                r.wall_ms,
+                r.peak_queue_depth
+            );
+        }
+    }
+    println!("(`arcus bench` writes these as BENCH_<preset>.json)");
 
     banner("Serving path dispatch (real PJRT engine)");
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");

@@ -81,8 +81,18 @@ impl AccelUnit {
     }
 
     /// Advance to `now`; complete due jobs, start queued ones.
+    ///
+    /// Allocates a fresh `Vec` per call; the simulation hot path uses
+    /// [`Self::pump_into`] with a reused buffer instead.
     pub fn pump(&mut self, now: Time) -> (Vec<JobDone>, Option<Time>) {
         let mut done = Vec::new();
+        let next = self.pump_into(now, &mut done);
+        (done, next)
+    }
+
+    /// Allocation-free pump: appends completed jobs to `done` (which the
+    /// caller reuses across calls) and returns the next wake time.
+    pub fn pump_into(&mut self, now: Time, done: &mut Vec<JobDone>) -> Option<Time> {
         loop {
             match self.current {
                 Some((job, fin)) if fin <= now => {
@@ -100,14 +110,14 @@ impl AccelUnit {
                         self.current = Some((next, fin + t));
                     }
                 }
-                Some((_, fin)) => return (done, Some(fin)),
+                Some((_, fin)) => return Some(fin),
                 None => match self.input.pop() {
                     Some((_, _, job)) => {
                         let t = self.model.service_time(job.bytes, &mut self.rng);
                         self.busy += t;
                         self.current = Some((job, now + t));
                     }
-                    None => return (done, None),
+                    None => return None,
                 },
             }
         }

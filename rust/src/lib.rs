@@ -37,6 +37,7 @@ pub mod flow;
 pub mod metrics;
 pub mod nic;
 pub mod pcie;
+pub mod perf;
 pub mod runtime;
 pub mod server;
 pub mod shaping;

@@ -5,6 +5,7 @@
 //!   simulate <config.toml> [...]   run experiment configs on the simulator
 //!   sweep [axis flags]             expand a scenario grid and run it in parallel
 //!   churn                          tenant-churn demo: mid-run admission/rejection
+//!   bench [flags]                  DES perf presets → BENCH_<name>.json (+ CI floor gate)
 //!   profile [accel ...]            print the offline Capacity(t, X, N) table
 //!   serve [--artifacts DIR]        start the PJRT serving runtime + demo load
 //!   modes                          list management modes and accelerators
@@ -30,6 +31,7 @@ fn main() {
         Some("simulate") => simulate(&args[1..]),
         Some("sweep") => sweep(&args[1..]),
         Some("churn") => churn(),
+        Some("bench") => bench(&args[1..]),
         Some("profile") => profile(&args[1..]),
         Some("serve") => serve(&args[1..]),
         Some("modes") => modes(),
@@ -49,14 +51,18 @@ fn main() {
 fn usage() {
     println!(
         "arcus — SLO management for accelerators with traffic shaping\n\n\
-         USAGE:\n  arcus quickstart\n  arcus simulate <config.toml> [more.toml ...]\n  \
+         USAGE:\n  arcus quickstart\n  arcus simulate <config.toml> [more.toml ...] [--expect-flows N]\n  \
          arcus sweep [--modes a,b] [--tenants 1,2,4] [--mixes mtu,bulk] [--bursts paced,poisson]\n  \
              [--tightness 0.5,0.8] [--churn static,arrivals] [--accels ipsec] [--seeds 1,2]\n  \
-             [--duration-ms N] [--load F] [--threads N] [--scenarios]\n  \
+             [--duration-ms N] [--load F] [--threads N] [--scenarios] [--expect-flows N]\n  \
          arcus churn\n  \
+         arcus bench [--quick] [--preset small|medium|large|all] [--queue heap|calendar|both]\n  \
+             [--out FILE] [--floor perf_floor.toml] [--no-files]\n  \
          arcus profile [accel ...]\n  arcus serve [--artifacts DIR]\n  arcus modes\n\n\
          Experiment configs: see rust/configs/*.toml (churn.toml shows the\n\
-         flow-lifecycle schedule). Paper benches: `cargo bench`."
+         flow-lifecycle schedule). Paper benches: `cargo bench`.\n\
+         `bench` writes BENCH_<preset>.json per preset and gates on the\n\
+         committed events/sec floor when --floor is given (CI perf-smoke)."
     );
 }
 
@@ -101,11 +107,33 @@ fn quickstart() -> i32 {
     0
 }
 
-fn simulate(paths: &[String]) -> i32 {
+fn simulate(args: &[String]) -> i32 {
+    // `--expect-flows N`: fail loudly when the runs produce fewer per-flow
+    // report rows than expected (CI smoke steps use it so an empty or
+    // truncated report can never pass as green).
+    let mut expect_flows: Option<usize> = None;
+    let mut paths: Vec<&String> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--expect-flows" {
+            match args.get(i + 1).and_then(|v| v.parse::<usize>().ok()) {
+                Some(n) => expect_flows = Some(n),
+                None => {
+                    eprintln!("--expect-flows needs a non-negative integer");
+                    return 2;
+                }
+            }
+            i += 2;
+        } else {
+            paths.push(&args[i]);
+            i += 1;
+        }
+    }
     if paths.is_empty() {
-        eprintln!("usage: arcus simulate <config.toml> [more.toml ...]");
+        eprintln!("usage: arcus simulate <config.toml> [more.toml ...] [--expect-flows N]");
         return 2;
     }
+    let mut total_flows = 0usize;
     for p in paths {
         let path = PathBuf::from(p);
         let doc = match Document::from_file(&path) {
@@ -124,6 +152,7 @@ fn simulate(paths: &[String]) -> i32 {
         };
         println!("=== {} ===", path.display());
         let report = run(&spec);
+        total_flows += report.per_flow.len();
         print!("{}", report.render());
         for f in &report.per_flow {
             if f.rejected {
@@ -139,6 +168,160 @@ fn simulate(paths: &[String]) -> i32 {
             report.accel_util.iter().map(|u| (u * 100.0).round()).collect::<Vec<_>>()
         );
         println!();
+    }
+    if let Some(n) = expect_flows {
+        if total_flows < n {
+            eprintln!("expected at least {n} flow reports, got {total_flows}");
+            return 1;
+        }
+    }
+    0
+}
+
+/// `arcus bench`: run the committed perf presets on the chosen event-queue
+/// disciplines, write `BENCH_<preset>.json` files (+ an optional combined
+/// `--out` file), and gate on the committed events/sec floor. See
+/// `rust/src/perf/mod.rs` for the presets and JSON schema.
+fn bench(args: &[String]) -> i32 {
+    use arcus::perf::{self, QueueKind};
+
+    let mut preset_names: Option<Vec<&str>> = None;
+    let mut queues = vec![QueueKind::Heap, QueueKind::Calendar];
+    let mut out: Option<PathBuf> = None;
+    let mut floor_path: Option<PathBuf> = None;
+    let mut write_files = true;
+    let mut quick = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--quick" => {
+                quick = true;
+                i += 1;
+            }
+            "--no-files" => {
+                write_files = false;
+                i += 1;
+            }
+            "--preset" => {
+                let Some(v) = args.get(i + 1) else {
+                    eprintln!("--preset needs a value (small|medium|large|all)");
+                    return 2;
+                };
+                if v == "all" {
+                    preset_names = Some(vec!["small", "medium", "large"]);
+                } else if let Some(p) = arcus::perf::preset_by_name(v) {
+                    preset_names = Some(vec![p.name]);
+                } else {
+                    eprintln!("unknown preset `{v}` (valid: small, medium, large, all)");
+                    return 2;
+                }
+                i += 2;
+            }
+            "--queue" => {
+                let Some(v) = args.get(i + 1) else {
+                    eprintln!("--queue needs a value (heap|calendar|both)");
+                    return 2;
+                };
+                match QueueKind::parse(v) {
+                    Ok(q) => queues = q,
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return 2;
+                    }
+                }
+                i += 2;
+            }
+            "--out" => {
+                let Some(v) = args.get(i + 1) else {
+                    eprintln!("--out needs a file path");
+                    return 2;
+                };
+                out = Some(PathBuf::from(v));
+                i += 2;
+            }
+            "--floor" => {
+                let Some(v) = args.get(i + 1) else {
+                    eprintln!("--floor needs a perf_floor.toml path");
+                    return 2;
+                };
+                floor_path = Some(PathBuf::from(v));
+                i += 2;
+            }
+            other => {
+                eprintln!("unknown flag `{other}`");
+                return 2;
+            }
+        }
+    }
+
+    // `--quick` is CI-sized (small preset only) but an explicit `--preset`
+    // wins regardless of flag order.
+    let preset_names = match preset_names {
+        Some(names) => names,
+        None if quick => vec!["small"],
+        None => vec!["small", "medium", "large"],
+    };
+
+    let floor = match &floor_path {
+        Some(p) => match perf::load_floor(p) {
+            Ok(f) => Some(f),
+            Err(e) => {
+                eprintln!("{e:#}");
+                return 1;
+            }
+        },
+        None => None,
+    };
+
+    println!("preset   queue         events        ev/s      wall(ms)  wall/sim  peakq    rss(KB)");
+    let mut all = Vec::new();
+    let mut floor_violated = false;
+    for name in &preset_names {
+        let p = perf::preset_by_name(name).expect("preset names are pre-validated");
+        let mut per_preset = Vec::new();
+        for &q in &queues {
+            let r = perf::run_preset(&p, q);
+            println!(
+                "{:<8} {:<11} {:>9} {:>12.0} {:>11.1} {:>9.2} {:>6} {:>10}",
+                r.scenario,
+                r.queue,
+                r.events_executed,
+                r.events_per_sec,
+                r.wall_ms,
+                r.wall_ms_per_sim_ms(),
+                r.peak_queue_depth,
+                r.rss_hint_kb,
+            );
+            if let Some(f) = floor {
+                if r.events_per_sec < f {
+                    eprintln!(
+                        "FLOOR VIOLATION: {} on {} ran {:.0} ev/s < committed floor {:.0}",
+                        r.scenario, r.queue, r.events_per_sec, f
+                    );
+                    floor_violated = true;
+                }
+            }
+            per_preset.push(r.clone());
+            all.push(r);
+        }
+        if write_files {
+            let file = format!("BENCH_{}.json", p.name);
+            if let Err(e) = std::fs::write(&file, perf::to_json(&per_preset)) {
+                eprintln!("writing {file}: {e}");
+                return 1;
+            }
+            eprintln!("wrote {file}");
+        }
+    }
+    if let Some(path) = out {
+        if let Err(e) = std::fs::write(&path, perf::to_json(&all)) {
+            eprintln!("writing {}: {e}", path.display());
+            return 1;
+        }
+        eprintln!("wrote {}", path.display());
+    }
+    if floor_violated {
+        return 1;
     }
     0
 }
@@ -160,6 +343,7 @@ fn sweep(args: &[String]) -> i32 {
     let mut load = 0.9f64;
     let mut threads: Option<usize> = None;
     let mut long_form = false;
+    let mut expect_flows: Option<usize> = None;
 
     let mut i = 0;
     while i < args.len() {
@@ -287,6 +471,13 @@ fn sweep(args: &[String]) -> i32 {
                     return 2;
                 }
             },
+            "--expect-flows" => match value.parse::<usize>() {
+                Ok(n) => expect_flows = Some(n),
+                _ => {
+                    eprintln!("bad --expect-flows value `{value}`");
+                    return 2;
+                }
+            },
             other => {
                 eprintln!("unknown flag `{other}`");
                 return 2;
@@ -350,6 +541,16 @@ fn sweep(args: &[String]) -> i32 {
         runner.threads()
     );
     let outcomes = runner.run(&grid);
+    // Loud emptiness check for CI smoke steps: a sweep that silently
+    // produced nothing (or fewer flow rows than the grid implies) must
+    // fail even though the process would otherwise exit 0.
+    if let Some(n) = expect_flows {
+        let total: usize = outcomes.iter().map(|o| o.report.per_flow.len()).sum();
+        if total < n {
+            eprintln!("expected at least {n} flow reports across the sweep, got {total}");
+            return 1;
+        }
+    }
     let agg = aggregate(&outcomes);
     if long_form {
         print!("{}", agg.render_scenarios());

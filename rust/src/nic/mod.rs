@@ -39,6 +39,9 @@ pub struct Frame {
     /// Source flow.
     pub flow: usize,
     pub bytes: u64,
+    /// Time the frame started onto the wire (latency accounting origin).
+    /// Carried in the frame so the engine needs no side table.
+    pub born: Time,
     /// Time fully received off the wire.
     pub arrived: Time,
 }
@@ -87,10 +90,18 @@ impl NicPort {
         done
     }
 
-    /// Deliver a fully-received frame into the RX buffer at `arrived`;
+    /// Deliver a fully-received frame into the RX buffer at `arrived`
+    /// (`born` = when it started onto the wire, for latency accounting);
     /// returns false (and counts a drop) when the buffer — or, with
     /// per-flow quotas, the flow's share of it — is full.
-    pub fn rx_deliver(&mut self, id: u64, flow: usize, bytes: u64, arrived: Time) -> bool {
+    pub fn rx_deliver(
+        &mut self,
+        id: u64,
+        flow: usize,
+        bytes: u64,
+        born: Time,
+        arrived: Time,
+    ) -> bool {
         let flow_ok = match self.flow_quota {
             Some(q) => self.per_flow_bytes.get(&flow).copied().unwrap_or(0) + bytes <= q,
             None => true,
@@ -98,7 +109,7 @@ impl NicPort {
         if flow_ok && self.rx_buffered + bytes <= self.rx_capacity {
             self.rx_buffered += bytes;
             *self.per_flow_bytes.entry(flow).or_insert(0) += bytes;
-            self.rx_queue.push_back(Frame { id, flow, bytes, arrived });
+            self.rx_queue.push_back(Frame { id, flow, bytes, born, arrived });
             true
         } else {
             self.rx_dropped += 1;
@@ -111,7 +122,7 @@ impl NicPort {
     /// in-flight gap): returns (arrival time, dropped).
     pub fn rx_frame(&mut self, now: Time, id: u64, flow: usize, bytes: u64) -> (Time, bool) {
         let done = self.rx_begin(now, bytes);
-        let dropped = !self.rx_deliver(id, flow, bytes, done);
+        let dropped = !self.rx_deliver(id, flow, bytes, now, done);
         (done, dropped)
     }
 

@@ -89,8 +89,8 @@ pub struct Fabric {
     /// Reads whose request TLP arrived; completion data queued after
     /// rc_latency. (ready_time, op)
     rc_pipe: VecDeque<(Time, u64)>,
-    /// Completions collected by pump.
-    done: Vec<OpComplete>,
+    /// Reused scratch for link deliveries (allocation-free pumping).
+    scratch: Vec<Delivered>,
 }
 
 impl Fabric {
@@ -102,7 +102,7 @@ impl Fabric {
             read_inflight: vec![0; sources],
             read_ctx: HashMap::new(),
             rc_pipe: VecDeque::new(),
-            done: Vec::new(),
+            scratch: Vec::new(),
         }
     }
 
@@ -144,7 +144,7 @@ impl Fabric {
             .enqueue_data(Dir::Down, source, bytes, msg_id(op, PHASE_WRITE));
     }
 
-    fn handle_delivery(&mut self, d: Delivered) {
+    fn handle_delivery(&mut self, d: Delivered, out: &mut Vec<OpComplete>) {
         let op = msg_op(d.msg);
         match msg_phase(d.msg) {
             PHASE_READ_REQ => {
@@ -158,14 +158,14 @@ impl Fabric {
                 if let Some(next) = self.read_waiting[source].pop_front() {
                     self.start_read(source, next.bytes, next.op);
                 }
-                self.done.push(OpComplete {
+                out.push(OpComplete {
                     op,
                     kind: OpKind::Read,
                     at: d.at,
                 });
             }
             PHASE_WRITE => {
-                self.done.push(OpComplete {
+                out.push(OpComplete {
                     op,
                     kind: OpKind::Write,
                     at: d.at,
@@ -177,16 +177,29 @@ impl Fabric {
 
     /// Advance everything to `now`; returns completed ops and the earliest
     /// future time the fabric needs pumping again (None = fully idle).
+    ///
+    /// Allocates a fresh `Vec` per call; the simulation hot path uses
+    /// [`Self::pump_into`] with a reused buffer instead.
     pub fn pump(&mut self, now: Time) -> (Vec<OpComplete>, Option<Time>) {
+        let mut done = Vec::new();
+        let next = self.pump_into(now, &mut done);
+        (done, next)
+    }
+
+    /// Allocation-free pump: appends completed ops to `out` (which the
+    /// caller reuses across calls) and returns the next wake time.
+    pub fn pump_into(&mut self, now: Time, out: &mut Vec<OpComplete>) -> Option<Time> {
         // Iterate because link completions can enqueue new TLPs (rc_pipe →
         // completion data) that may themselves complete by `now`.
+        let mut deliveries = std::mem::take(&mut self.scratch);
         loop {
             let mut progressed = false;
             for dir in [Dir::Up, Dir::Down] {
-                let (deliveries, _) = self.link.pump(now, dir);
-                for d in deliveries {
+                deliveries.clear();
+                let _ = self.link.pump_into(now, dir, &mut deliveries);
+                for d in deliveries.drain(..) {
                     progressed = true;
-                    self.handle_delivery(d);
+                    self.handle_delivery(d, out);
                 }
             }
             // Release read completions whose RC latency has elapsed.
@@ -210,15 +223,20 @@ impl Fabric {
             }
         }
         // Next wake: earliest of in-flight TLP finishes and RC releases.
+        // (The pumps below deliver nothing — the loop above ran to a
+        // fixpoint — so the scratch stays empty.)
         let mut next: Option<Time> = None;
         for dir in [Dir::Up, Dir::Down] {
-            let (_, t) = self.link.pump(now, dir);
+            deliveries.clear();
+            let t = self.link.pump_into(now, dir, &mut deliveries);
+            debug_assert!(deliveries.is_empty());
             next = merge_min(next, t);
         }
+        self.scratch = deliveries;
         if let Some(&(ready, _)) = self.rc_pipe.front() {
             next = merge_min(next, Some(ready));
         }
-        (std::mem::take(&mut self.done), next)
+        next
     }
 
     /// True when no work is queued or in flight anywhere.

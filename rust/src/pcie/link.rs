@@ -173,10 +173,20 @@ impl DuplexLink {
     /// Advance the serializer at `now`: complete any due TLP, start the next
     /// queued one. Returns messages whose final TLP finished, plus the next
     /// time this direction needs pumping (None = idle).
+    ///
+    /// Allocates a fresh `Vec` per call; the simulation hot path uses
+    /// [`Self::pump_into`] with a reused buffer instead.
     pub fn pump(&mut self, now: Time, dir: Dir) -> (Vec<Delivered>, Option<Time>) {
+        let mut done = Vec::new();
+        let next = self.pump_into(now, dir, &mut done);
+        (done, next)
+    }
+
+    /// Allocation-free pump: appends completed messages to `done` (which
+    /// the caller reuses across calls) and returns the next wake time.
+    pub fn pump_into(&mut self, now: Time, dir: Dir, done: &mut Vec<Delivered>) -> Option<Time> {
         let cfg = self.cfg;
         let d = &mut self.dirs[dir as usize];
-        let mut done = Vec::new();
         // Loop: multiple TLPs may have finished if pumping was lazy.
         loop {
             match d.current {
@@ -197,7 +207,7 @@ impl DuplexLink {
                         d.current = Some((next, fin + t));
                     }
                 }
-                Some((_, fin)) => return (done, Some(fin)),
+                Some((_, fin)) => return Some(fin),
                 None => {
                     match d.next_tlp() {
                         Some(next) => {
@@ -205,7 +215,7 @@ impl DuplexLink {
                             d.busy_time += t;
                             d.current = Some((next, now + t));
                         }
-                        None => return (done, None),
+                        None => return None,
                     }
                 }
             }

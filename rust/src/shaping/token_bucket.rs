@@ -104,6 +104,10 @@ pub struct TokenBucket {
     carry: u64,
     /// Virtual time of the last refill edge we accounted for.
     last_refill: Time,
+    /// `cycles(params.interval_cycles)` cached: `try_acquire` is the
+    /// per-message hot path, and the refill math is all in terms of this
+    /// picosecond interval. Kept in sync by `reprogram`.
+    interval_ps: Time,
 }
 
 impl TokenBucket {
@@ -112,6 +116,7 @@ impl TokenBucket {
             tokens: params.bkt_size, // hardware resets with a full bucket
             debt: 0,
             carry: 0,
+            interval_ps: cycles(params.interval_cycles),
             params,
             mode,
             last_refill: 0,
@@ -138,13 +143,19 @@ impl TokenBucket {
     pub fn reprogram(&mut self, now: Time, params: TokenBucketParams) {
         self.sync(now);
         self.params = params;
+        self.interval_ps = cycles(params.interval_cycles);
         self.tokens = self.tokens.min(params.bkt_size);
     }
 
     /// Advance the refill clock to `now` (discrete interval edges).
+    ///
+    /// Refill is *coalesced*: no periodic refill events exist anywhere —
+    /// all the edges since the last sync are accounted in O(1) arithmetic
+    /// at the next decision, and a denied flow is woken exactly once, at
+    /// the edge that satisfies it ([`Self::time_for_tokens`]).
     #[inline]
     fn sync(&mut self, now: Time) {
-        let interval_ps = cycles(self.params.interval_cycles);
+        let interval_ps = self.interval_ps;
         if now <= self.last_refill {
             return;
         }
@@ -179,7 +190,7 @@ impl TokenBucket {
         debug_assert!(self.debt + needed > self.tokens);
         let deficit = self.debt + needed - self.tokens;
         let edges = deficit.div_ceil(self.params.refill_rate);
-        self.last_refill + edges * cycles(self.params.interval_cycles)
+        self.last_refill + edges * self.interval_ps
     }
 }
 

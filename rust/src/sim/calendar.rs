@@ -1,0 +1,266 @@
+//! Hierarchical calendar queue (timing wheel) for the DES core.
+//!
+//! The engine's event distribution is bimodal: a dense cloud of near-future
+//! events (TLP completions every ~40 ns, shaper refill-edge wakeups every
+//! ~256 ns, accelerator finishes) and a sparse tail (control-plane ticks at
+//! 100 µs, long `RetryAt` horizons from deeply throttled flows). A single
+//! binary heap pays O(log n) on the whole pending set for every operation;
+//! a calendar queue pays O(log b) on one *bucket* — and buckets in the
+//! dense region hold a handful of events.
+//!
+//! Design: a wheel of `slots` buckets, each `width` picoseconds wide, with
+//! each bucket an inline min-heap ordered by `(time, seq)`. Events beyond
+//! the wheel's horizon (`slots × width` ahead of the cursor) wait in an
+//! overflow heap and migrate into the wheel as the cursor advances — a lazy
+//! second hierarchy level. The cursor only ever moves forward (simulation
+//! time is monotone), so each event is touched at most twice: once on push
+//! (or migration) and once on pop.
+//!
+//! Determinism: the pop order is exactly ascending `(time, seq)` — the same
+//! total order the reference [`BinaryHeapQueue`](super::BinaryHeapQueue)
+//! produces — because every bucket is itself `(time, seq)`-ordered, buckets
+//! are drained in window order, and the overflow heap only feeds buckets
+//! *ahead* of the cursor. Wheel rollover (bucket reuse after `slots`
+//! advances) cannot reorder: an event is only placed in a slot when its
+//! bucket number lies within `[cursor, cursor + slots)`, so a slot never
+//! holds two rotations at once. Property tests in
+//! `rust/tests/determinism.rs` drive random schedules across many rollovers
+//! and assert byte-identical pop sequences against the reference heap.
+
+use std::collections::BinaryHeap;
+
+use super::{Entry, EventQueue};
+use crate::util::units::{Time, NANOS};
+
+/// Default bucket width: 64 ns — a few TLP times, a quarter of the minimum
+/// shaper refill interval. Dense-phase buckets stay small (tens of events).
+pub const DEFAULT_WIDTH: Time = 64 * NANOS;
+
+/// Default wheel size: 2048 buckets × 64 ns ≈ 131 µs of horizon — wider
+/// than the 100 µs control-plane period, so periodic ticks land in the
+/// wheel, not the overflow heap.
+pub const DEFAULT_SLOTS: usize = 2048;
+
+/// Timing-wheel event queue. See the module docs for the invariants.
+pub struct CalendarQueue<E> {
+    /// Bucket width in picoseconds.
+    width: Time,
+    /// Per-bucket min-heaps; index = bucket number % slots.len().
+    slots: Vec<BinaryHeap<Entry<E>>>,
+    /// Absolute bucket number the cursor is parked on (monotone).
+    cursor: u64,
+    /// Events at or beyond the wheel horizon, ordered by `(time, seq)`.
+    overflow: BinaryHeap<Entry<E>>,
+    /// Events currently in wheel buckets.
+    in_wheel: usize,
+    /// Total pending events (wheel + overflow).
+    len: usize,
+}
+
+impl<E> Default for CalendarQueue<E> {
+    fn default() -> Self {
+        Self::with_geometry(DEFAULT_WIDTH, DEFAULT_SLOTS)
+    }
+}
+
+impl<E> CalendarQueue<E> {
+    /// A wheel of `slots` buckets, each `width` ps wide.
+    pub fn with_geometry(width: Time, slots: usize) -> Self {
+        assert!(width > 0, "bucket width must be positive");
+        assert!(slots > 1, "wheel needs at least two buckets");
+        CalendarQueue {
+            width,
+            slots: (0..slots).map(|_| BinaryHeap::new()).collect(),
+            cursor: 0,
+            overflow: BinaryHeap::new(),
+            in_wheel: 0,
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn nslots(&self) -> u64 {
+        self.slots.len() as u64
+    }
+
+    /// Absolute bucket number of a timestamp.
+    #[inline]
+    fn bucket_of(&self, time: Time) -> u64 {
+        time / self.width
+    }
+
+    /// Place an entry whose bucket number is known to be below the horizon.
+    #[inline]
+    fn place(&mut self, entry: Entry<E>) {
+        // Events for already-passed windows (possible when the clock was
+        // pinned forward by `run_until` and the cursor seeked ahead) join
+        // the cursor bucket; its heap keeps them ahead of later times.
+        let bucket = self.bucket_of(entry.time).max(self.cursor);
+        let slot = (bucket % self.nslots()) as usize;
+        self.slots[slot].push(entry);
+        self.in_wheel += 1;
+    }
+
+    /// Move overflow events whose bucket fell inside the horizon into the
+    /// wheel. Called whenever the cursor advances.
+    fn migrate(&mut self) {
+        let horizon_bucket = self.cursor.saturating_add(self.nslots());
+        while let Some(top) = self.overflow.peek() {
+            if self.bucket_of(top.time) >= horizon_bucket {
+                break;
+            }
+            let entry = self.overflow.pop().unwrap();
+            self.place(entry);
+        }
+    }
+
+    /// Park the cursor on the bucket holding the global minimum event.
+    /// Returns that minimum's time (None when empty).
+    fn seek(&mut self) -> Option<Time> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            if self.in_wheel == 0 {
+                // Only overflow events remain: jump straight to the first
+                // one's bucket, then pull everything inside the new horizon.
+                let t = self.overflow.peek().expect("len>0, wheel empty").time;
+                self.cursor = self.cursor.max(self.bucket_of(t));
+                self.migrate();
+                debug_assert!(self.in_wheel > 0);
+                continue;
+            }
+            let slot = (self.cursor % self.nslots()) as usize;
+            if let Some(e) = self.slots[slot].peek() {
+                return Some(e.time);
+            }
+            self.cursor += 1;
+            self.migrate();
+        }
+    }
+}
+
+impl<E> EventQueue<E> for CalendarQueue<E> {
+    fn push(&mut self, time: Time, seq: u64, ev: E) {
+        let entry = Entry { time, seq, ev };
+        if self.bucket_of(time) >= self.cursor.saturating_add(self.nslots()) {
+            self.overflow.push(entry);
+        } else {
+            self.place(entry);
+        }
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<(Time, u64, E)> {
+        self.seek()?;
+        let slot = (self.cursor % self.nslots()) as usize;
+        let e = self.slots[slot].pop().expect("seek parked on non-empty bucket");
+        self.in_wheel -= 1;
+        self.len -= 1;
+        Some((e.time, e.seq, e.ev))
+    }
+
+    fn next_time(&mut self) -> Option<Time> {
+        self.seek()
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn name(&self) -> &'static str {
+        "calendar"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(q: &mut CalendarQueue<u32>) -> Vec<(Time, u64)> {
+        let mut out = Vec::new();
+        while let Some((t, s, _)) = q.pop() {
+            out.push((t, s));
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        let mut q: CalendarQueue<u32> = CalendarQueue::with_geometry(100, 8);
+        q.push(500, 2, 0);
+        q.push(500, 1, 0);
+        q.push(10, 3, 0);
+        q.push(5000, 0, 0); // beyond the 800-ps horizon → overflow
+        assert_eq!(drain(&mut q), vec![(10, 3), (500, 1), (500, 2), (5000, 0)]);
+    }
+
+    #[test]
+    fn rollover_reuses_slots_without_mixing_windows() {
+        // Span many full rotations of a tiny wheel; every event maps to a
+        // reused slot at some point.
+        let mut q: CalendarQueue<u32> = CalendarQueue::with_geometry(10, 4);
+        let mut seq = 0;
+        let mut expect = Vec::new();
+        for rot in 0..50u64 {
+            for off in [3u64, 7, 9] {
+                let t = rot * 40 + off; // 40 ps = one full wheel span
+                q.push(t, seq, 0);
+                expect.push((t, seq));
+                seq += 1;
+            }
+        }
+        expect.sort();
+        assert_eq!(drain(&mut q), expect);
+    }
+
+    #[test]
+    fn interleaved_push_pop_respects_monotone_clock() {
+        // Mimic the simulator: after popping time t, pushes never go below
+        // t. Events pushed for the current (partially drained) bucket must
+        // still come out in order.
+        let mut q: CalendarQueue<u32> = CalendarQueue::with_geometry(100, 4);
+        q.push(50, 0, 0);
+        q.push(120, 1, 0);
+        assert_eq!(q.pop(), Some((50, 0, 0)));
+        // Now = 50: push into the current bucket and the next one.
+        q.push(60, 2, 0);
+        q.push(130, 3, 0);
+        q.push(10_000, 4, 0); // overflow
+        assert_eq!(q.pop(), Some((60, 2, 0)));
+        assert_eq!(q.pop(), Some((120, 1, 0)));
+        assert_eq!(q.pop(), Some((130, 3, 0)));
+        // Cursor seeked far ahead for the overflow event; a push at a time
+        // whose window already passed still pops (straggler clamping).
+        assert_eq!(q.next_time(), Some(10_000));
+        q.push(9_999, 5, 0);
+        assert_eq!(q.pop(), Some((9_999, 5, 0)));
+        assert_eq!(q.pop(), Some((10_000, 4, 0)));
+        assert!(q.pop().is_none());
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn overflow_migrates_in_order_across_horizon() {
+        let mut q: CalendarQueue<u32> = CalendarQueue::with_geometry(10, 4);
+        // All far beyond the initial 40-ps horizon, shuffled.
+        for (i, t) in [900u64, 410, 555, 1200, 402, 90].iter().enumerate() {
+            q.push(*t, i as u64, 0);
+        }
+        let got = drain(&mut q);
+        let times: Vec<Time> = got.iter().map(|&(t, _)| t).collect();
+        assert_eq!(times, vec![90, 402, 410, 555, 900, 1200]);
+    }
+
+    #[test]
+    fn len_tracks_wheel_and_overflow() {
+        let mut q: CalendarQueue<u32> = CalendarQueue::with_geometry(10, 4);
+        q.push(5, 0, 0);
+        q.push(5_000, 1, 0);
+        assert_eq!(q.len(), 2);
+        let _ = q.pop();
+        assert_eq!(q.len(), 1);
+        let _ = q.pop();
+        assert!(q.is_empty());
+    }
+}

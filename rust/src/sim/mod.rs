@@ -2,44 +2,98 @@
 //!
 //! The Arcus prototype is a host–FPGA system; we reproduce it as a
 //! cycle-granular discrete-event simulation. The core is deliberately small:
-//! a virtual clock in picoseconds, a binary-heap event queue with
-//! deterministic FIFO tie-breaking, and events that are boxed closures over a
-//! user-supplied world type `W` (the component graph). Components are plain
-//! structs inside `W`; the wiring code in `system/` schedules closures that
-//! mutate them and schedule follow-up events.
+//! a virtual clock in picoseconds, a pluggable event queue, and **typed
+//! events** — each world `W` defines one event enum and dispatches it with a
+//! single `match` ([`Handler::handle`]). Events live inline in the queue:
+//! scheduling costs a queue insert, not a heap allocation, and dispatch is a
+//! jump table, not a virtual call through `Box<dyn FnOnce>`.
+//!
+//! Two queue disciplines implement [`EventQueue`]:
+//!
+//! - [`BinaryHeapQueue`] — the reference implementation; O(log n) per
+//!   operation on one `BinaryHeap`.
+//! - [`CalendarQueue`] — a timing wheel with per-bucket heaps plus an
+//!   overflow heap, tuned for the shaper-tick-heavy event distribution the
+//!   engine produces (dense clusters of near-future wakeups, a sparse tail
+//!   of control-plane ticks).
 //!
 //! Determinism contract: given the same world, seed, and schedule calls, two
-//! runs produce identical event orders — ties at equal timestamps are broken
-//! by insertion sequence number, never by heap internals.
+//! runs — and two *queue implementations* — produce identical event orders.
+//! Ties at equal timestamps are broken by insertion sequence number, never
+//! by queue internals. `rust/tests/determinism.rs` pins this with a golden
+//! scenario run on both queues.
+//!
+//! `run_until` boundary contract: events at exactly `until` execute —
+//! *including* events an executing event schedules at that same timestamp —
+//! before the clock is pinned to `until`. Events strictly after `until`
+//! stay queued.
+
+pub mod calendar;
+
+pub use calendar::CalendarQueue;
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::marker::PhantomData;
 
 use crate::util::units::Time;
 
-/// An event action: runs against the world and may schedule more events.
-pub type Action<W> = Box<dyn FnOnce(&mut W, &mut Sim<W>)>;
-
-struct Entry<W> {
-    time: Time,
-    seq: u64,
-    action: Action<W>,
+/// A world that can execute the events of type `E` it scheduled.
+///
+/// One `match` over the event enum replaces the former boxed-closure
+/// dispatch; handlers may schedule follow-up events through the simulator.
+pub trait Handler<E> {
+    fn handle<Q: EventQueue<E>>(&mut self, sim: &mut Sim<E, Q>, ev: E);
 }
 
-impl<W> PartialEq for Entry<W> {
+/// A pending-event set ordered by `(time, seq)`.
+///
+/// Implementations must pop in strictly increasing `(time, seq)` order over
+/// the current contents — the determinism contract. `seq` values are unique
+/// and monotone (assigned by [`Sim`]), so the order is total.
+pub trait EventQueue<E> {
+    /// Insert an event. `time` is never less than the last popped time.
+    fn push(&mut self, time: Time, seq: u64, ev: E);
+
+    /// Remove and return the minimum-`(time, seq)` event.
+    fn pop(&mut self) -> Option<(Time, u64, E)>;
+
+    /// Earliest pending event time. May advance internal cursors but must
+    /// not change the pop order.
+    fn next_time(&mut self) -> Option<Time>;
+
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Discipline name for reports and bench output.
+    fn name(&self) -> &'static str;
+}
+
+/// One queued event. Shared by both queue implementations; ordered by
+/// `(time, seq)` with the comparison reversed so `BinaryHeap` (a max-heap)
+/// yields the earliest entry first.
+pub(crate) struct Entry<E> {
+    pub(crate) time: Time,
+    pub(crate) seq: u64,
+    pub(crate) ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
     fn eq(&self, other: &Self) -> bool {
         self.time == other.time && self.seq == other.seq
     }
 }
-impl<W> Eq for Entry<W> {}
-impl<W> PartialOrd for Entry<W> {
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
-impl<W> Ord for Entry<W> {
+impl<E> Ord for Entry<E> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse order: BinaryHeap is a max-heap, we want earliest first.
         other
             .time
             .cmp(&self.time)
@@ -47,27 +101,72 @@ impl<W> Ord for Entry<W> {
     }
 }
 
-/// The simulator: virtual clock + event queue.
-pub struct Sim<W> {
-    now: Time,
-    seq: u64,
-    queue: BinaryHeap<Entry<W>>,
-    executed: u64,
+/// Reference queue: one binary heap over all pending events.
+pub struct BinaryHeapQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
 }
 
-impl<W> Default for Sim<W> {
+impl<E> Default for BinaryHeapQueue<E> {
+    fn default() -> Self {
+        BinaryHeapQueue {
+            heap: BinaryHeap::new(),
+        }
+    }
+}
+
+impl<E> EventQueue<E> for BinaryHeapQueue<E> {
+    fn push(&mut self, time: Time, seq: u64, ev: E) {
+        self.heap.push(Entry { time, seq, ev });
+    }
+
+    fn pop(&mut self) -> Option<(Time, u64, E)> {
+        self.heap.pop().map(|e| (e.time, e.seq, e.ev))
+    }
+
+    fn next_time(&mut self) -> Option<Time> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    fn name(&self) -> &'static str {
+        "binary_heap"
+    }
+}
+
+/// The simulator: virtual clock + event queue.
+pub struct Sim<E, Q: EventQueue<E> = BinaryHeapQueue<E>> {
+    now: Time,
+    seq: u64,
+    queue: Q,
+    executed: u64,
+    peak_pending: usize,
+    _ev: PhantomData<fn(E)>,
+}
+
+impl<E, Q: EventQueue<E> + Default> Default for Sim<E, Q> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<W> Sim<W> {
+impl<E, Q: EventQueue<E> + Default> Sim<E, Q> {
     pub fn new() -> Self {
+        Self::with_queue(Q::default())
+    }
+}
+
+impl<E, Q: EventQueue<E>> Sim<E, Q> {
+    pub fn with_queue(queue: Q) -> Self {
         Sim {
             now: 0,
             seq: 0,
-            queue: BinaryHeap::new(),
+            queue,
             executed: 0,
+            peak_pending: 0,
+            _ev: PhantomData,
         }
     }
 
@@ -87,42 +186,45 @@ impl<W> Sim<W> {
         self.queue.len()
     }
 
-    /// Schedule an action at absolute virtual time `t` (>= now).
-    pub fn at<F>(&mut self, t: Time, action: F)
-    where
-        F: FnOnce(&mut W, &mut Sim<W>) + 'static,
-    {
+    /// High-water mark of the pending-event set (perf accounting).
+    pub fn peak_pending(&self) -> usize {
+        self.peak_pending
+    }
+
+    /// Queue discipline name (bench/report labeling).
+    pub fn queue_name(&self) -> &'static str {
+        self.queue.name()
+    }
+
+    /// Schedule an event at absolute virtual time `t` (>= now).
+    pub fn at(&mut self, t: Time, ev: E) {
         debug_assert!(t >= self.now, "scheduling into the past: {t} < {}", self.now);
         let seq = self.seq;
         self.seq += 1;
-        self.queue.push(Entry {
-            time: t.max(self.now),
-            seq,
-            action: Box::new(action),
-        });
+        self.queue.push(t.max(self.now), seq, ev);
+        if self.queue.len() > self.peak_pending {
+            self.peak_pending = self.queue.len();
+        }
     }
 
-    /// Schedule an action `delay` picoseconds from now. A `Time::MAX` delay
+    /// Schedule an event `delay` picoseconds from now. A `Time::MAX` delay
     /// (e.g. serialization over a stalled zero-rate link) is dropped: the
     /// event would never fire.
-    pub fn after<F>(&mut self, delay: Time, action: F)
-    where
-        F: FnOnce(&mut W, &mut Sim<W>) + 'static,
-    {
+    pub fn after(&mut self, delay: Time, ev: E) {
         if delay == Time::MAX {
             return;
         }
-        self.at(self.now.saturating_add(delay), action);
+        self.at(self.now.saturating_add(delay), ev);
     }
 
     /// Run a single event; returns false when the queue is empty.
-    pub fn step(&mut self, world: &mut W) -> bool {
+    pub fn step<W: Handler<E>>(&mut self, world: &mut W) -> bool {
         match self.queue.pop() {
-            Some(e) => {
-                debug_assert!(e.time >= self.now);
-                self.now = e.time;
+            Some((t, _seq, ev)) => {
+                debug_assert!(t >= self.now);
+                self.now = t;
                 self.executed += 1;
-                (e.action)(world, self);
+                world.handle(self, ev);
                 true
             }
             None => false,
@@ -130,82 +232,104 @@ impl<W> Sim<W> {
     }
 
     /// Run until the queue drains or virtual time would exceed `until`.
-    /// Events strictly after `until` stay queued; `now` advances to `until`.
-    pub fn run_until(&mut self, world: &mut W, until: Time) {
-        while let Some(head) = self.queue.peek() {
-            if head.time > until {
-                break;
+    ///
+    /// Boundary: every event with `time <= until` executes — including
+    /// events scheduled *at* `until` by the final executed step (the head
+    /// is re-examined after each event) — then `now` is pinned to `until`.
+    /// Events strictly after `until` stay queued.
+    pub fn run_until<W: Handler<E>>(&mut self, world: &mut W, until: Time) {
+        loop {
+            match self.queue.next_time() {
+                Some(t) if t <= until => {
+                    self.step(world);
+                }
+                _ => break,
             }
-            // Unwrap is safe: peeked non-empty, no other pops in between.
-            let e = self.queue.pop().unwrap();
-            self.now = e.time;
-            self.executed += 1;
-            (e.action)(world, self);
         }
         self.now = self.now.max(until);
     }
 
-    /// Run to queue exhaustion (or `max_events` as a runaway guard).
-    pub fn run(&mut self, world: &mut W, max_events: u64) {
-        let limit = self.executed + max_events;
+    /// Run to queue exhaustion (or `max_events` as a runaway guard;
+    /// `u64::MAX` means no limit, even on a sim that has already run).
+    pub fn run<W: Handler<E>>(&mut self, world: &mut W, max_events: u64) {
+        let limit = self.executed.saturating_add(max_events);
         while self.executed < limit && self.step(world) {}
     }
-}
-
-/// A periodic ticker: reschedules itself every `period` until `world` says
-/// stop. Used for the control-plane loop (Algorithm 1 runs periodically) and
-/// for monitors.
-pub fn every<W, F>(sim: &mut Sim<W>, period: Time, mut f: F)
-where
-    W: 'static,
-    F: FnMut(&mut W, &mut Sim<W>) -> bool + 'static,
-{
-    fn tick<W, F>(period: Time, mut f: F) -> Action<W>
-    where
-        W: 'static,
-        F: FnMut(&mut W, &mut Sim<W>) -> bool + 'static,
-    {
-        Box::new(move |w, sim| {
-            if f(w, sim) {
-                let next = tick(period, f);
-                sim.after(period, move |w, s| next(w, s));
-            }
-        })
-    }
-    let action = tick(period, move |w: &mut W, s: &mut Sim<W>| f(w, s));
-    sim.after(period, move |w, s| action(w, s));
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::units::{MICROS, NANOS};
-    use std::cell::RefCell;
-    use std::rc::Rc;
+
+    /// Typed test events replacing the former closure actions.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    enum TEv {
+        /// Append (now, tag) to the log.
+        Log(u32),
+        /// Log tag 0, then schedule Log(1) seven ps later.
+        Spawn,
+        /// Log tag 8, then schedule Log(9) at the *same* timestamp
+        /// (the run_until boundary case).
+        SpawnSameTime,
+        /// Increment the counter.
+        Count,
+        /// Increment the counter and re-arm every 100 ns while below limit.
+        Tick,
+    }
 
     #[derive(Default)]
     struct World {
         log: Vec<(Time, u32)>,
         count: u64,
+        tick_limit: u64,
     }
 
-    #[test]
-    fn events_fire_in_time_order() {
-        let mut sim: Sim<World> = Sim::new();
+    impl Handler<TEv> for World {
+        fn handle<Q: EventQueue<TEv>>(&mut self, sim: &mut Sim<TEv, Q>, ev: TEv) {
+            match ev {
+                TEv::Log(tag) => self.log.push((sim.now(), tag)),
+                TEv::Spawn => {
+                    self.log.push((sim.now(), 0));
+                    sim.after(7, TEv::Log(1));
+                }
+                TEv::SpawnSameTime => {
+                    self.log.push((sim.now(), 8));
+                    let now = sim.now();
+                    sim.at(now, TEv::Log(9));
+                }
+                TEv::Count => self.count += 1,
+                TEv::Tick => {
+                    self.count += 1;
+                    if self.count < self.tick_limit {
+                        sim.after(100 * NANOS, TEv::Tick);
+                    }
+                }
+            }
+        }
+    }
+
+    fn events_fire_in_time_order_on<Q: EventQueue<TEv> + Default>() {
+        let mut sim: Sim<TEv, Q> = Sim::new();
         let mut w = World::default();
-        sim.at(30, |w, s| w.log.push((s.now(), 3)));
-        sim.at(10, |w, s| w.log.push((s.now(), 1)));
-        sim.at(20, |w, s| w.log.push((s.now(), 2)));
+        sim.at(30, TEv::Log(3));
+        sim.at(10, TEv::Log(1));
+        sim.at(20, TEv::Log(2));
         sim.run(&mut w, 100);
         assert_eq!(w.log, vec![(10, 1), (20, 2), (30, 3)]);
     }
 
     #[test]
-    fn ties_break_by_insertion_order() {
-        let mut sim: Sim<World> = Sim::new();
+    fn events_fire_in_time_order() {
+        events_fire_in_time_order_on::<BinaryHeapQueue<TEv>>();
+        events_fire_in_time_order_on::<CalendarQueue<TEv>>();
+    }
+
+    fn ties_break_by_insertion_order_on<Q: EventQueue<TEv> + Default>() {
+        let mut sim: Sim<TEv, Q> = Sim::new();
         let mut w = World::default();
         for i in 0..50u32 {
-            sim.at(100, move |w, _| w.log.push((100, i)));
+            sim.at(100, TEv::Log(i));
         }
         sim.run(&mut w, 1000);
         let ids: Vec<u32> = w.log.iter().map(|&(_, i)| i).collect();
@@ -213,23 +337,30 @@ mod tests {
     }
 
     #[test]
-    fn events_can_schedule_events() {
-        let mut sim: Sim<World> = Sim::new();
+    fn ties_break_by_insertion_order() {
+        ties_break_by_insertion_order_on::<BinaryHeapQueue<TEv>>();
+        ties_break_by_insertion_order_on::<CalendarQueue<TEv>>();
+    }
+
+    fn events_can_schedule_events_on<Q: EventQueue<TEv> + Default>() {
+        let mut sim: Sim<TEv, Q> = Sim::new();
         let mut w = World::default();
-        sim.at(5, |w, s| {
-            w.log.push((s.now(), 0));
-            s.after(7, |w, s| w.log.push((s.now(), 1)));
-        });
+        sim.at(5, TEv::Spawn);
         sim.run(&mut w, 100);
         assert_eq!(w.log, vec![(5, 0), (12, 1)]);
     }
 
     #[test]
-    fn run_until_stops_at_boundary() {
-        let mut sim: Sim<World> = Sim::new();
+    fn events_can_schedule_events() {
+        events_can_schedule_events_on::<BinaryHeapQueue<TEv>>();
+        events_can_schedule_events_on::<CalendarQueue<TEv>>();
+    }
+
+    fn run_until_stops_at_boundary_on<Q: EventQueue<TEv> + Default>() {
+        let mut sim: Sim<TEv, Q> = Sim::new();
         let mut w = World::default();
         for i in 1..=10u64 {
-            sim.at(i * MICROS, |w, _| w.count += 1);
+            sim.at(i * MICROS, TEv::Count);
         }
         sim.run_until(&mut w, 5 * MICROS);
         assert_eq!(w.count, 5);
@@ -240,13 +371,44 @@ mod tests {
     }
 
     #[test]
-    fn periodic_ticker_runs_until_false() {
-        let mut sim: Sim<World> = Sim::new();
+    fn run_until_stops_at_boundary() {
+        run_until_stops_at_boundary_on::<BinaryHeapQueue<TEv>>();
+        run_until_stops_at_boundary_on::<CalendarQueue<TEv>>();
+    }
+
+    fn run_until_boundary_chain_on<Q: EventQueue<TEv> + Default>() {
+        // An event at exactly `until` schedules another event at that same
+        // timestamp: both must execute before the clock is pinned. This is
+        // the boundary the engine depends on — the last shaper wakeup of a
+        // run often completes a message whose finish event lands at the
+        // same instant.
+        let mut sim: Sim<TEv, Q> = Sim::new();
         let mut w = World::default();
-        every(&mut sim, 100 * NANOS, |w, _| {
-            w.count += 1;
-            w.count < 5
-        });
+        let until = 100 * NANOS;
+        sim.at(until, TEv::SpawnSameTime);
+        sim.at(until + 1, TEv::Log(7)); // strictly after: must stay queued
+        sim.run_until(&mut w, until);
+        assert_eq!(w.log, vec![(until, 8), (until, 9)]);
+        assert_eq!(sim.now(), until);
+        assert_eq!(sim.pending(), 1, "event after `until` stays queued");
+        sim.run_until(&mut w, until + 1);
+        assert_eq!(w.log.last(), Some(&(until + 1, 7)));
+    }
+
+    #[test]
+    fn run_until_executes_equal_time_events_scheduled_by_final_step() {
+        run_until_boundary_chain_on::<BinaryHeapQueue<TEv>>();
+        run_until_boundary_chain_on::<CalendarQueue<TEv>>();
+    }
+
+    #[test]
+    fn periodic_ticker_runs_until_limit() {
+        let mut sim: Sim<TEv> = Sim::new();
+        let mut w = World {
+            tick_limit: 5,
+            ..World::default()
+        };
+        sim.after(100 * NANOS, TEv::Tick);
         sim.run(&mut w, 1000);
         assert_eq!(w.count, 5);
         assert_eq!(sim.now(), 500 * NANOS);
@@ -254,55 +416,56 @@ mod tests {
 
     #[test]
     fn max_delay_event_is_dropped() {
-        let mut sim: Sim<World> = Sim::new();
+        let mut sim: Sim<TEv> = Sim::new();
         let mut w = World::default();
-        sim.after(Time::MAX, |w, _| w.count += 1);
+        sim.after(Time::MAX, TEv::Count);
         sim.run(&mut w, 10);
         assert_eq!(w.count, 0);
         assert_eq!(sim.pending(), 0);
     }
 
+    fn determinism_two_identical_runs_on<Q: EventQueue<TEv> + Default>() -> Vec<(Time, u32)> {
+        let mut sim: Sim<TEv, Q> = Sim::new();
+        let mut w = World::default();
+        let mut rng = crate::util::Rng::new(99);
+        for i in 0..200u32 {
+            let t = rng.range_u64(0, 1000) * NANOS;
+            sim.at(t, TEv::Log(i));
+        }
+        sim.run(&mut w, 10_000);
+        w.log
+    }
+
     #[test]
     fn determinism_two_identical_runs() {
-        fn run_once() -> Vec<(Time, u32)> {
-            let mut sim: Sim<World> = Sim::new();
-            let mut w = World::default();
-            let mut rng = crate::util::Rng::new(99);
-            for i in 0..200u32 {
-                let t = rng.range_u64(0, 1000) * NANOS;
-                sim.at(t, move |w, s| w.log.push((s.now(), i)));
-            }
-            sim.run(&mut w, 10_000);
-            w.log
-        }
-        assert_eq!(run_once(), run_once());
+        let heap_a = determinism_two_identical_runs_on::<BinaryHeapQueue<TEv>>();
+        let heap_b = determinism_two_identical_runs_on::<BinaryHeapQueue<TEv>>();
+        assert_eq!(heap_a, heap_b);
+        // And the calendar queue produces the *same* order as the heap.
+        let cal = determinism_two_identical_runs_on::<CalendarQueue<TEv>>();
+        assert_eq!(heap_a, cal);
     }
 
     #[test]
     fn executed_counter_counts() {
-        let mut sim: Sim<World> = Sim::new();
+        let mut sim: Sim<TEv> = Sim::new();
         let mut w = World::default();
         for i in 0..7u64 {
-            sim.at(i, |_, _| {});
+            sim.at(i, TEv::Count);
         }
         sim.run(&mut w, 100);
         assert_eq!(sim.executed(), 7);
     }
 
     #[test]
-    fn rc_refcell_worlds_compose() {
-        // Components sometimes need shared handles; make sure the pattern
-        // works through the closure-based event type.
-        let shared = Rc::new(RefCell::new(0u64));
-        struct W2 {
-            shared: Rc<RefCell<u64>>,
+    fn peak_pending_tracks_high_water_mark() {
+        let mut sim: Sim<TEv> = Sim::new();
+        let mut w = World::default();
+        for i in 0..9u64 {
+            sim.at(i, TEv::Count);
         }
-        let mut sim: Sim<W2> = Sim::new();
-        let mut w = W2 {
-            shared: shared.clone(),
-        };
-        sim.at(1, |w, _| *w.shared.borrow_mut() += 41);
-        sim.run(&mut w, 10);
-        assert_eq!(*shared.borrow(), 41);
+        assert_eq!(sim.peak_pending(), 9);
+        sim.run(&mut w, 100);
+        assert_eq!(sim.peak_pending(), 9, "draining does not lower the mark");
     }
 }

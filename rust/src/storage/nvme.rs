@@ -117,8 +117,18 @@ impl Ssd {
 
     /// Advance to `now`: retire due ops, dispatch queued ops to free
     /// channels. Returns completions and the next wake time.
+    ///
+    /// Allocates a fresh `Vec` per call; the simulation hot path uses
+    /// [`Self::pump_into`] with a reused buffer instead.
     pub fn pump(&mut self, now: Time) -> (Vec<IoDone>, Option<Time>) {
         let mut done = Vec::new();
+        let next = self.pump_into(now, &mut done);
+        (done, next)
+    }
+
+    /// Allocation-free pump: appends completions to `done` (which the
+    /// caller reuses across calls) and returns the next wake time.
+    pub fn pump_into(&mut self, now: Time, done: &mut Vec<IoDone>) -> Option<Time> {
         loop {
             let mut progressed = false;
             // Retire.
@@ -150,13 +160,11 @@ impl Ssd {
                 break;
             }
         }
-        let next = self
-            .channels
+        self.channels
             .iter()
             .flatten()
             .map(|&(_, fin)| fin)
-            .min();
-        (done, next)
+            .min()
     }
 
     pub fn idle(&self) -> bool {

@@ -34,22 +34,32 @@ impl Raid0 {
         self.drives[d].submit(io);
     }
 
+    /// Allocates a fresh `Vec` per call; the simulation hot path uses
+    /// [`Self::pump_into`] with a reused buffer instead.
     pub fn pump(&mut self, now: Time) -> (Vec<IoDone>, Option<Time>) {
         let mut done = Vec::new();
+        let next = self.pump_into(now, &mut done);
+        (done, next)
+    }
+
+    /// Allocation-free pump: appends completions to `done` (which the
+    /// caller reuses across calls) and returns the next wake time.
+    pub fn pump_into(&mut self, now: Time, done: &mut Vec<IoDone>) -> Option<Time> {
+        let start = done.len();
         let mut next: Option<Time> = None;
         for d in &mut self.drives {
-            let (dd, n) = d.pump(now);
-            done.extend(dd);
+            let n = d.pump_into(now, done);
             next = match (next, n) {
                 (Some(a), Some(b)) => Some(a.min(b)),
                 (a, None) => a,
                 (None, b) => b,
             };
         }
-        // Completions from different drives arrive unordered; sort by time
-        // for deterministic downstream processing.
-        done.sort_by_key(|d| d.at);
-        (done, next)
+        // Completions from different drives arrive unordered; sort (stably,
+        // so equal times keep drive order) for deterministic downstream
+        // processing. Only this call's suffix is sorted.
+        done[start..].sort_by_key(|d| d.at);
+        next
     }
 
     pub fn idle(&self) -> bool {

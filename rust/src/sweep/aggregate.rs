@@ -302,6 +302,8 @@ mod tests {
                 accel_util: vec![0.5],
                 nic_rx_dropped: 0,
                 events: 10,
+                peak_queue_depth: 4,
+                queue: "binary_heap",
                 wall_secs: 0.001,
             },
         }

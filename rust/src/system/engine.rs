@@ -1,8 +1,13 @@
 //! The experiment engine: executes an [`ExperimentSpec`] on the DES core.
 //!
-//! One [`World`] holds every component; events are small closures that call
-//! back into `World` handler methods. The wiring follows the dataplane
-//! protocol of §4.1 per path:
+//! One [`World`] holds every component; events are **typed** — the
+//! [`EngineEvent`] enum names every kind of work the dataplane schedules
+//! (packet arrival, shaped fetch wakeup, component pump, directive apply,
+//! flow lifecycle), and one `match` in [`Handler::handle`] dispatches them.
+//! Scheduling an event is a queue insert of an inline enum value: no heap
+//! allocation, no virtual call — the simulator scales to millions of events
+//! per run, which the `arcus bench` pipeline measures. The wiring follows
+//! the dataplane protocol of §4.1 per path:
 //!
 //! - **Function call**: VM places payloads in its DMA buffer (the per-flow
 //!   software queue); the device *fetches* them (DMA read — request TLP Up,
@@ -33,8 +38,13 @@
 //! ~10 µs MMIO reconfiguration latency. The [`ExperimentSpec`]'s
 //! [`LifecycleEvent`] schedule drives tenant churn (arrivals mid-run pass
 //! admission control against whatever capacity the incumbents left).
+//!
+//! The engine is generic over the event-queue discipline
+//! ([`crate::sim::EventQueue`]): [`run`] uses the reference binary heap,
+//! [`run_with`] picks any queue (the bench pipeline and the golden
+//! determinism test run both and require byte-identical reports).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::accel::{AccelUnit, Job};
 use crate::api::{
@@ -51,11 +61,11 @@ use crate::pcie::fabric::{Fabric, OpComplete, OpKind};
 use crate::shaping::{
     ShapeMode, Shaper, SoftwareShaper, SoftwareShaperConfig, TokenBucket, Verdict,
 };
-use crate::sim::Sim;
-use crate::storage::nvme::{Io, IoKind};
+use crate::sim::{BinaryHeapQueue, EventQueue, Handler, Sim};
+use crate::storage::nvme::{Io, IoDone, IoKind};
 use crate::storage::Raid0;
 use crate::util::units::{Time, NANOS};
-use crate::util::Rng;
+use crate::util::{Rng, Slab};
 
 use super::report::{FlowReport, SystemReport};
 use super::spec::{ExperimentSpec, LifecycleEvent, Mode};
@@ -63,20 +73,9 @@ use super::spec::{ExperimentSpec, LifecycleEvent, Mode};
 /// Hardware shaping decision latency (§5.3.1: 36 ns).
 const SHAPING_LATENCY: Time = 36 * NANOS;
 
-#[doc(hidden)]
-pub static EV_FETCH: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-#[doc(hidden)]
-pub static EV_FABRIC: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-#[doc(hidden)]
-pub static EV_ACCEL: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-#[doc(hidden)]
-pub static EV_RAID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-#[doc(hidden)]
-pub static EV_ARRIVE: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-
 /// A message travelling through the system.
 #[derive(Debug, Clone, Copy)]
-struct Msg {
+pub struct Msg {
     flow: usize,
     bytes: u64,
     born: Time,
@@ -102,6 +101,51 @@ struct OpCtx {
     msg: Msg,
     stage: Stage,
 }
+
+/// Every kind of work the engine schedules on the simulator. One inline
+/// enum value per event — the zero-allocation replacement for the former
+/// per-event `Box<dyn FnOnce>`.
+#[derive(Debug, Clone)]
+pub enum EngineEvent {
+    /// A message leaves its VM (or its frame starts onto the wire).
+    Inject { flow: usize, bytes: u64 },
+    /// A frame's last bit landed: enter the RX buffer or drop.
+    RxDeliver {
+        port: usize,
+        id: u64,
+        flow: usize,
+        bytes: u64,
+        born: Time,
+    },
+    /// Shaped fetch-engine wakeup. `gen` voids superseded schedules.
+    Fetch { flow: usize, gen: u64 },
+    /// An RX payload enters the accelerator after the shaping decision.
+    SubmitAccel { accel: usize, msg: Msg },
+    /// A TX frame's last bit left the wire.
+    TxDone { msg: Msg },
+    /// Host-interposed completion-path interference elapsed.
+    HostFinish { msg: Msg },
+    /// PCIe fabric pump wakeup. `gen` voids superseded schedules.
+    WakeFabric { gen: u64 },
+    /// Accelerator-unit pump wakeup.
+    WakeAccel { unit: usize, gen: u64 },
+    /// RAID pump wakeup.
+    WakeRaid { gen: u64 },
+    /// Algorithm-1 control-plane tick (self-rescheduling).
+    ControlTick,
+    /// A directive lands after the ~10 µs MMIO reconfiguration latency.
+    ApplyDirective(Directive),
+    /// A renegotiated shaper program lands after the reconfig latency.
+    InstallProgram { flow: usize, program: ShaperProgram },
+    /// Lifecycle: the flow registers and starts offering traffic.
+    FlowArrives { flow: usize },
+    /// Lifecycle: the flow deregisters, releasing committed capacity.
+    FlowDeparts { flow: usize },
+    /// Lifecycle: the flow renegotiates its SLO.
+    Renegotiate { flow: usize, slo: Slo },
+}
+
+use EngineEvent as Ev;
 
 /// Per-flow runtime state.
 struct FlowState {
@@ -163,10 +207,12 @@ pub struct World {
     raid: Option<Raid0>,
     raid_scheduled: Time,
     raid_gen: u64,
-    op_ctx: HashMap<u64, OpCtx>,
-    /// Injection time of frames parked in NIC RX buffers.
-    frame_born: HashMap<u64, Time>,
-    next_op: u64,
+    /// In-flight operation contexts, pooled: ids are reused slab slots, so
+    /// steady-state operation allocates nothing and the fabric's
+    /// `op << 2 | phase` message-id packing stays compact.
+    ops: Slab<OpCtx>,
+    /// Frame-id counter for RX diagnostics.
+    next_frame: u64,
     metrics: Vec<FlowMetrics>,
     samplers: Vec<ThroughputSampler>,
     traces: Vec<Vec<(Time, Time, u64)>>,
@@ -176,6 +222,82 @@ pub struct World {
     /// The SLO runtime. All admission / renegotiation / reshape decisions
     /// cross this trait; the engine never reads coordinator tables.
     ctrl: Box<dyn ControlPlane>,
+    /// Reused pump scratch buffers (allocation-free steady state).
+    scratch_fabric: Vec<OpComplete>,
+    scratch_accel: Vec<crate::accel::JobDone>,
+    scratch_raid: Vec<IoDone>,
+}
+
+impl Handler<EngineEvent> for World {
+    fn handle<Q: EventQueue<EngineEvent>>(&mut self, sim: &mut Sim<EngineEvent, Q>, ev: Ev) {
+        match ev {
+            Ev::Inject { flow, bytes } => self.inject(sim, flow, bytes),
+            Ev::RxDeliver { port, id, flow, bytes, born } => {
+                let arrived = sim.now();
+                if self.ports[port].rx_deliver(id, flow, bytes, born, arrived) {
+                    self.kick_fetch(sim, flow, arrived);
+                } else if arrived >= self.spec.warmup {
+                    self.metrics[flow].on_drop();
+                }
+            }
+            Ev::Fetch { flow, gen } => {
+                if self.flows[flow].fetch_gen != gen {
+                    return; // superseded
+                }
+                self.flows[flow].fetch_scheduled = Time::MAX;
+                self.ev_fetch(sim, flow);
+            }
+            Ev::SubmitAccel { accel, msg } => self.submit_accel(sim, accel, msg),
+            Ev::TxDone { msg } => {
+                let t = sim.now();
+                self.complete(sim, msg, t);
+            }
+            Ev::HostFinish { msg } => {
+                let t = sim.now();
+                self.finish(sim, msg, t);
+            }
+            Ev::WakeFabric { gen } => {
+                if self.fabric_gen != gen {
+                    return; // superseded
+                }
+                self.fabric_scheduled = Time::MAX;
+                self.wake_fabric(sim);
+            }
+            Ev::WakeAccel { unit, gen } => {
+                if self.accel_gen[unit] != gen {
+                    return; // superseded
+                }
+                self.accel_scheduled[unit] = Time::MAX;
+                self.wake_accel(sim, unit);
+            }
+            Ev::WakeRaid { gen } => {
+                if self.raid_gen != gen {
+                    return; // superseded
+                }
+                self.raid_scheduled = Time::MAX;
+                self.wake_raid(sim);
+            }
+            Ev::ControlTick => {
+                self.ev_control_tick(sim);
+                if sim.now() < self.spec.duration {
+                    sim.after(self.spec.control_period, Ev::ControlTick);
+                }
+            }
+            Ev::ApplyDirective(d) => self.apply_directive(sim, d),
+            Ev::InstallProgram { flow, program } => {
+                if self.flows[flow].departed_at.is_some() {
+                    return; // departed inside the reconfig window
+                }
+                let t = sim.now();
+                self.install_program(t, flow, program);
+                self.flows[flow].reconfigs += 1;
+                self.kick_fetch(sim, flow, t);
+            }
+            Ev::FlowArrives { flow } => self.ev_flow_arrives(sim, flow),
+            Ev::FlowDeparts { flow } => self.ev_flow_departs(sim, flow),
+            Ev::Renegotiate { flow, slo } => self.ev_renegotiate(sim, flow, slo),
+        }
+    }
 }
 
 impl World {
@@ -285,9 +407,8 @@ impl World {
             raid,
             raid_scheduled: Time::MAX,
             raid_gen: 0,
-            op_ctx: HashMap::new(),
-            frame_born: HashMap::new(),
-            next_op: 0,
+            ops: Slab::with_capacity(64),
+            next_frame: 0,
             metrics: (0..n).map(|_| FlowMetrics::new()).collect(),
             samplers: (0..n)
                 .map(|_| ThroughputSampler::new(spec.sampler_window))
@@ -295,6 +416,9 @@ impl World {
             traces: (0..n).map(|_| Vec::new()).collect(),
             host_cfg,
             ctrl,
+            scratch_fabric: Vec::new(),
+            scratch_accel: Vec::new(),
+            scratch_raid: Vec::new(),
             spec,
         }
     }
@@ -385,7 +509,7 @@ impl World {
     /// A lifecycle `Arrive` fires: register with the control plane, then
     /// start the flow's traffic from now on (pre-arrival epochs of the
     /// deterministic generator are skipped, not replayed).
-    fn ev_flow_arrives(&mut self, sim: &mut Sim<World>, flow: usize) {
+    fn ev_flow_arrives<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, flow: usize) {
         let now = sim.now();
         // A tenant may return after departing: re-arrival clears the
         // departed state so its traffic flows again, and re-registers
@@ -402,7 +526,7 @@ impl World {
 
     /// A lifecycle `Depart` fires: deregister (releasing committed
     /// capacity), stop the generator, and drain the interface state.
-    fn ev_flow_departs(&mut self, sim: &mut Sim<World>, flow: usize) {
+    fn ev_flow_departs<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, flow: usize) {
         let _ = self.ctrl.deregister_flow(flow);
         let now = sim.now();
         self.flows[flow].departed_at = Some(now);
@@ -413,7 +537,7 @@ impl World {
     /// A lifecycle `Renegotiate` fires: ask the control plane for a new
     /// contract. Acceptance reprograms the shaper after the reconfiguration
     /// latency; rejection keeps the old SLO in force.
-    fn ev_renegotiate(&mut self, sim: &mut Sim<World>, flow: usize, slo: Slo) {
+    fn ev_renegotiate<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, flow: usize, slo: Slo) {
         if self.flows[flow].departed_at.is_some() || !self.flows[flow].admitted {
             return;
         }
@@ -428,16 +552,10 @@ impl World {
                 self.flows[flow].contract_start = now.max(1);
                 self.flows[flow].contract_base_bytes = self.metrics[flow].bytes;
                 self.flows[flow].contract_base_ops = self.metrics[flow].completed;
-                let program = admitted.program;
-                sim.after(self.spec.reconfig_latency, move |w, s| {
-                    if w.flows[flow].departed_at.is_some() {
-                        return; // departed inside the reconfig window
-                    }
-                    let t = s.now();
-                    w.install_program(t, flow, program);
-                    w.flows[flow].reconfigs += 1;
-                    w.kick_fetch(s, flow, t);
-                });
+                sim.after(
+                    self.spec.reconfig_latency,
+                    Ev::InstallProgram { flow, program: admitted.program },
+                );
             }
             Err(ApiError::AdmissionRejected { .. }) => {
                 self.flows[flow].renegotiations_rejected += 1;
@@ -450,7 +568,7 @@ impl World {
 
     /// Schedule the flow's first arrival at or after `now`, skipping any
     /// generator epochs before it.
-    fn activate_arrivals(&mut self, sim: &mut Sim<World>, flow: usize) {
+    fn activate_arrivals<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, flow: usize) {
         let now = sim.now();
         loop {
             let a = self.flows[flow].gen.next();
@@ -460,7 +578,7 @@ impl World {
             if a.at >= now {
                 let bytes = a.bytes;
                 self.flows[flow].arrival_pending = true;
-                sim.at(a.at, move |w, s| w.inject(s, flow, bytes));
+                sim.at(a.at, Ev::Inject { flow, bytes });
                 return;
             }
         }
@@ -468,19 +586,18 @@ impl World {
 
     // ---- Arrivals --------------------------------------------------------
 
-    fn schedule_next_arrival(&mut self, sim: &mut Sim<World>, flow: usize) {
+    fn schedule_next_arrival<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, flow: usize) {
         let a = self.flows[flow].gen.next();
         if a.at >= self.spec.duration {
             return;
         }
         let bytes = a.bytes;
         self.flows[flow].arrival_pending = true;
-        sim.at(a.at.max(sim.now()), move |w, s| w.inject(s, flow, bytes));
+        sim.at(a.at.max(sim.now()), Ev::Inject { flow, bytes });
     }
 
     /// A message enters the system at `now`.
-    fn inject(&mut self, sim: &mut Sim<World>, flow: usize, bytes: u64) {
-        EV_ARRIVE.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    fn inject<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, flow: usize, bytes: u64) {
         self.flows[flow].arrival_pending = false;
         if self.flows[flow].departed_at.is_some() {
             return; // departed: the VM stopped submitting (chain ends here)
@@ -495,18 +612,10 @@ impl World {
             // Frame serializes over the wire, then lands in the RX buffer
             // (or drops there if the shaped puller left it full).
             let port = self.flows[flow].port;
-            let id = self.next_op;
-            self.next_op += 1;
+            let id = self.next_frame;
+            self.next_frame += 1;
             let done = self.ports[port].rx_begin(now, bytes);
-            sim.at(done, move |w, s| {
-                let arrived = s.now();
-                if w.ports[port].rx_deliver(id, flow, bytes, arrived) {
-                    w.frame_born.insert(id, now);
-                    w.kick_fetch(s, flow, arrived);
-                } else if arrived >= w.spec.warmup {
-                    w.metrics[flow].on_drop();
-                }
-            });
+            sim.at(done, Ev::RxDeliver { port, id, flow, bytes, born: now });
         } else {
             // VM-side DMA buffer (function call / TX / storage).
             if self.flows[flow].queue.len() >= self.spec.queue_cap {
@@ -533,7 +642,7 @@ impl World {
     /// A generation token voids superseded events (an event scheduled for a
     /// later time that a newer, earlier schedule replaced must not run, or
     /// stale self-rescheduling chains accumulate).
-    fn kick_fetch(&mut self, sim: &mut Sim<World>, flow: usize, t: Time) {
+    fn kick_fetch<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, flow: usize, t: Time) {
         let t = t.max(sim.now());
         if t >= self.flows[flow].fetch_scheduled {
             return;
@@ -541,20 +650,13 @@ impl World {
         self.flows[flow].fetch_scheduled = t;
         self.flows[flow].fetch_gen += 1;
         let gen = self.flows[flow].fetch_gen;
-        sim.at(t, move |w, s| {
-            if w.flows[flow].fetch_gen != gen {
-                return; // superseded
-            }
-            w.flows[flow].fetch_scheduled = Time::MAX;
-            w.ev_fetch(s, flow);
-        });
+        sim.at(t, Ev::Fetch { flow, gen });
     }
 
     /// The device-side fetch engine for one flow: gated by the shaper and
     /// the outstanding-fetch pipeline. This is where PatternA becomes
     /// PatternA′ — the decoupling of §4.1.
-    fn ev_fetch(&mut self, sim: &mut Sim<World>, flow: usize) {
-        EV_FETCH.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    fn ev_fetch<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, flow: usize) {
         loop {
             let now = sim.now();
             if self.flows[flow].inflight >= self.spec.fetch_pipeline {
@@ -623,17 +725,11 @@ impl World {
                             }
                             f
                         };
-                        let born = self
-                            .frame_born
-                            .remove(&frame.id)
-                            .unwrap_or(frame.arrived);
-                        let msg = Msg { flow, bytes: frame.bytes, born };
+                        let msg = Msg { flow, bytes: frame.bytes, born: frame.born };
                         // RX ingress data is already on the device: into the
                         // accelerator after the shaping decision latency.
                         let accel = self.spec.flows[flow].accel;
-                        sim.at(now + SHAPING_LATENCY, move |w, s| {
-                            w.submit_accel(s, accel, msg)
-                        });
+                        sim.at(now + SHAPING_LATENCY, Ev::SubmitAccel { accel, msg });
                     } else {
                         let msg = self.flows[flow].queue.pop_front().unwrap();
                         self.issue_ingress(sim, msg);
@@ -648,20 +744,18 @@ impl World {
     }
 
     /// Issue the PCIe/SSD leg of a message's ingress per its path/kind.
-    fn issue_ingress(&mut self, sim: &mut Sim<World>, msg: Msg) {
+    fn issue_ingress<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, msg: Msg) {
         let flow = msg.flow;
-        let op = self.next_op;
-        self.next_op += 1;
         match self.spec.flows[flow].kind {
             FlowKind::Accel => {
                 // Fetch the payload from host memory: DMA read.
-                self.op_ctx.insert(op, OpCtx { msg, stage: Stage::Fetch });
+                let op = self.ops.insert(OpCtx { msg, stage: Stage::Fetch });
                 self.fabric.read(flow, msg.bytes, op);
                 self.wake_fabric(sim);
             }
             FlowKind::StorageRead => {
                 // NVMe read: SSD first, then data DMA'd Up to the host.
-                self.op_ctx.insert(op, OpCtx { msg, stage: Stage::SsdRead });
+                let op = self.ops.insert(OpCtx { msg, stage: Stage::SsdRead });
                 self.raid
                     .as_mut()
                     .expect("storage flow without RAID")
@@ -671,7 +765,7 @@ impl World {
             FlowKind::StorageWrite => {
                 // NVMe write: fetch the data from host memory (Down), then
                 // program the SSD.
-                self.op_ctx.insert(op, OpCtx { msg, stage: Stage::Fetch });
+                let op = self.ops.insert(OpCtx { msg, stage: Stage::Fetch });
                 self.fabric.read(flow, msg.bytes, op);
                 self.wake_fabric(sim);
             }
@@ -679,92 +773,78 @@ impl World {
     }
 
     /// Submit a payload-resident message to an accelerator.
-    fn submit_accel(&mut self, sim: &mut Sim<World>, accel: usize, msg: Msg) {
-        let op = self.next_op;
-        self.next_op += 1;
-        self.op_ctx.insert(op, OpCtx { msg, stage: Stage::Fetch });
+    fn submit_accel<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, accel: usize, msg: Msg) {
+        let op = self.ops.insert(OpCtx { msg, stage: Stage::Fetch });
         self.accels[accel].submit(Job { id: op, flow: msg.flow, bytes: msg.bytes });
         self.wake_accel(sim, accel);
     }
 
     // ---- Component pumps (dedup-scheduled wakes) ------------------------
 
-    fn wake_fabric(&mut self, sim: &mut Sim<World>) {
-        EV_FABRIC.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    fn wake_fabric<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>) {
         let now = sim.now();
-        let (done, next) = self.fabric.pump(now);
-        for d in done {
+        // `take` always yields an empty vec: it is stored back only after
+        // `drain` empties it, and reentrant calls see the fresh default.
+        let mut done = std::mem::take(&mut self.scratch_fabric);
+        debug_assert!(done.is_empty());
+        let next = self.fabric.pump_into(now, &mut done);
+        for d in done.drain(..) {
             self.on_fabric_op(sim, d);
         }
+        self.scratch_fabric = done;
         if let Some(t) = next {
             let t = t.max(now + 1);
             if t < self.fabric_scheduled {
                 self.fabric_scheduled = t;
                 self.fabric_gen += 1;
-                let gen = self.fabric_gen;
-                sim.at(t, move |w, s| {
-                    if w.fabric_gen != gen {
-                        return; // superseded
-                    }
-                    w.fabric_scheduled = Time::MAX;
-                    w.wake_fabric(s);
-                });
+                sim.at(t, Ev::WakeFabric { gen: self.fabric_gen });
             }
         }
     }
 
-    fn wake_accel(&mut self, sim: &mut Sim<World>, i: usize) {
-        EV_ACCEL.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    fn wake_accel<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, i: usize) {
         let now = sim.now();
-        let (done, next) = self.accels[i].pump(now);
-        for d in done {
+        let mut done = std::mem::take(&mut self.scratch_accel);
+        debug_assert!(done.is_empty());
+        let next = self.accels[i].pump_into(now, &mut done);
+        for d in done.drain(..) {
             self.on_accel_done(sim, d.job.id, d.egress_bytes, d.at);
         }
+        self.scratch_accel = done;
         if let Some(t) = next {
             let t = t.max(now + 1);
             if t < self.accel_scheduled[i] {
                 self.accel_scheduled[i] = t;
                 self.accel_gen[i] += 1;
-                let gen = self.accel_gen[i];
-                sim.at(t, move |w, s| {
-                    if w.accel_gen[i] != gen {
-                        return; // superseded
-                    }
-                    w.accel_scheduled[i] = Time::MAX;
-                    w.wake_accel(s, i);
-                });
+                sim.at(t, Ev::WakeAccel { unit: i, gen: self.accel_gen[i] });
             }
         }
     }
 
-    fn wake_raid(&mut self, sim: &mut Sim<World>) {
+    fn wake_raid<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>) {
         let now = sim.now();
         let Some(raid) = self.raid.as_mut() else { return };
-        let (done, next) = raid.pump(now);
-        for d in done {
+        let mut done = std::mem::take(&mut self.scratch_raid);
+        debug_assert!(done.is_empty());
+        let next = raid.pump_into(now, &mut done);
+        for d in done.drain(..) {
             self.on_raid_done(sim, d.io.id);
         }
+        self.scratch_raid = done;
         if let Some(t) = next {
             let t = t.max(now + 1);
             if t < self.raid_scheduled {
                 self.raid_scheduled = t;
                 self.raid_gen += 1;
-                let gen = self.raid_gen;
-                sim.at(t, move |w, s| {
-                    if w.raid_gen != gen {
-                        return; // superseded
-                    }
-                    w.raid_scheduled = Time::MAX;
-                    w.wake_raid(s);
-                });
+                sim.at(t, Ev::WakeRaid { gen: self.raid_gen });
             }
         }
     }
 
     // ---- Stage transitions ----------------------------------------------
 
-    fn on_fabric_op(&mut self, sim: &mut Sim<World>, d: OpComplete) {
-        let Some(ctx) = self.op_ctx.remove(&d.op) else { return };
+    fn on_fabric_op<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, d: OpComplete) {
+        let Some(ctx) = self.ops.remove(d.op) else { return };
         let msg = ctx.msg;
         let flow = msg.flow;
         match (ctx.stage, d.kind) {
@@ -774,9 +854,7 @@ impl World {
                     self.submit_accel(sim, accel, msg);
                 }
                 FlowKind::StorageWrite => {
-                    let op = self.next_op;
-                    self.next_op += 1;
-                    self.op_ctx.insert(op, OpCtx { msg, stage: Stage::SsdWrite });
+                    let op = self.ops.insert(OpCtx { msg, stage: Stage::SsdWrite });
                     self.raid
                         .as_mut()
                         .expect("storage flow without RAID")
@@ -790,9 +868,7 @@ impl World {
             }
             (Stage::P2pStore, OpKind::Write) => {
                 // Result crossed PCIe into the NVMe buffer: program the SSD.
-                let op = self.next_op;
-                self.next_op += 1;
-                self.op_ctx.insert(op, OpCtx { msg, stage: Stage::SsdWrite });
+                let op = self.ops.insert(OpCtx { msg, stage: Stage::SsdWrite });
                 self.raid
                     .as_mut()
                     .expect("p2p flow without RAID")
@@ -803,16 +879,20 @@ impl World {
         }
     }
 
-    fn on_accel_done(&mut self, sim: &mut Sim<World>, op: u64, egress_bytes: u64, at: Time) {
-        let Some(ctx) = self.op_ctx.remove(&op) else { return };
+    fn on_accel_done<Q: EventQueue<Ev>>(
+        &mut self,
+        sim: &mut Sim<Ev, Q>,
+        op: u64,
+        egress_bytes: u64,
+        at: Time,
+    ) {
+        let Some(ctx) = self.ops.remove(op) else { return };
         let msg = ctx.msg;
         let flow = msg.flow;
         match self.flows[flow].path {
             Path::FunctionCall | Path::InlineNicRx => {
                 // Result DMA-written to host memory (Up).
-                let op2 = self.next_op;
-                self.next_op += 1;
-                self.op_ctx.insert(op2, OpCtx { msg, stage: Stage::Egress });
+                let op2 = self.ops.insert(OpCtx { msg, stage: Stage::Egress });
                 self.fabric.write(flow, egress_bytes, op2);
                 self.wake_fabric(sim);
             }
@@ -820,32 +900,25 @@ impl World {
                 // Result leaves on the wire.
                 let port = self.flows[flow].port;
                 let done = self.ports[port].tx_frame(at, egress_bytes);
-                sim.at(done.max(sim.now()), move |w, s| {
-                    let t = s.now();
-                    w.complete(s, msg, t);
-                });
+                sim.at(done.max(sim.now()), Ev::TxDone { msg });
             }
             Path::InlineP2p => {
                 // Result shaped into the NVMe subsystem: PCIe write + program.
-                let op2 = self.next_op;
-                self.next_op += 1;
-                self.op_ctx.insert(op2, OpCtx { msg, stage: Stage::P2pStore });
+                let op2 = self.ops.insert(OpCtx { msg, stage: Stage::P2pStore });
                 self.fabric.write(flow, egress_bytes, op2);
                 self.wake_fabric(sim);
             }
         }
     }
 
-    fn on_raid_done(&mut self, sim: &mut Sim<World>, op: u64) {
-        let Some(ctx) = self.op_ctx.remove(&op) else { return };
+    fn on_raid_done<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, op: u64) {
+        let Some(ctx) = self.ops.remove(op) else { return };
         let msg = ctx.msg;
         let flow = msg.flow;
         match ctx.stage {
             Stage::SsdRead => {
                 // Data DMA'd Up to the host.
-                let op2 = self.next_op;
-                self.next_op += 1;
-                self.op_ctx.insert(op2, OpCtx { msg, stage: Stage::Egress });
+                let op2 = self.ops.insert(OpCtx { msg, stage: Stage::Egress });
                 self.fabric.write(flow, msg.bytes, op2);
                 self.wake_fabric(sim);
             }
@@ -858,7 +931,7 @@ impl World {
     }
 
     /// A message finished its device-side journey.
-    fn complete(&mut self, sim: &mut Sim<World>, msg: Msg, at: Time) {
+    fn complete<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, msg: Msg, at: Time) {
         // Host-interposed modes pay CPU-interference cost on the completion
         // path (guest notification / vCPU wakeup through the hypervisor).
         if let Some(cfg) = self.host_cfg.clone() {
@@ -872,17 +945,14 @@ impl World {
             }
             if extra > 0 {
                 let later = at.max(sim.now()) + extra;
-                sim.at(later, move |w, s| {
-                    let t = s.now();
-                    w.finish(s, msg, t);
-                });
+                sim.at(later, Ev::HostFinish { msg });
                 return;
             }
         }
         self.finish(sim, msg, at.max(sim.now()));
     }
 
-    fn finish(&mut self, sim: &mut Sim<World>, msg: Msg, at: Time) {
+    fn finish<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, msg: Msg, at: Time) {
         let flow = msg.flow;
         self.flows[flow].inflight = self.flows[flow].inflight.saturating_sub(1);
         if at >= self.spec.warmup {
@@ -908,7 +978,7 @@ impl World {
     /// control plane, and apply the resulting directives after the
     /// reconfiguration latency (~10 µs of MMIO round trips, §5.3.1) —
     /// without interrupting dataplane operation.
-    fn ev_control_tick(&mut self, sim: &mut Sim<World>) {
+    fn ev_control_tick<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>) {
         let now = sim.now();
         // 1. Refresh measured windows from the "hardware counters".
         let mut windows: Vec<(usize, MeasuredWindow)> = Vec::new();
@@ -937,12 +1007,12 @@ impl World {
         let directives = self.ctrl.tick(now, &windows);
         let delay = self.spec.reconfig_latency;
         for d in directives {
-            sim.after(delay, move |w, s| w.apply_directive(s, d));
+            sim.after(delay, Ev::ApplyDirective(d));
         }
     }
 
     /// Apply one control-plane directive to the hardware.
-    fn apply_directive(&mut self, sim: &mut Sim<World>, d: Directive) {
+    fn apply_directive<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, d: Directive) {
         let now = sim.now();
         match d {
             Directive::SetRate { flow, rate } => {
@@ -961,16 +1031,25 @@ impl World {
     }
 }
 
-/// The engine: a [`World`] plus its simulator.
-pub struct Engine {
-    pub sim: Sim<World>,
+/// The engine: a [`World`] plus its simulator, generic over the event-queue
+/// discipline (the reference binary heap by default).
+pub struct Engine<Q: EventQueue<EngineEvent> = BinaryHeapQueue<EngineEvent>> {
+    pub sim: Sim<EngineEvent, Q>,
     pub world: World,
 }
 
 impl Engine {
+    /// Build on the reference binary-heap queue.
     pub fn new(spec: ExperimentSpec) -> Self {
+        Self::build(spec)
+    }
+}
+
+impl<Q: EventQueue<EngineEvent> + Default> Engine<Q> {
+    /// Build on queue discipline `Q` (see [`crate::sim::CalendarQueue`]).
+    pub fn build(spec: ExperimentSpec) -> Self {
         let mut world = World::new(spec);
-        let mut sim = Sim::new();
+        let mut sim: Sim<EngineEvent, Q> = Sim::new();
         let n = world.flows.len();
         // A flow is present from t = 0 unless its *earliest* lifecycle
         // event is an Arrive (it joins later). Initially-present flows
@@ -1008,25 +1087,22 @@ impl Engine {
             );
             match *e {
                 LifecycleEvent::Arrive { flow, at } if flow < n => {
-                    sim.at(at, move |w, s| w.ev_flow_arrives(s, flow));
+                    sim.at(at, Ev::FlowArrives { flow });
                 }
                 LifecycleEvent::Depart { flow, at } if flow < n => {
-                    sim.at(at, move |w, s| w.ev_flow_departs(s, flow));
+                    sim.at(at, Ev::FlowDeparts { flow });
                 }
                 LifecycleEvent::Renegotiate { flow, at, slo } if flow < n => {
-                    sim.at(at, move |w, s| w.ev_renegotiate(s, flow, slo));
+                    sim.at(at, Ev::Renegotiate { flow, slo });
                 }
                 _ => {}
             }
         }
         // Control-plane ticker (Algorithm 1 "run by every client server
         // periodically"); only control planes that plan online need it.
+        // The tick event re-arms itself while the run lasts.
         if world.ctrl.needs_ticks() {
-            let period = world.spec.control_period;
-            crate::sim::every(&mut sim, period, |w: &mut World, s| {
-                w.ev_control_tick(s);
-                s.now() < w.spec.duration
-            });
+            sim.after(world.spec.control_period, Ev::ControlTick);
         }
         Engine { sim, world }
     }
@@ -1093,14 +1169,22 @@ impl Engine {
             accel_util: w.accels.iter().map(|a| a.utilization(duration)).collect(),
             nic_rx_dropped: w.ports.iter().map(|p| p.rx_dropped).sum(),
             events: self.sim.executed(),
+            peak_queue_depth: self.sim.peak_pending(),
+            queue: self.sim.queue_name(),
             wall_secs: wall,
         }
     }
 }
 
-/// Convenience: build + run in one call.
+/// Convenience: build + run on the reference binary-heap queue.
 pub fn run(spec: &ExperimentSpec) -> SystemReport {
     Engine::new(spec.clone()).run()
+}
+
+/// Build + run on a chosen queue discipline, e.g.
+/// `run_with::<CalendarQueue<EngineEvent>>(&spec)`.
+pub fn run_with<Q: EventQueue<EngineEvent> + Default>(spec: &ExperimentSpec) -> SystemReport {
+    Engine::<Q>::build(spec.clone()).run()
 }
 
 #[cfg(test)]
@@ -1108,6 +1192,7 @@ mod tests {
     use super::*;
     use crate::accel::AccelModel;
     use crate::flow::{FlowSpec, TrafficPattern};
+    use crate::sim::CalendarQueue;
     use crate::storage::SsdConfig;
     use crate::util::units::{Rate, MILLIS};
 
@@ -1169,6 +1254,18 @@ mod tests {
         let a1 = f1.goodput.as_gbps();
         assert!((a0 - 10.0).abs() / 10.0 < 0.08, "flow0 {a0:.2} Gbps");
         assert!((a1 - 12.0).abs() / 12.0 < 0.08, "flow1 {a1:.2} Gbps");
+    }
+
+    #[test]
+    fn calendar_queue_produces_identical_report() {
+        // The engine-level determinism contract across queue disciplines;
+        // the full golden test lives in rust/tests/determinism.rs.
+        let spec = two_flow_spec(Mode::Arcus, 0.5, 0.4);
+        let heap = run(&spec);
+        let cal = run_with::<CalendarQueue<EngineEvent>>(&spec);
+        assert_eq!(heap.canonical(), cal.canonical());
+        assert_eq!(heap.events, cal.events);
+        assert_eq!(heap.peak_queue_depth, cal.peak_queue_depth);
     }
 
     #[test]

@@ -11,6 +11,6 @@ pub mod engine;
 pub mod report;
 pub mod spec;
 
-pub use engine::{run, Engine};
+pub use engine::{run, run_with, Engine, EngineEvent};
 pub use report::{FlowReport, SystemReport};
 pub use spec::{ExperimentSpec, LifecycleEvent, Mode, RaidSpec};

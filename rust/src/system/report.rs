@@ -120,6 +120,10 @@ pub struct SystemReport {
     pub nic_rx_dropped: u64,
     /// DES events executed (perf accounting).
     pub events: u64,
+    /// High-water mark of the pending-event set (perf accounting).
+    pub peak_queue_depth: usize,
+    /// Event-queue discipline the run used ("binary_heap" / "calendar").
+    pub queue: &'static str,
     /// Wall-clock seconds the simulation took (perf accounting).
     pub wall_secs: f64,
 }
@@ -156,6 +160,33 @@ impl SystemReport {
         } else {
             self.events as f64 / self.wall_secs
         }
+    }
+
+    /// Canonical deterministic serialization: every virtual-time outcome of
+    /// the run, *excluding* wall-clock measurements and the queue label.
+    /// Two runs of the same spec — on either event-queue discipline — must
+    /// produce byte-identical canonical strings; the golden determinism
+    /// test (`rust/tests/determinism.rs`) asserts exactly that.
+    pub fn canonical(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "mode={} span={} events={} peak_queue={} pcie_up={:?} pcie_down={:?} \
+             accel_util={:?} nic_rx_dropped={}\n",
+            self.mode,
+            self.measured_span,
+            self.events,
+            self.peak_queue_depth,
+            self.pcie_up_util,
+            self.pcie_down_util,
+            self.accel_util,
+            self.nic_rx_dropped,
+        ));
+        for f in &self.per_flow {
+            // Debug formatting of f64 is shortest-roundtrip: byte-stable
+            // for identical values, and any numeric divergence shows up.
+            out.push_str(&format!("{f:?}\n"));
+        }
+        out
     }
 
     /// Pretty-print a compact per-flow table (used by the CLI).

@@ -1,9 +1,11 @@
 //! Shared utilities: deterministic RNG, units, and small helpers.
 
 pub mod rng;
+pub mod slab;
 pub mod units;
 
 pub use rng::Rng;
+pub use slab::Slab;
 pub use units::{Rate, Time};
 
 /// Round `x` up to the next multiple of `m` (m > 0).

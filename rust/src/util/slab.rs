@@ -1,0 +1,146 @@
+//! Deterministic slab allocator for in-flight operation state.
+//!
+//! The engine used to key per-operation context by a monotonically growing
+//! `u64` in a `HashMap` — one hash + probe per packet stage, plus rehash
+//! churn as the map grows. A slab keeps contexts in a flat `Vec` and hands
+//! out *reused* indices from a LIFO free list: lookups are a bounds-checked
+//! array index, insertion never rehashes, and the id space stays small so
+//! downstream id packing (e.g. the fabric's `op << 2 | phase` message ids)
+//! never overflows.
+//!
+//! Determinism: the free list is LIFO and all operations are O(1) with no
+//! hashing, so two identical runs hand out identical ids in identical
+//! order — slab ids are safe to use in any code path that must replay
+//! byte-identically.
+
+/// A slab of `T` keyed by reusable `u64` ids.
+#[derive(Debug, Clone)]
+pub struct Slab<T> {
+    entries: Vec<Option<T>>,
+    free: Vec<u64>,
+    live: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Self {
+        Slab {
+            entries: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+        }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Slab {
+            entries: Vec::with_capacity(cap),
+            free: Vec::new(),
+            live: 0,
+        }
+    }
+
+    /// Store `value`, returning its id. Ids are reused LIFO after removal.
+    pub fn insert(&mut self, value: T) -> u64 {
+        self.live += 1;
+        match self.free.pop() {
+            Some(id) => {
+                debug_assert!(self.entries[id as usize].is_none());
+                self.entries[id as usize] = Some(value);
+                id
+            }
+            None => {
+                self.entries.push(Some(value));
+                (self.entries.len() - 1) as u64
+            }
+        }
+    }
+
+    /// Take the value out, freeing the id for reuse. Returns `None` for
+    /// ids that are not live (already removed or never issued).
+    pub fn remove(&mut self, id: u64) -> Option<T> {
+        let v = self.entries.get_mut(id as usize)?.take();
+        if v.is_some() {
+            self.free.push(id);
+            self.live -= 1;
+        }
+        v
+    }
+
+    pub fn get(&self, id: u64) -> Option<&T> {
+        self.entries.get(id as usize)?.as_ref()
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut T> {
+        self.entries.get_mut(id as usize)?.as_mut()
+    }
+
+    /// Live entries (not slots).
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Allocated slots (high-water mark of concurrent liveness).
+    pub fn capacity_used(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_roundtrip() {
+        let mut s = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        assert_ne!(a, b);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a), Some(&"a"));
+        assert_eq!(s.remove(a), Some("a"));
+        assert_eq!(s.remove(a), None, "double remove is None");
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get(b), Some(&"b"));
+    }
+
+    #[test]
+    fn ids_reuse_lifo_and_deterministically() {
+        let run = || {
+            let mut s = Slab::new();
+            let mut ids = Vec::new();
+            for i in 0..8u32 {
+                ids.push(s.insert(i));
+            }
+            // Remove a few, insert again: freed ids come back LIFO.
+            s.remove(ids[2]);
+            s.remove(ids[5]);
+            let x = s.insert(100);
+            let y = s.insert(101);
+            (ids, x, y)
+        };
+        let (ids, x, y) = run();
+        assert_eq!(x, ids[5], "last freed, first reused");
+        assert_eq!(y, ids[2]);
+        assert_eq!(run(), (ids, x, y), "identical runs hand out identical ids");
+    }
+
+    #[test]
+    fn slot_count_tracks_peak_concurrency_not_total_traffic() {
+        let mut s = Slab::new();
+        for i in 0..1000u64 {
+            let id = s.insert(i);
+            s.remove(id);
+        }
+        assert_eq!(s.capacity_used(), 1, "serial reuse needs one slot");
+        assert!(s.is_empty());
+    }
+}
