@@ -47,6 +47,11 @@ pub struct AccelUnit {
     /// Busy-time accounting for utilization reports.
     busy: Time,
     served_bytes: u64,
+    /// Fault-injection throughput multiplier in (0, 1]; 1.0 = healthy.
+    /// Service times stretch by `1/slowdown` while degraded — the job in
+    /// the pipeline keeps its finish time (a fault never rewrites the
+    /// past), only newly started jobs pay the penalty.
+    slowdown: f64,
 }
 
 impl AccelUnit {
@@ -58,6 +63,29 @@ impl AccelUnit {
             rng: Rng::for_stream(seed, 0xACCE1),
             busy: 0,
             served_bytes: 0,
+            slowdown: 1.0,
+        }
+    }
+
+    /// Fault injection: scale sustained throughput by `factor` ∈ (0, 1]
+    /// (1.0 restores full health). See [`crate::faults`].
+    pub fn set_slowdown(&mut self, factor: f64) {
+        debug_assert!(factor > 0.0 && factor <= 1.0, "slowdown factor {factor}");
+        self.slowdown = factor.clamp(f64::MIN_POSITIVE, 1.0);
+    }
+
+    /// Current fault-injection throughput multiplier (1.0 = healthy).
+    pub fn slowdown(&self) -> f64 {
+        self.slowdown
+    }
+
+    /// Service time for one job under the current degradation.
+    fn job_time(&mut self, bytes: u64) -> Time {
+        let t = self.model.service_time(bytes, &mut self.rng);
+        if self.slowdown < 1.0 {
+            (t as f64 / self.slowdown).round() as Time
+        } else {
+            t
         }
     }
 
@@ -105,7 +133,7 @@ impl AccelUnit {
                     });
                     // Start the next job back-to-back at `fin`.
                     if let Some((_, _, next)) = self.input.pop() {
-                        let t = self.model.service_time(next.bytes, &mut self.rng);
+                        let t = self.job_time(next.bytes);
                         self.busy += t;
                         self.current = Some((next, fin + t));
                     }
@@ -113,7 +141,7 @@ impl AccelUnit {
                 Some((_, fin)) => return Some(fin),
                 None => match self.input.pop() {
                     Some((_, _, job)) => {
-                        let t = self.model.service_time(job.bytes, &mut self.rng);
+                        let t = self.job_time(job.bytes);
                         self.busy += t;
                         self.current = Some((job, now + t));
                     }
@@ -241,6 +269,27 @@ mod tests {
         }
         let done = drain(&mut unit);
         assert_eq!(done.last().unwrap().at, 100 * per_job);
+    }
+
+    #[test]
+    fn slowdown_stretches_service_and_restores() {
+        let model = AccelModel::synthetic(Rate::gbps(10.0));
+        let per_job = model.base_service_time(1000);
+        let mut unit = AccelUnit::new(model, 1, Policy::RoundRobin, 3);
+        unit.set_slowdown(0.5); // half throughput = double service time
+        for i in 0..10 {
+            unit.submit(Job { id: i, flow: 0, bytes: 1000 });
+        }
+        let done = drain(&mut unit);
+        assert_eq!(done.last().unwrap().at, 10 * 2 * per_job);
+        // Healing restores the model's native rate for new jobs.
+        unit.set_slowdown(1.0);
+        for i in 10..20 {
+            unit.submit(Job { id: i, flow: 0, bytes: 1000 });
+        }
+        let healed = drain(&mut unit);
+        let span = healed.last().unwrap().at - healed.first().unwrap().at;
+        assert_eq!(span, 9 * per_job);
     }
 
     #[test]

@@ -33,11 +33,24 @@ pub struct ArcusControlPlane {
     profile: ProfileTable,
     acc_table: AccTable,
     status: PerFlowStatusTable,
+    /// The true (unskewed) profile table, saved while any `ProfileSkew`
+    /// fault mis-states `profile`; restored when the last skew heals.
+    pristine_profile: Option<ProfileTable>,
+    /// Active skews by accelerator name — independent faults on different
+    /// accelerators may overlap, and healing one must not heal the others.
+    profile_skews: Vec<(String, f64)>,
 }
 
 impl ArcusControlPlane {
     pub fn new(profile: ProfileTable, acc_table: AccTable, cfg: PlannerConfig) -> Self {
-        ArcusControlPlane { cfg, profile, acc_table, status: PerFlowStatusTable::default() }
+        ArcusControlPlane {
+            cfg,
+            profile,
+            acc_table,
+            status: PerFlowStatusTable::default(),
+            pristine_profile: None,
+            profile_skews: Vec::new(),
+        }
     }
 
     /// Learn the profile table for a device list on a PCIe fabric and
@@ -361,14 +374,61 @@ impl ControlPlane for ArcusControlPlane {
         })
     }
 
+    fn set_profile_skew(&mut self, accel: &str, factor: f64) {
+        // Skews never compound: the active set is re-applied to the true
+        // table on every change, so factor 1.0 restores an accelerator
+        // exactly (byte-identical, not a round-tripped reciprocal) without
+        // disturbing skews still active on other accelerators.
+        self.profile_skews.retain(|(name, _)| name != accel);
+        if (factor - 1.0).abs() >= 1e-12 {
+            self.profile_skews.push((accel.to_string(), factor));
+        }
+        if self.profile_skews.is_empty() {
+            // Last skew healed (or a no-op heal): the true table is back.
+            if let Some(p) = self.pristine_profile.take() {
+                self.profile = p;
+            }
+            return;
+        }
+        let pristine = self
+            .pristine_profile
+            .take()
+            .unwrap_or_else(|| self.profile.clone());
+        self.profile = pristine.clone();
+        for (name, f) in &self.profile_skews {
+            self.profile.scale_accel(name, *f);
+        }
+        self.pristine_profile = Some(pristine);
+    }
+
     fn tick(&mut self, _now: Time, windows: &[(FlowId, MeasuredWindow)]) -> Vec<Directive> {
         // 1. Ingest the hardware counters (SLOViolationChecker).
         for &(flow, w) in windows {
             self.status.record_window(flow, w);
         }
         // 2. Plan: path selection + reshape decisions for violating flows.
-        let actions =
+        let mut actions =
             planner::run_tick(&self.cfg, &self.profile, &self.acc_table, &self.status);
+        // 2b. Over-commit reconciliation (profile mis-estimation): clamp
+        // committed flows on over-committed engines to their true shares,
+        // and suppress compensation boosts there — boosting cannot conjure
+        // capacity that does not exist.
+        let frozen = planner::overcommitted_accels(&self.cfg, &self.profile, &self.status);
+        if !frozen.is_empty() {
+            actions.retain(|a| {
+                let flow = match a {
+                    planner::Action::Reshape { flow, .. }
+                    | planner::Action::SwitchPath { flow, .. } => *flow,
+                };
+                self.status.get(flow).map_or(true, |r| !frozen.contains(&r.accel))
+            });
+            actions.extend(planner::rebalance_overcommit(
+                &self.cfg,
+                &self.profile,
+                &self.status,
+                &frozen,
+            ));
+        }
         let mut out = Vec::with_capacity(actions.len());
         for a in actions {
             match a {
@@ -520,6 +580,88 @@ mod tests {
         }
         // The registry tracks the nominal programmed rate.
         assert!(cp.query_status(1).unwrap().shaped_rate.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn profile_skew_overadmits_then_heals_to_clamped_rates() {
+        let mut cp = cp();
+        // True budget at 1500 B is ~24.6 Gbps; a 1.5× skew admits 3 × 12.
+        cp.set_profile_skew("ipsec", 1.5);
+        for i in 0..3 {
+            cp.register_flow(&req(i, Slo::gbps(12.0)))
+                .unwrap_or_else(|e| panic!("flow {i} rejected under skew: {e}"));
+        }
+        // Healing the table exposes the over-commitment; the first tick
+        // emits clamping directives bringing the programmed sum under the
+        // true budget.
+        cp.set_profile_skew("ipsec", 1.0);
+        let ds = cp.tick(0, &[]);
+        assert!(!ds.is_empty(), "expected clamping directives");
+        let sum: f64 = (0..3)
+            .filter_map(|f| cp.query_status(f).and_then(|v| v.shaped_rate))
+            .sum();
+        let entry = cp.profile().capacity("ipsec", Path::FunctionCall, 1500, 3).unwrap();
+        let budget = entry.capacity.as_bits_per_sec() / 8.0
+            * (1.0 - cp.planner_cfg().admission_headroom);
+        assert!(sum <= budget * 1.001, "programmed {sum:.3e} > true budget {budget:.3e}");
+        // The pass converges: a second tick emits no further clamps.
+        assert!(cp.tick(0, &[]).is_empty());
+    }
+
+    #[test]
+    fn skews_on_different_accels_are_independent() {
+        let mut cp = ArcusControlPlane::from_models(
+            &[AccelModel::ipsec_32g(), AccelModel::aes_128()],
+            &FabricConfig::gen3_x8(),
+            PlannerConfig::default(),
+        );
+        let cap = |cp: &ArcusControlPlane, name: &str| {
+            cp.profile()
+                .capacity(name, Path::FunctionCall, 1500, 2)
+                .unwrap()
+                .capacity
+                .0
+        };
+        let (ipsec0, aes0) = (cap(&cp, "ipsec"), cap(&cp, "aes128"));
+        cp.set_profile_skew("ipsec", 2.0);
+        cp.set_profile_skew("aes128", 0.5);
+        // Skewing aes128 must not disturb ipsec's active skew.
+        assert!((cap(&cp, "ipsec") - ipsec0 * 2.0).abs() < 1.0);
+        assert!((cap(&cp, "aes128") - aes0 * 0.5).abs() < 1.0);
+        // Healing ipsec keeps aes128's skew in force...
+        cp.set_profile_skew("ipsec", 1.0);
+        assert_eq!(cap(&cp, "ipsec").to_bits(), ipsec0.to_bits());
+        assert!((cap(&cp, "aes128") - aes0 * 0.5).abs() < 1.0);
+        // ...and healing the last skew restores the exact true table.
+        cp.set_profile_skew("aes128", 1.0);
+        assert_eq!(cap(&cp, "aes128").to_bits(), aes0.to_bits());
+    }
+
+    #[test]
+    fn skew_restores_byte_identical_table() {
+        let mut cp = cp();
+        let before = cp
+            .profile()
+            .capacity("ipsec", Path::FunctionCall, 1500, 2)
+            .unwrap()
+            .capacity
+            .0;
+        cp.set_profile_skew("ipsec", 0.4);
+        let skewed = cp
+            .profile()
+            .capacity("ipsec", Path::FunctionCall, 1500, 2)
+            .unwrap()
+            .capacity
+            .0;
+        assert!((skewed - before * 0.4).abs() < 1.0);
+        cp.set_profile_skew("ipsec", 1.0);
+        let after = cp
+            .profile()
+            .capacity("ipsec", Path::FunctionCall, 1500, 2)
+            .unwrap()
+            .capacity
+            .0;
+        assert_eq!(before.to_bits(), after.to_bits(), "heal must be exact");
     }
 
     #[test]

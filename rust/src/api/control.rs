@@ -155,6 +155,12 @@ pub trait ControlPlane {
     /// and statically-shaped baselines do not.)
     fn needs_ticks(&self) -> bool;
 
+    /// Fault-injection / re-profiling hook: scale this plane's *belief*
+    /// about `accel`'s capacity by `factor` (the hardware is untouched;
+    /// only the table lies). `factor == 1.0` restores the true table.
+    /// Default: ignored — the baseline planes hold no profile state.
+    fn set_profile_skew(&mut self, _accel: &str, _factor: f64) {}
+
     /// Implementation name, for reports.
     fn name(&self) -> &'static str;
 }

@@ -37,11 +37,24 @@
 //! at_ms = 3.0
 //! slo_gbps = 12.0           # renegotiate only (slo_kiops also accepted;
 //!                           # neither = drop to best_effort)
+//!
+//! [[faults]]                # optional fault-injection plan (crate::faults)
+//! kind = "accel_slowdown"   # accel_slowdown | link_degrade | ssd_slowdown |
+//!                           # profile_skew | rogue_tenant | control_outage
+//! at_ms = 4.0               # window [at_ms, until_ms)
+//! until_ms = 8.0
+//! factor = 0.5              # throughput multiplier (accel/link, in (0,1]),
+//!                           # latency multiplier (ssd, ≥ 1), or capacity
+//!                           # mis-estimate (profile_skew, > 0)
+//! unit = 0                  # accel_slowdown: [[accels]] index
+//! accel = 0                 # profile_skew: [[accels]] index
+//! flow = 2                  # rogue_tenant: [[flows]] index
 //! ```
 
 use anyhow::{bail, Context, Result};
 
 use crate::accel::AccelModel;
+use crate::faults::{validate_faults, FaultKind, FaultSpec};
 use crate::flow::pattern::{Burstiness, SizeDist};
 use crate::flow::{FlowKind, FlowSpec, Path, Slo, TrafficPattern};
 use crate::storage::SsdConfig;
@@ -88,7 +101,81 @@ pub fn spec_from_document(doc: &Document) -> Result<ExperimentSpec> {
         spec.lifecycle
             .push(lifecycle_from_table(i, t, spec.flows.len(), spec.duration)?);
     }
+    for (i, t) in doc.array_of("faults").iter().enumerate() {
+        spec.faults.push(fault_from_table(i, t)?);
+    }
+    if !spec.faults.is_empty() {
+        // Real accel count, not max(1): an accel fault on a storage-only
+        // config (no [[accels]]) must fail here, not panic mid-run.
+        validate_faults(
+            &spec.faults,
+            spec.duration,
+            spec.warmup,
+            spec.flows.len(),
+            spec.accels.len(),
+            spec.raid.is_some(),
+        )
+        .map_err(|e| anyhow::anyhow!("[[faults]]: {e}"))?;
+        // The control plane applies profile skews by accelerator *name*:
+        // overlapping skews on same-named units would alias even though
+        // their indices differ, so the generic per-index overlap check
+        // above cannot catch them.
+        for (i, a) in spec.faults.iter().enumerate() {
+            let FaultKind::ProfileSkew { accel: ai, .. } = a.kind else { continue };
+            for (j, b) in spec.faults.iter().enumerate().skip(i + 1) {
+                let FaultKind::ProfileSkew { accel: bi, .. } = b.kind else { continue };
+                if ai != bi
+                    && spec.accels[ai].name == spec.accels[bi].name
+                    && a.at < b.until
+                    && b.at < a.until
+                {
+                    bail!(
+                        "[[faults]]: profile_skew faults {i} and {j} overlap on \
+                         accelerators {ai} and {bi}, which share the name \
+                         `{}` — skews apply by name and would alias; stagger \
+                         the windows or use distinct accelerator kinds",
+                        spec.accels[ai].name
+                    );
+                }
+            }
+        }
+    }
     Ok(spec)
+}
+
+fn fault_from_table(i: usize, t: &Table) -> Result<FaultSpec> {
+    let at_ms = t.float_or("at_ms", 0.0);
+    let until_ms = t.float_or("until_ms", 0.0);
+    if at_ms < 0.0 || until_ms < 0.0 {
+        bail!("fault {i}: at_ms/until_ms must be non-negative (got {at_ms}/{until_ms})");
+    }
+    let at = (at_ms * MILLIS as f64) as u64;
+    let until = (until_ms * MILLIS as f64) as u64;
+    let kind = match t.str_or("kind", "") {
+        "accel_slowdown" => FaultKind::AccelSlowdown {
+            unit: t.int_or("unit", 0) as usize,
+            factor: t.float_or("factor", 0.5),
+        },
+        "link_degrade" => FaultKind::LinkDegrade { factor: t.float_or("factor", 0.5) },
+        "ssd_slowdown" => FaultKind::SsdSlowdown { factor: t.float_or("factor", 2.0) },
+        "profile_skew" => FaultKind::ProfileSkew {
+            accel: t.int_or("accel", 0) as usize,
+            factor: t.float_or("factor", 1.5),
+        },
+        "rogue_tenant" => {
+            let flow = t.int_or("flow", -1);
+            if flow < 0 {
+                bail!("fault {i}: rogue_tenant needs `flow` (a [[flows]] index)");
+            }
+            FaultKind::RogueTenant { flow: flow as usize }
+        }
+        "control_outage" => FaultKind::ControlOutage,
+        other => bail!(
+            "fault {i}: unknown kind `{other}` (accel_slowdown|link_degrade|\
+             ssd_slowdown|profile_skew|rogue_tenant|control_outage)"
+        ),
+    };
+    Ok(FaultSpec::new(kind, at, until))
 }
 
 fn lifecycle_from_table(
@@ -321,6 +408,97 @@ at_ms = 7.0
                     [[lifecycle]]\nflow = 0\nevent = \"arrive\"\nat_ms = -1.0\n";
         let doc = Document::from_str(text).unwrap();
         assert!(spec_from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn parses_fault_plan() {
+        let text = r#"
+[experiment]
+mode = "arcus"
+duration_ms = 10
+[[accels]]
+kind = "ipsec"
+[[flows]]
+vm = 0
+slo_gbps = 8.0
+[[flows]]
+vm = 1
+slo_gbps = 7.0
+[[faults]]
+kind = "accel_slowdown"
+at_ms = 3.0
+until_ms = 6.0
+unit = 0
+factor = 0.5
+[[faults]]
+kind = "rogue_tenant"
+flow = 1
+at_ms = 7.0
+until_ms = 9.0
+"#;
+        let doc = Document::from_str(text).unwrap();
+        let spec = spec_from_document(&doc).unwrap();
+        assert_eq!(spec.faults.len(), 2);
+        assert_eq!(
+            spec.faults[0],
+            FaultSpec::new(
+                FaultKind::AccelSlowdown { unit: 0, factor: 0.5 },
+                3 * MILLIS,
+                6 * MILLIS
+            )
+        );
+        assert_eq!(
+            spec.faults[1],
+            FaultSpec::new(FaultKind::RogueTenant { flow: 1 }, 7 * MILLIS, 9 * MILLIS)
+        );
+    }
+
+    #[test]
+    fn rejects_bad_fault_plans() {
+        let base = "[experiment]\nduration_ms = 10\nwarmup_ms = 0\n\
+                    [[accels]]\nkind = \"ipsec\"\n\
+                    [[flows]]\nvm = 0\nslo_gbps = 8.0\n";
+        // Window starting at/after the run's end.
+        let text = format!(
+            "{base}[[faults]]\nkind = \"link_degrade\"\nat_ms = 10.0\nuntil_ms = 12.0\n"
+        );
+        let err = spec_from_document(&Document::from_str(&text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("never fire"), "{err:#}");
+        // Unknown kind names the menu.
+        let text = format!("{base}[[faults]]\nkind = \"gremlin\"\nat_ms = 1.0\nuntil_ms = 2.0\n");
+        let err = spec_from_document(&Document::from_str(&text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("rogue_tenant"), "{err:#}");
+        // SSD fault without a [raid] array.
+        let text = format!(
+            "{base}[[faults]]\nkind = \"ssd_slowdown\"\nat_ms = 1.0\nuntil_ms = 2.0\n"
+        );
+        let err = spec_from_document(&Document::from_str(&text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("raid"), "{err:#}");
+        // Overlapping windows on one component.
+        let text = format!(
+            "{base}[[faults]]\nkind = \"link_degrade\"\nat_ms = 1.0\nuntil_ms = 4.0\n\
+             [[faults]]\nkind = \"link_degrade\"\nat_ms = 3.0\nuntil_ms = 6.0\nfactor = 0.2\n"
+        );
+        let err = spec_from_document(&Document::from_str(&text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("overlap"), "{err:#}");
+        // Rogue tenant must name a flow.
+        let text = format!(
+            "{base}[[faults]]\nkind = \"rogue_tenant\"\nat_ms = 1.0\nuntil_ms = 2.0\n"
+        );
+        assert!(spec_from_document(&Document::from_str(&text).unwrap()).is_err());
+        // A window starting inside the warmup would be mis-measured.
+        let text = "[experiment]\nduration_ms = 10\nwarmup_ms = 2\n\
+                    [[accels]]\nkind = \"ipsec\"\n[[flows]]\nvm = 0\nslo_gbps = 8.0\n\
+                    [[faults]]\nkind = \"link_degrade\"\nat_ms = 1.0\nuntil_ms = 4.0\n";
+        let err = spec_from_document(&Document::from_str(text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("warmup"), "{err:#}");
+        // An accel fault on a config with zero [[accels]] must fail at
+        // parse, not panic mid-run.
+        let text = "[experiment]\nduration_ms = 10\nwarmup_ms = 0\n[raid]\ndrives = 4\n\
+                    [[flows]]\nkind = \"storage_read\"\nsize = 4096\nslo_kiops = 300.0\n\
+                    [[faults]]\nkind = \"accel_slowdown\"\nat_ms = 3.0\nuntil_ms = 5.0\n";
+        let err = spec_from_document(&Document::from_str(text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
     }
 
     #[test]

@@ -315,6 +315,109 @@ pub fn path_selection(
     }
 }
 
+/// Over-commit reconciliation — the reaction path for mis-estimated
+/// profiles ([`crate::faults`]'s `ProfileSkew`). Admission can only
+/// over-commit an accelerator when it planned against a skewed capacity
+/// table; once re-profiling heals the table, the committed SLO sum may
+/// exceed what the engine truly sustains. This pass detects that per
+/// accelerator and emits renegotiation reshapes clamping every committed
+/// flow's shaped rate to its proportional share of the true budget —
+/// capacity is honored immediately even though the (unattainable) SLO
+/// contracts stay on the books for the operator to renegotiate.
+///
+/// Quiet in steady state: admission guarantees `committed ≤ budget`
+/// whenever the table was honest, so the pass emits nothing.
+/// `overcommitted` is the set [`overcommitted_accels`] returned — the
+/// caller computes it once per tick and reuses it for boost suppression.
+pub fn rebalance_overcommit(
+    cfg: &PlannerConfig,
+    profile: &ProfileTable,
+    status: &PerFlowStatusTable,
+    overcommitted: &[usize],
+) -> Vec<Action> {
+    let mut out = Vec::new();
+    for &accel in overcommitted {
+        let Some((budget, committed)) = accel_budget(cfg, profile, status, accel) else {
+            continue;
+        };
+        let scale = budget / committed;
+        let n = status.flows_on_accel(accel).len();
+        for r in status.flows_on_accel(accel) {
+            let Some((slo_rate, mode)) = r.slo.required_rate() else { continue };
+            if profile.capacity(&r.accel_name, r.path, r.size_hint, n).is_none() {
+                continue;
+            }
+            let rate = slo_rate * scale;
+            // Skip flows already at (or below) their clamped share so the
+            // pass converges instead of re-emitting every tick.
+            if let Some(current) = r.shaped_rate {
+                if current <= rate * 1.01 {
+                    continue;
+                }
+            }
+            out.push(Action::Reshape {
+                flow: r.flow,
+                rate,
+                params: TokenBucketParams::for_rate(rate, mode),
+            });
+        }
+    }
+    out
+}
+
+/// Accelerators whose committed SLO sum exceeds the current profiled
+/// budget. Non-empty only while admissions made against a mis-estimated
+/// table are still on the books; the control plane suppresses compensation
+/// boosts on these engines (boosting cannot conjure capacity that does
+/// not exist, it only steals from the other over-committed tenants).
+pub fn overcommitted_accels(
+    cfg: &PlannerConfig,
+    profile: &ProfileTable,
+    status: &PerFlowStatusTable,
+) -> Vec<usize> {
+    let mut accels: Vec<usize> = status.iter().map(|r| r.accel).collect();
+    accels.sort_unstable();
+    accels.dedup();
+    accels.retain(|&a| {
+        matches!(accel_budget(cfg, profile, status, a),
+                 Some((budget, committed)) if committed > budget * 1.001)
+    });
+    accels
+}
+
+/// The admission-CHECK budget (tightest committed context, net of the
+/// headroom reserve) and committed SLO sum for one accelerator, both in
+/// bytes/sec. `None` when no committed flow has a profiled context there
+/// (e.g. storage flows — the SSD is its own authority).
+fn accel_budget(
+    cfg: &PlannerConfig,
+    profile: &ProfileTable,
+    status: &PerFlowStatusTable,
+    accel: usize,
+) -> Option<(f64, f64)> {
+    let rows = status.flows_on_accel(accel);
+    let n = rows.len();
+    let mut capacity_bytes = f64::INFINITY;
+    let mut committed = 0.0;
+    let mut any = false;
+    for r in rows {
+        let Some((rate, mode)) = r.slo.required_rate() else { continue };
+        let Some(e) = profile.capacity(&r.accel_name, r.path, r.size_hint, n) else {
+            continue;
+        };
+        any = true;
+        capacity_bytes = capacity_bytes.min(e.capacity.as_bits_per_sec() / 8.0);
+        committed += match mode {
+            ShapeMode::Gbps => rate,
+            ShapeMode::Iops => rate * r.size_hint as f64,
+        };
+    }
+    if !any || !capacity_bytes.is_finite() {
+        return None;
+    }
+    Some((capacity_bytes * (1.0 - cfg.admission_headroom), committed))
+}
+
 /// One periodic tick of Algorithm 1 (lines 2–6): walk every flow, and for
 /// each violating one emit a path switch (preferred when the path itself is
 /// the bottleneck) or a reshape. `status` must already hold fresh measured
@@ -620,6 +723,68 @@ mod tests {
             }
             other => panic!("expected one decay reshape, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn rebalance_clamps_overcommit_to_true_budget() {
+        let (profile, _) = setup();
+        let cfg = PlannerConfig::default();
+        let mut status = PerFlowStatusTable::default();
+        // 3 × 12 Gbps committed on an engine whose true budget is ~24.6
+        // Gbps at 1500 B — only possible if admission planned against a
+        // skewed table (the ProfileSkew fault).
+        for i in 0..3 {
+            let mut f = flow(i, Slo::gbps(12.0), 1500);
+            f.shaped_rate = Some(12e9 / 8.0 * 1.01);
+            status.register(f);
+        }
+        let over = overcommitted_accels(&cfg, &profile, &status);
+        assert_eq!(over, vec![0]);
+        let actions = rebalance_overcommit(&cfg, &profile, &status, &over);
+        assert_eq!(actions.len(), 3, "{actions:?}");
+        let entry = profile.capacity("ipsec", Path::FunctionCall, 1500, 3).unwrap();
+        let budget =
+            entry.capacity.as_bits_per_sec() / 8.0 * (1.0 - cfg.admission_headroom);
+        let total: f64 = actions
+            .iter()
+            .map(|a| match a {
+                Action::Reshape { rate, .. } => *rate,
+                _ => 0.0,
+            })
+            .sum();
+        assert!(total <= budget * 1.001, "clamped sum {total:.3e} > budget {budget:.3e}");
+        assert!(total >= budget * 0.98, "clamp wastes capacity: {total:.3e}");
+        // Equal SLOs get equal shares.
+        if let [Action::Reshape { rate: a, .. }, Action::Reshape { rate: b, .. }, ..] =
+            &actions[..]
+        {
+            assert!((a - b).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn rebalance_quiet_when_honestly_committed() {
+        let (profile, _) = setup();
+        let cfg = PlannerConfig::default();
+        let mut status = PerFlowStatusTable::default();
+        for i in 0..2 {
+            let mut f = flow(i, Slo::gbps(10.0), 1500);
+            f.shaped_rate = Some(10e9 / 8.0 * 1.01);
+            status.register(f);
+        }
+        let over = overcommitted_accels(&cfg, &profile, &status);
+        assert!(over.is_empty());
+        assert!(rebalance_overcommit(&cfg, &profile, &status, &over).is_empty());
+        // Already-clamped flows are not re-emitted (convergence).
+        let mut status = PerFlowStatusTable::default();
+        for i in 0..3 {
+            let mut f = flow(i, Slo::gbps(12.0), 1500);
+            f.shaped_rate = Some(1e9 / 8.0); // far below any clamped share
+            status.register(f);
+        }
+        let over = overcommitted_accels(&cfg, &profile, &status);
+        assert!(!over.is_empty());
+        assert!(rebalance_overcommit(&cfg, &profile, &status, &over).is_empty());
     }
 
     #[test]

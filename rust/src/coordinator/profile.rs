@@ -211,6 +211,19 @@ impl ProfileTable {
         );
     }
 
+    /// Scale every entry of one accelerator's capacity by `factor` —
+    /// fault injection's profile mis-estimation ([`crate::faults`]): the
+    /// control plane plans against the scaled table while the hardware
+    /// keeps its true rates. SLO-friendly tags are left alone (the skew
+    /// mis-states magnitude, not class).
+    pub fn scale_accel(&mut self, accel: &str, factor: f64) {
+        for (k, e) in self.entries.iter_mut() {
+            if k.accel == accel {
+                e.capacity = Rate(e.capacity.0 * factor);
+            }
+        }
+    }
+
     /// Look up the capacity for a context (bucketing size and flow count).
     pub fn capacity(&self, accel: &str, path: Path, size: u64, n_flows: usize) -> Option<ProfileEntry> {
         self.entries

@@ -1,0 +1,399 @@
+//! Deterministic fault & adversary injection (the "SLO beyond healthy
+//! hardware" axis).
+//!
+//! Every scenario the sweep engine ran before this module assumed healthy
+//! links, honest tenants, and perfectly accurate accelerator profiles —
+//! so the control plane's *reaction* paths (renegotiation directives,
+//! reshape, BE refresh) were never stressed. A [`FaultPlan`] (the
+//! `faults` field of [`crate::system::ExperimentSpec`], i.e. a list of
+//! [`FaultSpec`]s) schedules typed faults on the DES clock:
+//!
+//! - [`FaultKind::AccelSlowdown`] — an accelerator's throughput curve is
+//!   scaled down (thermal throttling, partial pipeline degradation);
+//! - [`FaultKind::LinkDegrade`] — the PCIe link loses bandwidth (lane
+//!   renegotiation / flap; a *flap* is a short window with a deep factor);
+//! - [`FaultKind::SsdSlowdown`] — SSD service latency inflates (GC storm);
+//! - [`FaultKind::ProfileSkew`] — the control plane's Capacity(t, X, N)
+//!   table is mis-estimated by a factor, making the planner over- or
+//!   under-commit until re-profiling heals the table;
+//! - [`FaultKind::RogueTenant`] — an adversarial tenant stops honoring its
+//!   shaper program (submits unshaped) until the interface clamps it;
+//! - [`FaultKind::ControlOutage`] — Algorithm-1 ticks are lost for the
+//!   window (a wedged/partitioned control plane).
+//!
+//! Injection is itself deterministic: faults are ordinary typed
+//! [`crate::system::EngineEvent`]s (`FaultStart`/`FaultEnd`) on the same
+//! `(time, seq)`-ordered queue as the dataplane, so the golden
+//! fault-conformance test (`rust/tests/faults.rs`) can require
+//! byte-identical reports across both event-queue disciplines.
+//!
+//! The *fault window* — `[min start, max end)` over every injected fault —
+//! splits a run into three eras (pre / during / post); the engine measures
+//! attainment, p99, and post-fault recovery time per era (see
+//! [`crate::system::report::FaultReport`]).
+
+use crate::util::units::{Time, MILLIS};
+
+/// Which physical (or logical) component a fault occupies. Validation
+/// rejects overlapping windows on the same target: two simultaneous faults
+/// on one component have no physical meaning and would make restore order
+/// ambiguous.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// One accelerator unit (by device-list index).
+    Accel(usize),
+    /// The shared PCIe link (both directions).
+    PcieLink,
+    /// The NVMe subsystem (all RAID drives).
+    Ssd,
+    /// The control plane's profile table for one accelerator.
+    Profile(usize),
+    /// One tenant's interface shaper.
+    Flow(usize),
+    /// The Algorithm-1 ticker.
+    ControlPlane,
+}
+
+/// One typed fault. Factors are explicit about their direction:
+/// throughput-style factors live in `(0, 1]` (1.0 = healthy), latency-style
+/// factors are `>= 1` (1.0 = healthy), and profile skews are any positive
+/// mis-estimate (`> 1` = over-estimate, the over-commit direction).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Scale accelerator `unit`'s sustained throughput by `factor` ∈ (0, 1]
+    /// (service times stretch by `1/factor`).
+    AccelSlowdown { unit: usize, factor: f64 },
+    /// Scale the PCIe link's per-direction bandwidth by `factor` ∈ (0, 1].
+    LinkDegrade { factor: f64 },
+    /// Inflate SSD service latency by `factor` ≥ 1.
+    SsdSlowdown { factor: f64 },
+    /// Scale the control plane's belief about accelerator `accel`'s
+    /// capacity by `factor` > 0. The hardware is untouched — only the
+    /// planner's table lies.
+    ProfileSkew { accel: usize, factor: f64 },
+    /// Tenant `flow` stops honoring its shaper program: it submits
+    /// unshaped until the control plane's next directive clamps it.
+    RogueTenant { flow: usize },
+    /// Algorithm-1 control ticks are lost during the window.
+    ControlOutage,
+}
+
+impl FaultKind {
+    /// The component this fault occupies (overlap-exclusion key).
+    pub fn target(&self) -> FaultTarget {
+        match *self {
+            FaultKind::AccelSlowdown { unit, .. } => FaultTarget::Accel(unit),
+            FaultKind::LinkDegrade { .. } => FaultTarget::PcieLink,
+            FaultKind::SsdSlowdown { .. } => FaultTarget::Ssd,
+            FaultKind::ProfileSkew { accel, .. } => FaultTarget::Profile(accel),
+            FaultKind::RogueTenant { flow } => FaultTarget::Flow(flow),
+            FaultKind::ControlOutage => FaultTarget::ControlPlane,
+        }
+    }
+
+    /// Config / report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::AccelSlowdown { .. } => "accel_slowdown",
+            FaultKind::LinkDegrade { .. } => "link_degrade",
+            FaultKind::SsdSlowdown { .. } => "ssd_slowdown",
+            FaultKind::ProfileSkew { .. } => "profile_skew",
+            FaultKind::RogueTenant { .. } => "rogue_tenant",
+            FaultKind::ControlOutage => "control_outage",
+        }
+    }
+}
+
+/// One scheduled fault: `kind` holds during `[at, until)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    /// Injection time (virtual).
+    pub at: Time,
+    /// Restore time (virtual); the component heals here.
+    pub until: Time,
+}
+
+impl FaultSpec {
+    pub fn new(kind: FaultKind, at: Time, until: Time) -> Self {
+        FaultSpec { kind, at, until }
+    }
+}
+
+/// The union fault window `[min start, max end)` over a plan — the era
+/// boundary the per-era metrics are measured against. `None` for an empty
+/// plan.
+pub fn fault_window(faults: &[FaultSpec]) -> Option<(Time, Time)> {
+    let start = faults.iter().map(|f| f.at).min()?;
+    let end = faults.iter().map(|f| f.until).max()?;
+    Some((start, end))
+}
+
+fn ms(t: Time) -> f64 {
+    t as f64 / MILLIS as f64
+}
+
+/// Validate a fault plan against a run's shape, with actionable errors:
+/// windows must lie inside the *measured* run (`warmup ≤ at < until ≤
+/// duration` — a fault starting at/after the end would silently never
+/// fire, and one starting inside the warmup would have its damage
+/// discarded while still diluting the during-era rate), factors must point
+/// in their documented direction, component indices must exist, and no two
+/// faults may overlap on one component.
+pub fn validate_faults(
+    faults: &[FaultSpec],
+    duration: Time,
+    warmup: Time,
+    n_flows: usize,
+    n_accels: usize,
+    has_raid: bool,
+) -> Result<(), String> {
+    for (i, f) in faults.iter().enumerate() {
+        if f.at >= f.until {
+            return Err(format!(
+                "fault {i} ({}): window [{:.3}, {:.3}) ms is empty or inverted",
+                f.kind.name(),
+                ms(f.at),
+                ms(f.until)
+            ));
+        }
+        if f.at < warmup {
+            return Err(format!(
+                "fault {i} ({}): starts at {:.3} ms, inside the warmup \
+                 ({:.3} ms) — metrics are discarded there, so the fault era \
+                 would be mis-measured; start it at/after the warmup",
+                f.kind.name(),
+                ms(f.at),
+                ms(warmup)
+            ));
+        }
+        if f.at >= duration {
+            return Err(format!(
+                "fault {i} ({}): starts at {:.3} ms, at/after the run's duration \
+                 ({:.3} ms) — it would never fire",
+                f.kind.name(),
+                ms(f.at),
+                ms(duration)
+            ));
+        }
+        if f.until > duration {
+            return Err(format!(
+                "fault {i} ({}): ends at {:.3} ms, after the run's duration \
+                 ({:.3} ms) — the component would never heal inside the run",
+                f.kind.name(),
+                ms(f.until),
+                ms(duration)
+            ));
+        }
+        match f.kind {
+            FaultKind::AccelSlowdown { unit, factor } => {
+                if !(factor > 0.0 && factor <= 1.0) {
+                    return Err(format!(
+                        "fault {i}: accel_slowdown factor must be in (0, 1] \
+                         (got {factor}; it scales throughput *down*)"
+                    ));
+                }
+                if unit >= n_accels {
+                    return Err(format!(
+                        "fault {i}: accel unit {unit} out of range ({n_accels} defined)"
+                    ));
+                }
+            }
+            FaultKind::LinkDegrade { factor } => {
+                if !(factor > 0.0 && factor <= 1.0) {
+                    return Err(format!(
+                        "fault {i}: link_degrade factor must be in (0, 1] (got {factor})"
+                    ));
+                }
+            }
+            FaultKind::SsdSlowdown { factor } => {
+                if factor.is_nan() || factor < 1.0 {
+                    return Err(format!(
+                        "fault {i}: ssd_slowdown factor must be ≥ 1 \
+                         (got {factor}; it inflates latency)"
+                    ));
+                }
+                if !has_raid {
+                    return Err(format!(
+                        "fault {i}: ssd_slowdown needs a [raid] array in the experiment"
+                    ));
+                }
+            }
+            FaultKind::ProfileSkew { accel, factor } => {
+                if !factor.is_finite() || factor <= 0.0 {
+                    return Err(format!(
+                        "fault {i}: profile_skew factor must be positive and finite \
+                         (got {factor})"
+                    ));
+                }
+                if accel >= n_accels {
+                    return Err(format!(
+                        "fault {i}: profile_skew accel {accel} out of range \
+                         ({n_accels} defined)"
+                    ));
+                }
+            }
+            FaultKind::RogueTenant { flow } => {
+                if flow >= n_flows {
+                    return Err(format!(
+                        "fault {i}: rogue_tenant flow {flow} out of range ({n_flows} flows)"
+                    ));
+                }
+            }
+            FaultKind::ControlOutage => {}
+        }
+    }
+    // Overlap exclusion per component: O(n²) is fine for config-sized plans.
+    for (i, a) in faults.iter().enumerate() {
+        for (j, b) in faults.iter().enumerate().skip(i + 1) {
+            if a.kind.target() == b.kind.target() && a.at < b.until && b.at < a.until {
+                return Err(format!(
+                    "faults {i} ({}) and {j} ({}) overlap on the same component \
+                     ({:?}): windows [{:.3}, {:.3}) and [{:.3}, {:.3}) ms — \
+                     restore order would be ambiguous",
+                    a.kind.name(),
+                    b.kind.name(),
+                    a.kind.target(),
+                    ms(a.at),
+                    ms(a.until),
+                    ms(b.at),
+                    ms(b.until)
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slow(at: Time, until: Time) -> FaultSpec {
+        FaultSpec::new(FaultKind::AccelSlowdown { unit: 0, factor: 0.5 }, at, until)
+    }
+
+    #[test]
+    fn window_is_union_of_all_faults() {
+        assert_eq!(fault_window(&[]), None);
+        let plan = [
+            slow(2 * MILLIS, 4 * MILLIS),
+            FaultSpec::new(FaultKind::ControlOutage, 3 * MILLIS, 6 * MILLIS),
+        ];
+        assert_eq!(fault_window(&plan), Some((2 * MILLIS, 6 * MILLIS)));
+    }
+
+    #[test]
+    fn validate_accepts_well_formed_plans() {
+        let plan = [
+            slow(2 * MILLIS, 4 * MILLIS),
+            FaultSpec::new(FaultKind::LinkDegrade { factor: 0.5 }, 2 * MILLIS, 5 * MILLIS),
+            FaultSpec::new(FaultKind::RogueTenant { flow: 1 }, 5 * MILLIS, 7 * MILLIS),
+        ];
+        assert!(validate_faults(&plan, 10 * MILLIS, 0, 2, 1, false).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_windows_outside_the_measured_run() {
+        // Start at/after duration: would silently never fire.
+        let plan = [slow(10 * MILLIS, 12 * MILLIS)];
+        let e = validate_faults(&plan, 10 * MILLIS, 0, 1, 1, false).unwrap_err();
+        assert!(e.contains("never fire"), "{e}");
+        // End after duration: would never heal.
+        let plan = [slow(2 * MILLIS, 12 * MILLIS)];
+        let e = validate_faults(&plan, 10 * MILLIS, 0, 1, 1, false).unwrap_err();
+        assert!(e.contains("heal"), "{e}");
+        // Empty / inverted window.
+        let plan = [slow(3 * MILLIS, 3 * MILLIS)];
+        let e = validate_faults(&plan, 10 * MILLIS, 0, 1, 1, false).unwrap_err();
+        assert!(e.contains("empty or inverted"), "{e}");
+        // Start inside the warmup: the fault era would be mis-measured.
+        let plan = [slow(MILLIS, 4 * MILLIS)];
+        let e = validate_faults(&plan, 10 * MILLIS, 2 * MILLIS, 1, 1, false).unwrap_err();
+        assert!(e.contains("warmup"), "{e}");
+        // Starting exactly at the warmup boundary is fine.
+        let plan = [slow(2 * MILLIS, 4 * MILLIS)];
+        assert!(validate_faults(&plan, 10 * MILLIS, 2 * MILLIS, 1, 1, false).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_factors_and_indices() {
+        let d = 10 * MILLIS;
+        let bad = FaultSpec::new(
+            FaultKind::AccelSlowdown { unit: 0, factor: 1.5 },
+            MILLIS,
+            2 * MILLIS,
+        );
+        assert!(validate_faults(&[bad], d, 0, 1, 1, false).is_err());
+        let bad = FaultSpec::new(
+            FaultKind::SsdSlowdown { factor: 0.5 },
+            MILLIS,
+            2 * MILLIS,
+        );
+        assert!(validate_faults(&[bad], d, 0, 1, 1, true).is_err());
+        let ok = FaultSpec::new(FaultKind::SsdSlowdown { factor: 3.0 }, MILLIS, 2 * MILLIS);
+        assert!(validate_faults(&[ok], d, 0, 1, 1, true).is_ok());
+        let e = validate_faults(&[ok], d, 0, 1, 1, false).unwrap_err();
+        assert!(e.contains("raid"), "{e}");
+        let bad = FaultSpec::new(
+            FaultKind::RogueTenant { flow: 5 },
+            MILLIS,
+            2 * MILLIS,
+        );
+        let e = validate_faults(&[bad], d, 0, 2, 1, false).unwrap_err();
+        assert!(e.contains("out of range"), "{e}");
+        let bad = FaultSpec::new(
+            FaultKind::ProfileSkew { accel: 3, factor: 1.5 },
+            MILLIS,
+            2 * MILLIS,
+        );
+        assert!(validate_faults(&[bad], d, 0, 1, 1, false).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_overlap_on_one_component_only() {
+        let d = 10 * MILLIS;
+        // Same accelerator, overlapping windows: rejected.
+        let e = validate_faults(
+            &[slow(2 * MILLIS, 5 * MILLIS), slow(4 * MILLIS, 6 * MILLIS)],
+            d,
+            0,
+            1,
+            1,
+            false,
+        )
+        .unwrap_err();
+        assert!(e.contains("overlap"), "{e}");
+        // Back-to-back windows on one component are fine ([at, until) is
+        // half-open).
+        assert!(validate_faults(
+            &[slow(2 * MILLIS, 4 * MILLIS), slow(4 * MILLIS, 6 * MILLIS)],
+            d,
+            0,
+            1,
+            1,
+            false,
+        )
+        .is_ok());
+        // Overlap across *different* components is fine.
+        let plan = [
+            slow(2 * MILLIS, 5 * MILLIS),
+            FaultSpec::new(FaultKind::LinkDegrade { factor: 0.5 }, 3 * MILLIS, 6 * MILLIS),
+        ];
+        assert!(validate_faults(&plan, d, 0, 1, 1, false).is_ok());
+    }
+
+    #[test]
+    fn targets_distinguish_components() {
+        assert_eq!(
+            FaultKind::AccelSlowdown { unit: 1, factor: 0.5 }.target(),
+            FaultTarget::Accel(1)
+        );
+        assert_ne!(
+            FaultKind::AccelSlowdown { unit: 0, factor: 0.5 }.target(),
+            FaultKind::AccelSlowdown { unit: 1, factor: 0.5 }.target()
+        );
+        assert_eq!(FaultKind::ControlOutage.target(), FaultTarget::ControlPlane);
+        assert_eq!(FaultKind::ControlOutage.name(), "control_outage");
+    }
+}

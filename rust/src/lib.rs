@@ -33,6 +33,7 @@ pub mod apps;
 pub mod config;
 pub mod coordinator;
 pub mod dma;
+pub mod faults;
 pub mod flow;
 pub mod metrics;
 pub mod nic;

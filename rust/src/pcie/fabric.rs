@@ -114,6 +114,12 @@ impl Fabric {
         &self.link
     }
 
+    /// Fault injection: scale the link's per-direction bandwidth by
+    /// `factor` ∈ (0, 1] (1.0 restores full health). See [`crate::faults`].
+    pub fn set_link_degradation(&mut self, factor: f64) {
+        self.link.set_degradation(factor);
+    }
+
     /// Issue a DMA read of `bytes` host-memory bytes for `source`.
     pub fn read(&mut self, source: usize, bytes: u64, op: u64) {
         debug_assert!(!self.read_ctx.contains_key(&op), "duplicate op id {op}");

@@ -125,11 +125,27 @@ pub struct Delivered {
     pub at: Time,
 }
 
+/// Stretch a serialization time under a bandwidth cut (`factor` ∈ (0, 1];
+/// 1.0 = healthy wire).
+#[inline]
+fn scale_time(t: Time, factor: f64) -> Time {
+    if factor >= 1.0 {
+        t
+    } else {
+        (t as f64 / factor).round() as Time
+    }
+}
+
 /// The full-duplex link. Owned by the fabric; pumped by the simulation.
 #[derive(Debug)]
 pub struct DuplexLink {
     cfg: LinkConfig,
     dirs: [DirState; 2],
+    /// Fault-injection bandwidth multiplier in (0, 1]; 1.0 = healthy. TLP
+    /// serialization stretches by `1/degrade` — a link flap is a short
+    /// window with a deep factor. The TLP already on the wire keeps its
+    /// finish time (injection never rewrites the past).
+    degrade: f64,
 }
 
 impl DuplexLink {
@@ -137,11 +153,24 @@ impl DuplexLink {
         DuplexLink {
             cfg,
             dirs: [DirState::new(sources), DirState::new(sources)],
+            degrade: 1.0,
         }
     }
 
     pub fn config(&self) -> &LinkConfig {
         &self.cfg
+    }
+
+    /// Fault injection: scale per-direction bandwidth by `factor` ∈ (0, 1]
+    /// (1.0 restores full health). See [`crate::faults`].
+    pub fn set_degradation(&mut self, factor: f64) {
+        debug_assert!(factor > 0.0 && factor <= 1.0, "link degrade factor {factor}");
+        self.degrade = factor.clamp(f64::MIN_POSITIVE, 1.0);
+    }
+
+    /// Current fault-injection bandwidth multiplier (1.0 = healthy).
+    pub fn degradation(&self) -> f64 {
+        self.degrade
     }
 
     /// Enqueue a data transfer of `payload_bytes` for message `msg` from
@@ -186,6 +215,7 @@ impl DuplexLink {
     /// the caller reuses across calls) and returns the next wake time.
     pub fn pump_into(&mut self, now: Time, dir: Dir, done: &mut Vec<Delivered>) -> Option<Time> {
         let cfg = self.cfg;
+        let degrade = self.degrade;
         let d = &mut self.dirs[dir as usize];
         // Loop: multiple TLPs may have finished if pumping was lazy.
         loop {
@@ -202,7 +232,7 @@ impl DuplexLink {
                     }
                     // fall through to start the next TLP at `fin`
                     if let Some(next) = d.next_tlp() {
-                        let t = cfg.tlp_time(next.wire_bytes);
+                        let t = scale_time(cfg.tlp_time(next.wire_bytes), degrade);
                         d.busy_time += t;
                         d.current = Some((next, fin + t));
                     }
@@ -211,7 +241,7 @@ impl DuplexLink {
                 None => {
                     match d.next_tlp() {
                         Some(next) => {
-                            let t = cfg.tlp_time(next.wire_bytes);
+                            let t = scale_time(cfg.tlp_time(next.wire_bytes), degrade);
                             d.busy_time += t;
                             d.current = Some((next, now + t));
                         }
@@ -362,6 +392,32 @@ mod tests {
         let done = drain(&mut link, Dir::Up);
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].at, LinkConfig::gen3_x8().min_tlp_time); // floor-bound
+    }
+
+    #[test]
+    fn degraded_link_halves_goodput_and_heals() {
+        // Same transfer drained healthy vs at factor 0.5: the degraded wire
+        // takes 2x as long; healing restores the native rate.
+        let drain_time = |factor: f64| {
+            let mut link = DuplexLink::new(LinkConfig::gen3_x8(), 1);
+            link.set_degradation(factor);
+            for i in 0..100 {
+                link.enqueue_data(Dir::Up, 0, 4096, i);
+            }
+            drain(&mut link, Dir::Up).last().unwrap().at
+        };
+        let healthy = drain_time(1.0);
+        let cut = drain_time(0.5);
+        let ratio = cut as f64 / healthy as f64;
+        assert!((ratio - 2.0).abs() < 0.01, "ratio {ratio:.3}");
+        // A healed link is indistinguishable from one never degraded.
+        let mut link = DuplexLink::new(LinkConfig::gen3_x8(), 1);
+        link.set_degradation(0.25);
+        link.set_degradation(1.0);
+        for i in 0..100 {
+            link.enqueue_data(Dir::Up, 0, 4096, i);
+        }
+        assert_eq!(drain(&mut link, Dir::Up).last().unwrap().at, healthy);
     }
 
     #[test]

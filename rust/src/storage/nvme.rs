@@ -68,6 +68,10 @@ pub struct Ssd {
     rng: Rng,
     completed_reads: u64,
     completed_writes: u64,
+    /// Fault-injection latency multiplier ≥ 1; 1.0 = healthy (a GC storm
+    /// inflates service times; ops already in flight keep their finish
+    /// times).
+    latency_factor: f64,
 }
 
 impl Ssd {
@@ -79,7 +83,15 @@ impl Ssd {
             rng: Rng::for_stream(seed, 0x55D),
             completed_reads: 0,
             completed_writes: 0,
+            latency_factor: 1.0,
         }
+    }
+
+    /// Fault injection: inflate service latency by `factor` ≥ 1 (1.0
+    /// restores datasheet health). See [`crate::faults`].
+    pub fn set_latency_factor(&mut self, factor: f64) {
+        debug_assert!(factor >= 1.0, "ssd latency factor {factor}");
+        self.latency_factor = factor.max(1.0);
     }
 
     pub fn submit(&mut self, io: Io) {
@@ -112,7 +124,7 @@ impl Ssd {
             }
         };
         let jit = self.rng.range_f64(1.0 - self.cfg.jitter, 1.0 + self.cfg.jitter);
-        (base * jit).round() as Time
+        (base * jit * self.latency_factor).round() as Time
     }
 
     /// Advance to `now`: retire due ops, dispatch queued ops to free

@@ -23,6 +23,14 @@ impl Raid0 {
         self.drives.len()
     }
 
+    /// Fault injection: inflate every drive's service latency by `factor`
+    /// ≥ 1 (1.0 restores datasheet health). See [`crate::faults`].
+    pub fn set_latency_factor(&mut self, factor: f64) {
+        for d in &mut self.drives {
+            d.set_latency_factor(factor);
+        }
+    }
+
     pub fn submit(&mut self, io: Io) {
         self.drives[self.next].submit(io);
         self.next = (self.next + 1) % self.drives.len();

@@ -42,6 +42,15 @@ pub struct ScenarioSummary {
     pub dropped: u64,
     /// Flows rejected by admission control.
     pub rejected: usize,
+    /// Worst committed-flow attainment *during the fault era* (fault-
+    /// injection scenarios only).
+    pub fault_att_min: Option<f64>,
+    /// Slowest committed-flow recovery after the fault window, µs.
+    /// `None` when the scenario is healthy or a flow never recovered
+    /// inside the run (the distinction is carried by `unrecovered`).
+    pub recovery_us_max: Option<f64>,
+    /// Committed flows that never got back to their SLO inside the run.
+    pub unrecovered: usize,
 }
 
 /// Reduce one outcome to its summary.
@@ -84,6 +93,40 @@ pub fn summarize(outcome: &ScenarioOutcome) -> ScenarioSummary {
         .clone()
         .map(|f| f.sampler.cv() * 100.0)
         .fold(0.0f64, f64::max);
+    // Fault-era metrics: the during-era floor and the slowest recovery over
+    // committed flows (see crate::faults).
+    let mut fault_att_min: Option<f64> = None;
+    let mut recovery_us_max: Option<f64> = None;
+    let mut unrecovered = 0usize;
+    if r.fault_window.is_some() {
+        for f in r.per_flow.iter().filter(|f| !f.rejected) {
+            if matches!(f.slo, Slo::BestEffort) {
+                continue;
+            }
+            let Some(fr) = &f.fault else { continue };
+            if let Some(a) = fr.during.attainment {
+                fault_att_min = Some(fault_att_min.map_or(a, |m: f64| m.min(a)));
+            }
+            match fr.recovery_time {
+                Some(t) => {
+                    let us = t as f64 / MICROS as f64;
+                    recovery_us_max = Some(recovery_us_max.map_or(us, |m: f64| m.max(us)));
+                }
+                // Departed flows have nothing to recover, latency-SLO
+                // flows have no rate target to recover to, and a fault
+                // that ran to the end of the run (zero post-fault span)
+                // left no room to recover in; every other flow genuinely
+                // failed to get back to SLO inside the run.
+                None if f.departed_at.is_none()
+                    && f.slo.required_rate().is_some()
+                    && fr.post.span > 0 =>
+                {
+                    unrecovered += 1
+                }
+                None => {}
+            }
+        }
+    }
     ScenarioSummary {
         key: outcome.key.clone(),
         attainment_min: if attainment_min.is_finite() { attainment_min } else { 0.0 },
@@ -94,6 +137,9 @@ pub fn summarize(outcome: &ScenarioOutcome) -> ScenarioSummary {
         cv_pct,
         dropped: r.per_flow.iter().map(|f| f.dropped).sum(),
         rejected,
+        fault_att_min,
+        recovery_us_max,
+        unrecovered,
     }
 }
 
@@ -111,11 +157,26 @@ pub struct AxisStats {
     pub cv_pct_mean: f64,
     pub dropped_total: u64,
     pub rejected_total: usize,
+    /// Mean fault-era attainment floor over the group's *faulted*
+    /// scenarios (`None` when the group is entirely healthy).
+    pub fault_att_mean: Option<f64>,
+    /// Mean slowest-recovery time (µs) over faulted scenarios that
+    /// recovered.
+    pub recovery_us_mean: Option<f64>,
+    /// Flows across the group that never re-attained their SLO post-fault.
+    pub unrecovered_total: usize,
 }
 
 impl AxisStats {
     fn fold(group: &[&ScenarioSummary]) -> AxisStats {
         let n = group.len().max(1) as f64;
+        let mean_of = |vals: Vec<f64>| {
+            if vals.is_empty() {
+                None
+            } else {
+                Some(vals.iter().sum::<f64>() / vals.len() as f64)
+            }
+        };
         AxisStats {
             scenarios: group.len(),
             attainment_mean: group.iter().map(|s| s.attainment_min).sum::<f64>() / n,
@@ -130,6 +191,11 @@ impl AxisStats {
             cv_pct_mean: group.iter().map(|s| s.cv_pct).sum::<f64>() / n,
             dropped_total: group.iter().map(|s| s.dropped).sum(),
             rejected_total: group.iter().map(|s| s.rejected).sum(),
+            fault_att_mean: mean_of(group.iter().filter_map(|s| s.fault_att_min).collect()),
+            recovery_us_mean: mean_of(
+                group.iter().filter_map(|s| s.recovery_us_max).collect(),
+            ),
+            unrecovered_total: group.iter().map(|s| s.unrecovered).sum(),
         }
     }
 }
@@ -163,14 +229,15 @@ fn axis_value(axis: &str, key: &ScenarioKey) -> String {
         // to 9999; four decimals keep close CLI-supplied values distinct.
         "tightness" => format!("x{:09.4}", key.tightness),
         "churn" => key.churn.name().to_string(),
+        "faults" => key.faults.name().to_string(),
         "accel" => key.accel.to_string(),
         "seed" => format!("s{:020}", key.seed),
         other => unreachable!("unknown axis {other}"),
     }
 }
 
-const AXES: [&str; 8] =
-    ["mode", "tenants", "mix", "burst", "tightness", "churn", "accel", "seed"];
+const AXES: [&str; 9] =
+    ["mode", "tenants", "mix", "burst", "tightness", "churn", "faults", "accel", "seed"];
 
 /// Fold executed scenarios into the aggregate.
 pub fn aggregate(outcomes: &[ScenarioOutcome]) -> SweepAggregate {
@@ -207,15 +274,20 @@ impl SweepAggregate {
             self.scenarios.len(),
             self.axes.len()
         ));
+        let opt = |v: Option<f64>, prec: usize| match v {
+            Some(x) => format!("{x:.prec$}"),
+            None => "-".to_string(),
+        };
         for table in &self.axes {
             out.push_str(&format!("\n[by {}]\n", table.axis));
             out.push_str(&format!(
-                "{:<22} {:>5} {:>9} {:>9} {:>10} {:>10} {:>9} {:>7} {:>6} {:>5}\n",
-                "value", "n", "att.mean", "att.min", "p99(us)", "p999(us)", "Gbps", "cv%", "drop", "rej"
+                "{:<22} {:>5} {:>9} {:>9} {:>10} {:>10} {:>9} {:>7} {:>6} {:>5} {:>8} {:>9} {:>6}\n",
+                "value", "n", "att.mean", "att.min", "p99(us)", "p999(us)", "Gbps", "cv%",
+                "drop", "rej", "f.att", "rec(us)", "unrec"
             ));
             for (value, s) in &table.rows {
                 out.push_str(&format!(
-                    "{:<22} {:>5} {:>9.3} {:>9.3} {:>10.2} {:>10.2} {:>9.2} {:>7.2} {:>6} {:>5}\n",
+                    "{:<22} {:>5} {:>9.3} {:>9.3} {:>10.2} {:>10.2} {:>9.2} {:>7.2} {:>6} {:>5} {:>8} {:>9} {:>6}\n",
                     value,
                     s.scenarios,
                     s.attainment_mean,
@@ -225,7 +297,10 @@ impl SweepAggregate {
                     s.goodput_gbps_mean,
                     s.cv_pct_mean,
                     s.dropped_total,
-                    s.rejected_total
+                    s.rejected_total,
+                    opt(s.fault_att_mean, 3),
+                    opt(s.recovery_us_mean, 1),
+                    s.unrecovered_total
                 ));
             }
         }
@@ -272,6 +347,7 @@ mod tests {
             burst: Burstiness::Paced,
             tightness: 0.7,
             churn: crate::sweep::Churn::Static,
+            faults: crate::sweep::FaultProfile::Healthy,
             accel: "ipsec",
             seed: 1,
         };
@@ -301,6 +377,7 @@ mod tests {
                 pcie_down_util: 0.0,
                 accel_util: vec![0.5],
                 nic_rx_dropped: 0,
+                fault_window: None,
                 events: 10,
                 peak_queue_depth: 4,
                 queue: "binary_heap",
@@ -343,6 +420,37 @@ mod tests {
         let b = aggregate(&mk(9.999)).render();
         assert_eq!(a, b);
         assert!(a.contains("[by mode]"));
+    }
+
+    #[test]
+    fn fault_metrics_summarized_and_rendered() {
+        use crate::system::{EraReport, FaultReport};
+        use crate::util::units::{MICROS, MILLIS};
+        let mut o = outcome(0, Mode::Arcus, 1, 10.0);
+        o.key.faults = crate::sweep::FaultProfile::AccelDip;
+        o.report.fault_window = Some((MILLIS, 2 * MILLIS));
+        let slo = crate::flow::Slo::gbps(10.0);
+        let era = |gbps: f64| {
+            EraReport::new((gbps * 1e9 / 8.0 * 1e-3) as u64, 100, MILLIS, 50_000, &slo)
+        };
+        o.report.per_flow[0].fault = Some(FaultReport {
+            pre: era(10.0),
+            during: era(4.0),
+            post: era(10.0),
+            recovery_time: Some(200 * MICROS),
+        });
+        let healthy = outcome(1, Mode::HostNoTs, 1, 10.0);
+        let agg = aggregate(&[o, healthy]);
+        let s = &agg.scenarios[0];
+        assert!((s.fault_att_min.unwrap() - 0.4).abs() < 0.01, "{s:?}");
+        assert!((s.recovery_us_max.unwrap() - 200.0).abs() < 1e-9);
+        assert_eq!(s.unrecovered, 0);
+        assert_eq!(agg.scenarios[1].fault_att_min, None);
+        let rendered = agg.render();
+        assert!(rendered.contains("f.att"));
+        assert!(rendered.contains("[by faults]"));
+        // The healthy group renders dashes, not zeros.
+        assert!(rendered.contains(" - "), "{rendered}");
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! cell keeps its seed when other axes grow.
 
 use crate::accel::AccelModel;
+use crate::faults::{validate_faults, FaultKind, FaultSpec};
 use crate::flow::pattern::{Burstiness, SizeDist};
 use crate::flow::{FlowSpec, Path, Slo};
 use crate::flow::TrafficPattern;
@@ -145,6 +146,95 @@ impl Churn {
     }
 }
 
+/// Fault-injection axis: which degradation / adversary plan a scenario
+/// schedules (see [`crate::faults`]). Like [`Churn`], the `Healthy` value
+/// keeps pre-fault grids byte-identical — labels and derived seeds are
+/// unchanged when the axis is absent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultProfile {
+    /// No injection (the legacy grid).
+    Healthy,
+    /// Accelerator 0's throughput dips to 50% across [40%, 70%) of the run.
+    AccelDip,
+    /// The PCIe link loses half its bandwidth across [40%, 70%).
+    LinkCut,
+    /// A deep, short link flap: 10% bandwidth across [50%, 55%).
+    Flap,
+    /// The last tenant goes adversarial (ignores its shaper) across
+    /// [40%, 70%) until the control plane clamps it.
+    Rogue,
+    /// Algorithm-1 ticks are lost across [40%, 70%).
+    Outage,
+}
+
+impl FaultProfile {
+    pub const ALL: [FaultProfile; 6] = [
+        FaultProfile::Healthy,
+        FaultProfile::AccelDip,
+        FaultProfile::LinkCut,
+        FaultProfile::Flap,
+        FaultProfile::Rogue,
+        FaultProfile::Outage,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultProfile::Healthy => "healthy",
+            FaultProfile::AccelDip => "accel_dip",
+            FaultProfile::LinkCut => "link_cut",
+            FaultProfile::Flap => "flap",
+            FaultProfile::Rogue => "rogue",
+            FaultProfile::Outage => "outage",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<FaultProfile> {
+        Self::ALL.iter().copied().find(|f| f.name() == s)
+    }
+
+    /// Parse a fault-profile name, or explain which names are valid.
+    pub fn parse(s: &str) -> Result<FaultProfile, String> {
+        FaultProfile::by_name(s).ok_or_else(|| {
+            let valid: Vec<&str> = FaultProfile::ALL.iter().map(|f| f.name()).collect();
+            format!("unknown fault profile `{s}` (valid profiles: {})", valid.join(", "))
+        })
+    }
+}
+
+/// The fault plan a profile implies for `tenants` flows over a run of
+/// `duration`. Pure arithmetic over the coordinates (no RNG); windows sit
+/// past typical warmups and heal before the run ends so recovery is
+/// measurable.
+pub fn fault_events(profile: FaultProfile, tenants: usize, duration: Time) -> Vec<FaultSpec> {
+    let t = tenants.max(1);
+    let start = duration * 2 / 5;
+    let end = duration * 7 / 10;
+    match profile {
+        FaultProfile::Healthy => Vec::new(),
+        FaultProfile::AccelDip => vec![FaultSpec::new(
+            FaultKind::AccelSlowdown { unit: 0, factor: 0.5 },
+            start,
+            end,
+        )],
+        FaultProfile::LinkCut => vec![FaultSpec::new(
+            FaultKind::LinkDegrade { factor: 0.5 },
+            start,
+            end,
+        )],
+        FaultProfile::Flap => vec![FaultSpec::new(
+            FaultKind::LinkDegrade { factor: 0.1 },
+            duration / 2,
+            duration * 11 / 20,
+        )],
+        FaultProfile::Rogue => vec![FaultSpec::new(
+            FaultKind::RogueTenant { flow: t - 1 },
+            start,
+            end,
+        )],
+        FaultProfile::Outage => vec![FaultSpec::new(FaultKind::ControlOutage, start, end)],
+    }
+}
+
 /// Parse a burstiness axis value (`paced`, `poisson`, `onoff<N>`), or
 /// explain the vocabulary.
 pub fn parse_burst(s: &str) -> Result<Burstiness, String> {
@@ -221,6 +311,9 @@ pub struct SweepGrid {
     /// Tenant-churn axis (defaults to `[Churn::Static]`, so legacy grids
     /// are unchanged).
     pub churn: Vec<Churn>,
+    /// Fault-injection axis (defaults to `[FaultProfile::Healthy]`, so
+    /// legacy grids are unchanged).
+    pub faults: Vec<FaultProfile>,
     pub accels: Vec<AccelModel>,
     /// Seed axis: replications of every cell with decorrelated randomness.
     pub seeds: Vec<u64>,
@@ -238,6 +331,7 @@ impl SweepGrid {
             bursts: Vec::new(),
             tightness: Vec::new(),
             churn: vec![Churn::Static],
+            faults: vec![FaultProfile::Healthy],
             accels: Vec::new(),
             seeds: Vec::new(),
         }
@@ -267,6 +361,10 @@ impl SweepGrid {
         self.churn = v;
         self
     }
+    pub fn faults(mut self, v: Vec<FaultProfile>) -> Self {
+        self.faults = v;
+        self
+    }
     pub fn accels(mut self, v: Vec<AccelModel>) -> Self {
         self.accels = v;
         self
@@ -285,6 +383,7 @@ impl SweepGrid {
             * self.bursts.len()
             * self.tightness.len()
             * self.churn.len()
+            * self.faults.len()
             * self.accels.len()
             * self.seeds.len()
     }
@@ -313,6 +412,47 @@ impl SweepGrid {
         if let Some(&x) = self.tightness.iter().find(|&&x| x.is_nan() || x <= 0.0) {
             return Err(format!("tightness values must be positive (got {x})"));
         }
+        // Axis interactions: expansion combines every churn pattern with
+        // every fault profile at every tenant count, and some combinations
+        // are ill-formed even though each axis value is fine alone. Check
+        // the generated schedules per combination (cheap: the cross product
+        // of three small axes, no simulation).
+        for &t in &self.tenants {
+            for &fp in &self.faults {
+                let faults = fault_events(fp, t, self.base.duration);
+                // Windows inside the measured run, factors sane, no overlap
+                // on one component — the same rules config-supplied plans
+                // face (this also rejects windows starting at/after the
+                // duration or inside the warmup).
+                validate_faults(&faults, self.base.duration, self.base.warmup, t, 1, false)
+                    .map_err(|e| format!("faults `{}` at {t} tenants: {e}", fp.name()))?;
+                for &c in &self.churn {
+                    let churn = churn_events(c, t, self.base.duration, Rate(1.0));
+                    for f in &faults {
+                        let FaultKind::RogueTenant { flow } = f.kind else { continue };
+                        for e in &churn {
+                            let LifecycleEvent::Depart { flow: df, at } = *e else {
+                                continue;
+                            };
+                            if df == flow && at >= f.at && at < f.until {
+                                return Err(format!(
+                                    "churn `{}` departs tenant {df} at {:.2} ms, inside \
+                                     the `{}` fault window [{:.2}, {:.2}) ms targeting \
+                                     the same tenant — the departure would race the \
+                                     adversary; drop one of the two axis values or \
+                                     change the tenant count ({t})",
+                                    c.name(),
+                                    at as f64 / MILLIS as f64,
+                                    fp.name(),
+                                    f.at as f64 / MILLIS as f64,
+                                    f.until as f64 / MILLIS as f64,
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
         Ok(())
     }
 
@@ -327,21 +467,24 @@ impl SweepGrid {
                     for &burst in &self.bursts {
                         for &tightness in &self.tightness {
                             for &churn in &self.churn {
-                                for accel in &self.accels {
-                                    for &seed in &self.seeds {
-                                        let key = ScenarioKey {
-                                            mode,
-                                            tenants,
-                                            mix,
-                                            burst,
-                                            tightness,
-                                            churn,
-                                            accel: accel.name,
-                                            seed,
-                                        };
-                                        let spec = self.scenario_spec(&key, accel);
-                                        out.push(Scenario { index, key, spec });
-                                        index += 1;
+                                for &faults in &self.faults {
+                                    for accel in &self.accels {
+                                        for &seed in &self.seeds {
+                                            let key = ScenarioKey {
+                                                mode,
+                                                tenants,
+                                                mix,
+                                                burst,
+                                                tightness,
+                                                churn,
+                                                faults,
+                                                accel: accel.name,
+                                                seed,
+                                            };
+                                            let spec = self.scenario_spec(&key, accel);
+                                            out.push(Scenario { index, key, spec });
+                                            index += 1;
+                                        }
                                     }
                                 }
                             }
@@ -383,6 +526,7 @@ impl SweepGrid {
             .with_warmup(self.base.warmup)
             .with_seed(scenario_seed(self.base.seed, key))
             .with_lifecycle(churn_events(key.churn, tenants, self.base.duration, per_flow_slo))
+            .with_faults(fault_events(key.faults, tenants, self.base.duration))
     }
 }
 
@@ -484,6 +628,7 @@ pub struct ScenarioKey {
     pub burst: Burstiness,
     pub tightness: f64,
     pub churn: Churn,
+    pub faults: FaultProfile,
     /// Accelerator model name (axis label).
     pub accel: &'static str,
     /// Seed-axis value (not the derived simulator seed).
@@ -492,24 +637,30 @@ pub struct ScenarioKey {
 
 impl ScenarioKey {
     /// Stable human-readable identifier, e.g.
-    /// `arcus/t04/mtu/poisson/x0.7000/arrivals/ipsec/s2`. Tightness carries
-    /// four decimals so nearby swept values keep distinct labels. Static
-    /// (no-churn) cells omit the churn segment, so their labels — and the
-    /// simulator seeds derived from them — are byte-identical to grids
-    /// that predate the churn axis.
+    /// `arcus/t04/mtu/poisson/x0.7000/arrivals/accel_dip/ipsec/s2`.
+    /// Tightness carries four decimals so nearby swept values keep distinct
+    /// labels. Static (no-churn) cells omit the churn segment and healthy
+    /// cells omit the faults segment, so their labels — and the simulator
+    /// seeds derived from them — are byte-identical to grids that predate
+    /// those axes.
     pub fn label(&self) -> String {
         let churn = match self.churn {
             Churn::Static => String::new(),
             c => format!("{}/", c.name()),
         };
+        let faults = match self.faults {
+            FaultProfile::Healthy => String::new(),
+            f => format!("{}/", f.name()),
+        };
         format!(
-            "{}/t{:02}/{}/{}/x{:.4}/{}{}/s{}",
+            "{}/t{:02}/{}/{}/x{:.4}/{}{}{}/s{}",
             self.mode.name(),
             self.tenants,
             self.mix.name(),
             burst_name(self.burst),
             self.tightness,
             churn,
+            faults,
             self.accel,
             self.seed
         )
@@ -776,6 +927,100 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn fault_profile_roundtrip_and_parse_errors_list_menu() {
+        for f in FaultProfile::ALL {
+            assert_eq!(FaultProfile::by_name(f.name()), Some(f));
+            assert_eq!(FaultProfile::parse(f.name()), Ok(f));
+        }
+        let err = FaultProfile::parse("meteor").unwrap_err();
+        for f in FaultProfile::ALL {
+            assert!(err.contains(f.name()), "{err} missing {}", f.name());
+        }
+    }
+
+    #[test]
+    fn fault_events_shapes() {
+        use crate::faults::FaultKind;
+        let d = 10 * MILLIS;
+        assert!(fault_events(FaultProfile::Healthy, 4, d).is_empty());
+        let ev = fault_events(FaultProfile::AccelDip, 4, d);
+        assert_eq!(ev.len(), 1);
+        assert!(matches!(ev[0].kind, FaultKind::AccelSlowdown { unit: 0, .. }));
+        assert_eq!((ev[0].at, ev[0].until), (4 * MILLIS, 7 * MILLIS));
+        // Rogue targets the last tenant.
+        let ev = fault_events(FaultProfile::Rogue, 4, d);
+        assert!(matches!(ev[0].kind, FaultKind::RogueTenant { flow: 3 }));
+        // A flap is a deep, short link cut.
+        let ev = fault_events(FaultProfile::Flap, 2, d);
+        assert!(matches!(ev[0].kind, FaultKind::LinkDegrade { factor } if factor < 0.2));
+        assert!(ev[0].until - ev[0].at < d / 10);
+        // Every profile's windows live inside the run at any tenant count.
+        for t in [1usize, 2, 7, 100] {
+            for p in FaultProfile::ALL {
+                for f in fault_events(p, t, d) {
+                    assert!(f.at < f.until && f.until <= d, "{p:?} t={t}: {f:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn healthy_labels_and_seeds_unchanged_by_faults_axis() {
+        let base = || {
+            SweepGrid::new(GridBase::default())
+                .modes(vec![Mode::Arcus])
+                .tenants(vec![2])
+                .mixes(vec![SizeMix::Mtu])
+                .bursts(vec![Burstiness::Paced])
+                .tightness(vec![0.7])
+                .accels(vec![AccelModel::ipsec_32g()])
+                .seeds(vec![1])
+        };
+        let legacy = base().expand();
+        let faulted = base()
+            .faults(vec![FaultProfile::Healthy, FaultProfile::AccelDip, FaultProfile::Rogue])
+            .expand();
+        assert_eq!(legacy.len(), 1);
+        assert_eq!(faulted.len(), 3);
+        assert_eq!(faulted[0].key.label(), legacy[0].key.label());
+        assert_eq!(faulted[0].spec.seed, legacy[0].spec.seed);
+        assert!(faulted[0].spec.faults.is_empty());
+        assert!(faulted[1].key.label().contains("/accel_dip/"));
+        assert!(!faulted[1].spec.faults.is_empty());
+        assert_ne!(faulted[1].spec.seed, legacy[0].spec.seed);
+        let labels: HashSet<String> = faulted.iter().map(|s| s.key.label()).collect();
+        assert_eq!(labels.len(), 3);
+        // Churn and fault segments compose in one label.
+        let both = base()
+            .churn(vec![Churn::Arrivals])
+            .faults(vec![FaultProfile::LinkCut])
+            .expand();
+        assert!(both[0].key.label().contains("/arrivals/link_cut/"));
+    }
+
+    #[test]
+    fn validate_rejects_departure_racing_rogue_fault() {
+        // At one tenant, `departures` retires flow 0 at 50% of the run —
+        // inside the rogue window [40%, 70%) targeting the same flow.
+        let grid = grid_with_lens(&[1, 1, 1, 1, 1, 1, 1])
+            .churn(vec![Churn::Departures])
+            .faults(vec![FaultProfile::Rogue]);
+        let err = grid.validate().unwrap_err();
+        assert!(err.contains("race"), "{err}");
+        assert!(err.contains("departs tenant 0"), "{err}");
+        // The same axes at 4 tenants don't race (rogue targets tenant 3,
+        // departures retire tenants 0–1).
+        let grid = grid_with_lens(&[1, 2, 1, 1, 1, 1, 1])
+            .churn(vec![Churn::Departures])
+            .faults(vec![FaultProfile::Rogue]);
+        let grid = SweepGrid { tenants: vec![4], ..grid };
+        assert!(grid.validate().is_ok());
+        // Healthy × departures at 1 tenant is fine (no fault to race).
+        let grid = grid_with_lens(&[1, 1, 1, 1, 1, 1, 1]).churn(vec![Churn::Departures]);
+        assert!(grid.validate().is_ok());
     }
 
     #[test]

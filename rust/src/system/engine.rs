@@ -54,12 +54,14 @@ use crate::api::{
 use crate::coordinator::planner::PlannerConfig;
 use crate::coordinator::status::MeasuredWindow;
 use crate::dma::Policy;
+use crate::faults::{fault_window, FaultKind};
 use crate::flow::{FlowKind, Path, Slo, TrafficGen};
-use crate::metrics::{FlowMetrics, ThroughputSampler};
+use crate::metrics::{FlowMetrics, Histogram, ThroughputSampler};
 use crate::nic::NicPort;
 use crate::pcie::fabric::{Fabric, OpComplete, OpKind};
 use crate::shaping::{
-    ShapeMode, Shaper, SoftwareShaper, SoftwareShaperConfig, TokenBucket, Verdict,
+    ShapeMode, Shaper, SoftwareShaper, SoftwareShaperConfig, TokenBucket, TokenBucketParams,
+    Verdict,
 };
 use crate::sim::{BinaryHeapQueue, EventQueue, Handler, Sim};
 use crate::storage::nvme::{Io, IoDone, IoKind};
@@ -67,11 +69,15 @@ use crate::storage::Raid0;
 use crate::util::units::{Time, NANOS};
 use crate::util::{Rng, Slab};
 
-use super::report::{FlowReport, SystemReport};
+use super::report::{EraReport, FaultReport, FlowReport, SystemReport};
 use super::spec::{ExperimentSpec, LifecycleEvent, Mode};
 
 /// Hardware shaping decision latency (§5.3.1: 36 ns).
 const SHAPING_LATENCY: Time = 36 * NANOS;
+
+/// A flow counts as recovered once a post-fault control-period window
+/// carries ≥ this fraction of its SLO rate.
+const RECOVERY_FRACTION: f64 = 0.95;
 
 /// A message travelling through the system.
 #[derive(Debug, Clone, Copy)]
@@ -143,6 +149,10 @@ pub enum EngineEvent {
     FlowDeparts { flow: usize },
     /// Lifecycle: the flow renegotiates its SLO.
     Renegotiate { flow: usize, slo: Slo },
+    /// Fault injection: the `idx`-th fault of the plan takes hold.
+    FaultStart { idx: usize },
+    /// Fault injection: the `idx`-th fault's component heals.
+    FaultEnd { idx: usize },
 }
 
 use EngineEvent as Ev;
@@ -191,6 +201,32 @@ struct FlowState {
     /// Post-warmup bytes/ops completed before the current contract.
     contract_base_bytes: u64,
     contract_base_ops: u64,
+    /// Adversary injection: the tenant is currently ignoring its shaper
+    /// program (`RogueTenant` fault). Cleared when the interface clamps it
+    /// (any program install / SetRate directive) or the fault window ends.
+    rogue: bool,
+    /// Shaped rate in force when the tenant went rogue, for the
+    /// end-of-window restore if no clamp arrived first.
+    rogue_restore: Option<f64>,
+}
+
+/// Per-flow, per-era completion counters (fault-injection runs only).
+#[derive(Default)]
+struct EraAcc {
+    bytes: u64,
+    ops: u64,
+    lat: Histogram,
+}
+
+/// Post-fault recovery detection: fixed control-period windows starting at
+/// the fault window's end; the first window carrying ≥ 95% of the SLO rate
+/// marks recovery.
+#[derive(Default, Clone, Copy)]
+struct RecoveryTrack {
+    win_start: Time,
+    bytes: u64,
+    ops: u64,
+    recovered_at: Option<Time>,
 }
 
 /// The component graph.
@@ -226,6 +262,16 @@ pub struct World {
     scratch_fabric: Vec<OpComplete>,
     scratch_accel: Vec<crate::accel::JobDone>,
     scratch_raid: Vec<IoDone>,
+    /// Union fault window `[start, end)` (None = healthy run; the per-era
+    /// accounting below is active only when set).
+    fault_window: Option<(Time, Time)>,
+    /// Per-flow pre/during/post era counters (empty on healthy runs).
+    era_stats: Vec<[EraAcc; 3]>,
+    /// Per-flow post-fault recovery trackers (empty on healthy runs).
+    recovery: Vec<RecoveryTrack>,
+    /// Algorithm-1 ticks are lost while `now` is before this (the
+    /// `ControlOutage` fault).
+    control_outage_until: Time,
 }
 
 impl Handler<EngineEvent> for World {
@@ -296,6 +342,8 @@ impl Handler<EngineEvent> for World {
             Ev::FlowArrives { flow } => self.ev_flow_arrives(sim, flow),
             Ev::FlowDeparts { flow } => self.ev_flow_departs(sim, flow),
             Ev::Renegotiate { flow, slo } => self.ev_renegotiate(sim, flow, slo),
+            Ev::FaultStart { idx } => self.ev_fault_start(sim, idx),
+            Ev::FaultEnd { idx } => self.ev_fault_end(sim, idx),
         }
     }
 }
@@ -391,6 +439,8 @@ impl World {
                 contract_start: 0,
                 contract_base_bytes: 0,
                 contract_base_ops: 0,
+                rogue: false,
+                rogue_restore: None,
             })
             .collect();
 
@@ -419,6 +469,18 @@ impl World {
             scratch_fabric: Vec::new(),
             scratch_accel: Vec::new(),
             scratch_raid: Vec::new(),
+            fault_window: fault_window(&spec.faults),
+            era_stats: if spec.faults.is_empty() {
+                Vec::new()
+            } else {
+                (0..n).map(|_| Default::default()).collect()
+            },
+            recovery: if spec.faults.is_empty() {
+                Vec::new()
+            } else {
+                vec![RecoveryTrack::default(); n]
+            },
+            control_outage_until: 0,
             spec,
         }
     }
@@ -477,6 +539,10 @@ impl World {
     /// Program the interface hardware (or host limiter) a control-plane
     /// response asked for.
     fn install_program(&mut self, now: Time, flow: usize, program: ShaperProgram) {
+        // A fresh program supersedes any adversarial unshaped state: the
+        // hardware registers are authoritative again.
+        self.flows[flow].rogue = false;
+        self.flows[flow].rogue_restore = None;
         match program {
             ShaperProgram::Unshaped => {
                 self.flows[flow].shaper = None;
@@ -966,9 +1032,65 @@ impl World {
             if self.spec.trace {
                 self.traces[flow].push((at, lat, msg.bytes));
             }
+            if let Some((fs, fe)) = self.fault_window {
+                let era = if at < fs {
+                    0
+                } else if at < fe {
+                    1
+                } else {
+                    2
+                };
+                let acc = &mut self.era_stats[flow][era];
+                acc.bytes += msg.bytes;
+                acc.ops += 1;
+                acc.lat.record(lat);
+                if era == 2 {
+                    self.track_recovery(flow, at, msg.bytes, fe);
+                }
+            }
         }
         // The freed pipeline slot can admit the next message.
         self.kick_fetch(sim, flow, at);
+    }
+
+    /// Post-fault recovery detection: fixed control-period windows from the
+    /// fault window's end; the first one carrying ≥ [`RECOVERY_FRACTION`]
+    /// of the flow's SLO rate marks the flow recovered.
+    fn track_recovery(&mut self, flow: usize, at: Time, bytes: u64, fault_end: Time) {
+        let Some((rate, mode)) = self.flows[flow].current_slo.required_rate() else {
+            return;
+        };
+        let r = &mut self.recovery[flow];
+        if r.recovered_at.is_some() {
+            return;
+        }
+        if r.win_start == 0 {
+            // Late arrivals are judged from their own arrival, not from a
+            // heal they weren't present for.
+            r.win_start = fault_end.max(self.flows[flow].arrived_at);
+        }
+        let period = self.spec.control_period.max(1);
+        // Close every full window before `at` (a long completion gap closes
+        // them all; an empty window can never carry the SLO rate).
+        while at >= r.win_start + period {
+            let achieved = match mode {
+                ShapeMode::Gbps => {
+                    r.bytes as f64 * crate::util::units::SECONDS as f64 / period as f64
+                }
+                ShapeMode::Iops => {
+                    r.ops as f64 * crate::util::units::SECONDS as f64 / period as f64
+                }
+            };
+            if achieved >= rate * RECOVERY_FRACTION {
+                r.recovered_at = Some(r.win_start + period);
+                return;
+            }
+            r.win_start += period;
+            r.bytes = 0;
+            r.ops = 0;
+        }
+        r.bytes += bytes;
+        r.ops += 1;
     }
 
     // ---- Control plane ----------------------------------------------------
@@ -980,6 +1102,12 @@ impl World {
     /// without interrupting dataplane operation.
     fn ev_control_tick<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>) {
         let now = sim.now();
+        // ControlOutage fault: the tick is lost — counters are not read,
+        // so the next surviving tick measures one long window spanning the
+        // outage (exactly what a wedged control plane would see).
+        if now < self.control_outage_until {
+            return;
+        }
         // 1. Refresh measured windows from the "hardware counters".
         let mut windows: Vec<(usize, MeasuredWindow)> = Vec::new();
         for i in 0..self.flows.len() {
@@ -1019,6 +1147,16 @@ impl World {
                 if let Some(s) = &mut self.flows[flow].shaper {
                     s.set_rate(now, rate);
                     self.flows[flow].reconfigs += 1;
+                } else if self.flows[flow].rogue {
+                    // The interface clamps an adversarial tenant: the
+                    // hardware bucket is re-armed at the directive's rate
+                    // — the tenant can ignore software, not registers.
+                    let mode = self.flows[flow].mode;
+                    self.flows[flow].shaper =
+                        Some(Box::new(TokenBucket::for_rate(rate, mode)));
+                    self.flows[flow].rogue = false;
+                    self.flows[flow].rogue_restore = None;
+                    self.flows[flow].reconfigs += 1;
                 }
                 self.kick_fetch(sim, flow, now);
             }
@@ -1026,6 +1164,117 @@ impl World {
                 self.flows[flow].path = to;
                 self.flows[flow].reconfigs += 1;
                 self.kick_fetch(sim, flow, now);
+            }
+        }
+    }
+
+    // ---- Fault injection (see crate::faults) ----------------------------
+
+    /// A scheduled fault takes hold: mutate the targeted component. Work
+    /// already in flight (the TLP on the wire, the job in the pipeline)
+    /// keeps its finish time — injection never rewrites the past, which is
+    /// what keeps it deterministic across event-queue disciplines.
+    fn ev_fault_start<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, idx: usize) {
+        let f = self.spec.faults[idx];
+        match f.kind {
+            FaultKind::AccelSlowdown { unit, factor } => {
+                self.accels[unit].set_slowdown(factor);
+            }
+            FaultKind::LinkDegrade { factor } => {
+                self.fabric.set_link_degradation(factor);
+            }
+            FaultKind::SsdSlowdown { factor } => {
+                if let Some(r) = self.raid.as_mut() {
+                    r.set_latency_factor(factor);
+                }
+            }
+            FaultKind::ProfileSkew { accel, factor } => {
+                let name = self.spec.accels[accel].name;
+                self.ctrl.set_profile_skew(name, factor);
+            }
+            FaultKind::RogueTenant { flow } => {
+                // The tenant stops honoring its program: its interface
+                // queue drains unshaped until a control-plane directive
+                // clamps it (apply_directive / install_program re-arm the
+                // bucket and clear the flag).
+                if let Some(s) = self.flows[flow].shaper.take() {
+                    self.flows[flow].rogue_restore = Some(s.rate());
+                }
+                self.flows[flow].rogue = true;
+                let now = sim.now();
+                self.kick_fetch(sim, flow, now);
+            }
+            FaultKind::ControlOutage => {
+                self.control_outage_until = f.until;
+            }
+        }
+    }
+
+    /// A fault's window ends: the component heals — unless a back-to-back
+    /// window on the same component starts at this very instant and its
+    /// `FaultStart` already ran (plan order, not time order, breaks the
+    /// tie): healing then would clobber the newly applied state. The check
+    /// is a pure function of the plan and `now`, so determinism holds.
+    fn ev_fault_end<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, idx: usize) {
+        let f = self.spec.faults[idx];
+        let now = sim.now();
+        let target = f.kind.target();
+        let superseded = self
+            .spec
+            .faults
+            .iter()
+            .enumerate()
+            .any(|(j, g)| j != idx && g.kind.target() == target && g.at <= now && now < g.until);
+        if superseded {
+            return;
+        }
+        match f.kind {
+            FaultKind::AccelSlowdown { unit, .. } => {
+                self.accels[unit].set_slowdown(1.0);
+                self.wake_accel(sim, unit);
+            }
+            FaultKind::LinkDegrade { .. } => {
+                self.fabric.set_link_degradation(1.0);
+                self.wake_fabric(sim);
+            }
+            FaultKind::SsdSlowdown { .. } => {
+                if let Some(r) = self.raid.as_mut() {
+                    r.set_latency_factor(1.0);
+                }
+            }
+            FaultKind::ProfileSkew { accel, .. } => {
+                // Re-profiling heals the table; the next control tick's
+                // over-commit reconciliation reacts to whatever admissions
+                // the skewed table allowed.
+                let name = self.spec.accels[accel].name;
+                self.ctrl.set_profile_skew(name, 1.0);
+            }
+            FaultKind::RogueTenant { flow } => {
+                // If the control plane never clamped the tenant, it gives
+                // up at the window's end and resumes its last program —
+                // through the same install path as a control-plane
+                // response, so host-interposed modes get their software
+                // limiter back, not a hardware bucket they don't have.
+                if self.flows[flow].rogue {
+                    self.flows[flow].rogue = false;
+                    if let Some(rate) = self.flows[flow].rogue_restore.take() {
+                        let mode = self.flows[flow].mode;
+                        let program = if self.host_cfg.is_some() {
+                            ShaperProgram::Software { rate, mode }
+                        } else {
+                            ShaperProgram::TokenBucket {
+                                params: TokenBucketParams::for_rate(rate, mode),
+                                rate,
+                                mode,
+                            }
+                        };
+                        self.install_program(now, flow, program);
+                    }
+                    self.kick_fetch(sim, flow, now);
+                }
+            }
+            FaultKind::ControlOutage => {
+                self.control_outage_until = 0;
             }
         }
     }
@@ -1098,6 +1347,13 @@ impl<Q: EventQueue<EngineEvent> + Default> Engine<Q> {
                 _ => {}
             }
         }
+        // Fault plan: injection and heal events ride the same (time, seq)
+        // queue as the dataplane — determinism survives injection.
+        for (idx, f) in world.spec.faults.iter().enumerate() {
+            debug_assert!(f.at < f.until, "empty fault window {idx}");
+            sim.at(f.at, Ev::FaultStart { idx });
+            sim.at(f.until, Ev::FaultEnd { idx });
+        }
         // Control-plane ticker (Algorithm 1 "run by every client server
         // periodically"); only control planes that plan online need it.
         // The tick event re-arms itself while the run lasts.
@@ -1134,6 +1390,44 @@ impl<Q: EventQueue<EngineEvent> + Default> Engine<Q> {
                 r.arrived_at = w.flows[i].arrived_at;
                 r.departed_at = w.flows[i].departed_at;
                 r.renegotiations_rejected = w.flows[i].renegotiations_rejected;
+                // Fault-era metrics: attainment per era, worst-era tails,
+                // and recovery time (see crate::faults). Era spans are
+                // clamped to the flow's own active lifetime so a churn
+                // cell's late arrival (or early departure) does not dilute
+                // its era rates with time it was absent. (A tenant that
+                // departs and re-arrives is judged from its last arrival,
+                // like contract attainment.)
+                if let Some((fs, fe)) = w.fault_window {
+                    let slo = w.flows[i].current_slo;
+                    let acc = &w.era_stats[i];
+                    let active_lo = w.flows[i].arrived_at.max(w.spec.warmup);
+                    let active_hi = w.flows[i].departed_at.unwrap_or(duration);
+                    let overlap = |lo: Time, hi: Time| {
+                        hi.min(active_hi).saturating_sub(lo.max(active_lo))
+                    };
+                    let spans = [
+                        overlap(w.spec.warmup, fs),
+                        overlap(fs, fe),
+                        overlap(fe, duration),
+                    ];
+                    let era = |k: usize| {
+                        EraReport::new(
+                            acc[k].bytes,
+                            acc[k].ops,
+                            spans[k],
+                            acc[k].lat.percentile(99.0),
+                            &slo,
+                        )
+                    };
+                    r.fault = Some(FaultReport {
+                        pre: era(0),
+                        during: era(1),
+                        post: era(2),
+                        recovery_time: w.recovery[i]
+                            .recovered_at
+                            .map(|t| t.saturating_sub(fe)),
+                    });
+                }
                 // Attainment era for renegotiated flows: from the moment
                 // the new contract's shaper took effect.
                 if w.flows[i].contract_start > 0 {
@@ -1168,6 +1462,7 @@ impl<Q: EventQueue<EngineEvent> + Default> Engine<Q> {
             pcie_down_util: w.fabric.link().busy_time(Dir::Down) as f64 / duration as f64,
             accel_util: w.accels.iter().map(|a| a.utilization(duration)).collect(),
             nic_rx_dropped: w.ports.iter().map(|p| p.rx_dropped).sum(),
+            fault_window: w.fault_window,
             events: self.sim.executed(),
             peak_queue_depth: self.sim.peak_pending(),
             queue: self.sim.queue_name(),
@@ -1541,6 +1836,103 @@ mod tests {
         assert_eq!(report.per_flow[0].renegotiations_rejected, 1);
         let a0 = report.per_flow[0].goodput.as_gbps();
         assert!((a0 - 10.0).abs() / 10.0 < 0.08, "flow0 {a0:.2} Gbps");
+    }
+
+    #[test]
+    fn accel_fault_dips_attainment_then_recovers() {
+        use crate::faults::{FaultKind, FaultSpec};
+        let mut spec = two_flow_spec(Mode::Arcus, 0.5, 0.5);
+        spec = spec.with_duration(9 * MILLIS).with_warmup(MILLIS).with_fault(
+            FaultSpec::new(
+                FaultKind::AccelSlowdown { unit: 0, factor: 0.35 },
+                3 * MILLIS,
+                6 * MILLIS,
+            ),
+        );
+        let r = run(&spec);
+        assert_eq!(r.fault_window, Some((3 * MILLIS, 6 * MILLIS)));
+        for f in &r.per_flow {
+            let fr = f.fault.expect("fault metrics present");
+            let pre = fr.pre.attainment.unwrap();
+            let during = fr.during.attainment.unwrap();
+            let post = fr.post.attainment.unwrap();
+            assert!(pre > 0.9, "flow {} pre {pre:.2}", f.flow);
+            assert!(during < pre * 0.85, "flow {} during {during:.2} !< pre {pre:.2}", f.flow);
+            assert!(post > 0.9, "flow {} post {post:.2}", f.flow);
+            assert!(fr.recovery_time.is_some(), "flow {} never recovered", f.flow);
+            assert!(fr.worst_era_p99() >= fr.pre.p99);
+        }
+    }
+
+    #[test]
+    fn rogue_best_effort_tenant_is_clamped_by_directives() {
+        use crate::faults::{FaultKind, FaultSpec};
+        let line = Rate::gbps(32.0);
+        let flows = vec![
+            FlowSpec::new(
+                0,
+                0,
+                Path::FunctionCall,
+                TrafficPattern::fixed(4096, 0.6, line),
+                Slo::gbps(18.0),
+                0,
+            ),
+            FlowSpec::new(
+                1,
+                1,
+                Path::FunctionCall,
+                TrafficPattern::fixed(4096, 0.9, line),
+                Slo::BestEffort,
+                0,
+            ),
+        ];
+        let spec = ExperimentSpec::new(Mode::Arcus, vec![AccelModel::ipsec_32g()], flows)
+            .with_duration(10 * MILLIS)
+            .with_warmup(2 * MILLIS)
+            .with_fault(FaultSpec::new(
+                FaultKind::RogueTenant { flow: 1 },
+                4 * MILLIS,
+                9 * MILLIS,
+            ));
+        let r = run(&spec);
+        // The committed tenant holds its SLO across the adversary window
+        // (the BE-refresh reaction clamps the rogue within a few control
+        // periods), and the interface re-armed the rogue's bucket.
+        let committed = r.per_flow[0].slo_attainment().unwrap();
+        assert!(committed > 0.9, "committed attainment {committed:.2}");
+        assert!(r.per_flow[1].reconfigs > 0, "rogue tenant never clamped");
+    }
+
+    #[test]
+    fn control_outage_suppresses_fault_reaction() {
+        use crate::faults::{FaultKind, FaultSpec};
+        // An accelerator dip normally triggers a burst of compensation
+        // reshapes. With the ticker dark across the dip (and almost to the
+        // end of the run), the control plane never reacts in time.
+        let mk = |outage: bool| {
+            let mut spec = two_flow_spec(Mode::Arcus, 0.5, 0.5)
+                .with_duration(5 * MILLIS)
+                .with_warmup(MILLIS / 2)
+                .with_fault(FaultSpec::new(
+                    FaultKind::AccelSlowdown { unit: 0, factor: 0.4 },
+                    2 * MILLIS,
+                    4 * MILLIS,
+                ));
+            if outage {
+                spec = spec.with_fault(FaultSpec::new(
+                    FaultKind::ControlOutage,
+                    19 * MILLIS / 10,
+                    49 * MILLIS / 10,
+                ));
+            }
+            run(&spec)
+        };
+        let healthy: u32 = mk(false).per_flow.iter().map(|f| f.reconfigs).sum();
+        let dark: u32 = mk(true).per_flow.iter().map(|f| f.reconfigs).sum();
+        assert!(
+            dark < healthy,
+            "outage should suppress the reaction: dark {dark} !< healthy {healthy}"
+        );
     }
 
     #[test]

@@ -2,7 +2,73 @@
 
 use crate::flow::Slo;
 use crate::metrics::{FlowMetrics, ThroughputSampler};
-use crate::util::units::{Rate, Time, MICROS, SECONDS};
+use crate::util::units::{Rate, Time, MICROS, MILLIS, SECONDS};
+
+/// One era's measured outcome for one flow (fault-injection runs split the
+/// measured span into pre / during / post eras around the union fault
+/// window; see [`crate::faults`]).
+#[derive(Debug, Clone, Copy)]
+pub struct EraReport {
+    /// Payload bytes completed in this era.
+    pub bytes: u64,
+    /// Requests completed in this era.
+    pub ops: u64,
+    /// Era length (ps) the rates are measured over.
+    pub span: Time,
+    /// p99 latency of completions inside the era (ps; 0 when none).
+    pub p99: u64,
+    /// Achieved / SLO-target ratio over this era. `None` for best-effort
+    /// flows or empty eras.
+    pub attainment: Option<f64>,
+}
+
+impl EraReport {
+    /// Build from era counters, deriving the attainment against `slo`.
+    pub fn new(bytes: u64, ops: u64, span: Time, p99: u64, slo: &Slo) -> Self {
+        let attainment = if span == 0 {
+            None
+        } else {
+            match *slo {
+                Slo::Throughput { target, .. } if target.0 > 0.0 => {
+                    let achieved = bytes as f64 * 8.0 * SECONDS as f64 / span as f64;
+                    Some(achieved / target.as_bits_per_sec())
+                }
+                Slo::Iops { target, .. } if target > 0.0 => {
+                    let achieved = ops as f64 * SECONDS as f64 / span as f64;
+                    Some(achieved / target)
+                }
+                Slo::Latency { max_ps, .. } if ops > 0 => {
+                    Some(max_ps as f64 / p99.max(1) as f64)
+                }
+                _ => None,
+            }
+        };
+        EraReport { bytes, ops, span, p99, attainment }
+    }
+}
+
+/// Per-flow fault-era metrics, present only on runs with an injection plan.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultReport {
+    /// `[warmup, fault start)`.
+    pub pre: EraReport,
+    /// `[fault start, fault end)` — the union window over all faults.
+    pub during: EraReport,
+    /// `[fault end, duration)`.
+    pub post: EraReport,
+    /// Time from the fault window's end until the flow's windowed rate
+    /// (control-period windows) first reached ≥ 95% of its SLO target.
+    /// `None`: never recovered inside the run, or no rate SLO to recover
+    /// to.
+    pub recovery_time: Option<Time>,
+}
+
+impl FaultReport {
+    /// Worst p99 across the three eras (the "worst-era p99" headline).
+    pub fn worst_era_p99(&self) -> u64 {
+        self.pre.p99.max(self.during.p99).max(self.post.p99)
+    }
+}
 
 /// One flow's measured outcome.
 #[derive(Debug)]
@@ -41,6 +107,9 @@ pub struct FlowReport {
     pub contract_goodput: Option<Rate>,
     /// IOPS over the current contract's era (see `contract_goodput`).
     pub contract_iops: Option<f64>,
+    /// Fault-era metrics (pre / during / post attainment, worst-era p99,
+    /// recovery time) — `Some` only on runs with an injection plan.
+    pub fault: Option<FaultReport>,
     /// Optional completion trace: (completion time, latency, bytes), for
     /// time-series plots (Fig 9).
     pub trace: Vec<(Time, Time, u64)>,
@@ -80,6 +149,7 @@ impl FlowReport {
             renegotiations_rejected: 0,
             contract_goodput: None,
             contract_iops: None,
+            fault: None,
             trace,
         }
     }
@@ -118,6 +188,9 @@ pub struct SystemReport {
     pub accel_util: Vec<f64>,
     /// NIC RX drops across ports.
     pub nic_rx_dropped: u64,
+    /// Union fault window `[start, end)` when the run injected faults —
+    /// the era boundary every `FlowReport::fault` is measured against.
+    pub fault_window: Option<(Time, Time)>,
     /// DES events executed (perf accounting).
     pub events: u64,
     /// High-water mark of the pending-event set (perf accounting).
@@ -171,7 +244,7 @@ impl SystemReport {
         let mut out = String::new();
         out.push_str(&format!(
             "mode={} span={} events={} peak_queue={} pcie_up={:?} pcie_down={:?} \
-             accel_util={:?} nic_rx_dropped={}\n",
+             accel_util={:?} nic_rx_dropped={} fault_window={:?}\n",
             self.mode,
             self.measured_span,
             self.events,
@@ -180,11 +253,44 @@ impl SystemReport {
             self.pcie_down_util,
             self.accel_util,
             self.nic_rx_dropped,
+            self.fault_window,
         ));
         for f in &self.per_flow {
             // Debug formatting of f64 is shortest-roundtrip: byte-stable
             // for identical values, and any numeric divergence shows up.
             out.push_str(&format!("{f:?}\n"));
+        }
+        out
+    }
+
+    /// Render the per-flow fault-era table (`arcus simulate --faults` /
+    /// `arcus chaos`). Empty string when the run injected no faults.
+    pub fn render_fault_eras(&self) -> String {
+        let Some((fs, fe)) = self.fault_window else {
+            return String::new();
+        };
+        let mut out = String::new();
+        out.push_str(&format!(
+            "fault window [{:.3}, {:.3}) ms — per-era SLO attainment:\n",
+            fs as f64 / MILLIS as f64,
+            fe as f64 / MILLIS as f64
+        ));
+        out.push_str("flow  att.pre  att.fault  att.post  worst-p99(us)  recovery(us)\n");
+        let dash = || "-".to_string();
+        for f in &self.per_flow {
+            let Some(fr) = &f.fault else { continue };
+            let att = |a: Option<f64>| a.map(|x| format!("{x:.3}")).unwrap_or_else(dash);
+            out.push_str(&format!(
+                "{:>4} {:>8} {:>10} {:>9} {:>14.2} {:>13}\n",
+                f.flow,
+                att(fr.pre.attainment),
+                att(fr.during.attainment),
+                att(fr.post.attainment),
+                fr.worst_era_p99() as f64 / MICROS as f64,
+                fr.recovery_time
+                    .map(|t| format!("{:.1}", t as f64 / MICROS as f64))
+                    .unwrap_or_else(dash),
+            ));
         }
         out
     }

@@ -3,6 +3,7 @@
 //! experiment config file.
 
 use crate::accel::AccelModel;
+use crate::faults::FaultSpec;
 use crate::flow::{FlowSpec, Slo};
 use crate::pcie::fabric::FabricConfig;
 use crate::storage::nvme::SsdConfig;
@@ -141,6 +142,10 @@ pub struct ExperimentSpec {
     /// Flow-lifecycle schedule: arrivals, departures, and SLO
     /// renegotiations (empty = every flow present for the whole run).
     pub lifecycle: Vec<LifecycleEvent>,
+    /// Fault-injection plan ([`crate::faults`]): typed degradation /
+    /// adversary windows on the DES clock (empty = healthy run; per-era
+    /// fault metrics are reported only when non-empty).
+    pub faults: Vec<FaultSpec>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -170,7 +175,20 @@ impl ExperimentSpec {
             trace: false,
             shared_port: false,
             lifecycle: Vec::new(),
+            faults: Vec::new(),
         }
+    }
+
+    /// Replace the fault-injection plan.
+    pub fn with_faults(mut self, faults: Vec<FaultSpec>) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Append one fault.
+    pub fn with_fault(mut self, fault: FaultSpec) -> Self {
+        self.faults.push(fault);
+        self
     }
 
     /// Replace the flow-lifecycle schedule.

@@ -55,6 +55,12 @@ impl Gen for F64Range {
 }
 
 /// Vector of values from an element generator with length in [min_len, max_len].
+///
+/// Shrinking is *recursive*: besides dropping halves and single elements
+/// (at every position, not just the tail), each element is shrunk in place
+/// through the element generator — which itself may be a combinator
+/// ([`PairOf`]/[`TripleOf`]/nested `VecOf`), so minimal counterexamples
+/// shrink all the way down the structure.
 pub struct VecOf<G: Gen> {
     pub elem: G,
     pub min_len: usize,
@@ -68,18 +74,25 @@ impl<G: Gen> Gen for VecOf<G> {
     }
     fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
         let mut out = Vec::new();
-        // Remove halves, then single elements, then shrink one element.
+        // 1. Structural: first half, then each single-element removal
+        //    (front removals first: earlier elements often set up state).
         if v.len() > self.min_len {
             let half = (v.len() / 2).max(self.min_len);
-            out.push(v[..half].to_vec());
-            let mut minus_last = v.clone();
-            minus_last.pop();
-            out.push(minus_last);
+            if half < v.len() {
+                out.push(v[..half].to_vec());
+            }
+            for i in 0..v.len() {
+                let mut minus_one = v.clone();
+                minus_one.remove(i);
+                out.push(minus_one);
+            }
         }
-        if let Some(first) = v.first() {
-            for smaller in self.elem.shrink(first) {
+        // 2. Recursive: shrink each element in place through the element
+        //    generator (one position at a time keeps candidates focused).
+        for (i, x) in v.iter().enumerate() {
+            for smaller in self.elem.shrink(x) {
                 let mut copy = v.clone();
-                copy[0] = smaller;
+                copy[i] = smaller;
                 out.push(copy);
             }
         }
@@ -106,6 +119,27 @@ impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
     }
 }
 
+/// Triple of independent generators (tuple combinator; composes
+/// recursively with [`VecOf`]/[`PairOf`] for structured inputs).
+pub struct TripleOf<A: Gen, B: Gen, C: Gen>(pub A, pub B, pub C);
+impl<A: Gen, B: Gen, C: Gen> Gen for TripleOf<A, B, C> {
+    type Value = (A::Value, B::Value, C::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng), self.2.generate(rng))
+    }
+    fn shrink(&self, (a, b, c): &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(a)
+            .into_iter()
+            .map(|a2| (a2, b.clone(), c.clone()))
+            .collect();
+        out.extend(self.1.shrink(b).into_iter().map(|b2| (a.clone(), b2, c.clone())));
+        out.extend(self.2.shrink(c).into_iter().map(|c2| (a.clone(), b.clone(), c2)));
+        out
+    }
+}
+
 /// Choose uniformly from a fixed set of values.
 pub struct OneOf<T: Clone + std::fmt::Debug>(pub Vec<T>);
 impl<T: Clone + std::fmt::Debug> Gen for OneOf<T> {
@@ -122,6 +156,17 @@ pub struct Config {
     pub max_shrink_steps: u32,
 }
 
+/// Resolve the default case count from an `ARCUS_PROPTEST_CASES`-style
+/// value (e.g. a nightly CI lane exports 10x the default). Zero or garbage
+/// falls back to the built-in 256. Pure so it is testable without mutating
+/// the process environment (which would race concurrently running tests).
+pub fn cases_from_env(value: Option<String>) -> u32 {
+    value
+        .and_then(|s| s.parse().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(256)
+}
+
 impl Default for Config {
     fn default() -> Self {
         // Seed is fixed for reproducibility; override via ARCUS_PROP_SEED.
@@ -129,8 +174,10 @@ impl Default for Config {
             .ok()
             .and_then(|s| s.parse().ok())
             .unwrap_or(0xA5C5_2024);
+        // Case count scales via ARCUS_PROPTEST_CASES. Properties that pass
+        // an explicit count keep it; the env only moves the default.
         Config {
-            cases: 256,
+            cases: cases_from_env(std::env::var("ARCUS_PROPTEST_CASES").ok()),
             seed,
             max_shrink_steps: 500,
         }
@@ -235,6 +282,56 @@ mod tests {
     fn pair_gen_generates_both() {
         let g = PairOf(U64Range(0, 10), F64Range(0.5, 1.5));
         forall(&g, |&(a, b)| a <= 10 && (0.5..1.5).contains(&b));
+    }
+
+    #[test]
+    fn triple_gen_generates_and_shrinks_componentwise() {
+        let g = TripleOf(U64Range(0, 10), F64Range(0.5, 1.5), U64Range(3, 9));
+        forall(&g, |&(a, b, c)| a <= 10 && (0.5..1.5).contains(&b) && (3..=9).contains(&c));
+        let shrinks = g.shrink(&(10, 1.4, 9));
+        assert!(shrinks.iter().any(|&(a, _, _)| a < 10));
+        assert!(shrinks.iter().any(|&(_, b, _)| b < 1.4));
+        assert!(shrinks.iter().any(|&(_, _, c)| c < 9));
+    }
+
+    #[test]
+    fn vec_shrink_is_recursive_and_positional() {
+        // A failing property over vectors of pairs must shrink to the
+        // minimal structure: one element, first component at the failure
+        // boundary, second at its generator minimum — exercising element
+        // removal at any position AND recursive element shrinking.
+        let g = VecOf {
+            elem: PairOf(U64Range(0, 1000), U64Range(5, 50)),
+            min_len: 1,
+            max_len: 8,
+        };
+        let result = std::panic::catch_unwind(|| {
+            forall_cfg(
+                &Config { cases: 64, max_shrink_steps: 5000, ..Default::default() },
+                &g,
+                |v| v.iter().all(|&(a, _)| a < 100),
+            );
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().expect("panic payload"),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(
+            msg.contains("[(100, 5)]"),
+            "expected fully-shrunk minimal input, got: {msg}"
+        );
+    }
+
+    #[test]
+    fn proptest_cases_resolution() {
+        // Tested through the pure helper — mutating the real environment
+        // would race sibling tests reading Config::default() concurrently.
+        assert_eq!(cases_from_env(Some("7".into())), 7);
+        assert_eq!(cases_from_env(Some("2560".into())), 2560);
+        // Zero, garbage, or absence falls back to the built-in default.
+        assert_eq!(cases_from_env(Some("0".into())), 256);
+        assert_eq!(cases_from_env(Some("lots".into())), 256);
+        assert_eq!(cases_from_env(None), 256);
     }
 
     #[test]

@@ -1,0 +1,315 @@
+//! Golden fault-conformance tests and fault-reaction properties.
+//!
+//! The fault-injection subsystem's central contract: **determinism
+//! survives injection**. Fault start/heal events ride the same
+//! `(time, seq)`-ordered queue as the dataplane, so a faulted run must be
+//! byte-identical across event-queue disciplines exactly like a healthy
+//! one — pinned here on a 3-tenant scenario with an accelerator
+//! degradation window. The same scenario demonstrates the per-era
+//! metrics: attainment dips during the fault era and recovers after it,
+//! with a finite recovery time.
+//!
+//! The property section covers the two reaction paths the faults stress:
+//! token-bucket conservation across reprogramming *and* link-bandwidth
+//! cuts, and planner soundness under mis-estimated profiles (AccTable
+//! skew): once the table heals and the first renegotiation directives
+//! land, the programmed rate sum never exceeds the true capacity budget.
+
+use arcus::accel::AccelModel;
+use arcus::api::{ArcusControlPlane, ControlPlane, RegisterRequest};
+use arcus::config::{spec_from_document, Document};
+use arcus::coordinator::planner::PlannerConfig;
+use arcus::faults::{FaultKind, FaultSpec};
+use arcus::flow::{FlowKind, FlowSpec, Path, Slo, TrafficPattern};
+use arcus::pcie::fabric::FabricConfig;
+use arcus::shaping::{ShapeMode, Shaper, TokenBucket, Verdict};
+use arcus::sim::{BinaryHeapQueue, CalendarQueue};
+use arcus::system::{run_with, EngineEvent, ExperimentSpec, Mode};
+use arcus::testkit::{forall_cfg, Config, OneOf, TripleOf, U64Range, VecOf};
+use arcus::util::units::{Rate, Time, MILLIS, SECONDS};
+
+// ---------------------------------------------------------------------------
+// Golden fault scenario
+// ---------------------------------------------------------------------------
+
+/// Three Arcus tenants on one IPSec engine; the engine's throughput drops
+/// to 40% across [4, 7) ms of a 12 ms run — deep enough that every
+/// tenant's equal share sits well under its SLO during the window. Traces
+/// are on so the queue-discipline comparison covers every completion
+/// timestamp.
+fn golden_fault_spec() -> ExperimentSpec {
+    let line = Rate::gbps(32.0);
+    let flow = |id: usize, slo: f64, load: f64| {
+        FlowSpec::new(
+            id,
+            id,
+            Path::FunctionCall,
+            TrafficPattern::fixed(1500, load, line),
+            Slo::gbps(slo),
+            0,
+        )
+    };
+    ExperimentSpec::new(
+        Mode::Arcus,
+        vec![AccelModel::ipsec_32g()],
+        vec![flow(0, 9.0, 0.45), flow(1, 8.0, 0.45), flow(2, 6.0, 0.35)],
+    )
+    .with_duration(12 * MILLIS)
+    .with_warmup(2 * MILLIS)
+    .with_fault(FaultSpec::new(
+        FaultKind::AccelSlowdown { unit: 0, factor: 0.4 },
+        4 * MILLIS,
+        7 * MILLIS,
+    ))
+    .with_trace()
+}
+
+#[test]
+fn golden_fault_scenario_byte_identical_across_queues() {
+    let spec = golden_fault_spec();
+    let heap = run_with::<BinaryHeapQueue<EngineEvent>>(&spec);
+    let cal = run_with::<CalendarQueue<EngineEvent>>(&spec);
+    assert_eq!(heap.queue, "binary_heap");
+    assert_eq!(cal.queue, "calendar");
+    assert_eq!(
+        heap.canonical(),
+        cal.canonical(),
+        "faulted SystemReports diverge between queue disciplines"
+    );
+    assert_eq!(heap.events, cal.events);
+    assert_eq!(heap.peak_queue_depth, cal.peak_queue_depth);
+    assert!(heap.events > 100_000, "golden run too small: {}", heap.events);
+}
+
+#[test]
+fn golden_fault_scenario_dips_and_recovers() {
+    let report = run_with::<BinaryHeapQueue<EngineEvent>>(&golden_fault_spec());
+    assert_eq!(report.fault_window, Some((4 * MILLIS, 7 * MILLIS)));
+    for f in &report.per_flow {
+        let fr = f.fault.expect("fault metrics must be present");
+        let pre = fr.pre.attainment.expect("pre-era attainment");
+        let during = fr.during.attainment.expect("fault-era attainment");
+        let post = fr.post.attainment.expect("post-era attainment");
+        // 9 + 8 + 6 = 23 Gbps committed on an engine degraded to ~13: the
+        // fault era must sit well below both healthy eras.
+        assert!(pre > 0.9, "flow {} pre-fault attainment {pre:.3}", f.flow);
+        assert!(
+            during < pre * 0.85,
+            "flow {}: fault-era attainment {during:.3} should dip below pre {pre:.3}",
+            f.flow
+        );
+        assert!(post > 0.9, "flow {} post-fault attainment {post:.3}", f.flow);
+        // And every tenant is measurably back on SLO: a finite recovery
+        // time, inside the post-fault era.
+        let rec = fr.recovery_time.unwrap_or_else(|| {
+            panic!("flow {} never recovered after the fault window", f.flow)
+        });
+        assert!(rec < 5 * MILLIS, "flow {} recovery {rec} ps too slow", f.flow);
+        assert!(fr.worst_era_p99() >= fr.during.p99);
+    }
+}
+
+#[test]
+fn degraded_exemplar_config_runs_with_fault_metrics() {
+    // The committed exemplar (CI's chaos-smoke input) must parse, run, and
+    // produce per-era metrics for all three tenants.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/degraded.toml");
+    let doc = Document::from_file(&path).expect("degraded.toml parses");
+    let spec = spec_from_document(&doc).expect("degraded.toml builds a spec");
+    assert_eq!(spec.faults.len(), 2);
+    let report = run_with::<BinaryHeapQueue<EngineEvent>>(&spec);
+    assert_eq!(report.per_flow.len(), 3);
+    assert!(report.fault_window.is_some());
+    assert!(report.per_flow.iter().all(|f| f.fault.is_some()));
+    let table = report.render_fault_eras();
+    assert!(table.contains("fault window"), "{table}");
+    // The rogue tenant was clamped at the interface at least once.
+    assert!(report.per_flow[2].reconfigs > 0, "rogue tenant never clamped");
+}
+
+// ---------------------------------------------------------------------------
+// Sweep integration: the faults axis composes without perturbing history
+// ---------------------------------------------------------------------------
+
+#[test]
+fn healthy_cells_unchanged_by_faults_axis_end_to_end() {
+    use arcus::flow::pattern::Burstiness;
+    use arcus::sweep::{aggregate, FaultProfile, GridBase, SizeMix, SweepGrid, SweepRunner};
+    let grid = |faults: Vec<FaultProfile>| {
+        SweepGrid::new(GridBase {
+            duration: 2 * MILLIS,
+            warmup: MILLIS / 2,
+            line_rate: Rate::gbps(32.0),
+            load: 0.9,
+            path: Path::FunctionCall,
+            seed: 11,
+        })
+        .modes(vec![Mode::Arcus])
+        .tenants(vec![2])
+        .mixes(vec![SizeMix::Mtu])
+        .bursts(vec![Burstiness::Paced, Burstiness::Poisson])
+        .tightness(vec![0.7])
+        .faults(faults)
+        .accels(vec![AccelModel::ipsec_32g()])
+        .seeds(vec![1])
+    };
+    let runner = SweepRunner::with_threads(4);
+    let legacy = runner.run(&grid(vec![FaultProfile::Healthy]));
+    let faulted = runner.run(&grid(vec![
+        FaultProfile::Healthy,
+        FaultProfile::AccelDip,
+        FaultProfile::Rogue,
+    ]));
+    assert_eq!(faulted.len(), 3 * legacy.len());
+    for l in &legacy {
+        let f = faulted
+            .iter()
+            .find(|f| f.key.label() == l.key.label())
+            .expect("healthy cell present in the faulted grid");
+        assert!(matches!(f.key.faults, FaultProfile::Healthy));
+        for (x, y) in l.report.per_flow.iter().zip(f.report.per_flow.iter()) {
+            assert_eq!(x.completed, y.completed, "{}", l.key.label());
+            assert_eq!(x.bytes, y.bytes, "{}", l.key.label());
+            assert_eq!(x.lat_p99, y.lat_p99, "{}", l.key.label());
+        }
+        assert!(f.report.fault_window.is_none());
+    }
+    // Faulted cells carry metrics and surface in the aggregate's axis
+    // table.
+    let agg = aggregate(&faulted);
+    assert!(agg.render().contains("[by faults]"));
+    let dip = faulted
+        .iter()
+        .find(|f| matches!(f.key.faults, FaultProfile::AccelDip))
+        .unwrap();
+    assert!(dip.report.fault_window.is_some());
+    assert!(dip.report.per_flow.iter().all(|f| f.fault.is_some()));
+}
+
+// ---------------------------------------------------------------------------
+// Property: token-bucket conservation across set_rate and link cuts
+// ---------------------------------------------------------------------------
+
+/// Drive a saturated token bucket era by era. Each era reprograms the rate
+/// (`set_rate` mid-flight) and caps the *arrival* feed at a degraded line
+/// rate — the fault-era link-bandwidth cut: during a deep cut the bucket
+/// idles below its rate and banks at most one bucket of credit. In every
+/// era, shaped bytes never exceed committed rate × era length plus one
+/// bucket of carried burst.
+#[test]
+fn prop_token_bucket_conserves_across_rate_changes_and_link_cuts() {
+    let era_gen = TripleOf(
+        OneOf(vec![1.0f64, 4.0, 10.0, 25.0]), // committed rate, Gbps
+        U64Range(1, 4),                       // era length, ms
+        OneOf(vec![1.0f64, 0.5, 0.1]),        // link factor (1.0 = healthy)
+    );
+    let gen = VecOf { elem: era_gen, min_len: 1, max_len: 6 };
+    forall_cfg(&Config { cases: 48, ..Default::default() }, &gen, |eras| {
+        let first_rate = eras[0].0 * 1e9 / 8.0;
+        let mut tb = TokenBucket::for_rate(first_rate, ShapeMode::Gbps);
+        let mut now: Time = 0;
+        for &(gbps, era_ms, link_factor) in eras {
+            let rate = gbps * 1e9 / 8.0; // bytes/sec
+            tb.set_rate(now, rate);
+            let bucket_bytes = (tb.params().bkt_size * tb.params().token_unit) as f64;
+            let era_end = now + era_ms * MILLIS;
+            // The degraded link delivers 1500 B frames no faster than
+            // `link_factor` × 40 Gbps — the feed the shaper sees.
+            let line_bps = 40e9 / 8.0 * link_factor;
+            let gap = (1500.0 * SECONDS as f64 / line_bps) as Time;
+            let mut admitted = 0u64;
+            while now < era_end {
+                match tb.try_acquire(now, 1500) {
+                    Verdict::Admit => {
+                        admitted += 1500;
+                        now += gap;
+                    }
+                    Verdict::RetryAt(t) => {
+                        if t >= era_end {
+                            break;
+                        }
+                        now = t;
+                    }
+                }
+            }
+            let era_secs = era_ms as f64 * MILLIS as f64 / SECONDS as f64;
+            let budget = rate * era_secs + bucket_bytes + 2.0 * 1500.0;
+            if admitted as f64 > budget {
+                eprintln!(
+                    "era ({gbps} Gbps, {era_ms} ms, link {link_factor}): \
+                     admitted {admitted} > budget {budget:.0}"
+                );
+                return false;
+            }
+            now = now.max(era_end);
+        }
+        true
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Property: planner soundness under mis-estimated profiles
+// ---------------------------------------------------------------------------
+
+/// With AccTable/profile skew injected, admission over-commits; once the
+/// table heals, the first renegotiation directives (the over-commit
+/// reconciliation reshape) must bring the total programmed rate under the
+/// true (unskewed) capacity — for any roster size, skew, and SLO split.
+#[test]
+fn prop_skewed_profile_never_survives_first_rebalance() {
+    let gen = TripleOf(
+        U64Range(2, 6),                        // tenants
+        OneOf(vec![1.25f64, 1.5, 2.0, 3.0]),   // capacity over-estimate
+        U64Range(2, 9),                        // per-tenant SLO, Gbps
+    );
+    forall_cfg(&Config { cases: 64, ..Default::default() }, &gen, |&(n, skew, gbps)| {
+        let mut cp = ArcusControlPlane::from_models(
+            &[AccelModel::ipsec_32g()],
+            &FabricConfig::gen3_x8(),
+            PlannerConfig::default(),
+        );
+        cp.set_profile_skew("ipsec", skew);
+        let mut admitted = Vec::new();
+        for f in 0..n as usize {
+            let req = RegisterRequest {
+                flow: f,
+                vm: f,
+                path: Path::FunctionCall,
+                accel: 0,
+                accel_name: "ipsec".into(),
+                kind: FlowKind::Accel,
+                slo: Slo::gbps(gbps as f64),
+                size_hint: 1500,
+            };
+            if cp.register_flow(&req).is_ok() {
+                admitted.push(f);
+            }
+        }
+        if admitted.is_empty() {
+            return true; // nothing committed, nothing to reconcile
+        }
+        // Re-profiling heals the table; the first tick emits the
+        // reconciliation directives and applies them to its own registry.
+        cp.set_profile_skew("ipsec", 1.0);
+        let _ = cp.tick(0, &[]);
+        let programmed: f64 = admitted
+            .iter()
+            .filter_map(|&f| cp.query_status(f).and_then(|v| v.shaped_rate))
+            .sum();
+        let true_capacity = cp
+            .profile()
+            .capacity("ipsec", Path::FunctionCall, 1500, admitted.len())
+            .expect("profiled context")
+            .capacity
+            .as_bits_per_sec()
+            / 8.0;
+        if programmed > true_capacity * 1.001 {
+            eprintln!(
+                "n={n} skew={skew} slo={gbps}G: programmed {programmed:.3e} \
+                 > true capacity {true_capacity:.3e}"
+            );
+            return false;
+        }
+        true
+    });
+}
