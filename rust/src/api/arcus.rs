@@ -39,9 +39,20 @@ pub struct ArcusControlPlane {
     /// Active skews by accelerator name — independent faults on different
     /// accelerators may overlap, and healing one must not heal the others.
     profile_skews: Vec<(String, f64)>,
+    /// Hierarchical shaping (§5 at scale): commit tenant aggregates on the
+    /// per-engine shaper tree and pace committed flows as tree leaves
+    /// instead of per-flow hardware buckets.
+    hierarchical: bool,
+    /// Tenant-aggregate envelopes `(guarantee, ceiling)` last announced to
+    /// the dataplane, keyed by `(engine, tenant)`; `tick` diffs against it
+    /// and emits `SetAggregate` tree-install directives for changes.
+    announced: std::collections::BTreeMap<(usize, usize), (f64, f64)>,
+    /// Engine-root budgets last used for tree installs, by accelerator.
+    engine_budgets: std::collections::BTreeMap<usize, f64>,
 }
 
 impl ArcusControlPlane {
+    /// A control plane over explicit profile/path tables.
     pub fn new(profile: ProfileTable, acc_table: AccTable, cfg: PlannerConfig) -> Self {
         ArcusControlPlane {
             cfg,
@@ -50,7 +61,27 @@ impl ArcusControlPlane {
             status: PerFlowStatusTable::default(),
             pristine_profile: None,
             profile_skews: Vec::new(),
+            hierarchical: false,
+            announced: std::collections::BTreeMap::new(),
+            engine_budgets: std::collections::BTreeMap::new(),
         }
+    }
+
+    /// Enable (or disable) hierarchical shaping: committed and
+    /// best-effort accelerator flows are programmed as shaper-tree leaves
+    /// under per-tenant aggregates, and `tick` maintains the aggregates
+    /// with `SetAggregate` directives. Storage flows keep flat programs
+    /// (the SSD is its own capacity authority), and so do IOPS-SLO
+    /// accelerator flows — their message-denominated budgets are not
+    /// commensurable with the bytes-denominated tree pool.
+    pub fn with_hierarchy(mut self, on: bool) -> Self {
+        self.hierarchical = on;
+        self
+    }
+
+    /// Is hierarchical shaping enabled?
+    pub fn hierarchical(&self) -> bool {
+        self.hierarchical
     }
 
     /// Learn the profile table for a device list on a PCIe fabric and
@@ -83,6 +114,7 @@ impl ArcusControlPlane {
         &self.profile
     }
 
+    /// The planner tuning in force.
     pub fn planner_cfg(&self) -> &PlannerConfig {
         &self.cfg
     }
@@ -105,7 +137,7 @@ impl ArcusControlPlane {
     /// rate, floored at 2% of capacity so the class never fully starves.
     fn opportunistic_rate(&self, flow: FlowId) -> f64 {
         let Some(row) = self.status.get(flow) else { return 0.0 };
-        let n = self.status.flows_on_accel(row.accel).len().max(1);
+        let n = self.status.count_on_accel(row.accel).max(1);
         let cap = self
             .profile
             .capacity(&row.accel_name, row.path, row.size_hint, n)
@@ -113,6 +145,116 @@ impl ArcusControlPlane {
             .unwrap_or(0.0);
         let committed = self.status.committed_rate(row.accel);
         (cap * (1.0 - self.cfg.admission_headroom) - committed).max(cap * 0.02)
+    }
+
+    /// Engine-root budget in bytes/sec for a flow's profiled context: the
+    /// same capacity (net of the admission reserve) the CHECK plans
+    /// against, used as the tree's root and tenant ceilings.
+    fn engine_budget(&self, accel: usize, accel_name: &str, path: Path, size_hint: u64) -> f64 {
+        let n = self.status.count_on_accel(accel).max(1);
+        self.profile
+            .capacity(accel_name, path, size_hint, n)
+            .map(|e| {
+                e.capacity.as_bits_per_sec() / 8.0 * (1.0 - self.cfg.admission_headroom)
+            })
+            .unwrap_or(f64::INFINITY)
+    }
+
+    /// Build the tree-leaf program for an (already registered) flow:
+    /// `guarantee` is the leaf's assured rate, `ceiling` its borrowing
+    /// cap; the install carries the tenant's absolute committed aggregate
+    /// and the engine budget so one program upserts every tree level.
+    /// Records the announced envelope so `tick` does not re-emit it.
+    fn hierarchy_program(
+        &mut self,
+        flow: FlowId,
+        guarantee: f64,
+        ceiling: f64,
+        mode: ShapeMode,
+    ) -> ShaperProgram {
+        let row = self.status.get(flow).expect("hierarchy program for unregistered flow");
+        let (accel, vm) = (row.accel, row.vm);
+        let (name, path, hint) = (row.accel_name.clone(), row.path, row.size_hint);
+        let budget = self.engine_budget(accel, &name, path, hint);
+        // The registering flow's own tenant sum only — scanning the full
+        // aggregate table here would make a 10k-flow registration storm
+        // O(n²) with allocations (tick-time maintenance still diffs the
+        // complete table via `planner::tenant_aggregates`).
+        let tenant_guarantee: f64 = self
+            .status
+            .iter()
+            .filter(|r| r.accel == accel && r.vm == vm && r.accel_name != "storage")
+            .filter_map(|r| match r.slo.required_rate() {
+                Some((rate, ShapeMode::Gbps)) => Some(rate),
+                _ => None,
+            })
+            .sum::<f64>()
+            * self.cfg.shaping_headroom;
+        self.announced.insert((accel, vm), (tenant_guarantee, budget));
+        self.engine_budgets.insert(accel, budget);
+        ShaperProgram::Hierarchy {
+            tenant: vm,
+            guarantee,
+            ceiling: ceiling.min(budget),
+            tenant_guarantee,
+            tenant_ceiling: budget,
+            engine_ceiling: budget,
+            mode,
+        }
+    }
+
+    /// Hierarchical `tick` maintenance: diff the current per-(engine,
+    /// tenant) committed aggregates against what the dataplane last heard
+    /// and emit `SetAggregate` tree-install directives for the deltas
+    /// (arrivals are announced synchronously by their install program;
+    /// departures and renegotiations surface here).
+    fn refresh_aggregates(&mut self) -> Vec<Directive> {
+        let mut out = Vec::new();
+        let mut current = std::collections::BTreeMap::new();
+        for (accel, vm, sum) in planner::tenant_aggregates(&self.status) {
+            current.insert((accel, vm), sum * self.cfg.shaping_headroom);
+        }
+        // Changed or new aggregates.
+        for (&(accel, vm), &guarantee) in &current {
+            let ceiling = self
+                .engine_budgets
+                .get(&accel)
+                .copied()
+                .unwrap_or(f64::INFINITY);
+            let stale = match self.announced.get(&(accel, vm)) {
+                Some(&(g, c)) => {
+                    (g - guarantee).abs() > g.abs().max(1.0) * 1e-9 || c != ceiling
+                }
+                None => true,
+            };
+            if stale {
+                self.announced.insert((accel, vm), (guarantee, ceiling));
+                out.push(Directive::SetAggregate { engine: accel, tenant: vm, guarantee, ceiling });
+            }
+        }
+        // Vanished aggregates (every committed flow departed): release the
+        // guarantee so siblings can borrow the freed budget.
+        let gone: Vec<(usize, usize)> = self
+            .announced
+            .keys()
+            .filter(|k| !current.contains_key(k))
+            .copied()
+            .collect();
+        for (accel, vm) in gone {
+            let ceiling = self
+                .engine_budgets
+                .get(&accel)
+                .copied()
+                .unwrap_or(f64::INFINITY);
+            self.announced.remove(&(accel, vm));
+            out.push(Directive::SetAggregate {
+                engine: accel,
+                tenant: vm,
+                guarantee: 0.0,
+                ceiling,
+            });
+        }
+        out
     }
 
     /// §6's no-guarantee class: back a best-effort flow off multiplicatively
@@ -199,6 +341,17 @@ impl ControlPlane for ArcusControlPlane {
                 // headroom computation counts this flow in N.
                 self.status.register(row);
                 let rate = self.opportunistic_rate(req.flow).max(1.0);
+                if self.hierarchical {
+                    // Zero-guarantee tree leaf capped at the opportunistic
+                    // headroom: the DRR borrow pass hands it exactly the
+                    // unused sibling budget the §6 class harvests.
+                    if let Some(r) = self.status.get_mut(req.flow) {
+                        r.shaped_rate = Some(rate);
+                    }
+                    let program =
+                        self.hierarchy_program(req.flow, 0.0, rate, ShapeMode::Gbps);
+                    return Ok(Admitted { committed_rate: None, program });
+                }
                 let params = TokenBucketParams::for_rate(rate, ShapeMode::Gbps);
                 if let Some(r) = self.status.get_mut(req.flow) {
                     r.shaped_rate = Some(params.nominal_rate());
@@ -238,6 +391,23 @@ impl ControlPlane for ArcusControlPlane {
                             .unwrap_or(ShapeMode::Gbps);
                         row.shaped_rate = Some(rate);
                         self.status.register(row);
+                        if self.hierarchical && mode == ShapeMode::Gbps {
+                            // Tree leaf: guaranteed its shaped rate, free
+                            // to borrow idle sibling budget up to the
+                            // engine ceiling (work-conserving §5 shaping).
+                            // IOPS-SLO flows fall through to a flat bucket
+                            // — message-denominated budgets are not
+                            // commensurable with the bytes-denominated
+                            // tree pool.
+                            let shaped = rate * self.cfg.shaping_headroom;
+                            let program = self.hierarchy_program(
+                                req.flow,
+                                shaped,
+                                f64::INFINITY,
+                                mode,
+                            );
+                            return Ok(Admitted { committed_rate: Some(rate), program });
+                        }
                         Ok(Admitted {
                             committed_rate: Some(rate),
                             // Program slightly above the SLO so the measured
@@ -301,10 +471,20 @@ impl ControlPlane for ArcusControlPlane {
                 }
                 match slo.required_rate() {
                     Some((_, mode)) => {
-                        let row = self.status.get_mut(flow).expect("checked above");
-                        row.shaped_rate = Some(rate);
-                        row.params = Some(params);
-                        row.reconfigs += 1;
+                        {
+                            let row = self.status.get_mut(flow).expect("checked above");
+                            row.shaped_rate = Some(rate);
+                            row.params = Some(params);
+                            row.reconfigs += 1;
+                        }
+                        if self.hierarchical && mode == ShapeMode::Gbps {
+                            // See register_flow: IOPS contracts keep flat
+                            // buckets even under hierarchy.
+                            let shaped = rate * headroom;
+                            let program =
+                                self.hierarchy_program(flow, shaped, f64::INFINITY, mode);
+                            return Ok(Admitted { committed_rate: Some(rate), program });
+                        }
                         Ok(Admitted {
                             committed_rate: Some(rate),
                             program: ShaperProgram::TokenBucket {
@@ -321,6 +501,22 @@ impl ControlPlane for ArcusControlPlane {
                         // slo is already BestEffort, so the headroom
                         // computation no longer counts the old commitment.)
                         let be_rate = self.opportunistic_rate(flow).max(1.0);
+                        if self.hierarchical {
+                            {
+                                let row =
+                                    self.status.get_mut(flow).expect("checked above");
+                                row.shaped_rate = Some(be_rate);
+                                row.params = None;
+                                row.reconfigs += 1;
+                            }
+                            let program = self.hierarchy_program(
+                                flow,
+                                0.0,
+                                be_rate,
+                                ShapeMode::Gbps,
+                            );
+                            return Ok(Admitted { committed_rate: None, program });
+                        }
                         let be_params =
                             TokenBucketParams::for_rate(be_rate, ShapeMode::Gbps);
                         let row = self.status.get_mut(flow).expect("checked above");
@@ -451,6 +647,12 @@ impl ControlPlane for ArcusControlPlane {
         }
         // 3. Opportunistic-class refresh (§6).
         out.extend(self.refresh_opportunistic());
+        // 4. Tree maintenance (hierarchical mode): announce tenant-
+        //    aggregate changes (departures, renegotiations, rebalances)
+        //    as SetAggregate tree-install directives.
+        if self.hierarchical {
+            out.extend(self.refresh_aggregates());
+        }
         out
     }
 
@@ -662,6 +864,62 @@ mod tests {
             .capacity
             .0;
         assert_eq!(before.to_bits(), after.to_bits(), "heal must be exact");
+    }
+
+    #[test]
+    fn hierarchical_mode_emits_tree_programs_and_aggregate_releases() {
+        let mut cp = ArcusControlPlane::from_models(
+            &[AccelModel::ipsec_32g()],
+            &FabricConfig::gen3_x8(),
+            PlannerConfig::default(),
+        )
+        .with_hierarchy(true);
+        assert!(cp.hierarchical());
+        // Committed registration comes back as a tree-leaf install carrying
+        // the tenant and engine envelopes.
+        let a = cp.register_flow(&req(0, Slo::gbps(10.0))).unwrap();
+        match a.program {
+            ShaperProgram::Hierarchy {
+                tenant,
+                guarantee,
+                ceiling,
+                tenant_guarantee,
+                tenant_ceiling,
+                engine_ceiling,
+                ..
+            } => {
+                assert_eq!(tenant, 0, "tenant aggregate keys on the VM");
+                assert!(guarantee > 0.0 && ceiling >= guarantee);
+                // The sole flow's guarantee IS its tenant's aggregate.
+                assert!((tenant_guarantee - guarantee).abs() / guarantee < 1e-9);
+                assert!(engine_ceiling >= tenant_guarantee);
+                assert!((tenant_ceiling - engine_ceiling).abs() < 1.0);
+            }
+            other => panic!("expected hierarchy program, got {other:?}"),
+        }
+        // Best-effort joins as a zero-guarantee leaf (borrow-only).
+        let b = cp.register_flow(&req(1, Slo::BestEffort)).unwrap();
+        match b.program {
+            ShaperProgram::Hierarchy { guarantee, ceiling, .. } => {
+                assert_eq!(guarantee, 0.0);
+                assert!(ceiling >= 1.0);
+            }
+            other => panic!("expected hierarchy program, got {other:?}"),
+        }
+        // A departure releases the tenant's aggregate: the next tick
+        // announces it as a SetAggregate tree-install directive.
+        cp.deregister_flow(0).unwrap();
+        let ds = cp.tick(0, &[]);
+        assert!(
+            ds.iter().any(|d| matches!(
+                d,
+                Directive::SetAggregate { engine: 0, tenant: 0, guarantee, .. }
+                    if *guarantee == 0.0
+            )),
+            "expected a zero-guarantee SetAggregate for the departed tenant: {ds:?}"
+        );
+        // The diff converges: a second tick announces nothing further.
+        assert!(cp.tick(0, &[]).iter().all(|d| !matches!(d, Directive::SetAggregate { .. })));
     }
 
     #[test]

@@ -68,6 +68,7 @@ pub struct NoOpControlPlane {
 }
 
 impl NoOpControlPlane {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }
@@ -118,6 +119,7 @@ pub struct StaticRateControlPlane {
 }
 
 impl StaticRateControlPlane {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }

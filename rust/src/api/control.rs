@@ -27,14 +27,19 @@ use crate::util::units::Time;
 /// that keys the Capacity(t, X, N) profile lookup).
 #[derive(Debug, Clone)]
 pub struct RegisterRequest {
+    /// Caller-chosen flow id (unique among registered flows).
     pub flow: FlowId,
+    /// Tenant VM the flow belongs to.
     pub vm: usize,
+    /// Invocation path (function call / inline NIC / P2P).
     pub path: Path,
     /// Accelerator index in the system's device list.
     pub accel: usize,
     /// Accelerator model name (profile-table key; "storage" for NVMe flows).
     pub accel_name: String,
+    /// Accelerator vs storage-read vs storage-write flow.
     pub kind: FlowKind,
+    /// The service-level objective the tenant asks to commit.
     pub slo: Slo,
     /// Message size this flow predominantly uses (profiling context key).
     pub size_hint: u64,
@@ -55,6 +60,29 @@ pub enum ShaperProgram {
     },
     /// Program a host-software rate limiter (the Host_TS_* baselines).
     Software { rate: f64, mode: ShapeMode },
+    /// Hang the flow off the hierarchical shaper tree
+    /// ([`crate::shaping::ShaperTree`]) as a *paced leaf* under its
+    /// tenant's aggregate node on the flow's engine — the scalable form of
+    /// shaping (§5): no per-flow hardware bucket, release driven by the
+    /// tree's deficit-round-robin pacing pass. The install also carries
+    /// the absolute tenant-aggregate and engine-root envelopes as of this
+    /// decision, so one program upserts every level it hangs from.
+    Hierarchy {
+        /// Tenant aggregate (VM) this leaf hangs off.
+        tenant: usize,
+        /// Leaf assured rate (units/sec).
+        guarantee: f64,
+        /// Leaf borrowing cap (units/sec).
+        ceiling: f64,
+        /// Tenant aggregate assured rate, absolute (units/sec).
+        tenant_guarantee: f64,
+        /// Tenant aggregate borrowing cap, absolute (units/sec).
+        tenant_ceiling: f64,
+        /// Engine-root ceiling (units/sec; the admission budget).
+        engine_ceiling: f64,
+        /// Cost units (bytes vs messages).
+        mode: ShapeMode,
+    },
 }
 
 /// Successful registration / renegotiation outcome.
@@ -99,22 +127,45 @@ impl std::error::Error for ApiError {}
 /// ~10 µs PCIe round-trip latency before the change takes effect).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Directive {
-    /// Reprogram a flow's shaper to a new rate (units/sec).
+    /// Reprogram a flow's shaper to a new rate (units/sec). On a tree-
+    /// paced leaf this caps the leaf's ceiling at `rate` — the flat
+    /// register semantics ("the flow cannot exceed `rate`") preserved.
     SetRate { flow: FlowId, rate: f64 },
     /// Re-route a flow to a less-contended invocation path.
     SwitchPath { flow: FlowId, to: Path },
+    /// Tree-install: (re)program a tenant aggregate node on an engine's
+    /// shaper tree with an absolute `(guarantee, ceiling)` envelope in
+    /// units/sec. Emitted by the hierarchical planner whenever a tenant's
+    /// committed sum changes (arrival, departure, renegotiation,
+    /// over-commit rebalance).
+    SetAggregate {
+        /// Engine (accelerator index) whose tree carries the node.
+        engine: usize,
+        /// Tenant aggregate (VM) to reprogram.
+        tenant: usize,
+        /// Assured rate of the aggregate (units/sec).
+        guarantee: f64,
+        /// Borrowing cap of the aggregate (units/sec).
+        ceiling: f64,
+    },
 }
 
 /// Point-in-time view of one registered flow, for `query_status`.
 #[derive(Debug, Clone)]
 pub struct FlowStatusView {
+    /// Flow id.
     pub flow: FlowId,
+    /// Tenant VM.
     pub vm: usize,
+    /// Current invocation path (may change via `SwitchPath`).
     pub path: Path,
+    /// Accelerator index.
     pub accel: usize,
+    /// SLO currently in force (tracks renegotiations).
     pub slo: Slo,
     /// Shaping rate currently programmed (units/sec), if shaped.
     pub shaped_rate: Option<f64>,
+    /// Meeting / violating / warmup standing of the last window.
     pub state: SloState,
     /// Consecutive violating windows.
     pub violations: u32,

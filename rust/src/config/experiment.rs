@@ -10,6 +10,8 @@
 //! warmup_ms = 2
 //! seed = 1
 //! shared_port = false
+//! hierarchy = false         # hierarchical shaper tree (Arcus mode; see
+//!                           # crate::shaping::hierarchy)
 //!
 //! [[accels]]
 //! kind = "ipsec"            # or "synthetic" with peak_gbps = 50.0
@@ -90,6 +92,9 @@ pub fn spec_from_document(doc: &Document) -> Result<ExperimentSpec> {
     }
     if doc.bool_or("experiment", "trace", false) {
         spec = spec.with_trace();
+    }
+    if doc.bool_or("experiment", "hierarchy", false) {
+        spec = spec.with_hierarchy();
     }
     if doc.tables.contains_key("raid") {
         let drives = doc.int_or("raid", "drives", 4) as usize;

@@ -418,6 +418,26 @@ fn accel_budget(
     Some((capacity_bytes * (1.0 - cfg.admission_headroom), committed))
 }
 
+/// Per-(engine, tenant) committed-rate sums — the tenant-level aggregates
+/// the hierarchical planner commits as shaper-tree nodes, not just flow
+/// rates. Units are bytes/sec, and only bandwidth-mode (Gbps) commitments
+/// count: IOPS-SLO and storage flows keep flat per-flow buckets even
+/// under hierarchy (their cost units would not be commensurable with a
+/// bytes-denominated tree pool), so they take no tree budget.
+/// Deterministic order: ascending `(accel, vm)`.
+pub fn tenant_aggregates(status: &PerFlowStatusTable) -> Vec<(usize, usize, f64)> {
+    let mut sums: std::collections::BTreeMap<(usize, usize), f64> =
+        std::collections::BTreeMap::new();
+    for r in status.iter() {
+        if r.accel_name == "storage" {
+            continue;
+        }
+        let Some((rate, ShapeMode::Gbps)) = r.slo.required_rate() else { continue };
+        *sums.entry((r.accel, r.vm)).or_insert(0.0) += rate;
+    }
+    sums.into_iter().map(|((a, v), s)| (a, v, s)).collect()
+}
+
 /// One periodic tick of Algorithm 1 (lines 2–6): walk every flow, and for
 /// each violating one emit a path switch (preferred when the path itself is
 /// the bottleneck) or a reshape. `status` must already hold fresh measured

@@ -125,33 +125,44 @@ impl FlowStatus {
     }
 }
 
-/// The table: rows indexed by FlowID.
+/// The table: rows in registration order plus an id → row index so the
+/// per-flow lookups the control loop performs every tick (and every
+/// registration at 10k-flow scale) stay O(1) instead of O(flows).
+/// Iteration order — which planner decisions and directive emission follow
+/// — remains registration order, exactly as before the index existed.
 #[derive(Debug, Clone, Default)]
 pub struct PerFlowStatusTable {
     rows: Vec<FlowStatus>,
+    /// FlowId → index into `rows` (never iterated: map order is unused).
+    index: std::collections::HashMap<FlowId, usize>,
 }
 
 impl PerFlowStatusTable {
     pub fn register(&mut self, status: FlowStatus) -> FlowId {
         let id = status.flow;
-        debug_assert!(
-            !self.rows.iter().any(|r| r.flow == id),
-            "duplicate flow {id}"
-        );
+        debug_assert!(!self.index.contains_key(&id), "duplicate flow {id}");
+        self.index.insert(id, self.rows.len());
         self.rows.push(status);
         id
     }
 
     pub fn deregister(&mut self, flow: FlowId) -> Option<FlowStatus> {
-        let idx = self.rows.iter().position(|r| r.flow == flow)?;
-        Some(self.rows.remove(idx))
+        let idx = self.index.remove(&flow)?;
+        let row = self.rows.remove(idx);
+        // Rows after the removal slot shifted down one.
+        for r in &self.rows[idx..] {
+            if let Some(i) = self.index.get_mut(&r.flow) {
+                *i -= 1;
+            }
+        }
+        Some(row)
     }
 
     pub fn get(&self, flow: FlowId) -> Option<&FlowStatus> {
-        self.rows.iter().find(|r| r.flow == flow)
+        self.index.get(&flow).map(|&i| &self.rows[i])
     }
     pub fn get_mut(&mut self, flow: FlowId) -> Option<&mut FlowStatus> {
-        self.rows.iter_mut().find(|r| r.flow == flow)
+        self.index.get(&flow).map(|&i| &mut self.rows[i])
     }
 
     pub fn iter(&self) -> impl Iterator<Item = &FlowStatus> {
@@ -170,6 +181,13 @@ impl PerFlowStatusTable {
     /// Flows sharing an accelerator (capacity-planning denominator).
     pub fn flows_on_accel(&self, accel: usize) -> Vec<&FlowStatus> {
         self.rows.iter().filter(|r| r.accel == accel).collect()
+    }
+
+    /// Number of flows sharing an accelerator — the allocation-free
+    /// counterpart of [`Self::flows_on_accel`] for paths that only need
+    /// the count (10k-flow registration storms call this per flow).
+    pub fn count_on_accel(&self, accel: usize) -> usize {
+        self.rows.iter().filter(|r| r.accel == accel).count()
     }
 
     /// Sum of required shaping rates (units/s) already committed on an

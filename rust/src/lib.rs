@@ -4,15 +4,20 @@
 //! three-layer Rust + JAX + Pallas stack:
 //!
 //! - **L3 (this crate)** — the Arcus coordinator: per-flow accelerator traffic
-//!   shaping (hardware-modeled token buckets), an SLO-aware control plane
-//!   behind a first-class flow-lifecycle API ([`api::ControlPlane`]:
-//!   registration/admission, SLO renegotiation, departure, periodic
-//!   re-planning — profiling, capacity planning, online re-shaping), a
-//!   cycle-granular host–FPGA simulator substrate (PCIe, DMA, accelerators,
-//!   NVMe storage, NICs), all paper baselines, a parallel scenario-sweep
-//!   engine ([`sweep`]) that expands experiment templates over traffic/
-//!   tenant/mode axes, and a wall-clock serving runtime that executes
-//!   AOT-compiled accelerator kernels via PJRT.
+//!   shaping (hardware-modeled token buckets, §4.2) composed into the
+//!   hierarchical per-tenant / per-engine shaper tree
+//!   ([`shaping::ShaperTree`]) that keeps shaping enforceable at 10k-flow
+//!   scale (§5), an SLO-aware control plane behind a first-class
+//!   flow-lifecycle API ([`api::ControlPlane`]: registration/admission, SLO
+//!   renegotiation, departure, periodic re-planning — profiling, capacity
+//!   planning, online re-shaping; §4.3's Algorithm 1), a cycle-granular
+//!   host–FPGA simulator substrate ([`sim`]: typed zero-allocation DES core;
+//!   PCIe, DMA, accelerators, NVMe storage, NICs), all §5.1 baselines, a
+//!   fault/adversary injection subsystem ([`faults`]), a parallel
+//!   scenario-sweep engine ([`sweep`]) that expands experiment templates
+//!   over traffic/tenant/mode/churn/fault/scale axes, and a wall-clock
+//!   serving runtime that executes AOT-compiled accelerator kernels via
+//!   PJRT.
 //! - **L2 (python/compile/model.py)** — batched accelerator datapaths in JAX,
 //!   lowered once to HLO text artifacts.
 //! - **L1 (python/compile/kernels/)** — Pallas kernels for the compute
@@ -23,11 +28,16 @@
 //! kernels ahead of time, and the Rust binary loads `artifacts/*.hlo.txt`
 //! through the PJRT CPU client.
 //!
-//! See `DESIGN.md` for the substitution table (the paper's FPGA/PCIe/SSD
-//! testbed → this simulator) and the per-experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `README.md` for the quickstart, `DESIGN.md` for the substitution
+//! table (the paper's FPGA/PCIe/SSD testbed → this simulator) and the
+//! per-experiment index, and `EXPERIMENTS.md` for paper-vs-measured
+//! results.
 
 pub mod accel;
+// The public shaping/control API carries a scoped `missing_docs` gate:
+// every public item in `api` and `shaping` must be documented (enforced
+// by CI's `cargo doc` job with `RUSTDOCFLAGS="-D warnings"`).
+#[warn(missing_docs)]
 pub mod api;
 pub mod apps;
 pub mod config;
@@ -41,6 +51,7 @@ pub mod pcie;
 pub mod perf;
 pub mod runtime;
 pub mod server;
+#[warn(missing_docs)]
 pub mod shaping;
 pub mod storage;
 pub mod sim;

@@ -23,7 +23,7 @@ use arcus::flow::{FlowSpec, Path, Slo, TrafficPattern};
 use arcus::pcie::fabric::FabricConfig;
 use arcus::faults::{FaultKind, FaultSpec};
 use arcus::sweep::{
-    aggregate, parse_burst, Churn, FaultProfile, GridBase, SizeMix, SweepGrid, SweepRunner,
+    aggregate, parse_burst, Churn, FaultProfile, GridBase, Scale, SizeMix, SweepGrid, SweepRunner,
 };
 use arcus::system::{run, ExperimentSpec, LifecycleEvent, Mode};
 use arcus::util::units::{Rate, MILLIS};
@@ -59,16 +59,22 @@ fn usage() {
          USAGE:\n  arcus quickstart\n  arcus simulate <config.toml> [more.toml ...] [--faults] [--expect-flows N]\n  \
          arcus sweep [--modes a,b] [--tenants 1,2,4] [--mixes mtu,bulk] [--bursts paced,poisson]\n  \
              [--tightness 0.5,0.8] [--churn static,arrivals] [--faults healthy,accel_dip,rogue]\n  \
-             [--accels ipsec] [--seeds 1,2]\n  \
+             [--flows flat,16,256,4k,10k] [--accels ipsec] [--seeds 1,2]\n  \
              [--duration-ms N] [--load F] [--threads N] [--scenarios] [--expect-flows N]\n  \
          arcus churn\n  arcus chaos\n  \
-         arcus bench [--quick] [--preset small|medium|large|all] [--queue heap|calendar|both]\n  \
-             [--out FILE] [--floor perf_floor.toml] [--no-files]\n  \
+         arcus bench [--quick] [--preset small|medium|large|xlarge|all] [--queue heap|calendar|both]\n  \
+             [--out FILE] [--floor perf_floor.toml] [--no-files] [--verify]\n  \
          arcus profile [accel ...]\n  arcus serve [--artifacts DIR]\n  arcus modes\n\n\
          Experiment configs: see rust/configs/*.toml (churn.toml shows the\n\
-         flow-lifecycle schedule). Paper benches: `cargo bench`.\n\
-         `bench` writes BENCH_<preset>.json per preset and gates on the\n\
-         committed events/sec floor when --floor is given (CI perf-smoke)."
+         flow-lifecycle schedule, hierarchy.toml the shaper tree). Paper\n\
+         benches: `cargo bench`.\n\
+         `sweep --flows` scales the roster past one flow per tenant; non-flat\n\
+         cells shape through the hierarchical tree (per-tenant aggregates).\n\
+         `bench` writes BENCH_<preset>.json per preset, gates on the committed\n\
+         events/sec floor when --floor is given (CI perf-smoke; per-preset\n\
+         keys like min_events_per_sec_xlarge override the shared floor), and\n\
+         with --verify asserts byte-identical canonical reports across the\n\
+         event-queue disciplines (the 10k-flow determinism gate)."
     );
 }
 
@@ -218,6 +224,7 @@ fn bench(args: &[String]) -> i32 {
     let mut floor_path: Option<PathBuf> = None;
     let mut write_files = true;
     let mut quick = false;
+    let mut verify = false;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -229,17 +236,23 @@ fn bench(args: &[String]) -> i32 {
                 write_files = false;
                 i += 1;
             }
+            "--verify" => {
+                verify = true;
+                i += 1;
+            }
             "--preset" => {
                 let Some(v) = args.get(i + 1) else {
-                    eprintln!("--preset needs a value (small|medium|large|all)");
+                    eprintln!("--preset needs a value (small|medium|large|xlarge|all)");
                     return 2;
                 };
                 if v == "all" {
-                    preset_names = Some(vec!["small", "medium", "large"]);
+                    preset_names = Some(vec!["small", "medium", "large", "xlarge"]);
                 } else if let Some(p) = arcus::perf::preset_by_name(v) {
                     preset_names = Some(vec![p.name]);
                 } else {
-                    eprintln!("unknown preset `{v}` (valid: small, medium, large, all)");
+                    eprintln!(
+                        "unknown preset `{v}` (valid: small, medium, large, xlarge, all)"
+                    );
                     return 2;
                 }
                 i += 2;
@@ -282,32 +295,42 @@ fn bench(args: &[String]) -> i32 {
     }
 
     // `--quick` is CI-sized (small preset only) but an explicit `--preset`
-    // wins regardless of flag order.
+    // wins regardless of flag order. The 10k-flow `xlarge` preset runs
+    // only when named (alone or via `all`).
     let preset_names = match preset_names {
         Some(names) => names,
         None if quick => vec!["small"],
         None => vec!["small", "medium", "large"],
     };
 
-    let floor = match &floor_path {
-        Some(p) => match perf::load_floor(p) {
-            Ok(f) => Some(f),
-            Err(e) => {
-                eprintln!("{e:#}");
-                return 1;
-            }
-        },
-        None => None,
-    };
-
     println!("preset   queue         events        ev/s      wall(ms)  wall/sim  peakq    rss(KB)");
     let mut all = Vec::new();
     let mut floor_violated = false;
+    let mut verify_failed = false;
     for name in &preset_names {
         let p = perf::preset_by_name(name).expect("preset names are pre-validated");
+        // Floors may be committed per preset (the 10k-flow scenario has a
+        // different per-event cost profile than the flat ones).
+        let floor = match &floor_path {
+            Some(path) => match perf::load_floor_for(path, p.name) {
+                Ok(f) => Some(f),
+                Err(e) => {
+                    eprintln!("{e:#}");
+                    return 1;
+                }
+            },
+            None => None,
+        };
         let mut per_preset = Vec::new();
+        let mut canonicals: Vec<(&'static str, String)> = Vec::new();
         for &q in &queues {
-            let r = perf::run_preset(&p, q);
+            let r = if verify {
+                let (r, report) = perf::run_preset_report(&p, q);
+                canonicals.push((r.queue, report.canonical()));
+                r
+            } else {
+                perf::run_preset(&p, q)
+            };
             println!(
                 "{:<8} {:<11} {:>9} {:>12.0} {:>11.1} {:>9.2} {:>6} {:>10}",
                 r.scenario,
@@ -331,6 +354,29 @@ fn bench(args: &[String]) -> i32 {
             per_preset.push(r.clone());
             all.push(r);
         }
+        // `--verify`: every queue discipline must produce a byte-identical
+        // canonical report for this preset (the determinism contract at
+        // bench scale — 10k flows included).
+        if verify {
+            if let Some((q0, c0)) = canonicals.first() {
+                for (q, c) in &canonicals[1..] {
+                    if c != c0 {
+                        eprintln!(
+                            "VERIFY FAILED: {} canonical reports differ between {q0} and {q}",
+                            p.name
+                        );
+                        verify_failed = true;
+                    }
+                }
+                if !verify_failed {
+                    eprintln!(
+                        "verified: {} canonical report byte-identical across {} queue(s)",
+                        p.name,
+                        canonicals.len()
+                    );
+                }
+            }
+        }
         if write_files {
             let file = format!("BENCH_{}.json", p.name);
             if let Err(e) = std::fs::write(&file, perf::to_json(&per_preset)) {
@@ -347,7 +393,7 @@ fn bench(args: &[String]) -> i32 {
         }
         eprintln!("wrote {}", path.display());
     }
-    if floor_violated {
+    if floor_violated || verify_failed {
         return 1;
     }
     0
@@ -365,6 +411,7 @@ fn sweep(args: &[String]) -> i32 {
     let mut tightness = vec![0.7f64];
     let mut churn = vec![Churn::Static];
     let mut faults = vec![FaultProfile::Healthy];
+    let mut scale = vec![Scale::Flat];
     let mut accel_names = vec!["ipsec".to_string()];
     let mut seeds = vec![1u64, 2];
     let mut duration_ms = 5u64;
@@ -475,6 +522,18 @@ fn sweep(args: &[String]) -> i32 {
                     }
                 }
             }
+            "--flows" => {
+                scale.clear();
+                for p in &parts {
+                    match Scale::parse(p) {
+                        Ok(s) => scale.push(s),
+                        Err(e) => {
+                            eprintln!("{e}");
+                            return 2;
+                        }
+                    }
+                }
+            }
             "--accels" => {
                 accel_names = parts.iter().map(|s| s.to_string()).collect();
             }
@@ -562,6 +621,7 @@ fn sweep(args: &[String]) -> i32 {
     .tightness(tightness)
     .churn(churn)
     .faults(faults)
+    .scale(scale)
     .accels(accels)
     .seeds(seeds);
 

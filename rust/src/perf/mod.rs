@@ -38,21 +38,61 @@ use crate::util::units::{Rate, MILLIS};
 #[derive(Debug, Clone, Copy)]
 pub struct Preset {
     pub name: &'static str,
-    /// Tenant flows, spread round-robin across the accelerators.
+    /// Tenant VMs the flows are grouped under.
     pub tenants: usize,
+    /// Flows in total, spread round-robin across VMs and accelerators.
+    pub flows: usize,
     /// IPSec engines on the device (32 Gbps class each).
     pub accels: usize,
     pub duration_ms: u64,
     pub warmup_ms: u64,
+    /// Run the hierarchical shaper tree (the 10k-flow scale presets; flat
+    /// per-flow buckets otherwise).
+    pub hierarchy: bool,
 }
 
-/// The three committed presets. Tenancy and duration scale together so the
+/// The committed presets. Tenancy and duration scale together so the
 /// large preset reaches the millions-of-events regime the multi-tenant
-/// sweeps (PR 1/2) need.
-pub const PRESETS: [Preset; 3] = [
-    Preset { name: "small", tenants: 2, accels: 1, duration_ms: 5, warmup_ms: 1 },
-    Preset { name: "medium", tenants: 4, accels: 2, duration_ms: 20, warmup_ms: 2 },
-    Preset { name: "large", tenants: 8, accels: 4, duration_ms: 50, warmup_ms: 5 },
+/// sweeps (PR 1/2) need; `xlarge` is the 10,000-flow scale point the
+/// shaper hierarchy exists for — its whole roster shares eight trees, so
+/// the event queue stays shallow no matter how many flows block.
+pub const PRESETS: [Preset; 4] = [
+    Preset {
+        name: "small",
+        tenants: 2,
+        flows: 2,
+        accels: 1,
+        duration_ms: 5,
+        warmup_ms: 1,
+        hierarchy: false,
+    },
+    Preset {
+        name: "medium",
+        tenants: 4,
+        flows: 4,
+        accels: 2,
+        duration_ms: 20,
+        warmup_ms: 2,
+        hierarchy: false,
+    },
+    Preset {
+        name: "large",
+        tenants: 8,
+        flows: 8,
+        accels: 4,
+        duration_ms: 50,
+        warmup_ms: 5,
+        hierarchy: false,
+    },
+    Preset {
+        name: "xlarge",
+        tenants: 64,
+        flows: 10_000,
+        accels: 8,
+        duration_ms: 3,
+        warmup_ms: 1,
+        hierarchy: true,
+    },
 ];
 
 pub fn preset_by_name(name: &str) -> Option<Preset> {
@@ -90,17 +130,17 @@ impl QueueKind {
 /// tuned for), and every completion crosses the PCIe fabric model.
 pub fn spec_for(p: &Preset) -> ExperimentSpec {
     let line = Rate::gbps(32.0);
-    let per_accel = p.tenants.div_ceil(p.accels);
+    let per_accel = p.flows.div_ceil(p.accels);
     // ~24.6 G admission budget per engine at MTU: stay safely under it so
-    // every tenant admits, while offering ~40% more than the SLO so the
+    // every flow admits, while offering ~40% more than the SLO so the
     // shaper is always the binding constraint.
     let slo_gbps = 20.0 / per_accel as f64;
     let load = (slo_gbps * 1.4 / 32.0).min(0.95);
-    let flows: Vec<FlowSpec> = (0..p.tenants)
+    let flows: Vec<FlowSpec> = (0..p.flows)
         .map(|i| {
             FlowSpec::new(
                 i,
-                i,
+                i % p.tenants,
                 Path::FunctionCall,
                 TrafficPattern::fixed(1500, load, line),
                 Slo::gbps(slo_gbps),
@@ -109,9 +149,13 @@ pub fn spec_for(p: &Preset) -> ExperimentSpec {
         })
         .collect();
     let accels = (0..p.accels).map(|_| AccelModel::ipsec_32g()).collect();
-    ExperimentSpec::new(Mode::Arcus, accels, flows)
+    let mut spec = ExperimentSpec::new(Mode::Arcus, accels, flows)
         .with_duration(p.duration_ms * MILLIS)
-        .with_warmup(p.warmup_ms * MILLIS)
+        .with_warmup(p.warmup_ms * MILLIS);
+    if p.hierarchy {
+        spec = spec.with_hierarchy();
+    }
+    spec
 }
 
 /// One measured bench outcome.
@@ -170,14 +214,19 @@ pub fn to_json(results: &[BenchResult]) -> String {
     out
 }
 
-/// Run one preset on one queue discipline.
-pub fn run_preset(p: &Preset, queue: QueueKind) -> BenchResult {
+/// Run one preset on one queue discipline, returning the measurement and
+/// the full report (whose [`crate::system::SystemReport::canonical`] form
+/// backs `arcus bench --verify`'s cross-queue byte-identity check).
+pub fn run_preset_report(
+    p: &Preset,
+    queue: QueueKind,
+) -> (BenchResult, crate::system::SystemReport) {
     let spec = spec_for(p);
     let report = match queue {
         QueueKind::Heap => run_with::<BinaryHeapQueue<EngineEvent>>(&spec),
         QueueKind::Calendar => run_with::<CalendarQueue<EngineEvent>>(&spec),
     };
-    BenchResult {
+    let result = BenchResult {
         scenario: p.name.to_string(),
         queue: report.queue,
         events_executed: report.events,
@@ -186,7 +235,13 @@ pub fn run_preset(p: &Preset, queue: QueueKind) -> BenchResult {
         sim_ms: p.duration_ms as f64,
         peak_queue_depth: report.peak_queue_depth,
         rss_hint_kb: rss_hint_kb(),
-    }
+    };
+    (result, report)
+}
+
+/// Run one preset on one queue discipline.
+pub fn run_preset(p: &Preset, queue: QueueKind) -> BenchResult {
+    run_preset_report(p, queue).0
 }
 
 /// Peak resident-set hint in KiB (`VmHWM` on Linux; 0 where unavailable).
@@ -226,6 +281,18 @@ pub fn load_floor(path: &std::path::Path) -> anyhow::Result<f64> {
         })
 }
 
+/// Per-preset floor: `min_events_per_sec_<preset>` when committed (the
+/// 10k-flow `xlarge` scenario has a different per-event cost profile than
+/// the flat presets), falling back to the shared `min_events_per_sec`.
+pub fn load_floor_for(path: &std::path::Path, preset: &str) -> anyhow::Result<f64> {
+    let doc = crate::config::Document::from_file(path)?;
+    let specific = format!("min_events_per_sec_{preset}");
+    if let Some(f) = doc.get("floor", &specific).and_then(crate::config::Value::as_float) {
+        return Ok(f);
+    }
+    load_floor(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -236,11 +303,24 @@ mod tests {
         for p in &PRESETS {
             assert!(seen.insert(p.name), "duplicate preset {}", p.name);
             let spec = spec_for(p);
-            assert_eq!(spec.flows.len(), p.tenants);
+            assert_eq!(spec.flows.len(), p.flows);
             assert_eq!(spec.accels.len(), p.accels);
+            assert_eq!(spec.hierarchy, p.hierarchy);
             assert!(spec.warmup < spec.duration);
+            // SLO sum per engine stays under the ~24.6 G admission budget
+            // so every flow admits, at 2 flows and at 10,000 alike.
+            let per_accel = p.flows.div_ceil(p.accels);
+            let slo_sum = match spec.flows[0].slo {
+                crate::flow::Slo::Throughput { target, .. } => {
+                    target.as_gbps() * per_accel as f64
+                }
+                _ => panic!("presets carry throughput SLOs"),
+            };
+            assert!(slo_sum < 24.6, "{}: {slo_sum:.1} G committed per engine", p.name);
         }
         assert!(preset_by_name("large").is_some());
+        assert!(preset_by_name("xlarge").is_some());
+        assert_eq!(preset_by_name("xlarge").unwrap().flows, 10_000);
         assert!(preset_by_name("nope").is_none());
     }
 

@@ -9,6 +9,8 @@
 use super::{Shaper, Verdict};
 use crate::util::units::{Time, SECONDS};
 
+/// Fixed-window counter: a per-window budget that resets at aligned
+/// window boundaries.
 #[derive(Debug, Clone)]
 pub struct FixedWindow {
     rate: f64,
@@ -20,6 +22,7 @@ pub struct FixedWindow {
 }
 
 impl FixedWindow {
+    /// A counter shaping to `units_per_sec` over windows of `window` ps.
     pub fn new(units_per_sec: f64, window: Time) -> Self {
         assert!(window > 0);
         FixedWindow {

@@ -10,6 +10,8 @@
 use super::{Shaper, Verdict};
 use crate::util::units::{Time, SECONDS};
 
+/// Virtual-time leaky bucket (GCRA-equivalent): constant drain, shallow
+/// depth.
 #[derive(Debug, Clone)]
 pub struct LeakyBucket {
     /// Drain rate, units/sec.
@@ -30,6 +32,7 @@ impl LeakyBucket {
         }
     }
 
+    /// A leaky bucket with an explicit depth in units.
     pub fn with_depth(units_per_sec: f64, depth_units: f64) -> Self {
         LeakyBucket {
             rate: units_per_sec,

@@ -16,14 +16,23 @@
 //! retry?* Units are bytes in Gbps mode or messages in IOPS mode (§4.2: "the
 //! only difference is to increase and decrease tokens based on the number of
 //! bytes, or the number of messages").
+//!
+//! At scale, flat per-flow shapers stop being enforceable on their own —
+//! 10,000 flows would mean 10,000 independent wakeups. The [`hierarchy`]
+//! module composes them into the per-tenant / per-engine [`ShaperTree`]
+//! (min-guarantee + ceiling per node, deficit-round-robin with
+//! work-conserving borrow among siblings), paced by one tree-wide tick on
+//! the event queue instead of per-flow heap entries.
 
 pub mod fixed_window;
+pub mod hierarchy;
 pub mod leaky_bucket;
 pub mod sliding_log;
 pub mod software;
 pub mod token_bucket;
 
 pub use fixed_window::FixedWindow;
+pub use hierarchy::{NodeBudget, ShaperTree, TreeConfig, TreeVerdict};
 pub use leaky_bucket::LeakyBucket;
 pub use sliding_log::SlidingLog;
 pub use software::{SoftwareShaper, SoftwareShaperConfig};
@@ -34,7 +43,9 @@ use crate::util::units::Time;
 /// Shaping mode: limit bytes/sec (bandwidth SLO) or messages/sec (IOPS SLO).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShapeMode {
+    /// Cost units are bytes (bandwidth SLOs).
     Gbps,
+    /// Cost units are messages (IOPS SLOs).
     Iops,
 }
 

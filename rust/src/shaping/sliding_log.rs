@@ -10,6 +10,8 @@ use super::{Shaper, Verdict};
 use crate::util::units::{Time, SECONDS};
 use std::collections::VecDeque;
 
+/// Sliding-window log: every admission timestamped, rate checked over the
+/// trailing window.
 #[derive(Debug, Clone)]
 pub struct SlidingLog {
     rate: f64,
@@ -23,6 +25,7 @@ pub struct SlidingLog {
 }
 
 impl SlidingLog {
+    /// A log shaping to `units_per_sec` over a trailing `window` ps.
     pub fn new(units_per_sec: f64, window: Time) -> Self {
         assert!(window > 0);
         SlidingLog {
@@ -51,6 +54,7 @@ impl SlidingLog {
         }
     }
 
+    /// High-water mark of log entries (the ablation's memory column).
     pub fn peak_entries(&self) -> usize {
         self.peak_entries
     }

@@ -85,6 +85,8 @@ pub struct SoftwareShaper {
 }
 
 impl SoftwareShaper {
+    /// A software bucket shaping to `units_per_sec` under `cfg`'s timing
+    /// error model, with jitter drawn from a stream seeded by `seed`.
     pub fn new(
         units_per_sec: f64,
         mode: ShapeMode,

@@ -111,6 +111,7 @@ pub struct TokenBucket {
 }
 
 impl TokenBucket {
+    /// A bucket with explicit register values (resets full, as hardware).
     pub fn new(params: TokenBucketParams, mode: ShapeMode) -> Self {
         TokenBucket {
             tokens: params.bkt_size, // hardware resets with a full bucket
@@ -128,10 +129,12 @@ impl TokenBucket {
         Self::new(TokenBucketParams::for_rate(units_per_sec, mode), mode)
     }
 
+    /// The register values currently programmed.
     pub fn params(&self) -> TokenBucketParams {
         self.params
     }
 
+    /// Cost-unit mode (bytes vs messages).
     pub fn mode(&self) -> ShapeMode {
         self.mode
     }

@@ -230,14 +230,20 @@ fn axis_value(axis: &str, key: &ScenarioKey) -> String {
         "tightness" => format!("x{:09.4}", key.tightness),
         "churn" => key.churn.name().to_string(),
         "faults" => key.faults.name().to_string(),
+        // Flow-count labels pad to five digits (the 10k-scale axis).
+        "scale" => match key.scale {
+            crate::sweep::Scale::Flat => "flat".to_string(),
+            crate::sweep::Scale::Flows(n) => format!("f{n:05}"),
+        },
         "accel" => key.accel.to_string(),
         "seed" => format!("s{:020}", key.seed),
         other => unreachable!("unknown axis {other}"),
     }
 }
 
-const AXES: [&str; 9] =
-    ["mode", "tenants", "mix", "burst", "tightness", "churn", "faults", "accel", "seed"];
+const AXES: [&str; 10] = [
+    "mode", "tenants", "mix", "burst", "tightness", "churn", "faults", "scale", "accel", "seed",
+];
 
 /// Fold executed scenarios into the aggregate.
 pub fn aggregate(outcomes: &[ScenarioOutcome]) -> SweepAggregate {
@@ -348,6 +354,7 @@ mod tests {
             tightness: 0.7,
             churn: crate::sweep::Churn::Static,
             faults: crate::sweep::FaultProfile::Healthy,
+            scale: crate::sweep::Scale::Flat,
             accel: "ipsec",
             seed: 1,
         };

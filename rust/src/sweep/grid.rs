@@ -201,6 +201,51 @@ impl FaultProfile {
     }
 }
 
+/// Flow-population scale axis: how many flows a scenario carries in
+/// total. `Flat` is the legacy roster — one flow per tenant — and keeps
+/// labels and derived seeds byte-identical to pre-scale grids. A
+/// `Flows(n)` cell spreads `n` flows round-robin across the tenant (VM)
+/// roster, splits the committed tightness evenly over all `n`, and
+/// enables the hierarchical shaper tree
+/// ([`crate::shaping::ShaperTree`]) — per-flow shapers do not compose at
+/// 4k–10k flows; per-tenant aggregates do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// One flow per tenant (legacy grids; flat per-flow shaping).
+    Flat,
+    /// `n` flows total, tree-shaped under per-tenant aggregates.
+    Flows(usize),
+}
+
+impl Scale {
+    /// Axis label: `flat`, or `f<n>` for scaled cells.
+    pub fn name(self) -> String {
+        match self {
+            Scale::Flat => "flat".to_string(),
+            Scale::Flows(n) => format!("f{n}"),
+        }
+    }
+
+    /// Parse an axis value: `flat`, a flow count (`256`), or a
+    /// `k`-suffixed count (`4k` = 4000, `10k` = 10000).
+    pub fn parse(s: &str) -> Result<Scale, String> {
+        if s == "flat" {
+            return Ok(Scale::Flat);
+        }
+        let (digits, mul) = match s.strip_suffix('k') {
+            Some(d) => (d, 1000usize),
+            None => (s, 1usize),
+        };
+        match digits.parse::<usize>().ok().and_then(|n| n.checked_mul(mul)) {
+            Some(n) if n >= 1 => Ok(Scale::Flows(n)),
+            _ => Err(format!(
+                "unknown scale `{s}` (valid scales: flat, a flow count like 16 or 256, \
+                 or a k-suffixed count like 4k / 10k)"
+            )),
+        }
+    }
+}
+
 /// The fault plan a profile implies for `tenants` flows over a run of
 /// `duration`. Pure arithmetic over the coordinates (no RNG); windows sit
 /// past typical warmups and heal before the run ends so recovery is
@@ -314,6 +359,9 @@ pub struct SweepGrid {
     /// Fault-injection axis (defaults to `[FaultProfile::Healthy]`, so
     /// legacy grids are unchanged).
     pub faults: Vec<FaultProfile>,
+    /// Flow-population scale axis (defaults to `[Scale::Flat]`, so legacy
+    /// grids are unchanged; non-flat cells run the shaper hierarchy).
+    pub scale: Vec<Scale>,
     pub accels: Vec<AccelModel>,
     /// Seed axis: replications of every cell with decorrelated randomness.
     pub seeds: Vec<u64>,
@@ -332,6 +380,7 @@ impl SweepGrid {
             tightness: Vec::new(),
             churn: vec![Churn::Static],
             faults: vec![FaultProfile::Healthy],
+            scale: vec![Scale::Flat],
             accels: Vec::new(),
             seeds: Vec::new(),
         }
@@ -365,6 +414,10 @@ impl SweepGrid {
         self.faults = v;
         self
     }
+    pub fn scale(mut self, v: Vec<Scale>) -> Self {
+        self.scale = v;
+        self
+    }
     pub fn accels(mut self, v: Vec<AccelModel>) -> Self {
         self.accels = v;
         self
@@ -384,6 +437,7 @@ impl SweepGrid {
             * self.tightness.len()
             * self.churn.len()
             * self.faults.len()
+            * self.scale.len()
             * self.accels.len()
             * self.seeds.len()
     }
@@ -411,6 +465,20 @@ impl SweepGrid {
         }
         if let Some(&x) = self.tightness.iter().find(|&&x| x.is_nan() || x <= 0.0) {
             return Err(format!("tightness values must be positive (got {x})"));
+        }
+        for &s in &self.scale {
+            let Scale::Flows(n) = s else { continue };
+            if let Some(&t) = self.tenants.iter().find(|&&t| n < t) {
+                return Err(format!(
+                    "scale f{n} is smaller than the tenant roster ({t}): every tenant \
+                     needs at least one flow — raise the scale or drop the tenant count"
+                ));
+            }
+            if n > 50_000 {
+                return Err(format!(
+                    "scale f{n} exceeds the supported ceiling (50000 flows per scenario)"
+                ));
+            }
         }
         // Axis interactions: expansion combines every churn pattern with
         // every fault profile at every tenant count, and some combinations
@@ -468,22 +536,25 @@ impl SweepGrid {
                         for &tightness in &self.tightness {
                             for &churn in &self.churn {
                                 for &faults in &self.faults {
-                                    for accel in &self.accels {
-                                        for &seed in &self.seeds {
-                                            let key = ScenarioKey {
-                                                mode,
-                                                tenants,
-                                                mix,
-                                                burst,
-                                                tightness,
-                                                churn,
-                                                faults,
-                                                accel: accel.name,
-                                                seed,
-                                            };
-                                            let spec = self.scenario_spec(&key, accel);
-                                            out.push(Scenario { index, key, spec });
-                                            index += 1;
+                                    for &scale in &self.scale {
+                                        for accel in &self.accels {
+                                            for &seed in &self.seeds {
+                                                let key = ScenarioKey {
+                                                    mode,
+                                                    tenants,
+                                                    mix,
+                                                    burst,
+                                                    tightness,
+                                                    churn,
+                                                    faults,
+                                                    scale,
+                                                    accel: accel.name,
+                                                    seed,
+                                                };
+                                                let spec = self.scenario_spec(&key, accel);
+                                                out.push(Scenario { index, key, spec });
+                                                index += 1;
+                                            }
                                         }
                                     }
                                 }
@@ -498,13 +569,19 @@ impl SweepGrid {
 
     fn scenario_spec(&self, key: &ScenarioKey, accel: &AccelModel) -> ExperimentSpec {
         let tenants = key.tenants.max(1);
+        // Total flow population: the legacy roster is one flow per tenant;
+        // a scaled cell spreads `n` flows round-robin over the tenant VMs.
+        let n_flows = match key.scale {
+            Scale::Flat => tenants,
+            Scale::Flows(n) => n.max(tenants),
+        };
         // The engine's sustainable ingress rate at this mixture's mean
-        // size; `tightness` of it is committed, split evenly per tenant.
+        // size; `tightness` of it is committed, split evenly per flow.
         let capacity = accel.effective_rate(key.mix.mean_bytes());
-        let per_flow_slo = Rate(capacity.0 * key.tightness / tenants as f64);
-        let per_flow_load = self.base.load / tenants as f64;
-        let flows: Vec<FlowSpec> = (0..tenants)
-            .map(|t| {
+        let per_flow_slo = Rate(capacity.0 * key.tightness / n_flows as f64);
+        let per_flow_load = self.base.load / n_flows as f64;
+        let flows: Vec<FlowSpec> = (0..n_flows)
+            .map(|i| {
                 let pattern = TrafficPattern {
                     sizes: key.mix.dist(),
                     load: per_flow_load,
@@ -512,8 +589,8 @@ impl SweepGrid {
                     burst: key.burst,
                 };
                 FlowSpec::new(
-                    t,
-                    t,
+                    i,
+                    i % tenants,
                     self.base.path,
                     pattern,
                     Slo::Throughput { target: per_flow_slo, percentile: 99.0 },
@@ -521,12 +598,18 @@ impl SweepGrid {
                 )
             })
             .collect();
-        ExperimentSpec::new(key.mode, vec![accel.clone()], flows)
+        let mut spec = ExperimentSpec::new(key.mode, vec![accel.clone()], flows)
             .with_duration(self.base.duration)
             .with_warmup(self.base.warmup)
             .with_seed(scenario_seed(self.base.seed, key))
             .with_lifecycle(churn_events(key.churn, tenants, self.base.duration, per_flow_slo))
-            .with_faults(fault_events(key.faults, tenants, self.base.duration))
+            .with_faults(fault_events(key.faults, tenants, self.base.duration));
+        if key.scale != Scale::Flat {
+            // Per-flow shapers do not compose at thousands of flows; the
+            // scale axis exists to exercise the hierarchy.
+            spec = spec.with_hierarchy();
+        }
+        spec
     }
 }
 
@@ -629,6 +712,7 @@ pub struct ScenarioKey {
     pub tightness: f64,
     pub churn: Churn,
     pub faults: FaultProfile,
+    pub scale: Scale,
     /// Accelerator model name (axis label).
     pub accel: &'static str,
     /// Seed-axis value (not the derived simulator seed).
@@ -637,13 +721,17 @@ pub struct ScenarioKey {
 
 impl ScenarioKey {
     /// Stable human-readable identifier, e.g.
-    /// `arcus/t04/mtu/poisson/x0.7000/arrivals/accel_dip/ipsec/s2`.
+    /// `arcus/t04/f4000/mtu/poisson/x0.7000/arrivals/accel_dip/ipsec/s2`.
     /// Tightness carries four decimals so nearby swept values keep distinct
-    /// labels. Static (no-churn) cells omit the churn segment and healthy
-    /// cells omit the faults segment, so their labels — and the simulator
-    /// seeds derived from them — are byte-identical to grids that predate
-    /// those axes.
+    /// labels. Static (no-churn) cells omit the churn segment, healthy
+    /// cells omit the faults segment, and flat cells omit the scale
+    /// segment, so their labels — and the simulator seeds derived from
+    /// them — are byte-identical to grids that predate those axes.
     pub fn label(&self) -> String {
+        let scale = match self.scale {
+            Scale::Flat => String::new(),
+            s => format!("{}/", s.name()),
+        };
         let churn = match self.churn {
             Churn::Static => String::new(),
             c => format!("{}/", c.name()),
@@ -653,9 +741,10 @@ impl ScenarioKey {
             f => format!("{}/", f.name()),
         };
         format!(
-            "{}/t{:02}/{}/{}/x{:.4}/{}{}{}/s{}",
+            "{}/t{:02}/{}{}/{}/x{:.4}/{}{}{}/s{}",
             self.mode.name(),
             self.tenants,
+            scale,
             self.mix.name(),
             burst_name(self.burst),
             self.tightness,
@@ -999,6 +1088,70 @@ mod tests {
             .faults(vec![FaultProfile::LinkCut])
             .expand();
         assert!(both[0].key.label().contains("/arrivals/link_cut/"));
+    }
+
+    #[test]
+    fn flat_labels_and_seeds_unchanged_by_scale_axis() {
+        let base = || {
+            SweepGrid::new(GridBase::default())
+                .modes(vec![Mode::Arcus])
+                .tenants(vec![2])
+                .mixes(vec![SizeMix::Mtu])
+                .bursts(vec![Burstiness::Paced])
+                .tightness(vec![0.7])
+                .accels(vec![AccelModel::ipsec_32g()])
+                .seeds(vec![1])
+        };
+        let legacy = base().expand();
+        let scaled = base()
+            .scale(vec![Scale::Flat, Scale::Flows(16), Scale::Flows(256)])
+            .expand();
+        assert_eq!(legacy.len(), 1);
+        assert_eq!(scaled.len(), 3);
+        // The flat cell keeps the legacy label, seed, roster, and flat
+        // shaping; scaled cells grow the roster and run the hierarchy.
+        assert_eq!(scaled[0].key.label(), legacy[0].key.label());
+        assert_eq!(scaled[0].spec.seed, legacy[0].spec.seed);
+        assert_eq!(scaled[0].spec.flows.len(), 2);
+        assert!(!scaled[0].spec.hierarchy);
+        assert!(scaled[1].key.label().contains("/f16/"));
+        assert_eq!(scaled[1].spec.flows.len(), 16);
+        assert!(scaled[1].spec.hierarchy);
+        assert_eq!(scaled[2].spec.flows.len(), 256);
+        // Flows spread round-robin across the tenant VMs; the committed
+        // sum stays tightness × capacity regardless of scale.
+        let vms: HashSet<usize> = scaled[2].spec.flows.iter().map(|f| f.vm).collect();
+        assert_eq!(vms.len(), 2);
+        let total = |s: &super::Scenario| -> f64 {
+            s.spec
+                .flows
+                .iter()
+                .map(|f| match f.slo {
+                    Slo::Throughput { target, .. } => target.0,
+                    _ => 0.0,
+                })
+                .sum()
+        };
+        let t_flat = total(&scaled[0]);
+        let t_scaled = total(&scaled[2]);
+        assert!((t_flat - t_scaled).abs() / t_flat < 1e-9);
+        let labels: HashSet<String> = scaled.iter().map(|s| s.key.label()).collect();
+        assert_eq!(labels.len(), 3);
+    }
+
+    #[test]
+    fn scale_parse_and_validate() {
+        assert_eq!(Scale::parse("flat"), Ok(Scale::Flat));
+        assert_eq!(Scale::parse("256"), Ok(Scale::Flows(256)));
+        assert_eq!(Scale::parse("4k"), Ok(Scale::Flows(4000)));
+        assert_eq!(Scale::parse("10k"), Ok(Scale::Flows(10_000)));
+        assert!(Scale::parse("big").is_err());
+        assert!(Scale::parse("0").is_err());
+        // A scale smaller than the tenant roster is rejected up front.
+        let grid = grid_with_lens(&[1, 2, 1, 1, 1, 1, 1]).scale(vec![Scale::Flows(1)]);
+        let grid = SweepGrid { tenants: vec![4], ..grid };
+        let err = grid.validate().unwrap_err();
+        assert!(err.contains("tenant roster"), "{err}");
     }
 
     #[test]

@@ -30,6 +30,15 @@
 //! paths; Host_no_TS / Bypassed_PANIC = no shaping, with PANIC using
 //! priority scheduling at the accelerator input.
 //!
+//! Shaping state lives in one [`ShaperTree`] per engine (accelerators +
+//! the storage subsystem): flat programs install leaves that own their
+//! shaper (verdict-identical to the pre-tree per-flow map), while
+//! hierarchical programs ([`ShaperProgram::Hierarchy`], enabled by
+//! `ExperimentSpec::hierarchy`) install paced leaves under per-tenant
+//! aggregates — released by ONE `ShaperTick` event per tree instead of
+//! per-flow wakeups, which is what lets a 10,000-flow run keep its event
+//! queue shallow.
+//!
 //! Control-plane boundary: the engine owns the *dataplane* (queues, shapers,
 //! DMA, devices, counters) and talks to the SLO runtime exclusively through
 //! the [`ControlPlane`] trait — flow registration, SLO renegotiation,
@@ -60,8 +69,8 @@ use crate::metrics::{FlowMetrics, Histogram, ThroughputSampler};
 use crate::nic::NicPort;
 use crate::pcie::fabric::{Fabric, OpComplete, OpKind};
 use crate::shaping::{
-    ShapeMode, Shaper, SoftwareShaper, SoftwareShaperConfig, TokenBucket, TokenBucketParams,
-    Verdict,
+    NodeBudget, ShapeMode, Shaper, ShaperTree, SoftwareShaper, SoftwareShaperConfig, TokenBucket,
+    TreeConfig, TreeVerdict,
 };
 use crate::sim::{BinaryHeapQueue, EventQueue, Handler, Sim};
 use crate::storage::nvme::{Io, IoDone, IoKind};
@@ -153,6 +162,12 @@ pub enum EngineEvent {
     FaultStart { idx: usize },
     /// Fault injection: the `idx`-th fault's component heals.
     FaultEnd { idx: usize },
+    /// One pacing pass of an engine's shaper tree: replenish aggregate
+    /// credit (guarantees + DRR borrow) and re-drive every waiting leaf in
+    /// a single O(active-children) sweep — the whole tree shares this ONE
+    /// event, so 10,000 blocked flows park inside the tree instead of as
+    /// 10,000 queue entries. `gen` voids superseded schedules.
+    ShaperTick { tree: usize, gen: u64 },
 }
 
 use EngineEvent as Ev;
@@ -162,8 +177,10 @@ struct FlowState {
     gen: TrafficGen,
     /// VM-side DMA buffer (function-call / TX / storage paths).
     queue: VecDeque<Msg>,
-    shaper: Option<Box<dyn Shaper>>,
-    /// Cost units for shaping and sampling (bytes vs messages).
+    /// Cost units for shaping and sampling (bytes vs messages). The
+    /// shaper itself lives as this flow's leaf in its engine's
+    /// [`ShaperTree`] (flat leaves own a boxed shaper; paced leaves are
+    /// released by the tree's pacing pass).
     mode: ShapeMode,
     inflight: usize,
     /// Earliest already-scheduled fetch event (dedupe).
@@ -202,12 +219,11 @@ struct FlowState {
     contract_base_bytes: u64,
     contract_base_ops: u64,
     /// Adversary injection: the tenant is currently ignoring its shaper
-    /// program (`RogueTenant` fault). Cleared when the interface clamps it
-    /// (any program install / SetRate directive) or the fault window ends.
+    /// program (`RogueTenant` fault) — its fetches bypass the shaper tree
+    /// entirely. Cleared when the interface clamps it (any program install
+    /// / SetRate directive) or the fault window ends, at which point the
+    /// untouched leaf state resumes enforcing.
     rogue: bool,
-    /// Shaped rate in force when the tenant went rogue, for the
-    /// end-of-window restore if no clamp arrived first.
-    rogue_restore: Option<f64>,
 }
 
 /// Per-flow, per-era completion counters (fault-injection runs only).
@@ -233,6 +249,18 @@ struct RecoveryTrack {
 pub struct World {
     spec: ExperimentSpec,
     flows: Vec<FlowState>,
+    /// Per-engine shaper hierarchies: one tree per accelerator plus one
+    /// for the storage subsystem (the last index). Every flow's shaper —
+    /// flat bucket or tree-paced leaf — lives here.
+    trees: Vec<ShaperTree>,
+    /// Flow → tree index (its accelerator, or the storage tree).
+    flow_tree: Vec<usize>,
+    /// Earliest scheduled pacing pass per tree (dedupe, like the pumps).
+    tree_tick_scheduled: Vec<Time>,
+    /// Generation tokens voiding superseded tree ticks.
+    tree_tick_gen: Vec<u64>,
+    /// Reused eligible-leaf buffer for tree passes.
+    scratch_eligible: Vec<usize>,
     fabric: Fabric,
     fabric_scheduled: Time,
     fabric_gen: u64,
@@ -344,6 +372,13 @@ impl Handler<EngineEvent> for World {
             Ev::Renegotiate { flow, slo } => self.ev_renegotiate(sim, flow, slo),
             Ev::FaultStart { idx } => self.ev_fault_start(sim, idx),
             Ev::FaultEnd { idx } => self.ev_fault_end(sim, idx),
+            Ev::ShaperTick { tree, gen } => {
+                if self.tree_tick_gen[tree] != gen {
+                    return; // superseded
+                }
+                self.tree_tick_scheduled[tree] = Time::MAX;
+                self.ev_shaper_tick(sim, tree);
+            }
         }
     }
 }
@@ -378,11 +413,14 @@ impl World {
             .raid
             .map(|r| Raid0::new(r.drives, r.ssd, spec.seed ^ 0x0A1D));
         let ctrl: Box<dyn ControlPlane> = match spec.mode {
-            Mode::Arcus => Box::new(ArcusControlPlane::from_models(
-                &spec.accels,
-                &spec.fabric,
-                PlannerConfig::default(),
-            )),
+            Mode::Arcus => Box::new(
+                ArcusControlPlane::from_models(
+                    &spec.accels,
+                    &spec.fabric,
+                    PlannerConfig::default(),
+                )
+                .with_hierarchy(spec.hierarchy),
+            ),
             Mode::HostTsReflex | Mode::HostTsFirecracker => {
                 Box::new(StaticRateControlPlane::new())
             }
@@ -409,13 +447,32 @@ impl World {
             })
             .collect();
 
+        // One shaper tree per engine: accelerators first, storage last.
+        // All leaves start absent; registration installs them.
+        let n_trees = spec.accels.len() + 1;
+        let tree_cfg = TreeConfig {
+            tick_interval: spec.shaper_tick,
+            root_ceiling: None,
+        };
+        let trees: Vec<ShaperTree> = (0..n_trees).map(|_| ShaperTree::new(n, tree_cfg)).collect();
+        let flow_tree: Vec<usize> = spec
+            .flows
+            .iter()
+            .map(|f| {
+                if f.kind == FlowKind::Accel {
+                    f.accel
+                } else {
+                    spec.accels.len()
+                }
+            })
+            .collect();
+
         let flows: Vec<FlowState> = spec
             .flows
             .iter()
             .map(|f| FlowState {
                 gen: TrafficGen::new(f.pattern.clone(), spec.seed, f.id as u64),
                 queue: VecDeque::new(),
-                shaper: None,
                 mode: match f.slo {
                     Slo::Iops { .. } => ShapeMode::Iops,
                     _ => ShapeMode::Gbps,
@@ -440,13 +497,17 @@ impl World {
                 contract_base_bytes: 0,
                 contract_base_ops: 0,
                 rogue: false,
-                rogue_restore: None,
             })
             .collect();
 
         World {
             host_rng: Rng::for_stream(spec.seed, 0x4057),
             flows,
+            tree_tick_scheduled: vec![Time::MAX; trees.len()],
+            tree_tick_gen: vec![0; trees.len()],
+            trees,
+            flow_tree,
+            scratch_eligible: Vec::new(),
             fabric,
             fabric_scheduled: Time::MAX,
             fabric_gen: 0,
@@ -537,20 +598,25 @@ impl World {
     }
 
     /// Program the interface hardware (or host limiter) a control-plane
-    /// response asked for.
+    /// response asked for: every program lands as a leaf of the flow's
+    /// engine [`ShaperTree`] — flat leaves own the shaper verbatim (byte-
+    /// identical to the pre-tree path), `Hierarchy` programs install a
+    /// paced leaf and upsert the tenant/root envelopes they hang from.
     fn install_program(&mut self, now: Time, flow: usize, program: ShaperProgram) {
         // A fresh program supersedes any adversarial unshaped state: the
         // hardware registers are authoritative again.
         self.flows[flow].rogue = false;
-        self.flows[flow].rogue_restore = None;
+        let t = self.flow_tree[flow];
+        let vm = self.spec.flows[flow].vm;
         match program {
             ShaperProgram::Unshaped => {
-                self.flows[flow].shaper = None;
+                let mode = self.flows[flow].mode;
+                self.trees[t].install_flat_leaf(flow, vm, None, mode);
             }
             ShaperProgram::TokenBucket { params, rate, mode } => {
                 let mut tb = TokenBucket::new(params, mode);
                 tb.set_rate(now, rate);
-                self.flows[flow].shaper = Some(Box::new(tb));
+                self.trees[t].install_flat_leaf(flow, vm, Some(Box::new(tb)), mode);
                 self.flows[flow].mode = mode;
             }
             ShaperProgram::Software { rate, mode } => {
@@ -561,12 +627,37 @@ impl World {
                     .host_cfg
                     .clone()
                     .unwrap_or_else(SoftwareShaperConfig::reflex);
-                self.flows[flow].shaper = Some(Box::new(SoftwareShaper::new(
+                let shaper = SoftwareShaper::new(
                     rate,
                     mode,
                     cfg,
                     self.spec.seed ^ (0x50 + flow as u64),
-                )));
+                );
+                self.trees[t].install_flat_leaf(flow, vm, Some(Box::new(shaper)), mode);
+                self.flows[flow].mode = mode;
+            }
+            ShaperProgram::Hierarchy {
+                tenant,
+                guarantee,
+                ceiling,
+                tenant_guarantee,
+                tenant_ceiling,
+                engine_ceiling,
+                mode,
+            } => {
+                self.trees[t].set_root_ceiling(if engine_ceiling.is_finite() {
+                    Some(engine_ceiling)
+                } else {
+                    None
+                });
+                self.trees[t]
+                    .set_tenant(tenant, NodeBudget::new(tenant_guarantee, tenant_ceiling));
+                self.trees[t].install_paced_leaf(
+                    flow,
+                    tenant,
+                    NodeBudget::new(guarantee, ceiling),
+                    mode,
+                );
                 self.flows[flow].mode = mode;
             }
         }
@@ -596,7 +687,7 @@ impl World {
         let _ = self.ctrl.deregister_flow(flow);
         let now = sim.now();
         self.flows[flow].departed_at = Some(now);
-        self.flows[flow].shaper = None;
+        self.trees[self.flow_tree[flow]].remove_leaf(flow);
         self.flows[flow].queue.clear();
     }
 
@@ -767,12 +858,17 @@ impl World {
                 ShapeMode::Gbps => bytes,
                 ShapeMode::Iops => 1,
             };
-            let verdict = match &mut self.flows[flow].shaper {
-                Some(s) => s.try_acquire(now, cost),
-                None => Verdict::Admit,
+            // The shaping decision crosses the flow's engine tree (a rogue
+            // tenant bypasses it — the adversary ignores its program until
+            // the interface clamps it).
+            let tree = self.flow_tree[flow];
+            let verdict = if self.flows[flow].rogue {
+                TreeVerdict::Admit
+            } else {
+                self.trees[tree].try_acquire(flow, now, cost)
             };
             match verdict {
-                Verdict::Admit => {
+                TreeVerdict::Admit => {
                     self.flows[flow].inflight += 1;
                     if is_rx {
                         let port = self.flows[flow].port;
@@ -801,12 +897,54 @@ impl World {
                         self.issue_ingress(sim, msg);
                     }
                 }
-                Verdict::RetryAt(t) => {
+                TreeVerdict::RetryAt(t) => {
                     self.kick_fetch(sim, flow, t);
+                    return;
+                }
+                TreeVerdict::AwaitTick => {
+                    // The leaf is parked inside the tree; ONE tree-wide
+                    // pacing event re-drives every waiting flow — no
+                    // per-flow queue entry.
+                    self.ensure_tree_tick(sim, tree);
                     return;
                 }
             }
         }
+    }
+
+    /// Schedule the next pacing pass for a tree, if any leaf waits and no
+    /// earlier pass is pending. Passes fire on aligned interval
+    /// boundaries, so the schedule is a pure function of the clock.
+    fn ensure_tree_tick<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, tree: usize) {
+        if !self.trees[tree].has_waiting() {
+            return;
+        }
+        let at = self.trees[tree].next_tick_at(sim.now());
+        if at >= self.tree_tick_scheduled[tree] {
+            return;
+        }
+        self.tree_tick_scheduled[tree] = at;
+        self.tree_tick_gen[tree] += 1;
+        let gen = self.tree_tick_gen[tree];
+        sim.at(at, Ev::ShaperTick { tree, gen });
+    }
+
+    /// One pacing pass: replenish aggregate credit and re-drive every
+    /// leaf the tree released, in ascending flow id — a single
+    /// O(active-children) sweep for the whole engine.
+    fn ev_shaper_tick<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, tree: usize) {
+        let now = sim.now();
+        let mut eligible = std::mem::take(&mut self.scratch_eligible);
+        self.trees[tree].tick(now, &mut eligible);
+        for &flow in &eligible {
+            if self.flows[flow].departed_at.is_none() {
+                self.ev_fetch(sim, flow);
+            }
+        }
+        eligible.clear();
+        self.scratch_eligible = eligible;
+        // Leaves that are still short re-registered during the sweep.
+        self.ensure_tree_tick(sim, tree);
     }
 
     /// Issue the PCIe/SSD leg of a message's ingress per its path/kind.
@@ -1144,18 +1282,13 @@ impl World {
         let now = sim.now();
         match d {
             Directive::SetRate { flow, rate } => {
-                if let Some(s) = &mut self.flows[flow].shaper {
-                    s.set_rate(now, rate);
-                    self.flows[flow].reconfigs += 1;
-                } else if self.flows[flow].rogue {
-                    // The interface clamps an adversarial tenant: the
-                    // hardware bucket is re-armed at the directive's rate
-                    // — the tenant can ignore software, not registers.
-                    let mode = self.flows[flow].mode;
-                    self.flows[flow].shaper =
-                        Some(Box::new(TokenBucket::for_rate(rate, mode)));
-                    self.flows[flow].rogue = false;
-                    self.flows[flow].rogue_restore = None;
+                // Reprogramming the registers clamps an adversarial tenant
+                // too: the tenant can ignore software, not registers —
+                // clearing `rogue` puts the (untouched) leaf back in force
+                // at the directive's rate.
+                let was_rogue = std::mem::replace(&mut self.flows[flow].rogue, false);
+                let t = self.flow_tree[flow];
+                if self.trees[t].set_leaf_rate(flow, now, rate) || was_rogue {
                     self.flows[flow].reconfigs += 1;
                 }
                 self.kick_fetch(sim, flow, now);
@@ -1164,6 +1297,13 @@ impl World {
                 self.flows[flow].path = to;
                 self.flows[flow].reconfigs += 1;
                 self.kick_fetch(sim, flow, now);
+            }
+            Directive::SetAggregate { engine, tenant, guarantee, ceiling } => {
+                // Tree-install: reprogram a tenant aggregate node. Waiting
+                // leaves see the new envelope at the next pacing pass.
+                if let Some(tree) = self.trees.get_mut(engine) {
+                    tree.set_tenant(tenant, NodeBudget::new(guarantee, ceiling));
+                }
             }
         }
     }
@@ -1193,13 +1333,10 @@ impl World {
                 self.ctrl.set_profile_skew(name, factor);
             }
             FaultKind::RogueTenant { flow } => {
-                // The tenant stops honoring its program: its interface
-                // queue drains unshaped until a control-plane directive
-                // clamps it (apply_directive / install_program re-arm the
-                // bucket and clear the flag).
-                if let Some(s) = self.flows[flow].shaper.take() {
-                    self.flows[flow].rogue_restore = Some(s.rate());
-                }
+                // The tenant stops honoring its program: its fetches
+                // bypass the shaper tree until a control-plane directive
+                // clamps it (apply_directive / install_program clear the
+                // flag, putting the untouched leaf back in force).
                 self.flows[flow].rogue = true;
                 let now = sim.now();
                 self.kick_fetch(sim, flow, now);
@@ -1251,25 +1388,12 @@ impl World {
             }
             FaultKind::RogueTenant { flow } => {
                 // If the control plane never clamped the tenant, it gives
-                // up at the window's end and resumes its last program —
-                // through the same install path as a control-plane
-                // response, so host-interposed modes get their software
-                // limiter back, not a hardware bucket they don't have.
+                // up at the window's end and resumes its program: the leaf
+                // (hardware bucket, host limiter, or tree budget) was
+                // never removed, so clearing the bypass restores exactly
+                // the pre-fault shaping state.
                 if self.flows[flow].rogue {
                     self.flows[flow].rogue = false;
-                    if let Some(rate) = self.flows[flow].rogue_restore.take() {
-                        let mode = self.flows[flow].mode;
-                        let program = if self.host_cfg.is_some() {
-                            ShaperProgram::Software { rate, mode }
-                        } else {
-                            ShaperProgram::TokenBucket {
-                                params: TokenBucketParams::for_rate(rate, mode),
-                                rate,
-                                mode,
-                            }
-                        };
-                        self.install_program(now, flow, program);
-                    }
                     self.kick_fetch(sim, flow, now);
                 }
             }

@@ -146,6 +146,15 @@ pub struct ExperimentSpec {
     /// adversary windows on the DES clock (empty = healthy run; per-era
     /// fault metrics are reported only when non-empty).
     pub faults: Vec<FaultSpec>,
+    /// Hierarchical shaping (Arcus mode only): pace committed flows as
+    /// leaves of the per-engine [`crate::shaping::ShaperTree`] under
+    /// per-tenant aggregates, instead of flat per-flow token buckets —
+    /// the 10k-flow-scale configuration (`scale` sweep axis, `xlarge`
+    /// bench preset).
+    pub hierarchy: bool,
+    /// Shaper-tree pacing cadence (one `ShaperTick` event per tree per
+    /// interval while any leaf waits).
+    pub shaper_tick: Time,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -176,7 +185,15 @@ impl ExperimentSpec {
             shared_port: false,
             lifecycle: Vec::new(),
             faults: Vec::new(),
+            hierarchy: false,
+            shaper_tick: crate::shaping::hierarchy::DEFAULT_TICK_INTERVAL,
         }
+    }
+
+    /// Enable hierarchical shaping (the per-engine shaper tree).
+    pub fn with_hierarchy(mut self) -> Self {
+        self.hierarchy = true;
+        self
     }
 
     /// Replace the fault-injection plan.

@@ -1,0 +1,292 @@
+//! Hierarchical shaper tree, end to end (§5 "precise **and** scalable").
+//!
+//! Three contracts are pinned here:
+//!
+//! 1. **Flat→tree regression guard**: a tree with a single unconstrained
+//!    child delegates verdicts to the bare child shaper byte-for-byte
+//!    (the property also lives next to the implementation; this is the
+//!    black-box replay form).
+//! 2. **Determinism at scale**: a multi-tenant hierarchical scenario —
+//!    tree ticks, aggregate installs, renegotiation directives, and
+//!    dataplane events all interleaving — produces byte-identical
+//!    canonical `SystemReport`s on both event-queue disciplines.
+//! 3. **Hierarchy semantics**: min-guarantees hold under full contention,
+//!    idle sibling budget is borrowed (work conservation), and a scaled
+//!    sweep cell (hundreds of flows under a handful of tenant aggregates)
+//!    attains its committed SLOs.
+
+use arcus::accel::AccelModel;
+use arcus::flow::{FlowSpec, Path, Slo, TrafficPattern};
+use arcus::shaping::{replay, ShapeMode, ShaperTree, TokenBucket, TreeConfig, TreeVerdict};
+use arcus::sim::{BinaryHeapQueue, CalendarQueue};
+use arcus::sweep::{GridBase, Scale, SweepGrid, SweepRunner};
+use arcus::system::{run_with, EngineEvent, ExperimentSpec, LifecycleEvent, Mode, SystemReport};
+use arcus::util::units::{Rate, Time, MILLIS, SECONDS};
+
+// ---------------------------------------------------------------------------
+// 1. Flat→tree regression guard
+// ---------------------------------------------------------------------------
+
+/// `shaping::replay`, but through a tree leaf. Panics on `AwaitTick`: an
+/// unconstrained leaf must never engage the pacing machinery.
+fn tree_replay(tree: &mut ShaperTree, arrivals: &[(Time, u64)]) -> (u64, Time) {
+    let mut admitted = 0u64;
+    let mut last = 0;
+    let mut free_at: Time = 0;
+    for &(t, cost) in arrivals {
+        let mut now = t.max(free_at);
+        loop {
+            match tree.try_acquire(0, now, cost) {
+                TreeVerdict::Admit => {
+                    admitted += cost;
+                    last = now;
+                    free_at = now;
+                    break;
+                }
+                TreeVerdict::RetryAt(at) => {
+                    assert!(at > now);
+                    now = at;
+                }
+                TreeVerdict::AwaitTick => panic!("unconstrained leaf awaited a tick"),
+            }
+        }
+    }
+    (admitted, last)
+}
+
+#[test]
+fn single_child_tree_replays_byte_identical_to_bare_shaper() {
+    for (gbps, size) in [(4.0, 1500u64), (10.0, 64), (40.0, 4096)] {
+        let bytes_per_sec = Rate::gbps(gbps).as_bits_per_sec() / 8.0;
+        // 2x-oversubscribed paced arrivals for ~5 ms.
+        let mut arrivals = Vec::new();
+        let mut t = 0u64;
+        let mut sent = 0u64;
+        while sent < (bytes_per_sec * 0.005) as u64 {
+            arrivals.push((t, size));
+            sent += size;
+            t += (size as f64 / (2.0 * bytes_per_sec) * SECONDS as f64) as u64;
+        }
+        let mut bare = TokenBucket::for_rate(bytes_per_sec, ShapeMode::Gbps);
+        let (bare_admitted, bare_last) = replay(&mut bare, &arrivals);
+
+        let mut tree = ShaperTree::new(1, TreeConfig::default());
+        tree.install_flat_leaf(
+            0,
+            0,
+            Some(Box::new(TokenBucket::for_rate(bytes_per_sec, ShapeMode::Gbps))),
+            ShapeMode::Gbps,
+        );
+        let (tree_admitted, tree_last) = tree_replay(&mut tree, &arrivals);
+        assert_eq!(tree_admitted, bare_admitted, "{gbps} Gbps / {size} B");
+        assert_eq!(tree_last, bare_last, "{gbps} Gbps / {size} B");
+        // And the wrapped shaper still reports the programmed rate.
+        let rate = tree.leaf_rate(0).unwrap();
+        assert!((rate - bytes_per_sec).abs() / bytes_per_sec < 0.01);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Determinism with the tree enabled
+// ---------------------------------------------------------------------------
+
+/// Hierarchical golden scenario: 2 tenant VMs × 8 flows each on one IPSec
+/// engine, everyone oversubscribed (tree ticks dominate pacing), with a
+/// mid-run renegotiation so SetAggregate/InstallProgram directives land
+/// while the pacing passes run.
+fn tree_spec() -> ExperimentSpec {
+    let line = Rate::gbps(32.0);
+    let flows: Vec<FlowSpec> = (0..16)
+        .map(|i| {
+            FlowSpec::new(
+                i,
+                i % 2,
+                Path::FunctionCall,
+                TrafficPattern::fixed(1500, 0.05, line),
+                Slo::gbps(1.2),
+                0,
+            )
+        })
+        .collect();
+    ExperimentSpec::new(Mode::Arcus, vec![AccelModel::ipsec_32g()], flows)
+        .with_duration(4 * MILLIS)
+        .with_warmup(MILLIS)
+        .with_event(LifecycleEvent::Renegotiate {
+            flow: 0,
+            at: 2 * MILLIS,
+            slo: Slo::gbps(2.0),
+        })
+        .with_hierarchy()
+}
+
+#[test]
+fn hierarchical_scenario_reports_byte_identical_across_queues() {
+    let spec = tree_spec();
+    let heap = run_with::<BinaryHeapQueue<EngineEvent>>(&spec);
+    let cal = run_with::<CalendarQueue<EngineEvent>>(&spec);
+    assert_eq!(heap.queue, "binary_heap");
+    assert_eq!(cal.queue, "calendar");
+    assert_eq!(
+        heap.canonical(),
+        cal.canonical(),
+        "tree-enabled SystemReports diverge between queue disciplines"
+    );
+    assert_eq!(heap.events, cal.events);
+    assert_eq!(heap.peak_queue_depth, cal.peak_queue_depth);
+    // All 16 flows admitted and completing.
+    for f in &heap.per_flow {
+        assert!(!f.rejected, "flow {} rejected", f.flow);
+        assert!(f.completed > 100, "flow {} completed {}", f.flow, f.completed);
+    }
+}
+
+#[test]
+fn hierarchical_scenario_is_stable_across_repeat_runs() {
+    let spec = tree_spec();
+    let a = run_with::<CalendarQueue<EngineEvent>>(&spec);
+    let b = run_with::<CalendarQueue<EngineEvent>>(&spec);
+    assert_eq!(a.canonical(), b.canonical());
+}
+
+// ---------------------------------------------------------------------------
+// 3. Hierarchy semantics through the whole engine
+// ---------------------------------------------------------------------------
+
+fn committed_spec(loads: [f64; 4]) -> ExperimentSpec {
+    // 2 VMs × 2 flows, each committing 5 Gbps (20 G total under the
+    // ~24.6 G budget); per-flow offered load set by the caller.
+    let line = Rate::gbps(32.0);
+    let flows: Vec<FlowSpec> = (0..4)
+        .map(|i| {
+            FlowSpec::new(
+                i,
+                i / 2, // flows 0,1 → VM 0; flows 2,3 → VM 1
+                Path::FunctionCall,
+                TrafficPattern::fixed(1500, loads[i], line),
+                Slo::gbps(5.0),
+                0,
+            )
+        })
+        .collect();
+    ExperimentSpec::new(Mode::Arcus, vec![AccelModel::ipsec_32g()], flows)
+        .with_duration(6 * MILLIS)
+        .with_warmup(MILLIS)
+        .with_hierarchy()
+}
+
+fn total_goodput_gbps(r: &SystemReport) -> f64 {
+    r.per_flow.iter().map(|f| f.goodput.as_gbps()).sum()
+}
+
+#[test]
+fn hierarchy_holds_committed_slos_under_oversubscription() {
+    // Everyone offers 8 G against a 5 G guarantee: each flow must attain
+    // its SLO (guarantee first; the leftover budget is borrowed evenly, so
+    // attainment lands at or above 1.0), and the aggregate stays inside
+    // the engine.
+    let report = run_with::<BinaryHeapQueue<EngineEvent>>(&committed_spec([0.25; 4]));
+    for f in &report.per_flow {
+        assert!(!f.rejected, "flow {} rejected", f.flow);
+        let att = f.slo_attainment().unwrap();
+        assert!(att > 0.92, "flow {} attainment {att:.3}", f.flow);
+    }
+    let total = total_goodput_gbps(&report);
+    assert!(total < 27.0, "aggregate {total:.1} G exceeds the engine");
+}
+
+#[test]
+fn hierarchy_borrows_idle_sibling_budget() {
+    // VM 0's flows stay hungry while VM 1 offers almost nothing: the
+    // work-conserving borrow must push VM 0 well past its guarantees,
+    // without exceeding the engine budget.
+    let report = run_with::<BinaryHeapQueue<EngineEvent>>(
+        &committed_spec([0.45, 0.45, 0.01, 0.01]),
+    );
+    for f in report.per_flow.iter().take(2) {
+        let gbps = f.goodput.as_gbps();
+        assert!(
+            gbps > 5.0 * 1.3,
+            "flow {} got {gbps:.2} G — idle sibling budget was not borrowed",
+            f.flow
+        );
+    }
+    // The near-idle flows still complete what they offer (~0.3 G each).
+    for f in report.per_flow.iter().skip(2) {
+        assert!(f.completed > 50, "flow {} completed {}", f.flow, f.completed);
+    }
+    let total = total_goodput_gbps(&report);
+    assert!(total < 27.0, "aggregate {total:.1} G exceeds the engine");
+}
+
+#[test]
+fn departed_tenant_budget_is_reclaimed_by_siblings() {
+    // Both VMs saturate; VM 1's flows depart mid-run. After the control
+    // plane's SetAggregate catches up, VM 0 borrows the freed budget: its
+    // post-departure rate must exceed its pre-departure rate.
+    let mut spec = committed_spec([0.4; 4]).with_trace();
+    spec = spec
+        .with_duration(10 * MILLIS)
+        .with_event(LifecycleEvent::Depart { flow: 2, at: 5 * MILLIS })
+        .with_event(LifecycleEvent::Depart { flow: 3, at: 5 * MILLIS });
+    let report = run_with::<BinaryHeapQueue<EngineEvent>>(&spec);
+    let rate_in = |f: usize, lo: Time, hi: Time| -> f64 {
+        let bytes: u64 = report.per_flow[f]
+            .trace
+            .iter()
+            .filter(|&&(at, _, _)| at >= lo && at < hi)
+            .map(|&(_, _, b)| b)
+            .sum();
+        bytes as f64 * 8.0 / (hi - lo) as f64 * (SECONDS as f64 / 1e9)
+    };
+    let before = rate_in(0, 2 * MILLIS, 5 * MILLIS);
+    let after = rate_in(0, 7 * MILLIS, 10 * MILLIS);
+    assert!(
+        after > before * 1.25,
+        "flow 0: {before:.2} G before the departures vs {after:.2} G after — \
+         freed tenant budget was not reclaimed"
+    );
+}
+
+#[test]
+fn scaled_sweep_cell_attains_committed_slos() {
+    // One scaled grid cell: 128 flows under 4 tenant aggregates, shaped by
+    // the tree (the cell sets `hierarchy` itself). Committed sum = 0.6 ×
+    // capacity, split over all 128 flows.
+    let grid = SweepGrid::new(GridBase {
+        duration: 3 * MILLIS,
+        warmup: MILLIS,
+        ..GridBase::default()
+    })
+    .modes(vec![Mode::Arcus])
+    .tenants(vec![4])
+    .mixes(vec![arcus::sweep::SizeMix::Mtu])
+    .bursts(vec![arcus::flow::pattern::Burstiness::Paced])
+    .tightness(vec![0.6])
+    .scale(vec![Scale::Flows(128)])
+    .accels(vec![AccelModel::ipsec_32g()])
+    .seeds(vec![1]);
+    grid.validate().expect("scaled grid validates");
+    let scenarios = grid.expand();
+    assert_eq!(scenarios.len(), 1);
+    assert!(scenarios[0].spec.hierarchy);
+    assert_eq!(scenarios[0].spec.flows.len(), 128);
+    let outcomes = SweepRunner::with_threads(2).run(&grid);
+    let report = &outcomes[0].report;
+    assert_eq!(report.per_flow.len(), 128);
+    let mut attained = 0usize;
+    let mut rejected = 0usize;
+    for f in &report.per_flow {
+        if f.rejected {
+            rejected += 1;
+            continue;
+        }
+        if f.slo_attainment().unwrap_or(0.0) > 0.85 {
+            attained += 1;
+        }
+    }
+    assert_eq!(rejected, 0, "admission rejected {rejected} of 128 at 0.6 tightness");
+    assert!(
+        attained >= 120,
+        "only {attained}/128 flows attained ≥85% of their committed SLO"
+    );
+}
