@@ -9,8 +9,12 @@
 //!   round-trips; ours is the register-derivation compute).
 //! - **Event-core micro**: the boxed-closure event loop (the pre-refactor
 //!   design, reimplemented here as the measured baseline) vs the typed
-//!   zero-allocation core on both queue disciplines — the before/after
+//!   zero-allocation core on every queue discipline — the before/after
 //!   numbers behind the `arcus bench` trajectory.
+//! - **Long-horizon chaos schedule**: fault-window-style events landing
+//!   milliseconds out, where the flat calendar's overflow heap churns and
+//!   the hierarchical wheel's upper levels engage — the head-to-head
+//!   behind adopting `HierWheel`.
 //! - DES throughput: events/second on the committed bench presets
 //!   (`arcus bench` emits the same numbers as BENCH_<name>.json).
 //! - Serving-path dispatch: end-to-end request latency through the real
@@ -24,7 +28,7 @@ use std::time::Instant;
 
 use arcus::perf::{self, QueueKind};
 use arcus::shaping::{ShapeMode, Shaper, SoftwareShaper, SoftwareShaperConfig, TokenBucket};
-use arcus::sim::{BinaryHeapQueue, CalendarQueue, EventQueue, Handler, Sim};
+use arcus::sim::{BinaryHeapQueue, CalendarQueue, EventQueue, Handler, HierWheel, Sim};
 use arcus::util::units::{Rate, NANOS};
 use common::banner;
 
@@ -150,6 +154,40 @@ fn run_typed<Q: EventQueue<MicroEv> + Default>(chains: u64, budget: u64) -> f64 
     w.count as f64 / t0.elapsed().as_secs_f64()
 }
 
+/// Events/sec on a raw queue driven with a chaos-style schedule: dense
+/// 40–118 ns chains with a ~3% tail of events 1–50 ms out (the fault
+/// window / deep-retry shape). Exercised directly on the `EventQueue`
+/// so the measurement isolates queue cost, not handler cost.
+fn run_chaos<Q: EventQueue<u32> + Default>(n_events: u64) -> f64 {
+    let mut q = Q::default();
+    let mut rng = arcus::util::Rng::new(0x1234);
+    let mut now = 0u64;
+    let mut seq = 0u64;
+    let t0 = Instant::now();
+    while seq < n_events || !q.is_empty() {
+        for _ in 0..3 {
+            if seq < n_events {
+                let t = if rng.range_u64(0, 99) < 3 {
+                    now + rng.range_u64(1, 50) * 1_000_000 * NANOS
+                } else {
+                    now + rng.range_u64(40, 118) * NANOS
+                };
+                q.push(t, seq, seq as u32);
+                seq += 1;
+            }
+        }
+        for _ in 0..3 {
+            if let Some((t, _, _)) = q.pop() {
+                now = t;
+            } else {
+                break;
+            }
+        }
+    }
+    // One event = one push + one pop lifecycle.
+    n_events as f64 / t0.elapsed().as_secs_f64()
+}
+
 fn main() {
     banner("Shaping decision cost (wall-clock per try_acquire)");
     let rate = Rate::gbps(100.0).as_bits_per_sec() / 8.0;
@@ -193,6 +231,7 @@ fn main() {
     let boxed = run_boxed(chains, budget);
     let typed_heap = run_typed::<BinaryHeapQueue<MicroEv>>(chains, budget);
     let typed_cal = run_typed::<CalendarQueue<MicroEv>>(chains, budget);
+    let typed_wheel = run_typed::<HierWheel<MicroEv>>(chains, budget);
     println!("({total} events, {chains} interleaved self-rescheduling chains)");
     println!("boxed-closure heap (pre-refactor core): {:>8.2} M ev/s", boxed / 1e6);
     println!(
@@ -205,12 +244,37 @@ fn main() {
         typed_cal / 1e6,
         typed_cal / boxed
     );
+    println!(
+        "typed events + hierarchical wheel:      {:>8.2} M ev/s   ({:.2}x boxed)",
+        typed_wheel / 1e6,
+        typed_wheel / boxed
+    );
+
+    banner("Long-horizon chaos schedule (fault windows ms out)");
+    // The shape that degrades the flat calendar: dense near-future chains
+    // with a sparse tail of far-future events forcing overflow churn.
+    let far_budget = if common::fast_mode() { 50_000u64 } else { 400_000u64 };
+    let chaos_heap = run_chaos::<BinaryHeapQueue<u32>>(far_budget);
+    let chaos_cal = run_chaos::<CalendarQueue<u32>>(far_budget);
+    let chaos_wheel = run_chaos::<HierWheel<u32>>(far_budget);
+    println!("reference heap:     {:>8.2} M ev/s", chaos_heap / 1e6);
+    println!(
+        "calendar queue:     {:>8.2} M ev/s   ({:.2}x heap)",
+        chaos_cal / 1e6,
+        chaos_cal / chaos_heap
+    );
+    println!(
+        "hierarchical wheel: {:>8.2} M ev/s   ({:.2}x heap, {:.2}x calendar)",
+        chaos_wheel / 1e6,
+        chaos_wheel / chaos_heap,
+        chaos_wheel / chaos_cal
+    );
 
     banner("DES throughput on the committed bench presets (§Perf L3 target)");
     let presets: &[&str] = if common::fast_mode() { &["small"] } else { &["small", "medium", "large"] };
     for name in presets {
         let p = perf::preset_by_name(name).unwrap();
-        for q in [QueueKind::Heap, QueueKind::Calendar] {
+        for q in [QueueKind::Heap, QueueKind::Calendar, QueueKind::Wheel] {
             let r = perf::run_preset(&p, q);
             println!(
                 "{:<7} {:<11} {:>9} events  {:>7.2} M ev/s  wall {:>8.1} ms  peakq {}",

@@ -25,7 +25,7 @@
 //! [`crate::system::EngineEvent`]s (`FaultStart`/`FaultEnd`) on the same
 //! `(time, seq)`-ordered queue as the dataplane, so the golden
 //! fault-conformance test (`rust/tests/faults.rs`) can require
-//! byte-identical reports across both event-queue disciplines.
+//! byte-identical reports across all three event-queue disciplines.
 //!
 //! The *fault window* — `[min start, max end)` over every injected fault —
 //! splits a run into three eras (pre / during / post); the engine measures

@@ -62,7 +62,7 @@ fn usage() {
              [--flows flat,16,256,4k,10k] [--accels ipsec] [--seeds 1,2]\n  \
              [--duration-ms N] [--load F] [--threads N] [--scenarios] [--expect-flows N]\n  \
          arcus churn\n  arcus chaos\n  \
-         arcus bench [--quick] [--preset small|medium|large|xlarge|all] [--queue heap|calendar|both]\n  \
+         arcus bench [--quick] [--preset small|medium|large|xlarge|all] [--queue heap|calendar|wheel|both|all]\n  \
              [--out FILE] [--floor perf_floor.toml] [--no-files] [--verify]\n  \
          arcus profile [accel ...]\n  arcus serve [--artifacts DIR]\n  arcus modes\n\n\
          Experiment configs: see rust/configs/*.toml (churn.toml shows the\n\
@@ -219,7 +219,7 @@ fn bench(args: &[String]) -> i32 {
     use arcus::perf::{self, QueueKind};
 
     let mut preset_names: Option<Vec<&str>> = None;
-    let mut queues = vec![QueueKind::Heap, QueueKind::Calendar];
+    let mut queues = vec![QueueKind::Heap, QueueKind::Calendar, QueueKind::Wheel];
     let mut out: Option<PathBuf> = None;
     let mut floor_path: Option<PathBuf> = None;
     let mut write_files = true;
@@ -259,7 +259,7 @@ fn bench(args: &[String]) -> i32 {
             }
             "--queue" => {
                 let Some(v) = args.get(i + 1) else {
-                    eprintln!("--queue needs a value (heap|calendar|both)");
+                    eprintln!("--queue needs a value (heap|calendar|wheel|both|all)");
                     return 2;
                 };
                 match QueueKind::parse(v) {

@@ -50,16 +50,26 @@ impl Histogram {
         ((octave - SUB_BITS + 1) as usize, sub)
     }
 
-    /// Representative (upper-edge midpoint) value for a bucket.
+    /// Representative (bucket midpoint) value for a bucket.
+    ///
+    /// For `octave >= 1` the bucket covers `[sub' << octave,
+    /// (sub' + 1) << octave)` where `sub' = SUB_COUNT/2 + (sub &
+    /// (SUB_COUNT/2 - 1))` — the top `SUB_BITS + 1` bits of the original
+    /// value at scale `2^octave`. The midpoint is `(sub' << octave) +
+    /// 2^(octave-1)`. Overflow-safety: [`Histogram::index`] caps `octave`
+    /// at `64 - SUB_BITS = 58` and `sub' <= SUB_COUNT - 1`, so the
+    /// midpoint is at most `(63 << 58) + 2^57 < 2^64`. Only the top
+    /// bucket's *upper edge* (exactly `2^64`) would not fit a u64, and it
+    /// is never materialized. The round-trip property test below pins
+    /// this for random values including `u64::MAX`.
     fn value_at(octave: usize, sub: usize) -> u64 {
         if octave == 0 {
             return sub as u64;
         }
-        let base = (SUB_COUNT >> 1 << octave) as u64; // 2^(octave+SUB_BITS-1)
-        let width = 1u64 << (octave - 1).min(63);
-        // Reconstruct: value had msb at octave+SUB_BITS-1 and the sub bits
-        // below it; midpoint of the bucket.
-        base + (sub as u64 & ((SUB_COUNT as u64 >> 1) - 1)) * width * 2 + width
+        debug_assert!(octave <= 64 - SUB_BITS as usize, "octave out of range");
+        let half = SUB_COUNT as u64 / 2;
+        let sub_prime = half + (sub as u64 & (half - 1));
+        (sub_prime << octave) + (1u64 << (octave - 1))
     }
 
     /// Record one observation.
@@ -292,6 +302,54 @@ mod tests {
             assert!(w[0].1 <= w[1].1);
         }
         assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn index_value_at_round_trip_stays_in_bucket() {
+        // Property: for any u64 value — including u64::MAX and the whole
+        // top octave, where a careless midpoint reconstruction would
+        // overflow — the bucket representative (a) indexes back into the
+        // same bucket and (b) sits within the structure's relative-error
+        // bound: |rep - v| * SUB_COUNT <= v, i.e. <= 1/64 ≈ 1.6%.
+        let mut cases: Vec<u64> = vec![
+            0,
+            1,
+            SUB_COUNT as u64 - 1,
+            SUB_COUNT as u64,
+            SUB_COUNT as u64 + 1,
+            (1 << 62) - 1,
+            1 << 62,
+            (1 << 63) - 1,
+            1 << 63,
+            u64::MAX - 1,
+            u64::MAX,
+        ];
+        let mut rng = crate::util::Rng::new(0xC0FFEE);
+        for _ in 0..20_000 {
+            // Random magnitude first (uniform octave coverage), then
+            // random bits below the msb.
+            let bits = rng.range_u64(1, 64) as u32;
+            let raw = rng.next_u64();
+            cases.push((raw >> (64 - bits)) | (1u64 << (bits - 1)));
+        }
+        for &v in &cases {
+            let (o, s) = Histogram::index(v);
+            let rep = Histogram::value_at(o, s);
+            assert_eq!(
+                Histogram::index(rep),
+                (o, s),
+                "representative {rep} escapes the bucket of {v}"
+            );
+            if v < SUB_COUNT as u64 {
+                assert_eq!(rep, v, "sub-octave buckets are exact");
+            } else {
+                let err = (rep as i128 - v as i128).unsigned_abs();
+                assert!(
+                    err * SUB_COUNT as u128 <= v as u128,
+                    "representative {rep} off by {err} for {v} (> 1/{SUB_COUNT})"
+                );
+            }
+        }
     }
 
     #[test]

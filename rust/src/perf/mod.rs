@@ -1,7 +1,8 @@
 //! The `arcus bench` performance pipeline.
 //!
-//! Seeds and maintains the repo's perf trajectory: three scenario presets
-//! (small / medium / large) run on both event-queue disciplines, measuring
+//! Seeds and maintains the repo's perf trajectory: scenario presets
+//! (small / medium / large / xlarge) run on the three event-queue
+//! disciplines (reference heap, flat calendar, hierarchical wheel), measuring
 //! **events/sec**, **wall-clock per simulated millisecond**, and **peak
 //! event-queue depth**, emitted as machine-readable `BENCH_<name>.json`.
 //! CI's `perf-smoke` job runs the quick variant and gates merges on a
@@ -30,7 +31,7 @@
 
 use crate::accel::AccelModel;
 use crate::flow::{FlowSpec, Path, Slo, TrafficPattern};
-use crate::sim::{BinaryHeapQueue, CalendarQueue};
+use crate::sim::{BinaryHeapQueue, CalendarQueue, HierWheel};
 use crate::system::{run_with, EngineEvent, ExperimentSpec, Mode};
 use crate::util::units::{Rate, MILLIS};
 
@@ -104,6 +105,7 @@ pub fn preset_by_name(name: &str) -> Option<Preset> {
 pub enum QueueKind {
     Heap,
     Calendar,
+    Wheel,
 }
 
 impl QueueKind {
@@ -111,6 +113,7 @@ impl QueueKind {
         match self {
             QueueKind::Heap => "binary_heap",
             QueueKind::Calendar => "calendar",
+            QueueKind::Wheel => "hier_wheel",
         }
     }
 
@@ -118,8 +121,13 @@ impl QueueKind {
         match s {
             "heap" => Ok(vec![QueueKind::Heap]),
             "calendar" => Ok(vec![QueueKind::Calendar]),
+            "wheel" | "hier_wheel" => Ok(vec![QueueKind::Wheel]),
+            // `both` predates the hierarchical wheel; kept for scripts.
             "both" => Ok(vec![QueueKind::Heap, QueueKind::Calendar]),
-            other => Err(format!("unknown queue `{other}` (valid: heap, calendar, both)")),
+            "all" => Ok(vec![QueueKind::Heap, QueueKind::Calendar, QueueKind::Wheel]),
+            other => Err(format!(
+                "unknown queue `{other}` (valid: heap, calendar, wheel, both, all)"
+            )),
         }
     }
 }
@@ -186,8 +194,8 @@ impl BenchResult {
             "{{\"scenario\":\"{}\",\"queue\":\"{}\",\"events_executed\":{},\
              \"events_per_sec\":{:.1},\"wall_ms\":{:.3},\"sim_ms\":{:.3},\
              \"wall_ms_per_sim_ms\":{:.3},\"peak_queue_depth\":{},\"rss_hint_kb\":{}}}",
-            self.scenario,
-            self.queue,
+            json_escape(&self.scenario),
+            json_escape(self.queue),
             self.events_executed,
             self.events_per_sec,
             self.wall_ms,
@@ -197,6 +205,28 @@ impl BenchResult {
             self.rss_hint_kb,
         )
     }
+}
+
+/// Escape a string for embedding in a JSON string literal. The bench
+/// pipeline interpolates scenario/queue labels into `BENCH_*.json`; a
+/// label containing `"` or `\` (or a control character) must not emit
+/// invalid JSON.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// Render a result list as a JSON array (the `BENCH_*.json` payload).
@@ -225,6 +255,7 @@ pub fn run_preset_report(
     let report = match queue {
         QueueKind::Heap => run_with::<BinaryHeapQueue<EngineEvent>>(&spec),
         QueueKind::Calendar => run_with::<CalendarQueue<EngineEvent>>(&spec),
+        QueueKind::Wheel => run_with::<HierWheel<EngineEvent>>(&spec),
     };
     let result = BenchResult {
         scenario: p.name.to_string(),
@@ -325,9 +356,9 @@ mod tests {
     }
 
     #[test]
-    fn small_preset_runs_and_reports_on_both_queues() {
+    fn small_preset_runs_and_reports_on_every_queue() {
         let p = preset_by_name("small").unwrap();
-        for q in [QueueKind::Heap, QueueKind::Calendar] {
+        for q in [QueueKind::Heap, QueueKind::Calendar, QueueKind::Wheel] {
             let r = run_preset(&p, q);
             assert_eq!(r.scenario, "small");
             assert_eq!(r.queue, q.name());
@@ -370,12 +401,41 @@ mod tests {
     #[test]
     fn queue_kind_parse_menu() {
         assert_eq!(QueueKind::parse("heap").unwrap(), vec![QueueKind::Heap]);
+        assert_eq!(QueueKind::parse("wheel").unwrap(), vec![QueueKind::Wheel]);
         assert_eq!(
             QueueKind::parse("both").unwrap(),
             vec![QueueKind::Heap, QueueKind::Calendar]
         );
-        let err = QueueKind::parse("wheel").unwrap_err();
-        assert!(err.contains("calendar"), "{err}");
+        assert_eq!(
+            QueueKind::parse("all").unwrap(),
+            vec![QueueKind::Heap, QueueKind::Calendar, QueueKind::Wheel]
+        );
+        let err = QueueKind::parse("fifo").unwrap_err();
+        assert!(err.contains("wheel"), "{err}");
+    }
+
+    #[test]
+    fn json_escapes_hostile_string_fields() {
+        let r = BenchResult {
+            scenario: "sm\"all\\x\n".into(),
+            queue: "binary_heap",
+            events_executed: 1,
+            events_per_sec: 1.0,
+            wall_ms: 1.0,
+            sim_ms: 1.0,
+            peak_queue_depth: 1,
+            rss_hint_kb: 0,
+        };
+        let js = r.to_json();
+        assert!(
+            js.contains("\"scenario\":\"sm\\\"all\\\\x\\n\""),
+            "unescaped payload: {js}"
+        );
+        // No raw control characters may survive into the payload.
+        assert!(!js.chars().any(|c| (c as u32) < 0x20));
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\tb"), "a\\tb");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
     }
 
     #[test]

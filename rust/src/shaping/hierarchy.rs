@@ -382,7 +382,7 @@ impl ShaperTree {
     /// The aligned boundary the next pacing pass should fire at: the first
     /// multiple of the tick interval strictly after `now`. Alignment (not
     /// `now + interval`) keeps tick times a pure function of the clock, so
-    /// both event-queue disciplines schedule identical instants.
+    /// every event-queue discipline schedules identical instants.
     pub fn next_tick_at(&self, now: Time) -> Time {
         let t = self.tick_interval();
         (now / t + 1) * t

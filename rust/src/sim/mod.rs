@@ -8,20 +8,26 @@
 //! scheduling costs a queue insert, not a heap allocation, and dispatch is a
 //! jump table, not a virtual call through `Box<dyn FnOnce>`.
 //!
-//! Two queue disciplines implement [`EventQueue`]:
+//! Three queue disciplines implement [`EventQueue`]:
 //!
 //! - [`BinaryHeapQueue`] — the reference implementation; O(log n) per
 //!   operation on one `BinaryHeap`.
-//! - [`CalendarQueue`] — a timing wheel with per-bucket heaps plus an
+//! - [`CalendarQueue`] — a flat timing wheel with per-bucket heaps plus an
 //!   overflow heap, tuned for the shaper-tick-heavy event distribution the
 //!   engine produces (dense clusters of near-future wakeups, a sparse tail
-//!   of control-plane ticks).
+//!   of control-plane ticks). Kept as a comparison discipline.
+//! - [`HierWheel`] — a hierarchical timer wheel: the same fine-grained L0
+//!   backed by three ×64-coarser levels that cascade events downward on
+//!   demand, with per-level occupancy bitmaps. This removes the calendar's
+//!   single-overflow-heap degradation on long-horizon schedules (fault
+//!   windows, deep `RetryAt` wakeups) and is the default fast discipline.
 //!
 //! Determinism contract: given the same world, seed, and schedule calls, two
-//! runs — and two *queue implementations* — produce identical event orders.
+//! runs — and three *queue implementations* — produce identical event
+//! orders.
 //! Ties at equal timestamps are broken by insertion sequence number, never
 //! by queue internals. `rust/tests/determinism.rs` pins this with a golden
-//! scenario run on both queues.
+//! scenario run on all three queues.
 //!
 //! `run_until` boundary contract: events at exactly `until` execute —
 //! *including* events an executing event schedules at that same timestamp —
@@ -29,8 +35,10 @@
 //! stay queued.
 
 pub mod calendar;
+pub mod wheel;
 
 pub use calendar::CalendarQueue;
+pub use wheel::HierWheel;
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -72,7 +80,7 @@ pub trait EventQueue<E> {
     fn name(&self) -> &'static str;
 }
 
-/// One queued event. Shared by both queue implementations; ordered by
+/// One queued event. Shared by every queue implementation; ordered by
 /// `(time, seq)` with the comparison reversed so `BinaryHeap` (a max-heap)
 /// yields the earliest entry first.
 pub(crate) struct Entry<E> {
@@ -323,6 +331,7 @@ mod tests {
     fn events_fire_in_time_order() {
         events_fire_in_time_order_on::<BinaryHeapQueue<TEv>>();
         events_fire_in_time_order_on::<CalendarQueue<TEv>>();
+        events_fire_in_time_order_on::<HierWheel<TEv>>();
     }
 
     fn ties_break_by_insertion_order_on<Q: EventQueue<TEv> + Default>() {
@@ -340,6 +349,7 @@ mod tests {
     fn ties_break_by_insertion_order() {
         ties_break_by_insertion_order_on::<BinaryHeapQueue<TEv>>();
         ties_break_by_insertion_order_on::<CalendarQueue<TEv>>();
+        ties_break_by_insertion_order_on::<HierWheel<TEv>>();
     }
 
     fn events_can_schedule_events_on<Q: EventQueue<TEv> + Default>() {
@@ -354,6 +364,7 @@ mod tests {
     fn events_can_schedule_events() {
         events_can_schedule_events_on::<BinaryHeapQueue<TEv>>();
         events_can_schedule_events_on::<CalendarQueue<TEv>>();
+        events_can_schedule_events_on::<HierWheel<TEv>>();
     }
 
     fn run_until_stops_at_boundary_on<Q: EventQueue<TEv> + Default>() {
@@ -374,6 +385,7 @@ mod tests {
     fn run_until_stops_at_boundary() {
         run_until_stops_at_boundary_on::<BinaryHeapQueue<TEv>>();
         run_until_stops_at_boundary_on::<CalendarQueue<TEv>>();
+        run_until_stops_at_boundary_on::<HierWheel<TEv>>();
     }
 
     fn run_until_boundary_chain_on<Q: EventQueue<TEv> + Default>() {
@@ -399,6 +411,7 @@ mod tests {
     fn run_until_executes_equal_time_events_scheduled_by_final_step() {
         run_until_boundary_chain_on::<BinaryHeapQueue<TEv>>();
         run_until_boundary_chain_on::<CalendarQueue<TEv>>();
+        run_until_boundary_chain_on::<HierWheel<TEv>>();
     }
 
     #[test]
@@ -444,6 +457,9 @@ mod tests {
         // And the calendar queue produces the *same* order as the heap.
         let cal = determinism_two_identical_runs_on::<CalendarQueue<TEv>>();
         assert_eq!(heap_a, cal);
+        // ... and so does the hierarchical wheel.
+        let wheel = determinism_two_identical_runs_on::<HierWheel<TEv>>();
+        assert_eq!(heap_a, wheel);
     }
 
     #[test]

@@ -1,0 +1,458 @@
+//! Hierarchical timer wheel for the DES core.
+//!
+//! The flat [`CalendarQueue`](super::CalendarQueue) keeps one fine-grained
+//! wheel (2048 × 64 ns ≈ 131 µs) and dumps everything beyond that horizon
+//! into a single overflow heap. That is exactly where the engine's
+//! long-horizon events live — `FaultStart`/`FaultEnd` windows milliseconds
+//! out, deeply-throttled `RetryAt` wakeups, control-plane ticks during
+//! sparse phases — so chaos-style schedules degrade toward the reference
+//! heap. `HierWheel` replaces the single overflow level with a hierarchy,
+//! kumomta-`timeq` style:
+//!
+//! - **L0**: `2^l0_bits` buckets (default 2048), each `width` ps wide
+//!   (default 64 ns), each an inline `(time, seq)` min-heap.
+//! - **L1..L3**: three coarser levels of `2^up_bits` slots each (default
+//!   64). A level-`l` slot spans `2^(l0_bits + (l-1)·up_bits)` L0 buckets,
+//!   so each level covers ×64 the horizon of the one below: ≈ 8.4 ms,
+//!   537 ms, 34 s at the default geometry. Upper slots are plain unsorted
+//!   `Vec`s — events there are not popped directly, they **cascade** down
+//!   when the cursor enters their span.
+//! - **Overflow**: a `(time, seq)` heap for the (rare) residue beyond L3.
+//!
+//! Per-level occupancy bitmaps (`u64` words + `trailing_zeros`) let `seek`
+//! jump straight to the next non-empty bucket instead of probing empty
+//! 64 ns buckets one at a time across a 100 µs control-tick gap.
+//!
+//! # Level placement is *aligned*, not windowed
+//!
+//! An entry's home is decided by comparing absolute bucket numbers at each
+//! level's granularity against the cursor — "does this event fall in the
+//! same level-`l` parent bucket the cursor is in?" — not by a relative
+//! distance test. With shifts `s_l = l0_bits + l·up_bits`:
+//!
+//! - L0 if `b >> s_0 == cursor >> s_0` (slot `b & (2^l0_bits - 1)`),
+//! - level `l` if `b >> s_l == cursor >> s_l` (slot
+//!   `(b >> s_{l-1}) & (2^up_bits - 1)`),
+//! - overflow otherwise.
+//!
+//! Alignment is what makes slot reuse safe: an occupied upper slot is
+//! always *strictly ahead* of the cursor's own slot within the shared
+//! parent bucket (if it were the cursor's slot, the entry would have
+//! matched a finer level), so a slot never holds two rotations at once and
+//! the occupancy bitmaps never wrap — plain ascending bit scans suffice.
+//!
+//! # Seek and cascade
+//!
+//! `seek` first scans the L0 bitmap from the cursor's slot forward; a hit
+//! is the global minimum's bucket (everything in upper levels/overflow is
+//! provably later). Otherwise it takes the earliest candidate among the
+//! upper levels' next occupied slots and the overflow head, jumps the
+//! cursor there, migrates overflow entries that now fall inside the L3
+//! parent bucket, and drains the cursor's current slot at each upper level
+//! top-down — re-placing every entry, which lands it at a finer level (or
+//! L0). The loop repeats until an L0 hit; each jump strictly advances the
+//! cursor, and each cascaded entry only ever moves to finer levels, so the
+//! work per event is bounded by the number of levels.
+//!
+//! # Determinism
+//!
+//! Pop order is exactly ascending `(time, seq)` — byte-identical to
+//! [`BinaryHeapQueue`](super::BinaryHeapQueue) — because (a) pops only ever
+//! happen from L0 bucket heaps, which are `(time, seq)`-ordered, (b) the
+//! seek candidate rule never parks the cursor past a pending event's
+//! bucket, and (c) cascade order cannot leak into pop order: upper slots
+//! are unsorted, but their entries merge into L0 heaps before any pop.
+//! Ties at equal timestamps break by `seq` inside the bucket heap —
+//! insertion order, never wheel internals. `rust/tests/determinism.rs`
+//! fuzzes random long-horizon schedules 3-ways and pins golden scenarios.
+
+use std::collections::BinaryHeap;
+
+use super::{Entry, EventQueue};
+use crate::util::units::{Time, NANOS};
+
+/// Default L0 bucket width: 64 ns, matching the calendar queue — a few TLP
+/// times, a quarter of the minimum shaper refill interval.
+pub const DEFAULT_WIDTH: Time = 64 * NANOS;
+
+/// Default L0 size: 2^11 = 2048 buckets ≈ 131 µs of fine-grained horizon.
+pub const DEFAULT_L0_BITS: u32 = 11;
+
+/// Default upper-level size: 2^6 = 64 slots per level, one `u64` bitmap.
+pub const DEFAULT_UP_BITS: u32 = 6;
+
+/// Number of coarse levels above L0. With the default geometry the top
+/// level spans ≈ 34 s of virtual time; only events beyond that reach the
+/// overflow heap.
+const UP_LEVELS: usize = 3;
+
+/// Hierarchical timer wheel event queue. See the module docs.
+pub struct HierWheel<E> {
+    /// L0 bucket width in picoseconds.
+    width: Time,
+    /// log2 of the L0 bucket count.
+    l0_bits: u32,
+    /// log2 of the per-upper-level slot count (≤ 6: one `u64` bitmap).
+    up_bits: u32,
+    /// L0 buckets: inline `(time, seq)` min-heaps.
+    l0: Vec<BinaryHeap<Entry<E>>>,
+    /// L0 occupancy, one bit per bucket, `u64` words.
+    l0_occ: Vec<u64>,
+    /// Upper levels: unsorted slots, drained wholesale on cascade.
+    up: [Vec<Vec<Entry<E>>>; UP_LEVELS],
+    /// One occupancy word per upper level.
+    up_occ: [u64; UP_LEVELS],
+    /// Absolute L0 bucket number the cursor is parked on (monotone).
+    cursor: u64,
+    /// Events beyond the top level's span, ordered by `(time, seq)`.
+    overflow: BinaryHeap<Entry<E>>,
+    /// Total pending events across all levels and overflow.
+    len: usize,
+}
+
+impl<E> Default for HierWheel<E> {
+    fn default() -> Self {
+        Self::with_geometry(DEFAULT_WIDTH, DEFAULT_L0_BITS, DEFAULT_UP_BITS)
+    }
+}
+
+impl<E> HierWheel<E> {
+    /// A wheel with `2^l0_bits` L0 buckets of `width` ps, topped by three
+    /// levels of `2^up_bits` slots each.
+    pub fn with_geometry(width: Time, l0_bits: u32, up_bits: u32) -> Self {
+        assert!(width > 0, "bucket width must be positive");
+        assert!((1..=20).contains(&l0_bits), "l0_bits out of range");
+        assert!((1..=6).contains(&up_bits), "up_bits must fit a u64 bitmap");
+        assert!(
+            l0_bits + UP_LEVELS as u32 * up_bits <= 62,
+            "total shift must leave headroom in u64 bucket numbers"
+        );
+        let l0_slots = 1usize << l0_bits;
+        let up_slots = 1usize << up_bits;
+        HierWheel {
+            width,
+            l0_bits,
+            up_bits,
+            l0: (0..l0_slots).map(|_| BinaryHeap::new()).collect(),
+            l0_occ: vec![0; l0_slots.div_ceil(64)],
+            up: std::array::from_fn(|_| (0..up_slots).map(|_| Vec::new()).collect()),
+            up_occ: [0; UP_LEVELS],
+            cursor: 0,
+            overflow: BinaryHeap::new(),
+            len: 0,
+        }
+    }
+
+    /// Absolute L0 bucket number of a timestamp.
+    #[inline]
+    fn bucket_of(&self, time: Time) -> u64 {
+        time / self.width
+    }
+
+    /// Bit shift from an L0 bucket number to a level-`l` parent bucket
+    /// number (`l == 0` is the L0 wheel itself).
+    #[inline]
+    fn shift(&self, l: usize) -> u32 {
+        self.l0_bits + l as u32 * self.up_bits
+    }
+
+    #[inline]
+    fn l0_mask(&self) -> u64 {
+        (1u64 << self.l0_bits) - 1
+    }
+
+    #[inline]
+    fn up_mask(&self) -> u64 {
+        (1u64 << self.up_bits) - 1
+    }
+
+    /// Route an entry to its level (or overflow) relative to the cursor.
+    fn place(&mut self, entry: Entry<E>) {
+        // Events for already-passed windows (possible when the clock was
+        // pinned forward by `run_until` and the cursor seeked ahead) join
+        // the cursor bucket; its heap keeps them ahead of later times.
+        let b = self.bucket_of(entry.time).max(self.cursor);
+        if b >> self.shift(0) == self.cursor >> self.shift(0) {
+            let slot = (b & self.l0_mask()) as usize;
+            self.l0[slot].push(entry);
+            self.l0_occ[slot >> 6] |= 1u64 << (slot & 63);
+            return;
+        }
+        for l in 1..=UP_LEVELS {
+            if b >> self.shift(l) == self.cursor >> self.shift(l) {
+                let slot = ((b >> self.shift(l - 1)) & self.up_mask()) as usize;
+                self.up[l - 1][slot].push(entry);
+                self.up_occ[l - 1] |= 1u64 << slot;
+                return;
+            }
+        }
+        self.overflow.push(entry);
+    }
+
+    /// Next occupied L0 bucket at or after the cursor, within the cursor's
+    /// L1 parent bucket (the bitmap covers exactly one L0 rotation, and
+    /// occupancy never wraps behind the cursor — see module docs).
+    fn next_l0(&self) -> Option<u64> {
+        let p = (self.cursor & self.l0_mask()) as usize;
+        let mut word = p >> 6;
+        let mut bits = self.l0_occ[word] & (!0u64 << (p & 63));
+        loop {
+            if bits != 0 {
+                let j = (word << 6) + bits.trailing_zeros() as usize;
+                return Some(self.cursor - p as u64 + j as u64);
+            }
+            word += 1;
+            if word >= self.l0_occ.len() {
+                return None;
+            }
+            bits = self.l0_occ[word];
+        }
+    }
+
+    /// Start bucket (L0 granularity) of level `l`'s next occupied slot
+    /// strictly after the cursor's slot, if any.
+    fn next_up(&self, l: usize) -> Option<u64> {
+        // Level-`l` slots are keyed by bucket numbers at `shift(l-1)`
+        // granularity.
+        let cl = self.cursor >> self.shift(l - 1);
+        let k = (cl & self.up_mask()) as u32;
+        let bits = self.up_occ[l - 1];
+        // Invariant: nothing occupies the cursor's own slot or earlier —
+        // such entries would have matched a finer level when placed.
+        let at_or_behind = 1u64.checked_shl(k + 1).map_or(u64::MAX, |m| m - 1);
+        debug_assert_eq!(bits & at_or_behind, 0, "upper slot at or behind the cursor");
+        let ahead = bits & !at_or_behind;
+        if ahead == 0 {
+            return None;
+        }
+        let j = ahead.trailing_zeros() as u64;
+        Some((cl - k as u64 + j) << self.shift(l - 1))
+    }
+
+    /// Advance the cursor to bucket `w`, pull overflow entries that now
+    /// fall inside the top level's parent bucket, and cascade the cursor's
+    /// current slot at every upper level down to finer levels.
+    fn jump_to(&mut self, w: u64) {
+        debug_assert!(w > self.cursor, "jump must strictly advance");
+        self.cursor = w;
+        let top = self.shift(UP_LEVELS);
+        while let Some(e) = self.overflow.peek() {
+            if self.bucket_of(e.time) >> top != self.cursor >> top {
+                break;
+            }
+            let e = self.overflow.pop().expect("peeked entry");
+            self.place(e);
+        }
+        // Top-down: re-placing an L3 entry may land in the cursor's L1/L2
+        // slot only if it belongs to a *later* slot there (a same-slot hit
+        // at a finer granularity would have matched that finer level), so
+        // lower drains never see freshly re-placed work in their own slot.
+        for l in (1..=UP_LEVELS).rev() {
+            let slot = ((self.cursor >> self.shift(l - 1)) & self.up_mask()) as usize;
+            if self.up_occ[l - 1] & (1u64 << slot) != 0 {
+                self.up_occ[l - 1] &= !(1u64 << slot);
+                let entries = std::mem::take(&mut self.up[l - 1][slot]);
+                for e in entries {
+                    self.place(e);
+                }
+            }
+        }
+    }
+
+    /// Park the cursor on the L0 bucket holding the global minimum event,
+    /// cascading coarse levels as needed. Returns that minimum's time.
+    fn seek(&mut self) -> Option<Time> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            if let Some(b) = self.next_l0() {
+                self.cursor = b;
+                let slot = (b & self.l0_mask()) as usize;
+                return Some(self.l0[slot].peek().expect("occupancy bit set").time);
+            }
+            // L0 (hence the cursor's entire L1 parent bucket) is empty:
+            // the earliest pending event starts some coarser slot or sits
+            // in overflow. Jump to the earliest candidate bucket.
+            let mut winner = u64::MAX;
+            for l in 1..=UP_LEVELS {
+                if let Some(c) = self.next_up(l) {
+                    winner = winner.min(c);
+                }
+            }
+            if let Some(e) = self.overflow.peek() {
+                winner = winner.min(self.bucket_of(e.time));
+            }
+            debug_assert_ne!(winner, u64::MAX, "len > 0 but no candidate bucket");
+            self.jump_to(winner);
+        }
+    }
+}
+
+impl<E> EventQueue<E> for HierWheel<E> {
+    fn push(&mut self, time: Time, seq: u64, ev: E) {
+        self.place(Entry { time, seq, ev });
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<(Time, u64, E)> {
+        self.seek()?;
+        let slot = (self.cursor & self.l0_mask()) as usize;
+        let e = self.l0[slot].pop().expect("seek parked on non-empty bucket");
+        if self.l0[slot].is_empty() {
+            self.l0_occ[slot >> 6] &= !(1u64 << (slot & 63));
+        }
+        self.len -= 1;
+        Some((e.time, e.seq, e.ev))
+    }
+
+    fn next_time(&mut self) -> Option<Time> {
+        self.seek()
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn name(&self) -> &'static str {
+        "hier_wheel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(q: &mut HierWheel<u32>) -> Vec<(Time, u64)> {
+        let mut out = Vec::new();
+        while let Some((t, s, _)) = q.pop() {
+            out.push((t, s));
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        // width 100, 4 L0 buckets, 4-slot upper levels: L0 spans 400 ps,
+        // the top level 25_600 ps.
+        let mut q: HierWheel<u32> = HierWheel::with_geometry(100, 2, 2);
+        q.push(500, 2, 0);
+        q.push(500, 1, 0);
+        q.push(10, 3, 0);
+        q.push(5_000, 0, 0); // upper level
+        q.push(1_000_000, 4, 0); // beyond the top span → overflow
+        assert_eq!(
+            drain(&mut q),
+            vec![(10, 3), (500, 1), (500, 2), (5_000, 0), (1_000_000, 4)]
+        );
+    }
+
+    #[test]
+    fn cascade_reuses_slots_without_mixing_windows() {
+        // Span many full L0 rotations of a tiny wheel; every event maps to
+        // a reused L0 slot and most arrive via an upper-level cascade.
+        let mut q: HierWheel<u32> = HierWheel::with_geometry(10, 2, 2);
+        let mut seq = 0;
+        let mut expect = Vec::new();
+        for rot in 0..50u64 {
+            for off in [3u64, 7, 9] {
+                let t = rot * 40 + off; // 40 ps = one full L0 span
+                q.push(t, seq, 0);
+                expect.push((t, seq));
+                seq += 1;
+            }
+        }
+        expect.sort();
+        assert_eq!(drain(&mut q), expect);
+    }
+
+    #[test]
+    fn deep_event_cascades_through_every_level() {
+        // One event per level: L0, L1, L2, L3, overflow. Each must step
+        // down through the hierarchy and pop in time order.
+        let mut q: HierWheel<u32> = HierWheel::with_geometry(10, 2, 2);
+        // L0 spans 40 ps; L1 ends at 160; L2 at 640; L3 at 2_560.
+        for (i, t) in [15u64, 100, 500, 2_000, 50_000].iter().enumerate() {
+            q.push(*t, i as u64, 0);
+        }
+        assert_eq!(
+            drain(&mut q),
+            vec![(15, 0), (100, 1), (500, 2), (2_000, 3), (50_000, 4)]
+        );
+    }
+
+    #[test]
+    fn interleaved_push_pop_respects_monotone_clock() {
+        // Mimic the simulator: after popping time t, pushes never go below
+        // t. Events pushed for the current (partially drained) bucket must
+        // still come out in order; a push at a time whose window already
+        // passed clamps into the cursor bucket (straggler clamping).
+        let mut q: HierWheel<u32> = HierWheel::with_geometry(100, 2, 2);
+        q.push(50, 0, 0);
+        q.push(120, 1, 0);
+        assert_eq!(q.pop(), Some((50, 0, 0)));
+        q.push(60, 2, 0);
+        q.push(130, 3, 0);
+        q.push(10_000_000, 4, 0); // far beyond the top span → overflow
+        assert_eq!(q.pop(), Some((60, 2, 0)));
+        assert_eq!(q.pop(), Some((120, 1, 0)));
+        assert_eq!(q.pop(), Some((130, 3, 0)));
+        assert_eq!(q.next_time(), Some(10_000_000));
+        q.push(9_999_999, 5, 0);
+        assert_eq!(q.pop(), Some((9_999_999, 5, 0)));
+        assert_eq!(q.pop(), Some((10_000_000, 4, 0)));
+        assert!(q.pop().is_none());
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn overflow_migrates_in_order_across_horizon() {
+        let mut q: HierWheel<u32> = HierWheel::with_geometry(10, 2, 2);
+        // Mix of upper-level and overflow events (top span = 2_560 ps),
+        // shuffled.
+        for (i, t) in [900u64, 410, 5_555, 12_000, 402, 90].iter().enumerate() {
+            q.push(*t, i as u64, 0);
+        }
+        let times: Vec<Time> = drain(&mut q).iter().map(|&(t, _)| t).collect();
+        assert_eq!(times, vec![90, 402, 410, 900, 5_555, 12_000]);
+    }
+
+    #[test]
+    fn ties_at_cascade_edges_keep_fifo_order() {
+        let mut q: HierWheel<u32> = HierWheel::with_geometry(50, 2, 2);
+        let edge = 50 * 4 * 3; // an L0 rollover boundary, reached via L1
+        for i in 0..32u64 {
+            q.push(edge, i, i as u32);
+        }
+        let mut seqs = Vec::new();
+        while let Some((t, s, _)) = q.pop() {
+            assert_eq!(t, edge);
+            seqs.push(s);
+        }
+        assert_eq!(seqs, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn len_tracks_all_levels() {
+        let mut q: HierWheel<u32> = HierWheel::with_geometry(10, 2, 2);
+        q.push(5, 0, 0); // L0
+        q.push(100, 1, 0); // L1
+        q.push(2_000, 2, 0); // L3
+        q.push(1_000_000, 3, 0); // overflow
+        assert_eq!(q.len(), 4);
+        let _ = q.pop();
+        assert_eq!(q.len(), 3);
+        while q.pop().is_some() {}
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn default_geometry_matches_calendar_scale() {
+        // The default L0 mirrors the calendar queue's wheel exactly; the
+        // upper levels extend the structured horizon to ~34 s.
+        let q: HierWheel<u32> = HierWheel::default();
+        assert_eq!(q.width, 64 * NANOS);
+        assert_eq!(q.l0.len(), 2048);
+        assert_eq!(q.shift(UP_LEVELS), 29);
+    }
+}

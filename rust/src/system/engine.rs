@@ -1611,7 +1611,7 @@ mod tests {
     use super::*;
     use crate::accel::AccelModel;
     use crate::flow::{FlowSpec, TrafficPattern};
-    use crate::sim::CalendarQueue;
+    use crate::sim::{CalendarQueue, HierWheel};
     use crate::storage::SsdConfig;
     use crate::util::units::{Rate, MILLIS};
 
@@ -1685,6 +1685,17 @@ mod tests {
         assert_eq!(heap.canonical(), cal.canonical());
         assert_eq!(heap.events, cal.events);
         assert_eq!(heap.peak_queue_depth, cal.peak_queue_depth);
+    }
+
+    #[test]
+    fn hier_wheel_produces_identical_report() {
+        let spec = two_flow_spec(Mode::Arcus, 0.5, 0.4);
+        let heap = run(&spec);
+        let wheel = run_with::<HierWheel<EngineEvent>>(&spec);
+        assert_eq!(wheel.queue, "hier_wheel");
+        assert_eq!(heap.canonical(), wheel.canonical());
+        assert_eq!(heap.events, wheel.events);
+        assert_eq!(heap.peak_queue_depth, wheel.peak_queue_depth);
     }
 
     #[test]

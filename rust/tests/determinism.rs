@@ -5,17 +5,21 @@
 //! tests pin it at two levels:
 //!
 //! 1. **Queue level**: property-style random schedules (seeded, via the
-//!    in-tree testkit RNG) driven through `BinaryHeapQueue` and
-//!    `CalendarQueue` side by side, including schedules engineered to cross
-//!    many timing-wheel rollover boundaries, must pop identically.
-//! 2. **System level**: a fixed two-tenant scenario (the *golden* scenario,
-//!    with mid-run renegotiation so control-plane, reshape, and dataplane
-//!    events all interleave) run end-to-end on both queues must produce
-//!    byte-identical canonical `SystemReport`s.
+//!    in-tree testkit RNG) driven through `BinaryHeapQueue`,
+//!    `CalendarQueue`, and `HierWheel` side by side — including schedules
+//!    engineered to cross many timing-wheel rollover boundaries and
+//!    long-horizon schedules that park events far past the wheels' L0
+//!    span (fault windows, deep `RetryAt` wakeups) — must pop identically.
+//! 2. **System level**: fixed scenarios (the *golden* renegotiating
+//!    scenario, plus a fault-heavy one whose `FaultStart`/`FaultEnd`
+//!    events sit milliseconds past the 131 µs L0 horizon) run end-to-end
+//!    on all three queues must produce byte-identical canonical
+//!    `SystemReport`s.
 
 use arcus::accel::AccelModel;
+use arcus::faults::{FaultKind, FaultSpec};
 use arcus::flow::{FlowSpec, Path, Slo, TrafficPattern};
-use arcus::sim::{BinaryHeapQueue, CalendarQueue, EventQueue};
+use arcus::sim::{BinaryHeapQueue, CalendarQueue, EventQueue, HierWheel};
 use arcus::system::{run_with, EngineEvent, ExperimentSpec, LifecycleEvent, Mode};
 use arcus::util::units::{Rate, Time, MILLIS, NANOS};
 use arcus::util::Rng;
@@ -24,25 +28,38 @@ use arcus::util::Rng;
 // Queue-level properties
 // ---------------------------------------------------------------------------
 
-/// Drive the same randomized push/pop schedule through both queues and
-/// assert identical pop sequences. Pushes respect the simulator's clock
-/// monotonicity contract (never below the last popped time).
-fn drive_schedule(seed: u64, horizon_ns: u64, n_events: usize, pop_burst: usize) {
+/// Drive the same randomized push/pop schedule through all three queues
+/// and assert identical pop sequences. Pushes respect the simulator's
+/// clock monotonicity contract (never below the last popped time). When
+/// `far_events` is set, a few percent of pushes land milliseconds — and a
+/// few far beyond the hierarchical wheel's top span, seconds — ahead,
+/// exercising overflow migration and multi-level cascades.
+fn drive_schedule(seed: u64, horizon_ns: u64, n_events: usize, pop_burst: usize, far_events: bool) {
     let mut heap: BinaryHeapQueue<u32> = BinaryHeapQueue::default();
     let mut cal: CalendarQueue<u32> = CalendarQueue::default();
+    let mut wheel: HierWheel<u32> = HierWheel::default();
     let mut rng = Rng::new(seed);
     let mut seq = 0u64;
     let mut now: Time = 0;
     let mut pushed = 0usize;
-    let mut heap_out = Vec::new();
-    let mut cal_out = Vec::new();
+    let mut out = Vec::new();
     while pushed < n_events || !heap.is_empty() {
         // Push a burst of events at or after `now`.
         let burst = rng.range_u64(1, 8) as usize;
         for _ in 0..burst.min(n_events - pushed) {
-            let t = now + rng.range_u64(0, horizon_ns) * NANOS;
+            let roll = rng.range_u64(0, 99);
+            let t = if far_events && roll < 5 {
+                // Fault-window / deep-retry scale: 1–50 ms out.
+                now + rng.range_u64(1, 50) * MILLIS
+            } else if far_events && roll < 7 {
+                // Beyond even the wheel's ~34 s top span: overflow.
+                now + rng.range_u64(1, 100) * 1_000 * MILLIS
+            } else {
+                now + rng.range_u64(0, horizon_ns) * NANOS
+            };
             heap.push(t, seq, seq as u32);
             cal.push(t, seq, seq as u32);
+            wheel.push(t, seq, seq as u32);
             seq += 1;
             pushed += 1;
         }
@@ -50,24 +67,23 @@ fn drive_schedule(seed: u64, horizon_ns: u64, n_events: usize, pop_burst: usize)
         for _ in 0..pop_burst {
             let a = heap.pop();
             let b = cal.pop();
-            assert_eq!(a, b, "pop divergence at seed {seed}");
+            let c = wheel.pop();
+            assert_eq!(a, b, "heap/calendar divergence at seed {seed}");
+            assert_eq!(a, c, "heap/wheel divergence at seed {seed}");
             match a {
-                Some((t, s, v)) => {
+                Some((t, s, _)) => {
                     assert!(t >= now, "time went backwards");
                     now = t;
-                    heap_out.push((t, s));
-                    cal_out.push((t, s));
-                    let _ = v;
+                    out.push((t, s));
                 }
                 None => break,
             }
         }
     }
-    assert_eq!(heap_out, cal_out);
     // The combined sequence is sorted by (time, seq).
-    let mut sorted = heap_out.clone();
+    let mut sorted = out.clone();
     sorted.sort();
-    assert_eq!(heap_out, sorted, "pop order is not (time, seq) at seed {seed}");
+    assert_eq!(out, sorted, "pop order is not (time, seq) at seed {seed}");
 }
 
 #[test]
@@ -75,7 +91,7 @@ fn queues_agree_on_random_schedules() {
     for seed in [1u64, 7, 42, 1337, 0xA5C5] {
         // Horizon well beyond the calendar's 131 µs wheel span: exercises
         // overflow migration alongside dense in-wheel traffic.
-        drive_schedule(seed, 500_000, 4_000, 3);
+        drive_schedule(seed, 500_000, 4_000, 3, false);
     }
 }
 
@@ -84,7 +100,18 @@ fn queues_agree_on_dense_near_future_schedules() {
     for seed in [3u64, 99, 2024] {
         // Everything lands inside one wheel rotation: the engine's dense
         // phase (TLP completions + shaper wakeups tens of ns apart).
-        drive_schedule(seed, 2, 4_000, 2);
+        drive_schedule(seed, 2, 4_000, 2, false);
+    }
+}
+
+#[test]
+fn queues_agree_on_long_horizon_chaos_schedules() {
+    // The chaos shape: mostly dense near-future traffic with a sparse
+    // long-horizon tail (fault windows ms out, extreme retries seconds
+    // out). This is exactly where the flat calendar's single overflow
+    // heap degrades and the hierarchical wheel's upper levels engage.
+    for seed in [11u64, 555, 4096, 0xBEEF] {
+        drive_schedule(seed, 200_000, 3_000, 2, true);
     }
 }
 
@@ -118,22 +145,98 @@ fn calendar_ordering_survives_wheel_rollover_boundaries() {
 }
 
 #[test]
+fn wheel_ordering_survives_cascade_and_rollover_boundaries() {
+    // The hierarchical analogue: events scrambled around multiples of the
+    // L0 span of a tiny wheel, so most arrive via upper-level cascades and
+    // every L0 slot is reused dozens of times.
+    let mut wheel: HierWheel<u32> = HierWheel::with_geometry(100, 3, 2);
+    let span = 100 * 8; // L0 span: 8 buckets × 100 ps
+    let mut rng = Rng::new(5);
+    let mut expect = Vec::new();
+    let mut seq = 0u64;
+    for rot in 0..64u64 {
+        for _ in 0..4 {
+            let offs = [span * rot, span * rot + 1, span * rot + 57];
+            let t = offs[rng.range_u64(0, 2) as usize];
+            wheel.push(t, seq, seq as u32);
+            expect.push((t, seq));
+            seq += 1;
+        }
+    }
+    expect.sort();
+    let mut got = Vec::new();
+    while let Some((t, s, _)) = wheel.pop() {
+        got.push((t, s));
+    }
+    assert_eq!(got, expect);
+}
+
+#[test]
+fn wheel_cascades_preserve_order_under_interleaved_pops() {
+    // Push clusters at every level of a tiny hierarchy while draining, so
+    // cascades happen with the cursor mid-rotation (the hard case: slot
+    // reuse across rotations must not mix windows). Reference: a heap.
+    let mut wheel: HierWheel<u32> = HierWheel::with_geometry(10, 2, 2);
+    let mut heap: BinaryHeapQueue<u32> = BinaryHeapQueue::default();
+    let mut rng = Rng::new(77);
+    let mut now: Time = 0;
+    let mut seq = 0u64;
+    for _ in 0..400 {
+        // Geometry spans: L0 ends at 40 ps, L1 160, L2 640, L3 2_560.
+        let t = now
+            + match rng.range_u64(0, 3) {
+                0 => rng.range_u64(0, 39),          // L0
+                1 => rng.range_u64(40, 639),        // L1/L2
+                2 => rng.range_u64(640, 2_559),     // L3
+                _ => rng.range_u64(2_560, 100_000), // overflow
+            };
+        wheel.push(t, seq, seq as u32);
+        heap.push(t, seq, seq as u32);
+        seq += 1;
+        if rng.range_u64(0, 1) == 0 {
+            let a = heap.pop();
+            let b = wheel.pop();
+            assert_eq!(a, b);
+            if let Some((t, _, _)) = a {
+                now = t;
+            }
+        }
+    }
+    loop {
+        let a = heap.pop();
+        let b = wheel.pop();
+        assert_eq!(a, b);
+        if a.is_none() {
+            break;
+        }
+    }
+}
+
+#[test]
 fn ties_at_wheel_edges_keep_fifo_order() {
     let mut cal: CalendarQueue<u32> = CalendarQueue::with_geometry(50, 4);
+    let mut wheel: HierWheel<u32> = HierWheel::with_geometry(50, 2, 2);
     let edge = 50 * 4 * 3; // a bucket-0 boundary after three rotations
     for i in 0..32u64 {
         cal.push(edge, i, i as u32);
+        wheel.push(edge, i, i as u32);
     }
-    let mut seqs = Vec::new();
+    let mut cal_seqs = Vec::new();
     while let Some((t, s, _)) = cal.pop() {
         assert_eq!(t, edge);
-        seqs.push(s);
+        cal_seqs.push(s);
     }
-    assert_eq!(seqs, (0..32).collect::<Vec<_>>());
+    let mut wheel_seqs = Vec::new();
+    while let Some((t, s, _)) = wheel.pop() {
+        assert_eq!(t, edge);
+        wheel_seqs.push(s);
+    }
+    assert_eq!(cal_seqs, (0..32).collect::<Vec<_>>());
+    assert_eq!(wheel_seqs, (0..32).collect::<Vec<_>>());
 }
 
 // ---------------------------------------------------------------------------
-// System-level golden scenario
+// System-level golden scenarios
 // ---------------------------------------------------------------------------
 
 /// The golden scenario: two Arcus tenants on one IPSec engine, both
@@ -171,23 +274,80 @@ fn golden_spec() -> ExperimentSpec {
         .with_trace()
 }
 
-#[test]
-fn golden_scenario_reports_byte_identical_across_queues() {
-    let spec = golden_spec();
-    let heap = run_with::<BinaryHeapQueue<EngineEvent>>(&spec);
-    let cal = run_with::<CalendarQueue<EngineEvent>>(&spec);
+/// The fault-heavy golden scenario: the fault windows sit milliseconds
+/// out, so at the moment each `FaultStart`/`FaultEnd` is scheduled it lies
+/// far past the 131 µs L0 horizon of both wheel disciplines — in the
+/// calendar's overflow heap and in the hierarchical wheel's upper levels
+/// (the slowdown window is ~23 L0 spans deep, the outage ~46).
+fn golden_fault_heavy_spec() -> ExperimentSpec {
+    let line = Rate::gbps(32.0);
+    let flows = vec![
+        FlowSpec::new(
+            0,
+            0,
+            Path::FunctionCall,
+            TrafficPattern::fixed(1500, 0.5, line),
+            Slo::gbps(9.0),
+            0,
+        ),
+        FlowSpec::new(
+            1,
+            1,
+            Path::FunctionCall,
+            TrafficPattern::fixed(1500, 0.4, line),
+            Slo::gbps(8.0),
+            0,
+        ),
+    ];
+    ExperimentSpec::new(Mode::Arcus, vec![AccelModel::ipsec_32g()], flows)
+        .with_duration(10 * MILLIS)
+        .with_warmup(MILLIS)
+        .with_fault(FaultSpec::new(
+            FaultKind::AccelSlowdown {
+                unit: 0,
+                factor: 0.5,
+            },
+            3 * MILLIS,
+            6 * MILLIS,
+        ))
+        .with_fault(FaultSpec::new(FaultKind::ControlOutage, 6 * MILLIS, 8 * MILLIS))
+        .with_trace()
+}
+
+fn assert_three_way_identical(spec: &ExperimentSpec, label: &str) {
+    let heap = run_with::<BinaryHeapQueue<EngineEvent>>(spec);
+    let cal = run_with::<CalendarQueue<EngineEvent>>(spec);
+    let wheel = run_with::<HierWheel<EngineEvent>>(spec);
     assert_eq!(heap.queue, "binary_heap");
     assert_eq!(cal.queue, "calendar");
+    assert_eq!(wheel.queue, "hier_wheel");
     assert_eq!(
         heap.canonical(),
         cal.canonical(),
-        "SystemReports diverge between queue disciplines"
+        "{label}: SystemReports diverge between heap and calendar"
+    );
+    assert_eq!(
+        heap.canonical(),
+        wheel.canonical(),
+        "{label}: SystemReports diverge between heap and hierarchical wheel"
     );
     // The canonical form covers events + per-flow outcomes; spot-check the
     // perf counters match too (identical event sequences executed).
     assert_eq!(heap.events, cal.events);
+    assert_eq!(heap.events, wheel.events);
     assert_eq!(heap.peak_queue_depth, cal.peak_queue_depth);
-    assert!(heap.events > 100_000, "golden run too small: {}", heap.events);
+    assert_eq!(heap.peak_queue_depth, wheel.peak_queue_depth);
+    assert!(heap.events > 100_000, "{label} run too small: {}", heap.events);
+}
+
+#[test]
+fn golden_scenario_reports_byte_identical_across_queues() {
+    assert_three_way_identical(&golden_spec(), "golden");
+}
+
+#[test]
+fn golden_fault_heavy_scenario_byte_identical_across_queues() {
+    assert_three_way_identical(&golden_fault_heavy_spec(), "fault-heavy");
 }
 
 #[test]
@@ -196,4 +356,7 @@ fn golden_scenario_is_stable_across_repeat_runs() {
     let a = run_with::<CalendarQueue<EngineEvent>>(&spec);
     let b = run_with::<CalendarQueue<EngineEvent>>(&spec);
     assert_eq!(a.canonical(), b.canonical());
+    let c = run_with::<HierWheel<EngineEvent>>(&spec);
+    let d = run_with::<HierWheel<EngineEvent>>(&spec);
+    assert_eq!(c.canonical(), d.canonical());
 }

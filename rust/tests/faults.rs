@@ -23,7 +23,7 @@ use arcus::faults::{FaultKind, FaultSpec};
 use arcus::flow::{FlowKind, FlowSpec, Path, Slo, TrafficPattern};
 use arcus::pcie::fabric::FabricConfig;
 use arcus::shaping::{ShapeMode, Shaper, TokenBucket, Verdict};
-use arcus::sim::{BinaryHeapQueue, CalendarQueue};
+use arcus::sim::{BinaryHeapQueue, CalendarQueue, HierWheel};
 use arcus::system::{run_with, EngineEvent, ExperimentSpec, Mode};
 use arcus::testkit::{forall_cfg, Config, OneOf, TripleOf, U64Range, VecOf};
 use arcus::util::units::{Rate, Time, MILLIS, SECONDS};
@@ -69,15 +69,24 @@ fn golden_fault_scenario_byte_identical_across_queues() {
     let spec = golden_fault_spec();
     let heap = run_with::<BinaryHeapQueue<EngineEvent>>(&spec);
     let cal = run_with::<CalendarQueue<EngineEvent>>(&spec);
+    let wheel = run_with::<HierWheel<EngineEvent>>(&spec);
     assert_eq!(heap.queue, "binary_heap");
     assert_eq!(cal.queue, "calendar");
+    assert_eq!(wheel.queue, "hier_wheel");
     assert_eq!(
         heap.canonical(),
         cal.canonical(),
         "faulted SystemReports diverge between queue disciplines"
     );
+    assert_eq!(
+        heap.canonical(),
+        wheel.canonical(),
+        "faulted SystemReports diverge on the hierarchical wheel"
+    );
     assert_eq!(heap.events, cal.events);
+    assert_eq!(heap.events, wheel.events);
     assert_eq!(heap.peak_queue_depth, cal.peak_queue_depth);
+    assert_eq!(heap.peak_queue_depth, wheel.peak_queue_depth);
     assert!(heap.events > 100_000, "golden run too small: {}", heap.events);
 }
 

@@ -9,7 +9,7 @@
 //! 2. **Determinism at scale**: a multi-tenant hierarchical scenario —
 //!    tree ticks, aggregate installs, renegotiation directives, and
 //!    dataplane events all interleaving — produces byte-identical
-//!    canonical `SystemReport`s on both event-queue disciplines.
+//!    canonical `SystemReport`s on all three event-queue disciplines.
 //! 3. **Hierarchy semantics**: min-guarantees hold under full contention,
 //!    idle sibling budget is borrowed (work conservation), and a scaled
 //!    sweep cell (hundreds of flows under a handful of tenant aggregates)
