@@ -12,6 +12,9 @@
 //! shared_port = false
 //! hierarchy = false         # hierarchical shaper tree (Arcus mode; see
 //!                           # crate::shaping::hierarchy)
+//! obs_retention = 256       # samples kept per observability series ring
+//!                           # (crate::obs; 0 disables series sampling)
+//! obs_sample_every = 1      # sample the series every Nth control tick
 //!
 //! [[accels]]
 //! kind = "ipsec"            # or "synthetic" with peak_gbps = 50.0
@@ -102,6 +105,15 @@ pub fn spec_from_document(doc: &Document) -> Result<ExperimentSpec> {
     }
     spec.control_period = (doc.float_or("experiment", "control_period_us", 100.0) * MICROS as f64) as u64;
     spec.queue_cap = doc.int_or("experiment", "queue_cap", 4096) as usize;
+    let retention = doc.int_or("experiment", "obs_retention", 256);
+    let sample_every = doc.int_or("experiment", "obs_sample_every", 1);
+    if retention < 0 || sample_every < 1 {
+        bail!(
+            "obs_retention must be >= 0 and obs_sample_every >= 1 \
+             (got {retention}/{sample_every})"
+        );
+    }
+    spec = spec.with_obs(retention as usize, sample_every as u64);
     for (i, t) in doc.array_of("lifecycle").iter().enumerate() {
         spec.lifecycle
             .push(lifecycle_from_table(i, t, spec.flows.len(), spec.duration)?);
@@ -330,6 +342,21 @@ accel = 1
         assert_eq!(spec.flows[0].slo, Slo::gbps(10.0));
         assert!(matches!(spec.flows[1].slo, Slo::Latency { .. }));
         assert_eq!(spec.flows[1].path, Path::InlineNicRx);
+        // Observability knobs default on.
+        assert_eq!(spec.obs_retention, 256);
+        assert_eq!(spec.obs_sample_every, 1);
+    }
+
+    #[test]
+    fn parses_and_validates_obs_knobs() {
+        let base = "[[accels]]\nkind = \"ipsec\"\n[[flows]]\nvm = 0\nslo_gbps = 8.0\n";
+        let text = format!("[experiment]\nobs_retention = 64\nobs_sample_every = 4\n{base}");
+        let spec = spec_from_document(&Document::from_str(&text).unwrap()).unwrap();
+        assert_eq!(spec.obs_retention, 64);
+        assert_eq!(spec.obs_sample_every, 4);
+        let text = format!("[experiment]\nobs_sample_every = 0\n{base}");
+        let err = spec_from_document(&Document::from_str(&text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("obs_sample_every"), "{err:#}");
     }
 
     #[test]

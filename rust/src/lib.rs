@@ -13,7 +13,9 @@
 //!   planning, online re-shaping; §4.3's Algorithm 1), a cycle-granular
 //!   host–FPGA simulator substrate ([`sim`]: typed zero-allocation DES core;
 //!   PCIe, DMA, accelerators, NVMe storage, NICs), all §5.1 baselines, a
-//!   fault/adversary injection subsystem ([`faults`]), a parallel
+//!   fault/adversary injection subsystem ([`faults`]), a streaming
+//!   observability plane ([`obs`]: tick-indexed series, mergeable
+//!   histograms, Prometheus export, `arcus top`), a parallel
 //!   scenario-sweep engine ([`sweep`]) that expands experiment templates
 //!   over traffic/tenant/mode/churn/fault/scale axes, and a wall-clock
 //!   serving runtime that executes AOT-compiled accelerator kernels via
@@ -47,6 +49,8 @@ pub mod faults;
 pub mod flow;
 pub mod metrics;
 pub mod nic;
+#[warn(missing_docs)]
+pub mod obs;
 pub mod pcie;
 pub mod perf;
 pub mod runtime;

@@ -7,6 +7,7 @@
 //!   churn                          tenant-churn demo: mid-run admission/rejection
 //!   chaos                          fault-injection demo: degradation, adversaries, recovery
 //!   bench [flags]                  DES perf presets → BENCH_<name>.json (+ CI floor gate)
+//!   top <series.bin> [--limit N]   worst flows/tenants from a --series-out dump
 //!   profile [accel ...]            print the offline Capacity(t, X, N) table
 //!   serve [--artifacts DIR]        start the PJRT serving runtime + demo load
 //!   modes                          list management modes and accelerators
@@ -14,6 +15,14 @@
 //! (Hand-rolled argument handling: `clap` is not in the offline registry.)
 
 use std::path::PathBuf;
+
+// The allocation-count regression gate (`bench --floor` with the
+// `bench-alloc` feature) needs the counting allocator installed for the
+// whole process; it forwards to the system allocator with one relaxed
+// atomic increment per alloc/realloc.
+#[cfg(feature = "bench-alloc")]
+#[global_allocator]
+static GLOBAL: arcus::perf::alloc::CountingAlloc = arcus::perf::alloc::CountingAlloc;
 
 use arcus::accel::AccelModel;
 use arcus::config::{spec_from_document, Document};
@@ -37,6 +46,7 @@ fn main() {
         Some("churn") => churn(),
         Some("chaos") => chaos(),
         Some("bench") => bench(&args[1..]),
+        Some("top") => top(&args[1..]),
         Some("profile") => profile(&args[1..]),
         Some("serve") => serve(&args[1..]),
         Some("modes") => modes(),
@@ -57,13 +67,16 @@ fn usage() {
     println!(
         "arcus — SLO management for accelerators with traffic shaping\n\n\
          USAGE:\n  arcus quickstart\n  arcus simulate <config.toml> [more.toml ...] [--faults] [--expect-flows N]\n  \
+             [--prom-out FILE] [--series-out FILE]\n  \
          arcus sweep [--modes a,b] [--tenants 1,2,4] [--mixes mtu,bulk] [--bursts paced,poisson]\n  \
              [--tightness 0.5,0.8] [--churn static,arrivals] [--faults healthy,accel_dip,rogue]\n  \
              [--flows flat,16,256,4k,10k] [--accels ipsec] [--seeds 1,2]\n  \
              [--duration-ms N] [--load F] [--threads N] [--scenarios] [--expect-flows N]\n  \
+             [--prom-out FILE]\n  \
          arcus churn\n  arcus chaos\n  \
          arcus bench [--quick] [--preset small|medium|large|xlarge|all] [--queue heap|calendar|wheel|both|all]\n  \
              [--out FILE] [--floor perf_floor.toml] [--no-files] [--verify]\n  \
+         arcus top <series.bin> [--limit N]\n  \
          arcus profile [accel ...]\n  arcus serve [--artifacts DIR]\n  arcus modes\n\n\
          Experiment configs: see rust/configs/*.toml (churn.toml shows the\n\
          flow-lifecycle schedule, hierarchy.toml the shaper tree). Paper\n\
@@ -74,7 +87,11 @@ fn usage() {
          events/sec floor when --floor is given (CI perf-smoke; per-preset\n\
          keys like min_events_per_sec_xlarge override the shared floor), and\n\
          with --verify asserts byte-identical canonical reports across the\n\
-         event-queue disciplines (the 10k-flow determinism gate)."
+         event-queue disciplines (the 10k-flow determinism gate).\n\
+         `--prom-out` writes Prometheus text exposition of the run(s);\n\
+         `simulate --series-out` dumps the sampled observability series\n\
+         (crate::obs) for `arcus top`, which ranks the worst flows and\n\
+         tenants by SLO attainment and window p99."
     );
 }
 
@@ -126,6 +143,8 @@ fn simulate(args: &[String]) -> i32 {
     // per-era fault table for configs carrying a [[faults]] plan.
     let mut expect_flows: Option<usize> = None;
     let mut show_faults = false;
+    let mut prom_out: Option<PathBuf> = None;
+    let mut series_out: Option<PathBuf> = None;
     let mut paths: Vec<&String> = Vec::new();
     let mut i = 0;
     while i < args.len() {
@@ -138,6 +157,17 @@ fn simulate(args: &[String]) -> i32 {
                 }
             }
             i += 2;
+        } else if args[i] == "--prom-out" || args[i] == "--series-out" {
+            let Some(v) = args.get(i + 1) else {
+                eprintln!("{} needs a file path", args[i]);
+                return 2;
+            };
+            if args[i] == "--prom-out" {
+                prom_out = Some(PathBuf::from(v));
+            } else {
+                series_out = Some(PathBuf::from(v));
+            }
+            i += 2;
         } else if args[i] == "--faults" {
             show_faults = true;
             i += 1;
@@ -148,12 +178,16 @@ fn simulate(args: &[String]) -> i32 {
     }
     if paths.is_empty() {
         eprintln!(
-            "usage: arcus simulate <config.toml> [more.toml ...] [--faults] [--expect-flows N]"
+            "usage: arcus simulate <config.toml> [more.toml ...] [--faults] [--expect-flows N] \
+             [--prom-out FILE] [--series-out FILE]"
         );
         return 2;
     }
     let mut faulted_runs = 0usize;
     let mut total_flows = 0usize;
+    // Reports are kept only when an exporter needs them after the loop.
+    let keep_reports = prom_out.is_some() || series_out.is_some();
+    let mut reports: Vec<(String, arcus::system::SystemReport)> = Vec::new();
     for p in paths {
         let path = PathBuf::from(p);
         let doc = match Document::from_file(&path) {
@@ -197,6 +231,13 @@ fn simulate(args: &[String]) -> i32 {
             }
         }
         println!();
+        if keep_reports {
+            let label = path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| path.display().to_string());
+            reports.push((label, report));
+        }
     }
     if let Some(n) = expect_flows {
         if total_flows < n {
@@ -208,7 +249,79 @@ fn simulate(args: &[String]) -> i32 {
         eprintln!("--faults was given but no config carried a [[faults]] plan");
         return 1;
     }
+    if let Some(path) = prom_out {
+        let labeled: Vec<(String, &arcus::system::SystemReport)> =
+            reports.iter().map(|(l, r)| (l.clone(), r)).collect();
+        if let Err(e) = std::fs::write(&path, arcus::obs::prom::render(&labeled)) {
+            eprintln!("writing {}: {e}", path.display());
+            return 1;
+        }
+        eprintln!("wrote {}", path.display());
+    }
+    if let Some(path) = series_out {
+        // The dump carries one run's series; with several configs the last
+        // one wins (series dumps are a per-run drill-down, not a fleet view).
+        let Some((label, report)) = reports.last() else {
+            eprintln!("--series-out: no run produced a report");
+            return 1;
+        };
+        if reports.len() > 1 {
+            eprintln!("--series-out: multiple configs given; dumping the last ({label})");
+        }
+        if let Err(e) = std::fs::write(&path, arcus::obs::dump::write(&report.obs)) {
+            eprintln!("writing {}: {e}", path.display());
+            return 1;
+        }
+        eprintln!("wrote {}", path.display());
+    }
     0
+}
+
+/// `arcus top`: decode a `simulate --series-out` dump and print the worst
+/// flows / tenants by SLO attainment and window p99.
+fn top(args: &[String]) -> i32 {
+    let mut limit = 10usize;
+    let mut file: Option<PathBuf> = None;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--limit" {
+            match args.get(i + 1).and_then(|v| v.parse::<usize>().ok()) {
+                Some(n) if n > 0 => limit = n,
+                _ => {
+                    eprintln!("--limit needs a positive integer");
+                    return 2;
+                }
+            }
+            i += 2;
+        } else if file.is_none() {
+            file = Some(PathBuf::from(&args[i]));
+            i += 1;
+        } else {
+            eprintln!("unexpected argument `{}`", args[i]);
+            return 2;
+        }
+    }
+    let Some(file) = file else {
+        eprintln!("usage: arcus top <series.bin> [--limit N]");
+        return 2;
+    };
+    let buf = match std::fs::read(&file) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{}: {e}", file.display());
+            return 1;
+        }
+    };
+    match arcus::obs::dump::read(&buf) {
+        Ok(data) => {
+            print!("{}", arcus::obs::top::render_top(&data, limit));
+            0
+        }
+        Err(e) => {
+            eprintln!("{}: {e}", file.display());
+            1
+        }
+    }
 }
 
 /// `arcus bench`: run the committed perf presets on the chosen event-queue
@@ -303,7 +416,20 @@ fn bench(args: &[String]) -> i32 {
         None => vec!["small", "medium", "large"],
     };
 
-    println!("preset   queue         events        ev/s      wall(ms)  wall/sim  peakq    rss(KB)");
+    // The allocation ceiling is shared across presets; it only bites when
+    // the binary was built with `--features bench-alloc` (otherwise
+    // allocs_per_event is 0.0 = unmeasured and the gate skips).
+    let alloc_ceiling = match &floor_path {
+        Some(path) => match perf::load_alloc_ceiling(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("{e:#}");
+                return 1;
+            }
+        },
+        None => None,
+    };
+    println!("preset   queue         events        ev/s      wall(ms)  wall/sim  peakq    rss(KB)  allocs/ev");
     let mut all = Vec::new();
     let mut floor_violated = false;
     let mut verify_failed = false;
@@ -332,7 +458,7 @@ fn bench(args: &[String]) -> i32 {
                 perf::run_preset(&p, q)
             };
             println!(
-                "{:<8} {:<11} {:>9} {:>12.0} {:>11.1} {:>9.2} {:>6} {:>10}",
+                "{:<8} {:<11} {:>9} {:>12.0} {:>11.1} {:>9.2} {:>6} {:>10} {:>10}",
                 r.scenario,
                 r.queue,
                 r.events_executed,
@@ -341,12 +467,27 @@ fn bench(args: &[String]) -> i32 {
                 r.wall_ms_per_sim_ms(),
                 r.peak_queue_depth,
                 r.rss_hint_kb,
+                if r.allocs_per_event > 0.0 {
+                    format!("{:.4}", r.allocs_per_event)
+                } else {
+                    "-".to_string()
+                },
             );
             if let Some(f) = floor {
                 if r.events_per_sec < f {
                     eprintln!(
                         "FLOOR VIOLATION: {} on {} ran {:.0} ev/s < committed floor {:.0}",
                         r.scenario, r.queue, r.events_per_sec, f
+                    );
+                    floor_violated = true;
+                }
+            }
+            if let Some(c) = alloc_ceiling {
+                if r.allocs_per_event > 0.0 && r.allocs_per_event > c {
+                    eprintln!(
+                        "ALLOC CEILING VIOLATION: {} on {} made {:.4} allocs/event \
+                         > committed ceiling {:.4}",
+                        r.scenario, r.queue, r.allocs_per_event, c
                     );
                     floor_violated = true;
                 }
@@ -419,6 +560,7 @@ fn sweep(args: &[String]) -> i32 {
     let mut threads: Option<usize> = None;
     let mut long_form = false;
     let mut expect_flows: Option<usize> = None;
+    let mut prom_out: Option<PathBuf> = None;
 
     let mut i = 0;
     while i < args.len() {
@@ -577,6 +719,7 @@ fn sweep(args: &[String]) -> i32 {
                     return 2;
                 }
             },
+            "--prom-out" => prom_out = Some(PathBuf::from(value)),
             other => {
                 eprintln!("unknown flag `{other}`");
                 return 2;
@@ -651,6 +794,19 @@ fn sweep(args: &[String]) -> i32 {
             eprintln!("expected at least {n} flow reports across the sweep, got {total}");
             return 1;
         }
+    }
+    if let Some(path) = &prom_out {
+        // One scenario label per grid cell; expansion order keeps the file
+        // deterministic across thread counts.
+        let labeled: Vec<(String, &arcus::system::SystemReport)> = outcomes
+            .iter()
+            .map(|o| (o.key.label(), &o.report))
+            .collect();
+        if let Err(e) = std::fs::write(path, arcus::obs::prom::render(&labeled)) {
+            eprintln!("writing {}: {e}", path.display());
+            return 1;
+        }
+        eprintln!("wrote {}", path.display());
     }
     let agg = aggregate(&outcomes);
     if long_form {

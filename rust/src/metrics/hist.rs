@@ -12,7 +12,11 @@ const SUB_BITS: u32 = 6;
 const SUB_COUNT: usize = 1 << SUB_BITS;
 
 /// Log-bucketed histogram over u64 values (picoseconds, IOPS, bytes...).
-#[derive(Debug, Clone)]
+///
+/// Equality is bucket-for-bucket (plus the exact total/sum/min/max), which
+/// is what the merge property tests in `rust/tests/properties.rs` pin:
+/// `merge(a, b)` must equal the histogram of the concatenated samples.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Histogram {
     /// counts[octave][sub]
     counts: Vec<[u64; SUB_COUNT]>,
@@ -210,6 +214,58 @@ impl Histogram {
     }
 }
 
+/// A fixed set of [`Histogram`] windows recorded side by side — the
+/// "windowed per-era snapshot" primitive of the observability plane.
+///
+/// Each observation is routed to an explicit window index (e.g. fault era
+/// 0/1/2), so per-window distributions stay queryable individually while
+/// [`merged`](WindowedHistogram::merged) folds them back into one — the
+/// same `merge` that rolls per-flow histograms up the tenant→engine
+/// hierarchy and across sweep threads.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WindowedHistogram {
+    windows: Vec<Histogram>,
+}
+
+impl WindowedHistogram {
+    /// Create `n` empty windows.
+    pub fn new(n: usize) -> Self {
+        WindowedHistogram {
+            windows: (0..n).map(|_| Histogram::new()).collect(),
+        }
+    }
+
+    /// Number of windows.
+    pub fn len(&self) -> usize {
+        self.windows.len()
+    }
+
+    /// True when there are no windows at all.
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    /// Record one observation into window `w`.
+    #[inline]
+    pub fn record(&mut self, w: usize, value: u64) {
+        self.windows[w].record(value);
+    }
+
+    /// The histogram of window `w`.
+    pub fn window(&self, w: usize) -> &Histogram {
+        &self.windows[w]
+    }
+
+    /// All windows merged into one histogram.
+    pub fn merged(&self) -> Histogram {
+        let mut out = Histogram::new();
+        for w in &self.windows {
+            out.merge(w);
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -350,6 +406,22 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn windowed_histogram_keeps_windows_separate_and_merges() {
+        let mut w = WindowedHistogram::new(3);
+        w.record(0, 100);
+        w.record(0, 200);
+        w.record(2, 9_000);
+        assert_eq!(w.window(0).count(), 2);
+        assert_eq!(w.window(1).count(), 0);
+        assert_eq!(w.window(2).count(), 1);
+        let mut all = Histogram::new();
+        for v in [100u64, 200, 9_000] {
+            all.record(v);
+        }
+        assert_eq!(w.merged(), all);
     }
 
     #[test]

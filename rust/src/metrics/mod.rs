@@ -8,7 +8,7 @@
 
 pub mod hist;
 
-pub use hist::Histogram;
+pub use hist::{Histogram, WindowedHistogram};
 
 use crate::util::units::{throughput, Rate, Time, SECONDS};
 

@@ -1,0 +1,231 @@
+//! Compact binary series dump (`arcus simulate --series-out`), consumed by
+//! `arcus top`.
+//!
+//! Layout (all integers LEB128 varints unless noted):
+//!
+//! ```text
+//! "ARCS"            4-byte magic
+//! u16 LE            format version (1)
+//! varint            control period (ps per tick)
+//! varint            sample_every (ticks per sample)
+//! varint            flow count
+//! per flow:
+//!   varint × 3      flow id, vm, engine
+//!   per signal (FLOW_SIGNALS order, 7 of them):
+//!     varint        first tick index
+//!     varint        sample count
+//!     varint × n    samples
+//! ```
+//!
+//! Values are raw (not delta-coded): gauge series use `u64::MAX` as the
+//! "absent" sentinel, which would blow up any signed-delta scheme, and the
+//! dumps are small (a handful of KB per flow) either way.
+
+use crate::util::units::Time;
+
+use super::plane::{FlowSeries, ObsSnapshot};
+use super::series::SeriesRing;
+
+const MAGIC: &[u8; 4] = b"ARCS";
+const VERSION: u16 = 1;
+
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64, String> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let &b = buf.get(*pos).ok_or("truncated varint")?;
+        *pos += 1;
+        if shift >= 64 {
+            return Err("varint overflow".into());
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+fn put_ring(out: &mut Vec<u8>, r: &SeriesRing) {
+    if r.is_empty() {
+        put_varint(out, 0);
+        put_varint(out, 0);
+        return;
+    }
+    put_varint(out, r.first_tick());
+    put_varint(out, r.len() as u64);
+    for (_, v) in r.iter() {
+        put_varint(out, v);
+    }
+}
+
+fn get_ring(buf: &[u8], pos: &mut usize) -> Result<SeriesRing, String> {
+    let first = get_varint(buf, pos)?;
+    let len = get_varint(buf, pos)? as usize;
+    if len > buf.len() {
+        return Err("series length exceeds dump size".into());
+    }
+    let mut samples = Vec::with_capacity(len);
+    for _ in 0..len {
+        samples.push(get_varint(buf, pos)?);
+    }
+    Ok(SeriesRing::from_samples(first, &samples))
+}
+
+/// The decoded contents of a series dump.
+#[derive(Debug)]
+pub struct DumpData {
+    /// Sampling clock (ps per control tick).
+    pub control_period: Time,
+    /// Every Nth tick sampled.
+    pub sample_every: u64,
+    /// Per-flow series, in flow-id order.
+    pub flows: Vec<FlowSeries>,
+}
+
+/// Serialize a snapshot's per-flow series.
+pub fn write(snap: &ObsSnapshot) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    put_varint(&mut out, snap.control_period);
+    put_varint(&mut out, snap.sample_every);
+    put_varint(&mut out, snap.flows.len() as u64);
+    for f in &snap.flows {
+        put_varint(&mut out, f.flow as u64);
+        put_varint(&mut out, f.vm as u64);
+        put_varint(&mut out, f.engine as u64);
+        for ring in f.signals() {
+            put_ring(&mut out, ring);
+        }
+    }
+    out
+}
+
+/// Decode a dump produced by [`write`].
+pub fn read(buf: &[u8]) -> Result<DumpData, String> {
+    if buf.len() < 6 || &buf[0..4] != MAGIC {
+        return Err("not an arcus series dump (bad magic)".into());
+    }
+    let version = u16::from_le_bytes([buf[4], buf[5]]);
+    if version != VERSION {
+        return Err(format!("unsupported dump version {version}"));
+    }
+    let mut pos = 6usize;
+    let control_period = get_varint(buf, &mut pos)?;
+    let sample_every = get_varint(buf, &mut pos)?;
+    let n_flows = get_varint(buf, &mut pos)? as usize;
+    if n_flows > buf.len() {
+        return Err("flow count exceeds dump size".into());
+    }
+    let mut flows = Vec::with_capacity(n_flows);
+    for _ in 0..n_flows {
+        let flow = get_varint(buf, &mut pos)? as usize;
+        let vm = get_varint(buf, &mut pos)? as usize;
+        let engine = get_varint(buf, &mut pos)? as usize;
+        let bytes = get_ring(buf, &mut pos)?;
+        let ops = get_ring(buf, &mut pos)?;
+        let dropped = get_ring(buf, &mut pos)?;
+        let queue_depth = get_ring(buf, &mut pos)?;
+        let attainment_ppm = get_ring(buf, &mut pos)?;
+        let p99_ps = get_ring(buf, &mut pos)?;
+        let directives = get_ring(buf, &mut pos)?;
+        flows.push(FlowSeries {
+            flow,
+            vm,
+            engine,
+            bytes,
+            ops,
+            dropped,
+            queue_depth,
+            attainment_ppm,
+            p99_ps,
+            directives,
+        });
+    }
+    Ok(DumpData {
+        control_period,
+        sample_every,
+        flows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_round_trip() {
+        let mut buf = Vec::new();
+        let cases = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        for &v in &cases {
+            put_varint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &cases {
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn dump_round_trips_flow_series() {
+        let mut snap = ObsSnapshot {
+            control_period: 100_000_000,
+            sample_every: 1,
+            ..Default::default()
+        };
+        let mut f = FlowSeries {
+            flow: 3,
+            vm: 1,
+            engine: 0,
+            bytes: SeriesRing::new(8),
+            ops: SeriesRing::new(8),
+            dropped: SeriesRing::new(8),
+            queue_depth: SeriesRing::new(8),
+            attainment_ppm: SeriesRing::new(8),
+            p99_ps: SeriesRing::new(8),
+            directives: SeriesRing::new(8),
+        };
+        for t in 2..7u64 {
+            f.bytes.push_at(t, t * 1000);
+            f.attainment_ppm.push_at(t, if t == 4 { u64::MAX } else { 990_000 });
+        }
+        snap.flows.push(f);
+        let buf = write(&snap);
+        let data = read(&buf).expect("round trip");
+        assert_eq!(data.control_period, 100_000_000);
+        assert_eq!(data.flows.len(), 1);
+        let g = &data.flows[0];
+        assert_eq!((g.flow, g.vm, g.engine), (3, 1, 0));
+        assert_eq!(g.bytes.first_tick(), 2);
+        assert_eq!(g.bytes.get(6), Some(6000));
+        assert_eq!(g.attainment_ppm.get(4), Some(u64::MAX));
+        assert!(g.ops.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read(b"nope").is_err());
+        assert!(read(b"ARCS\x02\x00").is_err()); // wrong version
+        let snap = ObsSnapshot {
+            control_period: 1,
+            ..Default::default()
+        };
+        let mut buf = write(&snap);
+        buf.truncate(7);
+        assert!(read(&buf).is_err());
+    }
+}

@@ -1,0 +1,50 @@
+//! The streaming observability plane: deterministic in-run metrics.
+//!
+//! Everything the repo measured used to be assembled *after* the run into
+//! a [`crate::system::SystemReport`]. This module adds the in-run plane
+//! the ROADMAP names as the unlock for the adaptive controller and the
+//! fleet plane:
+//!
+//! - [`SeriesRing`] — fixed-capacity, power-of-two ring buffers of
+//!   counter/gauge samples indexed by **control tick** (sim time divided
+//!   by the control period), never wall clock.
+//! - [`ObsPlane`] — the live recorder owned by the simulation `World`.
+//!   It samples per-flow / per-tenant / per-engine signals (bytes, ops,
+//!   drops, queue depth, window attainment, window p99, directive counts)
+//!   on the *existing* `ControlTick` event, folds completion latencies
+//!   into mergeable histograms up the tenant→engine hierarchy, and owns
+//!   the fault-era + recovery accounting that `FlowReport.fault` is
+//!   derived from.
+//! - [`ObsSnapshot`] — the frozen end-of-run view carried on
+//!   `SystemReport`, with an FNV-1a [`digest`](ObsSnapshot::digest) that
+//!   is part of the canonical report: the determinism suite asserts the
+//!   entire observable surface is byte-identical across the binary-heap,
+//!   calendar, and timer-wheel event queues.
+//! - [`prom`] — Prometheus text-exposition export (`arcus simulate
+//!   --prom-out`, `arcus sweep --prom-out`).
+//! - [`dump`] + [`top`] — a compact binary series dump and the `arcus
+//!   top` terminal view of the worst flows/tenants by attainment and p99.
+//!
+//! Determinism argument: the plane consumes only values computed by the
+//! simulation schedule (completion events and control-tick measurement
+//! windows) and indexes them by tick; it samples nothing of its own and
+//! adds no events. Its state is therefore a pure function of the spec and
+//! seed, and identical across event-queue disciplines whenever the
+//! schedule itself is.
+
+#[warn(missing_docs)]
+pub mod dump;
+#[warn(missing_docs)]
+pub mod plane;
+#[warn(missing_docs)]
+pub mod prom;
+#[warn(missing_docs)]
+pub mod series;
+#[warn(missing_docs)]
+pub mod top;
+
+pub use plane::{
+    EngineObs, FlowSeries, ObsConfig, ObsPlane, ObsSnapshot, TenantObs, FLOW_SIGNALS,
+    GAUGE_NONE, RECOVERY_FRACTION,
+};
+pub use series::SeriesRing;

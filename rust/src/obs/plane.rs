@@ -1,0 +1,747 @@
+//! The live observability plane: per-flow / per-tenant / per-engine
+//! counters, tick-indexed series, mergeable latency histograms, and the
+//! fault-era + recovery accounting that `SystemReport` derives its
+//! `FaultReport`s from.
+//!
+//! Everything here updates from existing simulation events — completions,
+//! drops, and the periodic `ControlTick` — so the plane adds **zero**
+//! events to the schedule and (after construction) **zero** allocations to
+//! the hot path. All series are indexed by control tick (`now /
+//! control_period`), never wall clock, which is what lets the snapshot
+//! digest be asserted byte-identical across event-queue disciplines.
+
+use crate::flow::Slo;
+use crate::metrics::hist::WindowedHistogram;
+use crate::metrics::Histogram;
+use crate::shaping::ShapeMode;
+use crate::util::units::{Time, SECONDS};
+
+use super::series::SeriesRing;
+
+/// A flow counts as recovered from a fault once one full post-fault
+/// control-period window carries at least this fraction of its SLO rate.
+/// (Paper §6: recovery-to-SLO; moved here from `system::engine`.)
+pub const RECOVERY_FRACTION: f64 = 0.95;
+
+/// Sentinel stored in gauge series when the window had no value (no SLO
+/// target, empty latency window, zero span). Exporters render it as
+/// "absent" rather than a number.
+pub const GAUGE_NONE: u64 = u64::MAX;
+
+/// Names of the per-flow signals, in the order they are serialized by the
+/// binary dump and folded into the digest.
+pub const FLOW_SIGNALS: [&str; 7] = [
+    "bytes",
+    "ops",
+    "dropped",
+    "queue_depth",
+    "attainment_ppm",
+    "p99_ps",
+    "directives",
+];
+
+/// Per-flow tick-indexed series. Counters (`bytes`, `ops`, `dropped`,
+/// `directives`) sample the *cumulative* total at each tick — monotone by
+/// construction, as Prometheus counters require. Gauges sample the value
+/// of the control window that just closed.
+#[derive(Debug, Clone)]
+pub struct FlowSeries {
+    /// Flow id (stable registration order).
+    pub flow: usize,
+    /// Owning tenant / VM id.
+    pub vm: usize,
+    /// Engine (shaper-tree root) the flow hangs off.
+    pub engine: usize,
+    /// Cumulative post-warmup bytes completed.
+    pub bytes: SeriesRing,
+    /// Cumulative post-warmup operations completed.
+    pub ops: SeriesRing,
+    /// Cumulative drops.
+    pub dropped: SeriesRing,
+    /// Shaper-queue depth + in-flight ops at the tick (gauge).
+    pub queue_depth: SeriesRing,
+    /// Window attainment in parts-per-million (gauge; [`GAUGE_NONE`] when
+    /// the window had no measurable attainment).
+    pub attainment_ppm: SeriesRing,
+    /// Window p99 latency in picoseconds (gauge; [`GAUGE_NONE`] when the
+    /// window saw no completions).
+    pub p99_ps: SeriesRing,
+    /// Cumulative control-plane directives applied to this flow.
+    pub directives: SeriesRing,
+}
+
+impl FlowSeries {
+    fn new(flow: usize, vm: usize, engine: usize, cap: usize) -> Self {
+        FlowSeries {
+            flow,
+            vm,
+            engine,
+            bytes: SeriesRing::new(cap),
+            ops: SeriesRing::new(cap),
+            dropped: SeriesRing::new(cap),
+            queue_depth: SeriesRing::new(cap),
+            attainment_ppm: SeriesRing::new(cap),
+            p99_ps: SeriesRing::new(cap),
+            directives: SeriesRing::new(cap),
+        }
+    }
+
+    /// The signal rings in [`FLOW_SIGNALS`] order.
+    pub fn signals(&self) -> [&SeriesRing; 7] {
+        [
+            &self.bytes,
+            &self.ops,
+            &self.dropped,
+            &self.queue_depth,
+            &self.attainment_ppm,
+            &self.p99_ps,
+            &self.directives,
+        ]
+    }
+}
+
+/// Tenant-level rollup: counters, a tick series, and the merged latency
+/// histogram of every completion by the tenant's flows.
+#[derive(Debug, Clone)]
+pub struct TenantObs {
+    /// Tenant / VM id.
+    pub vm: usize,
+    /// Cumulative post-warmup bytes across the tenant's flows.
+    pub bytes: u64,
+    /// Cumulative post-warmup ops across the tenant's flows.
+    pub ops: u64,
+    /// Merged completion-latency histogram (ps).
+    pub lat: Histogram,
+    /// Cumulative bytes sampled per tick.
+    pub bytes_series: SeriesRing,
+    /// Cumulative ops sampled per tick.
+    pub ops_series: SeriesRing,
+}
+
+/// Engine-level rollup (one per shaper tree, plus one trailing slot for
+/// storage-path flows).
+#[derive(Debug, Clone)]
+pub struct EngineObs {
+    /// Engine index (== shaper-tree index; the last slot is storage).
+    pub engine: usize,
+    /// Cumulative post-warmup bytes through the engine.
+    pub bytes: u64,
+    /// Cumulative post-warmup ops through the engine.
+    pub ops: u64,
+    /// Merged completion-latency histogram (ps) — the tenant histograms of
+    /// this engine folded up one more level.
+    pub lat: Histogram,
+    /// Cumulative bytes sampled per tick.
+    pub bytes_series: SeriesRing,
+}
+
+/// Per-flow fault-era tracker. Eras are delimited by the union fault
+/// window `(start, end)`; because completion times are monotone, each
+/// boundary is crossed at most once and the cumulative counters can be
+/// snapshotted exactly at the crossing.
+#[derive(Debug, Clone)]
+struct EraTrack {
+    /// Era of the most recent completion (0 = pre, 1 = during, 2 = post).
+    era: usize,
+    /// Cumulative (bytes, ops) at the 0→1 and 1→2 boundaries.
+    marks: [(u64, u64); 2],
+    /// Completion latencies bucketed per era.
+    lat: WindowedHistogram,
+}
+
+impl EraTrack {
+    fn new() -> Self {
+        EraTrack {
+            era: 0,
+            marks: [(0, 0); 2],
+            lat: WindowedHistogram::new(3),
+        }
+    }
+
+    /// Advance to `era`, snapshotting the cumulative counters at each
+    /// boundary crossed. `bytes`/`ops` are the totals *before* the
+    /// completion that triggered the advance (it belongs to the new era).
+    fn advance_to(&mut self, era: usize, bytes: u64, ops: u64) {
+        while self.era < era {
+            self.marks[self.era] = (bytes, ops);
+            self.era += 1;
+        }
+    }
+
+    /// Per-era (bytes, ops) derived from the boundary snapshots and the
+    /// final totals. Boundaries never crossed collapse to the final total,
+    /// leaving later eras empty — exactly right when a flow saw no
+    /// completions there.
+    fn eras(&self, total_bytes: u64, total_ops: u64) -> [(u64, u64); 3] {
+        let b0 = if self.era > 0 { self.marks[0] } else { (total_bytes, total_ops) };
+        let b1 = if self.era > 1 { self.marks[1] } else { (total_bytes, total_ops) };
+        [
+            b0,
+            (b1.0 - b0.0, b1.1 - b0.1),
+            (total_bytes - b1.0, total_ops - b1.1),
+        ]
+    }
+}
+
+/// Post-fault recovery tracker (semantics identical to the pre-obs
+/// engine-local accounting): fixed control-period windows starting at
+/// `max(fault_end, arrived_at)`, recovered once a full window achieves
+/// `RECOVERY_FRACTION` of the SLO rate.
+#[derive(Debug, Clone, Copy, Default)]
+struct RecoveryTrack {
+    win_start: Time,
+    bytes: u64,
+    ops: u64,
+    recovered_at: Option<Time>,
+}
+
+struct FlowLive {
+    series: FlowSeries,
+    total_bytes: u64,
+    total_ops: u64,
+    total_drops: u64,
+    slo: Slo,
+    arrived_at: Time,
+}
+
+/// Construction parameters for [`ObsPlane`].
+#[derive(Debug, Clone, Copy)]
+pub struct ObsConfig {
+    /// Control-tick period (ps) — the sampling clock.
+    pub control_period: Time,
+    /// Run duration (ps), used to size rings no larger than needed.
+    pub duration: Time,
+    /// Maximum samples retained per series (0 disables series sampling;
+    /// counters, histograms and era accounting still run).
+    pub retention: usize,
+    /// Sample every Nth control tick (≥ 1).
+    pub sample_every: u64,
+}
+
+/// The live metrics plane owned by the simulation `World`.
+pub struct ObsPlane {
+    control_period: Time,
+    sample_every: u64,
+    sampling: bool,
+    fault_window: Option<(Time, Time)>,
+    flows: Vec<FlowLive>,
+    eras: Vec<EraTrack>,
+    recovery: Vec<RecoveryTrack>,
+    tenants: Vec<TenantObs>,
+    engines: Vec<EngineObs>,
+}
+
+impl ObsPlane {
+    /// Build the plane for `flow_homes[i] = (vm, engine)` per flow.
+    /// Fault-era tracking is allocated only when a fault window exists —
+    /// healthy runs pay no per-flow histogram memory.
+    pub fn new(
+        cfg: ObsConfig,
+        flow_homes: &[(usize, usize)],
+        n_tenants: usize,
+        n_engines: usize,
+        fault_window: Option<(Time, Time)>,
+    ) -> Self {
+        let sample_every = cfg.sample_every.max(1);
+        let period = cfg.control_period.max(1) * sample_every;
+        let expected = (cfg.duration / period) as usize + 2;
+        let cap = cfg.retention.min(expected).max(1);
+        let sampling = cfg.retention > 0;
+        let ring_cap = if sampling { cap } else { 1 };
+        let flows = flow_homes
+            .iter()
+            .enumerate()
+            .map(|(i, &(vm, engine))| FlowLive {
+                series: FlowSeries::new(i, vm, engine, ring_cap),
+                total_bytes: 0,
+                total_ops: 0,
+                total_drops: 0,
+                slo: Slo::BestEffort,
+                arrived_at: 0,
+            })
+            .collect();
+        let eras = if fault_window.is_some() {
+            (0..flow_homes.len()).map(|_| EraTrack::new()).collect()
+        } else {
+            Vec::new()
+        };
+        let recovery = if fault_window.is_some() {
+            vec![RecoveryTrack::default(); flow_homes.len()]
+        } else {
+            Vec::new()
+        };
+        ObsPlane {
+            control_period: cfg.control_period.max(1),
+            sample_every,
+            sampling,
+            fault_window,
+            flows,
+            eras,
+            recovery,
+            tenants: (0..n_tenants)
+                .map(|vm| TenantObs {
+                    vm,
+                    bytes: 0,
+                    ops: 0,
+                    lat: Histogram::new(),
+                    bytes_series: SeriesRing::new(ring_cap),
+                    ops_series: SeriesRing::new(ring_cap),
+                })
+                .collect(),
+            engines: (0..n_engines)
+                .map(|engine| EngineObs {
+                    engine,
+                    bytes: 0,
+                    ops: 0,
+                    lat: Histogram::new(),
+                    bytes_series: SeriesRing::new(ring_cap),
+                })
+                .collect(),
+        }
+    }
+
+    /// Record the SLO a flow is currently held to (at registration and
+    /// again after a successful renegotiation). Recovery and window
+    /// attainment judge against this.
+    pub fn set_flow_slo(&mut self, flow: usize, slo: Slo) {
+        self.flows[flow].slo = slo;
+    }
+
+    /// Record when a flow was (re-)admitted; post-fault recovery windows
+    /// never start before this.
+    pub fn note_arrival(&mut self, flow: usize, at: Time) {
+        self.flows[flow].arrived_at = at;
+    }
+
+    /// Fold one post-warmup completion into every level of the plane.
+    /// `at` values are monotone (completions are processed in event
+    /// order), which era tracking relies on. Never allocates.
+    pub fn on_complete(&mut self, flow: usize, at: Time, lat: u64, bytes: u64) {
+        let (tb, to) = {
+            let f = &self.flows[flow];
+            (f.total_bytes, f.total_ops)
+        };
+        if let Some((fs, fe)) = self.fault_window {
+            let era = if at < fs {
+                0
+            } else if at < fe {
+                1
+            } else {
+                2
+            };
+            let tr = &mut self.eras[flow];
+            tr.advance_to(era, tb, to);
+            tr.lat.record(era, lat);
+            if era == 2 {
+                self.track_recovery(flow, at, bytes, fe);
+            }
+        }
+        let f = &mut self.flows[flow];
+        f.total_bytes += bytes;
+        f.total_ops += 1;
+        let t = &mut self.tenants[f.vm];
+        t.bytes += bytes;
+        t.ops += 1;
+        t.lat.record(lat);
+        let e = &mut self.engines[f.engine];
+        e.bytes += bytes;
+        e.ops += 1;
+        e.lat.record(lat);
+    }
+
+    /// Count a dropped message (mirrors `FlowMetrics::on_drop` call sites).
+    pub fn on_drop(&mut self, flow: usize) {
+        self.flows[flow].total_drops += 1;
+    }
+
+    fn track_recovery(&mut self, flow: usize, at: Time, bytes: u64, fault_end: Time) {
+        let Some((rate, mode)) = self.flows[flow].slo.required_rate() else {
+            return;
+        };
+        let arrived_at = self.flows[flow].arrived_at;
+        let r = &mut self.recovery[flow];
+        if r.recovered_at.is_some() {
+            return;
+        }
+        if r.win_start == 0 {
+            r.win_start = fault_end.max(arrived_at);
+        }
+        let period = self.control_period;
+        while at >= r.win_start + period {
+            let achieved = match mode {
+                ShapeMode::Gbps => r.bytes as f64 * SECONDS as f64 / period as f64,
+                ShapeMode::Iops => r.ops as f64 * SECONDS as f64 / period as f64,
+            };
+            if achieved >= rate * RECOVERY_FRACTION {
+                r.recovered_at = Some(r.win_start + period);
+                return;
+            }
+            r.win_start += period;
+            r.bytes = 0;
+            r.ops = 0;
+        }
+        r.bytes += bytes;
+        r.ops += 1;
+    }
+
+    /// Sample one flow's signals at a control tick. Called from the
+    /// existing `ControlTick` handler with the measurement window it
+    /// already computed for the control plane — the plane adds no events
+    /// and re-measures nothing. Never allocates.
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_control_sample(
+        &mut self,
+        tick: u64,
+        flow: usize,
+        span: Time,
+        window_bytes: u64,
+        window_ops: u64,
+        window_p99: Option<u64>,
+        queue_depth: usize,
+        directives: u64,
+    ) {
+        if !self.sampling || tick % self.sample_every != 0 {
+            return;
+        }
+        let idx = tick / self.sample_every;
+        let att = window_attainment_ppm(
+            &self.flows[flow].slo,
+            span,
+            window_bytes,
+            window_ops,
+            window_p99,
+        );
+        let f = &mut self.flows[flow];
+        f.series.bytes.push_at(idx, f.total_bytes);
+        f.series.ops.push_at(idx, f.total_ops);
+        f.series.dropped.push_at(idx, f.total_drops);
+        f.series.queue_depth.push_at(idx, queue_depth as u64);
+        f.series.attainment_ppm.push_at(idx, att);
+        f.series.p99_ps.push_at(idx, window_p99.unwrap_or(GAUGE_NONE));
+        f.series.directives.push_at(idx, directives);
+    }
+
+    /// Close a control tick: push the tenant/engine rollup series.
+    pub fn on_tick_done(&mut self, tick: u64) {
+        if !self.sampling || tick % self.sample_every != 0 {
+            return;
+        }
+        let idx = tick / self.sample_every;
+        for t in &mut self.tenants {
+            t.bytes_series.push_at(idx, t.bytes);
+            t.ops_series.push_at(idx, t.ops);
+        }
+        for e in &mut self.engines {
+            e.bytes_series.push_at(idx, e.bytes);
+        }
+    }
+
+    /// Per-era (bytes, ops, p99) for a flow, derived from the series-plane
+    /// counters. Only meaningful on faulted runs.
+    pub fn flow_eras(&self, flow: usize) -> Option<[(u64, u64, u64); 3]> {
+        let tr = self.eras.get(flow)?;
+        let f = &self.flows[flow];
+        let eras = tr.eras(f.total_bytes, f.total_ops);
+        let mut out = [(0, 0, 0); 3];
+        for (k, &(b, o)) in eras.iter().enumerate() {
+            out[k] = (b, o, tr.lat.window(k).percentile(99.0));
+        }
+        Some(out)
+    }
+
+    /// When the flow's first compliant post-fault window closed, if it did.
+    pub fn recovered_at(&self, flow: usize) -> Option<Time> {
+        self.recovery.get(flow).and_then(|r| r.recovered_at)
+    }
+
+    /// Freeze the plane into its end-of-run snapshot.
+    pub fn into_snapshot(self) -> ObsSnapshot {
+        ObsSnapshot {
+            control_period: self.control_period,
+            sample_every: self.sample_every,
+            flows: self.flows.into_iter().map(|f| f.series).collect(),
+            tenants: self.tenants,
+            engines: self.engines,
+        }
+    }
+}
+
+/// Attainment of one measurement window against an SLO, in ppm.
+/// Mirrors `EraReport::new`'s attainment arithmetic (ratio of achieved to
+/// target), quantized to ppm so the digest stays integer-only.
+fn window_attainment_ppm(
+    slo: &Slo,
+    span: Time,
+    bytes: u64,
+    ops: u64,
+    p99: Option<u64>,
+) -> u64 {
+    if span == 0 {
+        return GAUGE_NONE;
+    }
+    let ratio = match *slo {
+        Slo::Throughput { target, .. } => {
+            let bps = target.as_bits_per_sec();
+            if bps <= 0.0 {
+                return GAUGE_NONE;
+            }
+            (bytes as f64 * 8.0 * SECONDS as f64 / span as f64) / bps
+        }
+        Slo::Iops { target, .. } => {
+            if target <= 0.0 {
+                return GAUGE_NONE;
+            }
+            (ops as f64 * SECONDS as f64 / span as f64) / target
+        }
+        Slo::Latency { max_ps, .. } => match p99 {
+            Some(p) => max_ps as f64 / p.max(1) as f64,
+            None => return GAUGE_NONE,
+        },
+        Slo::BestEffort => return GAUGE_NONE,
+    };
+    (ratio * 1_000_000.0).min(1e15) as u64
+}
+
+/// Immutable end-of-run snapshot of the plane, carried on `SystemReport`.
+/// Its [`digest`](ObsSnapshot::digest) is part of the canonical report and
+/// asserted byte-identical across event-queue disciplines.
+#[derive(Debug, Clone, Default)]
+pub struct ObsSnapshot {
+    /// Sampling clock (ps per control tick).
+    pub control_period: Time,
+    /// Every Nth tick sampled.
+    pub sample_every: u64,
+    /// Per-flow series.
+    pub flows: Vec<FlowSeries>,
+    /// Tenant rollups.
+    pub tenants: Vec<TenantObs>,
+    /// Engine rollups.
+    pub engines: Vec<EngineObs>,
+}
+
+impl ObsSnapshot {
+    /// FNV-1a over every series sample, rollup counter, and histogram
+    /// bucket in a fixed order. Two snapshots digest equal iff the whole
+    /// observable surface matched sample-for-sample.
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_u64(self.control_period);
+        h.write_u64(self.sample_every);
+        h.write_u64(self.flows.len() as u64);
+        for f in &self.flows {
+            h.write_u64(f.vm as u64);
+            h.write_u64(f.engine as u64);
+            for ring in f.signals() {
+                fold_ring(&mut h, ring);
+            }
+        }
+        for t in &self.tenants {
+            h.write_u64(t.bytes);
+            h.write_u64(t.ops);
+            fold_hist(&mut h, &t.lat);
+            fold_ring(&mut h, &t.bytes_series);
+            fold_ring(&mut h, &t.ops_series);
+        }
+        for e in &self.engines {
+            h.write_u64(e.bytes);
+            h.write_u64(e.ops);
+            fold_hist(&mut h, &e.lat);
+            fold_ring(&mut h, &e.bytes_series);
+        }
+        h.finish()
+    }
+}
+
+fn fold_ring(h: &mut Fnv64, r: &SeriesRing) {
+    h.write_u64(r.len() as u64);
+    if !r.is_empty() {
+        h.write_u64(r.first_tick());
+    }
+    for (_, v) in r.iter() {
+        h.write_u64(v);
+    }
+}
+
+fn fold_hist(h: &mut Fnv64, hist: &Histogram) {
+    h.write_u64(hist.count());
+    for (value, count) in hist.iter() {
+        h.write_u64(value);
+        h.write_u64(count);
+    }
+}
+
+/// Minimal 64-bit FNV-1a hasher (the vendored hash crates are offline
+/// shims, so the digest is hand-rolled and self-contained).
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    /// FNV-1a offset basis.
+    pub fn new() -> Self {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Fold eight little-endian bytes into the state.
+    pub fn write_u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    /// Final hash value.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MICROS;
+
+    fn plane(fault: Option<(Time, Time)>) -> ObsPlane {
+        ObsPlane::new(
+            ObsConfig {
+                control_period: 100 * MICROS,
+                duration: 2_000 * MICROS,
+                retention: 64,
+                sample_every: 1,
+            },
+            &[(0, 0), (1, 0)],
+            2,
+            1,
+            fault,
+        )
+    }
+
+    #[test]
+    fn completions_roll_up_tenant_and_engine() {
+        let mut p = plane(None);
+        p.on_complete(0, 10, 500, 4096);
+        p.on_complete(1, 20, 700, 1024);
+        p.on_complete(0, 30, 900, 4096);
+        let s = p.into_snapshot();
+        assert_eq!(s.tenants[0].bytes, 8192);
+        assert_eq!(s.tenants[0].ops, 2);
+        assert_eq!(s.tenants[1].bytes, 1024);
+        assert_eq!(s.engines[0].bytes, 9216);
+        assert_eq!(s.engines[0].ops, 3);
+        assert_eq!(s.engines[0].lat.count(), 3);
+    }
+
+    #[test]
+    fn era_boundaries_snapshot_cumulative_counters() {
+        let fs = 1000;
+        let fe = 2000;
+        let mut p = plane(Some((fs, fe)));
+        p.on_complete(0, 100, 10, 100); // era 0
+        p.on_complete(0, 200, 10, 100); // era 0
+        p.on_complete(0, 1500, 10, 50); // era 1
+        p.on_complete(0, 2500, 10, 25); // era 2
+        p.on_complete(0, 2600, 10, 25); // era 2
+        let eras = p.flow_eras(0).unwrap();
+        assert_eq!((eras[0].0, eras[0].1), (200, 2));
+        assert_eq!((eras[1].0, eras[1].1), (50, 1));
+        assert_eq!((eras[2].0, eras[2].1), (50, 2));
+    }
+
+    #[test]
+    fn skipped_era_stays_empty() {
+        let mut p = plane(Some((1000, 2000)));
+        p.on_complete(0, 100, 10, 100); // era 0
+        p.on_complete(0, 2500, 10, 30); // straight to era 2
+        let eras = p.flow_eras(0).unwrap();
+        assert_eq!((eras[0].0, eras[0].1), (100, 1));
+        assert_eq!((eras[1].0, eras[1].1), (0, 0));
+        assert_eq!((eras[2].0, eras[2].1), (30, 1));
+    }
+
+    #[test]
+    fn recovery_requires_one_full_compliant_window() {
+        let period = 100 * MICROS;
+        let fe = 1000 * MICROS;
+        let mut p = plane(Some((500 * MICROS, fe)));
+        // 10 Gbps SLO → 1.25e9 bytes/sec → 125_000 bytes per 100 µs window.
+        p.set_flow_slo(0, Slo::gbps(10.0));
+        // First window after fault end: far under rate (one 1 KiB op).
+        p.on_complete(0, fe + 10 * MICROS, 10, 1024);
+        // Completions filling the second window above 95% of rate.
+        let win2 = fe + period;
+        for k in 0..4u64 {
+            p.on_complete(0, win2 + (k + 1) * 10 * MICROS, 10, 32_000);
+        }
+        // A later completion closes the second window and judges it.
+        p.on_complete(0, win2 + period + MICROS, 10, 1024);
+        let rec = p.recovered_at(0).expect("second window should comply");
+        assert_eq!(rec, win2 + period);
+    }
+
+    #[test]
+    fn digest_is_deterministic_and_sensitive() {
+        let build = |extra: bool| {
+            let mut p = plane(None);
+            p.on_complete(0, 10, 500, 4096);
+            p.on_control_sample(5, 0, 100, 4096, 1, Some(500), 3, 0);
+            p.on_tick_done(5);
+            if extra {
+                p.on_complete(1, 20, 900, 64);
+            }
+            p.into_snapshot().digest()
+        };
+        assert_eq!(build(false), build(false));
+        assert_ne!(build(false), build(true));
+    }
+
+    #[test]
+    fn retention_zero_disables_series_but_not_counters() {
+        let mut p = ObsPlane::new(
+            ObsConfig {
+                control_period: 100 * MICROS,
+                duration: 1_000 * MICROS,
+                retention: 0,
+                sample_every: 1,
+            },
+            &[(0, 0)],
+            1,
+            1,
+            None,
+        );
+        p.on_control_sample(3, 0, 100, 10, 1, None, 0, 0);
+        p.on_tick_done(3);
+        p.on_complete(0, 10, 500, 4096);
+        let s = p.into_snapshot();
+        assert!(s.flows[0].bytes.is_empty());
+        assert_eq!(s.tenants[0].bytes, 4096);
+    }
+
+    #[test]
+    fn sample_every_decimates_ticks() {
+        let mut p = ObsPlane::new(
+            ObsConfig {
+                control_period: 100 * MICROS,
+                duration: 10_000 * MICROS,
+                retention: 64,
+                sample_every: 4,
+            },
+            &[(0, 0)],
+            1,
+            1,
+            None,
+        );
+        for tick in 0..12 {
+            p.on_control_sample(tick, 0, 100, tick, 1, None, 0, 0);
+            p.on_tick_done(tick);
+        }
+        let s = p.into_snapshot();
+        // Ticks 0, 4, 8 sampled → ring indices 0, 1, 2.
+        assert_eq!(s.flows[0].bytes.len(), 3);
+        assert_eq!(s.flows[0].bytes.get(1), Some(4));
+        assert_eq!(s.flows[0].bytes.get(2), Some(8));
+    }
+}

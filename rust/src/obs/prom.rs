@@ -1,0 +1,222 @@
+//! Prometheus text-exposition writer.
+//!
+//! Renders one or more labeled [`SystemReport`]s (a single `arcus
+//! simulate` run, or every scenario of an `arcus sweep`) into the
+//! Prometheus text format: one `# HELP` + `# TYPE` header per metric
+//! family, then all samples of that family grouped together. Counter
+//! families use the `_total` suffix and export cumulative values, so
+//! successive scrapes of successive runs are monotone; label values are
+//! escaped per the exposition spec (`\\`, `\"`, `\n`).
+
+use crate::system::SystemReport;
+use crate::util::units::SECONDS;
+
+/// Escape a label value for the text exposition format.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+struct Family<'a> {
+    name: &'a str,
+    kind: &'a str,
+    help: &'a str,
+    samples: Vec<(String, String)>, // (label set incl. braces, value)
+}
+
+impl<'a> Family<'a> {
+    fn new(name: &'a str, kind: &'a str, help: &'a str) -> Self {
+        Family {
+            name,
+            kind,
+            help,
+            samples: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, labels: String, value: String) {
+        self.samples.push((labels, value));
+    }
+
+    fn render(&self, out: &mut String) {
+        if self.samples.is_empty() {
+            return;
+        }
+        out.push_str(&format!("# HELP {} {}\n", self.name, self.help));
+        out.push_str(&format!("# TYPE {} {}\n", self.name, self.kind));
+        for (labels, value) in &self.samples {
+            out.push_str(&format!("{}{{{}}} {}\n", self.name, labels, value));
+        }
+    }
+}
+
+fn f(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "NaN".to_string()
+    }
+}
+
+fn secs(ps: u64) -> String {
+    f(ps as f64 / SECONDS as f64)
+}
+
+/// Render `(scenario label, report)` pairs into one exposition document.
+pub fn render(scenarios: &[(String, &SystemReport)]) -> String {
+    let mut flow_bytes = Family::new(
+        "arcus_flow_bytes_total",
+        "counter",
+        "Payload bytes completed per flow (post-warmup).",
+    );
+    let mut flow_ops = Family::new(
+        "arcus_flow_ops_total",
+        "counter",
+        "Requests completed per flow (post-warmup).",
+    );
+    let mut flow_dropped = Family::new(
+        "arcus_flow_dropped_total",
+        "counter",
+        "Requests dropped or rejected per flow.",
+    );
+    let mut flow_reconfigs = Family::new(
+        "arcus_flow_reconfigs_total",
+        "counter",
+        "Control-plane reconfigurations applied per flow.",
+    );
+    let mut flow_att = Family::new(
+        "arcus_flow_attainment",
+        "gauge",
+        "Achieved / SLO-target ratio per flow (1.0 = exactly the SLO).",
+    );
+    let mut flow_p99 = Family::new(
+        "arcus_flow_p99_seconds",
+        "gauge",
+        "Per-flow p99 completion latency.",
+    );
+    let mut tenant_bytes = Family::new(
+        "arcus_tenant_bytes_total",
+        "counter",
+        "Payload bytes completed per tenant (flows folded up).",
+    );
+    let mut tenant_p99 = Family::new(
+        "arcus_tenant_p99_seconds",
+        "gauge",
+        "p99 completion latency over a tenant's merged histogram.",
+    );
+    let mut engine_bytes = Family::new(
+        "arcus_engine_bytes_total",
+        "counter",
+        "Payload bytes completed per engine (tenants folded up).",
+    );
+    let mut engine_p99 = Family::new(
+        "arcus_engine_p99_seconds",
+        "gauge",
+        "p99 completion latency over an engine's merged histogram.",
+    );
+    let mut engine_util = Family::new(
+        "arcus_engine_util",
+        "gauge",
+        "Accelerator busy fraction over the run.",
+    );
+    let mut events = Family::new(
+        "arcus_events_total",
+        "counter",
+        "DES events executed by the run.",
+    );
+    let mut nic_dropped = Family::new(
+        "arcus_nic_rx_dropped_total",
+        "counter",
+        "NIC RX drops across ports.",
+    );
+
+    for (label, r) in scenarios {
+        let sc = escape_label(label);
+        let base = |extra: &str| -> String {
+            if extra.is_empty() {
+                format!("scenario=\"{sc}\"")
+            } else {
+                format!("scenario=\"{sc}\",{extra}")
+            }
+        };
+        for fr in &r.per_flow {
+            let l = base(&format!("flow=\"{}\",vm=\"{}\"", fr.flow, fr.vm));
+            flow_bytes.push(l.clone(), fr.bytes.to_string());
+            flow_ops.push(l.clone(), fr.completed.to_string());
+            flow_dropped.push(l.clone(), fr.dropped.to_string());
+            flow_reconfigs.push(l.clone(), fr.reconfigs.to_string());
+            if let Some(a) = fr.slo_attainment() {
+                flow_att.push(l.clone(), f(a));
+            }
+            flow_p99.push(l, secs(fr.lat_p99));
+        }
+        for t in &r.obs.tenants {
+            let l = base(&format!("vm=\"{}\"", t.vm));
+            tenant_bytes.push(l.clone(), t.bytes.to_string());
+            if !t.lat.is_empty() {
+                tenant_p99.push(l, secs(t.lat.percentile(99.0)));
+            }
+        }
+        for e in &r.obs.engines {
+            let l = base(&format!("engine=\"{}\"", e.engine));
+            engine_bytes.push(l.clone(), e.bytes.to_string());
+            if !e.lat.is_empty() {
+                engine_p99.push(l, secs(e.lat.percentile(99.0)));
+            }
+        }
+        for (i, u) in r.accel_util.iter().enumerate() {
+            engine_util.push(base(&format!("engine=\"{i}\"")), f(*u));
+        }
+        events.push(base(""), r.events.to_string());
+        nic_dropped.push(base(""), r.nic_rx_dropped.to_string());
+    }
+
+    let mut out = String::new();
+    for fam in [
+        &flow_bytes,
+        &flow_ops,
+        &flow_dropped,
+        &flow_reconfigs,
+        &flow_att,
+        &flow_p99,
+        &tenant_bytes,
+        &tenant_p99,
+        &engine_bytes,
+        &engine_p99,
+        &engine_util,
+        &events,
+        &nic_dropped,
+    ] {
+        fam.render(&mut out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\\b"), "a\\\\b");
+        assert_eq!(escape_label("say \"hi\""), "say \\\"hi\\\"");
+        assert_eq!(escape_label("line\nbreak"), "line\\nbreak");
+    }
+
+    #[test]
+    fn empty_families_render_nothing() {
+        let fam = Family::new("x_total", "counter", "nothing");
+        let mut out = String::new();
+        fam.render(&mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,237 @@
+//! Fixed-capacity, power-of-two ring buffer for tick-indexed counter and
+//! gauge series.
+//!
+//! A [`SeriesRing`] stores the last `capacity` samples of a metric, indexed
+//! by the **simulation control tick** that produced them — never wall
+//! clock. Ticks are monotone; pushing tick `t` after tick `t - k` (a gap
+//! left by e.g. a control-plane outage suppressing ticks) carry-fills the
+//! missing slots with the previous value, so `get(tick)` stays exact for
+//! every retained tick even across wrap-around. This is what makes the
+//! series safe to fold into the deterministic report digest: the content
+//! is a pure function of the simulation schedule.
+
+/// Ring-buffered `u64` series indexed by monotone sim tick.
+///
+/// Capacity is rounded up to a power of two so slot lookup is a mask, not
+/// a division. Once more than `capacity` ticks have been pushed the oldest
+/// samples are overwritten; `first_tick()`/`next_tick()` always bound the
+/// retained window exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SeriesRing {
+    data: Vec<u64>,
+    mask: u64,
+    /// Tick index the next push lands on; retained window is
+    /// `[next_tick - len, next_tick)`.
+    next_tick: u64,
+    len: usize,
+}
+
+impl SeriesRing {
+    /// Create a ring retaining at least `capacity` samples (rounded up to
+    /// the next power of two, minimum 1).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1).next_power_of_two();
+        SeriesRing {
+            data: vec![0; cap],
+            mask: cap as u64 - 1,
+            next_tick: 0,
+            len: 0,
+        }
+    }
+
+    /// Rebuild a ring from a contiguous run of samples starting at
+    /// `first_tick` (used by the binary dump reader).
+    pub fn from_samples(first_tick: u64, samples: &[u64]) -> Self {
+        let mut r = SeriesRing::new(samples.len().max(1));
+        for (i, &v) in samples.iter().enumerate() {
+            r.push_at(first_tick + i as u64, v);
+        }
+        r
+    }
+
+    #[inline]
+    fn slot(&self, tick: u64) -> usize {
+        (tick & self.mask) as usize
+    }
+
+    /// Record `value` at `tick`. Ticks must be monotone non-decreasing;
+    /// skipped ticks are carry-filled with the previous value so the tick
+    /// indexing stays dense and exact. Never allocates.
+    pub fn push_at(&mut self, tick: u64, value: u64) {
+        if self.len == 0 {
+            self.next_tick = tick;
+        }
+        debug_assert!(tick >= self.next_tick, "series ticks must be monotone");
+        if tick < self.next_tick {
+            return; // defensive: drop out-of-order pushes in release builds
+        }
+        let carry = if self.len == 0 {
+            value
+        } else {
+            self.data[self.slot(self.next_tick - 1)]
+        };
+        let gap = tick - self.next_tick;
+        if gap >= self.data.len() as u64 {
+            // The whole retained window would be carry-filled: do it in one
+            // pass and jump the cursor instead of looping per tick.
+            for s in self.data.iter_mut() {
+                *s = carry;
+            }
+            self.len = self.data.len();
+            self.next_tick = tick;
+        } else {
+            while self.next_tick < tick {
+                let s = self.slot(self.next_tick);
+                self.data[s] = carry;
+                self.next_tick += 1;
+                self.len = (self.len + 1).min(self.data.len());
+            }
+        }
+        let s = self.slot(tick);
+        self.data[s] = value;
+        self.next_tick = tick + 1;
+        self.len = (self.len + 1).min(self.data.len());
+    }
+
+    /// Number of retained samples (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if nothing has been pushed yet.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Allocated slot count (power of two).
+    pub fn capacity(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Oldest retained tick (meaningless when empty).
+    pub fn first_tick(&self) -> u64 {
+        self.next_tick - self.len as u64
+    }
+
+    /// One past the newest retained tick.
+    pub fn next_tick(&self) -> u64 {
+        self.next_tick
+    }
+
+    /// Value at `tick`, or `None` if that tick is outside the retained
+    /// window.
+    pub fn get(&self, tick: u64) -> Option<u64> {
+        if self.len > 0 && tick >= self.first_tick() && tick < self.next_tick {
+            Some(self.data[self.slot(tick)])
+        } else {
+            None
+        }
+    }
+
+    /// Newest sample, if any.
+    pub fn latest(&self) -> Option<u64> {
+        if self.len == 0 {
+            None
+        } else {
+            Some(self.data[self.slot(self.next_tick - 1)])
+        }
+    }
+
+    /// Iterate `(tick, value)` over the retained window, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        (self.first_tick()..self.next_tick).map(move |t| (t, self.data[self.slot(t)]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_get_without_wrap() {
+        let mut r = SeriesRing::new(8);
+        for t in 0..5 {
+            r.push_at(t, t * 10);
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.first_tick(), 0);
+        assert_eq!(r.next_tick(), 5);
+        for t in 0..5 {
+            assert_eq!(r.get(t), Some(t * 10));
+        }
+        assert_eq!(r.get(5), None);
+        assert_eq!(r.latest(), Some(40));
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        assert_eq!(SeriesRing::new(0).capacity(), 1);
+        assert_eq!(SeriesRing::new(5).capacity(), 8);
+        assert_eq!(SeriesRing::new(8).capacity(), 8);
+        assert_eq!(SeriesRing::new(9).capacity(), 16);
+    }
+
+    #[test]
+    fn wrap_around_keeps_tick_indexing_exact() {
+        let mut r = SeriesRing::new(4);
+        for t in 0..11 {
+            r.push_at(t, 100 + t);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.first_tick(), 7);
+        assert_eq!(r.next_tick(), 11);
+        for t in 0..7 {
+            assert_eq!(r.get(t), None, "tick {t} should be evicted");
+        }
+        for t in 7..11 {
+            assert_eq!(r.get(t), Some(100 + t));
+        }
+    }
+
+    #[test]
+    fn gaps_carry_forward_previous_value() {
+        let mut r = SeriesRing::new(8);
+        r.push_at(0, 7);
+        r.push_at(4, 9); // ticks 1..4 missed (e.g. control outage)
+        assert_eq!(r.get(1), Some(7));
+        assert_eq!(r.get(2), Some(7));
+        assert_eq!(r.get(3), Some(7));
+        assert_eq!(r.get(4), Some(9));
+        assert_eq!(r.len(), 5);
+    }
+
+    #[test]
+    fn gap_larger_than_capacity_fast_fills() {
+        let mut r = SeriesRing::new(4);
+        r.push_at(0, 3);
+        r.push_at(100, 5);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.first_tick(), 97);
+        assert_eq!(r.get(97), Some(3));
+        assert_eq!(r.get(99), Some(3));
+        assert_eq!(r.get(100), Some(5));
+        assert_eq!(r.get(96), None);
+    }
+
+    #[test]
+    fn late_start_anchors_at_first_tick() {
+        let mut r = SeriesRing::new(8);
+        r.push_at(42, 1);
+        assert_eq!(r.first_tick(), 42);
+        assert_eq!(r.get(41), None);
+        assert_eq!(r.get(42), Some(1));
+    }
+
+    #[test]
+    fn from_samples_round_trips_iter() {
+        let mut r = SeriesRing::new(8);
+        for t in 3..9 {
+            r.push_at(t, t * t);
+        }
+        let samples: Vec<u64> = r.iter().map(|(_, v)| v).collect();
+        let rebuilt = SeriesRing::from_samples(r.first_tick(), &samples);
+        assert_eq!(rebuilt.first_tick(), r.first_tick());
+        assert_eq!(rebuilt.next_tick(), r.next_tick());
+        assert!(rebuilt.iter().eq(r.iter()));
+    }
+}

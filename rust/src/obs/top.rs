@@ -1,0 +1,237 @@
+//! `arcus top` — terminal tables of the worst flows and tenants by SLO
+//! attainment and p99 over the sampled window of a series dump.
+
+use crate::util::units::{Time, MICROS, SECONDS};
+
+use super::dump::DumpData;
+use super::plane::GAUGE_NONE;
+use super::series::SeriesRing;
+
+/// One flow's digest over its retained sample window.
+struct FlowRow {
+    flow: usize,
+    vm: usize,
+    engine: usize,
+    /// Average goodput over the window (Gbit/s), if ≥ 2 samples.
+    gbps: Option<f64>,
+    /// Worst window attainment seen (ratio), if any window had one.
+    att_min: Option<f64>,
+    /// Latest window attainment.
+    att_last: Option<f64>,
+    /// Worst window p99 (ps).
+    p99_max: Option<u64>,
+    /// Latest queue depth sample.
+    depth: u64,
+    /// Drops over the window.
+    drops: u64,
+}
+
+fn delta(r: &SeriesRing) -> u64 {
+    match (r.get(r.first_tick()), r.latest()) {
+        (Some(a), Some(b)) => b.saturating_sub(a),
+        _ => 0,
+    }
+}
+
+fn gauge_min(r: &SeriesRing) -> Option<u64> {
+    r.iter().map(|(_, v)| v).filter(|&v| v != GAUGE_NONE).min()
+}
+
+fn gauge_max(r: &SeriesRing) -> Option<u64> {
+    r.iter().map(|(_, v)| v).filter(|&v| v != GAUGE_NONE).max()
+}
+
+fn row(data: &DumpData, i: usize) -> FlowRow {
+    let f = &data.flows[i];
+    let ticks = f.bytes.len() as u64;
+    let span: Time = ticks.saturating_sub(1) * data.control_period * data.sample_every;
+    let gbps = if span > 0 {
+        Some(delta(&f.bytes) as f64 * 8.0 * SECONDS as f64 / span as f64 / 1e9)
+    } else {
+        None
+    };
+    FlowRow {
+        flow: f.flow,
+        vm: f.vm,
+        engine: f.engine,
+        gbps,
+        att_min: gauge_min(&f.attainment_ppm).map(|v| v as f64 / 1e6),
+        att_last: f
+            .attainment_ppm
+            .latest()
+            .filter(|&v| v != GAUGE_NONE)
+            .map(|v| v as f64 / 1e6),
+        p99_max: gauge_max(&f.p99_ps),
+        depth: f.queue_depth.latest().unwrap_or(0),
+        drops: delta(&f.dropped),
+    }
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    v.map(|x| format!("{x:.3}")).unwrap_or_else(|| "-".into())
+}
+
+fn fmt_us(v: Option<u64>) -> String {
+    v.map(|x| format!("{:.2}", x as f64 / MICROS as f64))
+        .unwrap_or_else(|| "-".into())
+}
+
+/// Sort key: worst attainment first (flows with no attainment sort after
+/// any measured one), ties broken by worst p99, then id for stability.
+fn badness(r: &FlowRow) -> (u64, u64, usize) {
+    let att = r
+        .att_min
+        .map(|a| (a * 1e6).min(1e15) as u64)
+        .unwrap_or(u64::MAX);
+    (att, u64::MAX - r.p99_max.unwrap_or(0), r.flow)
+}
+
+/// Render the worst-flows and worst-tenants tables.
+pub fn render_top(data: &DumpData, limit: usize) -> String {
+    let mut out = String::new();
+    let window_ms = data
+        .flows
+        .iter()
+        .map(|f| f.bytes.len())
+        .max()
+        .unwrap_or(0) as f64
+        * (data.control_period * data.sample_every) as f64
+        / 1e9;
+    out.push_str(&format!(
+        "{} flows, sample window ≤ {:.2} ms ({} ticks/sample)\n\n",
+        data.flows.len(),
+        window_ms,
+        data.sample_every
+    ));
+
+    let mut rows: Vec<FlowRow> = (0..data.flows.len()).map(|i| row(data, i)).collect();
+    rows.sort_by_key(badness);
+
+    out.push_str("worst flows by attainment / p99:\n");
+    out.push_str("flow  vm eng   gbps  att.min att.last  p99.max(us)  depth  drops\n");
+    for r in rows.iter().take(limit) {
+        out.push_str(&format!(
+            "{:>4} {:>3} {:>3} {:>6} {:>8} {:>8} {:>12} {:>6} {:>6}\n",
+            r.flow,
+            r.vm,
+            r.engine,
+            r.gbps
+                .map(|g| format!("{g:.2}"))
+                .unwrap_or_else(|| "-".into()),
+            fmt_opt(r.att_min),
+            fmt_opt(r.att_last),
+            fmt_us(r.p99_max),
+            r.depth,
+            r.drops,
+        ));
+    }
+
+    // Tenant rollup: worst attainment / p99 of any member flow, summed rate.
+    let n_vms = rows.iter().map(|r| r.vm + 1).max().unwrap_or(0);
+    let mut tenants: Vec<(usize, Option<f64>, Option<f64>, Option<u64>, u64)> =
+        (0..n_vms).map(|vm| (vm, None, None, None, 0)).collect();
+    let mut seen = vec![false; n_vms];
+    for r in &rows {
+        let t = &mut tenants[r.vm];
+        seen[r.vm] = true;
+        t.1 = match (t.1, r.gbps) {
+            (Some(a), Some(b)) => Some(a + b),
+            (a, b) => a.or(b),
+        };
+        t.2 = match (t.2, r.att_min) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        t.3 = t.3.max(r.p99_max);
+        t.4 += r.drops;
+    }
+    let mut tenants: Vec<_> = tenants
+        .into_iter()
+        .enumerate()
+        .filter(|(i, _)| seen[*i])
+        .map(|(_, t)| t)
+        .collect();
+    tenants.sort_by_key(|t| {
+        (
+            t.2.map(|a| (a * 1e6).min(1e15) as u64).unwrap_or(u64::MAX),
+            u64::MAX - t.3.unwrap_or(0),
+            t.0,
+        )
+    });
+
+    out.push_str("\nworst tenants:\n");
+    out.push_str("  vm   gbps  att.min  p99.max(us)  drops\n");
+    for (vm, gbps, att, p99, drops) in tenants.iter().take(limit) {
+        out.push_str(&format!(
+            "{:>4} {:>6} {:>8} {:>12} {:>6}\n",
+            vm,
+            gbps.map(|g| format!("{g:.2}")).unwrap_or_else(|| "-".into()),
+            fmt_opt(*att),
+            fmt_us(*p99),
+            drops,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::plane::FlowSeries;
+
+    fn mk_flow(flow: usize, vm: usize, att: &[u64], p99: &[u64]) -> FlowSeries {
+        let mut f = FlowSeries {
+            flow,
+            vm,
+            engine: 0,
+            bytes: SeriesRing::new(8),
+            ops: SeriesRing::new(8),
+            dropped: SeriesRing::new(8),
+            queue_depth: SeriesRing::new(8),
+            attainment_ppm: SeriesRing::new(8),
+            p99_ps: SeriesRing::new(8),
+            directives: SeriesRing::new(8),
+        };
+        for (t, (&a, &p)) in att.iter().zip(p99).enumerate() {
+            let t = t as u64;
+            f.bytes.push_at(t, (t + 1) * 125_000);
+            f.attainment_ppm.push_at(t, a);
+            f.p99_ps.push_at(t, p);
+            f.queue_depth.push_at(t, 2);
+            f.dropped.push_at(t, t);
+        }
+        f
+    }
+
+    #[test]
+    fn worst_flow_sorts_first() {
+        let data = DumpData {
+            control_period: 100_000_000, // 100 µs
+            sample_every: 1,
+            flows: vec![
+                mk_flow(0, 0, &[990_000, 980_000], &[1_000_000, 2_000_000]),
+                mk_flow(1, 1, &[500_000, 700_000], &[9_000_000, 8_000_000]),
+            ],
+        };
+        let out = render_top(&data, 10);
+        let flows_at: Vec<usize> = out
+            .lines()
+            .filter(|l| l.starts_with("   0") || l.starts_with("   1"))
+            .map(|l| l.trim().split_whitespace().next().unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(flows_at[0], 1, "flow 1 (att 0.5) must rank worst:\n{out}");
+        assert!(out.contains("0.500"));
+        assert!(out.contains("worst tenants"));
+    }
+
+    #[test]
+    fn handles_empty_dump() {
+        let data = DumpData {
+            control_period: 1,
+            sample_every: 1,
+            flows: vec![],
+        };
+        let out = render_top(&data, 5);
+        assert!(out.contains("0 flows"));
+    }
+}

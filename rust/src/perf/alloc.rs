@@ -1,0 +1,61 @@
+//! Counting global allocator for the allocation-count regression gate.
+//!
+//! Built unconditionally so [`alloc_count`] always links, but only
+//! *installed* as the global allocator when the binary is compiled with
+//! `--features bench-alloc` (see `main.rs`): without the install the
+//! counter stays 0 and `allocs_per_event` reports 0.0 ("unmeasured"),
+//! which the floor gate skips. The counter is a single relaxed atomic
+//! increment per alloc/realloc — cheap enough to leave on for a bench
+//! run, but not free, which is why the hot-path events/sec floors are
+//! gated on the un-instrumented build.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Forwards to the system allocator, counting allocations and
+/// reallocations (frees are not counted: the gate tracks allocation
+/// pressure, and every alloc eventually pairs with a free).
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Total allocations + reallocations since process start. Always 0 unless
+/// [`CountingAlloc`] is installed as the `#[global_allocator]`.
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Without the feature the allocator is not installed, so the only
+    // contract testable here is monotonicity of the raw counter.
+    #[test]
+    fn counter_is_monotone() {
+        let a = alloc_count();
+        ALLOCS.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(alloc_count(), a + 3);
+    }
+}

@@ -21,13 +21,19 @@
 //!   "sim_ms": 50.0,
 //!   "wall_ms_per_sim_ms": 162.4,
 //!   "peak_queue_depth": 412,
-//!   "rss_hint_kb": 24576
+//!   "rss_hint_kb": 24576,
+//!   "allocs_per_event": 0.012
 //! }
 //! ```
 //!
 //! `rss_hint_kb` is the process-lifetime `VmHWM` sampled after the run —
 //! monotone across entries of one invocation (see [`rss_hint_kb`]); run a
 //! single preset × queue per invocation to isolate a scenario's footprint.
+//! `allocs_per_event` is 0.0 unless the binary was built with
+//! `--features bench-alloc` (the counting allocator, [`alloc`]); when
+//! measured it gates against `[floor] max_allocs_per_event`.
+
+pub mod alloc;
 
 use crate::accel::AccelModel;
 use crate::flow::{FlowSpec, Path, Slo, TrafficPattern};
@@ -177,6 +183,9 @@ pub struct BenchResult {
     pub sim_ms: f64,
     pub peak_queue_depth: usize,
     pub rss_hint_kb: u64,
+    /// Heap allocations (+ reallocs) per executed event; 0.0 when the
+    /// counting allocator is not installed (`bench-alloc` feature off).
+    pub allocs_per_event: f64,
 }
 
 impl BenchResult {
@@ -193,7 +202,8 @@ impl BenchResult {
         format!(
             "{{\"scenario\":\"{}\",\"queue\":\"{}\",\"events_executed\":{},\
              \"events_per_sec\":{:.1},\"wall_ms\":{:.3},\"sim_ms\":{:.3},\
-             \"wall_ms_per_sim_ms\":{:.3},\"peak_queue_depth\":{},\"rss_hint_kb\":{}}}",
+             \"wall_ms_per_sim_ms\":{:.3},\"peak_queue_depth\":{},\"rss_hint_kb\":{},\
+             \"allocs_per_event\":{:.4}}}",
             json_escape(&self.scenario),
             json_escape(self.queue),
             self.events_executed,
@@ -203,6 +213,7 @@ impl BenchResult {
             self.wall_ms_per_sim_ms(),
             self.peak_queue_depth,
             self.rss_hint_kb,
+            self.allocs_per_event,
         )
     }
 }
@@ -252,11 +263,13 @@ pub fn run_preset_report(
     queue: QueueKind,
 ) -> (BenchResult, crate::system::SystemReport) {
     let spec = spec_for(p);
+    let a0 = alloc::alloc_count();
     let report = match queue {
         QueueKind::Heap => run_with::<BinaryHeapQueue<EngineEvent>>(&spec),
         QueueKind::Calendar => run_with::<CalendarQueue<EngineEvent>>(&spec),
         QueueKind::Wheel => run_with::<HierWheel<EngineEvent>>(&spec),
     };
+    let allocs = alloc::alloc_count().saturating_sub(a0);
     let result = BenchResult {
         scenario: p.name.to_string(),
         queue: report.queue,
@@ -266,6 +279,11 @@ pub fn run_preset_report(
         sim_ms: p.duration_ms as f64,
         peak_queue_depth: report.peak_queue_depth,
         rss_hint_kb: rss_hint_kb(),
+        allocs_per_event: if report.events > 0 {
+            allocs as f64 / report.events as f64
+        } else {
+            0.0
+        },
     };
     (result, report)
 }
@@ -324,6 +342,16 @@ pub fn load_floor_for(path: &std::path::Path, preset: &str) -> anyhow::Result<f6
     load_floor(path)
 }
 
+/// Optional allocation-count ceiling: `[floor] max_allocs_per_event`.
+/// `None` when the file commits no ceiling; the gate additionally skips
+/// results whose `allocs_per_event` is 0.0 (counting allocator absent).
+pub fn load_alloc_ceiling(path: &std::path::Path) -> anyhow::Result<Option<f64>> {
+    let doc = crate::config::Document::from_file(path)?;
+    Ok(doc
+        .get("floor", "max_allocs_per_event")
+        .and_then(crate::config::Value::as_float))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -379,6 +407,7 @@ mod tests {
             sim_ms: 5.0,
             peak_queue_depth: 7,
             rss_hint_kb: 1024,
+            allocs_per_event: 0.25,
         };
         let js = to_json(&[r]);
         for key in [
@@ -391,6 +420,7 @@ mod tests {
             "\"wall_ms_per_sim_ms\"",
             "\"peak_queue_depth\"",
             "\"rss_hint_kb\"",
+            "\"allocs_per_event\"",
         ] {
             assert!(js.contains(key), "missing {key} in {js}");
         }
@@ -425,6 +455,7 @@ mod tests {
             sim_ms: 1.0,
             peak_queue_depth: 1,
             rss_hint_kb: 0,
+            allocs_per_event: 0.0,
         };
         let js = r.to_json();
         assert!(
@@ -446,6 +477,14 @@ mod tests {
         std::fs::write(&path, "[floor]\nmin_events_per_sec = 250000\n").unwrap();
         let floor = load_floor(&path).unwrap();
         assert!((floor - 250_000.0).abs() < 1e-9);
+        // No ceiling committed → None, not an error.
+        assert_eq!(load_alloc_ceiling(&path).unwrap(), None);
+        std::fs::write(
+            &path,
+            "[floor]\nmin_events_per_sec = 250000\nmax_allocs_per_event = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(load_alloc_ceiling(&path).unwrap(), Some(0.5));
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -16,6 +16,7 @@
 use std::collections::BTreeMap;
 
 use crate::flow::Slo;
+use crate::metrics::Histogram;
 use crate::util::units::MICROS;
 
 use super::grid::{burst_name, ScenarioKey};
@@ -215,6 +216,13 @@ pub struct SweepAggregate {
     /// Summaries in grid expansion order.
     pub scenarios: Vec<ScenarioSummary>,
     pub axes: Vec<AxisTable>,
+    /// Completion-latency histogram pooled across every scenario: each
+    /// report's per-engine observability histograms, merged in grid
+    /// expansion order. Histogram merge is commutative and associative
+    /// (property-tested), so this fold is independent of worker-thread
+    /// interleaving by construction — but the fixed order makes the
+    /// determinism unconditional.
+    pub pooled_lat: Histogram,
 }
 
 /// Axis label formatters. Numeric labels are zero-padded / fixed-precision
@@ -248,6 +256,12 @@ const AXES: [&str; 10] = [
 /// Fold executed scenarios into the aggregate.
 pub fn aggregate(outcomes: &[ScenarioOutcome]) -> SweepAggregate {
     let scenarios: Vec<ScenarioSummary> = outcomes.iter().map(summarize).collect();
+    let mut pooled_lat = Histogram::new();
+    for o in outcomes {
+        for e in &o.report.obs.engines {
+            pooled_lat.merge(&e.lat);
+        }
+    }
     let mut axes = Vec::new();
     for axis in AXES {
         let mut groups: BTreeMap<String, Vec<&ScenarioSummary>> = BTreeMap::new();
@@ -267,7 +281,11 @@ pub fn aggregate(outcomes: &[ScenarioOutcome]) -> SweepAggregate {
                 .collect(),
         });
     }
-    SweepAggregate { scenarios, axes }
+    SweepAggregate {
+        scenarios,
+        axes,
+        pooled_lat,
+    }
 }
 
 impl SweepAggregate {
@@ -280,6 +298,17 @@ impl SweepAggregate {
             self.scenarios.len(),
             self.axes.len()
         ));
+        if !self.pooled_lat.is_empty() {
+            let us = |p: f64| self.pooled_lat.percentile(p) as f64 / MICROS as f64;
+            out.push_str(&format!(
+                "pooled latency (merged engine histograms, {} completions): \
+                 p50={:.2}us p99={:.2}us p999={:.2}us\n",
+                self.pooled_lat.count(),
+                us(50.0),
+                us(99.0),
+                us(99.9)
+            ));
+        }
         let opt = |v: Option<f64>, prec: usize| match v {
             Some(x) => format!("{x:.prec$}"),
             None => "-".to_string(),
@@ -389,6 +418,8 @@ mod tests {
                 peak_queue_depth: 4,
                 queue: "binary_heap",
                 wall_secs: 0.001,
+                series_digest: 0,
+                obs: Default::default(),
             },
         }
     }
@@ -458,6 +489,30 @@ mod tests {
         assert!(rendered.contains("[by faults]"));
         // The healthy group renders dashes, not zeros.
         assert!(rendered.contains(" - "), "{rendered}");
+    }
+
+    #[test]
+    fn pooled_latency_merges_engine_histograms_across_scenarios() {
+        use crate::obs::{EngineObs, SeriesRing};
+        let mut a = outcome(0, Mode::Arcus, 1, 10.0);
+        let mut b = outcome(1, Mode::HostNoTs, 1, 10.0);
+        for (o, lat_ps) in [(&mut a, 10_000u64), (&mut b, 90_000u64)] {
+            let mut lat = Histogram::new();
+            lat.record(lat_ps);
+            lat.record(lat_ps);
+            o.report.obs.engines.push(EngineObs {
+                engine: 0,
+                bytes: 0,
+                ops: 2,
+                lat,
+                bytes_series: SeriesRing::new(1),
+            });
+        }
+        let agg = aggregate(&[a, b]);
+        assert_eq!(agg.pooled_lat.count(), 4);
+        let rendered = agg.render();
+        assert!(rendered.contains("pooled latency"), "{rendered}");
+        assert!(rendered.contains("4 completions"), "{rendered}");
     }
 
     #[test]

@@ -65,8 +65,9 @@ use crate::coordinator::status::MeasuredWindow;
 use crate::dma::Policy;
 use crate::faults::{fault_window, FaultKind};
 use crate::flow::{FlowKind, Path, Slo, TrafficGen};
-use crate::metrics::{FlowMetrics, Histogram, ThroughputSampler};
+use crate::metrics::{FlowMetrics, ThroughputSampler};
 use crate::nic::NicPort;
+use crate::obs::{ObsConfig, ObsPlane};
 use crate::pcie::fabric::{Fabric, OpComplete, OpKind};
 use crate::shaping::{
     NodeBudget, ShapeMode, Shaper, ShaperTree, SoftwareShaper, SoftwareShaperConfig, TokenBucket,
@@ -83,10 +84,6 @@ use super::spec::{ExperimentSpec, LifecycleEvent, Mode};
 
 /// Hardware shaping decision latency (§5.3.1: 36 ns).
 const SHAPING_LATENCY: Time = 36 * NANOS;
-
-/// A flow counts as recovered once a post-fault control-period window
-/// carries ≥ this fraction of its SLO rate.
-const RECOVERY_FRACTION: f64 = 0.95;
 
 /// A message travelling through the system.
 #[derive(Debug, Clone, Copy)]
@@ -226,25 +223,6 @@ struct FlowState {
     rogue: bool,
 }
 
-/// Per-flow, per-era completion counters (fault-injection runs only).
-#[derive(Default)]
-struct EraAcc {
-    bytes: u64,
-    ops: u64,
-    lat: Histogram,
-}
-
-/// Post-fault recovery detection: fixed control-period windows starting at
-/// the fault window's end; the first window carrying ≥ 95% of the SLO rate
-/// marks recovery.
-#[derive(Default, Clone, Copy)]
-struct RecoveryTrack {
-    win_start: Time,
-    bytes: u64,
-    ops: u64,
-    recovered_at: Option<Time>,
-}
-
 /// The component graph.
 pub struct World {
     spec: ExperimentSpec,
@@ -290,13 +268,13 @@ pub struct World {
     scratch_fabric: Vec<OpComplete>,
     scratch_accel: Vec<crate::accel::JobDone>,
     scratch_raid: Vec<IoDone>,
-    /// Union fault window `[start, end)` (None = healthy run; the per-era
-    /// accounting below is active only when set).
+    /// Union fault window `[start, end)` (None = healthy run; the obs
+    /// plane's per-era accounting is active only when set).
     fault_window: Option<(Time, Time)>,
-    /// Per-flow pre/during/post era counters (empty on healthy runs).
-    era_stats: Vec<[EraAcc; 3]>,
-    /// Per-flow post-fault recovery trackers (empty on healthy runs).
-    recovery: Vec<RecoveryTrack>,
+    /// The streaming observability plane: per-flow/tenant/engine counters
+    /// and tick-indexed series sampled on `ControlTick`, plus the fault-era
+    /// + recovery accounting `FlowReport.fault` is derived from.
+    obs: ObsPlane,
     /// Algorithm-1 ticks are lost while `now` is before this (the
     /// `ControlOutage` fault).
     control_outage_until: Time,
@@ -312,6 +290,7 @@ impl Handler<EngineEvent> for World {
                     self.kick_fetch(sim, flow, arrived);
                 } else if arrived >= self.spec.warmup {
                     self.metrics[flow].on_drop();
+                    self.obs.on_drop(flow);
                 }
             }
             Ev::Fetch { flow, gen } => {
@@ -500,6 +479,27 @@ impl World {
             })
             .collect();
 
+        let fw = fault_window(&spec.faults);
+        let flow_homes: Vec<(usize, usize)> = spec
+            .flows
+            .iter()
+            .enumerate()
+            .map(|(i, f)| (f.vm, flow_tree[i]))
+            .collect();
+        let n_tenants = spec.flows.iter().map(|f| f.vm + 1).max().unwrap_or(0);
+        let obs = ObsPlane::new(
+            ObsConfig {
+                control_period: spec.control_period,
+                duration: spec.duration,
+                retention: spec.obs_retention,
+                sample_every: spec.obs_sample_every,
+            },
+            &flow_homes,
+            n_tenants,
+            n_trees,
+            fw,
+        );
+
         World {
             host_rng: Rng::for_stream(spec.seed, 0x4057),
             flows,
@@ -530,17 +530,8 @@ impl World {
             scratch_fabric: Vec::new(),
             scratch_accel: Vec::new(),
             scratch_raid: Vec::new(),
-            fault_window: fault_window(&spec.faults),
-            era_stats: if spec.faults.is_empty() {
-                Vec::new()
-            } else {
-                (0..n).map(|_| Default::default()).collect()
-            },
-            recovery: if spec.faults.is_empty() {
-                Vec::new()
-            } else {
-                vec![RecoveryTrack::default(); n]
-            },
+            fault_window: fw,
+            obs,
             control_outage_until: 0,
             spec,
         }
@@ -595,6 +586,11 @@ impl World {
             self.flows[flow].contract_base_ops = self.metrics[flow].completed;
         }
         self.flows[flow].arrived_at = now;
+        // Mirror the registration into the obs plane: recovery windows and
+        // window-attainment gauges judge against the live contract.
+        self.obs.note_arrival(flow, now);
+        let slo = self.flows[flow].current_slo;
+        self.obs.set_flow_slo(flow, slo);
     }
 
     /// Program the interface hardware (or host limiter) a control-plane
@@ -701,6 +697,7 @@ impl World {
         match self.ctrl.update_slo(flow, slo) {
             Ok(admitted) => {
                 self.flows[flow].current_slo = slo;
+                self.obs.set_flow_slo(flow, slo);
                 // The new contract's attainment era starts at the decision
                 // (the ~10 µs apply skew is negligible, and anchoring here
                 // guarantees the era exists even when the run — or the
@@ -763,6 +760,7 @@ impl World {
         self.schedule_next_arrival(sim, flow);
         if !self.flows[flow].admitted {
             self.metrics[flow].on_drop();
+            self.obs.on_drop(flow);
             return;
         }
         if self.ingress_is_wire(flow) {
@@ -778,6 +776,7 @@ impl World {
             if self.flows[flow].queue.len() >= self.spec.queue_cap {
                 if now >= self.spec.warmup {
                     self.metrics[flow].on_drop();
+                    self.obs.on_drop(flow);
                 }
                 return;
             }
@@ -1170,65 +1169,15 @@ impl World {
             if self.spec.trace {
                 self.traces[flow].push((at, lat, msg.bytes));
             }
-            if let Some((fs, fe)) = self.fault_window {
-                let era = if at < fs {
-                    0
-                } else if at < fe {
-                    1
-                } else {
-                    2
-                };
-                let acc = &mut self.era_stats[flow][era];
-                acc.bytes += msg.bytes;
-                acc.ops += 1;
-                acc.lat.record(lat);
-                if era == 2 {
-                    self.track_recovery(flow, at, msg.bytes, fe);
-                }
-            }
+            // The obs plane folds the completion into every level — flow
+            // counters, tenant/engine histograms, and (on faulted runs) the
+            // per-era + recovery accounting `FlowReport.fault` derives
+            // from. Completion times arrive monotone here, which is what
+            // its era-boundary snapshotting relies on.
+            self.obs.on_complete(flow, at, lat, msg.bytes);
         }
         // The freed pipeline slot can admit the next message.
         self.kick_fetch(sim, flow, at);
-    }
-
-    /// Post-fault recovery detection: fixed control-period windows from the
-    /// fault window's end; the first one carrying ≥ [`RECOVERY_FRACTION`]
-    /// of the flow's SLO rate marks the flow recovered.
-    fn track_recovery(&mut self, flow: usize, at: Time, bytes: u64, fault_end: Time) {
-        let Some((rate, mode)) = self.flows[flow].current_slo.required_rate() else {
-            return;
-        };
-        let r = &mut self.recovery[flow];
-        if r.recovered_at.is_some() {
-            return;
-        }
-        if r.win_start == 0 {
-            // Late arrivals are judged from their own arrival, not from a
-            // heal they weren't present for.
-            r.win_start = fault_end.max(self.flows[flow].arrived_at);
-        }
-        let period = self.spec.control_period.max(1);
-        // Close every full window before `at` (a long completion gap closes
-        // them all; an empty window can never carry the SLO rate).
-        while at >= r.win_start + period {
-            let achieved = match mode {
-                ShapeMode::Gbps => {
-                    r.bytes as f64 * crate::util::units::SECONDS as f64 / period as f64
-                }
-                ShapeMode::Iops => {
-                    r.ops as f64 * crate::util::units::SECONDS as f64 / period as f64
-                }
-            };
-            if achieved >= rate * RECOVERY_FRACTION {
-                r.recovered_at = Some(r.win_start + period);
-                return;
-            }
-            r.win_start += period;
-            r.bytes = 0;
-            r.ops = 0;
-        }
-        r.bytes += bytes;
-        r.ops += 1;
     }
 
     // ---- Control plane ----------------------------------------------------
@@ -1247,6 +1196,7 @@ impl World {
             return;
         }
         // 1. Refresh measured windows from the "hardware counters".
+        let tick = now / self.spec.control_period.max(1);
         let mut windows: Vec<(usize, MeasuredWindow)> = Vec::new();
         for i in 0..self.flows.len() {
             if self.ctrl.query_status(i).is_none() {
@@ -1267,8 +1217,24 @@ impl World {
             self.flows[i].last_bytes = m.bytes;
             self.flows[i].last_ops = m.completed;
             self.flows[i].last_tick = now;
+            // The obs plane samples its series from the very window the
+            // control plane is about to plan on — no re-measurement, no
+            // extra events, no allocation. Series are indexed by this
+            // deterministic tick number, never wall clock.
+            let depth = self.flows[i].queue.len() + self.flows[i].inflight;
+            self.obs.on_control_sample(
+                tick,
+                i,
+                span,
+                bytes,
+                ops,
+                p99,
+                depth,
+                self.flows[i].reconfigs as u64,
+            );
             windows.push((i, MeasuredWindow { span, bytes, ops, p99_latency: p99 }));
         }
+        self.obs.on_tick_done(tick);
         // 2. Plan through the API; 3. apply with the MMIO latency.
         let directives = self.ctrl.tick(now, &windows);
         let delay = self.spec.reconfig_latency;
@@ -1523,7 +1489,12 @@ impl<Q: EventQueue<EngineEvent> + Default> Engine<Q> {
                 // like contract attainment.)
                 if let Some((fs, fe)) = w.fault_window {
                     let slo = w.flows[i].current_slo;
-                    let acc = &w.era_stats[i];
+                    // Era bytes/ops/p99 are *derived from the obs plane's
+                    // series counters* (boundary snapshots of the same
+                    // cumulative totals the tick series samples), not from
+                    // bespoke accounting; `rust/tests/faults.rs` pins them
+                    // against a trace-derived oracle.
+                    let eras = w.obs.flow_eras(i).expect("faulted run tracks eras");
                     let active_lo = w.flows[i].arrived_at.max(w.spec.warmup);
                     let active_hi = w.flows[i].departed_at.unwrap_or(duration);
                     let overlap = |lo: Time, hi: Time| {
@@ -1535,20 +1506,16 @@ impl<Q: EventQueue<EngineEvent> + Default> Engine<Q> {
                         overlap(fe, duration),
                     ];
                     let era = |k: usize| {
-                        EraReport::new(
-                            acc[k].bytes,
-                            acc[k].ops,
-                            spans[k],
-                            acc[k].lat.percentile(99.0),
-                            &slo,
-                        )
+                        let (bytes, ops, p99) = eras[k];
+                        EraReport::new(bytes, ops, spans[k], p99, &slo)
                     };
                     r.fault = Some(FaultReport {
                         pre: era(0),
                         during: era(1),
                         post: era(2),
-                        recovery_time: w.recovery[i]
-                            .recovered_at
+                        recovery_time: w
+                            .obs
+                            .recovered_at(i)
                             .map(|t| t.saturating_sub(fe)),
                     });
                 }
@@ -1578,6 +1545,8 @@ impl<Q: EventQueue<EngineEvent> + Default> Engine<Q> {
             })
             .collect();
         use crate::pcie::link::Dir;
+        let obs = w.obs.into_snapshot();
+        let series_digest = obs.digest();
         SystemReport {
             mode: w.spec.mode.name(),
             per_flow,
@@ -1591,6 +1560,8 @@ impl<Q: EventQueue<EngineEvent> + Default> Engine<Q> {
             peak_queue_depth: self.sim.peak_pending(),
             queue: self.sim.queue_name(),
             wall_secs: wall,
+            series_digest,
+            obs,
         }
     }
 }

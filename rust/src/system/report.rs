@@ -2,6 +2,7 @@
 
 use crate::flow::Slo;
 use crate::metrics::{FlowMetrics, ThroughputSampler};
+use crate::obs::ObsSnapshot;
 use crate::util::units::{Rate, Time, MICROS, MILLIS, SECONDS};
 
 /// One era's measured outcome for one flow (fault-injection runs split the
@@ -199,6 +200,15 @@ pub struct SystemReport {
     pub queue: &'static str,
     /// Wall-clock seconds the simulation took (perf accounting).
     pub wall_secs: f64,
+    /// FNV-1a digest over the observability plane's snapshot (every series
+    /// sample + rollup histogram bucket). Part of the canonical report, so
+    /// the determinism suite asserts the whole in-run metrics surface is
+    /// byte-identical across event-queue disciplines.
+    pub series_digest: u64,
+    /// End-of-run snapshot of the in-run observability plane (tick-indexed
+    /// series + tenant/engine histogram rollups). Not serialized per-value
+    /// into `canonical()` — the digest stands in for it.
+    pub obs: ObsSnapshot,
 }
 
 impl SystemReport {
@@ -244,7 +254,7 @@ impl SystemReport {
         let mut out = String::new();
         out.push_str(&format!(
             "mode={} span={} events={} peak_queue={} pcie_up={:?} pcie_down={:?} \
-             accel_util={:?} nic_rx_dropped={} fault_window={:?}\n",
+             accel_util={:?} nic_rx_dropped={} fault_window={:?} series_digest={:016x}\n",
             self.mode,
             self.measured_span,
             self.events,
@@ -254,6 +264,7 @@ impl SystemReport {
             self.accel_util,
             self.nic_rx_dropped,
             self.fault_window,
+            self.series_digest,
         ));
         for f in &self.per_flow {
             // Debug formatting of f64 is shortest-roundtrip: byte-stable

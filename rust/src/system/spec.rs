@@ -155,6 +155,16 @@ pub struct ExperimentSpec {
     /// Shaper-tree pacing cadence (one `ShaperTick` event per tree per
     /// interval while any leaf waits).
     pub shaper_tick: Time,
+    /// Observability-plane series retention: how many samples each
+    /// per-flow/tenant/engine [`crate::obs::SeriesRing`] keeps (rounded up
+    /// to a power of two; rings sized to the run length when shorter).
+    /// 0 disables series sampling — counters, histograms, and fault-era
+    /// accounting still run.
+    pub obs_retention: usize,
+    /// Sample the observability series every Nth control tick (≥ 1);
+    /// coarser cadence for long runs where per-tick series would churn
+    /// the rings.
+    pub obs_sample_every: u64,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -187,7 +197,17 @@ impl ExperimentSpec {
             faults: Vec::new(),
             hierarchy: false,
             shaper_tick: crate::shaping::hierarchy::DEFAULT_TICK_INTERVAL,
+            obs_retention: 256,
+            obs_sample_every: 1,
         }
+    }
+
+    /// Set observability-series retention (samples per ring) and sampling
+    /// cadence (every Nth control tick).
+    pub fn with_obs(mut self, retention: usize, sample_every: u64) -> Self {
+        self.obs_retention = retention;
+        self.obs_sample_every = sample_every.max(1);
+        self
     }
 
     /// Enable hierarchical shaping (the per-engine shaper tree).

@@ -118,6 +118,107 @@ fn golden_fault_scenario_dips_and_recovers() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Consistency: obs-plane era accounting vs a trace-derived oracle
+// ---------------------------------------------------------------------------
+
+/// `FlowReport.fault` is derived from the obs plane's boundary snapshots
+/// and windowed recovery tracker (`rust/src/obs/plane.rs`), not from the
+/// completion trace. Rebuild every number independently from
+/// `FlowReport.trace` — era assignment by completion time, per-era
+/// log-bucketed p99, attainment through `EraReport::new`, and a verbatim
+/// replay of the windowed recovery rule — and assert exact equality, so
+/// replacing the old bespoke era counters with series-derived accounting
+/// is observationally invisible on the golden fault scenario.
+#[test]
+fn fault_report_matches_trace_derived_oracle() {
+    use arcus::metrics::Histogram;
+    use arcus::obs::RECOVERY_FRACTION;
+    use arcus::system::EraReport;
+
+    let spec = golden_fault_spec();
+    let report = run_with::<BinaryHeapQueue<EngineEvent>>(&spec);
+    let (fs, fe) = report.fault_window.expect("fault window");
+    assert_eq!((fs, fe), (4 * MILLIS, 7 * MILLIS));
+    // Every golden flow arrives at 0 and never departs, so the era spans
+    // clamp to exactly [warmup, fs), [fs, fe), [fe, duration).
+    let spans = [fs - spec.warmup, fe - fs, spec.duration - fe];
+    for f in &report.per_flow {
+        assert!(!f.trace.is_empty(), "flow {} produced no trace", f.flow);
+        // Era counters and per-era latency histograms from the trace
+        // alone. The same log-bucketed `Histogram` must be used: the
+        // plane's p99 is quantized to its bucket boundaries.
+        let mut bytes = [0u64; 3];
+        let mut ops = [0u64; 3];
+        let mut lat = [Histogram::new(), Histogram::new(), Histogram::new()];
+        for &(at, l, b) in &f.trace {
+            let era = if at < fs {
+                0
+            } else if at < fe {
+                1
+            } else {
+                2
+            };
+            bytes[era] += b;
+            ops[era] += 1;
+            lat[era].record(l);
+        }
+        let fr = f.fault.expect("fault metrics present");
+        let got = [fr.pre, fr.during, fr.post];
+        for k in 0..3 {
+            let want =
+                EraReport::new(bytes[k], ops[k], spans[k], lat[k].percentile(99.0), &f.slo);
+            assert_eq!(got[k].bytes, want.bytes, "flow {} era {k} bytes", f.flow);
+            assert_eq!(got[k].ops, want.ops, "flow {} era {k} ops", f.flow);
+            assert_eq!(got[k].span, want.span, "flow {} era {k} span", f.flow);
+            assert_eq!(got[k].p99, want.p99, "flow {} era {k} p99", f.flow);
+            assert_eq!(
+                got[k].attainment, want.attainment,
+                "flow {} era {k} attainment",
+                f.flow
+            );
+        }
+        // Recovery replay: fixed control-period windows starting at the
+        // fault end, recovered once a full window achieves
+        // RECOVERY_FRACTION of the SLO rate; the compliant window's own
+        // closing completion is not accumulated. Statement-for-statement
+        // mirror of `ObsPlane::track_recovery`.
+        let (rate, mode) = f.slo.required_rate().expect("throughput SLO");
+        let period = spec.control_period;
+        let mut win_start = fe;
+        let (mut wb, mut wo) = (0u64, 0u64);
+        let mut recovered_at = None;
+        'replay: for &(at, _, b) in f.trace.iter().filter(|&&(at, _, _)| at >= fe) {
+            while at >= win_start + period {
+                let achieved = match mode {
+                    ShapeMode::Gbps => wb as f64 * SECONDS as f64 / period as f64,
+                    ShapeMode::Iops => wo as f64 * SECONDS as f64 / period as f64,
+                };
+                if achieved >= rate * RECOVERY_FRACTION {
+                    recovered_at = Some(win_start + period);
+                    break 'replay;
+                }
+                win_start += period;
+                wb = 0;
+                wo = 0;
+            }
+            wb += b;
+            wo += 1;
+        }
+        assert!(
+            recovered_at.is_some(),
+            "flow {}: oracle replay never recovered",
+            f.flow
+        );
+        assert_eq!(
+            fr.recovery_time,
+            recovered_at.map(|t| t - fe),
+            "flow {} recovery time diverges from the trace replay",
+            f.flow
+        );
+    }
+}
+
 #[test]
 fn degraded_exemplar_config_runs_with_fault_metrics() {
     // The committed exemplar (CI's chaos-smoke input) must parse, run, and

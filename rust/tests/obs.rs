@@ -1,0 +1,252 @@
+//! Integration tests for the streaming observability plane: the
+//! Prometheus text exporter's format guarantees, the binary series dump's
+//! round-trip through the `arcus top` renderer, the retention knobs, and
+//! the series digest's place in the deterministic canonical report.
+
+use std::collections::HashMap;
+
+use arcus::accel::AccelModel;
+use arcus::flow::{FlowSpec, Path, Slo, TrafficPattern};
+use arcus::obs::{dump, prom, top, GAUGE_NONE};
+use arcus::sim::{BinaryHeapQueue, CalendarQueue, HierWheel};
+use arcus::system::{run_with, EngineEvent, ExperimentSpec, Mode};
+use arcus::util::units::{Rate, Time, MILLIS};
+
+/// Two Arcus tenants on one IPSec engine — small enough to run in every
+/// test, busy enough that every flow completes work and the control plane
+/// ticks many times.
+fn small_spec(duration: Time) -> ExperimentSpec {
+    let line = Rate::gbps(32.0);
+    let flow = |id: usize, slo: f64, load: f64| {
+        FlowSpec::new(
+            id,
+            id,
+            Path::FunctionCall,
+            TrafficPattern::fixed(1500, load, line),
+            Slo::gbps(slo),
+            0,
+        )
+    };
+    ExperimentSpec::new(
+        Mode::Arcus,
+        vec![AccelModel::ipsec_32g()],
+        vec![flow(0, 9.0, 0.4), flow(1, 6.0, 0.3)],
+    )
+    .with_duration(duration)
+    .with_warmup(MILLIS)
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus exporter format contract
+// ---------------------------------------------------------------------------
+
+/// Assert the structural rules of the text exposition format that the CI
+/// `obs-smoke` job also greps for: every family announces `# HELP` then
+/// `# TYPE` before its first sample, `_total` families are counters and
+/// everything else a gauge, and every sample line parses.
+fn check_prom_format(text: &str) {
+    let mut typed: HashMap<&str, &str> = HashMap::new();
+    let mut helped: Vec<&str> = Vec::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().expect("HELP names a family");
+            assert!(!typed.contains_key(name), "HELP must precede TYPE for {name}");
+            helped.push(name);
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("TYPE names a family");
+            let kind = it.next().expect("TYPE carries a kind");
+            assert!(helped.contains(&name), "TYPE without HELP for {name}");
+            let expect = if name.ends_with("_total") { "counter" } else { "gauge" };
+            assert_eq!(kind, expect, "family {name} has the wrong type");
+            typed.insert(name, kind);
+        } else if !line.is_empty() {
+            let name = line
+                .split(|c| c == '{' || c == ' ')
+                .next()
+                .expect("sample line starts with a family name");
+            assert!(typed.contains_key(name), "sample before its TYPE header: {line}");
+            let value = line.rsplit(' ').next().unwrap();
+            assert!(
+                value.parse::<f64>().is_ok() || value == "NaN",
+                "unparseable sample value in: {line}"
+            );
+        }
+    }
+    assert!(!typed.is_empty(), "exposition document rendered no families");
+}
+
+#[test]
+fn prom_export_is_well_formed_and_escapes_labels() {
+    let report = run_with::<BinaryHeapQueue<EngineEvent>>(&small_spec(4 * MILLIS));
+    let label = "smoke \"run\"\\v1".to_string();
+    let text = prom::render(&[(label, &report)]);
+    check_prom_format(&text);
+    // The scenario label survives with exposition-format escaping.
+    assert!(
+        text.contains("scenario=\"smoke \\\"run\\\"\\\\v1\""),
+        "escaped label missing:\n{text}"
+    );
+    // Core families from both the per-flow report and the obs rollups.
+    for family in [
+        "arcus_flow_bytes_total",
+        "arcus_flow_attainment",
+        "arcus_tenant_bytes_total",
+        "arcus_engine_bytes_total",
+        "arcus_events_total",
+    ] {
+        assert!(text.contains(&format!("# TYPE {family} ")), "{family} missing");
+    }
+    // Both flows exported under both labels sets.
+    assert!(text.contains("flow=\"0\",vm=\"0\""));
+    assert!(text.contains("flow=\"1\",vm=\"1\""));
+}
+
+#[test]
+fn prom_counters_are_monotone_across_scrapes() {
+    // Two scrapes of "the same system later": a longer run of the same
+    // spec. Every counter sample in the second document must be >= its
+    // counterpart in the first — the property that makes the cumulative
+    // export safe for Prometheus `rate()`.
+    let early = run_with::<BinaryHeapQueue<EngineEvent>>(&small_spec(3 * MILLIS));
+    let late = run_with::<BinaryHeapQueue<EngineEvent>>(&small_spec(6 * MILLIS));
+    let scrape = |r| prom::render(&[("s".to_string(), r)]);
+    let counters = |text: &str| -> HashMap<String, f64> {
+        text.lines()
+            .filter(|l| !l.starts_with('#') && !l.is_empty())
+            .filter_map(|l| {
+                let (series, value) = l.rsplit_once(' ')?;
+                if series.split('{').next()?.ends_with("_total") {
+                    Some((series.to_string(), value.parse().ok()?))
+                } else {
+                    None
+                }
+            })
+            .collect()
+    };
+    let a = counters(&scrape(&early));
+    let b = counters(&scrape(&late));
+    assert!(!a.is_empty());
+    for (series, &va) in &a {
+        let vb = b.get(series).unwrap_or_else(|| panic!("{series} vanished"));
+        assert!(*vb >= va, "{series} went backwards: {va} -> {vb}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Binary dump -> `arcus top`
+// ---------------------------------------------------------------------------
+
+#[test]
+fn series_dump_round_trips_through_reader() {
+    let report = run_with::<BinaryHeapQueue<EngineEvent>>(&small_spec(4 * MILLIS));
+    let bytes = dump::write(&report.obs);
+    let data = dump::read(&bytes).expect("dump parses");
+    assert_eq!(data.control_period, report.obs.control_period);
+    assert_eq!(data.sample_every, report.obs.sample_every);
+    assert_eq!(data.flows.len(), report.obs.flows.len());
+    for (got, want) in data.flows.iter().zip(report.obs.flows.iter()) {
+        assert_eq!(got.flow, want.flow);
+        assert_eq!(got.vm, want.vm);
+        assert_eq!(got.engine, want.engine);
+        for (g, w) in got.signals().iter().zip(want.signals().iter()) {
+            assert!(g.iter().eq(w.iter()), "flow {} series diverged", want.flow);
+        }
+        // The run actually sampled: cumulative bytes grew, and the gauge
+        // sentinel never leaked into the counter rings.
+        assert!(want.bytes.latest().unwrap_or(0) > 0, "flow {} never sampled", want.flow);
+        assert!(want.bytes.iter().all(|(_, v)| v != GAUGE_NONE));
+    }
+    // Truncated input fails loudly instead of misparsing.
+    assert!(dump::read(&bytes[..bytes.len() / 2]).is_err());
+    assert!(dump::read(b"BOGUS").is_err());
+}
+
+#[test]
+fn top_renders_worst_flows_from_dump() {
+    let report = run_with::<BinaryHeapQueue<EngineEvent>>(&small_spec(4 * MILLIS));
+    let data = dump::read(&dump::write(&report.obs)).expect("dump parses");
+    let out = top::render_top(&data, 10);
+    assert!(out.contains("worst flows by attainment / p99"), "{out}");
+    assert!(out.contains("worst tenants"), "{out}");
+    // Both flows appear; limit=1 trims to the single worst.
+    assert!(out.lines().any(|l| l.trim_start().starts_with("0 ")), "{out}");
+    assert!(out.lines().any(|l| l.trim_start().starts_with("1 ")), "{out}");
+    let trimmed = top::render_top(&data, 1);
+    let flow_rows = |s: &str| {
+        s.lines()
+            .take_while(|l| !l.contains("worst tenants"))
+            .filter(|l| {
+                l.trim_start().starts_with("0 ") || l.trim_start().starts_with("1 ")
+            })
+            .count()
+    };
+    assert_eq!(flow_rows(&trimmed), 1, "{trimmed}");
+    assert_eq!(flow_rows(&out), 2, "{out}");
+}
+
+// ---------------------------------------------------------------------------
+// Retention knobs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn retention_zero_disables_series_but_keeps_counters() {
+    let spec = small_spec(4 * MILLIS).with_obs(0, 1);
+    let report = run_with::<BinaryHeapQueue<EngineEvent>>(&spec);
+    for f in &report.obs.flows {
+        assert!(f.bytes.is_empty(), "flow {} sampled with retention 0", f.flow);
+    }
+    // The rollup counters and histograms still ran.
+    assert!(report.obs.tenants.iter().any(|t| t.bytes > 0));
+    assert!(report.obs.engines.iter().any(|e| !e.lat.is_empty()));
+    // And the digest still pins the (empty-series) surface.
+    assert!(report.canonical().contains("series_digest="));
+}
+
+#[test]
+fn sample_every_thins_the_series() {
+    let dense = run_with::<BinaryHeapQueue<EngineEvent>>(&small_spec(4 * MILLIS));
+    let thin_spec = small_spec(4 * MILLIS).with_obs(256, 4);
+    let thin = run_with::<BinaryHeapQueue<EngineEvent>>(&thin_spec);
+    let dense_len = dense.obs.flows[0].bytes.len();
+    let thin_len = thin.obs.flows[0].bytes.len();
+    assert!(dense_len > 0 && thin_len > 0);
+    assert!(
+        thin_len <= dense_len / 2,
+        "sample_every=4 retained {thin_len} of {dense_len} dense samples"
+    );
+    // Thinning changes only the cadence, not the values: every retained
+    // thin sample (at ring index tick/4) equals the dense sample taken at
+    // that same control tick.
+    let d = &dense.obs.flows[0].bytes;
+    for (idx, v) in thin.obs.flows[0].bytes.iter() {
+        assert_eq!(
+            Some(v),
+            d.get(idx * 4),
+            "thin sample at tick {} diverges from the dense run",
+            idx * 4
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Determinism: the digest is part of the canonical report
+// ---------------------------------------------------------------------------
+
+#[test]
+fn series_digest_identical_across_queue_disciplines() {
+    let spec = small_spec(4 * MILLIS);
+    let heap = run_with::<BinaryHeapQueue<EngineEvent>>(&spec);
+    let cal = run_with::<CalendarQueue<EngineEvent>>(&spec);
+    let wheel = run_with::<HierWheel<EngineEvent>>(&spec);
+    assert!(heap.series_digest != 0, "digest degenerated to zero");
+    assert_eq!(heap.series_digest, cal.series_digest);
+    assert_eq!(heap.series_digest, wheel.series_digest);
+    assert!(heap
+        .canonical()
+        .contains(&format!("series_digest={:016x}", heap.series_digest)));
+    assert_eq!(heap.canonical(), cal.canonical());
+    assert_eq!(heap.canonical(), wheel.canonical());
+    // The digest is recomputable from the snapshot the report carries.
+    assert_eq!(heap.obs.digest(), heap.series_digest);
+}

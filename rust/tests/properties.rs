@@ -1,16 +1,19 @@
 //! Property-based tests (via the in-tree `testkit`) on the coordinator's
 //! invariants: shaping conservation, admission soundness, arbiter work
-//! conservation, and batcher bounds.
+//! conservation, batcher bounds, and the observability plane's mergeable
+//! histograms and tick-indexed series rings.
 
 use arcus::coordinator::planner::{admission_control, Admission, PlannerConfig};
 use arcus::coordinator::status::{FlowStatus, PerFlowStatusTable};
 use arcus::coordinator::ProfileTable;
 use arcus::dma::{Arbiter, Policy};
 use arcus::flow::{Path, Slo};
+use arcus::metrics::Histogram;
+use arcus::obs::SeriesRing;
 use arcus::pcie::fabric::FabricConfig;
 use arcus::accel::AccelModel;
 use arcus::shaping::{ShapeMode, Shaper, TokenBucket, Verdict};
-use arcus::testkit::{forall_cfg, Config, OneOf, PairOf, U64Range, VecOf};
+use arcus::testkit::{forall_cfg, Config, OneOf, PairOf, TripleOf, U64Range, VecOf};
 use arcus::util::units::SECONDS;
 
 fn cfg(cases: u32) -> Config {
@@ -153,6 +156,134 @@ fn prop_retry_hints_advance_time() {
             }
         }
         true
+    });
+}
+
+/// Build a log-bucketed histogram from a sample slice.
+fn hist(xs: &[u64]) -> Histogram {
+    let mut h = Histogram::new();
+    for &x in xs {
+        h.record(x);
+    }
+    h
+}
+
+/// Histogram mergeability: merging two histograms is bucket-for-bucket
+/// identical to a histogram of the concatenated samples. This is the law
+/// the observability plane's tenant→engine fold and the sweep's
+/// cross-thread pooling rely on — a merge never drops, duplicates, or
+/// re-buckets a sample. Checked through derived `Eq` (all buckets plus
+/// total/sum/min/max) and through the quantile surface.
+#[test]
+fn prop_histogram_merge_equals_concat() {
+    let samples = || VecOf {
+        elem: U64Range(0, 10_000_000_000),
+        min_len: 0,
+        max_len: 200,
+    };
+    let gen = PairOf(samples(), samples());
+    forall_cfg(&cfg(128), &gen, |(a, b)| {
+        let mut merged = hist(a);
+        merged.merge(&hist(b));
+        let concat: Vec<u64> = a.iter().chain(b.iter()).copied().collect();
+        let both = hist(&concat);
+        merged == both
+            && merged.count() == (a.len() + b.len()) as u64
+            && merged.percentile(50.0) == both.percentile(50.0)
+            && merged.percentile(99.0) == both.percentile(99.0)
+    });
+}
+
+/// Merge is commutative and associative, so any fold order over per-thread
+/// or per-tenant shards produces the same pooled histogram — the reason
+/// the sweep aggregate can pool engine histograms in grid-expansion order
+/// and still be independent of how the scenario work was scheduled.
+#[test]
+fn prop_histogram_merge_commutative_associative() {
+    let samples = || VecOf {
+        elem: U64Range(0, 1_000_000_000),
+        min_len: 0,
+        max_len: 64,
+    };
+    let gen = TripleOf(samples(), samples(), samples());
+    forall_cfg(&cfg(128), &gen, |(a, b, c)| {
+        let (ha, hb, hc) = (hist(a), hist(b), hist(c));
+        let mut ab = ha.clone();
+        ab.merge(&hb);
+        let mut ba = hb.clone();
+        ba.merge(&ha);
+        if ab != ba {
+            return false;
+        }
+        let mut ab_c = ab.clone();
+        ab_c.merge(&hc);
+        let mut bc = hb.clone();
+        bc.merge(&hc);
+        let mut a_bc = ha.clone();
+        a_bc.merge(&bc);
+        ab_c == a_bc
+    });
+}
+
+/// SeriesRing wrap-around exactness: for any capacity, start tick, and
+/// monotone push pattern with gaps, every retained tick's `get` matches a
+/// dense carry-filled reference, evicted/future ticks return `None`, and
+/// `first_tick`/`next_tick`/`len`/`latest`/`iter` agree with the trailing
+/// window of the reference — including at exact capacity boundaries and
+/// across the gap-larger-than-capacity fast-fill path.
+#[test]
+fn prop_series_ring_wraparound_keeps_tick_indexing_exact() {
+    let gen = TripleOf(
+        U64Range(1, 12),  // requested capacity (rounds up to 1..=16)
+        U64Range(0, 50),  // first tick
+        VecOf { elem: PairOf(U64Range(0, 20), U64Range(0, 1_000_000)), min_len: 1, max_len: 64 },
+    );
+    forall_cfg(&cfg(128), &gen, |(cap, t0, pushes)| {
+        let (cap, t0) = (*cap, *t0);
+        let mut r = SeriesRing::new(cap as usize);
+        // Dense reference: dense[k] is the value at tick t0 + k, with
+        // skipped ticks carry-filled from the previous sample.
+        let mut dense: Vec<u64> = Vec::new();
+        let mut tick = t0;
+        for (i, &(gap, v)) in pushes.iter().enumerate() {
+            if i > 0 {
+                tick += 1 + gap;
+                let carry = *dense.last().unwrap();
+                for _ in 0..gap {
+                    dense.push(carry);
+                }
+            }
+            dense.push(v);
+            r.push_at(tick, v);
+        }
+        let retained = dense.len().min(r.capacity());
+        let next = t0 + dense.len() as u64;
+        if r.len() != retained
+            || r.next_tick() != next
+            || r.first_tick() != next - retained as u64
+            || r.latest() != dense.last().copied()
+        {
+            return false;
+        }
+        for (k, &want) in dense.iter().enumerate() {
+            let t = t0 + k as u64;
+            let expect = if t >= r.first_tick() { Some(want) } else { None };
+            if r.get(t) != expect {
+                return false;
+            }
+        }
+        if t0 > 0 && r.get(t0 - 1).is_some() {
+            return false;
+        }
+        if r.get(next).is_some() {
+            return false;
+        }
+        let tail = dense.len() - retained;
+        r.iter()
+            .eq(dense[tail..]
+                .iter()
+                .enumerate()
+                .map(|(k, &v)| (t0 + (tail + k) as u64, v)))
     });
 }
 
