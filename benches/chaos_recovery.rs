@@ -14,7 +14,7 @@ mod common;
 
 use arcus::flow::pattern::Burstiness;
 use arcus::flow::Path;
-use arcus::sweep::{aggregate, FaultProfile, GridBase, SizeMix, SweepGrid, SweepRunner};
+use arcus::sweep::{aggregate, ControlKind, FaultProfile, GridBase, SizeMix, SweepGrid, SweepRunner};
 use arcus::system::Mode;
 use arcus::util::units::Rate;
 use common::*;
@@ -23,24 +23,35 @@ fn main() {
     banner("Chaos recovery: fault-era attainment floor + recovery time by fault profile");
     // 3 tenants at 70% tightness: healthy attainment is ~1.0 with slack,
     // so every dip below is the fault's doing, not oversubscription.
-    let grid = SweepGrid::new(GridBase {
-        duration: bench_duration(),
-        warmup: warmup(),
-        line_rate: Rate::gbps(32.0),
-        load: 0.9,
-        path: Path::FunctionCall,
-        seed: 1,
-    })
-    .modes(vec![Mode::Arcus, Mode::HostNoTs, Mode::BypassedPanic])
-    .tenants(vec![3])
-    .mixes(vec![SizeMix::Mtu])
-    .bursts(vec![Burstiness::Poisson])
-    .tightness(vec![0.7])
-    .faults(FaultProfile::ALL.to_vec())
-    .accels(vec![arcus::accel::AccelModel::ipsec_32g()])
-    .seeds(vec![1, 2]);
-    grid.validate().expect("chaos grid is well-formed");
-    let outcomes = SweepRunner::new().run(&grid);
+    let base = || {
+        SweepGrid::new(GridBase {
+            duration: bench_duration(),
+            warmup: warmup(),
+            line_rate: Rate::gbps(32.0),
+            load: 0.9,
+            path: Path::FunctionCall,
+            seed: 1,
+        })
+        .tenants(vec![3])
+        .mixes(vec![SizeMix::Mtu])
+        .bursts(vec![Burstiness::Poisson])
+        .tightness(vec![0.7])
+        .faults(FaultProfile::ALL.to_vec())
+        .accels(vec![arcus::accel::AccelModel::ipsec_32g()])
+        .seeds(vec![1, 2])
+    };
+    // The three static management architectures, plus the closed-loop
+    // adaptive plane as a fourth profile (adaptive only wraps the Arcus
+    // runtime, so it sweeps as its own Arcus-mode grid rather than a
+    // control axis over the unmanaged baselines). The combined aggregate
+    // renders a [by control] static-vs-adaptive comparison.
+    let static_grid = base().modes(vec![Mode::Arcus, Mode::HostNoTs, Mode::BypassedPanic]);
+    static_grid.validate().expect("chaos grid is well-formed");
+    let adaptive_grid = base().modes(vec![Mode::Arcus]).control(vec![ControlKind::Adaptive]);
+    adaptive_grid.validate().expect("adaptive chaos grid is well-formed");
+    let runner = SweepRunner::new();
+    let mut outcomes = runner.run(&static_grid);
+    outcomes.extend(runner.run(&adaptive_grid));
     let agg = aggregate(&outcomes);
     print!("{}", agg.render());
     println!();

@@ -1,0 +1,628 @@
+//! [`AdaptiveControlPlane`]: closed-loop traffic shaping over the Arcus
+//! planner, driven by the observability plane's series.
+//!
+//! The static planner ([`ArcusControlPlane`]) reacts to SLO violations by
+//! *boosting* a violating flow's shaper toward `max_boost × SLO` — correct
+//! when the flow itself under-fetches, but counter-productive when the
+//! engine is degraded (a fault, a flapping link): boosting offered load
+//! into a slow engine only grows queues and explodes tail latency. The
+//! adaptive plane closes the loop with the telemetry a [`TickContext`]
+//! now carries, in the bi-level shape of Autothrottle (fast lightweight
+//! per-entity controllers under a slow global re-planner):
+//!
+//! - **Fast tier** (every control tick): per committed flow, an
+//!   additive-increase / multiplicative-decrease controller keyed on the
+//!   obs series' attainment-ppm and queue-depth trend. Under-attainment
+//!   with a *growing* queue means the engine cannot keep up → back off
+//!   multiplicatively (never below the flow's guarantee, its SLO rate);
+//!   under-attainment with a stable or draining queue means capacity is
+//!   back → increase additively to drain backlog; a flow *meeting* its SLO
+//!   while its queue still holds a backlog gets the same catch-up ramp —
+//!   the static planner would decay it back to ~SLO and leave fault
+//!   backlog (and its tail latency) parked in the queue. Every nudge is
+//!   clamped to `[guarantee, max_ceiling × SLO]`, further capped by the
+//!   tenant aggregate under hierarchy. Meeting flows with drained queues
+//!   are released to the inner planner's decay-toward-SLO.
+//! - **Slow tier** (every `replan_every` ticks, hierarchical mode): re-plan
+//!   per-(engine, tenant) `SetAggregate` envelopes from windowed usage —
+//!   guarantees stay pinned to the committed sums from
+//!   [`planner::tenant_aggregates`] (the safety floor: programmed
+//!   guarantee sums never exceed the admission budget), while ceilings
+//!   redistribute the engine's head-room toward tenants that actually
+//!   used bytes in the last window.
+//!
+//! Stability: decrease is multiplicative and bounded below (guarantee),
+//! increase is additive and bounded above (ceiling, tenant aggregate), and
+//! meeting flows converge via the inner planner's decay — so the
+//! controller cannot oscillate unboundedly. Every decision is a function
+//! of DES-scheduled state only (tick counter, status table, obs series),
+//! so adaptivity preserves byte-identical reports across event-queue
+//! disciplines.
+
+use crate::coordinator::planner;
+use crate::flow::{FlowId, Slo};
+
+use super::arcus::ArcusControlPlane;
+use super::control::{
+    Admitted, ApiError, ControlPlane, Directive, DirectiveKind, FlowStatusView, RegisterRequest,
+    TickContext,
+};
+
+/// Gains and periods of the bi-level controller. All knobs validate via
+/// [`AdaptiveConfig::validate`]; the defaults are the tuning the adaptive
+/// golden tests and benchmarks pin.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveConfig {
+    /// Fast-tier additive increase per tick, as a fraction of the flow's
+    /// SLO rate (bounded ramp while draining backlog).
+    pub increase_step: f64,
+    /// Fast-tier multiplicative decrease applied while the engine cannot
+    /// keep up (queue growing under violation).
+    pub decrease_factor: f64,
+    /// Fast-tier cap on any flow's shaped rate, relative to its SLO rate.
+    pub max_ceiling: f64,
+    /// Slow-tier period: re-plan tenant aggregates every K control ticks.
+    pub replan_every: u64,
+    /// Attainment dead-band around 1_000_000 ppm: within it a flow counts
+    /// as meeting and the fast tier holds (mirrors the status-table
+    /// tolerance so the two state machines agree).
+    pub deadband_ppm: u64,
+    /// Queue depth (messages, incl. in-flight fetches) above which a flow
+    /// counts as *backlogged*: a meeting flow with at least this much
+    /// queued demand gets the catch-up ramp instead of the inner decay.
+    /// Must exceed the steady-state fetch-pipeline depth (~16) so normal
+    /// pipelining never reads as backlog.
+    pub backlog_depth: u64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            increase_step: 0.02,
+            decrease_factor: 0.85,
+            max_ceiling: 1.25,
+            replan_every: 10,
+            deadband_ppm: 20_000,
+            backlog_depth: 64,
+        }
+    }
+}
+
+impl AdaptiveConfig {
+    /// Validate ranges; returns a human-readable complaint on the first
+    /// violation (config-file parsing surfaces it verbatim).
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.increase_step > 0.0 && self.increase_step <= 1.0) {
+            return Err(format!(
+                "adaptive.increase_step must be in (0, 1], got {}",
+                self.increase_step
+            ));
+        }
+        if !(self.decrease_factor > 0.0 && self.decrease_factor < 1.0) {
+            return Err(format!(
+                "adaptive.decrease_factor must be in (0, 1), got {}",
+                self.decrease_factor
+            ));
+        }
+        if !(self.max_ceiling >= 1.0) {
+            return Err(format!(
+                "adaptive.max_ceiling must be >= 1.0 (the SLO itself), got {}",
+                self.max_ceiling
+            ));
+        }
+        if self.replan_every == 0 {
+            return Err("adaptive.replan_every must be >= 1 tick".into());
+        }
+        if self.deadband_ppm >= 1_000_000 {
+            return Err(format!(
+                "adaptive.deadband_ppm must be < 1000000, got {}",
+                self.deadband_ppm
+            ));
+        }
+        if self.backlog_depth == 0 {
+            return Err("adaptive.backlog_depth must be >= 1 message".into());
+        }
+        Ok(())
+    }
+}
+
+/// The closed-loop wrapper: an [`ArcusControlPlane`] plus AIMD fast-tier
+/// state and the slow-tier re-planner.
+pub struct AdaptiveControlPlane {
+    inner: ArcusControlPlane,
+    cfg: AdaptiveConfig,
+    /// Control ticks seen (drives the slow-tier period).
+    ticks: u64,
+    /// Last observed queue depth per flow (the trend signal).
+    last_depth: std::collections::BTreeMap<FlowId, u64>,
+    /// Rates the fast tier currently commands, per overridden flow. While
+    /// a flow is overridden the wrapper — not the inner planner's row — is
+    /// the authority: the inner tick decays a boosted *meeting* flow every
+    /// tick (mutating its row before the fast tier runs), and reading the
+    /// decayed row back would stall the catch-up ramp just above the SLO.
+    /// Entries are dropped when a flow is released to the inner decay.
+    commanded: std::collections::BTreeMap<FlowId, f64>,
+    /// Tenant envelopes the slow tier last announced, keyed by
+    /// `(engine, tenant)` — re-plans only emit deltas.
+    announced: std::collections::BTreeMap<(usize, usize), (f64, f64)>,
+}
+
+impl AdaptiveControlPlane {
+    /// Wrap an Arcus plane with the given controller tuning.
+    pub fn new(inner: ArcusControlPlane, cfg: AdaptiveConfig) -> Self {
+        AdaptiveControlPlane {
+            inner,
+            cfg,
+            ticks: 0,
+            last_depth: std::collections::BTreeMap::new(),
+            commanded: std::collections::BTreeMap::new(),
+            announced: std::collections::BTreeMap::new(),
+        }
+    }
+
+    /// The wrapped static plane (tests / observability).
+    pub fn inner(&self) -> &ArcusControlPlane {
+        &self.inner
+    }
+
+    /// The controller tuning in force.
+    pub fn adaptive_cfg(&self) -> &AdaptiveConfig {
+        &self.cfg
+    }
+
+    /// Fast tier: post-process the inner planner's directives with one
+    /// AIMD decision per telemetry-covered committed flow. Returns the
+    /// rewritten directive list.
+    fn fast_tier(&mut self, ctx: &TickContext<'_>, inner_out: Vec<Directive>) -> Vec<Directive> {
+        // Tenant-aggregate caps (hierarchical mode): a leaf's ceiling must
+        // never exceed its tenant's committed aggregate — the bound the
+        // nudge property test pins.
+        let tenant_caps: std::collections::BTreeMap<(usize, usize), f64> =
+            if self.inner.hierarchical() {
+                planner::tenant_aggregates(self.inner.status_table())
+                    .into_iter()
+                    .map(|(a, v, s)| {
+                        ((a, v), s * self.inner.planner_cfg().shaping_headroom)
+                    })
+                    .collect()
+            } else {
+                std::collections::BTreeMap::new()
+            };
+        // Decide per windowed flow; remember which flows the fast tier
+        // took over so the inner planner's SetRate for them is dropped.
+        let mut overridden: Vec<FlowId> = Vec::new();
+        let mut nudges: Vec<Directive> = Vec::new();
+        for &(flow, _) in ctx.windows {
+            let Some(att) = ctx.obs.flow_attainment_ppm(flow) else { continue };
+            let Some(row) = self.inner.status_table().get(flow) else { continue };
+            if row.accel_name == "storage" || matches!(row.slo, Slo::BestEffort) {
+                continue; // the SSD is its own authority; §6 handles BE
+            }
+            let Some((slo_rate, _mode)) = row.slo.required_rate() else { continue };
+            let depth = ctx.obs.flow_queue_depth(flow).unwrap_or(0);
+            let prev_depth = self.last_depth.insert(flow, depth).unwrap_or(0);
+            let meeting = att >= 1_000_000u64.saturating_sub(self.cfg.deadband_ppm);
+            let growing = depth > prev_depth;
+            let backlogged = depth >= self.cfg.backlog_depth;
+            if meeting && !backlogged {
+                // Meeting, drained: the inner decay owns the rate again.
+                self.commanded.remove(&flow);
+                continue;
+            }
+            if !meeting && depth == 0 {
+                // Violating with nothing queued: the flow is under-offered,
+                // not under-shaped — no nudge can manufacture demand.
+                self.commanded.remove(&flow);
+                continue;
+            }
+            // The fast tier is the rate authority for this flow this tick —
+            // whatever the static planner wanted is replaced. While it
+            // holds authority, `commanded` (not the row, which the inner
+            // tick may have just decayed) is the rate the hardware runs.
+            overridden.push(flow);
+            let headroom = self.inner.planner_cfg().shaping_headroom;
+            let current = self
+                .commanded
+                .get(&flow)
+                .copied()
+                .or(row.shaped_rate)
+                .unwrap_or(slo_rate * headroom);
+            let floor = slo_rate; // the guarantee: never shape below contract
+            let mut cap = slo_rate * self.cfg.max_ceiling;
+            if let Some(&agg) = tenant_caps.get(&(row.accel, row.vm)) {
+                cap = cap.min(agg);
+            }
+            let cap = cap.max(floor);
+            let target = if !meeting && growing {
+                // Queue growing under violation: the engine cannot keep up
+                // — offering more only builds backlog. Back off toward the
+                // guarantee (never below it, never above the tenant cap).
+                (current * self.cfg.decrease_factor).max(floor).min(cap)
+            } else {
+                // Capacity is available and demand is queued — violating
+                // with a stable/draining queue, or meeting with a backlog
+                // (post-fault catch-up the static decay would strand).
+                // Snap back to at least the guarantee, then ramp additively.
+                (current.max(floor) + slo_rate * self.cfg.increase_step).min(cap)
+            };
+            if (target - current).abs() / current.max(1.0) > 0.01 {
+                self.inner.note_shaped_rate(flow, target);
+                self.commanded.insert(flow, target);
+                nudges.push(Directive::set_rate(ctx.now, flow, target));
+            } else {
+                // Hold: the hardware stays at `current`, but the inner tick
+                // may have decayed (or boosted) its row this tick and its
+                // directive was filtered — write the held rate back so the
+                // planner's picture matches the shaper it cannot see.
+                self.inner.note_shaped_rate(flow, current);
+                self.commanded.insert(flow, current);
+            }
+        }
+        let mut out: Vec<Directive> = inner_out
+            .into_iter()
+            .filter(|d| match d.kind {
+                DirectiveKind::SetRate { flow, .. } => !overridden.contains(&flow),
+                _ => true,
+            })
+            .collect();
+        out.extend(nudges);
+        out
+    }
+
+    /// Slow tier: every `replan_every` ticks in hierarchical mode, re-plan
+    /// per-(engine, tenant) envelopes from windowed usage. Guarantees are
+    /// the committed sums (scaled down only if shaping headroom pushed
+    /// their total past the admission budget); ceilings hand the engine's
+    /// spare budget to the tenants that moved bytes recently.
+    fn slow_tier(&mut self, ctx: &TickContext<'_>) -> Vec<Directive> {
+        let mut out = Vec::new();
+        let headroom = self.inner.planner_cfg().shaping_headroom;
+        let aggregates = planner::tenant_aggregates(self.inner.status_table());
+        // Group by engine, preserving the BTreeMap-derived order.
+        let mut engines: Vec<usize> = aggregates.iter().map(|&(a, _, _)| a).collect();
+        engines.dedup();
+        let mut current: std::collections::BTreeMap<(usize, usize), (f64, f64)> =
+            std::collections::BTreeMap::new();
+        for engine in engines {
+            let Some(budget) = self.inner.engine_budget_for(engine) else { continue };
+            let tenants: Vec<(usize, f64)> = aggregates
+                .iter()
+                .filter(|&&(a, _, _)| a == engine)
+                .map(|&(_, v, s)| (v, s * headroom))
+                .collect();
+            let guarantee_sum: f64 = tenants.iter().map(|&(_, g)| g).sum();
+            // Safety floor: programmed guarantee sums never exceed the
+            // true admission budget, even after the headroom multiplier.
+            let scale = if guarantee_sum > budget { budget / guarantee_sum } else { 1.0 };
+            let spare = (budget - guarantee_sum * scale).max(0.0);
+            let usage: Vec<u64> = tenants
+                .iter()
+                .map(|&(v, _)| {
+                    ctx.obs.tenant_bytes_delta(v, self.cfg.replan_every).unwrap_or(0)
+                })
+                .collect();
+            let used_total: f64 = usage.iter().map(|&u| u as f64).sum();
+            for (i, &(vm, g)) in tenants.iter().enumerate() {
+                let guarantee = g * scale;
+                // Usage-weighted share of the spare budget; equal shares
+                // when the window saw no traffic at all.
+                let share = if used_total > 0.0 {
+                    usage[i] as f64 / used_total
+                } else {
+                    1.0 / tenants.len() as f64
+                };
+                let ceiling = (guarantee + spare * share).min(budget);
+                current.insert((engine, vm), (guarantee, ceiling));
+                let stale = match self.announced.get(&(engine, vm)) {
+                    Some(&(pg, pc)) => {
+                        (pg - guarantee).abs() > guarantee.abs().max(1.0) * 1e-9
+                            || (pc - ceiling).abs() > ceiling.abs().max(1.0) * 1e-3
+                    }
+                    None => true,
+                };
+                if stale {
+                    out.push(Directive::set_aggregate(ctx.now, engine, vm, guarantee, ceiling));
+                    // Keep the inner diff quiet: record the *canonical*
+                    // envelope it would compute, so it does not re-announce
+                    // (and revert) the re-planned ceiling next tick.
+                    self.inner.note_announced_aggregate(engine, vm, g, budget);
+                }
+            }
+        }
+        self.announced = current;
+        out
+    }
+}
+
+impl ControlPlane for AdaptiveControlPlane {
+    fn register_flow(&mut self, req: &RegisterRequest) -> Result<Admitted, ApiError> {
+        self.inner.register_flow(req)
+    }
+
+    fn update_slo(&mut self, flow: FlowId, slo: Slo) -> Result<Admitted, ApiError> {
+        self.inner.update_slo(flow, slo)
+    }
+
+    fn deregister_flow(&mut self, flow: FlowId) -> Result<(), ApiError> {
+        let r = self.inner.deregister_flow(flow);
+        if r.is_ok() {
+            self.last_depth.remove(&flow);
+            self.commanded.remove(&flow);
+        }
+        r
+    }
+
+    fn query_status(&self, flow: FlowId) -> Option<FlowStatusView> {
+        self.inner.query_status(flow)
+    }
+
+    fn set_profile_skew(&mut self, accel: &str, factor: f64) {
+        self.inner.set_profile_skew(accel, factor);
+    }
+
+    fn tick(&mut self, ctx: &TickContext<'_>) -> Vec<Directive> {
+        self.ticks += 1;
+        let inner_out = self.inner.tick(ctx);
+        let mut out = self.fast_tier(ctx, inner_out);
+        if self.inner.hierarchical() && self.ticks % self.cfg.replan_every == 0 {
+            out.extend(self.slow_tier(ctx));
+        }
+        out
+    }
+
+    fn needs_ticks(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AccelModel;
+    use crate::coordinator::status::MeasuredWindow;
+    use crate::coordinator::PlannerConfig;
+    use crate::flow::{FlowKind, Path};
+    use crate::obs::{ObsConfig, ObsPlane};
+    use crate::pcie::fabric::FabricConfig;
+    use crate::util::units::{MICROS, MILLIS};
+
+    fn plane(hier: bool) -> AdaptiveControlPlane {
+        let inner = ArcusControlPlane::from_models(
+            &[AccelModel::ipsec_32g()],
+            &FabricConfig::gen3_x8(),
+            PlannerConfig::default(),
+        )
+        .with_hierarchy(hier);
+        AdaptiveControlPlane::new(inner, AdaptiveConfig::default())
+    }
+
+    fn req(flow: FlowId, slo: Slo) -> RegisterRequest {
+        RegisterRequest {
+            flow,
+            vm: flow,
+            path: Path::FunctionCall,
+            accel: 0,
+            accel_name: "ipsec".into(),
+            kind: FlowKind::Accel,
+            slo,
+            size_hint: 1500,
+        }
+    }
+
+    /// Fresh obs plane for `n_flows` flows, one tenant each, one engine.
+    /// A 100 µs window against a 10 Gbps SLO meets at exactly 125_000
+    /// bytes, so 100_000-byte samples ≈ 800_000 ppm (violating).
+    fn obs_plane(n_flows: usize) -> ObsPlane {
+        let homes: Vec<(usize, usize)> = (0..n_flows).map(|f| (f, 0)).collect();
+        let mut obs = ObsPlane::new(
+            ObsConfig {
+                control_period: 100 * MICROS,
+                duration: 10 * MILLIS,
+                retention: 64,
+                sample_every: 1,
+            },
+            &homes,
+            n_flows,
+            1,
+            None,
+        );
+        for f in 0..n_flows {
+            obs.set_flow_slo(f, Slo::gbps(10.0));
+        }
+        obs
+    }
+
+    /// Push one control-tick sample for every flow: `window_bytes` moved
+    /// over the 100 µs window at queue depth `depth`.
+    fn push_sample(obs: &mut ObsPlane, tick: u64, n_flows: usize, window_bytes: u64, depth: usize) {
+        for f in 0..n_flows {
+            obs.on_complete(f, (tick + 1) * 100 * MICROS, 1_000, window_bytes);
+            obs.on_control_sample(
+                tick,
+                f,
+                100 * MICROS,
+                window_bytes,
+                1,
+                Some(1_000),
+                depth,
+                0,
+            );
+        }
+        obs.on_tick_done(tick);
+    }
+
+    #[test]
+    fn config_validates_ranges() {
+        assert!(AdaptiveConfig::default().validate().is_ok());
+        let bad = AdaptiveConfig { decrease_factor: 1.5, ..AdaptiveConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = AdaptiveConfig { replan_every: 0, ..AdaptiveConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = AdaptiveConfig { increase_step: 0.0, ..AdaptiveConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = AdaptiveConfig { max_ceiling: 0.5, ..AdaptiveConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = AdaptiveConfig { deadband_ppm: 2_000_000, ..AdaptiveConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = AdaptiveConfig { backlog_depth: 0, ..AdaptiveConfig::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn delegates_lifecycle_to_inner() {
+        let mut cp = plane(false);
+        cp.register_flow(&req(0, Slo::gbps(10.0))).unwrap();
+        assert_eq!(cp.name(), "adaptive");
+        assert!(cp.needs_ticks());
+        assert!(cp.query_status(0).is_some());
+        assert!(cp.update_slo(0, Slo::gbps(12.0)).is_ok());
+        cp.deregister_flow(0).unwrap();
+        assert!(cp.query_status(0).is_none());
+        assert_eq!(
+            cp.deregister_flow(0).unwrap_err(),
+            ApiError::UnknownFlow { flow: 0 }
+        );
+    }
+
+    #[test]
+    fn without_telemetry_behaves_like_inner() {
+        // No obs view attached → the fast tier has nothing to key on and
+        // the wrapper must be a pass-through of the static planner.
+        let mut cp = plane(false);
+        cp.register_flow(&req(0, Slo::gbps(10.0))).unwrap();
+        let w = MeasuredWindow { span: MILLIS, bytes: 1_000_000, ops: 667, p99_latency: None };
+        let windows = [(0, w)];
+        let mut last = Vec::new();
+        for _ in 0..3 {
+            last = cp.tick(&TickContext::new(0, &windows));
+        }
+        // The static planner boosts the violating flow; nothing filtered.
+        let boosted = |d: &Directive| {
+            matches!(d.kind, DirectiveKind::SetRate { flow: 0, rate } if rate > 10e9 / 8.0)
+        };
+        assert!(last.iter().any(boosted), "{last:?}");
+    }
+
+    #[test]
+    fn growing_queue_under_violation_backs_off_to_guarantee() {
+        let mut cp = plane(false);
+        cp.register_flow(&req(0, Slo::gbps(10.0))).unwrap();
+        let slo_rate = 10e9 / 8.0;
+        // 8 of 10 Gbps attained, queue growing every tick: MD must land on
+        // the guarantee floor and never below it.
+        let mut obs = obs_plane(1);
+        let w = MeasuredWindow { span: MILLIS, bytes: 1_000_000, ops: 667, p99_latency: None };
+        let windows = [(0, w)];
+        for t in 0..8u64 {
+            push_sample(&mut obs, t, 1, 100_000, (100 + t * 50) as usize);
+            let ds = cp.tick(&TickContext::new(0, &windows).with_obs(&obs));
+            for d in &ds {
+                if let DirectiveKind::SetRate { flow: 0, rate } = d.kind {
+                    assert!(
+                        rate >= slo_rate * 0.999,
+                        "nudged below guarantee: {rate:.3e}"
+                    );
+                    assert!(rate <= slo_rate * 1.02, "MD should clamp, got {rate:.3e}");
+                }
+            }
+        }
+        let shaped = cp.query_status(0).unwrap().shaped_rate.unwrap();
+        assert!(
+            (shaped - slo_rate).abs() / slo_rate < 0.02,
+            "expected clamp at guarantee, got {shaped:.3e}"
+        );
+    }
+
+    #[test]
+    fn draining_queue_under_violation_ramps_toward_ceiling() {
+        let mut cp = plane(false);
+        cp.register_flow(&req(0, Slo::gbps(10.0))).unwrap();
+        let slo_rate = 10e9 / 8.0;
+        // Violating but queue draining (post-fault recovery): AI must ramp
+        // the rate, bounded by max_ceiling × SLO.
+        let mut obs = obs_plane(1);
+        let w = MeasuredWindow { span: MILLIS, bytes: 1_000_000, ops: 667, p99_latency: None };
+        let windows = [(0, w)];
+        for t in 0..20u64 {
+            push_sample(&mut obs, t, 1, 100_000, (1000 - t * 40) as usize);
+            cp.tick(&TickContext::new(0, &windows).with_obs(&obs));
+        }
+        let shaped = cp.query_status(0).unwrap().shaped_rate.unwrap();
+        assert!(shaped > slo_rate * 1.05, "expected AI ramp, got {shaped:.3e}");
+        assert!(
+            shaped <= slo_rate * cp.adaptive_cfg().max_ceiling * 1.001,
+            "ceiling breached: {shaped:.3e}"
+        );
+    }
+
+    #[test]
+    fn meeting_flow_with_backlog_gets_catch_up_ramp() {
+        // A flow meeting its SLO but with a deep standing queue (e.g. the
+        // backlog a fault left behind): the static decay would park it at
+        // ~SLO; the fast tier must instead ramp it toward the ceiling so
+        // the backlog drains, then release it once the queue is short.
+        let mut cp = plane(false);
+        cp.register_flow(&req(0, Slo::gbps(10.0))).unwrap();
+        let slo_rate = 10e9 / 8.0;
+        let mut obs = obs_plane(1);
+        let w = MeasuredWindow { span: MILLIS, bytes: 1_700_000, ops: 1133, p99_latency: None };
+        let windows = [(0, w)];
+        for t in 0..20u64 {
+            // 130_000 bytes / 100 µs ≈ 1.04e6 ppm (meeting); depth 500
+            // stays far above backlog_depth.
+            push_sample(&mut obs, t, 1, 130_000, 500);
+            cp.tick(&TickContext::new(0, &windows).with_obs(&obs));
+        }
+        let shaped = cp.query_status(0).unwrap().shaped_rate.unwrap();
+        assert!(shaped > slo_rate * 1.05, "expected catch-up ramp, got {shaped:.3e}");
+        assert!(
+            shaped <= slo_rate * cp.adaptive_cfg().max_ceiling * 1.001,
+            "ceiling breached: {shaped:.3e}"
+        );
+        // Queue drains below the backlog threshold: the fast tier releases
+        // the flow and the inner decay walks the rate back toward the SLO.
+        for t in 20..40u64 {
+            push_sample(&mut obs, t, 1, 130_000, 4);
+            cp.tick(&TickContext::new(0, &windows).with_obs(&obs));
+        }
+        let released = cp.query_status(0).unwrap().shaped_rate.unwrap();
+        assert!(
+            released < shaped,
+            "inner decay should reclaim the boost: {released:.3e} !< {shaped:.3e}"
+        );
+    }
+
+    #[test]
+    fn slow_tier_replans_aggregates_within_budget() {
+        let mut cp = plane(true);
+        cp.register_flow(&req(0, Slo::gbps(8.0))).unwrap();
+        let mut r1 = req(1, Slo::gbps(8.0));
+        r1.vm = 1;
+        cp.register_flow(&r1).unwrap();
+        let budget = cp.inner().engine_budget_for(0).unwrap();
+        let mut obs = obs_plane(2);
+        let w = MeasuredWindow { span: MILLIS, bytes: 1_500_000, ops: 1000, p99_latency: None };
+        let windows = [(0, w), (1, w)];
+        let mut aggs = Vec::new();
+        for t in 0..cp.adaptive_cfg().replan_every {
+            push_sample(&mut obs, t, 2, 130_000, 10);
+            for d in cp.tick(&TickContext::new(0, &windows).with_obs(&obs)) {
+                if let DirectiveKind::SetAggregate { engine, tenant, guarantee, ceiling } =
+                    d.kind
+                {
+                    aggs.push((engine, tenant, guarantee, ceiling));
+                }
+            }
+        }
+        // The replan emitted one envelope per tenant, guarantees summing
+        // under the admission budget and ceilings never exceeding it.
+        let replanned: Vec<_> = aggs.iter().filter(|a| a.3 <= budget * 1.001).collect();
+        assert!(replanned.len() >= 2, "expected slow-tier envelopes: {aggs:?}");
+        let gsum: f64 = replanned.iter().map(|a| a.2).sum();
+        assert!(gsum <= budget * 1.01, "guarantee sum {gsum:.3e} > budget {budget:.3e}");
+    }
+}

@@ -15,8 +15,8 @@
 //!   the §6 opportunistic-class refresh, emitted as [`Directive`]s.
 
 use crate::accel::AccelModel;
-use crate::coordinator::planner::{self, Admission, PlannerConfig};
-use crate::coordinator::status::{FlowStatus, MeasuredWindow, SloState};
+use crate::coordinator::planner::{self, Admission, PlannerConfig, RejectReason};
+use crate::coordinator::status::{FlowStatus, SloState};
 use crate::coordinator::{AccTable, PerFlowStatusTable, ProfileTable};
 use crate::flow::{FlowId, FlowKind, Path, Slo};
 use crate::pcie::fabric::FabricConfig;
@@ -25,7 +25,24 @@ use crate::util::units::Time;
 
 use super::control::{
     Admitted, ApiError, ControlPlane, Directive, FlowStatusView, RegisterRequest, ShaperProgram,
+    TickContext,
 };
+
+/// Retry hint attached to transient (capacity) rejections: one control
+/// period (§4.3's 100 µs loop) — the soonest the committed picture can
+/// have changed.
+const RETRY_HINT_PS: Time = 100_000_000;
+
+/// Map a planner rejection into the structured API error: capacity
+/// pressure is transient (carry a retry hint), everything else is
+/// structural (no hint — retrying the identical request changes nothing).
+fn reject_to_error(reason: RejectReason) -> ApiError {
+    let retry_after = match &reason {
+        RejectReason::CapacityExceeded { .. } => Some(RETRY_HINT_PS),
+        _ => None,
+    };
+    ApiError::Rejection { reason, retry_after }
+}
 
 /// The Arcus SLO runtime behind the [`ControlPlane`] trait.
 pub struct ArcusControlPlane {
@@ -119,6 +136,45 @@ impl ArcusControlPlane {
         &self.cfg
     }
 
+    /// Record a shaping rate some *outer* control tier (the adaptive
+    /// wrapper) has directed the dataplane to program for `flow`,
+    /// overriding whatever this plane last asked for. Keeping the status
+    /// row honest matters: the planner's decay and over-commit
+    /// convergence logic compare against `shaped_rate`, so a wrapper
+    /// that issues its own `SetRate` directives without recording them
+    /// here would leave the inner plane fighting a stale picture.
+    pub fn note_shaped_rate(&mut self, flow: FlowId, rate: f64) {
+        if let Some(row) = self.status.get_mut(flow) {
+            let mode = row
+                .slo
+                .required_rate()
+                .map(|(_, m)| m)
+                .unwrap_or(ShapeMode::Gbps);
+            row.shaped_rate = Some(rate);
+            row.params = Some(TokenBucketParams::for_rate(rate, mode));
+            row.reconfigs += 1;
+        }
+    }
+
+    /// The engine-root budget (bytes/sec) last used for tree installs on
+    /// `engine`, if hierarchical registrations have established one.
+    pub fn engine_budget_for(&self, engine: usize) -> Option<f64> {
+        self.engine_budgets.get(&engine).copied()
+    }
+
+    /// Record a tenant-aggregate envelope some outer tier has announced
+    /// to the dataplane, so this plane's `SetAggregate` diffing does not
+    /// immediately re-announce (and thereby revert) it.
+    pub fn note_announced_aggregate(
+        &mut self,
+        engine: usize,
+        tenant: usize,
+        guarantee: f64,
+        ceiling: f64,
+    ) {
+        self.announced.insert((engine, tenant), (guarantee, ceiling));
+    }
+
     /// Storage-contract program: the SSD is its own capacity authority, so
     /// the bucket derives directly from the SLO rate with the shaping
     /// headroom pre-applied — no accelerator-profile lookup, at
@@ -208,7 +264,7 @@ impl ArcusControlPlane {
     /// and emit `SetAggregate` tree-install directives for the deltas
     /// (arrivals are announced synchronously by their install program;
     /// departures and renegotiations surface here).
-    fn refresh_aggregates(&mut self) -> Vec<Directive> {
+    fn refresh_aggregates(&mut self, now: Time) -> Vec<Directive> {
         let mut out = Vec::new();
         let mut current = std::collections::BTreeMap::new();
         for (accel, vm, sum) in planner::tenant_aggregates(&self.status) {
@@ -229,7 +285,7 @@ impl ArcusControlPlane {
             };
             if stale {
                 self.announced.insert((accel, vm), (guarantee, ceiling));
-                out.push(Directive::SetAggregate { engine: accel, tenant: vm, guarantee, ceiling });
+                out.push(Directive::set_aggregate(now, accel, vm, guarantee, ceiling));
             }
         }
         // Vanished aggregates (every committed flow departed): release the
@@ -247,12 +303,7 @@ impl ArcusControlPlane {
                 .copied()
                 .unwrap_or(f64::INFINITY);
             self.announced.remove(&(accel, vm));
-            out.push(Directive::SetAggregate {
-                engine: accel,
-                tenant: vm,
-                guarantee: 0.0,
-                ceiling,
-            });
+            out.push(Directive::set_aggregate(now, accel, vm, 0.0, ceiling));
         }
         out
     }
@@ -261,7 +312,7 @@ impl ArcusControlPlane {
     /// whenever a committed flow on the same engine is violating (the
     /// harvest must never cost an SLO), otherwise creep back up toward the
     /// profiled headroom.
-    fn refresh_opportunistic(&mut self) -> Vec<Directive> {
+    fn refresh_opportunistic(&mut self, now: Time) -> Vec<Directive> {
         let mut violated_accels: Vec<usize> = Vec::new();
         for row in self.status.iter() {
             if row.state == SloState::Violating
@@ -300,7 +351,7 @@ impl ArcusControlPlane {
                 if let Some(r) = self.status.get_mut(flow) {
                     r.shaped_rate = Some(nominal);
                 }
-                out.push(Directive::SetRate { flow, rate });
+                out.push(Directive::set_rate(now, flow, rate));
             }
         }
         out
@@ -419,9 +470,7 @@ impl ControlPlane for ArcusControlPlane {
                             },
                         })
                     }
-                    Admission::Reject { reason } => {
-                        Err(ApiError::AdmissionRejected { reason })
-                    }
+                    Admission::Reject { reason } => Err(reject_to_error(reason)),
                 }
             }
         }
@@ -545,7 +594,7 @@ impl ControlPlane for ArcusControlPlane {
                     }
                 }
             }
-            Admission::Reject { reason } => Err(ApiError::AdmissionRejected { reason }),
+            Admission::Reject { reason } => Err(reject_to_error(reason)),
         }
     }
 
@@ -597,9 +646,10 @@ impl ControlPlane for ArcusControlPlane {
         self.pristine_profile = Some(pristine);
     }
 
-    fn tick(&mut self, _now: Time, windows: &[(FlowId, MeasuredWindow)]) -> Vec<Directive> {
+    fn tick(&mut self, ctx: &TickContext<'_>) -> Vec<Directive> {
+        let now = ctx.now;
         // 1. Ingest the hardware counters (SLOViolationChecker).
-        for &(flow, w) in windows {
+        for &(flow, w) in ctx.windows {
             self.status.record_window(flow, w);
         }
         // 2. Plan: path selection + reshape decisions for violating flows.
@@ -634,24 +684,24 @@ impl ControlPlane for ArcusControlPlane {
                         row.params = Some(params);
                         row.reconfigs += 1;
                     }
-                    out.push(Directive::SetRate { flow, rate });
+                    out.push(Directive::set_rate(now, flow, rate));
                 }
                 planner::Action::SwitchPath { flow, to } => {
                     if let Some(row) = self.status.get_mut(flow) {
                         row.path = to;
                         row.reconfigs += 1;
                     }
-                    out.push(Directive::SwitchPath { flow, to });
+                    out.push(Directive::switch_path(now, flow, to));
                 }
             }
         }
         // 3. Opportunistic-class refresh (§6).
-        out.extend(self.refresh_opportunistic());
+        out.extend(self.refresh_opportunistic(now));
         // 4. Tree maintenance (hierarchical mode): announce tenant-
         //    aggregate changes (departures, renegotiations, rebalances)
         //    as SetAggregate tree-install directives.
         if self.hierarchical {
-            out.extend(self.refresh_aggregates());
+            out.extend(self.refresh_aggregates(now));
         }
         out
     }
@@ -668,7 +718,10 @@ impl ControlPlane for ArcusControlPlane {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::status::MeasuredWindow;
     use crate::util::units::Rate;
+
+    use super::super::control::DirectiveKind;
 
     fn cp() -> ArcusControlPlane {
         ArcusControlPlane::from_models(
@@ -700,7 +753,16 @@ mod tests {
         assert!(matches!(a.program, ShaperProgram::TokenBucket { .. }));
         cp.register_flow(&req(1, Slo::gbps(12.0))).unwrap();
         let e = cp.register_flow(&req(2, Slo::gbps(15.0))).unwrap_err();
-        assert!(matches!(e, ApiError::AdmissionRejected { .. }), "{e}");
+        assert!(
+            matches!(
+                e,
+                ApiError::Rejection {
+                    reason: RejectReason::CapacityExceeded { .. },
+                    retry_after: Some(_),
+                }
+            ),
+            "{e}"
+        );
         assert!(cp.query_status(2).is_none());
     }
 
@@ -797,7 +859,7 @@ mod tests {
         // emits clamping directives bringing the programmed sum under the
         // true budget.
         cp.set_profile_skew("ipsec", 1.0);
-        let ds = cp.tick(0, &[]);
+        let ds = cp.tick(&TickContext::new(0, &[]));
         assert!(!ds.is_empty(), "expected clamping directives");
         let sum: f64 = (0..3)
             .filter_map(|f| cp.query_status(f).and_then(|v| v.shaped_rate))
@@ -807,7 +869,7 @@ mod tests {
             * (1.0 - cp.planner_cfg().admission_headroom);
         assert!(sum <= budget * 1.001, "programmed {sum:.3e} > true budget {budget:.3e}");
         // The pass converges: a second tick emits no further clamps.
-        assert!(cp.tick(0, &[]).is_empty());
+        assert!(cp.tick(&TickContext::new(0, &[])).is_empty());
     }
 
     #[test]
@@ -909,17 +971,20 @@ mod tests {
         // A departure releases the tenant's aggregate: the next tick
         // announces it as a SetAggregate tree-install directive.
         cp.deregister_flow(0).unwrap();
-        let ds = cp.tick(0, &[]);
+        let ds = cp.tick(&TickContext::new(0, &[]));
         assert!(
             ds.iter().any(|d| matches!(
-                d,
-                Directive::SetAggregate { engine: 0, tenant: 0, guarantee, .. }
+                &d.kind,
+                DirectiveKind::SetAggregate { engine: 0, tenant: 0, guarantee, .. }
                     if *guarantee == 0.0
             )),
             "expected a zero-guarantee SetAggregate for the departed tenant: {ds:?}"
         );
         // The diff converges: a second tick announces nothing further.
-        assert!(cp.tick(0, &[]).iter().all(|d| !matches!(d, Directive::SetAggregate { .. })));
+        assert!(cp
+            .tick(&TickContext::new(0, &[]))
+            .iter()
+            .all(|d| !matches!(d.kind, DirectiveKind::SetAggregate { .. })));
     }
 
     #[test]
@@ -936,11 +1001,12 @@ mod tests {
         };
         let mut boosts = Vec::new();
         for _ in 0..3 {
-            boosts = cp.tick(0, &[(0, w)]);
+            let windows = [(0, w)];
+            boosts = cp.tick(&TickContext::new(0, &windows));
         }
         let prev = 10e9 / 8.0;
         match &boosts[..] {
-            [Directive::SetRate { flow: 0, rate }] => {
+            [Directive { kind: DirectiveKind::SetRate { flow: 0, rate }, .. }] => {
                 assert!(*rate > prev, "boosted rate {rate:.3e}");
             }
             other => panic!("expected one boost, got {other:?}"),

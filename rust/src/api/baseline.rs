@@ -9,12 +9,12 @@
 //!   ingress rate can be rate limited on the host"); no heterogeneity or
 //!   contention awareness, no reshaping, renegotiations blindly accepted.
 
-use crate::coordinator::status::{MeasuredWindow, SloState};
+use crate::coordinator::status::SloState;
 use crate::flow::{FlowId, Slo};
-use crate::util::units::Time;
 
 use super::control::{
     Admitted, ApiError, ControlPlane, Directive, FlowStatusView, RegisterRequest, ShaperProgram,
+    TickContext,
 };
 
 /// Minimal registry shared by the baseline implementations.
@@ -98,7 +98,7 @@ impl ControlPlane for NoOpControlPlane {
         self.registry.view(flow, None)
     }
 
-    fn tick(&mut self, _now: Time, _windows: &[(FlowId, MeasuredWindow)]) -> Vec<Directive> {
+    fn tick(&mut self, _ctx: &TickContext<'_>) -> Vec<Directive> {
         Vec::new()
     }
 
@@ -168,7 +168,7 @@ impl ControlPlane for StaticRateControlPlane {
         self.registry.view(flow, rate)
     }
 
-    fn tick(&mut self, _now: Time, _windows: &[(FlowId, MeasuredWindow)]) -> Vec<Directive> {
+    fn tick(&mut self, _ctx: &TickContext<'_>) -> Vec<Directive> {
         Vec::new()
     }
 
@@ -207,7 +207,7 @@ mod tests {
             assert_eq!(a.program, ShaperProgram::Unshaped);
             assert!(a.committed_rate.is_none());
         }
-        assert!(cp.tick(0, &[]).is_empty());
+        assert!(cp.tick(&TickContext::new(0, &[])).is_empty());
         assert!(!cp.needs_ticks());
         assert!(cp.query_status(3).is_some());
         cp.deregister_flow(3).unwrap();

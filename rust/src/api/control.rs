@@ -17,8 +17,10 @@
 //! the dataplane applies directives after the measured ~10 µs MMIO
 //! reconfiguration latency (§5.3.1), never stalling active flows.
 
+use crate::coordinator::planner::RejectReason;
 use crate::coordinator::status::{MeasuredWindow, SloState};
 use crate::flow::{FlowId, FlowKind, Path, Slo};
+use crate::obs::{ObsPlane, SeriesRing, GAUGE_NONE};
 use crate::shaping::{ShapeMode, TokenBucketParams};
 use crate::util::units::Time;
 
@@ -96,21 +98,46 @@ pub struct Admitted {
 }
 
 /// Typed control-plane failures.
+///
+/// Rejections are *structured*: [`ApiError::Rejection`] carries a typed
+/// [`RejectReason`] (no string matching required downstream) plus an
+/// optional `retry_after` hint — admission backpressure a closed-loop
+/// caller (the adaptive plane, a tenant SDK) can consume to schedule a
+/// retry instead of giving up.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ApiError {
     /// Capacity planning refused the SLO (Algorithm 1 lines 7–10).
-    AdmissionRejected { reason: String },
+    Rejection {
+        /// Why admission control said no (typed; `Display` is human text).
+        reason: RejectReason,
+        /// When a retry could plausibly succeed: `Some(t)` for transient
+        /// rejections (capacity may free up after the next control
+        /// period), `None` for structural ones (no profile for the
+        /// context — retrying changes nothing).
+        retry_after: Option<Time>,
+    },
     /// The flow id is already registered.
     AlreadyRegistered { flow: FlowId },
     /// The flow id is not registered.
     UnknownFlow { flow: FlowId },
 }
 
+impl ApiError {
+    /// Shorthand for a rejection with no retry hint.
+    pub fn rejected(reason: RejectReason) -> Self {
+        ApiError::Rejection { reason, retry_after: None }
+    }
+}
+
 impl std::fmt::Display for ApiError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            ApiError::AdmissionRejected { reason } => {
-                write!(f, "admission rejected: {reason}")
+            ApiError::Rejection { reason, retry_after } => {
+                write!(f, "admission rejected: {reason}")?;
+                if let Some(t) = retry_after {
+                    write!(f, " (retry after {t} ps)")?;
+                }
+                Ok(())
             }
             ApiError::AlreadyRegistered { flow } => {
                 write!(f, "flow {flow} is already registered")
@@ -125,8 +152,63 @@ impl std::error::Error for ApiError {}
 /// An asynchronous reconfiguration the control plane asks the dataplane to
 /// apply (MMIO register writes / path re-routing; the dataplane models the
 /// ~10 µs PCIe round-trip latency before the change takes effect).
+///
+/// Every directive is stamped with the virtual time it was *issued* at, so
+/// the dataplane can measure directive-propagation lag (apply time minus
+/// issue time) — the metric a future fleet/xDS distribution layer will be
+/// judged on.
 #[derive(Debug, Clone, PartialEq)]
-pub enum Directive {
+pub struct Directive {
+    /// Virtual time at which the control plane issued this directive.
+    pub issued_at: Time,
+    /// The reconfiguration to apply.
+    pub kind: DirectiveKind,
+}
+
+impl Directive {
+    /// Reprogram a flow's shaper to `rate` units/sec.
+    pub fn set_rate(issued_at: Time, flow: FlowId, rate: f64) -> Self {
+        Directive { issued_at, kind: DirectiveKind::SetRate { flow, rate } }
+    }
+
+    /// Re-route a flow to path `to`.
+    pub fn switch_path(issued_at: Time, flow: FlowId, to: Path) -> Self {
+        Directive { issued_at, kind: DirectiveKind::SwitchPath { flow, to } }
+    }
+
+    /// (Re)program a tenant aggregate envelope on an engine's shaper tree.
+    pub fn set_aggregate(
+        issued_at: Time,
+        engine: usize,
+        tenant: usize,
+        guarantee: f64,
+        ceiling: f64,
+    ) -> Self {
+        Directive {
+            issued_at,
+            kind: DirectiveKind::SetAggregate { engine, tenant, guarantee, ceiling },
+        }
+    }
+
+    /// Install (or replace) a flow's full shaper program.
+    pub fn install_program(issued_at: Time, flow: FlowId, program: ShaperProgram) -> Self {
+        Directive { issued_at, kind: DirectiveKind::InstallProgram { flow, program } }
+    }
+
+    /// The flow this directive targets, when it targets exactly one.
+    pub fn flow(&self) -> Option<FlowId> {
+        match self.kind {
+            DirectiveKind::SetRate { flow, .. }
+            | DirectiveKind::SwitchPath { flow, .. }
+            | DirectiveKind::InstallProgram { flow, .. } => Some(flow),
+            DirectiveKind::SetAggregate { .. } => None,
+        }
+    }
+}
+
+/// The reconfiguration payload of a [`Directive`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum DirectiveKind {
     /// Reprogram a flow's shaper to a new rate (units/sec). On a tree-
     /// paced leaf this caps the leaf's ceiling at `rate` — the flat
     /// register semantics ("the flow cannot exceed `rate`") preserved.
@@ -148,6 +230,135 @@ pub enum Directive {
         /// Borrowing cap of the aggregate (units/sec).
         ceiling: f64,
     },
+    /// Install (or replace) a flow's entire shaper program — the
+    /// renegotiation path: a successful `update_slo` returns the new
+    /// program synchronously, and the dataplane applies it through the
+    /// same directive pipeline (and the same 10 µs rule) as every other
+    /// reconfiguration.
+    InstallProgram {
+        /// Flow whose shaper is replaced.
+        flow: FlowId,
+        /// The program to install.
+        program: ShaperProgram,
+    },
+}
+
+/// Everything a control plane may consult during one tick: the virtual
+/// clock, the dataplane's fresh per-flow hardware counters, and a
+/// read-only window onto the observability plane's historical series.
+///
+/// This replaces the PR-2-era `tick(now, &[(FlowId, MeasuredWindow)])`
+/// signature: the raw windows-slice could not carry per-era
+/// attainment/p99/queue-depth telemetry, so feedback controllers had
+/// nothing to close a loop on. `TickContext` is a plain borrow bundle —
+/// building one allocates nothing, and a context without an obs view
+/// ([`TickContext::new`]) is valid everywhere (the static planes ignore
+/// telemetry entirely).
+pub struct TickContext<'a> {
+    /// Virtual time of this control tick.
+    pub now: Time,
+    /// One fresh [`MeasuredWindow`] per registered flow.
+    pub windows: &'a [(FlowId, MeasuredWindow)],
+    /// Read-only view over the observability plane's series (may be
+    /// empty: unit tests and obs-disabled runs pass no plane).
+    pub obs: ObsView<'a>,
+}
+
+impl<'a> TickContext<'a> {
+    /// A context with no observability view (unit tests, obs-off runs).
+    pub fn new(now: Time, windows: &'a [(FlowId, MeasuredWindow)]) -> Self {
+        TickContext { now, windows, obs: ObsView::empty() }
+    }
+
+    /// Attach a read-only observability view.
+    pub fn with_obs(mut self, plane: &'a ObsPlane) -> Self {
+        self.obs = ObsView::of(plane);
+        self
+    }
+}
+
+/// Read-only telemetry window handed to control planes each tick.
+///
+/// Wraps the engine's [`ObsPlane`] (which samples every control tick on
+/// the DES queue, so everything here is deterministic) and exposes only
+/// *latest-sample* gauges and *windowed counter deltas* — the accessors a
+/// feedback controller needs, without granting mutable or structural
+/// access to the plane. All accessors are total: a missing flow, an
+/// empty series, or a [`GAUGE_NONE`] sentinel all come back as `None`.
+#[derive(Clone, Copy)]
+pub struct ObsView<'a> {
+    plane: Option<&'a ObsPlane>,
+}
+
+impl<'a> ObsView<'a> {
+    /// A view over nothing: every accessor returns `None`.
+    pub fn empty() -> Self {
+        ObsView { plane: None }
+    }
+
+    /// A view over a live observability plane.
+    pub fn of(plane: &'a ObsPlane) -> Self {
+        ObsView { plane: Some(plane) }
+    }
+
+    /// Is there a plane behind this view at all?
+    pub fn is_attached(&self) -> bool {
+        self.plane.is_some()
+    }
+
+    fn gauge(ring: &SeriesRing) -> Option<u64> {
+        ring.latest().filter(|&v| v != GAUGE_NONE)
+    }
+
+    /// Latest sampled SLO attainment for `flow`, in parts-per-million
+    /// (1_000_000 = exactly meeting the SLO).
+    pub fn flow_attainment_ppm(&self, flow: FlowId) -> Option<u64> {
+        let s = self.plane?.flow_series(flow)?;
+        Self::gauge(&s.attainment_ppm)
+    }
+
+    /// Latest sampled windowed p99 latency for `flow`, in picoseconds.
+    pub fn flow_p99_ps(&self, flow: FlowId) -> Option<u64> {
+        let s = self.plane?.flow_series(flow)?;
+        Self::gauge(&s.p99_ps)
+    }
+
+    /// Latest sampled dataplane queue depth for `flow` (queued + inflight).
+    pub fn flow_queue_depth(&self, flow: FlowId) -> Option<u64> {
+        let s = self.plane?.flow_series(flow)?;
+        Self::gauge(&s.queue_depth)
+    }
+
+    /// Cumulative reconfiguration directives applied to `flow` as of the
+    /// latest sample.
+    pub fn flow_directives(&self, flow: FlowId) -> Option<u64> {
+        let s = self.plane?.flow_series(flow)?;
+        s.directives.latest()
+    }
+
+    /// Bytes tenant `vm` moved over (roughly) the last `ticks_back`
+    /// control ticks: latest cumulative sample minus the sample
+    /// `ticks_back` ticks earlier (clamped to the oldest retained
+    /// sample). `None` until the tenant has at least one sample.
+    pub fn tenant_bytes_delta(&self, vm: usize, ticks_back: u64) -> Option<u64> {
+        let t = self.plane?.tenant(vm)?;
+        Self::counter_delta(&t.bytes_series, ticks_back)
+    }
+
+    /// Bytes engine `engine` moved over (roughly) the last `ticks_back`
+    /// control ticks (same windowing rules as [`Self::tenant_bytes_delta`]).
+    pub fn engine_bytes_delta(&self, engine: usize, ticks_back: u64) -> Option<u64> {
+        let e = self.plane?.engine(engine)?;
+        Self::counter_delta(&e.bytes_series, ticks_back)
+    }
+
+    fn counter_delta(ring: &SeriesRing, ticks_back: u64) -> Option<u64> {
+        let newest = ring.next_tick().checked_sub(1)?;
+        let latest = ring.get(newest)?;
+        let base_tick = newest.saturating_sub(ticks_back).max(ring.first_tick());
+        let base = if base_tick == newest { 0 } else { ring.get(base_tick).unwrap_or(0) };
+        Some(latest.saturating_sub(base))
+    }
 }
 
 /// Point-in-time view of one registered flow, for `query_status`.
@@ -197,10 +408,13 @@ pub trait ControlPlane {
     fn query_status(&self, flow: FlowId) -> Option<FlowStatusView>;
 
     /// One control-loop tick: ingest the dataplane's measured hardware
-    /// counters and emit reconfiguration directives (Algorithm 1 lines
-    /// 2–6). `now` is virtual time; `windows` holds one fresh
-    /// [`MeasuredWindow`] per registered flow.
-    fn tick(&mut self, now: Time, windows: &[(FlowId, MeasuredWindow)]) -> Vec<Directive>;
+    /// counters (and, when attached, the observability plane's series)
+    /// and emit reconfiguration directives (Algorithm 1 lines 2–6). The
+    /// [`TickContext`] carries the virtual clock, one fresh
+    /// [`MeasuredWindow`] per registered flow, and a read-only
+    /// [`ObsView`]; every directive must be stamped `issued_at =
+    /// ctx.now`.
+    fn tick(&mut self, ctx: &TickContext<'_>) -> Vec<Directive>;
 
     /// Does this control plane run a periodic tick at all? (The unmanaged
     /// and statically-shaped baselines do not.)
@@ -222,9 +436,25 @@ mod tests {
 
     #[test]
     fn api_error_display_is_informative() {
-        let e = ApiError::AdmissionRejected { reason: "capacity 1e9, requested 2e9".into() };
+        let e = ApiError::Rejection {
+            reason: RejectReason::CapacityExceeded {
+                budget: 1e9,
+                committed: 9e8,
+                requested: 2e9,
+            },
+            retry_after: None,
+        };
         assert!(e.to_string().contains("admission rejected"));
         assert!(e.to_string().contains("capacity"));
+        let hinted = ApiError::Rejection {
+            reason: RejectReason::CapacityExceeded {
+                budget: 1e9,
+                committed: 9e8,
+                requested: 2e9,
+            },
+            retry_after: Some(100_000_000),
+        };
+        assert!(hinted.to_string().contains("retry after 100000000 ps"));
         assert_eq!(
             ApiError::UnknownFlow { flow: 7 }.to_string(),
             "flow 7 is not registered"
@@ -233,5 +463,26 @@ mod tests {
             ApiError::AlreadyRegistered { flow: 3 }.to_string(),
             "flow 3 is already registered"
         );
+    }
+
+    #[test]
+    fn directive_constructors_stamp_issue_time() {
+        let d = Directive::set_rate(42, 3, 1.5e9);
+        assert_eq!(d.issued_at, 42);
+        assert_eq!(d.flow(), Some(3));
+        assert!(matches!(d.kind, DirectiveKind::SetRate { flow: 3, .. }));
+        let agg = Directive::set_aggregate(7, 0, 1, 1.0, 2.0);
+        assert_eq!(agg.flow(), None);
+    }
+
+    #[test]
+    fn empty_obs_view_is_total() {
+        let view = ObsView::empty();
+        assert!(!view.is_attached());
+        assert_eq!(view.flow_attainment_ppm(0), None);
+        assert_eq!(view.flow_p99_ps(0), None);
+        assert_eq!(view.flow_queue_depth(0), None);
+        assert_eq!(view.tenant_bytes_delta(0, 8), None);
+        assert_eq!(view.engine_bytes_delta(0, 8), None);
     }
 }

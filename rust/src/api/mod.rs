@@ -11,15 +11,21 @@
 //!   vocabulary ([`RegisterRequest`], [`Admitted`], [`ShaperProgram`],
 //!   [`Directive`], [`ApiError`], [`FlowStatusView`]).
 //! - [`arcus`] — [`ArcusControlPlane`]: profile tables + Algorithm 1.
+//! - [`adaptive`] — [`AdaptiveControlPlane`]: closed-loop AIMD wrapper over
+//!   the Arcus plane, driven by the [`ObsView`] telemetry in
+//!   [`TickContext`].
 //! - [`baseline`] — [`NoOpControlPlane`] (Host_no_TS / Bypassed_PANIC) and
 //!   [`StaticRateControlPlane`] (Host_TS_*).
 
+pub mod adaptive;
 pub mod arcus;
 pub mod baseline;
 pub mod control;
 
+pub use adaptive::{AdaptiveConfig, AdaptiveControlPlane};
 pub use arcus::ArcusControlPlane;
 pub use baseline::{NoOpControlPlane, StaticRateControlPlane};
 pub use control::{
-    Admitted, ApiError, ControlPlane, Directive, FlowStatusView, RegisterRequest, ShaperProgram,
+    Admitted, ApiError, ControlPlane, Directive, DirectiveKind, FlowStatusView, ObsView,
+    RegisterRequest, ShaperProgram, TickContext,
 };

@@ -22,6 +22,14 @@
 //! [raid]                    # optional: enables storage flows
 //! drives = 4
 //!
+//! [adaptive]                # optional: closed-loop adaptive control
+//! increase_step = 0.02      # (Arcus mode; crate::api::AdaptiveControlPlane)
+//! decrease_factor = 0.85    # fast-tier AIMD gains
+//! max_ceiling = 1.25        # shaped-rate cap as a multiple of the SLO
+//! replan_every = 10         # slow-tier aggregate re-plan period (ticks)
+//! deadband_ppm = 20000      # attainment dead-band around 1.0
+//! backlog_depth = 64        # queue depth that counts as backlog
+//!
 //! [[flows]]
 //! vm = 0
 //! path = "function_call"    # function_call | inline_nic_rx | inline_nic_tx | inline_p2p
@@ -59,6 +67,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::accel::AccelModel;
+use crate::api::AdaptiveConfig;
 use crate::faults::{validate_faults, FaultKind, FaultSpec};
 use crate::flow::pattern::{Burstiness, SizeDist};
 use crate::flow::{FlowKind, FlowSpec, Path, Slo, TrafficPattern};
@@ -102,6 +111,30 @@ pub fn spec_from_document(doc: &Document) -> Result<ExperimentSpec> {
     if doc.tables.contains_key("raid") {
         let drives = doc.int_or("raid", "drives", 4) as usize;
         spec = spec.with_raid(drives, SsdConfig::samsung_983dct());
+    }
+    if doc.tables.contains_key("adaptive") {
+        let d = AdaptiveConfig::default();
+        let replan_every = doc.int_or("adaptive", "replan_every", d.replan_every as i64);
+        let deadband_ppm = doc.int_or("adaptive", "deadband_ppm", d.deadband_ppm as i64);
+        let backlog_depth = doc.int_or("adaptive", "backlog_depth", d.backlog_depth as i64);
+        // Reject negatives before the u64 casts below silently wrap them
+        // into huge values that would pass AdaptiveConfig::validate.
+        if replan_every < 0 || deadband_ppm < 0 || backlog_depth < 0 {
+            bail!(
+                "[adaptive]: replan_every/deadband_ppm/backlog_depth must be \
+                 non-negative (got {replan_every}/{deadband_ppm}/{backlog_depth})"
+            );
+        }
+        let cfg = AdaptiveConfig {
+            increase_step: doc.float_or("adaptive", "increase_step", d.increase_step),
+            decrease_factor: doc.float_or("adaptive", "decrease_factor", d.decrease_factor),
+            max_ceiling: doc.float_or("adaptive", "max_ceiling", d.max_ceiling),
+            replan_every: replan_every as u64,
+            deadband_ppm: deadband_ppm as u64,
+            backlog_depth: backlog_depth as u64,
+        };
+        cfg.validate().map_err(|e| anyhow::anyhow!("[adaptive]: {e}"))?;
+        spec = spec.with_adaptive(cfg);
     }
     spec.control_period = (doc.float_or("experiment", "control_period_us", 100.0) * MICROS as f64) as u64;
     spec.queue_cap = doc.int_or("experiment", "queue_cap", 4096) as usize;
@@ -357,6 +390,36 @@ accel = 1
         let text = format!("[experiment]\nobs_sample_every = 0\n{base}");
         let err = spec_from_document(&Document::from_str(&text).unwrap()).unwrap_err();
         assert!(format!("{err:#}").contains("obs_sample_every"), "{err:#}");
+    }
+
+    #[test]
+    fn parses_and_validates_adaptive_table() {
+        let base = "[[accels]]\nkind = \"ipsec\"\n[[flows]]\nvm = 0\nslo_gbps = 8.0\n";
+        // No [adaptive] table → the static planner runs alone.
+        let spec = spec_from_document(&Document::from_str(base).unwrap()).unwrap();
+        assert!(spec.adaptive.is_none());
+        // An empty table enables the defaults.
+        let text = format!("[adaptive]\n{base}");
+        let spec = spec_from_document(&Document::from_str(&text).unwrap()).unwrap();
+        assert_eq!(spec.adaptive, Some(AdaptiveConfig::default()));
+        // Overrides are honored.
+        let text = format!(
+            "[adaptive]\nincrease_step = 0.05\nreplan_every = 4\nbacklog_depth = 32\n{base}"
+        );
+        let spec = spec_from_document(&Document::from_str(&text).unwrap()).unwrap();
+        let cfg = spec.adaptive.unwrap();
+        assert!((cfg.increase_step - 0.05).abs() < 1e-12);
+        assert_eq!(cfg.replan_every, 4);
+        assert_eq!(cfg.backlog_depth, 32);
+        assert!((cfg.decrease_factor - AdaptiveConfig::default().decrease_factor).abs() < 1e-12);
+        // Out-of-range gains surface the validator's complaint verbatim.
+        let text = format!("[adaptive]\ndecrease_factor = 1.5\n{base}");
+        let err = spec_from_document(&Document::from_str(&text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("decrease_factor"), "{err:#}");
+        // Negative ints are rejected, not wrapped into huge u64s.
+        let text = format!("[adaptive]\nreplan_every = -1\n{base}");
+        let err = spec_from_document(&Document::from_str(&text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("non-negative"), "{err:#}");
     }
 
     #[test]

@@ -22,6 +22,6 @@ pub mod planner;
 pub mod profile;
 pub mod status;
 
-pub use planner::{run_tick, Action, PlannerConfig};
+pub use planner::{run_tick, Action, PlannerConfig, RejectReason};
 pub use profile::{AccTable, ProfileKey, ProfileTable};
 pub use status::{FlowStatus, MeasuredWindow, PerFlowStatusTable, SloState};

@@ -57,6 +57,67 @@ pub enum Action {
     SwitchPath { flow: FlowId, to: Path },
 }
 
+/// Why admission control (or renegotiation) refused an SLO. Typed so
+/// callers — the adaptive plane, a tenant SDK, the renegotiation path —
+/// can react to the *category* (transient capacity pressure vs structural
+/// impossibility) without parsing strings; `Display` renders the human
+/// text the old stringly errors carried.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RejectReason {
+    /// Committed SLOs plus this one exceed the profiled budget. Transient:
+    /// capacity may free up when a flow departs or renegotiates down.
+    CapacityExceeded {
+        /// Admission budget (bytes/sec, net of headroom) in this context.
+        budget: f64,
+        /// SLO rates already committed on the engine (bytes/sec).
+        committed: f64,
+        /// The rate this request asked to commit (bytes/sec).
+        requested: f64,
+    },
+    /// The profile table holds no entry for this (accel, path) context.
+    /// Structural: retrying the identical request changes nothing.
+    UnprofiledContext {
+        /// Accelerator model name.
+        accel: String,
+        /// Invocation path that has no profile.
+        path: Path,
+    },
+    /// The profiled context is tagged SLO-Violating (e.g. tiny messages
+    /// that thrash the engine). Structural for this context.
+    SloViolatingContext {
+        /// Accelerator model name.
+        accel: String,
+        /// Message-size context key (bytes).
+        size: u64,
+        /// Flow count the context was profiled at.
+        n_flows: usize,
+    },
+    /// Renegotiation named a flow that is not registered.
+    UnknownFlow {
+        /// The unregistered flow id.
+        flow: FlowId,
+    },
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::CapacityExceeded { budget, committed, requested } => write!(
+                f,
+                "capacity {budget:.3e} B/s, committed {committed:.3e}, requested {requested:.3e}"
+            ),
+            RejectReason::UnprofiledContext { accel, path } => {
+                write!(f, "no profile for {accel} on {}", path.name())
+            }
+            RejectReason::SloViolatingContext { accel, size, n_flows } => write!(
+                f,
+                "context tagged SLO-Violating ({accel}, {size}B, {n_flows} flows)"
+            ),
+            RejectReason::UnknownFlow { flow } => write!(f, "flow {flow} is not registered"),
+        }
+    }
+}
+
 /// Admission-control verdict for a new registration.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Admission {
@@ -66,7 +127,7 @@ pub enum Admission {
         params: TokenBucketParams,
     },
     /// Rejected: committed SLOs plus this one exceed profiled capacity.
-    Reject { reason: String },
+    Reject { reason: RejectReason },
 }
 
 /// CapacityPlanning(CHECK) + AdmissionControl (Algorithm 1 lines 7–10,
@@ -119,7 +180,7 @@ pub fn renegotiation_control(
 ) -> Admission {
     let Some(row) = status.get(flow) else {
         return Admission::Reject {
-            reason: format!("flow {flow} is not registered"),
+            reason: RejectReason::UnknownFlow { flow },
         };
     };
     let n = status.flows_on_accel(row.accel).len();
@@ -167,16 +228,20 @@ fn capacity_check(
         Some(e) => e,
         None => {
             return Admission::Reject {
-                reason: format!("no profile for {accel_name} on {}", path.name()),
+                reason: RejectReason::UnprofiledContext {
+                    accel: accel_name.to_string(),
+                    path,
+                },
             }
         }
     };
     if !entry.slo_friendly {
         return Admission::Reject {
-            reason: format!(
-                "context tagged SLO-Violating ({accel_name}, {}B, {} flows)",
-                size_hint, n
-            ),
+            reason: RejectReason::SloViolatingContext {
+                accel: accel_name.to_string(),
+                size: size_hint,
+                n_flows: n,
+            },
         };
     }
     // The binding capacity is the TIGHTEST context among every committed
@@ -209,9 +274,11 @@ fn capacity_check(
     let budget = capacity_bytes * (1.0 - cfg.admission_headroom);
     if committed + rate_bytes > budget {
         return Admission::Reject {
-            reason: format!(
-                "capacity {budget:.3e} B/s, committed {committed:.3e}, requested {rate_bytes:.3e}"
-            ),
+            reason: RejectReason::CapacityExceeded {
+                budget,
+                committed,
+                requested: rate_bytes,
+            },
         };
     }
     Admission::Accept {

@@ -32,7 +32,8 @@ use arcus::flow::{FlowSpec, Path, Slo, TrafficPattern};
 use arcus::pcie::fabric::FabricConfig;
 use arcus::faults::{FaultKind, FaultSpec};
 use arcus::sweep::{
-    aggregate, parse_burst, Churn, FaultProfile, GridBase, Scale, SizeMix, SweepGrid, SweepRunner,
+    aggregate, parse_burst, Churn, ControlKind, FaultProfile, GridBase, Scale, SizeMix, SweepGrid,
+    SweepRunner,
 };
 use arcus::system::{run, ExperimentSpec, LifecycleEvent, Mode};
 use arcus::util::units::{Rate, MILLIS};
@@ -70,7 +71,7 @@ fn usage() {
              [--prom-out FILE] [--series-out FILE]\n  \
          arcus sweep [--modes a,b] [--tenants 1,2,4] [--mixes mtu,bulk] [--bursts paced,poisson]\n  \
              [--tightness 0.5,0.8] [--churn static,arrivals] [--faults healthy,accel_dip,rogue]\n  \
-             [--flows flat,16,256,4k,10k] [--accels ipsec] [--seeds 1,2]\n  \
+             [--flows flat,16,256,4k,10k] [--control static,adaptive] [--accels ipsec] [--seeds 1,2]\n  \
              [--duration-ms N] [--load F] [--threads N] [--scenarios] [--expect-flows N]\n  \
              [--prom-out FILE]\n  \
          arcus churn\n  arcus chaos\n  \
@@ -83,11 +84,15 @@ fn usage() {
          benches: `cargo bench`.\n\
          `sweep --flows` scales the roster past one flow per tenant; non-flat\n\
          cells shape through the hierarchical tree (per-tenant aggregates).\n\
+         `sweep --control` compares the static Arcus planner against the\n\
+         closed-loop adaptive wrapper (AIMD fast tier + aggregate re-planner).\n\
          `bench` writes BENCH_<preset>.json per preset, gates on the committed\n\
          events/sec floor when --floor is given (CI perf-smoke; per-preset\n\
          keys like min_events_per_sec_xlarge override the shared floor), and\n\
          with --verify asserts byte-identical canonical reports across the\n\
-         event-queue disciplines (the 10k-flow determinism gate).\n\
+         event-queue disciplines (the 10k-flow determinism gate). A committed\n\
+         min_adaptive_ev_ratio additionally runs the static-vs-adaptive\n\
+         profile pair and bounds the closed loop's throughput overhead.\n\
          `--prom-out` writes Prometheus text exposition of the run(s);\n\
          `simulate --series-out` dumps the sampled observability series\n\
          (crate::obs) for `arcus top`, which ranks the worst flows and\n\
@@ -527,6 +532,69 @@ fn bench(args: &[String]) -> i32 {
             eprintln!("wrote {file}");
         }
     }
+    // Closed-loop overhead profile: when the floor file commits
+    // `min_adaptive_ev_ratio`, run the profile preset twice on the
+    // reference heap — static planner vs adaptive control plane — and
+    // gate the adaptive run's events/sec as a fraction of the static
+    // run's. The ratio is self-relative (both runs share the process and
+    // allocator), so it tolerates runner speed, unlike absolute floors.
+    if let Some(path) = &floor_path {
+        let ratio = match perf::load_adaptive_ratio(path) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{e:#}");
+                return 1;
+            }
+        };
+        if let Some(ratio) = ratio {
+            let (st, ad) = perf::run_adaptive_profile();
+            for r in [&st, &ad] {
+                println!(
+                    "{:<8} {:<11} {:>9} {:>12.0} {:>11.1} {:>9.2} {:>6} {:>10} {:>10}",
+                    r.scenario,
+                    r.queue,
+                    r.events_executed,
+                    r.events_per_sec,
+                    r.wall_ms,
+                    r.wall_ms_per_sim_ms(),
+                    r.peak_queue_depth,
+                    r.rss_hint_kb,
+                    if r.allocs_per_event > 0.0 {
+                        format!("{:.4}", r.allocs_per_event)
+                    } else {
+                        "-".to_string()
+                    },
+                );
+            }
+            let measured = if st.events_per_sec > 0.0 {
+                ad.events_per_sec / st.events_per_sec
+            } else {
+                0.0
+            };
+            if measured < ratio {
+                eprintln!(
+                    "ADAPTIVE RATIO VIOLATION: closed loop ran {:.0} ev/s vs static \
+                     {:.0} ({measured:.3} < committed min ratio {ratio:.3})",
+                    ad.events_per_sec, st.events_per_sec
+                );
+                floor_violated = true;
+            } else {
+                eprintln!(
+                    "adaptive profile: {measured:.3}x static events/sec (floor {ratio:.3})"
+                );
+            }
+            all.push(st);
+            all.push(ad);
+            if write_files {
+                let file = "BENCH_adaptive.json";
+                if let Err(e) = std::fs::write(file, perf::to_json(&all[all.len() - 2..])) {
+                    eprintln!("writing {file}: {e}");
+                    return 1;
+                }
+                eprintln!("wrote {file}");
+            }
+        }
+    }
     if let Some(path) = out {
         if let Err(e) = std::fs::write(&path, perf::to_json(&all)) {
             eprintln!("writing {}: {e}", path.display());
@@ -553,6 +621,7 @@ fn sweep(args: &[String]) -> i32 {
     let mut churn = vec![Churn::Static];
     let mut faults = vec![FaultProfile::Healthy];
     let mut scale = vec![Scale::Flat];
+    let mut control = vec![ControlKind::Static];
     let mut accel_names = vec!["ipsec".to_string()];
     let mut seeds = vec![1u64, 2];
     let mut duration_ms = 5u64;
@@ -676,6 +745,18 @@ fn sweep(args: &[String]) -> i32 {
                     }
                 }
             }
+            "--control" => {
+                control.clear();
+                for p in &parts {
+                    match ControlKind::parse(p) {
+                        Ok(c) => control.push(c),
+                        Err(e) => {
+                            eprintln!("{e}");
+                            return 2;
+                        }
+                    }
+                }
+            }
             "--accels" => {
                 accel_names = parts.iter().map(|s| s.to_string()).collect();
             }
@@ -765,6 +846,7 @@ fn sweep(args: &[String]) -> i32 {
     .churn(churn)
     .faults(faults)
     .scale(scale)
+    .control(control)
     .accels(accels)
     .seeds(seeds);
 

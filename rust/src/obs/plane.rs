@@ -454,6 +454,24 @@ impl ObsPlane {
         self.recovery.get(flow).and_then(|r| r.recovered_at)
     }
 
+    /// Read-only access to one flow's series bundle (None when the flow id
+    /// is out of range). This is the accessor behind
+    /// [`crate::api::ObsView`]: control planes read telemetry through it
+    /// without gaining structural access to the plane.
+    pub fn flow_series(&self, flow: usize) -> Option<&FlowSeries> {
+        self.flows.get(flow).map(|f| &f.series)
+    }
+
+    /// Read-only access to one tenant's rollup (None when out of range).
+    pub fn tenant(&self, vm: usize) -> Option<&TenantObs> {
+        self.tenants.get(vm)
+    }
+
+    /// Read-only access to one engine's rollup (None when out of range).
+    pub fn engine(&self, engine: usize) -> Option<&EngineObs> {
+        self.engines.get(engine)
+    }
+
     /// Freeze the plane into its end-of-run snapshot.
     pub fn into_snapshot(self) -> ObsSnapshot {
         ObsSnapshot {

@@ -255,28 +255,28 @@ pub fn to_json(results: &[BenchResult]) -> String {
     out
 }
 
-/// Run one preset on one queue discipline, returning the measurement and
-/// the full report (whose [`crate::system::SystemReport::canonical`] form
-/// backs `arcus bench --verify`'s cross-queue byte-identity check).
-pub fn run_preset_report(
-    p: &Preset,
+/// Measure one spec on one queue discipline under a `scenario` label —
+/// the shared substrate behind the preset runs and the adaptive profile.
+fn measure(
+    scenario: &str,
+    sim_ms: u64,
+    spec: &ExperimentSpec,
     queue: QueueKind,
 ) -> (BenchResult, crate::system::SystemReport) {
-    let spec = spec_for(p);
     let a0 = alloc::alloc_count();
     let report = match queue {
-        QueueKind::Heap => run_with::<BinaryHeapQueue<EngineEvent>>(&spec),
-        QueueKind::Calendar => run_with::<CalendarQueue<EngineEvent>>(&spec),
-        QueueKind::Wheel => run_with::<HierWheel<EngineEvent>>(&spec),
+        QueueKind::Heap => run_with::<BinaryHeapQueue<EngineEvent>>(spec),
+        QueueKind::Calendar => run_with::<CalendarQueue<EngineEvent>>(spec),
+        QueueKind::Wheel => run_with::<HierWheel<EngineEvent>>(spec),
     };
     let allocs = alloc::alloc_count().saturating_sub(a0);
     let result = BenchResult {
-        scenario: p.name.to_string(),
+        scenario: scenario.to_string(),
         queue: report.queue,
         events_executed: report.events,
         events_per_sec: report.events_per_sec(),
         wall_ms: report.wall_secs * 1e3,
-        sim_ms: p.duration_ms as f64,
+        sim_ms: sim_ms as f64,
         peak_queue_depth: report.peak_queue_depth,
         rss_hint_kb: rss_hint_kb(),
         allocs_per_event: if report.events > 0 {
@@ -288,9 +288,38 @@ pub fn run_preset_report(
     (result, report)
 }
 
+/// Run one preset on one queue discipline, returning the measurement and
+/// the full report (whose [`crate::system::SystemReport::canonical`] form
+/// backs `arcus bench --verify`'s cross-queue byte-identity check).
+pub fn run_preset_report(
+    p: &Preset,
+    queue: QueueKind,
+) -> (BenchResult, crate::system::SystemReport) {
+    measure(p.name, p.duration_ms, &spec_for(p), queue)
+}
+
 /// Run one preset on one queue discipline.
 pub fn run_preset(p: &Preset, queue: QueueKind) -> BenchResult {
     run_preset_report(p, queue).0
+}
+
+/// The preset backing the closed-loop overhead profile: `medium` is the
+/// smallest preset whose event count makes a back-to-back throughput
+/// ratio stable on shared CI runners.
+pub const ADAPTIVE_PROFILE_PRESET: &str = "medium";
+
+/// The closed-loop overhead profile: the [`ADAPTIVE_PROFILE_PRESET`]
+/// scenario run twice on the reference heap — once under the static
+/// planner (`adaptive_off`), once wrapped in the adaptive control plane
+/// (`adaptive_on`). The pair backs the `min_adaptive_ev_ratio` gate: the
+/// per-tick AIMD bookkeeping must not tax event throughput by more than
+/// the committed fraction.
+pub fn run_adaptive_profile() -> (BenchResult, BenchResult) {
+    let p = preset_by_name(ADAPTIVE_PROFILE_PRESET).expect("committed preset");
+    let st = measure("adaptive_off", p.duration_ms, &spec_for(&p), QueueKind::Heap).0;
+    let spec = spec_for(&p).with_adaptive(crate::api::AdaptiveConfig::default());
+    let ad = measure("adaptive_on", p.duration_ms, &spec, QueueKind::Heap).0;
+    (st, ad)
 }
 
 /// Peak resident-set hint in KiB (`VmHWM` on Linux; 0 where unavailable).
@@ -349,6 +378,17 @@ pub fn load_alloc_ceiling(path: &std::path::Path) -> anyhow::Result<Option<f64>>
     let doc = crate::config::Document::from_file(path)?;
     Ok(doc
         .get("floor", "max_allocs_per_event")
+        .and_then(crate::config::Value::as_float))
+}
+
+/// Optional closed-loop throughput gate: `[floor] min_adaptive_ev_ratio`.
+/// When committed, `arcus bench --floor` runs [`run_adaptive_profile`]
+/// and fails if the adaptive run's events/sec falls below this fraction
+/// of the static run's. `None` when the file commits no ratio.
+pub fn load_adaptive_ratio(path: &std::path::Path) -> anyhow::Result<Option<f64>> {
+    let doc = crate::config::Document::from_file(path)?;
+    Ok(doc
+        .get("floor", "min_adaptive_ev_ratio")
         .and_then(crate::config::Value::as_float))
 }
 
@@ -477,14 +517,29 @@ mod tests {
         std::fs::write(&path, "[floor]\nmin_events_per_sec = 250000\n").unwrap();
         let floor = load_floor(&path).unwrap();
         assert!((floor - 250_000.0).abs() < 1e-9);
-        // No ceiling committed → None, not an error.
+        // No ceiling / ratio committed → None, not an error.
         assert_eq!(load_alloc_ceiling(&path).unwrap(), None);
+        assert_eq!(load_adaptive_ratio(&path).unwrap(), None);
         std::fs::write(
             &path,
-            "[floor]\nmin_events_per_sec = 250000\nmax_allocs_per_event = 0.5\n",
+            "[floor]\nmin_events_per_sec = 250000\nmax_allocs_per_event = 0.5\n\
+             min_adaptive_ev_ratio = 0.9\n",
         )
         .unwrap();
         assert_eq!(load_alloc_ceiling(&path).unwrap(), Some(0.5));
+        assert_eq!(load_adaptive_ratio(&path).unwrap(), Some(0.9));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn adaptive_profile_measures_both_control_loops() {
+        let (st, ad) = run_adaptive_profile();
+        assert_eq!(st.scenario, "adaptive_off");
+        assert_eq!(ad.scenario, "adaptive_on");
+        assert_eq!(st.queue, "binary_heap");
+        assert_eq!(ad.queue, "binary_heap");
+        assert!(st.events_executed > 10_000, "static events {}", st.events_executed);
+        assert!(ad.events_executed > 10_000, "adaptive events {}", ad.events_executed);
+        assert!(st.events_per_sec > 0.0 && ad.events_per_sec > 0.0);
     }
 }

@@ -46,6 +46,9 @@ pub struct ScenarioSummary {
     /// Worst committed-flow attainment *during the fault era* (fault-
     /// injection scenarios only).
     pub fault_att_min: Option<f64>,
+    /// Worst committed-flow worst-era p99 latency, µs (the adaptive-vs-
+    /// static headline: max over flows of max over pre/during/post eras).
+    pub fault_p99_us: Option<f64>,
     /// Slowest committed-flow recovery after the fault window, µs.
     /// `None` when the scenario is healthy or a flow never recovered
     /// inside the run (the distinction is carried by `unrecovered`).
@@ -97,6 +100,7 @@ pub fn summarize(outcome: &ScenarioOutcome) -> ScenarioSummary {
     // Fault-era metrics: the during-era floor and the slowest recovery over
     // committed flows (see crate::faults).
     let mut fault_att_min: Option<f64> = None;
+    let mut fault_p99_us: Option<f64> = None;
     let mut recovery_us_max: Option<f64> = None;
     let mut unrecovered = 0usize;
     if r.fault_window.is_some() {
@@ -108,6 +112,8 @@ pub fn summarize(outcome: &ScenarioOutcome) -> ScenarioSummary {
             if let Some(a) = fr.during.attainment {
                 fault_att_min = Some(fault_att_min.map_or(a, |m: f64| m.min(a)));
             }
+            let p99 = fr.worst_era_p99() as f64 / MICROS as f64;
+            fault_p99_us = Some(fault_p99_us.map_or(p99, |m: f64| m.max(p99)));
             match fr.recovery_time {
                 Some(t) => {
                     let us = t as f64 / MICROS as f64;
@@ -139,6 +145,7 @@ pub fn summarize(outcome: &ScenarioOutcome) -> ScenarioSummary {
         dropped: r.per_flow.iter().map(|f| f.dropped).sum(),
         rejected,
         fault_att_min,
+        fault_p99_us,
         recovery_us_max,
         unrecovered,
     }
@@ -161,6 +168,8 @@ pub struct AxisStats {
     /// Mean fault-era attainment floor over the group's *faulted*
     /// scenarios (`None` when the group is entirely healthy).
     pub fault_att_mean: Option<f64>,
+    /// Mean worst-era p99 (µs) over faulted scenarios.
+    pub fault_p99_mean: Option<f64>,
     /// Mean slowest-recovery time (µs) over faulted scenarios that
     /// recovered.
     pub recovery_us_mean: Option<f64>,
@@ -193,6 +202,7 @@ impl AxisStats {
             dropped_total: group.iter().map(|s| s.dropped).sum(),
             rejected_total: group.iter().map(|s| s.rejected).sum(),
             fault_att_mean: mean_of(group.iter().filter_map(|s| s.fault_att_min).collect()),
+            fault_p99_mean: mean_of(group.iter().filter_map(|s| s.fault_p99_us).collect()),
             recovery_us_mean: mean_of(
                 group.iter().filter_map(|s| s.recovery_us_max).collect(),
             ),
@@ -204,8 +214,8 @@ impl AxisStats {
 /// One axis's comparison table, rows ordered by formatted axis value.
 #[derive(Debug, Clone)]
 pub struct AxisTable {
-    /// Axis name (`mode`, `tenants`, `mix`, `burst`, `tightness`,
-    /// `accel`, `seed`).
+    /// Axis name (`mode`, `tenants`, `mix`, `burst`, `tightness`, `churn`,
+    /// `faults`, `scale`, `control`, `accel`, `seed`).
     pub axis: &'static str,
     pub rows: Vec<(String, AxisStats)>,
 }
@@ -243,14 +253,16 @@ fn axis_value(axis: &str, key: &ScenarioKey) -> String {
             crate::sweep::Scale::Flat => "flat".to_string(),
             crate::sweep::Scale::Flows(n) => format!("f{n:05}"),
         },
+        "control" => key.control.name().to_string(),
         "accel" => key.accel.to_string(),
         "seed" => format!("s{:020}", key.seed),
         other => unreachable!("unknown axis {other}"),
     }
 }
 
-const AXES: [&str; 10] = [
-    "mode", "tenants", "mix", "burst", "tightness", "churn", "faults", "scale", "accel", "seed",
+const AXES: [&str; 11] = [
+    "mode", "tenants", "mix", "burst", "tightness", "churn", "faults", "scale", "control",
+    "accel", "seed",
 ];
 
 /// Fold executed scenarios into the aggregate.
@@ -316,13 +328,13 @@ impl SweepAggregate {
         for table in &self.axes {
             out.push_str(&format!("\n[by {}]\n", table.axis));
             out.push_str(&format!(
-                "{:<22} {:>5} {:>9} {:>9} {:>10} {:>10} {:>9} {:>7} {:>6} {:>5} {:>8} {:>9} {:>6}\n",
+                "{:<22} {:>5} {:>9} {:>9} {:>10} {:>10} {:>9} {:>7} {:>6} {:>5} {:>8} {:>9} {:>9} {:>6}\n",
                 "value", "n", "att.mean", "att.min", "p99(us)", "p999(us)", "Gbps", "cv%",
-                "drop", "rej", "f.att", "rec(us)", "unrec"
+                "drop", "rej", "f.att", "f.p99", "rec(us)", "unrec"
             ));
             for (value, s) in &table.rows {
                 out.push_str(&format!(
-                    "{:<22} {:>5} {:>9.3} {:>9.3} {:>10.2} {:>10.2} {:>9.2} {:>7.2} {:>6} {:>5} {:>8} {:>9} {:>6}\n",
+                    "{:<22} {:>5} {:>9.3} {:>9.3} {:>10.2} {:>10.2} {:>9.2} {:>7.2} {:>6} {:>5} {:>8} {:>9} {:>9} {:>6}\n",
                     value,
                     s.scenarios,
                     s.attainment_mean,
@@ -334,6 +346,7 @@ impl SweepAggregate {
                     s.dropped_total,
                     s.rejected_total,
                     opt(s.fault_att_mean, 3),
+                    opt(s.fault_p99_mean, 2),
                     opt(s.recovery_us_mean, 1),
                     s.unrecovered_total
                 ));
@@ -384,6 +397,7 @@ mod tests {
             churn: crate::sweep::Churn::Static,
             faults: crate::sweep::FaultProfile::Healthy,
             scale: crate::sweep::Scale::Flat,
+            control: crate::sweep::ControlKind::Static,
             accel: "ipsec",
             seed: 1,
         };
@@ -414,6 +428,7 @@ mod tests {
                 accel_util: vec![0.5],
                 nic_rx_dropped: 0,
                 fault_window: None,
+                directive_lag_max: 0,
                 events: 10,
                 peak_queue_depth: 4,
                 queue: "binary_heap",
@@ -481,11 +496,15 @@ mod tests {
         let agg = aggregate(&[o, healthy]);
         let s = &agg.scenarios[0];
         assert!((s.fault_att_min.unwrap() - 0.4).abs() < 0.01, "{s:?}");
+        // Era p99s are all 50_000 ps → the worst-era max is 0.05 µs.
+        assert!((s.fault_p99_us.unwrap() - 0.05).abs() < 1e-9, "{s:?}");
         assert!((s.recovery_us_max.unwrap() - 200.0).abs() < 1e-9);
         assert_eq!(s.unrecovered, 0);
         assert_eq!(agg.scenarios[1].fault_att_min, None);
+        assert_eq!(agg.scenarios[1].fault_p99_us, None);
         let rendered = agg.render();
         assert!(rendered.contains("f.att"));
+        assert!(rendered.contains("f.p99"));
         assert!(rendered.contains("[by faults]"));
         // The healthy group renders dashes, not zeros.
         assert!(rendered.contains(" - "), "{rendered}");

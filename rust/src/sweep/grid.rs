@@ -19,6 +19,7 @@
 //! cell keeps its seed when other axes grow.
 
 use crate::accel::AccelModel;
+use crate::api::AdaptiveConfig;
 use crate::faults::{validate_faults, FaultKind, FaultSpec};
 use crate::flow::pattern::{Burstiness, SizeDist};
 use crate::flow::{FlowSpec, Path, Slo};
@@ -201,6 +202,46 @@ impl FaultProfile {
     }
 }
 
+/// Control-loop axis: whether Arcus cells run the static planner alone or
+/// wrap it in the closed-loop [`crate::api::AdaptiveControlPlane`] (default
+/// gains). Like [`Churn`], the `Static` value keeps pre-axis grids
+/// byte-identical — labels and derived seeds are unchanged when the axis
+/// is absent. Non-Arcus modes ignore the flag (there is no planner to
+/// wrap), so sweeping `adaptive` is only meaningful alongside `arcus`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlKind {
+    /// The static Arcus planner alone (the legacy grid).
+    Static,
+    /// The bi-level AIMD wrapper with [`AdaptiveConfig::default`] gains.
+    Adaptive,
+}
+
+impl ControlKind {
+    /// Every control-axis value, in menu order.
+    pub const ALL: [ControlKind; 2] = [ControlKind::Static, ControlKind::Adaptive];
+
+    /// Axis label.
+    pub fn name(self) -> &'static str {
+        match self {
+            ControlKind::Static => "static",
+            ControlKind::Adaptive => "adaptive",
+        }
+    }
+
+    /// Inverse of [`ControlKind::name`].
+    pub fn by_name(s: &str) -> Option<ControlKind> {
+        Self::ALL.iter().copied().find(|c| c.name() == s)
+    }
+
+    /// Parse a control name, or explain which names are valid.
+    pub fn parse(s: &str) -> Result<ControlKind, String> {
+        ControlKind::by_name(s).ok_or_else(|| {
+            let valid: Vec<&str> = ControlKind::ALL.iter().map(|c| c.name()).collect();
+            format!("unknown control `{s}` (valid controls: {})", valid.join(", "))
+        })
+    }
+}
+
 /// Flow-population scale axis: how many flows a scenario carries in
 /// total. `Flat` is the legacy roster — one flow per tenant — and keeps
 /// labels and derived seeds byte-identical to pre-scale grids. A
@@ -362,6 +403,9 @@ pub struct SweepGrid {
     /// Flow-population scale axis (defaults to `[Scale::Flat]`, so legacy
     /// grids are unchanged; non-flat cells run the shaper hierarchy).
     pub scale: Vec<Scale>,
+    /// Control-loop axis (defaults to `[ControlKind::Static]`, so legacy
+    /// grids are unchanged; adaptive cells wrap the Arcus planner).
+    pub control: Vec<ControlKind>,
     pub accels: Vec<AccelModel>,
     /// Seed axis: replications of every cell with decorrelated randomness.
     pub seeds: Vec<u64>,
@@ -381,6 +425,7 @@ impl SweepGrid {
             churn: vec![Churn::Static],
             faults: vec![FaultProfile::Healthy],
             scale: vec![Scale::Flat],
+            control: vec![ControlKind::Static],
             accels: Vec::new(),
             seeds: Vec::new(),
         }
@@ -418,6 +463,10 @@ impl SweepGrid {
         self.scale = v;
         self
     }
+    pub fn control(mut self, v: Vec<ControlKind>) -> Self {
+        self.control = v;
+        self
+    }
     pub fn accels(mut self, v: Vec<AccelModel>) -> Self {
         self.accels = v;
         self
@@ -438,6 +487,7 @@ impl SweepGrid {
             * self.churn.len()
             * self.faults.len()
             * self.scale.len()
+            * self.control.len()
             * self.accels.len()
             * self.seeds.len()
     }
@@ -537,23 +587,27 @@ impl SweepGrid {
                             for &churn in &self.churn {
                                 for &faults in &self.faults {
                                     for &scale in &self.scale {
-                                        for accel in &self.accels {
-                                            for &seed in &self.seeds {
-                                                let key = ScenarioKey {
-                                                    mode,
-                                                    tenants,
-                                                    mix,
-                                                    burst,
-                                                    tightness,
-                                                    churn,
-                                                    faults,
-                                                    scale,
-                                                    accel: accel.name,
-                                                    seed,
-                                                };
-                                                let spec = self.scenario_spec(&key, accel);
-                                                out.push(Scenario { index, key, spec });
-                                                index += 1;
+                                        for &control in &self.control {
+                                            for accel in &self.accels {
+                                                for &seed in &self.seeds {
+                                                    let key = ScenarioKey {
+                                                        mode,
+                                                        tenants,
+                                                        mix,
+                                                        burst,
+                                                        tightness,
+                                                        churn,
+                                                        faults,
+                                                        scale,
+                                                        control,
+                                                        accel: accel.name,
+                                                        seed,
+                                                    };
+                                                    let spec =
+                                                        self.scenario_spec(&key, accel);
+                                                    out.push(Scenario { index, key, spec });
+                                                    index += 1;
+                                                }
                                             }
                                         }
                                     }
@@ -608,6 +662,11 @@ impl SweepGrid {
             // Per-flow shapers do not compose at thousands of flows; the
             // scale axis exists to exercise the hierarchy.
             spec = spec.with_hierarchy();
+        }
+        if key.control == ControlKind::Adaptive {
+            // Only Arcus cells actually grow the closed loop (the engine
+            // ignores the config for modes with no planner to wrap).
+            spec = spec.with_adaptive(AdaptiveConfig::default());
         }
         spec
     }
@@ -713,6 +772,7 @@ pub struct ScenarioKey {
     pub churn: Churn,
     pub faults: FaultProfile,
     pub scale: Scale,
+    pub control: ControlKind,
     /// Accelerator model name (axis label).
     pub accel: &'static str,
     /// Seed-axis value (not the derived simulator seed).
@@ -721,12 +781,13 @@ pub struct ScenarioKey {
 
 impl ScenarioKey {
     /// Stable human-readable identifier, e.g.
-    /// `arcus/t04/f4000/mtu/poisson/x0.7000/arrivals/accel_dip/ipsec/s2`.
+    /// `arcus/t04/f4000/mtu/poisson/x0.7000/arrivals/accel_dip/adaptive/ipsec/s2`.
     /// Tightness carries four decimals so nearby swept values keep distinct
     /// labels. Static (no-churn) cells omit the churn segment, healthy
-    /// cells omit the faults segment, and flat cells omit the scale
-    /// segment, so their labels — and the simulator seeds derived from
-    /// them — are byte-identical to grids that predate those axes.
+    /// cells omit the faults segment, flat cells omit the scale segment,
+    /// and static-control cells omit the control segment, so their labels —
+    /// and the simulator seeds derived from them — are byte-identical to
+    /// grids that predate those axes.
     pub fn label(&self) -> String {
         let scale = match self.scale {
             Scale::Flat => String::new(),
@@ -740,8 +801,12 @@ impl ScenarioKey {
             FaultProfile::Healthy => String::new(),
             f => format!("{}/", f.name()),
         };
+        let control = match self.control {
+            ControlKind::Static => String::new(),
+            c => format!("{}/", c.name()),
+        };
         format!(
-            "{}/t{:02}/{}{}/{}/x{:.4}/{}{}{}/s{}",
+            "{}/t{:02}/{}{}/{}/x{:.4}/{}{}{}{}/s{}",
             self.mode.name(),
             self.tenants,
             scale,
@@ -750,6 +815,7 @@ impl ScenarioKey {
             self.tightness,
             churn,
             faults,
+            control,
             self.accel,
             self.seed
         )
@@ -1137,6 +1203,48 @@ mod tests {
         assert!((t_flat - t_scaled).abs() / t_flat < 1e-9);
         let labels: HashSet<String> = scaled.iter().map(|s| s.key.label()).collect();
         assert_eq!(labels.len(), 3);
+    }
+
+    #[test]
+    fn static_labels_and_seeds_unchanged_by_control_axis() {
+        let base = || {
+            SweepGrid::new(GridBase::default())
+                .modes(vec![Mode::Arcus])
+                .tenants(vec![2])
+                .mixes(vec![SizeMix::Mtu])
+                .bursts(vec![Burstiness::Paced])
+                .tightness(vec![0.7])
+                .accels(vec![AccelModel::ipsec_32g()])
+                .seeds(vec![1])
+        };
+        let legacy = base().expand();
+        let swept = base()
+            .control(vec![ControlKind::Static, ControlKind::Adaptive])
+            .expand();
+        assert_eq!(legacy.len(), 1);
+        assert_eq!(swept.len(), 2);
+        // The static-control cell keeps the legacy label, seed, and (no)
+        // adaptive config; the adaptive cell gets the wrapper + a distinct
+        // label and seed.
+        assert_eq!(swept[0].key.label(), legacy[0].key.label());
+        assert_eq!(swept[0].spec.seed, legacy[0].spec.seed);
+        assert!(swept[0].spec.adaptive.is_none());
+        assert!(swept[1].key.label().contains("/adaptive/"));
+        assert!(swept[1].spec.adaptive.is_some());
+        assert_ne!(swept[1].spec.seed, legacy[0].spec.seed);
+        // Faults and control segments compose in one label.
+        let both = base()
+            .faults(vec![FaultProfile::AccelDip])
+            .control(vec![ControlKind::Adaptive])
+            .expand();
+        assert!(both[0].key.label().contains("/accel_dip/adaptive/"));
+        // Round-trip the axis vocabulary.
+        for c in ControlKind::ALL {
+            assert_eq!(ControlKind::by_name(c.name()), Some(c));
+            assert_eq!(ControlKind::parse(c.name()), Ok(c));
+        }
+        let err = ControlKind::parse("manual").unwrap_err();
+        assert!(err.contains("static") && err.contains("adaptive"), "{err}");
     }
 
     #[test]

@@ -6,14 +6,15 @@
 //! experiment (§5, Figs 3/6/7/8). This subsystem makes that methodology a
 //! library:
 //!
-//! - [`grid`] — [`SweepGrid`] expands one [`GridBase`] template over ten
-//!   axes (tenant count, [`crate::system::Mode`], burstiness, message-size
-//!   mix, SLO tightness, tenant churn, fault injection, flow-population
-//!   scale, accelerator model, seed) into a deterministic scenario list;
-//!   [`SizeMix`] is the shared message-size vocabulary, [`Churn`] the
-//!   tenant-lifecycle one, [`FaultProfile`] the fault-injection one, and
-//!   [`Scale`] the flow-count one (non-flat cells run the
-//!   [`crate::shaping::ShaperTree`] hierarchy).
+//! - [`grid`] — [`SweepGrid`] expands one [`GridBase`] template over
+//!   eleven axes (tenant count, [`crate::system::Mode`], burstiness,
+//!   message-size mix, SLO tightness, tenant churn, fault injection,
+//!   flow-population scale, control loop, accelerator model, seed) into a
+//!   deterministic scenario list; [`SizeMix`] is the shared message-size
+//!   vocabulary, [`Churn`] the tenant-lifecycle one, [`FaultProfile`] the
+//!   fault-injection one, [`Scale`] the flow-count one (non-flat cells run
+//!   the [`crate::shaping::ShaperTree`] hierarchy), and [`ControlKind`]
+//!   the static-vs-adaptive control-loop one.
 //! - [`runner`] — [`SweepRunner`] executes scenarios across `std::thread`
 //!   workers; each simulation stays single-threaded and deterministic
 //!   (seeded per scenario), so threading never changes a result.
@@ -32,7 +33,7 @@ pub mod runner;
 
 pub use aggregate::{aggregate, AxisStats, AxisTable, ScenarioSummary, SweepAggregate};
 pub use grid::{
-    burst_name, churn_events, fault_events, parse_burst, scenario_seed, Churn, FaultProfile,
-    GridBase, Scale, Scenario, ScenarioKey, SizeMix, SweepGrid,
+    burst_name, churn_events, fault_events, parse_burst, scenario_seed, Churn, ControlKind,
+    FaultProfile, GridBase, Scale, Scenario, ScenarioKey, SizeMix, SweepGrid,
 };
 pub use runner::{default_threads, run_parallel, run_specs, ScenarioOutcome, SweepRunner};

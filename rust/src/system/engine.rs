@@ -57,8 +57,8 @@ use std::collections::VecDeque;
 
 use crate::accel::{AccelUnit, Job};
 use crate::api::{
-    ApiError, ArcusControlPlane, ControlPlane, Directive, NoOpControlPlane, RegisterRequest,
-    ShaperProgram, StaticRateControlPlane,
+    AdaptiveControlPlane, ApiError, ArcusControlPlane, ControlPlane, Directive, DirectiveKind,
+    NoOpControlPlane, RegisterRequest, ShaperProgram, StaticRateControlPlane, TickContext,
 };
 use crate::coordinator::planner::PlannerConfig;
 use crate::coordinator::status::MeasuredWindow;
@@ -145,10 +145,10 @@ pub enum EngineEvent {
     WakeRaid { gen: u64 },
     /// Algorithm-1 control-plane tick (self-rescheduling).
     ControlTick,
-    /// A directive lands after the ~10 µs MMIO reconfiguration latency.
+    /// A directive lands after the ~10 µs MMIO reconfiguration latency
+    /// (every control-plane decision — reshape, path switch, aggregate
+    /// envelope, or renegotiated program — rides this ONE event).
     ApplyDirective(Directive),
-    /// A renegotiated shaper program lands after the reconfig latency.
-    InstallProgram { flow: usize, program: ShaperProgram },
     /// Lifecycle: the flow registers and starts offering traffic.
     FlowArrives { flow: usize },
     /// Lifecycle: the flow deregisters, releasing committed capacity.
@@ -278,6 +278,10 @@ pub struct World {
     /// Algorithm-1 ticks are lost while `now` is before this (the
     /// `ControlOutage` fault).
     control_outage_until: Time,
+    /// Worst directive-propagation lag seen: max `apply time − issued_at`
+    /// over every applied directive (measurable because every [`Directive`]
+    /// carries its issue stamp).
+    directive_lag_max: Time,
 }
 
 impl Handler<EngineEvent> for World {
@@ -337,15 +341,6 @@ impl Handler<EngineEvent> for World {
                 }
             }
             Ev::ApplyDirective(d) => self.apply_directive(sim, d),
-            Ev::InstallProgram { flow, program } => {
-                if self.flows[flow].departed_at.is_some() {
-                    return; // departed inside the reconfig window
-                }
-                let t = sim.now();
-                self.install_program(t, flow, program);
-                self.flows[flow].reconfigs += 1;
-                self.kick_fetch(sim, flow, t);
-            }
             Ev::FlowArrives { flow } => self.ev_flow_arrives(sim, flow),
             Ev::FlowDeparts { flow } => self.ev_flow_departs(sim, flow),
             Ev::Renegotiate { flow, slo } => self.ev_renegotiate(sim, flow, slo),
@@ -392,14 +387,18 @@ impl World {
             .raid
             .map(|r| Raid0::new(r.drives, r.ssd, spec.seed ^ 0x0A1D));
         let ctrl: Box<dyn ControlPlane> = match spec.mode {
-            Mode::Arcus => Box::new(
-                ArcusControlPlane::from_models(
+            Mode::Arcus => {
+                let inner = ArcusControlPlane::from_models(
                     &spec.accels,
                     &spec.fabric,
                     PlannerConfig::default(),
                 )
-                .with_hierarchy(spec.hierarchy),
-            ),
+                .with_hierarchy(spec.hierarchy);
+                match spec.adaptive {
+                    Some(cfg) => Box::new(AdaptiveControlPlane::new(inner, cfg)),
+                    None => Box::new(inner),
+                }
+            }
             Mode::HostTsReflex | Mode::HostTsFirecracker => {
                 Box::new(StaticRateControlPlane::new())
             }
@@ -533,6 +532,7 @@ impl World {
             fault_window: fw,
             obs,
             control_outage_until: 0,
+            directive_lag_max: 0,
             spec,
         }
     }
@@ -706,12 +706,12 @@ impl World {
                 self.flows[flow].contract_start = now.max(1);
                 self.flows[flow].contract_base_bytes = self.metrics[flow].bytes;
                 self.flows[flow].contract_base_ops = self.metrics[flow].completed;
-                sim.after(
-                    self.spec.reconfig_latency,
-                    Ev::InstallProgram { flow, program: admitted.program },
+                self.schedule_directive(
+                    sim,
+                    Directive::install_program(now, flow, admitted.program),
                 );
             }
-            Err(ApiError::AdmissionRejected { .. }) => {
+            Err(ApiError::Rejection { .. }) => {
                 self.flows[flow].renegotiations_rejected += 1;
             }
             // UnknownFlow / ordering errors (e.g. renegotiating before the
@@ -1235,19 +1235,33 @@ impl World {
             windows.push((i, MeasuredWindow { span, bytes, ops, p99_latency: p99 }));
         }
         self.obs.on_tick_done(tick);
-        // 2. Plan through the API; 3. apply with the MMIO latency.
-        let directives = self.ctrl.tick(now, &windows);
-        let delay = self.spec.reconfig_latency;
+        // 2. Plan through the API (the telemetry-bearing context); 3. apply
+        // with the MMIO latency.
+        let ctx = TickContext::new(now, &windows).with_obs(&self.obs);
+        let directives = self.ctrl.tick(&ctx);
         for d in directives {
-            sim.after(delay, Ev::ApplyDirective(d));
+            self.schedule_directive(sim, d);
         }
+    }
+
+    /// Schedule a directive onto the hardware. This is the ONE place the
+    /// reconfiguration latency is charged: every control-plane decision —
+    /// reshape, path switch, aggregate envelope, renegotiated program —
+    /// lands `spec.reconfig_latency` (~10 µs of MMIO round trips, §5.3.1)
+    /// after it was issued, via the same `ApplyDirective` event.
+    fn schedule_directive<Q: EventQueue<Ev>>(&self, sim: &mut Sim<Ev, Q>, d: Directive) {
+        sim.after(self.spec.reconfig_latency, Ev::ApplyDirective(d));
     }
 
     /// Apply one control-plane directive to the hardware.
     fn apply_directive<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, d: Directive) {
         let now = sim.now();
-        match d {
-            Directive::SetRate { flow, rate } => {
+        // Propagation lag is measurable because directives carry their
+        // issue stamp; under `schedule_directive`'s single rule the max
+        // equals the reconfig latency.
+        self.directive_lag_max = self.directive_lag_max.max(now.saturating_sub(d.issued_at));
+        match d.kind {
+            DirectiveKind::SetRate { flow, rate } => {
                 // Reprogramming the registers clamps an adversarial tenant
                 // too: the tenant can ignore software, not registers —
                 // clearing `rogue` puts the (untouched) leaf back in force
@@ -1259,17 +1273,25 @@ impl World {
                 }
                 self.kick_fetch(sim, flow, now);
             }
-            Directive::SwitchPath { flow, to } => {
+            DirectiveKind::SwitchPath { flow, to } => {
                 self.flows[flow].path = to;
                 self.flows[flow].reconfigs += 1;
                 self.kick_fetch(sim, flow, now);
             }
-            Directive::SetAggregate { engine, tenant, guarantee, ceiling } => {
+            DirectiveKind::SetAggregate { engine, tenant, guarantee, ceiling } => {
                 // Tree-install: reprogram a tenant aggregate node. Waiting
                 // leaves see the new envelope at the next pacing pass.
                 if let Some(tree) = self.trees.get_mut(engine) {
                     tree.set_tenant(tenant, NodeBudget::new(guarantee, ceiling));
                 }
+            }
+            DirectiveKind::InstallProgram { flow, program } => {
+                if self.flows[flow].departed_at.is_some() {
+                    return; // departed inside the reconfig window
+                }
+                self.install_program(now, flow, program);
+                self.flows[flow].reconfigs += 1;
+                self.kick_fetch(sim, flow, now);
             }
         }
     }
@@ -1556,6 +1578,7 @@ impl<Q: EventQueue<EngineEvent> + Default> Engine<Q> {
             accel_util: w.accels.iter().map(|a| a.utilization(duration)).collect(),
             nic_rx_dropped: w.ports.iter().map(|p| p.rx_dropped).sum(),
             fault_window: w.fault_window,
+            directive_lag_max: w.directive_lag_max,
             events: self.sim.executed(),
             peak_queue_depth: self.sim.peak_pending(),
             queue: self.sim.queue_name(),
@@ -1967,6 +1990,72 @@ mod tests {
             assert!(post > 0.9, "flow {} post {post:.2}", f.flow);
             assert!(fr.recovery_time.is_some(), "flow {} never recovered", f.flow);
             assert!(fr.worst_era_p99() >= fr.pre.p99);
+        }
+    }
+
+    /// The PR-4 fault scenario (two oversubscribed flows, mid-run engine
+    /// slowdown) — the golden scenario the adaptive controller is pinned
+    /// against.
+    fn adaptive_fault_spec() -> ExperimentSpec {
+        use crate::faults::{FaultKind, FaultSpec};
+        two_flow_spec(Mode::Arcus, 0.5, 0.5)
+            .with_duration(9 * MILLIS)
+            .with_warmup(MILLIS)
+            .with_fault(FaultSpec::new(
+                FaultKind::AccelSlowdown { unit: 0, factor: 0.35 },
+                3 * MILLIS,
+                6 * MILLIS,
+            ))
+    }
+
+    #[test]
+    fn adaptive_report_identical_across_queue_disciplines() {
+        // Closed-loop decisions are functions of DES-scheduled state only
+        // (tick counter, status table, obs series), so the adaptive golden
+        // report must stay byte-identical across queue disciplines.
+        let spec = adaptive_fault_spec().with_adaptive(crate::api::AdaptiveConfig::default());
+        let heap = run(&spec);
+        let cal = run_with::<CalendarQueue<EngineEvent>>(&spec);
+        let wheel = run_with::<HierWheel<EngineEvent>>(&spec);
+        assert_eq!(heap.canonical(), cal.canonical());
+        assert_eq!(heap.canonical(), wheel.canonical());
+        assert_eq!(heap.events, cal.events);
+        assert_eq!(heap.events, wheel.events);
+        assert_eq!(heap.peak_queue_depth, cal.peak_queue_depth);
+        assert_eq!(heap.peak_queue_depth, wheel.peak_queue_depth);
+    }
+
+    #[test]
+    fn adaptive_beats_static_on_fault_recovery() {
+        // Same fault, same offered load. During the dip the fast tier backs
+        // violating flows off to their guarantees instead of boosting into
+        // a degraded engine; afterwards the catch-up ramp drains the fault
+        // backlog the static decay would strand at ~SLO rate. Net: the
+        // worst era's p99 strictly improves and recovery is no worse.
+        let spec = adaptive_fault_spec();
+        let st = run(&spec);
+        let ad = run(&spec.clone().with_adaptive(crate::api::AdaptiveConfig::default()));
+        // Every decision rides the one ApplyDirective path, so the maximum
+        // issue-to-apply lag is exactly the documented reconfig charge.
+        assert_eq!(ad.directive_lag_max, spec.reconfig_latency);
+        let dur = spec.duration;
+        for (s, a) in st.per_flow.iter().zip(ad.per_flow.iter()) {
+            let sf = s.fault.expect("static fault metrics");
+            let af = a.fault.expect("adaptive fault metrics");
+            assert!(
+                af.worst_era_p99() <= sf.worst_era_p99(),
+                "flow {}: adaptive worst-era p99 {} > static {}",
+                s.flow,
+                af.worst_era_p99(),
+                sf.worst_era_p99()
+            );
+            assert!(
+                af.recovery_time.unwrap_or(dur) <= sf.recovery_time.unwrap_or(dur),
+                "flow {}: adaptive recovery {:?} worse than static {:?}",
+                s.flow,
+                af.recovery_time,
+                sf.recovery_time
+            );
         }
     }
 

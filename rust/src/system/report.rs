@@ -200,6 +200,12 @@ pub struct SystemReport {
     pub queue: &'static str,
     /// Wall-clock seconds the simulation took (perf accounting).
     pub wall_secs: f64,
+    /// Worst directive-propagation lag observed: the maximum `apply time −
+    /// issued_at` over every directive the control plane emitted (ps).
+    /// Under the single reconfiguration-latency rule this equals
+    /// `reconfig_latency` whenever any directive was applied (0 when none
+    /// were), so a divergent value flags a second, unaccounted apply path.
+    pub directive_lag_max: Time,
     /// FNV-1a digest over the observability plane's snapshot (every series
     /// sample + rollup histogram bucket). Part of the canonical report, so
     /// the determinism suite asserts the whole in-run metrics surface is
@@ -254,7 +260,8 @@ impl SystemReport {
         let mut out = String::new();
         out.push_str(&format!(
             "mode={} span={} events={} peak_queue={} pcie_up={:?} pcie_down={:?} \
-             accel_util={:?} nic_rx_dropped={} fault_window={:?} series_digest={:016x}\n",
+             accel_util={:?} nic_rx_dropped={} fault_window={:?} directive_lag_max={} \
+             series_digest={:016x}\n",
             self.mode,
             self.measured_span,
             self.events,
@@ -264,6 +271,7 @@ impl SystemReport {
             self.accel_util,
             self.nic_rx_dropped,
             self.fault_window,
+            self.directive_lag_max,
             self.series_digest,
         ));
         for f in &self.per_flow {

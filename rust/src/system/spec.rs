@@ -3,6 +3,7 @@
 //! experiment config file.
 
 use crate::accel::AccelModel;
+use crate::api::AdaptiveConfig;
 use crate::faults::FaultSpec;
 use crate::flow::{FlowSpec, Slo};
 use crate::pcie::fabric::FabricConfig;
@@ -165,6 +166,10 @@ pub struct ExperimentSpec {
     /// coarser cadence for long runs where per-tick series would churn
     /// the rings.
     pub obs_sample_every: u64,
+    /// Closed-loop adaptive control (Arcus mode only): wrap the planner in
+    /// the AIMD [`crate::api::AdaptiveControlPlane`] with these gains.
+    /// `None` runs the static planner alone.
+    pub adaptive: Option<AdaptiveConfig>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -199,7 +204,14 @@ impl ExperimentSpec {
             shaper_tick: crate::shaping::hierarchy::DEFAULT_TICK_INTERVAL,
             obs_retention: 256,
             obs_sample_every: 1,
+            adaptive: None,
         }
+    }
+
+    /// Enable the closed-loop adaptive control plane (Arcus mode only).
+    pub fn with_adaptive(mut self, cfg: AdaptiveConfig) -> Self {
+        self.adaptive = Some(cfg);
+        self
     }
 
     /// Set observability-series retention (samples per ring) and sampling

@@ -9,8 +9,11 @@
 //!   tables.
 
 use arcus::accel::AccelModel;
+use arcus::api::{ApiError, ArcusControlPlane, ControlPlane, RegisterRequest};
+use arcus::coordinator::planner::{PlannerConfig, RejectReason};
 use arcus::flow::pattern::Burstiness;
-use arcus::flow::{FlowSpec, Path, Slo, TrafficPattern};
+use arcus::flow::{FlowKind, FlowSpec, Path, Slo, TrafficPattern};
+use arcus::pcie::fabric::FabricConfig;
 use arcus::sweep::{aggregate, Churn, GridBase, SizeMix, SweepGrid, SweepRunner};
 use arcus::system::{run, ExperimentSpec, LifecycleEvent, Mode};
 use arcus::util::units::{Rate, MILLIS};
@@ -180,4 +183,65 @@ fn churn_axis_produces_live_distinct_cells() {
     // Departing tenants stop completing.
     let departures = &outcomes[2];
     assert!(departures.report.per_flow[0].departed_at.is_some());
+}
+
+/// Admission failures surface as typed [`ApiError::Rejection`] variants:
+/// capacity pressure is transient (carries a `retry_after` hint, and the
+/// identical request succeeds once a departure frees the capacity), while
+/// an unprofiled context is structural (no hint — retrying is pointless).
+#[test]
+fn rejection_variants_carry_typed_reason_and_retry_hint() {
+    let req = |flow: usize, accel_name: &str, slo: Slo| RegisterRequest {
+        flow,
+        vm: flow,
+        path: Path::FunctionCall,
+        accel: 0,
+        accel_name: accel_name.into(),
+        kind: FlowKind::Accel,
+        slo,
+        size_hint: 1500,
+    };
+    let mut cp = ArcusControlPlane::from_models(
+        &[AccelModel::ipsec_32g()],
+        &FabricConfig::gen3_x8(),
+        PlannerConfig::default(),
+    );
+    cp.register_flow(&req(0, "ipsec", Slo::gbps(9.0))).expect("9 G fits");
+    cp.register_flow(&req(1, "ipsec", Slo::gbps(8.0))).expect("9 + 8 G fits");
+
+    // Transient: over-capacity carries a machine-consumable retry hint.
+    let e = cp.register_flow(&req(2, "ipsec", Slo::gbps(10.0))).unwrap_err();
+    match e {
+        ApiError::Rejection {
+            reason: RejectReason::CapacityExceeded { budget, committed, requested },
+            retry_after: Some(hint),
+        } => {
+            assert!(hint > 0, "retry hint must be a forward delay");
+            assert!(
+                committed + requested > budget,
+                "reason fields explain the refusal: {committed:.3e} + {requested:.3e} \
+                 vs {budget:.3e}"
+            );
+        }
+        other => panic!("expected transient capacity rejection, got {other:?}"),
+    }
+
+    // Structural: an unprofiled accelerator context has no retry hint.
+    let e = cp.register_flow(&req(3, "zstd", Slo::gbps(1.0))).unwrap_err();
+    assert!(
+        matches!(
+            e,
+            ApiError::Rejection {
+                reason: RejectReason::UnprofiledContext { .. },
+                retry_after: None,
+            }
+        ),
+        "expected structural unprofiled rejection, got {e:?}"
+    );
+
+    // The transient hint is honest: after a departure frees capacity, the
+    // exact request that was refused is admitted.
+    cp.deregister_flow(0).expect("flow 0 registered");
+    cp.register_flow(&req(2, "ipsec", Slo::gbps(10.0)))
+        .expect("freed capacity admits the retried flow");
 }

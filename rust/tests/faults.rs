@@ -16,7 +16,7 @@
 //! land, the programmed rate sum never exceeds the true capacity budget.
 
 use arcus::accel::AccelModel;
-use arcus::api::{ArcusControlPlane, ControlPlane, RegisterRequest};
+use arcus::api::{ArcusControlPlane, ControlPlane, RegisterRequest, TickContext};
 use arcus::config::{spec_from_document, Document};
 use arcus::coordinator::planner::PlannerConfig;
 use arcus::faults::{FaultKind, FaultSpec};
@@ -401,7 +401,7 @@ fn prop_skewed_profile_never_survives_first_rebalance() {
         // Re-profiling heals the table; the first tick emits the
         // reconciliation directives and applies them to its own registry.
         cp.set_profile_skew("ipsec", 1.0);
-        let _ = cp.tick(0, &[]);
+        let _ = cp.tick(&TickContext::new(0, &[]));
         let programmed: f64 = admitted
             .iter()
             .filter_map(|&f| cp.query_status(f).and_then(|v| v.shaped_rate))
