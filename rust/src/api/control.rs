@@ -392,7 +392,10 @@ pub struct FlowStatusView {
 /// shaping at the SLO average), and [`crate::api::NoOpControlPlane`]
 /// (unmanaged baselines). The dataplane owns the hardware (shapers, DMA
 /// routing) and must not reach past this trait into coordinator internals.
-pub trait ControlPlane {
+///
+/// `Send` is a supertrait so a per-host `World` (which boxes its plane) can
+/// advance on a fleet worker thread between interchange barriers.
+pub trait ControlPlane: Send {
     /// Register a flow: admission control plus initial shaper programming.
     fn register_flow(&mut self, req: &RegisterRequest) -> Result<Admitted, ApiError>;
 

@@ -1,0 +1,245 @@
+//! Versioned, ACKed, delta-only directive distribution — the fleet tier's
+//! wire vocabulary, modeled on Envoy's incremental xDS protocol.
+//!
+//! The fleet planner never ships whole config snapshots. Each update is a
+//! [`DirectiveBatch`] — a *delta* for one `(host, resource class)` stream,
+//! stamped with that stream's monotonically increasing config version. A
+//! host acknowledges the highest version it has applied on its next control
+//! tick ([`DirectiveAck`]); the [`DeltaDistributor`] keeps every un-ACKed
+//! batch outstanding and re-offers it each distribution round, so deltas
+//! survive drop windows (partial control-plane outages) by retransmission.
+//!
+//! Re-sends are made idempotent by the receiver, not the sender: a host
+//! applies a batch only if its version is newer than the stream's last
+//! applied version, so a delta that was delivered but whose ACK has not yet
+//! made it back is re-sent harmlessly. The distributor records *staleness*
+//! — publication to first successful delivery — per batch; the worst case
+//! surfaces in `SystemReport::directive_staleness_max` and is the quantity
+//! the propagation-lag experiments sweep.
+
+use std::collections::BTreeMap;
+
+use crate::util::units::Time;
+
+use super::control::Directive;
+
+/// Stream id: one independently versioned delta stream per
+/// `(host, resource class)`. The fleet planner uses the tenant (VM) id as
+/// the resource class, mirroring xDS's per-resource-type version counters.
+pub type StreamId = (usize, usize);
+
+/// One versioned delta for a single `(host, class)` stream.
+#[derive(Debug, Clone)]
+pub struct DirectiveBatch {
+    /// Destination host.
+    pub host: usize,
+    /// Resource class (tenant VM id) this delta reconfigures.
+    pub class: usize,
+    /// Stream version: strictly increasing per `(host, class)`, starting
+    /// at 1. A host applies the batch only when `version` exceeds the
+    /// stream's last applied version.
+    pub version: u64,
+    /// Virtual time the fleet planner published the delta.
+    pub published_at: Time,
+    /// The directives themselves (applied atomically, in order).
+    pub directives: Vec<Directive>,
+    /// First successful delivery time, once one lands (drop windows can
+    /// delay this across several re-send rounds).
+    pub delivered_at: Option<Time>,
+}
+
+impl DirectiveBatch {
+    /// Publication → first-successful-delivery staleness; `None` until the
+    /// batch has landed.
+    pub fn staleness(&self) -> Option<Time> {
+        self.delivered_at.map(|t| t.saturating_sub(self.published_at))
+    }
+}
+
+/// A host's acknowledgement of the highest version it has applied on one
+/// stream, sent on its next control tick after the apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DirectiveAck {
+    /// Acknowledging host.
+    pub host: usize,
+    /// Stream resource class.
+    pub class: usize,
+    /// Highest applied version (cumulative: ACKing v implicitly ACKs all
+    /// earlier versions of the stream).
+    pub version: u64,
+    /// Virtual time the ACK was emitted.
+    pub acked_at: Time,
+}
+
+/// Sender-side state of the incremental distribution protocol: per-stream
+/// version counters, the outstanding (published, un-ACKed) window, and the
+/// staleness ledger.
+///
+/// Deterministic by construction: all iteration is over `BTreeMap`s /
+/// publish-ordered `Vec`s, so the fleet's distribution rounds replay
+/// byte-identically.
+#[derive(Debug, Default)]
+pub struct DeltaDistributor {
+    next_version: BTreeMap<StreamId, u64>,
+    acked: BTreeMap<StreamId, u64>,
+    /// Published batches not yet ACKed, in publish order.
+    outstanding: Vec<DirectiveBatch>,
+    staleness_max: Time,
+    per_host_staleness: BTreeMap<usize, Time>,
+    published_total: u64,
+    resend_total: u64,
+}
+
+impl DeltaDistributor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish a delta on `(host, class)`: assigns the stream's next
+    /// version and enqueues the batch for delivery. Returns the version.
+    pub fn publish(
+        &mut self,
+        host: usize,
+        class: usize,
+        published_at: Time,
+        directives: Vec<Directive>,
+    ) -> u64 {
+        let v = self.next_version.entry((host, class)).or_insert(0);
+        *v += 1;
+        let version = *v;
+        self.outstanding.push(DirectiveBatch {
+            host,
+            class,
+            version,
+            published_at,
+            directives,
+            delivered_at: None,
+        });
+        self.published_total += 1;
+        version
+    }
+
+    /// Every batch published but not yet ACKed, in publish order — the
+    /// sender's re-offer set for the current distribution round.
+    pub fn outstanding(&self) -> &[DirectiveBatch] {
+        &self.outstanding
+    }
+
+    /// Record a successful delivery of `(host, class, version)` at `at`.
+    /// Only the *first* delivery sets the batch's staleness (re-sends of an
+    /// already-delivered-but-un-ACKed batch are idempotent at the host and
+    /// must not distort the ledger). Deliveries after a round of drops
+    /// count as re-sends for the protocol counters.
+    pub fn mark_delivered(&mut self, host: usize, class: usize, version: u64, at: Time) {
+        for b in &mut self.outstanding {
+            if b.host == host && b.class == class && b.version == version {
+                if b.delivered_at.is_none() {
+                    b.delivered_at = Some(at);
+                    let s = at.saturating_sub(b.published_at);
+                    self.staleness_max = self.staleness_max.max(s);
+                    let h = self.per_host_staleness.entry(host).or_insert(0);
+                    *h = (*h).max(s);
+                } else {
+                    self.resend_total += 1;
+                }
+                return;
+            }
+        }
+    }
+
+    /// Record a dropped (lost) send attempt; the batch stays outstanding
+    /// and will be re-offered next round.
+    pub fn mark_dropped(&mut self) {
+        self.resend_total += 1;
+    }
+
+    /// Ingest a host ACK: raises the stream's acked version monotonically
+    /// (a stale or duplicate ACK is a no-op) and retires every outstanding
+    /// batch at or below it.
+    pub fn ack(&mut self, ack: &DirectiveAck) {
+        let entry = self.acked.entry((ack.host, ack.class)).or_insert(0);
+        if ack.version <= *entry {
+            return;
+        }
+        *entry = ack.version;
+        self.outstanding.retain(|b| {
+            b.host != ack.host || b.class != ack.class || b.version > ack.version
+        });
+    }
+
+    /// Highest ACKed version on a stream (0 = nothing ACKed yet).
+    pub fn acked_version(&self, host: usize, class: usize) -> u64 {
+        self.acked.get(&(host, class)).copied().unwrap_or(0)
+    }
+
+    /// Worst publish → first-delivery staleness across all batches so far.
+    pub fn staleness_max(&self) -> Time {
+        self.staleness_max
+    }
+
+    /// Worst staleness among batches addressed to `host`.
+    pub fn host_staleness_max(&self, host: usize) -> Time {
+        self.per_host_staleness.get(&host).copied().unwrap_or(0)
+    }
+
+    /// Total batches published.
+    pub fn published_total(&self) -> u64 {
+        self.published_total
+    }
+
+    /// Total re-send attempts (drops + redundant deliveries).
+    pub fn resend_total(&self) -> u64 {
+        self.resend_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn versions_are_monotonic_and_per_stream() {
+        let mut d = DeltaDistributor::new();
+        assert_eq!(d.publish(0, 7, 100, Vec::new()), 1);
+        assert_eq!(d.publish(0, 7, 200, Vec::new()), 2);
+        assert_eq!(d.publish(1, 7, 200, Vec::new()), 1, "streams are per (host, class)");
+        assert_eq!(d.publish(0, 8, 300, Vec::new()), 1);
+        assert_eq!(d.outstanding().len(), 4);
+    }
+
+    #[test]
+    fn unacked_batches_stay_outstanding_until_cumulative_ack() {
+        let mut d = DeltaDistributor::new();
+        d.publish(0, 1, 100, Vec::new());
+        d.publish(0, 1, 200, Vec::new());
+        d.publish(0, 1, 300, Vec::new());
+        // ACK of v2 is cumulative: retires v1 and v2, keeps v3 for re-send.
+        d.ack(&DirectiveAck { host: 0, class: 1, version: 2, acked_at: 400 });
+        let left: Vec<u64> = d.outstanding().iter().map(|b| b.version).collect();
+        assert_eq!(left, vec![3]);
+        assert_eq!(d.acked_version(0, 1), 2);
+        // A stale ACK neither regresses the version nor resurrects batches.
+        d.ack(&DirectiveAck { host: 0, class: 1, version: 1, acked_at: 500 });
+        assert_eq!(d.acked_version(0, 1), 2);
+        assert_eq!(d.outstanding().len(), 1);
+    }
+
+    #[test]
+    fn staleness_records_first_delivery_only() {
+        let mut d = DeltaDistributor::new();
+        d.publish(0, 1, 1_000, Vec::new());
+        // Two rounds of drops, then delivery on the third offer.
+        d.mark_dropped();
+        d.mark_dropped();
+        d.mark_delivered(0, 1, 1, 4_000);
+        assert_eq!(d.staleness_max(), 3_000);
+        assert_eq!(d.host_staleness_max(0), 3_000);
+        assert_eq!(d.host_staleness_max(9), 0);
+        // A redundant re-delivery (ACK still in flight) must not inflate
+        // the ledger.
+        d.mark_delivered(0, 1, 1, 9_000);
+        assert_eq!(d.staleness_max(), 3_000);
+        assert_eq!(d.resend_total(), 3);
+        assert_eq!(d.published_total(), 1);
+    }
+}

@@ -16,11 +16,15 @@
 //!   [`TickContext`].
 //! - [`baseline`] — [`NoOpControlPlane`] (Host_no_TS / Bypassed_PANIC) and
 //!   [`StaticRateControlPlane`] (Host_TS_*).
+//! - [`distribution`] — the fleet tier's incremental (xDS-style) directive
+//!   distribution vocabulary: versioned [`DirectiveBatch`] deltas, host
+//!   [`DirectiveAck`]s, and the sender-side [`DeltaDistributor`].
 
 pub mod adaptive;
 pub mod arcus;
 pub mod baseline;
 pub mod control;
+pub mod distribution;
 
 pub use adaptive::{AdaptiveConfig, AdaptiveControlPlane};
 pub use arcus::ArcusControlPlane;
@@ -29,3 +33,4 @@ pub use control::{
     Admitted, ApiError, ControlPlane, Directive, DirectiveKind, FlowStatusView, ObsView,
     RegisterRequest, ShaperProgram, TickContext,
 };
+pub use distribution::{DeltaDistributor, DirectiveAck, DirectiveBatch};

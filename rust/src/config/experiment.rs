@@ -30,6 +30,19 @@
 //! deadband_ppm = 20000      # attainment dead-band around 1.0
 //! backlog_depth = 64        # queue depth that counts as backlog
 //!
+//! [fleet]                   # optional: multi-host fleet tier
+//! hosts = 2                 # shard flows by vm % hosts (crate::fleet)
+//! threads = 0               # advance threads (0 = one per host, 1 = serial)
+//! propagation_delay_us = 0.0  # directive publish → delivery delay
+//! drop_from_ms = 0.0        # one optional delivery drop window
+//! drop_until_ms = 0.0       # (equal bounds = no window)
+//! interchange_every = 1     # barriers every N control periods
+//! tight_ceiling = 1.05      # tenant envelope factors over the SLO sum
+//! boost_ceiling = 2.0
+//! attainment_floor_ppm = 970000
+//! clear_rounds = 3
+//! refresh_every = 16
+//!
 //! [[flows]]
 //! vm = 0
 //! path = "function_call"    # function_call | inline_nic_rx | inline_nic_tx | inline_p2p
@@ -191,6 +204,65 @@ pub fn spec_from_document(doc: &Document) -> Result<ExperimentSpec> {
         }
     }
     Ok(spec)
+}
+
+/// Optional `[fleet]` table → the multi-host fleet tier's configuration
+/// ([`crate::fleet::FleetConfig`]). `Ok(None)` when the config carries no
+/// fleet table (the single-world engine runs the spec directly).
+pub fn fleet_from_document(doc: &Document) -> Result<Option<crate::fleet::FleetConfig>> {
+    if !doc.tables.contains_key("fleet") {
+        return Ok(None);
+    }
+    let d = crate::fleet::FleetConfig::default();
+    let hosts = doc.int_or("fleet", "hosts", d.hosts as i64);
+    let threads = doc.int_or("fleet", "threads", d.threads as i64);
+    let interchange_every = doc.int_or("fleet", "interchange_every", d.interchange_every as i64);
+    let clear_rounds = doc.int_or("fleet", "clear_rounds", d.clear_rounds as i64);
+    let refresh_every = doc.int_or("fleet", "refresh_every", d.refresh_every as i64);
+    let floor_ppm =
+        doc.int_or("fleet", "attainment_floor_ppm", d.attainment_floor_ppm as i64);
+    // Reject negatives before the unsigned casts silently wrap them.
+    if hosts < 1 || threads < 0 || interchange_every < 1 || clear_rounds < 0
+        || refresh_every < 0 || floor_ppm < 0
+    {
+        bail!(
+            "[fleet]: hosts/interchange_every must be ≥ 1 and \
+             threads/clear_rounds/refresh_every/attainment_floor_ppm \
+             non-negative (got {hosts}/{interchange_every}/{threads}/\
+             {clear_rounds}/{refresh_every}/{floor_ppm})"
+        );
+    }
+    let delay_us = doc.float_or("fleet", "propagation_delay_us", 0.0);
+    let drop_from_ms = doc.float_or("fleet", "drop_from_ms", 0.0);
+    let drop_until_ms = doc.float_or("fleet", "drop_until_ms", 0.0);
+    if delay_us < 0.0 || drop_from_ms < 0.0 || drop_until_ms < drop_from_ms {
+        bail!(
+            "[fleet]: propagation_delay_us must be non-negative and \
+             drop_from_ms ≤ drop_until_ms (got {delay_us}/{drop_from_ms}/\
+             {drop_until_ms})"
+        );
+    }
+    let mut drop_windows = Vec::new();
+    if drop_until_ms > drop_from_ms {
+        drop_windows.push((
+            (drop_from_ms * MILLIS as f64) as u64,
+            (drop_until_ms * MILLIS as f64) as u64,
+        ));
+    }
+    let cfg = crate::fleet::FleetConfig {
+        hosts: hosts as usize,
+        threads: threads as usize,
+        propagation_delay: (delay_us * MICROS as f64) as u64,
+        interchange_every: interchange_every as u64,
+        drop_windows,
+        tight_ceiling: doc.float_or("fleet", "tight_ceiling", d.tight_ceiling),
+        boost_ceiling: doc.float_or("fleet", "boost_ceiling", d.boost_ceiling),
+        attainment_floor_ppm: floor_ppm as u64,
+        clear_rounds: clear_rounds as u32,
+        refresh_every: refresh_every as u64,
+    };
+    cfg.validate().map_err(|e| anyhow::anyhow!("[fleet]: {e}"))?;
+    Ok(Some(cfg))
 }
 
 fn fault_from_table(i: usize, t: &Table) -> Result<FaultSpec> {
@@ -420,6 +492,47 @@ accel = 1
         let text = format!("[adaptive]\nreplan_every = -1\n{base}");
         let err = spec_from_document(&Document::from_str(&text).unwrap()).unwrap_err();
         assert!(format!("{err:#}").contains("non-negative"), "{err:#}");
+    }
+
+    #[test]
+    fn parses_and_validates_fleet_table() {
+        let base = "[[accels]]\nkind = \"ipsec\"\n[[flows]]\nvm = 0\nslo_gbps = 8.0\n";
+        // No [fleet] table → single-world engine.
+        let doc = Document::from_str(base).unwrap();
+        assert!(fleet_from_document(&doc).unwrap().is_none());
+        // An empty table enables the defaults.
+        let doc = Document::from_str(&format!("[fleet]\n{base}")).unwrap();
+        let cfg = fleet_from_document(&doc).unwrap().unwrap();
+        assert_eq!(cfg.hosts, crate::fleet::FleetConfig::default().hosts);
+        assert!(cfg.drop_windows.is_empty());
+        // Overrides are honored, times convert to picoseconds.
+        let text = format!(
+            "[fleet]\nhosts = 4\nthreads = 1\npropagation_delay_us = 250.0\n\
+             drop_from_ms = 2.0\ndrop_until_ms = 3.5\nboost_ceiling = 3.0\n{base}"
+        );
+        let cfg = fleet_from_document(&Document::from_str(&text).unwrap())
+            .unwrap()
+            .unwrap();
+        assert_eq!(cfg.hosts, 4);
+        assert_eq!(cfg.threads, 1);
+        assert_eq!(cfg.propagation_delay, 250 * MICROS);
+        assert_eq!(cfg.drop_windows, vec![(2 * MILLIS, 3 * MILLIS + MILLIS / 2)]);
+        assert!((cfg.boost_ceiling - 3.0).abs() < 1e-12);
+        // Zero hosts and inverted drop windows are rejected loudly.
+        let doc = Document::from_str(&format!("[fleet]\nhosts = 0\n{base}")).unwrap();
+        let err = fleet_from_document(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("hosts"), "{err:#}");
+        let doc = Document::from_str(&format!(
+            "[fleet]\ndrop_from_ms = 5.0\ndrop_until_ms = 2.0\n{base}"
+        ))
+        .unwrap();
+        let err = fleet_from_document(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("drop_from_ms"), "{err:#}");
+        // A boost ceiling under the tight ceiling fails FleetConfig's own
+        // validator, surfaced verbatim.
+        let doc = Document::from_str(&format!("[fleet]\nboost_ceiling = 0.5\n{base}")).unwrap();
+        let err = fleet_from_document(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("boost_ceiling"), "{err:#}");
     }
 
     #[test]

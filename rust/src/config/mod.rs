@@ -11,7 +11,7 @@
 pub mod experiment;
 pub mod parse;
 
-pub use experiment::spec_from_document;
+pub use experiment::{fleet_from_document, spec_from_document};
 pub use parse::{parse_document, ParseError};
 
 use std::collections::BTreeMap;

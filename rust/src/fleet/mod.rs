@@ -1,0 +1,714 @@
+//! Multi-host fleet: N per-host worlds under one fleet-level control tier
+//! with incremental (xDS-style) directive distribution.
+//!
+//! # Architecture
+//!
+//! A [`FleetPlane`] shards one [`ExperimentSpec`] template into per-host
+//! specs (`host = vm % hosts`, so a tenant's flows never straddle hosts),
+//! builds one full [`Engine`] per host — each with its own shaper trees,
+//! devices, observability plane, and *local* control plane — and advances
+//! all hosts between deterministic interchange barriers at control-tick
+//! boundaries. Between barriers hosts share no state, so they may run on
+//! separate worker threads; at each barrier the fleet tier runs strictly
+//! sequentially, in host order. The event cores therefore execute exactly
+//! the same schedule regardless of thread count — the determinism suite
+//! pins byte-identical canonical reports for 1 vs N threads (and across
+//! all three event-queue disciplines).
+//!
+//! # Distribution protocol
+//!
+//! The fleet planner is the Autothrottle-style slow tier above the per-host
+//! fast loops: per `(host, tenant)` it publishes `SetAggregate` envelope
+//! deltas through a [`DeltaDistributor`] — versioned per stream, delivered
+//! after a configurable propagation delay, dropped inside
+//! `ControlOutage`-style windows, re-offered every round until the host
+//! ACKs the applied version at a later barrier. Hosts apply a batch only
+//! when its version exceeds the stream's last applied version, so re-sends
+//! are idempotent. Publication → first-successful-delivery staleness is
+//! ledgered per batch and surfaces as
+//! `SystemReport::directive_staleness_max` (worst case) and per host in
+//! `SystemReport::host_rollups` — *next to* the in-host apply lag
+//! `directive_lag_max`, which stays pinned at the reconfiguration latency
+//! because delivered directives are re-stamped at their delivery time.
+//!
+//! # Why staleness hurts SLOs
+//!
+//! Under normal operation the fleet tier *tightens* every tenant envelope
+//! to `slo_sum × tight_ceiling` (committed rate plus a small borrow
+//! margin). When a tenant's measured attainment drops below the floor —
+//! e.g. its accelerator degraded — the planner publishes a *boost*
+//! envelope (`slo_sum × boost_ceiling`) so the local plane's per-flow
+//! catch-up boosts actually have room to drain the backlog. A delayed or
+//! dropped boost delta postpones exactly that: the longer the staleness,
+//! the longer post-fault catch-up runs at the tight ceiling, and the worse
+//! the fault-era attainment — the scenario a single-world Arcus cannot
+//! express.
+
+use std::collections::BTreeMap;
+
+use crate::api::distribution::{DeltaDistributor, DirectiveAck};
+use crate::api::{Directive, ObsView};
+use crate::faults::{fault_window, FaultKind};
+use crate::shaping::ShapeMode;
+use crate::sim::{BinaryHeapQueue, EventQueue};
+use crate::system::{
+    Engine, EngineEvent, ExperimentSpec, HostRollup, Mode, SystemReport,
+};
+use crate::util::units::Time;
+
+/// Fleet-tier configuration: sharding, interchange cadence, and the
+/// distribution protocol's failure model.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of hosts to shard the template across (`vm % hosts`).
+    pub hosts: usize,
+    /// Worker threads for advancing hosts between barriers. `0` means one
+    /// per host; `1` runs hosts serially. Any value produces byte-identical
+    /// reports.
+    pub threads: usize,
+    /// Publish → delivery propagation delay for directive batches.
+    pub propagation_delay: Time,
+    /// Interchange barriers every N control periods (≥ 1).
+    pub interchange_every: u64,
+    /// Windows `[start, end)` during which delivery attempts are *lost*
+    /// (the batch stays outstanding and is re-offered next round) — the
+    /// fleet-level analogue of a `ControlOutage` fault.
+    pub drop_windows: Vec<(Time, Time)>,
+    /// Normal-operation tenant envelope: `ceiling = slo_sum × tight_ceiling`.
+    pub tight_ceiling: f64,
+    /// Under-attainment envelope: `ceiling = slo_sum × boost_ceiling`,
+    /// giving the local plane's per-flow boosts room to drain backlog.
+    pub boost_ceiling: f64,
+    /// Publish a boost when any of the tenant's flows samples attainment
+    /// below this (parts-per-million).
+    pub attainment_floor_ppm: u64,
+    /// Consecutive clean barriers required before a boosted tenant drops
+    /// back to the tight envelope (flap damping).
+    pub clear_rounds: u32,
+    /// Re-publish every stream's current envelope every N barriers even
+    /// without a level change (periodic xDS refresh; keeps envelopes in
+    /// force across local re-announcements and exercises the protocol on
+    /// healthy runs). `0` disables refresh.
+    pub refresh_every: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            hosts: 2,
+            threads: 0,
+            propagation_delay: 0,
+            interchange_every: 1,
+            drop_windows: Vec::new(),
+            tight_ceiling: 1.05,
+            boost_ceiling: 2.0,
+            attainment_floor_ppm: 970_000,
+            clear_rounds: 3,
+            refresh_every: 16,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// Validate, with actionable messages (CLI/config surface).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.hosts == 0 {
+            return Err("fleet: hosts must be ≥ 1".into());
+        }
+        if self.interchange_every == 0 {
+            return Err("fleet: interchange_every must be ≥ 1".into());
+        }
+        if !(self.tight_ceiling > 0.0) || !(self.boost_ceiling > 0.0) {
+            return Err("fleet: ceiling factors must be > 0".into());
+        }
+        if self.boost_ceiling < self.tight_ceiling {
+            return Err("fleet: boost_ceiling must be ≥ tight_ceiling".into());
+        }
+        for &(s, e) in &self.drop_windows {
+            if s >= e {
+                return Err(format!("fleet: empty drop window [{s}, {e})"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Which host owns tenant `vm` under the fleet partitioning.
+pub fn host_of(vm: usize, hosts: usize) -> usize {
+    vm % hosts.max(1)
+}
+
+/// Build host `h`'s spec from the fleet template: the subset of flows whose
+/// tenant lives on `h` (global flow/VM ids preserved — traffic streams are
+/// keyed by `(seed, flow id)`, so a flow generates the identical arrival
+/// sequence it would in a single-world run), the full device list,
+/// remapped lifecycle events, and the host's share of the fault plan
+/// (component faults land on host 0; `RogueTenant` follows its flow).
+///
+/// Returns the spec plus the mapping from local flow position to the
+/// template's flow position.
+pub fn host_spec(template: &ExperimentSpec, h: usize, hosts: usize) -> (ExperimentSpec, Vec<usize>) {
+    let globals: Vec<usize> = template
+        .flows
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| host_of(f.vm, hosts) == h)
+        .map(|(i, _)| i)
+        .collect();
+    let local_of = |global: usize| globals.iter().position(|&g| g == global);
+    let mut spec = template.clone();
+    spec.flows = globals.iter().map(|&g| template.flows[g].clone()).collect();
+    spec.lifecycle = template
+        .lifecycle
+        .iter()
+        .filter_map(|e| {
+            let local = local_of(e.flow())?;
+            let mut e = *e;
+            match &mut e {
+                crate::system::LifecycleEvent::Arrive { flow, .. }
+                | crate::system::LifecycleEvent::Depart { flow, .. }
+                | crate::system::LifecycleEvent::Renegotiate { flow, .. } => *flow = local,
+            }
+            Some(e)
+        })
+        .collect();
+    spec.faults = template
+        .faults
+        .iter()
+        .filter_map(|f| match f.kind {
+            FaultKind::RogueTenant { flow } => {
+                let vm = template.flows.get(flow)?.vm;
+                if host_of(vm, hosts) != h {
+                    return None;
+                }
+                let mut f = f.clone();
+                f.kind = FaultKind::RogueTenant { flow: local_of(flow)? };
+                Some(f)
+            }
+            // Component faults (accel/link/SSD/profile/control outage)
+            // strike host 0's copy of the hardware.
+            _ if h == 0 => Some(f.clone()),
+            _ => None,
+        })
+        .collect();
+    // The fleet tier owns the slow envelope loop: host planes run the
+    // *static* hierarchical Arcus plane so the in-host AIMD slow tier
+    // doesn't fight the distributed one.
+    spec.adaptive = None;
+    if spec.mode == Mode::Arcus {
+        spec.hierarchy = true;
+    }
+    (spec, globals)
+}
+
+/// Committed (SLO-sum) bytes/sec per `(tenant, engine)` on one host spec —
+/// the guarantees the fleet envelopes are anchored on. Only byte-rated
+/// SLOs participate (IOPS streams keep their local envelopes).
+fn tenant_engine_commit(spec: &ExperimentSpec) -> BTreeMap<(usize, usize), f64> {
+    let mut out: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    let storage_tree = spec.accels.len();
+    for f in &spec.flows {
+        if let Some((rate, ShapeMode::Gbps)) = f.slo.required_rate() {
+            let engine = if f.kind == crate::flow::FlowKind::Accel { f.accel } else { storage_tree };
+            *out.entry((f.vm, engine)).or_insert(0.0) += rate;
+        }
+    }
+    out
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Level {
+    Tight,
+    Boost,
+}
+
+struct HostSlot<Q: EventQueue<EngineEvent>> {
+    engine: Engine<Q>,
+    /// Local flow position → template flow position.
+    globals: Vec<usize>,
+    /// Committed bytes/sec per (tenant vm, engine) on this host.
+    commit: BTreeMap<(usize, usize), f64>,
+}
+
+struct PendingApply {
+    host: usize,
+    class: usize,
+    version: u64,
+    apply_at: Time,
+}
+
+/// The fleet: per-host engines plus the distribution tier's sender state.
+pub struct FleetPlane<Q: EventQueue<EngineEvent> + Default> {
+    cfg: FleetConfig,
+    template: ExperimentSpec,
+    hosts: Vec<HostSlot<Q>>,
+    dist: DeltaDistributor,
+    /// Host-side mirror: highest version delivered per stream (re-send
+    /// idempotence check lives here, with the receiver).
+    applied: BTreeMap<(usize, usize), u64>,
+    pending_acks: Vec<PendingApply>,
+    /// Planner hysteresis per stream.
+    level: BTreeMap<(usize, usize), Level>,
+    clean_streak: BTreeMap<(usize, usize), u32>,
+    round: u64,
+}
+
+impl FleetPlane<BinaryHeapQueue<EngineEvent>> {
+    /// Build on the reference binary-heap queue.
+    pub fn new(template: ExperimentSpec, cfg: FleetConfig) -> Self {
+        Self::build(template, cfg)
+    }
+}
+
+impl<Q: EventQueue<EngineEvent> + Default> FleetPlane<Q> {
+    /// Shard the template and build one engine per host.
+    pub fn build(template: ExperimentSpec, cfg: FleetConfig) -> Self {
+        assert!(cfg.validate().is_ok(), "invalid fleet config: {:?}", cfg.validate());
+        let hosts = (0..cfg.hosts)
+            .map(|h| {
+                let (spec, globals) = host_spec(&template, h, cfg.hosts);
+                let commit = tenant_engine_commit(&spec);
+                HostSlot { engine: Engine::<Q>::build(spec), globals, commit }
+            })
+            .collect();
+        FleetPlane {
+            cfg,
+            template,
+            hosts,
+            dist: DeltaDistributor::new(),
+            applied: BTreeMap::new(),
+            pending_acks: Vec::new(),
+            level: BTreeMap::new(),
+            clean_streak: BTreeMap::new(),
+            round: 0,
+        }
+    }
+
+    /// Interchange period on the virtual clock.
+    fn period(&self) -> Time {
+        self.template.control_period * self.cfg.interchange_every.max(1)
+    }
+
+    /// Advance every host to `t` — the only parallel section. Hosts share
+    /// no state between barriers, so sharding them over threads cannot
+    /// reorder any host's own events.
+    fn advance_all(&mut self, t: Time)
+    where
+        Q: Send,
+    {
+        let threads = if self.cfg.threads == 0 { self.hosts.len() } else { self.cfg.threads };
+        let threads = threads.clamp(1, self.hosts.len().max(1));
+        if threads <= 1 {
+            for h in &mut self.hosts {
+                h.engine.step_to(t);
+            }
+            return;
+        }
+        let chunk = self.hosts.len().div_ceil(threads);
+        std::thread::scope(|scope| {
+            for slice in self.hosts.chunks_mut(chunk) {
+                scope.spawn(move || {
+                    for h in slice {
+                        h.engine.step_to(t);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Collect ACKs due by barrier time `t`: a host acknowledges a batch on
+    /// its first barrier at/after the batch's apply time (delivery +
+    /// reconfiguration latency). Cumulative per stream.
+    fn collect_acks(&mut self, t: Time) {
+        let mut due: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+        self.pending_acks.retain(|p| {
+            if p.apply_at <= t {
+                let e = due.entry((p.host, p.class)).or_insert(0);
+                *e = (*e).max(p.version);
+                false
+            } else {
+                true
+            }
+        });
+        for ((host, class), version) in due {
+            self.dist.ack(&DirectiveAck { host, class, version, acked_at: t });
+        }
+    }
+
+    /// The planning pass: decide each stream's envelope level from the
+    /// host observability planes and publish deltas for changed (or
+    /// refresh-due) streams. Sequential, host order, BTreeMap iteration —
+    /// deterministic.
+    fn plan(&mut self, t: Time) {
+        if self.template.mode != Mode::Arcus {
+            return; // envelopes only exist on the shaped architecture
+        }
+        let refresh = self.cfg.refresh_every > 0 && self.round % self.cfg.refresh_every == 0;
+        let mut publishes: Vec<(usize, usize, Vec<Directive>)> = Vec::new();
+        for (h, slot) in self.hosts.iter().enumerate() {
+            let view = ObsView::of(slot.engine.obs());
+            // Tenants on this host, in vm order, with their flows' local
+            // positions.
+            let mut tenants: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            for (local, &g) in slot.globals.iter().enumerate() {
+                tenants.entry(self.template.flows[g].vm).or_default().push(local);
+            }
+            for (vm, locals) in tenants {
+                let violating = locals.iter().any(|&l| {
+                    view.flow_attainment_ppm(l)
+                        .map(|a| a < self.cfg.attainment_floor_ppm)
+                        .unwrap_or(false)
+                });
+                let key = (h, vm);
+                let current = self.level.get(&key).copied();
+                let desired = if violating {
+                    self.clean_streak.insert(key, 0);
+                    Level::Boost
+                } else if current == Some(Level::Boost) {
+                    let streak = self.clean_streak.entry(key).or_insert(0);
+                    *streak += 1;
+                    if *streak >= self.cfg.clear_rounds { Level::Tight } else { Level::Boost }
+                } else {
+                    Level::Tight
+                };
+                if current == Some(desired) && !refresh {
+                    continue;
+                }
+                let factor = match desired {
+                    Level::Tight => self.cfg.tight_ceiling,
+                    Level::Boost => self.cfg.boost_ceiling,
+                };
+                let directives: Vec<Directive> = slot
+                    .commit
+                    .iter()
+                    .filter(|((v, _), _)| *v == vm)
+                    .map(|(&(_, engine), &sum)| {
+                        Directive::set_aggregate(t, engine, vm, sum, sum * factor)
+                    })
+                    .collect();
+                if directives.is_empty() {
+                    continue; // tenant has no byte-rated commitment here
+                }
+                self.level.insert(key, desired);
+                publishes.push((h, vm, directives));
+            }
+        }
+        for (h, vm, directives) in publishes {
+            self.dist.publish(h, vm, t, directives);
+        }
+    }
+
+    /// The delivery pass: offer every outstanding batch. An offer inside a
+    /// drop window is lost (stays outstanding); otherwise it lands after
+    /// the propagation delay. Only a version newer than the stream's last
+    /// applied one is injected — re-sends racing an in-flight ACK are
+    /// idempotent. Injected directives are re-stamped to their delivery
+    /// time so in-host `directive_lag_max` still measures exactly the
+    /// reconfiguration latency; the propagation component is ledgered as
+    /// *staleness* by the distributor.
+    fn deliver(&mut self, t: Time) {
+        let delivery_at = t + self.cfg.propagation_delay;
+        let dropped = self
+            .cfg
+            .drop_windows
+            .iter()
+            .any(|&(s, e)| delivery_at >= s && delivery_at < e);
+        if dropped {
+            for _ in 0..self.dist.outstanding().len() {
+                self.dist.mark_dropped();
+            }
+            return;
+        }
+        let offers: Vec<(usize, usize, u64, Vec<Directive>)> = self
+            .dist
+            .outstanding()
+            .iter()
+            .map(|b| (b.host, b.class, b.version, b.directives.clone()))
+            .collect();
+        for (host, class, version, directives) in offers {
+            self.dist.mark_delivered(host, class, version, delivery_at);
+            let applied = self.applied.entry((host, class)).or_insert(0);
+            if version <= *applied {
+                continue; // receiver-side idempotence
+            }
+            *applied = version;
+            for d in directives {
+                let restamped = Directive { issued_at: delivery_at, kind: d.kind };
+                self.hosts[host].engine.deliver_directive(delivery_at, restamped);
+            }
+            self.pending_acks.push(PendingApply {
+                host,
+                class,
+                version,
+                apply_at: delivery_at + self.template.reconfig_latency,
+            });
+        }
+    }
+
+    /// Run to the template's duration and produce the merged report.
+    pub fn run(mut self) -> SystemReport
+    where
+        Q: Send,
+    {
+        let start = std::time::Instant::now();
+        let duration = self.template.duration;
+        let period = self.period();
+        let mut t = period;
+        while t < duration {
+            self.round += 1;
+            self.advance_all(t);
+            self.collect_acks(t);
+            self.plan(t);
+            self.deliver(t);
+            t += period;
+        }
+        self.advance_all(duration);
+        let wall = start.elapsed().as_secs_f64();
+        self.merge(wall)
+    }
+
+    /// Fold per-host reports into one fleet [`SystemReport`]: per-flow rows
+    /// in template order, summed/max'd scalars, per-host rollups, and a
+    /// merged observability snapshot (flows keyed back to template
+    /// positions, engines offset per host, tenants owned by their host).
+    fn merge(self, wall: f64) -> SystemReport {
+        let n_hosts = self.hosts.len();
+        let dist = self.dist;
+        let mut rollups: Vec<HostRollup> = Vec::with_capacity(n_hosts);
+        let mut per_flow_indexed = Vec::new();
+        let mut pcie_up = 0.0;
+        let mut pcie_down = 0.0;
+        let mut accel_util = Vec::new();
+        let mut nic_rx_dropped = 0u64;
+        let mut fault_lo: Option<Time> = None;
+        let mut fault_hi: Option<Time> = None;
+        let mut events = 0u64;
+        let mut peak_queue = 0usize;
+        let mut lag_max = 0;
+        let mut queue_name = "";
+        let mut merged_obs = crate::obs::ObsSnapshot::default();
+        for (h, slot) in self.hosts.into_iter().enumerate() {
+            let globals = slot.globals;
+            let report = slot.engine.finish(0.0);
+            if h == 0 {
+                queue_name = report.queue;
+                merged_obs.control_period = report.obs.control_period;
+                merged_obs.sample_every = report.obs.sample_every;
+            }
+            rollups.push(HostRollup {
+                host: h,
+                flows: globals.len(),
+                events: report.events,
+                peak_queue_depth: report.peak_queue_depth,
+                nic_rx_dropped: report.nic_rx_dropped,
+                directive_lag_max: report.directive_lag_max,
+                directive_staleness_max: dist.host_staleness_max(h),
+                series_digest: report.series_digest,
+            });
+            for (local, fr) in report.per_flow.into_iter().enumerate() {
+                per_flow_indexed.push((globals[local], fr));
+            }
+            pcie_up += report.pcie_up_util;
+            pcie_down += report.pcie_down_util;
+            accel_util.extend(report.accel_util);
+            nic_rx_dropped += report.nic_rx_dropped;
+            if let Some((lo, hi)) = report.fault_window {
+                fault_lo = Some(fault_lo.map_or(lo, |v: Time| v.min(lo)));
+                fault_hi = Some(fault_hi.map_or(hi, |v: Time| v.max(hi)));
+            }
+            events += report.events;
+            peak_queue = peak_queue.max(report.peak_queue_depth);
+            lag_max = lag_max.max(report.directive_lag_max);
+            let n_engines = report.obs.engines.len();
+            for mut f in report.obs.flows {
+                f.flow = globals[f.flow];
+                f.engine += h * n_engines;
+                merged_obs.flows.push(f);
+            }
+            for tnt in report.obs.tenants {
+                if host_of(tnt.vm, n_hosts) == h {
+                    merged_obs.tenants.push(tnt);
+                }
+            }
+            for mut e in report.obs.engines {
+                e.engine += h * n_engines;
+                merged_obs.engines.push(e);
+            }
+        }
+        per_flow_indexed.sort_by_key(|&(g, _)| g);
+        merged_obs.flows.sort_by_key(|f| f.flow);
+        merged_obs.tenants.sort_by_key(|t| t.vm);
+        let series_digest = merged_obs.digest();
+        SystemReport {
+            mode: self.template.mode.name(),
+            per_flow: per_flow_indexed.into_iter().map(|(_, fr)| fr).collect(),
+            measured_span: self.template.duration - self.template.warmup,
+            pcie_up_util: pcie_up / n_hosts as f64,
+            pcie_down_util: pcie_down / n_hosts as f64,
+            accel_util,
+            nic_rx_dropped,
+            fault_window: match (fault_lo, fault_hi) {
+                (Some(lo), Some(hi)) => Some((lo, hi)),
+                _ => fault_window(&self.template.faults),
+            },
+            directive_lag_max: lag_max,
+            directive_staleness_max: dist.staleness_max(),
+            host_rollups: rollups,
+            events,
+            peak_queue_depth: peak_queue,
+            queue: queue_name,
+            wall_secs: wall,
+            series_digest,
+            obs: merged_obs,
+        }
+    }
+
+    /// Protocol counters (published batches, re-send attempts) — demo /
+    /// test read side. Call before `run` consumes the plane, or use the
+    /// report's staleness fields afterwards.
+    pub fn distributor(&self) -> &DeltaDistributor {
+        &self.dist
+    }
+}
+
+/// Build + run a fleet on the reference binary-heap queue.
+pub fn run(template: &ExperimentSpec, cfg: &FleetConfig) -> SystemReport {
+    FleetPlane::<BinaryHeapQueue<EngineEvent>>::build(template.clone(), cfg.clone()).run()
+}
+
+/// Build + run a fleet on a chosen queue discipline.
+pub fn run_with<Q: EventQueue<EngineEvent> + Default + Send>(
+    template: &ExperimentSpec,
+    cfg: &FleetConfig,
+) -> SystemReport {
+    FleetPlane::<Q>::build(template.clone(), cfg.clone()).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::AccelModel;
+    use crate::flow::{FlowSpec, Path, Slo, TrafficPattern};
+    use crate::util::units::{Rate, MILLIS};
+
+    fn template(hosts_worth: usize) -> ExperimentSpec {
+        let accels = vec![AccelModel::ipsec_32g(), AccelModel::compress()];
+        let flows: Vec<FlowSpec> = (0..hosts_worth * 2)
+            .map(|i| {
+                FlowSpec::new(
+                    i,
+                    i / 2,
+                    Path::FunctionCall,
+                    TrafficPattern::fixed(4096, 0.2, Rate::gbps(50.0)),
+                    Slo::gbps(2.0),
+                    i % 2,
+                )
+            })
+            .collect();
+        ExperimentSpec::new(Mode::Arcus, accels, flows)
+            .with_duration(4 * MILLIS)
+            .with_warmup(MILLIS)
+            .with_hierarchy()
+    }
+
+    #[test]
+    fn partitioning_is_by_vm_and_preserves_global_ids() {
+        let t = template(4);
+        let (s0, g0) = host_spec(&t, 0, 2);
+        let (s1, g1) = host_spec(&t, 1, 2);
+        assert_eq!(s0.flows.len() + s1.flows.len(), t.flows.len());
+        for f in &s0.flows {
+            assert_eq!(f.vm % 2, 0);
+        }
+        for f in &s1.flows {
+            assert_eq!(f.vm % 2, 1);
+        }
+        // Global flow ids (and thus traffic streams) survive the shard.
+        assert_eq!(s0.flows[0].id, t.flows[g0[0]].id);
+        assert_eq!(s1.flows[0].id, t.flows[g1[0]].id);
+        // A tenant's flows never straddle hosts.
+        for (spec, h) in [(&s0, 0usize), (&s1, 1usize)] {
+            for f in &spec.flows {
+                assert_eq!(host_of(f.vm, 2), h);
+            }
+        }
+    }
+
+    #[test]
+    fn component_faults_land_on_host_zero_rogue_follows_its_flow() {
+        use crate::faults::FaultSpec;
+        let mut t = template(4);
+        t = t
+            .with_fault(FaultSpec::new(
+                FaultKind::AccelSlowdown { unit: 0, factor: 0.5 },
+                2 * MILLIS,
+                3 * MILLIS,
+            ))
+            .with_fault(FaultSpec::new(
+                // Flow 2 belongs to vm 1 → host 1 under hosts=2.
+                FaultKind::RogueTenant { flow: 2 },
+                2 * MILLIS,
+                3 * MILLIS,
+            ));
+        let (s0, _) = host_spec(&t, 0, 2);
+        let (s1, _) = host_spec(&t, 1, 2);
+        assert_eq!(s0.faults.len(), 1);
+        assert!(matches!(s0.faults[0].kind, FaultKind::AccelSlowdown { .. }));
+        assert_eq!(s1.faults.len(), 1);
+        match s1.faults[0].kind {
+            FaultKind::RogueTenant { flow } => {
+                // Remapped to host 1's local index for global flow 2.
+                assert_eq!(s1.flows[flow].id, 2);
+            }
+            _ => panic!("expected rogue tenant on host 1"),
+        }
+    }
+
+    #[test]
+    fn fleet_run_merges_flows_in_template_order() {
+        let t = template(4);
+        let cfg = FleetConfig { hosts: 2, threads: 1, ..FleetConfig::default() };
+        let r = run(&t, &cfg);
+        let ids: Vec<usize> = r.per_flow.iter().map(|f| f.flow).collect();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+        assert_eq!(r.host_rollups.len(), 2);
+        assert_eq!(r.host_rollups[0].flows + r.host_rollups[1].flows, 8);
+        assert_eq!(
+            r.events,
+            r.host_rollups.iter().map(|h| h.events).sum::<u64>()
+        );
+        // Healthy run, zero propagation delay: envelopes were distributed
+        // (refresh keeps streams alive) but nothing was stale.
+        assert_eq!(r.directive_staleness_max, 0);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_the_report() {
+        let t = template(8);
+        let serial = run(
+            &t,
+            &FleetConfig { hosts: 4, threads: 1, ..FleetConfig::default() },
+        );
+        let parallel = run(
+            &t,
+            &FleetConfig { hosts: 4, threads: 0, ..FleetConfig::default() },
+        );
+        assert_eq!(serial.canonical(), parallel.canonical());
+    }
+
+    #[test]
+    fn propagation_delay_is_ledgered_as_staleness() {
+        let t = template(4);
+        let cfg = FleetConfig {
+            hosts: 2,
+            threads: 1,
+            propagation_delay: 50 * crate::util::units::MICROS,
+            ..FleetConfig::default()
+        };
+        let r = run(&t, &cfg);
+        assert_eq!(r.directive_staleness_max, 50 * crate::util::units::MICROS);
+        // Staleness is the distribution tier's ledger; the in-host apply
+        // lag stays pinned at the reconfiguration latency.
+        assert!(r.directive_lag_max <= t.reconfig_latency);
+    }
+}

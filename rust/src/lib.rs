@@ -17,7 +17,10 @@
 //!   observability plane ([`obs`]: tick-indexed series, mergeable
 //!   histograms, Prometheus export, `arcus top`), a parallel
 //!   scenario-sweep engine ([`sweep`]) that expands experiment templates
-//!   over traffic/tenant/mode/churn/fault/scale axes, and a wall-clock
+//!   over traffic/tenant/mode/churn/fault/scale/hosts axes, a multi-host
+//!   fleet tier ([`fleet`]) that shards the world into per-host engines
+//!   coordinated by versioned, ACKed, delta-only directive distribution
+//!   ([`api::distribution`], xDS-style), and a wall-clock
 //!   serving runtime that executes AOT-compiled accelerator kernels via
 //!   PJRT.
 //! - **L2 (python/compile/model.py)** — batched accelerator datapaths in JAX,
@@ -46,6 +49,8 @@ pub mod config;
 pub mod coordinator;
 pub mod dma;
 pub mod faults;
+#[warn(missing_docs)]
+pub mod fleet;
 pub mod flow;
 pub mod metrics;
 pub mod nic;

@@ -6,6 +6,7 @@
 //!   sweep [axis flags]             expand a scenario grid and run it in parallel
 //!   churn                          tenant-churn demo: mid-run admission/rejection
 //!   chaos                          fault-injection demo: degradation, adversaries, recovery
+//!   fleet [flags]                  multi-host demo: versioned directive distribution + staleness
 //!   bench [flags]                  DES perf presets → BENCH_<name>.json (+ CI floor gate)
 //!   top <series.bin> [--limit N]   worst flows/tenants from a --series-out dump
 //!   profile [accel ...]            print the offline Capacity(t, X, N) table
@@ -46,6 +47,7 @@ fn main() {
         Some("sweep") => sweep(&args[1..]),
         Some("churn") => churn(),
         Some("chaos") => chaos(),
+        Some("fleet") => fleet(&args[1..]),
         Some("bench") => bench(&args[1..]),
         Some("top") => top(&args[1..]),
         Some("profile") => profile(&args[1..]),
@@ -71,11 +73,13 @@ fn usage() {
              [--prom-out FILE] [--series-out FILE]\n  \
          arcus sweep [--modes a,b] [--tenants 1,2,4] [--mixes mtu,bulk] [--bursts paced,poisson]\n  \
              [--tightness 0.5,0.8] [--churn static,arrivals] [--faults healthy,accel_dip,rogue]\n  \
-             [--flows flat,16,256,4k,10k] [--control static,adaptive] [--accels ipsec] [--seeds 1,2]\n  \
+             [--flows flat,16,256,4k,10k] [--control static,adaptive] [--hosts 1,2,4]\n  \
+             [--accels ipsec] [--seeds 1,2]\n  \
              [--duration-ms N] [--load F] [--threads N] [--scenarios] [--expect-flows N]\n  \
              [--prom-out FILE]\n  \
          arcus churn\n  arcus chaos\n  \
-         arcus bench [--quick] [--preset small|medium|large|xlarge|all] [--queue heap|calendar|wheel|both|all]\n  \
+         arcus fleet [--hosts N] [--delay-us N]\n  \
+         arcus bench [--quick] [--preset small|medium|large|xlarge|fleet|all] [--queue heap|calendar|wheel|both|all]\n  \
              [--out FILE] [--floor perf_floor.toml] [--no-files] [--verify]\n  \
          arcus top <series.bin> [--limit N]\n  \
          arcus profile [accel ...]\n  arcus serve [--artifacts DIR]\n  arcus modes\n\n\
@@ -86,6 +90,10 @@ fn usage() {
          cells shape through the hierarchical tree (per-tenant aggregates).\n\
          `sweep --control` compares the static Arcus planner against the\n\
          closed-loop adaptive wrapper (AIMD fast tier + aggregate re-planner).\n\
+         `sweep --hosts` shards cells across fleet hosts under versioned,\n\
+         ACKed delta directive distribution; `arcus fleet` demos how\n\
+         propagation delay + drop windows (stale config) degrade fault-era\n\
+         SLO attainment.\n\
          `bench` writes BENCH_<preset>.json per preset, gates on the committed\n\
          events/sec floor when --floor is given (CI perf-smoke; per-preset\n\
          keys like min_events_per_sec_xlarge override the shared floor), and\n\
@@ -209,8 +217,18 @@ fn simulate(args: &[String]) -> i32 {
                 return 1;
             }
         };
+        let fleet_cfg = match arcus::config::fleet_from_document(&doc) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("{}: {e:#}", path.display());
+                return 1;
+            }
+        };
         println!("=== {} ===", path.display());
-        let report = run(&spec);
+        let report = match &fleet_cfg {
+            Some(cfg) => arcus::fleet::run(&spec, cfg),
+            None => run(&spec),
+        };
         total_flows += report.per_flow.len();
         print!("{}", report.render());
         for f in &report.per_flow {
@@ -360,16 +378,16 @@ fn bench(args: &[String]) -> i32 {
             }
             "--preset" => {
                 let Some(v) = args.get(i + 1) else {
-                    eprintln!("--preset needs a value (small|medium|large|xlarge|all)");
+                    eprintln!("--preset needs a value (small|medium|large|xlarge|fleet|all)");
                     return 2;
                 };
                 if v == "all" {
-                    preset_names = Some(vec!["small", "medium", "large", "xlarge"]);
+                    preset_names = Some(vec!["small", "medium", "large", "xlarge", "fleet"]);
                 } else if let Some(p) = arcus::perf::preset_by_name(v) {
                     preset_names = Some(vec![p.name]);
                 } else {
                     eprintln!(
-                        "unknown preset `{v}` (valid: small, medium, large, xlarge, all)"
+                        "unknown preset `{v}` (valid: small, medium, large, xlarge, fleet, all)"
                     );
                     return 2;
                 }
@@ -413,8 +431,8 @@ fn bench(args: &[String]) -> i32 {
     }
 
     // `--quick` is CI-sized (small preset only) but an explicit `--preset`
-    // wins regardless of flag order. The 10k-flow `xlarge` preset runs
-    // only when named (alone or via `all`).
+    // wins regardless of flag order. The 10k-flow `xlarge` and multi-host
+    // `fleet` presets run only when named (alone or via `all`).
     let preset_names = match preset_names {
         Some(names) => names,
         None if quick => vec!["small"],
@@ -622,6 +640,7 @@ fn sweep(args: &[String]) -> i32 {
     let mut faults = vec![FaultProfile::Healthy];
     let mut scale = vec![Scale::Flat];
     let mut control = vec![ControlKind::Static];
+    let mut hosts = vec![1usize];
     let mut accel_names = vec!["ipsec".to_string()];
     let mut seeds = vec![1u64, 2];
     let mut duration_ms = 5u64;
@@ -757,6 +776,18 @@ fn sweep(args: &[String]) -> i32 {
                     }
                 }
             }
+            "--hosts" => {
+                hosts.clear();
+                for p in &parts {
+                    match p.parse::<usize>() {
+                        Ok(n) if n > 0 => hosts.push(n),
+                        _ => {
+                            eprintln!("bad host count `{p}` (positive integers only)");
+                            return 2;
+                        }
+                    }
+                }
+            }
             "--accels" => {
                 accel_names = parts.iter().map(|s| s.to_string()).collect();
             }
@@ -847,6 +878,7 @@ fn sweep(args: &[String]) -> i32 {
     .faults(faults)
     .scale(scale)
     .control(control)
+    .hosts(hosts)
     .accels(accels)
     .seeds(seeds);
 
@@ -1068,6 +1100,119 @@ fn chaos() -> i32 {
         if admitted { "was admitted" } else { "was rejected even so" }
     );
     println!("  rebalanced (9 + 8 + 10 > the true ~24.6 Gbps budget — nobody may boost).");
+    0
+}
+
+/// `arcus fleet`: the multi-host walkthrough. The same sharded world runs
+/// twice — once with instant directive distribution, once with a
+/// propagation delay plus a drop window covering the fault — so the cost
+/// of stale fleet config is visible as fault-era attainment loss.
+fn fleet(args: &[String]) -> i32 {
+    use arcus::fleet::{run as fleet_run, FleetConfig};
+    use arcus::util::units::MICROS;
+
+    let mut hosts = 2usize;
+    let mut delay_us = 500u64;
+    let mut i = 0;
+    while i < args.len() {
+        let flag = args[i].as_str();
+        let Some(value) = args.get(i + 1) else {
+            eprintln!("flag `{flag}` needs a value");
+            return 2;
+        };
+        match flag {
+            "--hosts" => match value.parse::<usize>() {
+                Ok(n) if (1..=64).contains(&n) => hosts = n,
+                _ => {
+                    eprintln!("bad host count `{value}` (1..=64)");
+                    return 2;
+                }
+            },
+            "--delay-us" => match value.parse::<u64>() {
+                Ok(d) => delay_us = d,
+                _ => {
+                    eprintln!("bad delay `{value}`");
+                    return 2;
+                }
+            },
+            other => {
+                eprintln!("unknown flag `{other}`");
+                return 2;
+            }
+        }
+        i += 2;
+    }
+
+    let line = Rate::gbps(32.0);
+    let tenants = hosts * 2;
+    // Two flows per tenant, striped over two IPSec engines per host:
+    // each host carries 2 tenants × 2 flows, 8 G committed per engine —
+    // inside the ~24.6 G budget, but offered load oversubscribes it so
+    // shaping (and the fleet envelopes) bind.
+    let flows: Vec<FlowSpec> = (0..tenants * 2)
+        .map(|i| {
+            FlowSpec::new(
+                i,
+                i / 2,
+                Path::FunctionCall,
+                TrafficPattern::fixed(1500, 0.45, line),
+                Slo::gbps(8.0),
+                i % 2,
+            )
+        })
+        .collect();
+    let template = ExperimentSpec::new(
+        Mode::Arcus,
+        vec![AccelModel::ipsec_32g(), AccelModel::ipsec_32g()],
+        flows,
+    )
+    .with_duration(12 * MILLIS)
+    .with_warmup(2 * MILLIS)
+    .with_hierarchy()
+    .with_fault(FaultSpec::new(
+        FaultKind::AccelSlowdown { unit: 0, factor: 0.5 },
+        4 * MILLIS,
+        7 * MILLIS,
+    ));
+
+    println!(
+        "{hosts} host(s), {tenants} tenants, {} flows; host 0's engine 0 degrades to 50%",
+        template.flows.len()
+    );
+    println!("for 3 ms. The fleet tier distributes tenant envelopes as versioned,");
+    println!("ACKed deltas; run B delays them by {delay_us} us and drops every delivery");
+    println!("inside the fault window, so hosts run on stale config exactly when");
+    println!("the boost matters.\n");
+
+    println!("=== Run A: instant distribution ===");
+    let fresh = fleet_run(
+        &template,
+        &FleetConfig { hosts, ..FleetConfig::default() },
+    );
+    print!("{}", fresh.render_fault_eras());
+    println!(
+        "→ staleness_max = {} us, per-host rollups: {}\n",
+        fresh.directive_staleness_max / MICROS,
+        fresh.host_rollups.len()
+    );
+
+    println!("=== Run B: {delay_us} us propagation + drop window over the fault ===");
+    let stale = fleet_run(
+        &template,
+        &FleetConfig {
+            hosts,
+            propagation_delay: delay_us * MICROS,
+            drop_windows: vec![(4 * MILLIS, 7 * MILLIS)],
+            ..FleetConfig::default()
+        },
+    );
+    print!("{}", stale.render_fault_eras());
+    println!(
+        "→ staleness_max = {} us (vs {} us in run A): boost envelopes arrived",
+        stale.directive_staleness_max / MICROS,
+        fresh.directive_staleness_max / MICROS
+    );
+    println!("  late, so catch-up ran at the tight ceiling for longer.");
     0
 }
 

@@ -47,7 +47,11 @@ fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64, String> {
     loop {
         let &b = buf.get(*pos).ok_or("truncated varint")?;
         *pos += 1;
-        if shift >= 64 {
+        // A u64 holds 64 payload bits: nine full 7-bit groups plus one final
+        // bit. The tenth byte may therefore only carry bit 63 (value 0 or 1,
+        // no continuation); anything else would shift payload bits off the
+        // top and decode to a silently wrong value.
+        if shift >= 64 || (shift == 63 && b & !0x01 != 0) {
             return Err("varint overflow".into());
         }
         v |= ((b & 0x7f) as u64) << shift;
@@ -74,7 +78,11 @@ fn put_ring(out: &mut Vec<u8>, r: &SeriesRing) {
 fn get_ring(buf: &[u8], pos: &mut usize) -> Result<SeriesRing, String> {
     let first = get_varint(buf, pos)?;
     let len = get_varint(buf, pos)? as usize;
-    if len > buf.len() {
+    // Each sample is at least one byte, so a well-formed count can never
+    // exceed the bytes *remaining* — checking against the whole buffer would
+    // let an inflated count near the tail over-allocate before the sample
+    // loop ever notices the truncation.
+    if len > buf.len().saturating_sub(*pos) {
         return Err("series length exceeds dump size".into());
     }
     let mut samples = Vec::with_capacity(len);
@@ -127,7 +135,10 @@ pub fn read(buf: &[u8]) -> Result<DumpData, String> {
     let control_period = get_varint(buf, &mut pos)?;
     let sample_every = get_varint(buf, &mut pos)?;
     let n_flows = get_varint(buf, &mut pos)? as usize;
-    if n_flows > buf.len() {
+    // Same remaining-bytes bound as `get_ring`: every flow record is at
+    // least 17 bytes (three id varints + seven empty rings), but ≥ 1 byte
+    // is all the guard needs to keep `with_capacity` honest.
+    if n_flows > buf.len().saturating_sub(pos) {
         return Err("flow count exceeds dump size".into());
     }
     let mut flows = Vec::with_capacity(n_flows);
@@ -214,6 +225,82 @@ mod tests {
         assert_eq!(g.bytes.get(6), Some(6000));
         assert_eq!(g.attainment_ppm.get(4), Some(u64::MAX));
         assert!(g.ops.is_empty());
+    }
+
+    #[test]
+    fn varint_rejects_overlong_encodings() {
+        // Nine 0xff continuation bytes put the decoder at shift 63 with
+        // bit 63 still unset. A final byte with any payload above bit 0
+        // would shift bits past the top of the u64 — the pre-fix decoder
+        // masked them off and returned a wrong value.
+        let mut hostile = vec![0xffu8; 9];
+        hostile.push(0x7f);
+        let mut pos = 0;
+        assert_eq!(
+            get_varint(&hostile, &mut pos),
+            Err("varint overflow".into()),
+            "tenth byte with payload bits beyond 64 must error, not truncate"
+        );
+
+        // A continuation bit on the tenth byte promises an eleventh group
+        // that cannot fit either.
+        let all_cont = vec![0xffu8; 11];
+        let mut pos = 0;
+        assert!(get_varint(&all_cont, &mut pos).is_err());
+
+        // The boundary cases stay valid: u64::MAX is nine 0xff bytes plus
+        // a final 0x01, and 1 << 63 is nine 0x80 bytes plus 0x01.
+        let mut max = vec![0xffu8; 9];
+        max.push(0x01);
+        let mut pos = 0;
+        assert_eq!(get_varint(&max, &mut pos), Ok(u64::MAX));
+        let mut top_bit = vec![0x80u8; 9];
+        top_bit.push(0x01);
+        let mut pos = 0;
+        assert_eq!(get_varint(&top_bit, &mut pos), Ok(1u64 << 63));
+    }
+
+    #[test]
+    fn ring_length_bounded_by_remaining_bytes() {
+        // 80-byte buffer whose ring record sits near the tail: first_tick 0,
+        // claimed length 75. 75 ≤ buf.len() so the pre-fix check (against
+        // the whole buffer) passed and the decoder allocated 75 slots before
+        // tripping over the truncation; the fixed check rejects up front
+        // because only 2 bytes remain after the header.
+        let mut buf = vec![0u8; 80];
+        let tail = 76;
+        buf[tail] = 0x00; // first_tick
+        buf[tail + 1] = 75; // sample count
+        let mut pos = tail;
+        assert_eq!(
+            get_ring(&buf, &mut pos).err(),
+            Some("series length exceeds dump size".to_string()),
+            "count must be bounded by bytes remaining, not dump size"
+        );
+    }
+
+    #[test]
+    fn flow_count_bounded_by_remaining_bytes() {
+        let snap = ObsSnapshot {
+            control_period: 1,
+            sample_every: 1,
+            ..Default::default()
+        };
+        let mut buf = write(&snap);
+        // Overwrite the flow-count varint (last header byte) to claim more
+        // flows than there are bytes left, then pad so the claim still fits
+        // within the *total* size the pre-fix check compared against.
+        let count_pos = buf.len() - 1;
+        buf[count_pos] = 40;
+        // Total size 48 ≥ the claimed 40 flows, so the pre-fix whole-buffer
+        // check sailed through and the decoder only failed later (with a
+        // misleading "truncated varint") while chewing the zero padding.
+        buf.resize(48, 0);
+        assert_eq!(
+            read(&buf).err(),
+            Some("flow count exceeds dump size".to_string()),
+            "flow count must be bounded by bytes remaining"
+        );
     }
 
     #[test]

@@ -56,14 +56,21 @@ pub struct Preset {
     /// Run the hierarchical shaper tree (the 10k-flow scale presets; flat
     /// per-flow buckets otherwise).
     pub hierarchy: bool,
+    /// Fleet size: 1 runs the plain single-world engine; > 1 shards the
+    /// roster over [`crate::fleet::FleetPlane`] hosts (one advance thread
+    /// per host) with the default directive-distribution config.
+    pub hosts: usize,
 }
 
 /// The committed presets. Tenancy and duration scale together so the
 /// large preset reaches the millions-of-events regime the multi-tenant
 /// sweeps (PR 1/2) need; `xlarge` is the 10,000-flow scale point the
 /// shaper hierarchy exists for — its whole roster shares eight trees, so
-/// the event queue stays shallow no matter how many flows block.
-pub const PRESETS: [Preset; 4] = [
+/// the event queue stays shallow no matter how many flows block. `fleet`
+/// shards a 64-flow roster over four fleet hosts (one advance thread
+/// each) to size the per-barrier interchange overhead of the
+/// distribution tier.
+pub const PRESETS: [Preset; 5] = [
     Preset {
         name: "small",
         tenants: 2,
@@ -72,6 +79,7 @@ pub const PRESETS: [Preset; 4] = [
         duration_ms: 5,
         warmup_ms: 1,
         hierarchy: false,
+        hosts: 1,
     },
     Preset {
         name: "medium",
@@ -81,6 +89,7 @@ pub const PRESETS: [Preset; 4] = [
         duration_ms: 20,
         warmup_ms: 2,
         hierarchy: false,
+        hosts: 1,
     },
     Preset {
         name: "large",
@@ -90,6 +99,7 @@ pub const PRESETS: [Preset; 4] = [
         duration_ms: 50,
         warmup_ms: 5,
         hierarchy: false,
+        hosts: 1,
     },
     Preset {
         name: "xlarge",
@@ -99,6 +109,17 @@ pub const PRESETS: [Preset; 4] = [
         duration_ms: 3,
         warmup_ms: 1,
         hierarchy: true,
+        hosts: 1,
+    },
+    Preset {
+        name: "fleet",
+        tenants: 8,
+        flows: 64,
+        accels: 2,
+        duration_ms: 10,
+        warmup_ms: 2,
+        hierarchy: true,
+        hosts: 4,
     },
 ];
 
@@ -255,20 +276,16 @@ pub fn to_json(results: &[BenchResult]) -> String {
     out
 }
 
-/// Measure one spec on one queue discipline under a `scenario` label —
-/// the shared substrate behind the preset runs and the adaptive profile.
-fn measure(
+/// Measure one report-producing run under a `scenario` label — the shared
+/// substrate behind the preset runs, the fleet preset, and the adaptive
+/// profile.
+fn measure_run(
     scenario: &str,
     sim_ms: u64,
-    spec: &ExperimentSpec,
-    queue: QueueKind,
+    run: impl FnOnce() -> crate::system::SystemReport,
 ) -> (BenchResult, crate::system::SystemReport) {
     let a0 = alloc::alloc_count();
-    let report = match queue {
-        QueueKind::Heap => run_with::<BinaryHeapQueue<EngineEvent>>(spec),
-        QueueKind::Calendar => run_with::<CalendarQueue<EngineEvent>>(spec),
-        QueueKind::Wheel => run_with::<HierWheel<EngineEvent>>(spec),
-    };
+    let report = run();
     let allocs = alloc::alloc_count().saturating_sub(a0);
     let result = BenchResult {
         scenario: scenario.to_string(),
@@ -288,14 +305,43 @@ fn measure(
     (result, report)
 }
 
+/// Measure one spec on one queue discipline under a `scenario` label.
+fn measure(
+    scenario: &str,
+    sim_ms: u64,
+    spec: &ExperimentSpec,
+    queue: QueueKind,
+) -> (BenchResult, crate::system::SystemReport) {
+    measure_run(scenario, sim_ms, || match queue {
+        QueueKind::Heap => run_with::<BinaryHeapQueue<EngineEvent>>(spec),
+        QueueKind::Calendar => run_with::<CalendarQueue<EngineEvent>>(spec),
+        QueueKind::Wheel => run_with::<HierWheel<EngineEvent>>(spec),
+    })
+}
+
 /// Run one preset on one queue discipline, returning the measurement and
 /// the full report (whose [`crate::system::SystemReport::canonical`] form
 /// backs `arcus bench --verify`'s cross-queue byte-identity check).
+/// Presets with `hosts > 1` run the fleet tier (one advance thread per
+/// host); `events_per_sec` then measures aggregate fleet throughput.
 pub fn run_preset_report(
     p: &Preset,
     queue: QueueKind,
 ) -> (BenchResult, crate::system::SystemReport) {
-    measure(p.name, p.duration_ms, &spec_for(p), queue)
+    let spec = spec_for(p);
+    if p.hosts > 1 {
+        let cfg = crate::fleet::FleetConfig { hosts: p.hosts, ..Default::default() };
+        return measure_run(p.name, p.duration_ms, || match queue {
+            QueueKind::Heap => {
+                crate::fleet::run_with::<BinaryHeapQueue<EngineEvent>>(&spec, &cfg)
+            }
+            QueueKind::Calendar => {
+                crate::fleet::run_with::<CalendarQueue<EngineEvent>>(&spec, &cfg)
+            }
+            QueueKind::Wheel => crate::fleet::run_with::<HierWheel<EngineEvent>>(&spec, &cfg),
+        });
+    }
+    measure(p.name, p.duration_ms, &spec, queue)
 }
 
 /// Run one preset on one queue discipline.
@@ -416,11 +462,31 @@ mod tests {
                 _ => panic!("presets carry throughput SLOs"),
             };
             assert!(slo_sum < 24.6, "{}: {slo_sum:.1} G committed per engine", p.name);
+            assert!(p.hosts >= 1, "{}: zero hosts", p.name);
         }
         assert!(preset_by_name("large").is_some());
         assert!(preset_by_name("xlarge").is_some());
         assert_eq!(preset_by_name("xlarge").unwrap().flows, 10_000);
         assert!(preset_by_name("nope").is_none());
+        // The fleet preset shards tenants evenly across its hosts, so every
+        // host carries the same roster shape (stable per-host throughput).
+        let fleet = preset_by_name("fleet").unwrap();
+        assert!(fleet.hosts > 1);
+        assert_eq!(fleet.tenants % fleet.hosts, 0);
+        assert_eq!(fleet.flows % fleet.tenants, 0);
+    }
+
+    #[test]
+    fn fleet_preset_runs_the_fleet_tier() {
+        let p = preset_by_name("fleet").unwrap();
+        let (r, report) = run_preset_report(&p, QueueKind::Heap);
+        assert_eq!(r.scenario, "fleet");
+        assert_eq!(r.queue, "binary_heap");
+        assert!(r.events_executed > 10_000, "events {}", r.events_executed);
+        assert!((r.sim_ms - p.duration_ms as f64).abs() < 1e-9);
+        // The merged report carries one rollup per host — proof the run
+        // actually went through the fleet tier.
+        assert_eq!(report.host_rollups.len(), p.hosts);
     }
 
     #[test]

@@ -254,15 +254,17 @@ fn axis_value(axis: &str, key: &ScenarioKey) -> String {
             crate::sweep::Scale::Flows(n) => format!("f{n:05}"),
         },
         "control" => key.control.name().to_string(),
+        // Two digits cover the 64-host ceiling enforced by grid validation.
+        "hosts" => format!("h{:02}", key.hosts),
         "accel" => key.accel.to_string(),
         "seed" => format!("s{:020}", key.seed),
         other => unreachable!("unknown axis {other}"),
     }
 }
 
-const AXES: [&str; 11] = [
+const AXES: [&str; 12] = [
     "mode", "tenants", "mix", "burst", "tightness", "churn", "faults", "scale", "control",
-    "accel", "seed",
+    "hosts", "accel", "seed",
 ];
 
 /// Fold executed scenarios into the aggregate.
@@ -398,6 +400,7 @@ mod tests {
             faults: crate::sweep::FaultProfile::Healthy,
             scale: crate::sweep::Scale::Flat,
             control: crate::sweep::ControlKind::Static,
+            hosts: 1,
             accel: "ipsec",
             seed: 1,
         };
@@ -429,6 +432,8 @@ mod tests {
                 nic_rx_dropped: 0,
                 fault_window: None,
                 directive_lag_max: 0,
+                directive_staleness_max: 0,
+                host_rollups: Vec::new(),
                 events: 10,
                 peak_queue_depth: 4,
                 queue: "binary_heap",

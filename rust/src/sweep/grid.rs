@@ -406,6 +406,10 @@ pub struct SweepGrid {
     /// Control-loop axis (defaults to `[ControlKind::Static]`, so legacy
     /// grids are unchanged; adaptive cells wrap the Arcus planner).
     pub control: Vec<ControlKind>,
+    /// Fleet-size axis (defaults to `[1]`, so legacy grids are unchanged;
+    /// multi-host cells run under [`crate::fleet::FleetPlane`] with the
+    /// default distribution config).
+    pub hosts: Vec<usize>,
     pub accels: Vec<AccelModel>,
     /// Seed axis: replications of every cell with decorrelated randomness.
     pub seeds: Vec<u64>,
@@ -426,6 +430,7 @@ impl SweepGrid {
             faults: vec![FaultProfile::Healthy],
             scale: vec![Scale::Flat],
             control: vec![ControlKind::Static],
+            hosts: vec![1],
             accels: Vec::new(),
             seeds: Vec::new(),
         }
@@ -467,6 +472,10 @@ impl SweepGrid {
         self.control = v;
         self
     }
+    pub fn hosts(mut self, v: Vec<usize>) -> Self {
+        self.hosts = v;
+        self
+    }
     pub fn accels(mut self, v: Vec<AccelModel>) -> Self {
         self.accels = v;
         self
@@ -488,6 +497,7 @@ impl SweepGrid {
             * self.faults.len()
             * self.scale.len()
             * self.control.len()
+            * self.hosts.len()
             * self.accels.len()
             * self.seeds.len()
     }
@@ -515,6 +525,14 @@ impl SweepGrid {
         }
         if let Some(&x) = self.tightness.iter().find(|&&x| x.is_nan() || x <= 0.0) {
             return Err(format!("tightness values must be positive (got {x})"));
+        }
+        if self.hosts.iter().any(|&h| h == 0) {
+            return Err("host counts must be ≥ 1".to_string());
+        }
+        if let Some(&h) = self.hosts.iter().find(|&&h| h > 64) {
+            return Err(format!(
+                "hosts h{h} exceeds the supported ceiling (64 hosts per scenario)"
+            ));
         }
         for &s in &self.scale {
             let Scale::Flows(n) = s else { continue };
@@ -588,25 +606,32 @@ impl SweepGrid {
                                 for &faults in &self.faults {
                                     for &scale in &self.scale {
                                         for &control in &self.control {
-                                            for accel in &self.accels {
-                                                for &seed in &self.seeds {
-                                                    let key = ScenarioKey {
-                                                        mode,
-                                                        tenants,
-                                                        mix,
-                                                        burst,
-                                                        tightness,
-                                                        churn,
-                                                        faults,
-                                                        scale,
-                                                        control,
-                                                        accel: accel.name,
-                                                        seed,
-                                                    };
-                                                    let spec =
-                                                        self.scenario_spec(&key, accel);
-                                                    out.push(Scenario { index, key, spec });
-                                                    index += 1;
+                                            for &hosts in &self.hosts {
+                                                for accel in &self.accels {
+                                                    for &seed in &self.seeds {
+                                                        let key = ScenarioKey {
+                                                            mode,
+                                                            tenants,
+                                                            mix,
+                                                            burst,
+                                                            tightness,
+                                                            churn,
+                                                            faults,
+                                                            scale,
+                                                            control,
+                                                            hosts,
+                                                            accel: accel.name,
+                                                            seed,
+                                                        };
+                                                        let spec =
+                                                            self.scenario_spec(&key, accel);
+                                                        out.push(Scenario {
+                                                            index,
+                                                            key,
+                                                            spec,
+                                                        });
+                                                        index += 1;
+                                                    }
                                                 }
                                             }
                                         }
@@ -773,6 +798,8 @@ pub struct ScenarioKey {
     pub faults: FaultProfile,
     pub scale: Scale,
     pub control: ControlKind,
+    /// Fleet size (1 = single-world run, no fleet tier).
+    pub hosts: usize,
     /// Accelerator model name (axis label).
     pub accel: &'static str,
     /// Seed-axis value (not the derived simulator seed).
@@ -785,9 +812,10 @@ impl ScenarioKey {
     /// Tightness carries four decimals so nearby swept values keep distinct
     /// labels. Static (no-churn) cells omit the churn segment, healthy
     /// cells omit the faults segment, flat cells omit the scale segment,
-    /// and static-control cells omit the control segment, so their labels —
-    /// and the simulator seeds derived from them — are byte-identical to
-    /// grids that predate those axes.
+    /// static-control cells omit the control segment, and single-host
+    /// cells omit the hosts segment, so their labels — and the simulator
+    /// seeds derived from them — are byte-identical to grids that predate
+    /// those axes.
     pub fn label(&self) -> String {
         let scale = match self.scale {
             Scale::Flat => String::new(),
@@ -805,8 +833,12 @@ impl ScenarioKey {
             ControlKind::Static => String::new(),
             c => format!("{}/", c.name()),
         };
+        let hosts = match self.hosts {
+            0 | 1 => String::new(),
+            h => format!("h{h}/"),
+        };
         format!(
-            "{}/t{:02}/{}{}/{}/x{:.4}/{}{}{}{}/s{}",
+            "{}/t{:02}/{}{}/{}/x{:.4}/{}{}{}{}{}/s{}",
             self.mode.name(),
             self.tenants,
             scale,
@@ -816,6 +848,7 @@ impl ScenarioKey {
             churn,
             faults,
             control,
+            hosts,
             self.accel,
             self.seed
         )
@@ -1037,6 +1070,52 @@ mod tests {
         assert_ne!(churned[1].spec.seed, legacy[0].spec.seed);
         let labels: HashSet<String> = churned.iter().map(|s| s.key.label()).collect();
         assert_eq!(labels.len(), 3);
+    }
+
+    #[test]
+    fn single_host_labels_and_seeds_unchanged_by_hosts_axis() {
+        let base = || {
+            SweepGrid::new(GridBase::default())
+                .modes(vec![Mode::Arcus])
+                .tenants(vec![2])
+                .mixes(vec![SizeMix::Mtu])
+                .bursts(vec![Burstiness::Paced])
+                .tightness(vec![0.7])
+                .accels(vec![AccelModel::ipsec_32g()])
+                .seeds(vec![1])
+        };
+        let legacy = base().expand();
+        let fleet = base().hosts(vec![1, 2, 4]).expand();
+        assert_eq!(legacy.len(), 1);
+        assert_eq!(fleet.len(), 3);
+        // The single-host cell keeps the legacy label and seed — its spec
+        // (and therefore its report) is byte-identical to a pre-fleet grid.
+        assert_eq!(fleet[0].key.label(), legacy[0].key.label());
+        assert_eq!(fleet[0].spec.seed, legacy[0].spec.seed);
+        assert!(fleet[1].key.label().contains("/h2/"), "{}", fleet[1].key.label());
+        assert!(fleet[2].key.label().contains("/h4/"), "{}", fleet[2].key.label());
+        assert_ne!(fleet[1].spec.seed, legacy[0].spec.seed);
+        let labels: HashSet<String> = fleet.iter().map(|s| s.key.label()).collect();
+        assert_eq!(labels.len(), 3);
+    }
+
+    #[test]
+    fn hosts_axis_validation() {
+        let base = || {
+            SweepGrid::new(GridBase::default())
+                .modes(vec![Mode::Arcus])
+                .tenants(vec![2])
+                .mixes(vec![SizeMix::Mtu])
+                .bursts(vec![Burstiness::Paced])
+                .tightness(vec![0.7])
+                .accels(vec![AccelModel::ipsec_32g()])
+                .seeds(vec![1])
+        };
+        assert!(base().hosts(vec![1, 2]).validate().is_ok());
+        let err = base().hosts(vec![0]).validate().unwrap_err();
+        assert!(err.contains("host counts"), "{err}");
+        let err = base().hosts(vec![128]).validate().unwrap_err();
+        assert!(err.contains("ceiling"), "{err}");
     }
 
     #[test]

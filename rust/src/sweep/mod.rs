@@ -7,10 +7,10 @@
 //! library:
 //!
 //! - [`grid`] — [`SweepGrid`] expands one [`GridBase`] template over
-//!   eleven axes (tenant count, [`crate::system::Mode`], burstiness,
+//!   twelve axes (tenant count, [`crate::system::Mode`], burstiness,
 //!   message-size mix, SLO tightness, tenant churn, fault injection,
-//!   flow-population scale, control loop, accelerator model, seed) into a
-//!   deterministic scenario list; [`SizeMix`] is the shared message-size
+//!   flow-population scale, control loop, host count, accelerator model,
+//!   seed) into a deterministic scenario list; [`SizeMix`] is the shared message-size
 //!   vocabulary, [`Churn`] the tenant-lifecycle one, [`FaultProfile`] the
 //!   fault-injection one, [`Scale`] the flow-count one (non-flat cells run
 //!   the [`crate::shaping::ShaperTree`] hierarchy), and [`ControlKind`]

@@ -27,20 +27,40 @@ where
     let threads = threads.max(1).min(jobs.len().max(1));
     let queue: Mutex<Vec<(usize, F)>> = Mutex::new(jobs.into_iter().enumerate().collect());
     let results: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::new());
+    // First panic payload from any worker. Jobs run under `catch_unwind` so
+    // a panicking scenario can never poison `queue`/`results` — without
+    // this, one bad job made every *other* worker die unwrapping a
+    // `PoisonError` and the caller saw a scope panic with no trace of the
+    // original message.
+    let first_panic: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
+                if first_panic.lock().unwrap().is_some() {
+                    return; // a sibling already failed; stop picking up work
+                }
                 let job = queue.lock().unwrap().pop();
                 match job {
                     Some((index, f)) => {
-                        let r = f();
-                        results.lock().unwrap().push((index, r));
+                        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+                            Ok(r) => results.lock().unwrap().push((index, r)),
+                            Err(payload) => {
+                                let mut slot = first_panic.lock().unwrap();
+                                if slot.is_none() {
+                                    *slot = Some(payload);
+                                }
+                                return;
+                            }
+                        }
                     }
                     None => return,
                 }
             });
         }
     });
+    if let Some(payload) = first_panic.into_inner().unwrap() {
+        std::panic::resume_unwind(payload);
+    }
     let mut out = results.into_inner().unwrap();
     out.sort_by_key(|&(index, _)| index);
     out.into_iter().map(|(_, r)| r).collect()
@@ -99,14 +119,31 @@ impl SweepRunner {
     }
 
     /// Execute pre-expanded scenarios; outcomes in input order.
+    ///
+    /// Single-host cells run the plain [`system::run`] path (byte-identical
+    /// to pre-fleet sweeps); cells with `hosts > 1` run under
+    /// [`crate::fleet::run`] with the default distribution config. Fleet
+    /// cells pin their host threading to 1 so the sweep's own worker pool
+    /// stays the only source of parallelism (no nested oversubscription);
+    /// the fleet core is byte-identical at any thread count anyway.
     pub fn run_scenarios(&self, scenarios: Vec<Scenario>) -> Vec<ScenarioOutcome> {
         let jobs: Vec<_> = scenarios
             .into_iter()
             .map(|sc| {
-                move || ScenarioOutcome {
-                    index: sc.index,
-                    report: system::run(&sc.spec),
-                    key: sc.key,
+                move || {
+                    let report = if sc.key.hosts > 1 {
+                        crate::fleet::run(
+                            &sc.spec,
+                            &crate::fleet::FleetConfig {
+                                hosts: sc.key.hosts,
+                                threads: 1,
+                                ..Default::default()
+                            },
+                        )
+                    } else {
+                        system::run(&sc.spec)
+                    };
+                    ScenarioOutcome { index: sc.index, report, key: sc.key }
                 }
             })
             .collect();
@@ -152,6 +189,33 @@ mod tests {
         let empty: Vec<fn() -> u32> = Vec::new();
         assert!(run_parallel(empty, 4).is_empty());
         assert_eq!(run_parallel(vec![|| 7u32], 4), vec![7]);
+    }
+
+    #[test]
+    fn run_parallel_propagates_original_panic_payload() {
+        let jobs: Vec<Box<dyn FnOnce() -> u32 + Send>> = (0..16u32)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 5 {
+                        panic!("scenario 5 exploded");
+                    }
+                    i
+                }) as Box<dyn FnOnce() -> u32 + Send>
+            })
+            .collect();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_parallel(jobs, 4);
+        }))
+        .expect_err("a panicking job must fail the whole run");
+        // The caller must see the job's own payload, not a PoisonError
+        // unwrap or an anonymous scope panic.
+        let msg = err
+            .downcast_ref::<&str>()
+            .copied()
+            .map(str::to_owned)
+            .or_else(|| err.downcast_ref::<String>().cloned())
+            .expect("payload should be the original panic message");
+        assert!(msg.contains("scenario 5 exploded"), "got: {msg}");
     }
 
     #[test]

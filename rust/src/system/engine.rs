@@ -1475,12 +1475,48 @@ impl<Q: EventQueue<EngineEvent> + Default> Engine<Q> {
         Engine { sim, world }
     }
 
+    /// Advance the event core to `t`. Follows `Sim::run_until`'s boundary
+    /// contract — events at exactly `t` fire before the clock pins — so
+    /// repeated stepped calls (the fleet's interchange barriers) compose to
+    /// exactly the same execution as one `run` to the final time.
+    pub fn step_to(&mut self, t: Time) {
+        self.sim.run_until(&mut self.world, t);
+    }
+
+    /// Host spec (read side for external control tiers).
+    pub fn spec(&self) -> &ExperimentSpec {
+        &self.world.spec
+    }
+
+    /// Telemetry read side for external control tiers: wrap in
+    /// [`crate::api::ObsView`] to read series without structural access.
+    pub fn obs(&self) -> &ObsPlane {
+        &self.world.obs
+    }
+
+    /// Inject a directive delivered by an external (fleet) control tier: it
+    /// lands on the host at `at` (which must not be in the host's past) and
+    /// takes effect one reconfiguration latency later, through the same
+    /// `ApplyDirective` path as locally planned directives.
+    pub fn deliver_directive(&mut self, at: Time, d: Directive) {
+        self.sim
+            .at(at + self.world.spec.reconfig_latency, Ev::ApplyDirective(d));
+    }
+
     /// Run to the spec's duration and produce the report.
     pub fn run(mut self) -> SystemReport {
         let start = std::time::Instant::now();
         let duration = self.world.spec.duration;
-        self.sim.run_until(&mut self.world, duration);
+        self.step_to(duration);
         let wall = start.elapsed().as_secs_f64();
+        self.finish(wall)
+    }
+
+    /// Consume the engine and assemble its report. `wall_secs` is the
+    /// caller's wall-clock measurement (`run` measures its own; the fleet
+    /// measures across all hosts).
+    pub fn finish(self, wall: f64) -> SystemReport {
+        let duration = self.world.spec.duration;
         let w = self.world;
         let span = duration - w.spec.warmup;
         let per_flow = w
@@ -1579,6 +1615,8 @@ impl<Q: EventQueue<EngineEvent> + Default> Engine<Q> {
             nic_rx_dropped: w.ports.iter().map(|p| p.rx_dropped).sum(),
             fault_window: w.fault_window,
             directive_lag_max: w.directive_lag_max,
+            directive_staleness_max: 0,
+            host_rollups: Vec::new(),
             events: self.sim.executed(),
             peak_queue_depth: self.sim.peak_pending(),
             queue: self.sim.queue_name(),

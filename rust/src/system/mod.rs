@@ -12,5 +12,5 @@ pub mod report;
 pub mod spec;
 
 pub use engine::{run, run_with, Engine, EngineEvent};
-pub use report::{EraReport, FaultReport, FlowReport, SystemReport};
+pub use report::{EraReport, FaultReport, FlowReport, HostRollup, SystemReport};
 pub use spec::{ExperimentSpec, LifecycleEvent, Mode, RaidSpec};

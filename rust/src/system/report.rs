@@ -175,6 +175,32 @@ impl FlowReport {
     }
 }
 
+/// One host's share of a fleet run, rolled up for the merged report.
+///
+/// Deterministic fields only (no wall clock): the rollup rows are printed
+/// into [`SystemReport::canonical`], so they participate in the
+/// byte-identity gates exactly like per-flow lines.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostRollup {
+    /// Host index within the fleet (`vm % hosts` partitioning).
+    pub host: usize,
+    /// Flows homed on this host.
+    pub flows: usize,
+    /// Events the host's own event core executed.
+    pub events: u64,
+    /// Peak pending events on the host's queue.
+    pub peak_queue_depth: usize,
+    /// NIC RX drops across the host's ports.
+    pub nic_rx_dropped: u64,
+    /// Worst in-host apply lag (issue → apply) for this host.
+    pub directive_lag_max: Time,
+    /// Worst publish → first-successful-delivery staleness for batches
+    /// addressed to this host.
+    pub directive_staleness_max: Time,
+    /// Digest of the host's own observability snapshot (pre-merge).
+    pub series_digest: u64,
+}
+
 /// A full experiment's outcome.
 #[derive(Debug)]
 pub struct SystemReport {
@@ -206,6 +232,15 @@ pub struct SystemReport {
     /// `reconfig_latency` whenever any directive was applied (0 when none
     /// were), so a divergent value flags a second, unaccounted apply path.
     pub directive_lag_max: Time,
+    /// Worst config staleness seen by the fleet distribution tier: time
+    /// from a directive batch's publication to its first *successful*
+    /// delivery (propagation delay + any drop-window re-send rounds).
+    /// Always 0 for single-world runs, where directives apply in-process
+    /// and only `directive_lag_max` accrues.
+    pub directive_staleness_max: Time,
+    /// Per-host rollups for fleet runs (empty for single-world runs, which
+    /// keeps their canonical reports byte-identical to the pre-fleet form).
+    pub host_rollups: Vec<HostRollup>,
     /// FNV-1a digest over the observability plane's snapshot (every series
     /// sample + rollup histogram bucket). Part of the canonical report, so
     /// the determinism suite asserts the whole in-run metrics surface is
@@ -261,7 +296,7 @@ impl SystemReport {
         out.push_str(&format!(
             "mode={} span={} events={} peak_queue={} pcie_up={:?} pcie_down={:?} \
              accel_util={:?} nic_rx_dropped={} fault_window={:?} directive_lag_max={} \
-             series_digest={:016x}\n",
+             directive_staleness_max={} series_digest={:016x}\n",
             self.mode,
             self.measured_span,
             self.events,
@@ -272,8 +307,13 @@ impl SystemReport {
             self.nic_rx_dropped,
             self.fault_window,
             self.directive_lag_max,
+            self.directive_staleness_max,
             self.series_digest,
         ));
+        // Fleet runs add one line per host; single-world runs add nothing.
+        for h in &self.host_rollups {
+            out.push_str(&format!("{h:?}\n"));
+        }
         for f in &self.per_flow {
             // Debug formatting of f64 is shortest-roundtrip: byte-stable
             // for identical values, and any numeric divergence shows up.

@@ -1,0 +1,189 @@
+//! Fleet-tier integration: the multi-host golden fault scenario must be
+//! byte-identical across all three event-queue disciplines AND across
+//! host thread counts, and delayed/dropped directive distribution (stale
+//! fleet config) must measurably degrade fault-era SLO attainment.
+
+use arcus::accel::AccelModel;
+use arcus::faults::{FaultKind, FaultSpec};
+use arcus::fleet::{run_with, FleetConfig};
+use arcus::flow::{FlowSpec, Path, Slo, TrafficPattern};
+use arcus::sim::{BinaryHeapQueue, CalendarQueue, HierWheel};
+use arcus::system::{EngineEvent, ExperimentSpec, Mode};
+use arcus::util::units::{Rate, MICROS, MILLIS};
+
+/// The fleet golden scenario: four tenants (two per host under `hosts =
+/// 2`), two engines per host, every flow oversubscribed so shaping binds.
+/// The fault plan mixes both partitioning classes: component faults
+/// (accel slowdown, then a control outage) strike host 0's hardware,
+/// while a rogue tenant rides on host 1 — so both hosts execute
+/// non-trivial, *different* fault schedules.
+fn golden_fleet_spec() -> ExperimentSpec {
+    let line = Rate::gbps(32.0);
+    let flows: Vec<FlowSpec> = (0..8)
+        .map(|i| {
+            FlowSpec::new(
+                i,
+                i / 2,
+                Path::FunctionCall,
+                TrafficPattern::fixed(1500, 0.45, line),
+                Slo::gbps(8.0),
+                i % 2,
+            )
+        })
+        .collect();
+    ExperimentSpec::new(
+        Mode::Arcus,
+        vec![AccelModel::ipsec_32g(), AccelModel::ipsec_32g()],
+        flows,
+    )
+    .with_duration(8 * MILLIS)
+    .with_warmup(MILLIS)
+    .with_hierarchy()
+    .with_fault(FaultSpec::new(
+        FaultKind::AccelSlowdown { unit: 0, factor: 0.5 },
+        3 * MILLIS,
+        5 * MILLIS,
+    ))
+    .with_fault(FaultSpec::new(FaultKind::ControlOutage, 5 * MILLIS, 6 * MILLIS))
+    // Flow 3 belongs to vm 1 → host 1 under hosts = 2.
+    .with_fault(FaultSpec::new(
+        FaultKind::RogueTenant { flow: 3 },
+        3 * MILLIS,
+        5 * MILLIS,
+    ))
+}
+
+fn golden_cfg(threads: usize) -> FleetConfig {
+    FleetConfig {
+        hosts: 2,
+        threads,
+        propagation_delay: 20 * MICROS,
+        ..FleetConfig::default()
+    }
+}
+
+#[test]
+fn golden_fleet_scenario_byte_identical_across_queues_and_threads() {
+    let spec = golden_fleet_spec();
+    let heap = run_with::<BinaryHeapQueue<EngineEvent>>(&spec, &golden_cfg(1));
+    let cal = run_with::<CalendarQueue<EngineEvent>>(&spec, &golden_cfg(1));
+    let wheel = run_with::<HierWheel<EngineEvent>>(&spec, &golden_cfg(1));
+    assert_eq!(heap.queue, "binary_heap");
+    assert_eq!(cal.queue, "calendar");
+    assert_eq!(wheel.queue, "hier_wheel");
+    assert_eq!(
+        heap.canonical(),
+        cal.canonical(),
+        "fleet golden: heap vs calendar diverge"
+    );
+    assert_eq!(
+        heap.canonical(),
+        wheel.canonical(),
+        "fleet golden: heap vs hierarchical wheel diverge"
+    );
+    // One advance thread per host must replay the serial schedule exactly.
+    let threaded = run_with::<BinaryHeapQueue<EngineEvent>>(&spec, &golden_cfg(0));
+    assert_eq!(
+        heap.canonical(),
+        threaded.canonical(),
+        "fleet golden: 1 vs N host threads diverge"
+    );
+    // The canonical form pins the distribution ledger and per-host rollups,
+    // so a staleness or rollup regression can never slip past this gate.
+    assert!(heap.canonical().contains("directive_staleness_max="));
+    assert_eq!(heap.host_rollups.len(), 2);
+    assert!(heap.events > 100_000, "fleet golden run too small: {}", heap.events);
+    // Propagation was delayed, so the ledger must have recorded it.
+    assert_eq!(heap.directive_staleness_max, 20 * MICROS);
+}
+
+#[test]
+fn golden_fleet_scenario_stable_across_repeat_runs() {
+    let spec = golden_fleet_spec();
+    let a = run_with::<CalendarQueue<EngineEvent>>(&spec, &golden_cfg(0));
+    let b = run_with::<CalendarQueue<EngineEvent>>(&spec, &golden_cfg(0));
+    assert_eq!(a.canonical(), b.canonical());
+}
+
+/// Stale config degrades fault recovery: the same faulted fleet runs once
+/// with instant distribution and once with a propagation delay plus a
+/// drop window spanning the fault — the boost envelopes the planner
+/// publishes when attainment collapses then arrive only *after* the
+/// window, so post-fault catch-up runs at the tight ceiling for longer
+/// and fault-era attainment is strictly worse.
+#[test]
+fn delayed_propagation_degrades_fault_era_attainment() {
+    let line = Rate::gbps(32.0);
+    let flows: Vec<FlowSpec> = (0..8)
+        .map(|i| {
+            FlowSpec::new(
+                i,
+                i / 2,
+                Path::FunctionCall,
+                TrafficPattern::fixed(1500, 0.45, line),
+                Slo::gbps(8.0),
+                i % 2,
+            )
+        })
+        .collect();
+    let spec = ExperimentSpec::new(
+        Mode::Arcus,
+        vec![AccelModel::ipsec_32g(), AccelModel::ipsec_32g()],
+        flows,
+    )
+    .with_duration(12 * MILLIS)
+    .with_warmup(MILLIS)
+    .with_hierarchy()
+    .with_fault(FaultSpec::new(
+        FaultKind::AccelSlowdown { unit: 0, factor: 0.5 },
+        4 * MILLIS,
+        7 * MILLIS,
+    ));
+
+    let fresh = run_with::<BinaryHeapQueue<EngineEvent>>(
+        &spec,
+        &FleetConfig { hosts: 2, threads: 1, ..FleetConfig::default() },
+    );
+    let stale = run_with::<BinaryHeapQueue<EngineEvent>>(
+        &spec,
+        &FleetConfig {
+            hosts: 2,
+            threads: 1,
+            propagation_delay: 300 * MICROS,
+            // Every delivery landing inside [4, 9) ms is lost: the boost
+            // published when the fault bites cannot arrive before 9 ms,
+            // two milliseconds into the post-fault era.
+            drop_windows: vec![(4 * MILLIS, 9 * MILLIS)],
+            ..FleetConfig::default()
+        },
+    );
+
+    assert!(
+        stale.directive_staleness_max > fresh.directive_staleness_max,
+        "drop window must show up as staleness: stale {} vs fresh {}",
+        stale.directive_staleness_max,
+        fresh.directive_staleness_max
+    );
+    // Staleness is ledgered by the distribution tier, not smeared into the
+    // in-host apply lag.
+    assert!(stale.directive_lag_max <= spec.reconfig_latency);
+
+    // Fault-era attainment over the flows the slowdown actually hit
+    // (host 0's engine-0 flows: vms 0 and 2 → global flows 0 and 4).
+    let era_sum = |r: &arcus::system::SystemReport| -> f64 {
+        [0usize, 4]
+            .iter()
+            .map(|&i| {
+                let fr = r.per_flow[i].fault.expect("faulted run carries era reports");
+                fr.during.attainment.unwrap_or(0.0) + fr.post.attainment.unwrap_or(0.0)
+            })
+            .sum()
+    };
+    let fresh_att = era_sum(&fresh);
+    let stale_att = era_sum(&stale);
+    assert!(
+        stale_att < fresh_att,
+        "stale config must cost fault-era attainment: stale {stale_att:.4} \
+         vs fresh {fresh_att:.4}"
+    );
+}

@@ -7,7 +7,7 @@ use std::collections::HashMap;
 
 use arcus::accel::AccelModel;
 use arcus::flow::{FlowSpec, Path, Slo, TrafficPattern};
-use arcus::obs::{dump, prom, top, GAUGE_NONE};
+use arcus::obs::{dump, prom, top, ObsSnapshot, GAUGE_NONE};
 use arcus::sim::{BinaryHeapQueue, CalendarQueue, HierWheel};
 use arcus::system::{run_with, EngineEvent, ExperimentSpec, Mode};
 use arcus::util::units::{Rate, Time, MILLIS};
@@ -160,6 +160,53 @@ fn series_dump_round_trips_through_reader() {
     // Truncated input fails loudly instead of misparsing.
     assert!(dump::read(&bytes[..bytes.len() / 2]).is_err());
     assert!(dump::read(b"BOGUS").is_err());
+}
+
+/// Decode → re-encode is the identity on bytes. The dump only carries the
+/// header clocks and per-flow series, so rebuilding a snapshot from the
+/// decoded [`dump::DumpData`] and writing it again must reproduce the
+/// original dump bit-for-bit — the property that lets `arcus top` (or any
+/// other consumer) archive a dump it has read without loss.
+#[test]
+fn series_dump_reencode_is_byte_identical() {
+    let report = run_with::<BinaryHeapQueue<EngineEvent>>(&small_spec(4 * MILLIS));
+    let bytes = dump::write(&report.obs);
+    let data = dump::read(&bytes).expect("dump parses");
+    let rebuilt = ObsSnapshot {
+        control_period: data.control_period,
+        sample_every: data.sample_every,
+        flows: data.flows,
+        ..Default::default()
+    };
+    assert_eq!(
+        dump::write(&rebuilt),
+        bytes,
+        "re-encoding a decoded dump must be byte-identical"
+    );
+}
+
+/// Every strict prefix of a valid dump must decode to an error — never a
+/// panic, never a silently short parse. Truncation can only land inside a
+/// varint (whose kept bytes still carry continuation bits) or at a field
+/// boundary (where the next read runs off the end), so the decoder's
+/// bounds checks — including the remaining-bytes guards on ring lengths
+/// and the flow count — must catch all of them. This sweep is exhaustive
+/// over the real dump, not a handful of spot lengths.
+#[test]
+fn series_dump_truncation_sweep_every_prefix_errors() {
+    let report = run_with::<BinaryHeapQueue<EngineEvent>>(&small_spec(3 * MILLIS));
+    let bytes = dump::write(&report.obs);
+    assert!(bytes.len() > 100, "dump too small to sweep: {}", bytes.len());
+    assert!(dump::read(&bytes).is_ok(), "full dump must parse");
+    for n in 0..bytes.len() {
+        match dump::read(&bytes[..n]) {
+            Err(_) => {}
+            Ok(_) => panic!(
+                "prefix of {n}/{} bytes parsed instead of erroring",
+                bytes.len()
+            ),
+        }
+    }
 }
 
 #[test]
