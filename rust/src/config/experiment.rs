@@ -30,6 +30,18 @@
 //! deadband_ppm = 20000      # attainment dead-band around 1.0
 //! backlog_depth = 64        # queue depth that counts as backlog
 //!
+//! [population]              # optional: population workload layer
+//! users = 100000            # N users multiplexed onto the flows
+//! zipf_s = 1.1              # user-popularity exponent (0 = uniform)
+//! pareto_alpha = 1.3        # message-size tail index (must be > 1)
+//! pareto_xm = 64            # minimum message size (bytes)
+//! max_bytes = 65536         # tail clamp (bytes)
+//! diurnal_period_ms = 0.0   # rate-envelope period (0 = flat)
+//! diurnal_depth = 0.0       # envelope depth in [0, 1)
+//! burst_epochs = 0          # flash-crowd windows across the run
+//! burst_factor = 3.0        # rate multiplier inside a window
+//! burst_span_us = 500.0     # window length
+//!
 //! [fleet]                   # optional: multi-host fleet tier
 //! hosts = 2                 # shard flows by vm % hosts (crate::fleet)
 //! threads = 0               # advance threads (0 = one per host, 1 = serial)
@@ -148,6 +160,52 @@ pub fn spec_from_document(doc: &Document) -> Result<ExperimentSpec> {
         };
         cfg.validate().map_err(|e| anyhow::anyhow!("[adaptive]: {e}"))?;
         spec = spec.with_adaptive(cfg);
+    }
+    if doc.tables.contains_key("population") {
+        if doc.tables.contains_key("fleet") {
+            bail!(
+                "[population] cannot combine with [fleet]: per-user accounting \
+                 lives in the single-world engine — run the population on one \
+                 host or drop the fleet table"
+            );
+        }
+        let d = crate::workload::PopulationConfig::default();
+        let users = doc.int_or("population", "users", d.users as i64);
+        let pareto_xm = doc.int_or("population", "pareto_xm", d.pareto_xm as i64);
+        let max_bytes = doc.int_or("population", "max_bytes", d.max_bytes as i64);
+        let burst_epochs = doc.int_or("population", "burst_epochs", d.burst_epochs as i64);
+        // Reject negatives before the unsigned casts silently wrap them.
+        if users < 1 || pareto_xm < 0 || max_bytes < 0 || burst_epochs < 0 {
+            bail!(
+                "[population]: users must be ≥ 1 and pareto_xm/max_bytes/\
+                 burst_epochs non-negative (got {users}/{pareto_xm}/\
+                 {max_bytes}/{burst_epochs})"
+            );
+        }
+        let diurnal_period_ms = doc.float_or("population", "diurnal_period_ms", 0.0);
+        let burst_span_us =
+            doc.float_or("population", "burst_span_us", d.burst_span as f64 / MICROS as f64);
+        if diurnal_period_ms < 0.0 || burst_span_us < 0.0 {
+            bail!(
+                "[population]: diurnal_period_ms/burst_span_us must be \
+                 non-negative (got {diurnal_period_ms}/{burst_span_us})"
+            );
+        }
+        let cfg = crate::workload::PopulationConfig {
+            users: users as usize,
+            zipf_s: doc.float_or("population", "zipf_s", d.zipf_s),
+            pareto_alpha: doc.float_or("population", "pareto_alpha", d.pareto_alpha),
+            pareto_xm: pareto_xm as u64,
+            max_bytes: max_bytes as u64,
+            diurnal_period: (diurnal_period_ms * MILLIS as f64) as u64,
+            diurnal_depth: doc.float_or("population", "diurnal_depth", d.diurnal_depth),
+            burst_epochs: burst_epochs as usize,
+            burst_factor: doc.float_or("population", "burst_factor", d.burst_factor),
+            burst_span: (burst_span_us * MICROS as f64) as u64,
+        };
+        cfg.validate(spec.flows.len())
+            .map_err(|e| anyhow::anyhow!("[population]: {e}"))?;
+        spec = spec.with_population(cfg);
     }
     spec.control_period = (doc.float_or("experiment", "control_period_us", 100.0) * MICROS as f64) as u64;
     spec.queue_cap = doc.int_or("experiment", "queue_cap", 4096) as usize;
@@ -533,6 +591,48 @@ accel = 1
         let doc = Document::from_str(&format!("[fleet]\nboost_ceiling = 0.5\n{base}")).unwrap();
         let err = fleet_from_document(&doc).unwrap_err();
         assert!(format!("{err:#}").contains("boost_ceiling"), "{err:#}");
+    }
+
+    #[test]
+    fn parses_and_validates_population_table() {
+        let base = "[[accels]]\nkind = \"ipsec\"\n[[flows]]\nvm = 0\nslo_gbps = 8.0\n";
+        // No [population] table → legacy pattern generators.
+        let spec = spec_from_document(&Document::from_str(base).unwrap()).unwrap();
+        assert!(spec.population.is_none());
+        // An empty table enables the defaults.
+        let text = format!("[population]\n{base}");
+        let spec = spec_from_document(&Document::from_str(&text).unwrap()).unwrap();
+        let d = crate::workload::PopulationConfig::default();
+        assert_eq!(spec.population, Some(d.clone()));
+        // Overrides are honored; times convert to picoseconds.
+        let text = format!(
+            "[population]\nusers = 5000\nzipf_s = 0.9\ndiurnal_period_ms = 4.0\n\
+             diurnal_depth = 0.3\nburst_epochs = 2\nburst_span_us = 250.0\n{base}"
+        );
+        let spec = spec_from_document(&Document::from_str(&text).unwrap()).unwrap();
+        let cfg = spec.population.unwrap();
+        assert_eq!(cfg.users, 5000);
+        assert!((cfg.zipf_s - 0.9).abs() < 1e-12);
+        assert_eq!(cfg.diurnal_period, 4 * MILLIS);
+        assert_eq!(cfg.burst_epochs, 2);
+        assert_eq!(cfg.burst_span, 250 * MICROS);
+        assert!((cfg.pareto_alpha - d.pareto_alpha).abs() < 1e-12);
+        // The validator's complaint surfaces verbatim, tagged [population].
+        let text = format!("[population]\npareto_alpha = 0.9\n{base}");
+        let err = spec_from_document(&Document::from_str(&text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("pareto_alpha"), "{err:#}");
+        // Negative ints are rejected, not wrapped into huge u64s.
+        let text = format!("[population]\nusers = -5\n{base}");
+        let err = spec_from_document(&Document::from_str(&text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("users"), "{err:#}");
+        // Fewer users than flows cannot tile the blocks.
+        let text = format!("[population]\nusers = 1\n{base}[[flows]]\nvm = 1\nslo_gbps = 2.0\n");
+        let err = spec_from_document(&Document::from_str(&text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("cannot cover"), "{err:#}");
+        // Population × fleet is rejected: per-user accounting is per-world.
+        let text = format!("[population]\n[fleet]\nhosts = 2\n{base}");
+        let err = spec_from_document(&Document::from_str(&text).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("fleet"), "{err:#}");
     }
 
     #[test]

@@ -560,6 +560,9 @@ impl<Q: EventQueue<EngineEvent> + Default> FleetPlane<Q> {
             wall_secs: wall,
             series_digest,
             obs: merged_obs,
+            // Fleet runs reject [population] at config validation; nothing
+            // to merge.
+            fairness: None,
         }
     }
 

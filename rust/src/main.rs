@@ -4,6 +4,7 @@
 //!   quickstart                     two-flow demo: Arcus vs unshaped baseline
 //!   simulate <config.toml> [...]   run experiment configs on the simulator
 //!   sweep [axis flags]             expand a scenario grid and run it in parallel
+//!   trace record|replay [...]      record / replay a population arrival trace
 //!   churn                          tenant-churn demo: mid-run admission/rejection
 //!   chaos                          fault-injection demo: degradation, adversaries, recovery
 //!   fleet [flags]                  multi-host demo: versioned directive distribution + staleness
@@ -45,6 +46,7 @@ fn main() {
         Some("quickstart") => quickstart(),
         Some("simulate") => simulate(&args[1..]),
         Some("sweep") => sweep(&args[1..]),
+        Some("trace") => trace_cmd(&args[1..]),
         Some("churn") => churn(),
         Some("chaos") => chaos(),
         Some("fleet") => fleet(&args[1..]),
@@ -74,12 +76,14 @@ fn usage() {
          arcus sweep [--modes a,b] [--tenants 1,2,4] [--mixes mtu,bulk] [--bursts paced,poisson]\n  \
              [--tightness 0.5,0.8] [--churn static,arrivals] [--faults healthy,accel_dip,rogue]\n  \
              [--flows flat,16,256,4k,10k] [--control static,adaptive] [--hosts 1,2,4]\n  \
-             [--accels ipsec] [--seeds 1,2]\n  \
+             [--population 0,10000,100000] [--accels ipsec] [--seeds 1,2]\n  \
              [--duration-ms N] [--load F] [--threads N] [--scenarios] [--expect-flows N]\n  \
              [--prom-out FILE]\n  \
+         arcus trace record <config.toml> --out <trace.bin>\n  \
+         arcus trace replay <config.toml> <trace.bin> [--verify]\n  \
          arcus churn\n  arcus chaos\n  \
          arcus fleet [--hosts N] [--delay-us N]\n  \
-         arcus bench [--quick] [--preset small|medium|large|xlarge|fleet|all] [--queue heap|calendar|wheel|both|all]\n  \
+         arcus bench [--quick] [--preset small|medium|large|xlarge|fleet|population|all] [--queue heap|calendar|wheel|both|all]\n  \
              [--out FILE] [--floor perf_floor.toml] [--no-files] [--verify]\n  \
          arcus top <series.bin> [--limit N]\n  \
          arcus profile [accel ...]\n  arcus serve [--artifacts DIR]\n  arcus modes\n\n\
@@ -94,6 +98,13 @@ fn usage() {
          ACKed delta directive distribution; `arcus fleet` demos how\n\
          propagation delay + drop windows (stale config) degrade fault-era\n\
          SLO attainment.\n\
+         `sweep --population` drives cells from the heavy-tailed user\n\
+         population generator (0 = the legacy per-flow patterns); population\n\
+         cells add per-user fairness metrics (Jain's index, worst-user p99)\n\
+         to every report. `arcus trace record` enumerates a [population]\n\
+         config's arrivals into a compact varint binary trace; `replay` runs\n\
+         it back through the engine (--verify checks the replayed canonical\n\
+         report is byte-identical to the generator run).\n\
          `bench` writes BENCH_<preset>.json per preset, gates on the committed\n\
          events/sec floor when --floor is given (CI perf-smoke; per-preset\n\
          keys like min_events_per_sec_xlarge override the shared floor), and\n\
@@ -378,16 +389,20 @@ fn bench(args: &[String]) -> i32 {
             }
             "--preset" => {
                 let Some(v) = args.get(i + 1) else {
-                    eprintln!("--preset needs a value (small|medium|large|xlarge|fleet|all)");
+                    eprintln!(
+                        "--preset needs a value (small|medium|large|xlarge|fleet|population|all)"
+                    );
                     return 2;
                 };
                 if v == "all" {
-                    preset_names = Some(vec!["small", "medium", "large", "xlarge", "fleet"]);
+                    preset_names =
+                        Some(vec!["small", "medium", "large", "xlarge", "fleet", "population"]);
                 } else if let Some(p) = arcus::perf::preset_by_name(v) {
                     preset_names = Some(vec![p.name]);
                 } else {
                     eprintln!(
-                        "unknown preset `{v}` (valid: small, medium, large, xlarge, fleet, all)"
+                        "unknown preset `{v}` (valid: small, medium, large, xlarge, fleet, \
+                         population, all)"
                     );
                     return 2;
                 }
@@ -431,8 +446,9 @@ fn bench(args: &[String]) -> i32 {
     }
 
     // `--quick` is CI-sized (small preset only) but an explicit `--preset`
-    // wins regardless of flag order. The 10k-flow `xlarge` and multi-host
-    // `fleet` presets run only when named (alone or via `all`).
+    // wins regardless of flag order. The 10k-flow `xlarge`, multi-host
+    // `fleet`, and 100k-user `population` presets run only when named
+    // (alone or via `all`).
     let preset_names = match preset_names {
         Some(names) => names,
         None if quick => vec!["small"],
@@ -641,6 +657,7 @@ fn sweep(args: &[String]) -> i32 {
     let mut scale = vec![Scale::Flat];
     let mut control = vec![ControlKind::Static];
     let mut hosts = vec![1usize];
+    let mut population: Vec<Option<usize>> = vec![None];
     let mut accel_names = vec!["ipsec".to_string()];
     let mut seeds = vec![1u64, 2];
     let mut duration_ms = 5u64;
@@ -788,6 +805,24 @@ fn sweep(args: &[String]) -> i32 {
                     }
                 }
             }
+            "--population" => {
+                population.clear();
+                for p in &parts {
+                    match p.parse::<usize>() {
+                        // `0` = the legacy per-flow pattern generators; CI's
+                        // byte-identity gate compares `--population 0` cells
+                        // against a no-flag sweep.
+                        Ok(0) => population.push(None),
+                        Ok(n) => population.push(Some(n)),
+                        Err(_) => {
+                            eprintln!(
+                                "bad population `{p}` (user counts; 0 = pattern generators)"
+                            );
+                            return 2;
+                        }
+                    }
+                }
+            }
             "--accels" => {
                 accel_names = parts.iter().map(|s| s.to_string()).collect();
             }
@@ -879,6 +914,7 @@ fn sweep(args: &[String]) -> i32 {
     .scale(scale)
     .control(control)
     .hosts(hosts)
+    .population(population)
     .accels(accels)
     .seeds(seeds);
 
@@ -929,6 +965,150 @@ fn sweep(args: &[String]) -> i32 {
     }
     print!("{}", agg.render());
     0
+}
+
+/// `arcus trace`: record a population config's arrival trace to a compact
+/// varint binary file, or replay one back through the engine. Record never
+/// runs the engine — it enumerates the same generators the engine would
+/// pull from — so `record | replay --verify` is the determinism gate for
+/// the whole trace path.
+fn trace_cmd(args: &[String]) -> i32 {
+    let usage = || {
+        eprintln!(
+            "usage: arcus trace record <config.toml> --out <trace.bin>\n       \
+             arcus trace replay <config.toml> <trace.bin> [--verify]"
+        );
+        2
+    };
+    let load_spec = |path: &PathBuf| -> Result<ExperimentSpec, i32> {
+        let doc = Document::from_file(path).map_err(|e| {
+            eprintln!("{}: {e:#}", path.display());
+            1
+        })?;
+        spec_from_document(&doc).map_err(|e| {
+            eprintln!("{}: {e:#}", path.display());
+            1
+        })
+    };
+    match args.first().map(String::as_str) {
+        Some("record") => {
+            let mut config: Option<PathBuf> = None;
+            let mut out: Option<PathBuf> = None;
+            let mut i = 1;
+            while i < args.len() {
+                if args[i] == "--out" {
+                    let Some(v) = args.get(i + 1) else {
+                        eprintln!("--out needs a file path");
+                        return 2;
+                    };
+                    out = Some(PathBuf::from(v));
+                    i += 2;
+                } else if config.is_none() {
+                    config = Some(PathBuf::from(&args[i]));
+                    i += 1;
+                } else {
+                    eprintln!("unexpected argument `{}`", args[i]);
+                    return 2;
+                }
+            }
+            let (Some(config), Some(out)) = (config, out) else {
+                return usage();
+            };
+            let spec = match load_spec(&config) {
+                Ok(s) => s,
+                Err(code) => return code,
+            };
+            let records = match arcus::system::record_population_trace(&spec) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("{}: {e}", config.display());
+                    return 1;
+                }
+            };
+            let users = spec.population.as_ref().map(|c| c.users as u64).unwrap_or(0);
+            let buf = match arcus::workload::trace::write(
+                users,
+                spec.flows.len() as u64,
+                &records,
+            ) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("encoding trace: {e}");
+                    return 1;
+                }
+            };
+            if let Err(e) = std::fs::write(&out, &buf) {
+                eprintln!("writing {}: {e}", out.display());
+                return 1;
+            }
+            println!(
+                "recorded {} arrivals ({} users, {} flows) to {} ({} bytes)",
+                records.len(),
+                users,
+                spec.flows.len(),
+                out.display(),
+                buf.len()
+            );
+            0
+        }
+        Some("replay") => {
+            let mut verify = false;
+            let mut paths: Vec<PathBuf> = Vec::new();
+            for a in &args[1..] {
+                if a == "--verify" {
+                    verify = true;
+                } else {
+                    paths.push(PathBuf::from(a));
+                }
+            }
+            let [config, trace_path] = paths.as_slice() else {
+                return usage();
+            };
+            let spec = match load_spec(config) {
+                Ok(s) => s,
+                Err(code) => return code,
+            };
+            let buf = match std::fs::read(trace_path) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("{}: {e}", trace_path.display());
+                    return 1;
+                }
+            };
+            let data = match arcus::workload::trace::read(&buf) {
+                Ok(d) => d,
+                Err(e) => {
+                    eprintln!("{}: {e}", trace_path.display());
+                    return 1;
+                }
+            };
+            let report = match arcus::system::run_replay(&spec, &data) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            };
+            println!("=== replay: {} ({} arrivals) ===", trace_path.display(), data.records.len());
+            print!("{}", report.render());
+            if verify {
+                // The gate: a replayed run must be indistinguishable from
+                // the generator-driven run it was recorded from.
+                let live = run(&spec);
+                if live.canonical() != report.canonical() {
+                    eprintln!(
+                        "VERIFY FAILED: replayed canonical report differs from the generator run"
+                    );
+                    return 1;
+                }
+                eprintln!(
+                    "verified: replayed canonical report byte-identical to the generator run"
+                );
+            }
+            0
+        }
+        _ => usage(),
+    }
 }
 
 /// `arcus churn`: tenant-churn walkthrough on one shared IPSec engine

@@ -44,6 +44,9 @@ pub struct Frame {
     pub born: Time,
     /// Time fully received off the wire.
     pub arrived: Time,
+    /// Population user that issued the op (0 on pattern-generator runs).
+    /// Carried like `born` so per-user accounting needs no side table.
+    pub user: u32,
 }
 
 impl NicPort {
@@ -101,6 +104,7 @@ impl NicPort {
         bytes: u64,
         born: Time,
         arrived: Time,
+        user: u32,
     ) -> bool {
         let flow_ok = match self.flow_quota {
             Some(q) => self.per_flow_bytes.get(&flow).copied().unwrap_or(0) + bytes <= q,
@@ -109,7 +113,7 @@ impl NicPort {
         if flow_ok && self.rx_buffered + bytes <= self.rx_capacity {
             self.rx_buffered += bytes;
             *self.per_flow_bytes.entry(flow).or_insert(0) += bytes;
-            self.rx_queue.push_back(Frame { id, flow, bytes, born, arrived });
+            self.rx_queue.push_back(Frame { id, flow, bytes, born, arrived, user });
             true
         } else {
             self.rx_dropped += 1;
@@ -122,7 +126,7 @@ impl NicPort {
     /// in-flight gap): returns (arrival time, dropped).
     pub fn rx_frame(&mut self, now: Time, id: u64, flow: usize, bytes: u64) -> (Time, bool) {
         let done = self.rx_begin(now, bytes);
-        let dropped = !self.rx_deliver(id, flow, bytes, now, done);
+        let dropped = !self.rx_deliver(id, flow, bytes, now, done, 0);
         (done, dropped)
     }
 

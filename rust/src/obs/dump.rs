@@ -22,45 +22,13 @@
 //! dumps are small (a handful of KB per flow) either way.
 
 use crate::util::units::Time;
+use crate::util::varint::{get_varint, put_varint};
 
 use super::plane::{FlowSeries, ObsSnapshot};
 use super::series::SeriesRing;
 
 const MAGIC: &[u8; 4] = b"ARCS";
 const VERSION: u16 = 1;
-
-fn put_varint(out: &mut Vec<u8>, mut v: u64) {
-    loop {
-        let b = (v & 0x7f) as u8;
-        v >>= 7;
-        if v == 0 {
-            out.push(b);
-            return;
-        }
-        out.push(b | 0x80);
-    }
-}
-
-fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64, String> {
-    let mut v = 0u64;
-    let mut shift = 0u32;
-    loop {
-        let &b = buf.get(*pos).ok_or("truncated varint")?;
-        *pos += 1;
-        // A u64 holds 64 payload bits: nine full 7-bit groups plus one final
-        // bit. The tenth byte may therefore only carry bit 63 (value 0 or 1,
-        // no continuation); anything else would shift payload bits off the
-        // top and decode to a silently wrong value.
-        if shift >= 64 || (shift == 63 && b & !0x01 != 0) {
-            return Err("varint overflow".into());
-        }
-        v |= ((b & 0x7f) as u64) << shift;
-        if b & 0x80 == 0 {
-            return Ok(v);
-        }
-        shift += 7;
-    }
-}
 
 fn put_ring(out: &mut Vec<u8>, r: &SeriesRing) {
     if r.is_empty() {
@@ -178,20 +146,6 @@ mod tests {
     use super::*;
 
     #[test]
-    fn varint_round_trip() {
-        let mut buf = Vec::new();
-        let cases = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
-        for &v in &cases {
-            put_varint(&mut buf, v);
-        }
-        let mut pos = 0;
-        for &v in &cases {
-            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
-        }
-        assert_eq!(pos, buf.len());
-    }
-
-    #[test]
     fn dump_round_trips_flow_series() {
         let mut snap = ObsSnapshot {
             control_period: 100_000_000,
@@ -225,39 +179,6 @@ mod tests {
         assert_eq!(g.bytes.get(6), Some(6000));
         assert_eq!(g.attainment_ppm.get(4), Some(u64::MAX));
         assert!(g.ops.is_empty());
-    }
-
-    #[test]
-    fn varint_rejects_overlong_encodings() {
-        // Nine 0xff continuation bytes put the decoder at shift 63 with
-        // bit 63 still unset. A final byte with any payload above bit 0
-        // would shift bits past the top of the u64 — the pre-fix decoder
-        // masked them off and returned a wrong value.
-        let mut hostile = vec![0xffu8; 9];
-        hostile.push(0x7f);
-        let mut pos = 0;
-        assert_eq!(
-            get_varint(&hostile, &mut pos),
-            Err("varint overflow".into()),
-            "tenth byte with payload bits beyond 64 must error, not truncate"
-        );
-
-        // A continuation bit on the tenth byte promises an eleventh group
-        // that cannot fit either.
-        let all_cont = vec![0xffu8; 11];
-        let mut pos = 0;
-        assert!(get_varint(&all_cont, &mut pos).is_err());
-
-        // The boundary cases stay valid: u64::MAX is nine 0xff bytes plus
-        // a final 0x01, and 1 << 63 is nine 0x80 bytes plus 0x01.
-        let mut max = vec![0xffu8; 9];
-        max.push(0x01);
-        let mut pos = 0;
-        assert_eq!(get_varint(&max, &mut pos), Ok(u64::MAX));
-        let mut top_bit = vec![0x80u8; 9];
-        top_bit.push(0x01);
-        let mut pos = 0;
-        assert_eq!(get_varint(&top_bit, &mut pos), Ok(1u64 << 63));
     }
 
     #[test]

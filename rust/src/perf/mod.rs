@@ -60,6 +60,11 @@ pub struct Preset {
     /// roster over [`crate::fleet::FleetPlane`] hosts (one advance thread
     /// per host) with the default directive-distribution config.
     pub hosts: usize,
+    /// Population size: 0 runs the per-flow pattern generators; > 0 drives
+    /// every flow from the user-population workload layer
+    /// ([`crate::workload::PopulationConfig`] with default shape knobs) and
+    /// grows per-user fairness accounting in the report.
+    pub population: usize,
 }
 
 /// The committed presets. Tenancy and duration scale together so the
@@ -69,8 +74,11 @@ pub struct Preset {
 /// the event queue stays shallow no matter how many flows block. `fleet`
 /// shards a 64-flow roster over four fleet hosts (one advance thread
 /// each) to size the per-barrier interchange overhead of the
-/// distribution tier.
-pub const PRESETS: [Preset; 5] = [
+/// distribution tier. `population` multiplexes 100,000 users onto a
+/// 64-flow roster through the heavy-tailed workload generator — the
+/// scale point for the flyweight per-user state (O(users × few words)
+/// memory, no per-arrival allocation).
+pub const PRESETS: [Preset; 6] = [
     Preset {
         name: "small",
         tenants: 2,
@@ -80,6 +88,7 @@ pub const PRESETS: [Preset; 5] = [
         warmup_ms: 1,
         hierarchy: false,
         hosts: 1,
+        population: 0,
     },
     Preset {
         name: "medium",
@@ -90,6 +99,7 @@ pub const PRESETS: [Preset; 5] = [
         warmup_ms: 2,
         hierarchy: false,
         hosts: 1,
+        population: 0,
     },
     Preset {
         name: "large",
@@ -100,6 +110,7 @@ pub const PRESETS: [Preset; 5] = [
         warmup_ms: 5,
         hierarchy: false,
         hosts: 1,
+        population: 0,
     },
     Preset {
         name: "xlarge",
@@ -110,6 +121,7 @@ pub const PRESETS: [Preset; 5] = [
         warmup_ms: 1,
         hierarchy: true,
         hosts: 1,
+        population: 0,
     },
     Preset {
         name: "fleet",
@@ -120,6 +132,18 @@ pub const PRESETS: [Preset; 5] = [
         warmup_ms: 2,
         hierarchy: true,
         hosts: 4,
+        population: 0,
+    },
+    Preset {
+        name: "population",
+        tenants: 8,
+        flows: 64,
+        accels: 2,
+        duration_ms: 10,
+        warmup_ms: 2,
+        hierarchy: true,
+        hosts: 1,
+        population: 100_000,
     },
 ];
 
@@ -189,6 +213,12 @@ pub fn spec_for(p: &Preset) -> ExperimentSpec {
         .with_warmup(p.warmup_ms * MILLIS);
     if p.hierarchy {
         spec = spec.with_hierarchy();
+    }
+    if p.population > 0 {
+        spec = spec.with_population(crate::workload::PopulationConfig {
+            users: p.population,
+            ..Default::default()
+        });
     }
     spec
 }
@@ -474,6 +504,29 @@ mod tests {
         assert!(fleet.hosts > 1);
         assert_eq!(fleet.tenants % fleet.hosts, 0);
         assert_eq!(fleet.flows % fleet.tenants, 0);
+        // The population preset is the 100k-user scale point and stays on
+        // the single-world engine (per-user accounting is per-world).
+        let pop = preset_by_name("population").unwrap();
+        assert_eq!(pop.population, 100_000);
+        assert_eq!(pop.hosts, 1);
+        assert!(spec_for(&pop).population.is_some());
+        assert!(pop.population >= pop.flows, "every flow needs a home user");
+    }
+
+    #[test]
+    fn population_preset_runs_the_population_generator() {
+        // A shortened clone of the committed preset: same roster and
+        // population, small duration so the test stays test-suite sized.
+        let p = Preset { duration_ms: 2, warmup_ms: 1, ..preset_by_name("population").unwrap() };
+        let (r, report) = run_preset_report(&p, QueueKind::Heap);
+        assert_eq!(r.scenario, "population");
+        assert!(r.events_executed > 10_000, "events {}", r.events_executed);
+        // Fairness metrics are the proof the run went through the
+        // population layer rather than the pattern generators.
+        let fr = report.fairness.expect("population runs carry fairness metrics");
+        assert_eq!(fr.users, 100_000);
+        assert!(fr.active_users > 0);
+        assert!(fr.jain_ppm > 0 && fr.jain_ppm <= 1_000_000);
     }
 
     #[test]

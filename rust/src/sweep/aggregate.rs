@@ -401,6 +401,7 @@ mod tests {
             scale: crate::sweep::Scale::Flat,
             control: crate::sweep::ControlKind::Static,
             hosts: 1,
+            population: None,
             accel: "ipsec",
             seed: 1,
         };
@@ -440,6 +441,7 @@ mod tests {
                 wall_secs: 0.001,
                 series_digest: 0,
                 obs: Default::default(),
+                fairness: None,
             },
         }
     }

@@ -27,6 +27,7 @@ use crate::flow::TrafficPattern;
 use crate::system::{ExperimentSpec, LifecycleEvent, Mode};
 use crate::util::rng::splitmix64;
 use crate::util::units::{Rate, Time, MILLIS};
+use crate::workload::PopulationConfig;
 
 /// Named message-size mixtures (Table 1's size axis) — the shared
 /// vocabulary for benches, tests, and the `sweep` subcommand.
@@ -410,6 +411,12 @@ pub struct SweepGrid {
     /// multi-host cells run under [`crate::fleet::FleetPlane`] with the
     /// default distribution config).
     pub hosts: Vec<usize>,
+    /// Population axis: `None` cells use the per-flow pattern generators
+    /// (the legacy grid — labels and seeds unchanged); `Some(users)` cells
+    /// drive every flow from the heavy-tailed user-population generator
+    /// ([`crate::workload::PopulationConfig`] with default shape knobs)
+    /// and grow per-user fairness metrics in the report.
+    pub population: Vec<Option<usize>>,
     pub accels: Vec<AccelModel>,
     /// Seed axis: replications of every cell with decorrelated randomness.
     pub seeds: Vec<u64>,
@@ -431,6 +438,7 @@ impl SweepGrid {
             scale: vec![Scale::Flat],
             control: vec![ControlKind::Static],
             hosts: vec![1],
+            population: vec![None],
             accels: Vec::new(),
             seeds: Vec::new(),
         }
@@ -476,6 +484,10 @@ impl SweepGrid {
         self.hosts = v;
         self
     }
+    pub fn population(mut self, v: Vec<Option<usize>>) -> Self {
+        self.population = v;
+        self
+    }
     pub fn accels(mut self, v: Vec<AccelModel>) -> Self {
         self.accels = v;
         self
@@ -498,6 +510,7 @@ impl SweepGrid {
             * self.scale.len()
             * self.control.len()
             * self.hosts.len()
+            * self.population.len()
             * self.accels.len()
             * self.seeds.len()
     }
@@ -547,6 +560,39 @@ impl SweepGrid {
                     "scale f{n} exceeds the supported ceiling (50000 flows per scenario)"
                 ));
             }
+        }
+        for &p in &self.population {
+            let Some(users) = p else { continue };
+            // Per-user accounting lives in the single-world engine; a fleet
+            // merge has no way to combine two hosts' user tables.
+            if let Some(&h) = self.hosts.iter().find(|&&h| h > 1) {
+                return Err(format!(
+                    "population u{users} cannot combine with hosts h{h}: per-user \
+                     accounting lives in the single-world engine — drop the hosts \
+                     axis or the population axis"
+                ));
+            }
+            // Every flow needs at least one home user at every scale ×
+            // tenant coordinate the expansion will visit.
+            for &s in &self.scale {
+                for &t in &self.tenants {
+                    let n_flows = match s {
+                        Scale::Flat => t,
+                        Scale::Flows(n) => n.max(t),
+                    };
+                    if users < n_flows {
+                        return Err(format!(
+                            "population u{users} cannot cover the {n_flows} flows of \
+                             cell `{} × t{t:02}`: every flow needs at least one home \
+                             user — raise the population or shrink the flow roster",
+                            s.name()
+                        ));
+                    }
+                }
+            }
+            PopulationConfig { users, ..PopulationConfig::default() }
+                .validate(1)
+                .map_err(|e| format!("population u{users}: {e}"))?;
         }
         // Axis interactions: expansion combines every churn pattern with
         // every fault profile at every tenant count, and some combinations
@@ -607,30 +653,33 @@ impl SweepGrid {
                                     for &scale in &self.scale {
                                         for &control in &self.control {
                                             for &hosts in &self.hosts {
-                                                for accel in &self.accels {
-                                                    for &seed in &self.seeds {
-                                                        let key = ScenarioKey {
-                                                            mode,
-                                                            tenants,
-                                                            mix,
-                                                            burst,
-                                                            tightness,
-                                                            churn,
-                                                            faults,
-                                                            scale,
-                                                            control,
-                                                            hosts,
-                                                            accel: accel.name,
-                                                            seed,
-                                                        };
-                                                        let spec =
-                                                            self.scenario_spec(&key, accel);
-                                                        out.push(Scenario {
-                                                            index,
-                                                            key,
-                                                            spec,
-                                                        });
-                                                        index += 1;
+                                                for &population in &self.population {
+                                                    for accel in &self.accels {
+                                                        for &seed in &self.seeds {
+                                                            let key = ScenarioKey {
+                                                                mode,
+                                                                tenants,
+                                                                mix,
+                                                                burst,
+                                                                tightness,
+                                                                churn,
+                                                                faults,
+                                                                scale,
+                                                                control,
+                                                                hosts,
+                                                                population,
+                                                                accel: accel.name,
+                                                                seed,
+                                                            };
+                                                            let spec =
+                                                                self.scenario_spec(&key, accel);
+                                                            out.push(Scenario {
+                                                                index,
+                                                                key,
+                                                                spec,
+                                                            });
+                                                            index += 1;
+                                                        }
                                                     }
                                                 }
                                             }
@@ -692,6 +741,15 @@ impl SweepGrid {
             // Only Arcus cells actually grow the closed loop (the engine
             // ignores the config for modes with no planner to wrap).
             spec = spec.with_adaptive(AdaptiveConfig::default());
+        }
+        if let Some(users) = key.population {
+            // Population cells keep the default shape knobs (Zipf 1.1,
+            // Pareto 1.3, no diurnal/burst) so the axis varies exactly one
+            // thing: how many users the flows' traffic is multiplexed from.
+            spec = spec.with_population(PopulationConfig {
+                users,
+                ..PopulationConfig::default()
+            });
         }
         spec
     }
@@ -800,6 +858,8 @@ pub struct ScenarioKey {
     pub control: ControlKind,
     /// Fleet size (1 = single-world run, no fleet tier).
     pub hosts: usize,
+    /// Population-axis value (`None` = per-flow pattern generators).
+    pub population: Option<usize>,
     /// Accelerator model name (axis label).
     pub accel: &'static str,
     /// Seed-axis value (not the derived simulator seed).
@@ -812,10 +872,11 @@ impl ScenarioKey {
     /// Tightness carries four decimals so nearby swept values keep distinct
     /// labels. Static (no-churn) cells omit the churn segment, healthy
     /// cells omit the faults segment, flat cells omit the scale segment,
-    /// static-control cells omit the control segment, and single-host
-    /// cells omit the hosts segment, so their labels — and the simulator
-    /// seeds derived from them — are byte-identical to grids that predate
-    /// those axes.
+    /// static-control cells omit the control segment, single-host cells
+    /// omit the hosts segment, and pattern-generator cells omit the
+    /// population segment (`u<users>`), so their labels — and the
+    /// simulator seeds derived from them — are byte-identical to grids
+    /// that predate those axes.
     pub fn label(&self) -> String {
         let scale = match self.scale {
             Scale::Flat => String::new(),
@@ -837,8 +898,12 @@ impl ScenarioKey {
             0 | 1 => String::new(),
             h => format!("h{h}/"),
         };
+        let population = match self.population {
+            None => String::new(),
+            Some(u) => format!("u{u}/"),
+        };
         format!(
-            "{}/t{:02}/{}{}/{}/x{:.4}/{}{}{}{}{}/s{}",
+            "{}/t{:02}/{}{}/{}/x{:.4}/{}{}{}{}{}{}/s{}",
             self.mode.name(),
             self.tenants,
             scale,
@@ -849,6 +914,7 @@ impl ScenarioKey {
             faults,
             control,
             hosts,
+            population,
             self.accel,
             self.seed
         )
@@ -1324,6 +1390,104 @@ mod tests {
         }
         let err = ControlKind::parse("manual").unwrap_err();
         assert!(err.contains("static") && err.contains("adaptive"), "{err}");
+    }
+
+    #[test]
+    fn pattern_labels_and_seeds_unchanged_by_population_axis() {
+        let base = || {
+            SweepGrid::new(GridBase::default())
+                .modes(vec![Mode::Arcus])
+                .tenants(vec![2])
+                .mixes(vec![SizeMix::Mtu])
+                .bursts(vec![Burstiness::Paced])
+                .tightness(vec![0.7])
+                .accels(vec![AccelModel::ipsec_32g()])
+                .seeds(vec![1])
+        };
+        let legacy = base().expand();
+        let peopled = base().population(vec![None, Some(5000)]).expand();
+        assert_eq!(legacy.len(), 1);
+        assert_eq!(peopled.len(), 2);
+        // The None cell keeps the legacy label, seed, and (no) population
+        // config — its report stays byte-identical to pre-axis grids.
+        assert_eq!(peopled[0].key.label(), legacy[0].key.label());
+        assert_eq!(peopled[0].spec.seed, legacy[0].spec.seed);
+        assert!(peopled[0].spec.population.is_none());
+        // The Some cell gets a distinct label segment, a distinct seed, and
+        // a default-shaped config at the requested population.
+        assert!(peopled[1].key.label().contains("/u5000/"), "{}", peopled[1].key.label());
+        assert_ne!(peopled[1].spec.seed, legacy[0].spec.seed);
+        let cfg = peopled[1].spec.population.as_ref().expect("population cell carries a config");
+        assert_eq!(cfg.users, 5000);
+        assert_eq!(cfg.zipf_s, PopulationConfig::default().zipf_s);
+    }
+
+    #[test]
+    fn population_axis_validation() {
+        let base = || {
+            SweepGrid::new(GridBase::default())
+                .modes(vec![Mode::Arcus])
+                .tenants(vec![2])
+                .mixes(vec![SizeMix::Mtu])
+                .bursts(vec![Burstiness::Paced])
+                .tightness(vec![0.7])
+                .accels(vec![AccelModel::ipsec_32g()])
+                .seeds(vec![1])
+        };
+        // population × scale: fewer users than flows is rejected up front,
+        // naming the offending cell.
+        let err = base()
+            .scale(vec![Scale::Flows(16)])
+            .population(vec![Some(8)])
+            .validate()
+            .unwrap_err();
+        assert!(err.contains("u8") && err.contains("16 flows"), "{err}");
+        assert!(base()
+            .scale(vec![Scale::Flows(16)])
+            .population(vec![Some(100)])
+            .validate()
+            .is_ok());
+        // population × hosts>1: per-user accounting is single-world.
+        let err = base().hosts(vec![1, 2]).population(vec![Some(100)]).validate().unwrap_err();
+        assert!(err.contains("single-world"), "{err}");
+        // A None population never constrains the other axes.
+        assert!(base().hosts(vec![1, 2]).population(vec![None]).validate().is_ok());
+        // Out-of-range populations reuse the config validator's complaint.
+        let err = base().population(vec![Some(100_000_000)]).validate().unwrap_err();
+        assert!(err.contains("users"), "{err}");
+    }
+
+    #[test]
+    fn population_composes_with_churn_and_faults() {
+        let base = || {
+            SweepGrid::new(GridBase::default())
+                .modes(vec![Mode::Arcus])
+                .tenants(vec![2])
+                .mixes(vec![SizeMix::Mtu])
+                .bursts(vec![Burstiness::Paced])
+                .tightness(vec![0.7])
+                .accels(vec![AccelModel::ipsec_32g()])
+                .seeds(vec![1])
+        };
+        // population × churn: tenant lifecycle is deterministic either way;
+        // the cell is allowed and carries both schedules.
+        let grid = base().churn(vec![Churn::Arrivals]).population(vec![Some(5000)]);
+        assert!(grid.validate().is_ok());
+        let cell = &grid.expand()[0];
+        assert!(cell.key.label().contains("/arrivals/"), "{}", cell.key.label());
+        assert!(cell.key.label().contains("/u5000/"), "{}", cell.key.label());
+        assert!(!cell.spec.lifecycle.is_empty());
+        assert!(cell.spec.population.is_some());
+        // population × faults: a flash-crowd epoch overlapping a fault
+        // window is exactly the scenario the axis exists for — allowed,
+        // and the label carries both segments.
+        let grid = base().faults(vec![FaultProfile::LinkCut]).population(vec![Some(5000)]);
+        assert!(grid.validate().is_ok());
+        let cell = &grid.expand()[0];
+        assert!(cell.key.label().contains("/link_cut/"), "{}", cell.key.label());
+        assert!(cell.key.label().contains("/u5000/"), "{}", cell.key.label());
+        assert!(!cell.spec.faults.is_empty());
+        assert!(cell.spec.population.is_some());
     }
 
     #[test]

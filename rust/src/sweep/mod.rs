@@ -7,9 +7,11 @@
 //! library:
 //!
 //! - [`grid`] — [`SweepGrid`] expands one [`GridBase`] template over
-//!   twelve axes (tenant count, [`crate::system::Mode`], burstiness,
+//!   thirteen axes (tenant count, [`crate::system::Mode`], burstiness,
 //!   message-size mix, SLO tightness, tenant churn, fault injection,
-//!   flow-population scale, control loop, host count, accelerator model,
+//!   flow-population scale, user-population size (the
+//!   [`crate::workload::PopulationConfig`] generator vs the legacy
+//!   per-flow patterns), control loop, host count, accelerator model,
 //!   seed) into a deterministic scenario list; [`SizeMix`] is the shared message-size
 //!   vocabulary, [`Churn`] the tenant-lifecycle one, [`FaultProfile`] the
 //!   fault-injection one, [`Scale`] the flow-count one (non-flat cells run

@@ -78,6 +78,7 @@ use crate::storage::nvme::{Io, IoDone, IoKind};
 use crate::storage::Raid0;
 use crate::util::units::{Time, NANOS};
 use crate::util::{Rng, Slab};
+use crate::workload::{build_population, PopAccounting, PopArrival, PopArrivals, TraceData};
 
 use super::report::{EraReport, FaultReport, FlowReport, SystemReport};
 use super::spec::{ExperimentSpec, LifecycleEvent, Mode};
@@ -91,6 +92,9 @@ pub struct Msg {
     flow: usize,
     bytes: u64,
     born: Time,
+    /// Population user that issued the op (0 on pattern-generator runs,
+    /// where no per-user accounting exists to read it).
+    user: u32,
 }
 
 /// Which leg of its journey an in-flight operation is on.
@@ -120,7 +124,7 @@ struct OpCtx {
 #[derive(Debug, Clone)]
 pub enum EngineEvent {
     /// A message leaves its VM (or its frame starts onto the wire).
-    Inject { flow: usize, bytes: u64 },
+    Inject { flow: usize, bytes: u64, user: u32 },
     /// A frame's last bit landed: enter the RX buffer or drop.
     RxDeliver {
         port: usize,
@@ -128,6 +132,7 @@ pub enum EngineEvent {
         flow: usize,
         bytes: u64,
         born: Time,
+        user: u32,
     },
     /// Shaped fetch-engine wakeup. `gen` voids superseded schedules.
     Fetch { flow: usize, gen: u64 },
@@ -169,9 +174,63 @@ pub enum EngineEvent {
 
 use EngineEvent as Ev;
 
+/// One arrival from whichever source drives a flow.
+struct NextArrival {
+    at: Time,
+    bytes: u64,
+    user: u32,
+}
+
+/// Per-flow cursor over a recorded trace's arrivals (`arcus trace replay`).
+struct TraceCursor {
+    records: Vec<PopArrival>,
+    idx: usize,
+}
+
+impl TraceCursor {
+    fn next(&mut self) -> NextArrival {
+        match self.records.get(self.idx) {
+            Some(r) => {
+                self.idx += 1;
+                NextArrival { at: r.at, bytes: r.bytes, user: r.user }
+            }
+            // Exhausted: Time::MAX lands at/after every duration, so the
+            // engine's pull loop stops exactly as it does for a generator.
+            None => NextArrival { at: Time::MAX, bytes: 0, user: 0 },
+        }
+    }
+}
+
+/// What drives a flow's arrivals: its synthetic traffic pattern (legacy),
+/// its user block of the population workload, or a recorded trace. All
+/// three share the same pull discipline — `next()` yields nondecreasing
+/// arrival times and the engine stops pulling at the run's duration — so
+/// swapping sources never perturbs the event loop's structure.
+enum ArrivalGen {
+    Pattern(TrafficGen),
+    Pop(PopArrivals),
+    Replay(TraceCursor),
+}
+
+impl ArrivalGen {
+    fn next(&mut self) -> NextArrival {
+        match self {
+            ArrivalGen::Pattern(g) => {
+                let a = g.next();
+                NextArrival { at: a.at, bytes: a.bytes, user: 0 }
+            }
+            ArrivalGen::Pop(g) => {
+                let a = g.next();
+                NextArrival { at: a.at, bytes: a.bytes, user: a.user }
+            }
+            ArrivalGen::Replay(c) => c.next(),
+        }
+    }
+}
+
 /// Per-flow runtime state.
 struct FlowState {
-    gen: TrafficGen,
+    gen: ArrivalGen,
     /// VM-side DMA buffer (function-call / TX / storage paths).
     queue: VecDeque<Msg>,
     /// Cost units for shaping and sampling (bytes vs messages). The
@@ -275,6 +334,8 @@ pub struct World {
     /// and tick-indexed series sampled on `ControlTick`, plus the fault-era
     /// + recovery accounting `FlowReport.fault` is derived from.
     obs: ObsPlane,
+    /// Flyweight per-user accounting (population runs only).
+    pop: Option<PopAccounting>,
     /// Algorithm-1 ticks are lost while `now` is before this (the
     /// `ControlOutage` fault).
     control_outage_until: Time,
@@ -287,10 +348,10 @@ pub struct World {
 impl Handler<EngineEvent> for World {
     fn handle<Q: EventQueue<EngineEvent>>(&mut self, sim: &mut Sim<EngineEvent, Q>, ev: Ev) {
         match ev {
-            Ev::Inject { flow, bytes } => self.inject(sim, flow, bytes),
-            Ev::RxDeliver { port, id, flow, bytes, born } => {
+            Ev::Inject { flow, bytes, user } => self.inject(sim, flow, bytes, user),
+            Ev::RxDeliver { port, id, flow, bytes, born, user } => {
                 let arrived = sim.now();
-                if self.ports[port].rx_deliver(id, flow, bytes, born, arrived) {
+                if self.ports[port].rx_deliver(id, flow, bytes, born, arrived, user) {
                     self.kick_fetch(sim, flow, arrived);
                 } else if arrived >= self.spec.warmup {
                     self.metrics[flow].on_drop();
@@ -358,7 +419,11 @@ impl Handler<EngineEvent> for World {
 }
 
 impl World {
-    fn new(spec: ExperimentSpec) -> Self {
+    /// Build the component graph. `replay` (per-flow arrival lists from a
+    /// decoded trace) substitutes trace cursors for the population
+    /// generators; [`Engine::build_replay`] validates it against the spec
+    /// before it reaches here.
+    fn new(spec: ExperimentSpec, replay: Option<Vec<Vec<PopArrival>>>) -> Self {
         let n = spec.flows.len();
         let fabric = Fabric::new(spec.fabric, n.max(1));
         let mut ports = vec![
@@ -445,11 +510,51 @@ impl World {
             })
             .collect();
 
+        // Population workload: validate loudly (config/grid layers validate
+        // earlier with context; this backstops programmatic specs), then
+        // build one arrival source per flow — generators normally, trace
+        // cursors on replay.
+        if let Some(cfg) = &spec.population {
+            if let Err(e) = cfg.validate(n) {
+                panic!("invalid population config: {e}");
+            }
+        }
+        let pop_sources: Option<Vec<ArrivalGen>> = match (&spec.population, replay) {
+            (Some(_), Some(per_flow)) => Some(
+                per_flow
+                    .into_iter()
+                    .map(|records| ArrivalGen::Replay(TraceCursor { records, idx: 0 }))
+                    .collect(),
+            ),
+            (Some(cfg), None) => {
+                let homes: Vec<_> = spec
+                    .flows
+                    .iter()
+                    .map(|f| (f.vm as u32, f.pattern.offered()))
+                    .collect();
+                Some(
+                    build_population(cfg, spec.seed, spec.duration, &homes)
+                        .into_iter()
+                        .map(ArrivalGen::Pop)
+                        .collect(),
+                )
+            }
+            (None, _) => None,
+        };
+        let mut pop_iter = pop_sources.map(Vec::into_iter);
+
         let flows: Vec<FlowState> = spec
             .flows
             .iter()
             .map(|f| FlowState {
-                gen: TrafficGen::new(f.pattern.clone(), spec.seed, f.id as u64),
+                gen: match pop_iter.as_mut().and_then(Iterator::next) {
+                    Some(g) => g,
+                    None => ArrivalGen::Pattern(TrafficGen::new(
+                        f.pattern.clone(),
+                        spec.seed,
+                        f.id as u64,
+                    )),
+                },
                 queue: VecDeque::new(),
                 mode: match f.slo {
                     Slo::Iops { .. } => ShapeMode::Iops,
@@ -531,6 +636,7 @@ impl World {
             scratch_raid: Vec::new(),
             fault_window: fw,
             obs,
+            pop: spec.population.as_ref().map(|c| PopAccounting::new(c.users)),
             control_outage_until: 0,
             directive_lag_max: 0,
             spec,
@@ -730,9 +836,9 @@ impl World {
                 return;
             }
             if a.at >= now {
-                let bytes = a.bytes;
+                let (bytes, user) = (a.bytes, a.user);
                 self.flows[flow].arrival_pending = true;
-                sim.at(a.at, Ev::Inject { flow, bytes });
+                sim.at(a.at, Ev::Inject { flow, bytes, user });
                 return;
             }
         }
@@ -745,13 +851,19 @@ impl World {
         if a.at >= self.spec.duration {
             return;
         }
-        let bytes = a.bytes;
+        let (bytes, user) = (a.bytes, a.user);
         self.flows[flow].arrival_pending = true;
-        sim.at(a.at.max(sim.now()), Ev::Inject { flow, bytes });
+        sim.at(a.at.max(sim.now()), Ev::Inject { flow, bytes, user });
     }
 
     /// A message enters the system at `now`.
-    fn inject<Q: EventQueue<Ev>>(&mut self, sim: &mut Sim<Ev, Q>, flow: usize, bytes: u64) {
+    fn inject<Q: EventQueue<Ev>>(
+        &mut self,
+        sim: &mut Sim<Ev, Q>,
+        flow: usize,
+        bytes: u64,
+        user: u32,
+    ) {
         self.flows[flow].arrival_pending = false;
         if self.flows[flow].departed_at.is_some() {
             return; // departed: the VM stopped submitting (chain ends here)
@@ -770,7 +882,7 @@ impl World {
             let id = self.next_frame;
             self.next_frame += 1;
             let done = self.ports[port].rx_begin(now, bytes);
-            sim.at(done, Ev::RxDeliver { port, id, flow, bytes, born: now });
+            sim.at(done, Ev::RxDeliver { port, id, flow, bytes, born: now, user });
         } else {
             // VM-side DMA buffer (function call / TX / storage).
             if self.flows[flow].queue.len() >= self.spec.queue_cap {
@@ -780,7 +892,7 @@ impl World {
                 }
                 return;
             }
-            self.flows[flow].queue.push_back(Msg { flow, bytes, born: now });
+            self.flows[flow].queue.push_back(Msg { flow, bytes, born: now, user });
             self.kick_fetch(sim, flow, now);
         }
     }
@@ -886,7 +998,8 @@ impl World {
                             }
                             f
                         };
-                        let msg = Msg { flow, bytes: frame.bytes, born: frame.born };
+                        let msg =
+                            Msg { flow, bytes: frame.bytes, born: frame.born, user: frame.user };
                         // RX ingress data is already on the device: into the
                         // accelerator after the shaping decision latency.
                         let accel = self.spec.flows[flow].accel;
@@ -1175,6 +1288,9 @@ impl World {
             // from. Completion times arrive monotone here, which is what
             // its era-boundary snapshotting relies on.
             self.obs.on_complete(flow, at, lat, msg.bytes);
+            if let Some(pop) = self.pop.as_mut() {
+                pop.on_complete(msg.user, lat, msg.bytes);
+            }
         }
         // The freed pipeline slot can admit the next message.
         self.kick_fetch(sim, flow, at);
@@ -1409,7 +1525,44 @@ impl Engine {
 impl<Q: EventQueue<EngineEvent> + Default> Engine<Q> {
     /// Build on queue discipline `Q` (see [`crate::sim::CalendarQueue`]).
     pub fn build(spec: ExperimentSpec) -> Self {
-        let mut world = World::new(spec);
+        Self::build_inner(spec, None)
+    }
+
+    /// Build with each flow's arrivals driven by a recorded trace instead of
+    /// its generator (`arcus trace replay`). The spec must carry the same
+    /// `[population]` the trace was recorded under — the header's
+    /// user/flow counts are checked here, so a mismatched spec fails loudly
+    /// instead of replaying nonsense.
+    pub fn build_replay(spec: ExperimentSpec, trace: &TraceData) -> Result<Self, String> {
+        let cfg = spec
+            .population
+            .as_ref()
+            .ok_or("trace replay requires the spec's [population] table")?;
+        if trace.users != cfg.users as u64 || trace.flows != spec.flows.len() as u64 {
+            return Err(format!(
+                "trace was recorded for {} users / {} flows but the spec has {} / {}",
+                trace.users,
+                trace.flows,
+                cfg.users,
+                spec.flows.len()
+            ));
+        }
+        // Re-partition the time-sorted records into per-flow cursors; each
+        // flow's subsequence is nondecreasing in time, which is all the
+        // engine's pull discipline needs.
+        let mut per_flow: Vec<Vec<PopArrival>> = vec![Vec::new(); spec.flows.len()];
+        for r in &trace.records {
+            per_flow[r.flow as usize].push(PopArrival {
+                at: r.at,
+                user: r.user,
+                bytes: r.bytes,
+            });
+        }
+        Ok(Self::build_inner(spec, Some(per_flow)))
+    }
+
+    fn build_inner(spec: ExperimentSpec, replay: Option<Vec<Vec<PopArrival>>>) -> Self {
+        let mut world = World::new(spec, replay);
         let mut sim: Sim<EngineEvent, Q> = Sim::new();
         let n = world.flows.len();
         // A flow is present from t = 0 unless its *earliest* lifecycle
@@ -1623,6 +1776,7 @@ impl<Q: EventQueue<EngineEvent> + Default> Engine<Q> {
             wall_secs: wall,
             series_digest,
             obs,
+            fairness: w.pop.as_ref().map(|p| p.report()),
         }
     }
 }
@@ -1636,6 +1790,40 @@ pub fn run(spec: &ExperimentSpec) -> SystemReport {
 /// `run_with::<CalendarQueue<EngineEvent>>(&spec)`.
 pub fn run_with<Q: EventQueue<EngineEvent> + Default>(spec: &ExperimentSpec) -> SystemReport {
     Engine::<Q>::build(spec.clone()).run()
+}
+
+/// Build + run with arrivals replayed from a recorded trace (reference
+/// binary-heap queue).
+pub fn run_replay(spec: &ExperimentSpec, trace: &TraceData) -> Result<SystemReport, String> {
+    Ok(Engine::<BinaryHeapQueue<EngineEvent>>::build_replay(spec.clone(), trace)?.run())
+}
+
+/// Build + run a trace replay on a chosen queue discipline.
+pub fn run_replay_with<Q: EventQueue<EngineEvent> + Default>(
+    spec: &ExperimentSpec,
+    trace: &TraceData,
+) -> Result<SystemReport, String> {
+    Ok(Engine::<Q>::build_replay(spec.clone(), trace)?.run())
+}
+
+/// Enumerate the arrival trace a population spec implies, without running
+/// the engine (`arcus trace record`). Uses the same flow-home construction
+/// [`Engine::build`] uses, so replaying the recording against the same
+/// spec produces a byte-identical report.
+pub fn record_population_trace(
+    spec: &ExperimentSpec,
+) -> Result<Vec<crate::workload::TraceRecord>, String> {
+    let cfg = spec
+        .population
+        .as_ref()
+        .ok_or("trace recording requires the spec's [population] table")?;
+    cfg.validate(spec.flows.len())?;
+    let homes: Vec<_> = spec
+        .flows
+        .iter()
+        .map(|f| (f.vm as u32, f.pattern.offered()))
+        .collect();
+    Ok(crate::workload::record_trace(cfg, spec.seed, spec.duration, &homes))
 }
 
 #[cfg(test)]

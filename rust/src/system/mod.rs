@@ -11,6 +11,8 @@ pub mod engine;
 pub mod report;
 pub mod spec;
 
-pub use engine::{run, run_with, Engine, EngineEvent};
+pub use engine::{
+    record_population_trace, run, run_replay, run_replay_with, run_with, Engine, EngineEvent,
+};
 pub use report::{EraReport, FaultReport, FlowReport, HostRollup, SystemReport};
 pub use spec::{ExperimentSpec, LifecycleEvent, Mode, RaidSpec};

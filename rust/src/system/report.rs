@@ -4,6 +4,7 @@ use crate::flow::Slo;
 use crate::metrics::{FlowMetrics, ThroughputSampler};
 use crate::obs::ObsSnapshot;
 use crate::util::units::{Rate, Time, MICROS, MILLIS, SECONDS};
+use crate::workload::FairnessReport;
 
 /// One era's measured outcome for one flow (fault-injection runs split the
 /// measured span into pre / during / post eras around the union fault
@@ -250,6 +251,10 @@ pub struct SystemReport {
     /// series + tenant/engine histogram rollups). Not serialized per-value
     /// into `canonical()` — the digest stands in for it.
     pub obs: ObsSnapshot,
+    /// Per-user fairness summary (Jain's index, worst-user p99) — `Some`
+    /// only on population-workload runs, which keeps legacy canonical
+    /// reports byte-identical to the pre-population form.
+    pub fairness: Option<FairnessReport>,
 }
 
 impl SystemReport {
@@ -310,6 +315,10 @@ impl SystemReport {
             self.directive_staleness_max,
             self.series_digest,
         ));
+        // Population runs add one fairness line; legacy runs add nothing.
+        if let Some(fr) = &self.fairness {
+            out.push_str(&format!("fairness={fr:?}\n"));
+        }
         // Fleet runs add one line per host; single-world runs add nothing.
         for h in &self.host_rollups {
             out.push_str(&format!("{h:?}\n"));
@@ -364,6 +373,15 @@ impl SystemReport {
             self.events,
             self.events_per_sec() / 1e6
         ));
+        if let Some(fr) = &self.fairness {
+            out.push_str(&format!(
+                "population: {} users ({} active) jain={:.4} worst-user-p99={:.0}us\n",
+                fr.users,
+                fr.active_users,
+                fr.jain_ppm as f64 / 1e6,
+                fr.worst_user_p99_ps as f64 / MICROS as f64
+            ));
+        }
         out.push_str(
             "flow vm   goodput      iops        p50        p99      p99.9  drops  cv%\n",
         );

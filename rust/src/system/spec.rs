@@ -170,6 +170,12 @@ pub struct ExperimentSpec {
     /// the AIMD [`crate::api::AdaptiveControlPlane`] with these gains.
     /// `None` runs the static planner alone.
     pub adaptive: Option<AdaptiveConfig>,
+    /// Population workload layer ([`crate::workload::gen`]): replace each
+    /// flow's synthetic pattern generator with N users multiplexed onto the
+    /// flows (Zipf popularity, Pareto sizes, diurnal + flash-crowd
+    /// envelopes) and report per-user fairness. `None` = legacy pattern
+    /// generators, byte-identical to the pre-population form.
+    pub population: Option<crate::workload::PopulationConfig>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -205,7 +211,15 @@ impl ExperimentSpec {
             obs_retention: 256,
             obs_sample_every: 1,
             adaptive: None,
+            population: None,
         }
+    }
+
+    /// Drive the flows from a population workload instead of their synthetic
+    /// patterns (each flow's offered rate still scales its share).
+    pub fn with_population(mut self, cfg: crate::workload::PopulationConfig) -> Self {
+        self.population = Some(cfg);
+        self
     }
 
     /// Enable the closed-loop adaptive control plane (Arcus mode only).

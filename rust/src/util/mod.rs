@@ -3,6 +3,7 @@
 pub mod rng;
 pub mod slab;
 pub mod units;
+pub mod varint;
 
 pub use rng::Rng;
 pub use slab::Slab;

@@ -135,11 +135,27 @@ impl Rng {
 
     /// Pareto-distributed value (heavy tail) with scale `xm` and shape `alpha`.
     ///
-    /// Used by the CPU-interference jitter model of the software shapers:
-    /// scheduler hiccups are well-known to be heavy-tailed.
+    /// Used by the CPU-interference jitter model of the software shapers and
+    /// the population workload's message-size distribution: scheduler hiccups
+    /// and user demand are both well-known to be heavy-tailed.
+    ///
+    /// Requires finite `xm > 0` and `alpha > 0`; anything else used to
+    /// produce NaN/inf that poisoned downstream averages silently. Draws are
+    /// always finite and ≥ `xm`: for extreme-but-valid shapes (tiny `alpha`)
+    /// the inverse CDF can overflow `f64`, in which case the draw saturates
+    /// to `f64::MAX` rather than leaking `inf`.
     pub fn pareto(&mut self, xm: f64, alpha: f64) -> f64 {
-        let u = 1.0 - self.f64();
-        xm / u.powf(1.0 / alpha)
+        assert!(
+            xm > 0.0 && alpha > 0.0 && xm.is_finite() && alpha.is_finite(),
+            "pareto requires finite xm > 0 and alpha > 0 (got xm={xm}, alpha={alpha})"
+        );
+        let u = 1.0 - self.f64(); // (0, 1]
+        let x = xm / u.powf(1.0 / alpha);
+        if x.is_finite() {
+            x.max(xm)
+        } else {
+            f64::MAX
+        }
     }
 
     /// Shuffle a slice in place (Fisher–Yates).
@@ -230,6 +246,33 @@ mod tests {
         for _ in 0..10_000 {
             assert!(r.pareto(2.0, 1.5) >= 2.0);
         }
+    }
+
+    #[test]
+    fn pareto_stays_finite_under_extreme_valid_shapes() {
+        // Tiny alpha drives 1/u^(1/alpha) toward overflow for small u; the
+        // draw must saturate, never return inf/NaN. Tiny xm must still act
+        // as a hard lower bound, and huge xm must not round below itself.
+        let mut r = Rng::new(29);
+        for &(xm, alpha) in &[(1e-12, 0.01), (2.0, 0.05), (1e12, 0.5), (512.0, 8.0)] {
+            for _ in 0..20_000 {
+                let x = r.pareto(xm, alpha);
+                assert!(x.is_finite(), "xm={xm} alpha={alpha} gave {x}");
+                assert!(x >= xm, "xm={xm} alpha={alpha} gave {x} below scale");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "pareto requires")]
+    fn pareto_rejects_nonpositive_alpha() {
+        Rng::new(1).pareto(2.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "pareto requires")]
+    fn pareto_rejects_nonpositive_xm() {
+        Rng::new(1).pareto(-1.0, 1.5);
     }
 
     #[test]

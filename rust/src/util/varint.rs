@@ -1,0 +1,124 @@
+//! LEB128 varint encoding shared by the binary codecs.
+//!
+//! Both on-disk formats (`obs::dump`'s series dumps and `workload::trace`'s
+//! arrival traces) encode integers this way; extracting the pair here keeps
+//! the overlong-encoding rejection and truncation discipline tested once and
+//! used everywhere instead of drifting per-codec.
+
+/// Append `v` as an LEB128 varint.
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Decode an LEB128 varint at `*pos`, advancing it past the encoding.
+///
+/// Truncated and overlong encodings fail loudly; a canonical encoder never
+/// produces more than ten bytes, and the tenth may only carry bit 63.
+pub fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64, String> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let &b = buf.get(*pos).ok_or("truncated varint")?;
+        *pos += 1;
+        // A u64 holds 64 payload bits: nine full 7-bit groups plus one final
+        // bit. The tenth byte may therefore only carry bit 63 (value 0 or 1,
+        // no continuation); anything else would shift payload bits off the
+        // top and decode to a silently wrong value.
+        if shift >= 64 || (shift == 63 && b & !0x01 != 0) {
+            return Err("varint overflow".into());
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_round_trip() {
+        let mut buf = Vec::new();
+        let cases = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        for &v in &cases {
+            put_varint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &cases {
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn varint_rejects_overlong_encodings() {
+        // Nine 0xff continuation bytes put the decoder at shift 63 with
+        // bit 63 still unset. A final byte with any payload above bit 0
+        // would shift bits past the top of the u64 — the pre-fix decoder
+        // masked them off and returned a wrong value.
+        let mut hostile = vec![0xffu8; 9];
+        hostile.push(0x7f);
+        let mut pos = 0;
+        assert_eq!(
+            get_varint(&hostile, &mut pos),
+            Err("varint overflow".into()),
+            "tenth byte with payload bits beyond 64 must error, not truncate"
+        );
+
+        // A continuation bit on the tenth byte promises an eleventh group
+        // that cannot fit either.
+        let all_cont = vec![0xffu8; 11];
+        let mut pos = 0;
+        assert!(get_varint(&all_cont, &mut pos).is_err());
+
+        // The boundary cases stay valid: u64::MAX is nine 0xff bytes plus
+        // a final 0x01, and 1 << 63 is nine 0x80 bytes plus 0x01.
+        let mut max = vec![0xffu8; 9];
+        max.push(0x01);
+        let mut pos = 0;
+        assert_eq!(get_varint(&max, &mut pos), Ok(u64::MAX));
+        let mut top_bit = vec![0x80u8; 9];
+        top_bit.push(0x01);
+        let mut pos = 0;
+        assert_eq!(get_varint(&top_bit, &mut pos), Ok(1u64 << 63));
+    }
+
+    #[test]
+    fn every_prefix_of_a_stream_errors_loudly() {
+        let mut buf = Vec::new();
+        for &v in &[0u64, 300, u64::MAX, 1 << 62, 127, 128] {
+            put_varint(&mut buf, v);
+        }
+        // Cutting the stream mid-varint must always surface "truncated",
+        // never a silently short value. Prefixes that end exactly on a
+        // varint boundary decode cleanly, so walk each prefix to its end
+        // and require the error only when the cut is mid-encoding.
+        for cut in 0..buf.len() {
+            let mut pos = 0;
+            loop {
+                match get_varint(&buf[..cut], &mut pos) {
+                    Ok(_) => {
+                        if pos == cut {
+                            break; // clean boundary — remaining stream empty
+                        }
+                    }
+                    Err(e) => {
+                        assert_eq!(e, "truncated varint", "cut={cut}");
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}

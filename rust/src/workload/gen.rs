@@ -1,0 +1,715 @@
+//! Deterministic population workload generator: N users multiplexed onto the
+//! configured flows.
+//!
+//! The paper motivates Arcus with traffic that is "diverse, hard to predict,
+//! and mixed across users" — this module models that population explicitly
+//! instead of one synthetic pattern per tenant. Each flow carries a
+//! contiguous block of users; per-arrival draws compose four classic
+//! ingredients:
+//!
+//! - **Zipf user popularity** — which user issues the next op (rank 0 is the
+//!   flow's hottest user), sampled by binary search over one shared
+//!   cumulative-weight table.
+//! - **Pareto message sizes** — heavy-tailed op sizes via
+//!   [`crate::util::Rng::pareto`], clamped to `[pareto_xm, max_bytes]`.
+//! - **Diurnal rate envelope** — `1 + depth·sin(2πt/period)` scales the
+//!   arrival rate over the run.
+//! - **Correlated burst epochs** — flash crowds: pre-scheduled windows in
+//!   which *every* flow of one tenant multiplies its rate, so users within a
+//!   tenant surge together.
+//!
+//! Determinism: every stochastic choice comes from a per-flow RNG stream
+//! keyed by `(seed, flow id)` plus one shared stream for the epoch schedule,
+//! all derived before the first event fires. Nothing depends on event-queue
+//! discipline, thread count, or wall time, so population runs produce
+//! byte-identical [`canonical()`](crate::system::SystemReport::canonical)
+//! reports across queue implementations — the same gate the rest of the
+//! system is held to.
+//!
+//! Flyweight state: per-user accounting is a struct-of-arrays of a few
+//! machine words ([`PopAccounting`]) — `u32` op count, `u64` byte count, and
+//! one `u64` packing eight saturating log₂ latency-bucket counters — so a
+//! million users cost ~20 MB and the per-event hot path allocates nothing.
+
+use std::sync::Arc;
+
+use super::trace::{TraceRecord, OP_INJECT};
+use crate::util::units::{Rate, Time, MICROS};
+use crate::util::Rng;
+
+/// RNG stream id base for per-flow population generators (distinct from
+/// `TrafficGen`'s `0x7F0 + flow` so a population run never replays a
+/// pattern run's draws).
+const POP_FLOW_STREAM: u64 = 0xBEE0_0000;
+/// RNG stream id for the shared flash-crowd epoch schedule.
+const POP_EPOCH_STREAM: u64 = 0xEB0C;
+
+/// Number of packed per-user latency buckets (log₂ microseconds).
+const LAT_BUCKETS: u32 = 8;
+
+/// Configuration for the population workload layer (`[population]` table).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PopulationConfig {
+    /// Total users across all flows (each flow gets a contiguous block).
+    pub users: usize,
+    /// Zipf exponent for user popularity within a flow (0 = uniform).
+    pub zipf_s: f64,
+    /// Pareto shape for message sizes; must exceed 1 so the mean is finite.
+    pub pareto_alpha: f64,
+    /// Pareto scale = minimum message size (bytes).
+    pub pareto_xm: u64,
+    /// Clamp for tail draws (bytes); keeps one draw from eating the run.
+    pub max_bytes: u64,
+    /// Diurnal envelope period (ps); 0 disables the envelope.
+    pub diurnal_period: Time,
+    /// Diurnal envelope depth in [0, 1).
+    pub diurnal_depth: f64,
+    /// Number of flash-crowd epochs scheduled across the run.
+    pub burst_epochs: usize,
+    /// Rate multiplier inside an epoch (≥ 1).
+    pub burst_factor: f64,
+    /// Length of each epoch (ps).
+    pub burst_span: Time,
+}
+
+impl Default for PopulationConfig {
+    fn default() -> Self {
+        PopulationConfig {
+            users: 10_000,
+            zipf_s: 1.1,
+            pareto_alpha: 1.3,
+            pareto_xm: 64,
+            max_bytes: 64 * 1024,
+            diurnal_period: 0,
+            diurnal_depth: 0.0,
+            burst_epochs: 0,
+            burst_factor: 3.0,
+            burst_span: MICROS * 500,
+        }
+    }
+}
+
+impl PopulationConfig {
+    /// Validate the configuration against `n_flows` flows.
+    pub fn validate(&self, n_flows: usize) -> Result<(), String> {
+        if self.users == 0 {
+            return Err("population users must be ≥ 1".into());
+        }
+        if self.users > 4_000_000 {
+            return Err(format!(
+                "population of {} users exceeds the 4M cap (per-user state is \
+                 ~20 bytes; raise the cap deliberately if you have the memory)",
+                self.users
+            ));
+        }
+        if n_flows > 0 && self.users < n_flows {
+            return Err(format!(
+                "population of {} users cannot cover {} flows — every flow \
+                 carries a contiguous user block, so raise `users` to at \
+                 least the flow count or drop flows",
+                self.users, n_flows
+            ));
+        }
+        if !self.zipf_s.is_finite() || !(0.0..=8.0).contains(&self.zipf_s) {
+            return Err(format!("zipf_s must be in [0, 8] (got {})", self.zipf_s));
+        }
+        if !self.pareto_alpha.is_finite() || self.pareto_alpha <= 1.0 || self.pareto_alpha > 16.0 {
+            return Err(format!(
+                "pareto_alpha must be in (1, 16] — α ≤ 1 has no finite mean \
+                 size, so no arrival rate can track a byte load (got {})",
+                self.pareto_alpha
+            ));
+        }
+        if self.pareto_xm == 0 || self.max_bytes < self.pareto_xm {
+            return Err(format!(
+                "need pareto_xm ≥ 1 and max_bytes ≥ pareto_xm (got {}/{})",
+                self.pareto_xm, self.max_bytes
+            ));
+        }
+        if self.max_bytes > 16 * 1024 * 1024 {
+            return Err(format!("max_bytes {} exceeds 16 MiB", self.max_bytes));
+        }
+        if !(0.0..1.0).contains(&self.diurnal_depth) {
+            return Err(format!(
+                "diurnal_depth must be in [0, 1) so the envelope stays \
+                 positive (got {})",
+                self.diurnal_depth
+            ));
+        }
+        if self.diurnal_period > 0 && self.diurnal_period < MICROS {
+            return Err("diurnal_period under 1 µs would alias with per-arrival gaps".into());
+        }
+        if self.burst_epochs > 64 {
+            return Err(format!("burst_epochs {} exceeds 64", self.burst_epochs));
+        }
+        if !self.burst_factor.is_finite() || !(1.0..=64.0).contains(&self.burst_factor) {
+            return Err(format!("burst_factor must be in [1, 64] (got {})", self.burst_factor));
+        }
+        if self.burst_epochs > 0 && self.burst_span < MICROS {
+            return Err("burst_span must be ≥ 1 µs when epochs are scheduled".into());
+        }
+        Ok(())
+    }
+
+    /// Mean message size implied by the (untruncated) Pareto; the clamp to
+    /// `max_bytes` pulls the true mean slightly below this, which the
+    /// conformance tolerances absorb.
+    pub fn mean_bytes(&self) -> f64 {
+        let m = self.pareto_alpha * self.pareto_xm as f64 / (self.pareto_alpha - 1.0);
+        m.min(self.max_bytes as f64)
+    }
+}
+
+/// The contiguous user block `(base, count)` that flow `flow` of `n_flows`
+/// owns out of `users` total. Blocks tile the population exactly; the first
+/// `users % n_flows` flows carry one extra user.
+pub fn user_block(users: usize, n_flows: usize, flow: usize) -> (u32, u32) {
+    debug_assert!(flow < n_flows && users >= n_flows);
+    let base_cnt = users / n_flows;
+    let extra = users % n_flows;
+    let base = flow * base_cnt + flow.min(extra);
+    let count = base_cnt + usize::from(flow < extra);
+    (base as u32, count as u32)
+}
+
+/// One flash-crowd epoch: every flow of `tenant` multiplies its arrival rate
+/// by the configured factor while `start ≤ t < end`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BurstEpoch {
+    pub start: Time,
+    pub end: Time,
+    pub tenant: u32,
+}
+
+/// Shared, immutable tables built once per run: the Zipf cumulative-weight
+/// prefix table (sized for the largest per-flow block; a smaller block
+/// samples from its prefix) and the flash-crowd epoch schedule.
+#[derive(Debug)]
+pub struct PopTables {
+    zipf_cum: Vec<f64>,
+    epochs: Vec<BurstEpoch>,
+}
+
+impl PopTables {
+    /// Build the shared tables. `max_block` is the largest per-flow user
+    /// count ([`user_block`]'s maximum); `n_tenants` round-robins epochs.
+    pub fn build(
+        cfg: &PopulationConfig,
+        seed: u64,
+        n_tenants: usize,
+        duration: Time,
+        max_block: u32,
+    ) -> Self {
+        let mut zipf_cum = Vec::with_capacity(max_block as usize);
+        let mut cum = 0.0f64;
+        for rank in 0..max_block as u64 {
+            cum += 1.0 / ((rank + 1) as f64).powf(cfg.zipf_s);
+            zipf_cum.push(cum);
+        }
+        let mut epochs = Vec::with_capacity(cfg.burst_epochs);
+        let mut rng = Rng::for_stream(seed, POP_EPOCH_STREAM);
+        for e in 0..cfg.burst_epochs {
+            let span = cfg.burst_span.min(duration);
+            let start = rng.range_u64(0, duration.saturating_sub(span));
+            epochs.push(BurstEpoch {
+                start,
+                end: start + span,
+                tenant: (e % n_tenants.max(1)) as u32,
+            });
+        }
+        PopTables { zipf_cum, epochs }
+    }
+
+    /// Whether tenant `tenant` is inside a flash-crowd epoch at `at`.
+    #[inline]
+    pub fn in_burst(&self, at: Time, tenant: u32) -> bool {
+        self.epochs
+            .iter()
+            .any(|e| e.tenant == tenant && e.start <= at && at < e.end)
+    }
+
+    pub fn epochs(&self) -> &[BurstEpoch] {
+        &self.epochs
+    }
+}
+
+/// One generated population arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PopArrival {
+    pub at: Time,
+    pub user: u32,
+    pub bytes: u64,
+}
+
+/// Stateful per-flow arrival generator over the flow's user block.
+///
+/// Pull discipline matches [`crate::flow::TrafficGen`]: `next()` is an
+/// unbounded stream of nondecreasing arrival times; the engine stops pulling
+/// when a returned arrival lands at/after the run's duration.
+#[derive(Debug, Clone)]
+pub struct PopArrivals {
+    tables: Arc<PopTables>,
+    rng: Rng,
+    tenant: u32,
+    user_base: u32,
+    user_count: u32,
+    xm: f64,
+    alpha: f64,
+    min_bytes: u64,
+    max_bytes: u64,
+    diurnal_period: Time,
+    diurnal_depth: f64,
+    burst_factor: f64,
+    /// Mean inter-arrival gap (ps) at envelope 1.0; `f64::INFINITY` for a
+    /// zero offered rate (the stream then never produces an arrival).
+    mean_gap: f64,
+    next_at: Time,
+}
+
+impl PopArrivals {
+    pub fn new(
+        cfg: &PopulationConfig,
+        tables: Arc<PopTables>,
+        seed: u64,
+        flow: u64,
+        tenant: u32,
+        user_base: u32,
+        user_count: u32,
+        offered: Rate,
+    ) -> Self {
+        debug_assert!(user_count >= 1);
+        debug_assert!(user_count as usize <= tables.zipf_cum.len());
+        let bpp = offered.bytes_per_ps();
+        let mean_gap = if bpp > 0.0 { cfg.mean_bytes() / bpp } else { f64::INFINITY };
+        PopArrivals {
+            tables,
+            rng: Rng::for_stream(seed, POP_FLOW_STREAM + flow),
+            tenant,
+            user_base,
+            user_count,
+            xm: cfg.pareto_xm as f64,
+            alpha: cfg.pareto_alpha,
+            min_bytes: cfg.pareto_xm,
+            max_bytes: cfg.max_bytes,
+            diurnal_period: cfg.diurnal_period,
+            diurnal_depth: cfg.diurnal_depth,
+            burst_factor: cfg.burst_factor,
+            mean_gap,
+            next_at: 0,
+        }
+    }
+
+    /// Instantaneous rate multiplier at `at`: diurnal × flash-crowd.
+    #[inline]
+    pub fn envelope(&self, at: Time) -> f64 {
+        let mut e = 1.0;
+        if self.diurnal_period > 0 {
+            let phase = (at % self.diurnal_period) as f64 / self.diurnal_period as f64;
+            e *= 1.0 + self.diurnal_depth * (std::f64::consts::TAU * phase).sin();
+        }
+        if self.tables.in_burst(at, self.tenant) {
+            e *= self.burst_factor;
+        }
+        e
+    }
+
+    /// Produce the next arrival at or after the previous one. Allocation-free.
+    pub fn next(&mut self) -> PopArrival {
+        let at = self.next_at;
+        if self.mean_gap.is_infinite() {
+            return PopArrival { at: Time::MAX, user: self.user_base, bytes: self.min_bytes };
+        }
+        // Draw order is part of the format: rank, size, gap. Reordering
+        // changes every downstream byte-identity golden.
+        let cum = &self.tables.zipf_cum[..self.user_count as usize];
+        let u = self.rng.f64() * cum[cum.len() - 1];
+        let rank = (cum.partition_point(|&c| c <= u) as u32).min(self.user_count - 1);
+        let bytes =
+            (self.rng.pareto(self.xm, self.alpha) as u64).clamp(self.min_bytes, self.max_bytes);
+        // Exponential inter-arrival with the rate scaled by the envelope at
+        // the interval's start — a deterministic piecewise approximation of
+        // the inhomogeneous process that is exact whenever gaps are short
+        // relative to the envelope period.
+        let gap = self.rng.exponential(self.mean_gap / self.envelope(at));
+        self.next_at = at.saturating_add(gap.round().max(0.0) as Time);
+        PopArrival { at, user: self.user_base + rank, bytes }
+    }
+
+    /// Generate all arrivals with `at < until` (test/trace-record helper).
+    pub fn take_until(&mut self, until: Time) -> Vec<PopArrival> {
+        let mut out = Vec::new();
+        loop {
+            let a = self.next();
+            if a.at >= until {
+                return out;
+            }
+            out.push(a);
+        }
+    }
+}
+
+/// Build one arrival generator per flow from `(tenant, offered rate)` pairs —
+/// the single constructor shared by the engine and `arcus trace record`, so a
+/// recorded trace enumerates exactly the sequence the engine would generate.
+///
+/// The caller is responsible for [`PopulationConfig::validate`] against the
+/// flow count first; the per-flow constructors only debug-assert.
+pub fn build_population(
+    cfg: &PopulationConfig,
+    seed: u64,
+    duration: Time,
+    flows: &[(u32, Rate)],
+) -> Vec<PopArrivals> {
+    let n = flows.len();
+    let n_tenants = flows.iter().map(|&(t, _)| t as usize + 1).max().unwrap_or(0);
+    let max_block = if n == 0 { 0 } else { user_block(cfg.users, n, 0).1 };
+    let tables = Arc::new(PopTables::build(cfg, seed, n_tenants, duration, max_block));
+    flows
+        .iter()
+        .enumerate()
+        .map(|(i, &(tenant, offered))| {
+            let (base, count) = user_block(cfg.users, n, i);
+            PopArrivals::new(cfg, tables.clone(), seed, i as u64, tenant, base, count, offered)
+        })
+        .collect()
+}
+
+/// Enumerate every arrival with `at < duration` across all flows as one
+/// time-sorted trace (`arcus trace record` — no engine run needed: the
+/// engine pulls each flow's generator in exactly this per-flow order, so
+/// replaying these records through per-flow cursors reproduces the run).
+pub fn record_trace(
+    cfg: &PopulationConfig,
+    seed: u64,
+    duration: Time,
+    flows: &[(u32, Rate)],
+) -> Vec<TraceRecord> {
+    let mut gens = build_population(cfg, seed, duration, flows);
+    let mut out = Vec::new();
+    for (f, g) in gens.iter_mut().enumerate() {
+        for a in g.take_until(duration) {
+            out.push(TraceRecord {
+                at: a.at,
+                user: a.user,
+                flow: f as u32,
+                op: OP_INJECT,
+                bytes: a.bytes,
+            });
+        }
+    }
+    // Stable sort: per-flow order is preserved within equal (at, flow) keys,
+    // which is what the per-flow replay cursors re-partition by.
+    out.sort_by_key(|r| (r.at, r.flow));
+    out
+}
+
+/// Per-user fairness summary, printed verbatim (Debug) on the report's
+/// `fairness=` canonical line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FairnessReport {
+    /// Configured population size.
+    pub users: u64,
+    /// Users with ≥ 1 completed op inside the measured window.
+    pub active_users: u64,
+    /// Jain's fairness index ×10⁶ over per-user attained bytes (attained
+    /// rate shares a common span, so bytes and rate give the same index).
+    /// 0 when no user completed an op.
+    pub jain_ppm: u64,
+    /// Worst per-user p99 latency (ps), as the upper bound of the log₂
+    /// histogram bucket where that user's 99th percentile falls.
+    pub worst_user_p99_ps: u64,
+    /// Bytes attained by the single best-served user.
+    pub top_user_bytes: u64,
+    /// Total bytes attained across the population.
+    pub total_bytes: u64,
+}
+
+/// Flyweight per-user accounting: struct-of-arrays, a few words per user,
+/// no allocation after construction.
+#[derive(Debug)]
+pub struct PopAccounting {
+    ops: Vec<u32>,
+    bytes: Vec<u64>,
+    /// Eight log₂-µs latency buckets packed as saturating u8 counters.
+    lat_hist: Vec<u64>,
+}
+
+/// Bucket index for a completion latency: `floor(log₂(max(µs, 1)))`, capped
+/// at the last bucket. Bucket `i` spans `[2^i, 2^(i+1))` µs; bucket 0 also
+/// absorbs sub-µs completions, bucket 7 everything ≥ 128 µs.
+#[inline]
+fn lat_bucket(lat: Time) -> u32 {
+    ((lat / MICROS).max(1)).ilog2().min(LAT_BUCKETS - 1)
+}
+
+/// Upper bound (ps) of latency bucket `b`.
+#[inline]
+fn bucket_bound(b: u32) -> Time {
+    (1u64 << (b + 1)) * MICROS
+}
+
+impl PopAccounting {
+    pub fn new(users: usize) -> Self {
+        PopAccounting {
+            ops: vec![0; users],
+            bytes: vec![0; users],
+            lat_hist: vec![0; users],
+        }
+    }
+
+    /// Record one completed op for `user`. Allocation-free.
+    #[inline]
+    pub fn on_complete(&mut self, user: u32, latency: Time, bytes: u64) {
+        let u = user as usize;
+        debug_assert!(u < self.ops.len());
+        self.ops[u] = self.ops[u].saturating_add(1);
+        self.bytes[u] = self.bytes[u].saturating_add(bytes);
+        let shift = lat_bucket(latency) * 8;
+        if (self.lat_hist[u] >> shift) & 0xff != 0xff {
+            self.lat_hist[u] += 1u64 << shift;
+        }
+    }
+
+    /// A user's p99 latency bound from their packed histogram; `None` if the
+    /// user completed nothing.
+    fn user_p99(hist: u64) -> Option<Time> {
+        let total: u64 = (0..LAT_BUCKETS).map(|b| (hist >> (b * 8)) & 0xff).sum();
+        if total == 0 {
+            return None;
+        }
+        let target = (total * 99).div_ceil(100);
+        let mut cum = 0u64;
+        for b in 0..LAT_BUCKETS {
+            cum += (hist >> (b * 8)) & 0xff;
+            if cum >= target {
+                return Some(bucket_bound(b));
+            }
+        }
+        unreachable!("cumulative count reaches total");
+    }
+
+    /// Fold the population into its fairness summary, iterating users in
+    /// index order so the result is deterministic.
+    pub fn report(&self) -> FairnessReport {
+        let mut active = 0u64;
+        let mut sum = 0.0f64;
+        let mut sum_sq = 0.0f64;
+        let mut top = 0u64;
+        let mut total = 0u64;
+        let mut worst_p99 = 0u64;
+        for u in 0..self.ops.len() {
+            if self.ops[u] == 0 {
+                continue;
+            }
+            active += 1;
+            let b = self.bytes[u];
+            total = total.saturating_add(b);
+            top = top.max(b);
+            sum += b as f64;
+            sum_sq += (b as f64) * (b as f64);
+            if let Some(p99) = Self::user_p99(self.lat_hist[u]) {
+                worst_p99 = worst_p99.max(p99);
+            }
+        }
+        let jain_ppm = if active == 0 || sum_sq == 0.0 {
+            0
+        } else {
+            (sum * sum / (active as f64 * sum_sq) * 1e6).round() as u64
+        };
+        FairnessReport {
+            users: self.ops.len() as u64,
+            active_users: active,
+            jain_ppm,
+            worst_user_p99_ps: worst_p99,
+            top_user_bytes: top,
+            total_bytes: total,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MILLIS;
+
+    fn cfg() -> PopulationConfig {
+        PopulationConfig { users: 1000, ..Default::default() }
+    }
+
+    fn gen_for(cfg: &PopulationConfig, seed: u64, flow: u64, tenant: u32) -> PopArrivals {
+        let (base, count) = user_block(cfg.users, 4, flow as usize);
+        let tables = Arc::new(PopTables::build(cfg, seed, 2, 10 * MILLIS, count + 1));
+        PopArrivals::new(cfg, tables, seed, flow, tenant, base, count, Rate::gbps(5.0))
+    }
+
+    #[test]
+    fn validates_each_field() {
+        let ok = cfg();
+        assert!(ok.validate(4).is_ok());
+        for (bad, needle) in [
+            (PopulationConfig { users: 0, ..cfg() }, "users"),
+            (PopulationConfig { users: 3, ..cfg() }, "cannot cover"),
+            (PopulationConfig { zipf_s: -1.0, ..cfg() }, "zipf_s"),
+            (PopulationConfig { pareto_alpha: 1.0, ..cfg() }, "pareto_alpha"),
+            (PopulationConfig { pareto_xm: 0, ..cfg() }, "pareto_xm"),
+            (PopulationConfig { max_bytes: 8, ..cfg() }, "max_bytes"),
+            (PopulationConfig { diurnal_depth: 1.0, ..cfg() }, "diurnal_depth"),
+            (PopulationConfig { diurnal_period: 10, ..cfg() }, "diurnal_period"),
+            (PopulationConfig { burst_factor: 0.5, ..cfg() }, "burst_factor"),
+            (PopulationConfig { burst_epochs: 2, burst_span: 10, ..cfg() }, "burst_span"),
+        ] {
+            let err = bad.validate(4).unwrap_err();
+            assert!(err.contains(needle), "{err} should mention {needle}");
+        }
+    }
+
+    #[test]
+    fn user_blocks_tile_the_population() {
+        for (users, flows) in [(10, 3), (1000, 7), (7, 7), (100_000, 64)] {
+            let mut next = 0u32;
+            for f in 0..flows {
+                let (base, count) = user_block(users, flows, f);
+                assert_eq!(base, next, "users={users} flows={flows} f={f}");
+                assert!(count >= 1);
+                next = base + count;
+            }
+            assert_eq!(next as usize, users);
+        }
+    }
+
+    #[test]
+    fn zipf_concentrates_on_low_ranks() {
+        let c = cfg();
+        let mut g = gen_for(&c, 7, 0, 0);
+        let (base, _) = user_block(c.users, 4, 0);
+        let mut counts = vec![0u32; 300];
+        for _ in 0..50_000 {
+            let a = g.next();
+            let rank = (a.user - base) as usize;
+            if rank < counts.len() {
+                counts[rank] += 1;
+            }
+        }
+        assert!(counts[0] > counts[9] * 3, "rank0={} rank9={}", counts[0], counts[9]);
+        assert!(counts[0] > counts[99] * 20, "rank0={} rank99={}", counts[0], counts[99]);
+    }
+
+    #[test]
+    fn arrivals_deterministic_and_per_flow_decorrelated() {
+        let c = cfg();
+        let a: Vec<_> = gen_for(&c, 42, 1, 0).take_until(2 * MILLIS);
+        let b: Vec<_> = gen_for(&c, 42, 1, 0).take_until(2 * MILLIS);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        let other: Vec<_> = gen_for(&c, 42, 2, 0).take_until(2 * MILLIS);
+        assert_ne!(a, other);
+    }
+
+    #[test]
+    fn sizes_respect_clamp_and_times_are_monotonic() {
+        let c = PopulationConfig { max_bytes: 4096, ..cfg() };
+        let arrivals = gen_for(&c, 3, 0, 0).take_until(5 * MILLIS);
+        let mut prev = 0;
+        for a in &arrivals {
+            assert!(a.bytes >= c.pareto_xm && a.bytes <= c.max_bytes, "{}", a.bytes);
+            assert!(a.at >= prev);
+            prev = a.at;
+        }
+    }
+
+    #[test]
+    fn epochs_land_inside_the_run_and_round_robin_tenants() {
+        let c = PopulationConfig { burst_epochs: 6, ..cfg() };
+        let t = PopTables::build(&c, 11, 3, 10 * MILLIS, 16);
+        assert_eq!(t.epochs().len(), 6);
+        for (i, e) in t.epochs().iter().enumerate() {
+            assert!(e.start < e.end && e.end <= 10 * MILLIS + c.burst_span);
+            assert_eq!(e.tenant, (i % 3) as u32);
+        }
+        // Same-tenant flows see the same epochs; the in_burst probe agrees.
+        let e0 = t.epochs()[0];
+        assert!(t.in_burst(e0.start, e0.tenant));
+        assert!(!t.in_burst(e0.end, e0.tenant));
+    }
+
+    #[test]
+    fn envelope_composes_diurnal_and_burst() {
+        let c = PopulationConfig {
+            diurnal_period: 4 * MILLIS,
+            diurnal_depth: 0.5,
+            burst_epochs: 1,
+            burst_factor: 4.0,
+            ..cfg()
+        };
+        let (base, count) = user_block(c.users, 4, 0);
+        let tables = Arc::new(PopTables::build(&c, 5, 1, 10 * MILLIS, count));
+        // All epochs belong to tenant 0 (n_tenants = 1); a tenant-1 flow sees
+        // the pure diurnal envelope, whose sine peaks a quarter period in.
+        let calm = PopArrivals::new(&c, tables.clone(), 5, 0, 1, base, count, Rate::gbps(5.0));
+        let peak = calm.envelope(MILLIS);
+        let trough = calm.envelope(3 * MILLIS);
+        assert!((peak / trough - 3.0).abs() < 1e-9, "peak={peak} trough={trough}");
+        // A tenant-0 flow is additionally boosted ×4 inside the epoch; even
+        // at the diurnal trough that leaves the envelope ≥ 0.5 × 4.
+        let hot = PopArrivals::new(&c, tables.clone(), 5, 1, 0, base, count, Rate::gbps(5.0));
+        let e = tables.epochs()[0];
+        assert!(hot.envelope(e.start) >= 2.0 - 1e-9);
+        assert!((hot.envelope(e.start) / calm.envelope(e.start) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accounting_jain_and_p99() {
+        let mut acc = PopAccounting::new(4);
+        // Two equally-served users → Jain = 1.0.
+        acc.on_complete(0, 3 * MICROS, 1000);
+        acc.on_complete(1, 70 * MICROS, 1000);
+        let r = acc.report();
+        assert_eq!(r.active_users, 2);
+        assert_eq!(r.jain_ppm, 1_000_000);
+        assert_eq!(r.total_bytes, 2000);
+        assert_eq!(r.top_user_bytes, 1000);
+        // 70 µs lands in bucket [64,128) → bound 128 µs.
+        assert_eq!(r.worst_user_p99_ps, 128 * MICROS);
+        // A third user hogging bytes drags the index down.
+        acc.on_complete(2, MICROS, 98_000);
+        let r = acc.report();
+        assert!(r.jain_ppm < 400_000, "jain={}", r.jain_ppm);
+        assert_eq!(r.users, 4);
+        assert_eq!(r.top_user_bytes, 98_000);
+    }
+
+    #[test]
+    fn p99_tracks_the_heavy_bucket() {
+        let mut acc = PopAccounting::new(1);
+        for _ in 0..99 {
+            acc.on_complete(0, MICROS, 1); // bucket 0
+        }
+        acc.on_complete(0, 40 * MICROS, 1); // bucket [32,64)
+        // 100 samples: p99 target is the 99th — still in bucket 0.
+        assert_eq!(acc.report().worst_user_p99_ps, 2 * MICROS);
+        acc.on_complete(0, 40 * MICROS, 1);
+        acc.on_complete(0, 40 * MICROS, 1);
+        // Now >1% of mass sits high; p99 moves to the hot bucket's bound.
+        assert_eq!(acc.report().worst_user_p99_ps, 64 * MICROS);
+    }
+
+    #[test]
+    fn saturating_histogram_never_overflows_neighbours() {
+        let mut acc = PopAccounting::new(1);
+        for _ in 0..1000 {
+            acc.on_complete(0, MICROS, 1);
+        }
+        // Bucket 0 saturates at 255; bucket 1 stays empty.
+        assert_eq!(acc.lat_hist[0] & 0xff, 0xff);
+        assert_eq!((acc.lat_hist[0] >> 8) & 0xff, 0);
+    }
+
+    #[test]
+    fn zero_rate_flow_never_fires() {
+        let c = cfg();
+        let (base, count) = user_block(c.users, 4, 0);
+        let tables = Arc::new(PopTables::build(&c, 1, 1, MILLIS, count));
+        let mut g = PopArrivals::new(&c, tables, 1, 0, 0, base, count, Rate::ZERO);
+        assert_eq!(g.next().at, Time::MAX);
+    }
+}

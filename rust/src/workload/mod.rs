@@ -15,14 +15,26 @@
 //! - [`rocksdb`] — the LSM engine's flush+compaction I/O with offloaded
 //!   checksum+compression (Table 4); modeled as function-call accelerator
 //!   flows sized like SST blocks.
+//! - [`gen`] — the population workload layer: N users with Zipf popularity,
+//!   Pareto sizes, a diurnal envelope, and correlated flash-crowd epochs,
+//!   multiplexed deterministically onto the configured flows.
+//! - [`trace`] — the compact varint binary arrival-trace format behind
+//!   `arcus trace record`/`replay`.
 
 pub mod fio;
+pub mod gen;
 pub mod lsm;
 pub mod mica;
+pub mod trace;
 
 pub use fio::{fio_read_flow, fio_write_flow, FioJob};
+pub use gen::{
+    build_population, record_trace, user_block, BurstEpoch, FairnessReport, PopAccounting,
+    PopArrival, PopArrivals, PopTables, PopulationConfig,
+};
 pub use lsm::{LsmConfig, LsmTraffic};
 pub use mica::{live_migration_flow, mica_flows, MicaUser};
+pub use trace::{TraceData, TraceRecord};
 
 use crate::flow::FlowSpec;
 
